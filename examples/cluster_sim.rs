@@ -1,0 +1,77 @@
+//! Simulate the paper's §5 Palmetto experiment (16 compute × 16
+//! containers, 2 data nodes) and print Figure-7-style utilization
+//! sparklines plus the Figure 7(f–g) phase-time comparisons.
+//!
+//! Run: `cargo run --release --example cluster_sim`
+
+use tlstore::sim::{simulate_terasort, BackendKind, SimConstants};
+
+fn main() -> tlstore::Result<()> {
+    tlstore::util::logger::init();
+    let constants = SimConstants::default();
+    let (n, m, containers, gb) = (16, 2, 16, 16.0);
+    println!(
+        "simulated testbed: {n} compute nodes × {containers} containers, {m} data nodes, {gb} GB TeraSort"
+    );
+    println!("(constants from Table 3 / §5.1: disk 60, RAID 400r/200w, NIC 1170, RAM 6267 MB/s)\n");
+
+    let mut reports = Vec::new();
+    for backend in [
+        BackendKind::Hdfs,
+        BackendKind::Ofs,
+        BackendKind::Tls { f_pct: 100 },
+    ] {
+        let r = simulate_terasort(backend, n, m, containers, gb, constants)?;
+        println!("=== {} ===", r.backend);
+        println!("map phase ({:.1}s):", r.map_time);
+        for series in ["cpu0", "disk0", "ram0", "nic0", "raidr0", "dnic0"] {
+            if let Some(tl) = r.result_map.timelines.get(series) {
+                println!(
+                    "  {:<8} {}  mean={:4.0}% peak={:4.0}%",
+                    series,
+                    tl.sparkline(40),
+                    tl.mean() * 100.0,
+                    tl.peak() * 100.0
+                );
+            }
+        }
+        println!("reduce phase ({:.1}s):", r.reduce_time);
+        for series in ["cpu0", "disk0", "nic0", "raidw0", "dnic0"] {
+            if let Some(tl) = r.result_reduce.timelines.get(series) {
+                println!(
+                    "  {:<8} {}  mean={:4.0}% peak={:4.0}%",
+                    series,
+                    tl.sparkline(40),
+                    tl.mean() * 100.0,
+                    tl.peak() * 100.0
+                );
+            }
+        }
+        println!();
+        reports.push(r);
+    }
+
+    let hdfs = &reports[0];
+    let ofs = &reports[1];
+    let tls = &reports[2];
+    println!("Figure 7(f) — mapper speedup of two-level storage:");
+    println!(
+        "  vs HDFS: {:.1}× (paper: 5.4×)   vs OrangeFS: {:.1}× (paper: 4.2×)",
+        hdfs.map_time / tls.map_time,
+        ofs.map_time / tls.map_time
+    );
+
+    println!("\nFigure 7(g) — reduce-phase scaling with data nodes (two-level):");
+    let r2 = simulate_terasort(BackendKind::Tls { f_pct: 100 }, n, 2, containers, gb, constants)?;
+    for dm in [4usize, 12] {
+        let r = simulate_terasort(BackendKind::Tls { f_pct: 100 }, n, dm, containers, gb, constants)?;
+        println!(
+            "  {dm:>2} data nodes: reduce {:.1}s → {:.1}× vs 2 nodes (paper: {})",
+            r.reduce_time,
+            r2.reduce_time / r.reduce_time,
+            if dm == 4 { "1.9×" } else { "4.5×" }
+        );
+    }
+    println!("\ncluster_sim OK");
+    Ok(())
+}

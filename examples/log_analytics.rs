@@ -1,0 +1,76 @@
+//! Log analytics on the two-level store: a MapReduce job whose reducers
+//! aggregate wide numeric event tables with the AOT-compiled Pallas
+//! column-stats kernel via PJRT — the second workload class the paper's
+//! introduction motivates (analytics over data staged in the memory tier).
+//!
+//! Pipeline: generate event tables → store (write-through) → MapReduce
+//! ([`tlstore::analytics`]) → verify the kernel-computed means against the
+//! generator's ground truth.
+//!
+//! Run: `cargo run --release --example log_analytics`
+//! Requires `make artifacts`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use tlstore::analytics::{generate_tables, parse_report_line, run_analytics};
+use tlstore::mapreduce::Engine;
+use tlstore::runtime::Runtime;
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::ObjectStore;
+use tlstore::testing::TempDir;
+
+fn main() -> tlstore::Result<()> {
+    tlstore::util::logger::init();
+    let runtime = Arc::new(Runtime::load_dir(Path::new("artifacts"))?);
+    println!("PJRT: {}", runtime.platform());
+
+    let dir = TempDir::new("log-analytics").unwrap();
+    let cfg = TlsConfig::builder(dir.path())
+        .mem_capacity(128 << 20)
+        .block_size(1 << 20)
+        .pfs_servers(4)
+        .stripe_size(256 << 10)
+        .build()?;
+    let store: Arc<dyn ObjectStore> = Arc::new(TwoLevelStore::open(cfg)?);
+
+    let tables = 12u32;
+    let rows = 6000usize;
+    let expected = generate_tables(store.as_ref(), "events/", tables, rows, 7)?;
+    println!("wrote {tables} tables × {rows} rows × 8 cols into the two-level store");
+
+    let engine = Engine::local();
+    let stats = run_analytics(
+        &engine,
+        Arc::clone(&store),
+        Arc::clone(&runtime),
+        "events/",
+        "stats/",
+        4,
+    )?;
+    println!("{}", stats.report());
+
+    // verify every table's c0 mean against the generator's ground truth
+    let mut verified = 0;
+    for key in store.list("stats/") {
+        let text = String::from_utf8(store.read(&key)?).expect("utf8 report");
+        print!("{text}");
+        for line in text.lines() {
+            let st = parse_report_line(line).expect("parseable report line");
+            let want = expected[st.table_id as usize][0];
+            assert!(
+                (st.mean[0] - want).abs() < 0.05,
+                "table {} c0: kernel {} vs generator {}",
+                st.table_id,
+                st.mean[0],
+                want
+            );
+            assert_eq!(st.rows as usize, rows);
+            verified += 1;
+        }
+    }
+    assert_eq!(verified, tables);
+    println!("\nall {verified} table means match the generator through the PJRT kernel");
+    println!("log_analytics OK");
+    Ok(())
+}

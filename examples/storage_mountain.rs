@@ -1,0 +1,125 @@
+//! The storage mountain (§5.2, Figure 6) measured on the *real* two-level
+//! store at laptop scale: read throughput vs (data size × skip size), with
+//! the memory tier capacity placed so the surface shows both ridges and
+//! the capacity cliff, exactly like the paper's Figure 6 shape.
+//!
+//! Run: `cargo run --release --example storage_mountain [-- --quick]`
+
+use tlstore::cli::Args;
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::{ReadMode, WriteMode};
+use tlstore::testing::TempDir;
+use tlstore::util::bytes::fmt_bytes;
+use tlstore::util::rng::Pcg32;
+
+/// Measure effective read throughput over `data` with `skip` bytes
+/// skipped per 256 KiB request (scaled-down analogue of the paper's 1 MB).
+fn measure(store: &TwoLevelStore, key: &str, size: u64, skip: u64, request: u64) -> f64 {
+    let t = std::time::Instant::now();
+    let mut off = 0u64;
+    let mut bytes = 0u64;
+    while off < size {
+        let take = request.min(size - off);
+        let got = store
+            .read_range(key, off, take as usize, ReadMode::TwoLevel)
+            .unwrap();
+        bytes += got.len() as u64;
+        off += take + skip;
+    }
+    bytes as f64 / 1e6 / t.elapsed().as_secs_f64()
+}
+
+fn main() -> tlstore::Result<()> {
+    tlstore::util::logger::init();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let quick = args.has("quick");
+    args.finish()?;
+
+    // memory tier sized to 8 MiB so the capacity cliff falls inside the
+    // sweep (the paper's 16 GB cliff, scaled)
+    let mem_cap: u64 = 8 << 20;
+    let dir = TempDir::new("mountain").unwrap();
+    let cfg = TlsConfig::builder(dir.path())
+        .mem_capacity(mem_cap)
+        .block_size(256 << 10)
+        .pfs_servers(4)
+        .stripe_size(128 << 10)
+        .build()?;
+    let store = TwoLevelStore::open(cfg)?;
+
+    let request: u64 = 256 << 10;
+    let data_sizes: Vec<u64> = if quick {
+        vec![2 << 20, 8 << 20, 32 << 20]
+    } else {
+        vec![1 << 20, 2 << 20, 4 << 20, 8 << 20, 16 << 20, 32 << 20, 64 << 20]
+    };
+    let skips: Vec<u64> = if quick {
+        vec![0, 256 << 10, 4 << 20]
+    } else {
+        vec![0, 64 << 10, 256 << 10, 1 << 20, 4 << 20]
+    };
+
+    println!(
+        "storage mountain on the real engine (mem tier {} — the cliff)\nthroughput in MB/s; request {}",
+        fmt_bytes(mem_cap),
+        fmt_bytes(request)
+    );
+    print!("{:>10}", "data\\skip");
+    for s in &skips {
+        print!("{:>10}", fmt_bytes(*s));
+    }
+    println!();
+
+    let mut rng = Pcg32::new(1, 1);
+    let mut cliff_check: Vec<(u64, f64)> = Vec::new();
+    for &size in &data_sizes {
+        let key = format!("m/{size}");
+        let mut data = vec![0u8; size as usize];
+        rng.fill_bytes(&mut data);
+        store.write(&key, &data, WriteMode::WriteThrough)?;
+        // warm pass establishes steady-state residency for this size
+        let _ = measure(&store, &key, size, 0, request);
+
+        print!("{:>10}", fmt_bytes(size));
+        for &skip in &skips {
+            let mbs = measure(&store, &key, size, skip, request);
+            if skip == 0 {
+                cliff_check.push((size, mbs));
+            }
+            print!("{:>10.0}", mbs);
+        }
+        println!();
+        store.delete_all(&key)?;
+    }
+
+    // the Figure-6 shape: throughput above the capacity cliff ≫ below it
+    let above: f64 = cliff_check
+        .iter()
+        .filter(|(s, _)| *s <= mem_cap)
+        .map(|(_, t)| *t)
+        .fold(0.0, f64::max);
+    let below: f64 = cliff_check
+        .iter()
+        .filter(|(s, _)| *s >= 4 * mem_cap)
+        .map(|(_, t)| *t)
+        .fold(f64::INFINITY, f64::min);
+    if below.is_finite() {
+        println!(
+            "\nTachyon-ridge / OrangeFS-ridge ratio: {:.1}× (paper: ~10× at scale)",
+            above / below
+        );
+    }
+    println!("storage_mountain OK");
+    Ok(())
+}
+
+// small extension trait: delete via the ObjectStore impl
+trait DeleteAll {
+    fn delete_all(&self, key: &str) -> tlstore::Result<()>;
+}
+impl DeleteAll for TwoLevelStore {
+    fn delete_all(&self, key: &str) -> tlstore::Result<()> {
+        use tlstore::storage::ObjectStore;
+        self.delete(key)
+    }
+}

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for tlstore.
+
+Every kernel here is authored with ``jax.experimental.pallas`` and lowered
+under ``interpret=True`` so that the resulting HLO contains only portable ops
+executable by the CPU PJRT client that the Rust runtime drives.  Real-TPU
+lowering would emit Mosaic custom-calls, which are compile-only targets in
+this repo (see DESIGN.md §Hardware-Adaptation).
+
+Kernels:
+
+- :mod:`sortnet`   — bitonic sort network over VMEM-resident key tiles plus a
+  bucket histogram used by TeraSort's range partitioner.
+- :mod:`aggregate` — streaming per-column statistics (sum/min/max/sumsq) used
+  by the log-analytics example.
+- :mod:`ref`       — pure-jnp oracles; pytest asserts kernels == oracles.
+"""
+
+from . import aggregate, ref, sortnet  # noqa: F401
+
+__all__ = ["sortnet", "aggregate", "ref"]

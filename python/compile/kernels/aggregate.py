@@ -1,0 +1,87 @@
+"""Streaming per-column statistics Pallas kernel.
+
+The log-analytics example reduces wide numeric event tables that are read
+out of the two-level store: for each column it needs sum / min / max / sum of
+squares (count is static).  The kernel streams row chunks HBM→VMEM via the
+grid and keeps a single ``(4, COLS)`` accumulator block resident across all
+grid steps — a classic reduction BlockSpec schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT shapes — must match the manifest emitted by aot.py.
+ROWS = 4096
+COLS = 8
+CHUNK = 512  # rows per grid step
+assert ROWS % CHUNK == 0
+STAT_ROWS = 4  # sum, min, max, sumsq
+
+
+def column_stats_sized(x, chunk=None):
+    """Shape-generic variant of :func:`column_stats` — any ``(rows, cols)``
+    f32 table with ``rows % chunk == 0``.  Used by the hypothesis sweep; the
+    AOT artifact pins :data:`ROWS`×:data:`COLS`."""
+    rows, cols = x.shape
+    assert x.dtype == jnp.float32, x.dtype
+    chunk = chunk or min(CHUNK, rows)
+    assert rows % chunk == 0, (rows, chunk)
+
+    def kernel(x_ref, stats_ref):
+        xv = x_ref[...]
+        chunk_stats = jnp.stack(
+            [
+                jnp.sum(xv, axis=0),
+                jnp.min(xv, axis=0),
+                jnp.max(xv, axis=0),
+                jnp.sum(xv * xv, axis=0),
+            ]
+        )
+
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            stats_ref[...] = jnp.stack(
+                [
+                    jnp.zeros((cols,), jnp.float32),
+                    jnp.full((cols,), jnp.inf, jnp.float32),
+                    jnp.full((cols,), -jnp.inf, jnp.float32),
+                    jnp.zeros((cols,), jnp.float32),
+                ]
+            )
+
+        acc = stats_ref[...]
+        stats_ref[...] = jnp.stack(
+            [
+                acc[0] + chunk_stats[0],
+                jnp.minimum(acc[1], chunk_stats[1]),
+                jnp.maximum(acc[2], chunk_stats[2]),
+                acc[3] + chunk_stats[3],
+            ]
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // chunk,),
+        in_specs=[pl.BlockSpec((chunk, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((STAT_ROWS, cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((STAT_ROWS, cols), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def column_stats(x):
+    """Per-column (sum, min, max, sumsq) of an ``(ROWS, COLS)`` f32 table.
+
+    Returns ``f32[STAT_ROWS, COLS]`` with rows in that order.
+    """
+    assert x.shape == (ROWS, COLS) and x.dtype == jnp.float32, (x.shape, x.dtype)
+    return column_stats_sized(x, CHUNK)
+
+
+def vmem_footprint_bytes():
+    """Static VMEM estimate per grid step (DESIGN.md §Perf)."""
+    return CHUNK * COLS * 4 + STAT_ROWS * COLS * 4

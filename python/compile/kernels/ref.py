@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: pytest sweeps shapes/values with
+hypothesis and asserts the kernels match these reference implementations
+exactly (integer outputs) or to float tolerance (aggregates).
+"""
+
+import jax.numpy as jnp
+
+from . import sortnet
+
+
+def sort_block_ref(keys):
+    """Oracle for :func:`sortnet.sort_block`.
+
+    Tile-wise stable ascending sort along the last axis, the corresponding
+    stable argsort permutation, and the bucket histogram of the *whole*
+    block (bucket = top byte of the u32 key).
+    """
+    assert keys.dtype == jnp.uint32
+    perm = jnp.argsort(keys, axis=-1, stable=True).astype(jnp.int32)
+    sorted_keys = jnp.take_along_axis(keys, perm, axis=-1)
+    buckets = (keys >> jnp.uint32(32 - 8)).astype(jnp.int32)
+    hist = jnp.bincount(buckets.ravel(), length=sortnet.NUM_BUCKETS).astype(jnp.int32)
+    return sorted_keys, perm, hist
+
+
+def column_stats_ref(x):
+    """Oracle for :func:`aggregate.column_stats`."""
+    assert x.dtype == jnp.float32
+    return jnp.stack(
+        [
+            jnp.sum(x, axis=0),
+            jnp.min(x, axis=0),
+            jnp.max(x, axis=0),
+            jnp.sum(x * x, axis=0),
+        ]
+    )
+
+
+def terasort_block_ref(keys):
+    """Oracle for the L2 ``terasort_block`` entry point (same contract as
+    :func:`sort_block_ref`; kept separate so model-level tests don't import
+    kernel internals)."""
+    return sort_block_ref(keys)
+
+
+def analytics_agg_ref(x):
+    """Oracle for the L2 ``analytics_agg`` entry point: raw stats plus the
+    fused mean/variance epilogue computed in plain jnp."""
+    stats = column_stats_ref(x)
+    n = jnp.float32(x.shape[0])
+    mean = stats[0] / n
+    var = stats[3] / n - mean * mean
+    return stats, mean, var
+
+
+__all__ = [
+    "sort_block_ref",
+    "column_stats_ref",
+    "terasort_block_ref",
+    "analytics_agg_ref",
+]

@@ -1,0 +1,163 @@
+"""Bitonic sort-network + partition-histogram Pallas kernel.
+
+This is the compute hot-spot of the TeraSort mapper: each storage block of
+4-byte big-endian key prefixes is sorted on-chip and simultaneously bucketed
+into ``NUM_BUCKETS`` range-partition counts.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over key
+*tiles*; BlockSpec pulls one ``(1, LANE)`` tile from HBM into VMEM per step,
+the full O(log² LANE) compare-exchange network runs entirely on-chip
+(VPU-vectorized across the lane dimension), and the histogram is accumulated
+via a one-hot matmul (MXU-eligible) into a single VMEM-resident output block
+shared by all grid steps.  Keys never round-trip to HBM mid-sort — the
+analogue of the paper keeping the working set in the Tachyon RAM tier
+instead of spilling to OrangeFS.
+
+The kernel sorts a companion ``perm`` array with lexicographic (key, perm)
+tie-breaking, so the output permutation is valid even with duplicate keys and
+the overall sort is stable.  The Rust mapper applies ``perm`` to full
+records and k-way-merges the sorted tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT shapes — these must match rust/src/terasort (TILES/LANE) and the
+# manifest emitted by aot.py.
+TILES = 64  # tiles per kernel invocation
+LANE = 256  # keys per tile; power of two (bitonic requirement)
+# Tiles per VMEM block (grid step). Perf note (EXPERIMENTS.md §Perf): the
+# compare-exchange network is identical per tile, so processing several
+# tiles per grid step vectorizes every stage across the tile dimension —
+# fewer, fatter ops. 16×256 u32 tiles per step won the ablation sweep (EXPERIMENTS.md §Perf):
+# 2.2× the single-tile-per-step rate through the rust PJRT path.
+TILE_BLOCK = 16
+assert TILES % TILE_BLOCK == 0
+NUM_BUCKETS = 256  # range-partition buckets (top byte of the u32 key)
+_LOG2_LANE = LANE.bit_length() - 1
+
+
+def _compare_exchange(keys, perm, j, k):
+    """One bitonic compare-exchange stage along the last axis.
+
+    Position ``i`` pairs with ``i ^ j``; the direction of the (i, i^j)
+    exchange flips with bit ``k`` of ``i``.  Ties on the key are broken by
+    ``perm`` so the exchange is a strict lexicographic comparison — this
+    keeps the permutation a bijection even with duplicate keys.
+    """
+    idx = jnp.arange(keys.shape[-1], dtype=jnp.int32)
+    partner = idx ^ j
+    pkeys = keys[..., partner]
+    pperm = perm[..., partner]
+
+    up = (idx & k) == 0  # ascending region?
+    is_lower = (idx & j) == 0  # lower index of the pair?
+    want_small = jnp.where(up, is_lower, ~is_lower)
+
+    partner_less = (pkeys < keys) | ((pkeys == keys) & (pperm < perm))
+    partner_greater = (pkeys > keys) | ((pkeys == keys) & (pperm > perm))
+    take_partner = jnp.where(want_small, partner_less, partner_greater)
+
+    keys = jnp.where(take_partner, pkeys, keys)
+    perm = jnp.where(take_partner, pperm, perm)
+    return keys, perm
+
+
+def bitonic_sort_with_perm(keys, perm):
+    """Full bitonic network: sorts ``keys`` ascending along the last axis,
+    applying identical exchanges to ``perm``.  Shapes are static so the
+    O(log² n) stage loop unrolls at trace time into a fixed HLO DAG."""
+    n = keys.shape[-1]
+    assert n & (n - 1) == 0, "bitonic sort needs a power-of-two lane count"
+    log2n = n.bit_length() - 1
+    for k_exp in range(1, log2n + 1):
+        k = 1 << k_exp
+        for j_exp in range(k_exp - 1, -1, -1):
+            keys, perm = _compare_exchange(keys, perm, 1 << j_exp, k)
+    return keys, perm
+
+
+def _bucket_of(keys):
+    """Range-partition bucket: top byte of the big-endian u32 key prefix."""
+    return (keys >> jnp.uint32(32 - 8)).astype(jnp.int32)
+
+
+def _make_kernel(lane):
+    """Kernel body closed over the (static) lane width; handles any number
+    of tiles per block (every stage vectorizes across the tile dim)."""
+
+    def kernel(keys_ref, sorted_ref, perm_ref, hist_ref):
+        keys = keys_ref[...]  # (tile_block, lane) u32, VMEM-resident
+        n = keys.shape[0] * keys.shape[1]
+        perm0 = jax.lax.broadcasted_iota(jnp.int32, keys.shape, dimension=1)
+        skeys, sperm = bitonic_sort_with_perm(keys, perm0)
+        sorted_ref[...] = skeys
+        perm_ref[...] = sperm
+
+        one_hot = (
+            _bucket_of(keys).reshape(n, 1) == jnp.arange(NUM_BUCKETS, dtype=jnp.int32)
+        ).astype(jnp.float32)
+        tile_hist = jnp.dot(jnp.ones((1, n), jnp.float32), one_hot)
+
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            hist_ref[...] = jnp.zeros_like(hist_ref)
+
+        hist_ref[...] += tile_hist.reshape(NUM_BUCKETS).astype(jnp.int32)
+
+    return kernel
+
+
+def sort_block_sized(keys, tile_block=1):
+    """Shape-generic variant of :func:`sort_block` — any ``(tiles, lane)``
+    u32 array with a power-of-two lane count, processing ``tile_block``
+    tiles per grid step.  Used by the hypothesis shape sweep; the AOT
+    artifact pins :data:`TILES`×:data:`LANE` with :data:`TILE_BLOCK`."""
+    tiles, lane = keys.shape
+    assert keys.dtype == jnp.uint32, keys.dtype
+    assert lane & (lane - 1) == 0, "lane must be a power of two"
+    assert tiles % tile_block == 0, (tiles, tile_block)
+    return pl.pallas_call(
+        _make_kernel(lane),
+        grid=(tiles // tile_block,),
+        in_specs=[pl.BlockSpec((tile_block, lane), lambda t: (t, 0))],
+        out_specs=[
+            pl.BlockSpec((tile_block, lane), lambda t: (t, 0)),
+            pl.BlockSpec((tile_block, lane), lambda t: (t, 0)),
+            # Single histogram block shared by every grid step (accumulator).
+            pl.BlockSpec((NUM_BUCKETS,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles, lane), jnp.uint32),
+            jax.ShapeDtypeStruct((tiles, lane), jnp.int32),
+            jax.ShapeDtypeStruct((NUM_BUCKETS,), jnp.int32),
+        ],
+        interpret=True,
+    )(keys)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sort_block(keys):
+    """Sort ``(TILES, LANE)`` u32 keys tile-wise; also return the in-tile
+    permutation and the block's partition histogram.
+
+    Returns ``(sorted_keys u32[TILES,LANE], perm s32[TILES,LANE],
+    hist s32[NUM_BUCKETS])``.
+    """
+    assert keys.shape == (TILES, LANE) and keys.dtype == jnp.uint32, (
+        keys.shape,
+        keys.dtype,
+    )
+    return sort_block_sized(keys, TILE_BLOCK)
+
+
+def vmem_footprint_bytes():
+    """Static VMEM estimate per grid step (DESIGN.md §Perf): input block +
+    sorted block + perm block + histogram accumulator + one-hot scratch."""
+    block = TILE_BLOCK * LANE * 4
+    one_hot = TILE_BLOCK * LANE * NUM_BUCKETS * 4
+    hist = NUM_BUCKETS * 4
+    return 3 * block + one_hot + hist

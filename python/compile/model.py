@@ -1,0 +1,62 @@
+"""Layer-2 JAX model: the analytics compute graphs that tlstore AOT-compiles.
+
+Two entry points, both jitted once and lowered to HLO text by ``aot.py``:
+
+- :func:`terasort_block` — the TeraSort mapper hot-spot.  Calls the Pallas
+  bitonic sort-network kernel (L1) on a block of u32 key prefixes and
+  returns sorted keys, the in-tile permutation, and the range-partition
+  histogram that drives the reducer assignment.
+- :func:`analytics_agg` — the log-analytics reduction.  Calls the Pallas
+  streaming column-stats kernel (L1) and fuses the mean/variance epilogue
+  into the same HLO module so Rust gets finished statistics in one call.
+
+Python only ever runs at build time; the Rust runtime loads the lowered HLO
+via PJRT and executes it on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aggregate, sortnet
+
+# Re-exported static shapes (single source of truth for aot.py + manifest).
+SORT_TILES = sortnet.TILES
+SORT_LANE = sortnet.LANE
+SORT_BUCKETS = sortnet.NUM_BUCKETS
+AGG_ROWS = aggregate.ROWS
+AGG_COLS = aggregate.COLS
+AGG_STAT_ROWS = aggregate.STAT_ROWS
+
+
+def terasort_block(keys):
+    """Sort a ``(SORT_TILES, SORT_LANE)`` u32 key block tile-wise.
+
+    Returns ``(sorted u32[T,L], perm s32[T,L], hist s32[SORT_BUCKETS])``.
+    The caller (Rust mapper) applies ``perm`` to full records and k-way
+    merges the tiles; ``hist`` feeds the TeraSort range partitioner.
+    """
+    return sortnet.sort_block(keys)
+
+
+def analytics_agg(x):
+    """Aggregate an ``(AGG_ROWS, AGG_COLS)`` f32 table.
+
+    Returns ``(stats f32[4, C] (sum,min,max,sumsq), mean f32[C],
+    var f32[C])``.  The epilogue is plain jnp so XLA fuses it with the
+    kernel's output block — no second pass over the table.
+    """
+    stats = aggregate.column_stats(x)
+    n = jnp.float32(x.shape[0])
+    mean = stats[0] / n
+    var = stats[3] / n - mean * mean
+    return stats, mean, var
+
+
+def entry_points():
+    """(name, fn, example_args) for every artifact aot.py must emit."""
+    key_spec = jax.ShapeDtypeStruct((SORT_TILES, SORT_LANE), jnp.uint32)
+    agg_spec = jax.ShapeDtypeStruct((AGG_ROWS, AGG_COLS), jnp.float32)
+    return [
+        ("sort_block", terasort_block, (key_spec,)),
+        ("analytics_agg", analytics_agg, (agg_spec,)),
+    ]

@@ -1,0 +1,196 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes and value distributions; every property asserts
+exact equality for integer outputs and allclose for float outputs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import aggregate, ref, sortnet
+
+_SETTINGS = dict(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _keys(rng, tiles, lane, lo=0, hi=2**32):
+    return jnp.asarray(
+        rng.integers(lo, hi, size=(tiles, lane), dtype=np.uint64).astype(np.uint32)
+    )
+
+
+# ---------------------------------------------------------------- sortnet
+
+
+class TestSortBlockFixedShape:
+    """The exact AOT shape (TILES × LANE) — the contract Rust relies on."""
+
+    def test_random_uniform(self):
+        rng = np.random.default_rng(1)
+        k = _keys(rng, sortnet.TILES, sortnet.LANE)
+        s, p, h = sortnet.sort_block(k)
+        rs, rp, rh = ref.sort_block_ref(k)
+        assert (np.asarray(s) == np.asarray(rs)).all()
+        assert (np.asarray(p) == np.asarray(rp)).all()
+        assert (np.asarray(h) == np.asarray(rh)).all()
+
+    def test_all_equal_keys(self):
+        k = jnp.full((sortnet.TILES, sortnet.LANE), 0xDEADBEEF, jnp.uint32)
+        s, p, h = sortnet.sort_block(k)
+        assert (np.asarray(s) == 0xDEADBEEF).all()
+        # stable: perm must be the identity within each tile
+        assert (np.asarray(p) == np.arange(sortnet.LANE, dtype=np.int32)).all()
+        assert np.asarray(h).sum() == sortnet.TILES * sortnet.LANE
+
+    def test_already_sorted_and_reversed(self):
+        base = np.arange(sortnet.LANE, dtype=np.uint32) * 7919
+        asc = jnp.asarray(np.tile(base, (sortnet.TILES, 1)))
+        desc = jnp.asarray(np.tile(base[::-1].copy(), (sortnet.TILES, 1)))
+        for k in (asc, desc):
+            s, p, h = sortnet.sort_block(k)
+            rs, rp, rh = ref.sort_block_ref(k)
+            assert (np.asarray(s) == np.asarray(rs)).all()
+            assert (np.asarray(p) == np.asarray(rp)).all()
+            assert (np.asarray(h) == np.asarray(rh)).all()
+
+    def test_extreme_values(self):
+        rng = np.random.default_rng(2)
+        k = np.asarray(_keys(rng, sortnet.TILES, sortnet.LANE)).copy()
+        k[0, :8] = 0
+        k[0, 8:16] = 0xFFFFFFFF
+        k = jnp.asarray(k)
+        s, p, h = sortnet.sort_block(k)
+        rs, rp, rh = ref.sort_block_ref(k)
+        assert (np.asarray(s) == np.asarray(rs)).all()
+        assert (np.asarray(h) == np.asarray(rh)).all()
+
+    def test_histogram_counts_total(self):
+        rng = np.random.default_rng(3)
+        k = _keys(rng, sortnet.TILES, sortnet.LANE)
+        _, _, h = sortnet.sort_block(k)
+        assert np.asarray(h).sum() == sortnet.TILES * sortnet.LANE
+
+    def test_perm_is_bijection_per_tile(self):
+        rng = np.random.default_rng(4)
+        # heavy duplicates stress the tie-breaking
+        k = _keys(rng, sortnet.TILES, sortnet.LANE, hi=16)
+        _, p, _ = sortnet.sort_block(k)
+        p = np.asarray(p)
+        for t in range(sortnet.TILES):
+            assert sorted(p[t].tolist()) == list(range(sortnet.LANE))
+
+
+class TestSortBlockShapeSweep:
+    """hypothesis sweep over tile counts, lane widths, and key ranges."""
+
+    @settings(**_SETTINGS)
+    @given(
+        tiles=st.integers(min_value=1, max_value=8),
+        lane_exp=st.integers(min_value=1, max_value=8),
+        hi=st.sampled_from([2, 7, 256, 2**16, 2**32]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_oracle(self, tiles, lane_exp, hi, seed):
+        rng = np.random.default_rng(seed)
+        k = _keys(rng, tiles, 1 << lane_exp, hi=hi)
+        s, p, h = sortnet.sort_block_sized(k)
+        rs, rp, rh = ref.sort_block_ref(k)
+        assert (np.asarray(s) == np.asarray(rs)).all()
+        assert (np.asarray(p) == np.asarray(rp)).all()
+        assert (np.asarray(h) == np.asarray(rh)).all()
+
+    @settings(**_SETTINGS)
+    @given(
+        tiles=st.integers(min_value=1, max_value=4),
+        lane_exp=st.integers(min_value=1, max_value=7),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_sorted_is_permutation_of_input(self, tiles, lane_exp, seed):
+        rng = np.random.default_rng(seed)
+        k = _keys(rng, tiles, 1 << lane_exp)
+        s, p, _ = sortnet.sort_block_sized(k)
+        s, p, k = np.asarray(s), np.asarray(p), np.asarray(k)
+        for t in range(tiles):
+            assert sorted(s[t].tolist()) == sorted(k[t].tolist())
+            assert (k[t][p[t]] == s[t]).all()
+            assert (np.diff(s[t].astype(np.int64)) >= 0).all()
+
+    def test_rejects_non_pow2_lane(self):
+        k = jnp.zeros((2, 100), jnp.uint32)
+        with pytest.raises(AssertionError):
+            sortnet.sort_block_sized(k)
+
+
+# -------------------------------------------------------------- aggregate
+
+
+class TestColumnStatsFixedShape:
+    def test_random_normal(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=(aggregate.ROWS, aggregate.COLS)).astype(np.float32))
+        st_ = aggregate.column_stats(x)
+        np.testing.assert_allclose(np.asarray(st_), np.asarray(ref.column_stats_ref(x)), rtol=1e-5, atol=1e-4)
+
+    def test_constant_columns(self):
+        x = jnp.full((aggregate.ROWS, aggregate.COLS), 3.5, jnp.float32)
+        st_ = np.asarray(aggregate.column_stats(x))
+        np.testing.assert_allclose(st_[0], aggregate.ROWS * 3.5, rtol=1e-6)
+        np.testing.assert_allclose(st_[1], 3.5)
+        np.testing.assert_allclose(st_[2], 3.5)
+        np.testing.assert_allclose(st_[3], aggregate.ROWS * 3.5**2, rtol=1e-6)
+
+    def test_negative_and_mixed_sign(self):
+        rng = np.random.default_rng(6)
+        x = jnp.asarray((rng.normal(size=(aggregate.ROWS, aggregate.COLS)) * 100 - 50).astype(np.float32))
+        st_ = aggregate.column_stats(x)
+        np.testing.assert_allclose(np.asarray(st_), np.asarray(ref.column_stats_ref(x)), rtol=1e-4, atol=1e-2)
+
+
+class TestColumnStatsShapeSweep:
+    @settings(**_SETTINGS)
+    @given(
+        chunks=st.integers(min_value=1, max_value=8),
+        chunk=st.sampled_from([1, 4, 32, 128]),
+        cols=st.integers(min_value=1, max_value=16),
+        scale=st.sampled_from([1e-3, 1.0, 1e3]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_oracle(self, chunks, chunk, cols, scale, seed):
+        rng = np.random.default_rng(seed)
+        rows = chunks * chunk
+        x = jnp.asarray((rng.normal(size=(rows, cols)) * scale).astype(np.float32))
+        got = aggregate.column_stats_sized(x, chunk)
+        want = ref.column_stats_ref(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5 * scale)
+
+    def test_rejects_misaligned_chunk(self):
+        x = jnp.zeros((10, 4), jnp.float32)
+        with pytest.raises(AssertionError):
+            aggregate.column_stats_sized(x, 3)
+
+
+# ----------------------------------------------------- structural / perf
+
+
+class TestKernelStructure:
+    """DESIGN.md §Perf structural assertions — VMEM residency targets."""
+
+    def test_sortnet_vmem_fits(self):
+        # per-grid-step working set must fit in a 16 MiB VMEM with headroom
+        # (TILE_BLOCK=16 carries a 4 MiB one-hot scratch — the perf sweep's
+        # winner; see EXPERIMENTS.md §Perf)
+        assert sortnet.vmem_footprint_bytes() < 8 * 1024 * 1024
+
+    def test_aggregate_vmem_fits(self):
+        assert aggregate.vmem_footprint_bytes() < 4 * 1024 * 1024
+
+    def test_bitonic_stage_count(self):
+        # O(log² n): n=256 → 8*9/2 = 36 compare-exchange stages
+        log2n = sortnet.LANE.bit_length() - 1
+        assert log2n * (log2n + 1) // 2 == 36

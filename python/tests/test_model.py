@@ -1,0 +1,56 @@
+"""L2 model correctness: entry points vs oracles, shape contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestTerasortBlock:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(10)
+        k = jnp.asarray(
+            rng.integers(0, 2**32, size=(model.SORT_TILES, model.SORT_LANE), dtype=np.uint64).astype(np.uint32)
+        )
+        s, p, h = model.terasort_block(k)
+        rs, rp, rh = ref.terasort_block_ref(k)
+        assert (np.asarray(s) == np.asarray(rs)).all()
+        assert (np.asarray(p) == np.asarray(rp)).all()
+        assert (np.asarray(h) == np.asarray(rh)).all()
+
+    def test_output_shapes_and_dtypes(self):
+        k = jnp.zeros((model.SORT_TILES, model.SORT_LANE), jnp.uint32)
+        s, p, h = model.terasort_block(k)
+        assert s.shape == (model.SORT_TILES, model.SORT_LANE) and s.dtype == jnp.uint32
+        assert p.shape == (model.SORT_TILES, model.SORT_LANE) and p.dtype == jnp.int32
+        assert h.shape == (model.SORT_BUCKETS,) and h.dtype == jnp.int32
+
+
+class TestAnalyticsAgg:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.normal(size=(model.AGG_ROWS, model.AGG_COLS)).astype(np.float32))
+        stats, mean, var = model.analytics_agg(x)
+        rstats, rmean, rvar = ref.analytics_agg_ref(x)
+        np.testing.assert_allclose(np.asarray(stats), np.asarray(rstats), rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(mean), np.asarray(rmean), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(var), np.asarray(rvar), rtol=1e-3, atol=1e-4)
+
+    def test_variance_nonnegative_for_reasonable_data(self):
+        rng = np.random.default_rng(12)
+        x = jnp.asarray(rng.uniform(-10, 10, size=(model.AGG_ROWS, model.AGG_COLS)).astype(np.float32))
+        _, _, var = model.analytics_agg(x)
+        assert (np.asarray(var) >= -1e-3).all()
+
+
+class TestEntryPoints:
+    def test_registry_is_complete(self):
+        names = [n for n, _, _ in model.entry_points()]
+        assert names == ["sort_block", "analytics_agg"]
+
+    def test_example_args_trace(self):
+        # every entry point must trace with its example args (AOT precondition)
+        for _, fn, args in model.entry_points():
+            jax.eval_shape(fn, *args)

@@ -1,0 +1,161 @@
+//! Ablations for the design choices the paper tunes by hand:
+//!
+//! - §3.2's buffer pair ("1 MB request / 4 MB PFS buffer … selected by
+//!   performing a series of I/O throughput measurements") — we rerun the
+//!   series on the real engine.
+//! - §3.1's block × stripe layout mapping.
+//! - §3.2's LRU vs LFU eviction under a skewed re-read workload.
+//! - PFS read-checksum verification cost.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use tlstore::bench::{header, Bencher};
+use tlstore::storage::eviction;
+use tlstore::storage::pfs::Pfs;
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::{ObjectStore, ReadMode, WriteMode};
+use tlstore::testing::TempDir;
+use tlstore::util::bytes::fmt_bytes;
+use tlstore::util::rng::Pcg32;
+
+fn data(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg32::new(seed, 3);
+    let mut v = vec![0u8; n];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// §3.2 buffer sweep: throughput of two-level reads that miss the memory
+/// tier, as a function of the PFS transfer buffer.
+fn buffer_sweep(b: &Bencher) {
+    println!("== §3.2 ablation: PFS transfer buffer size (cold two-level reads) ==");
+    header();
+    const SIZE: usize = 8 << 20;
+    for buf in [64 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20] {
+        let dir = TempDir::new("abl-buf").unwrap();
+        let cfg = TlsConfig::builder(dir.path())
+            .mem_capacity(2 << 20) // smaller than the object: reads always miss
+            .block_size(1 << 20)
+            .pfs_servers(4)
+            .stripe_size(512 << 10)
+            .pfs_buffer(buf)
+            .build()
+            .unwrap();
+        let store = TwoLevelStore::open(cfg).unwrap();
+        let payload = data(SIZE, buf);
+        store.write("x", &payload, WriteMode::Bypass).unwrap();
+        let m = b.iter(
+            &format!("pfs_buffer={}", fmt_bytes(buf)),
+            Some(SIZE as u64),
+            || {
+                std::hint::black_box(store.read("x", ReadMode::TwoLevel).unwrap());
+            },
+        );
+        println!("{}", m.report());
+    }
+}
+
+/// §3.1 layout sweep: block × stripe on cold PFS reads + servers-per-block.
+fn layout_sweep(b: &Bencher) {
+    println!("\n== §3.1 ablation: stripe size × server count (whole-object PFS reads) ==");
+    header();
+    const SIZE: usize = 8 << 20;
+    for servers in [1usize, 2, 4, 8] {
+        for stripe in [256 << 10u64, 1 << 20, 4 << 20] {
+            let dir = TempDir::new("abl-layout").unwrap();
+            let pfs = Pfs::open(dir.path(), servers, stripe).unwrap();
+            let payload = data(SIZE, stripe + servers as u64);
+            pfs.write("x", &payload).unwrap();
+            let label = format!("servers={servers} stripe={}", fmt_bytes(stripe));
+            let m = b.iter(&label, Some(SIZE as u64), || {
+                std::hint::black_box(pfs.read("x").unwrap());
+            });
+            println!("{}", m.report());
+        }
+    }
+}
+
+/// §3.2 eviction: LRU vs LFU hit rates under a hot/cold skewed workload.
+fn eviction_sweep() {
+    println!("\n== §3.2 ablation: LRU vs LFU under a skewed re-read workload ==");
+    const BLOCK: usize = 64 << 10;
+    for policy in ["lru", "lfu"] {
+        let dir = TempDir::new("abl-evict").unwrap();
+        let cfg = TlsConfig::builder(dir.path())
+            .mem_capacity((8 * BLOCK) as u64) // 8 blocks resident max
+            .block_size(BLOCK as u64)
+            .pfs_servers(2)
+            .stripe_size(32 << 10)
+            .eviction(policy)
+            .build()
+            .unwrap();
+        let store = TwoLevelStore::open(cfg).unwrap();
+        // 4 hot objects + 16 cold objects, zipf-ish access
+        for i in 0..20 {
+            store
+                .write(&format!("o{i}"), &data(BLOCK, i), WriteMode::Bypass)
+                .unwrap();
+        }
+        let mut rng = Pcg32::new(77, 7);
+        for _ in 0..400 {
+            let i = if rng.gen_f64() < 0.8 {
+                rng.gen_range(4) // hot set
+            } else {
+                4 + rng.gen_range(16)
+            };
+            let _ = store.read(&format!("o{i}"), ReadMode::TwoLevel).unwrap();
+        }
+        let ms = store.mem_stats();
+        println!(
+            "{policy}: hit rate {:.1}% (hits {} / misses {}, evictions {})",
+            ms.hit_rate() * 100.0,
+            ms.hits,
+            ms.misses,
+            ms.evictions
+        );
+    }
+}
+
+/// Checksum-verification cost on PFS reads.
+fn checksum_sweep(b: &Bencher) {
+    println!("\n== ablation: CRC verification on PFS reads ==");
+    header();
+    const SIZE: usize = 16 << 20;
+    for verify in [true, false] {
+        let dir = TempDir::new("abl-crc").unwrap();
+        let mut pfs = Pfs::open(dir.path(), 4, 1 << 20).unwrap();
+        pfs.verify_reads = verify;
+        let payload = data(SIZE, 5);
+        pfs.write("x", &payload).unwrap();
+        let m = b.iter(
+            &format!("verify_reads={verify}"),
+            Some(SIZE as u64),
+            || {
+                std::hint::black_box(pfs.read("x").unwrap());
+            },
+        );
+        println!("{}", m.report());
+    }
+}
+
+fn main() {
+    let b = Bencher::default();
+    buffer_sweep(&b);
+    layout_sweep(&b);
+    eviction_sweep();
+    checksum_sweep(&b);
+
+    // structural cross-check (the tuning metric of §3.1)
+    println!("\nservers-per-block metric (ideal = engage all servers):");
+    for (block, stripe, servers) in [(512u64 << 20, 64u64 << 20, 2usize), (4 << 20, 1 << 20, 4)] {
+        let l = tlstore::storage::layout::StripeLayout::new(stripe, servers).unwrap();
+        println!(
+            "  block {} / stripe {} on {} servers → {} servers engaged per block",
+            fmt_bytes(block),
+            fmt_bytes(stripe),
+            servers,
+            l.servers_per_block(block)
+        );
+    }
+    let _ = eviction::by_name("lru"); // keep the module exercised
+}

@@ -1,0 +1,147 @@
+//! Figure 1 + Table 1: I/O throughputs of the storage tiers.
+//!
+//! The paper measured `dd` sequential read/write on five national HPC
+//! systems (RAM disk, global PFS, local disk) plus Iperf network numbers.
+//! We (a) print the paper's recorded dataset — those constants drive the
+//! models and the simulator — and (b) measure the *real* tiers of this
+//! repo on this host: memory tier, striped PFS tier, HDFS-like replicated
+//! tier, single local file. Absolute numbers differ from Palmetto's; the
+//! ordering (RAM ≫ striped PFS ≥ plain file ≥ replicated) must hold.
+//!
+//! Run: `cargo bench --bench fig1_io_throughput`
+
+use std::sync::Arc;
+
+use tlstore::bench::{header, Bencher};
+use tlstore::config::presets::{self, fig1_ratios, PAPER_CONSTANTS};
+use tlstore::storage::hdfs::HdfsLike;
+use tlstore::storage::memstore::MemStore;
+use tlstore::storage::pfs::Pfs;
+use tlstore::storage::ObjectStore;
+use tlstore::testing::TempDir;
+use tlstore::util::rng::Pcg32;
+
+const SIZE: usize = 16 << 20; // per-op payload
+
+fn payload() -> Vec<u8> {
+    let mut rng = Pcg32::new(1, 1);
+    let mut v = vec![0u8; SIZE];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+fn main() {
+    println!("== Table 1 (paper dataset): compute-node storage statistics ==");
+    println!(
+        "{:<10} {:>10} {:>8} {:>14} {:>6}",
+        "system", "disk GB", "RAM GB", "PFS GB", "cores"
+    );
+    for s in presets::TABLE1 {
+        println!(
+            "{:<10} {:>10.0} {:>8.0} {:>14.0} {:>6}",
+            s.name, s.local_disk_gb, s.ram_gb, s.pfs_gb, s.cpu_cores
+        );
+    }
+    let avg = presets::table1_average();
+    println!(
+        "{:<10} {:>10.0} {:>8.0} {:>14.0} {:>6}",
+        avg.name, avg.local_disk_gb, avg.ram_gb, avg.pfs_gb, avg.cpu_cores
+    );
+
+    println!("\n== Figure 1 (paper dataset): measured averages across HPC systems ==");
+    println!(
+        "RAM {} MB/s · global read {:.0} MB/s · local read {} MB/s · NIC {} MB/s",
+        PAPER_CONSTANTS.ram_mbs,
+        PAPER_CONSTANTS.disk_read_mbs * fig1_ratios::GLOBAL_OVER_LOCAL_READ,
+        PAPER_CONSTANTS.disk_read_mbs,
+        PAPER_CONSTANTS.nic_mbs
+    );
+    println!(
+        "ratios: RAM/global read {}× · global/local read {}× · RAM/global write {}× · global/local write {}×",
+        fig1_ratios::RAM_OVER_GLOBAL_READ,
+        fig1_ratios::GLOBAL_OVER_LOCAL_READ,
+        fig1_ratios::RAM_OVER_GLOBAL_WRITE,
+        fig1_ratios::GLOBAL_OVER_LOCAL_WRITE
+    );
+
+    println!("\n== measured on this host (real engines, {} MiB ops) ==", SIZE >> 20);
+    header();
+    let b = Bencher::default();
+    let data = payload();
+    let bytes = Some(SIZE as u64);
+
+    // memory tier (the Tachyon analogue). The store itself is zero-copy
+    // (Arc'd blocks); to report an application-visible MB/s we charge one
+    // materialization per op, like a reader consuming the bytes.
+    let mem = MemStore::new(1 << 30, "lru").unwrap();
+    let mut i = 0u64;
+    let m = b.iter("mem-tier write (materialized)", bytes, || {
+        i += 1;
+        let block: Arc<[u8]> = data.as_slice().to_vec().into();
+        mem.put(&format!("w{}", i % 8), block).unwrap();
+    });
+    println!("{}", m.report());
+    let mem_write = m.throughput_mbs().unwrap();
+    mem.put("r", data.clone().into()).unwrap();
+    let mut sink = vec![0u8; SIZE];
+    let m = b.iter("mem-tier read (materialized)", bytes, || {
+        let block = mem.get("r").unwrap();
+        sink.copy_from_slice(&block);
+        std::hint::black_box(&sink);
+    });
+    println!("{}", m.report());
+    let mem_read = m.throughput_mbs().unwrap();
+
+    // striped PFS tier (the OrangeFS analogue)
+    let dir = TempDir::new("fig1-pfs").unwrap();
+    let pfs = Pfs::open(dir.path(), 4, 1 << 20).unwrap();
+    let mut i = 0u64;
+    let m = b.iter("pfs write (4 servers, 1M stripes)", bytes, || {
+        i += 1;
+        pfs.write(&format!("w{}", i % 4), &data).unwrap();
+    });
+    println!("{}", m.report());
+    pfs.write("r", &data).unwrap();
+    let m = b.iter("pfs read  (4 servers, 1M stripes)", bytes, || {
+        std::hint::black_box(pfs.read("r").unwrap());
+    });
+    println!("{}", m.report());
+    let pfs_read = m.throughput_mbs().unwrap();
+
+    // replicated local tier (the HDFS analogue) — write amplification ×3
+    let dir = TempDir::new("fig1-hdfs").unwrap();
+    let hdfs = HdfsLike::open(dir.path(), 4, 3).unwrap();
+    let mut i = 0u64;
+    let m = b.iter("hdfs write (3 replicas)", bytes, || {
+        i += 1;
+        hdfs.write(&format!("w{}", i % 4), &data).unwrap();
+    });
+    println!("{}", m.report());
+    hdfs.write("r", &data).unwrap();
+    let m = b.iter("hdfs read  (local replica)", bytes, || {
+        std::hint::black_box(hdfs.read("r").unwrap());
+    });
+    println!("{}", m.report());
+
+    // plain local file baseline (the `dd` analogue)
+    let dir = TempDir::new("fig1-file").unwrap();
+    let path = dir.join("file");
+    let m = b.iter("local file write", bytes, || {
+        std::fs::write(&path, &data).unwrap();
+    });
+    println!("{}", m.report());
+    let m = b.iter("local file read", bytes, || {
+        std::hint::black_box(std::fs::read(&path).unwrap());
+    });
+    println!("{}", m.report());
+
+    println!("\nshape check (paper ordering must hold):");
+    println!(
+        "  mem read {mem_read:.0} MB/s > pfs read {pfs_read:.0} MB/s : {}",
+        if mem_read > pfs_read { "OK" } else { "VIOLATION" }
+    );
+    println!(
+        "  mem write {mem_write:.0} MB/s > pfs read {pfs_read:.0} MB/s : {}",
+        if mem_write > pfs_read { "OK" } else { "VIOLATION" }
+    );
+}

@@ -1,0 +1,91 @@
+//! Figure 5: aggregate read/write throughput curves of HDFS vs parallel
+//! FS vs two-level storage, with the §4.5 crossover points.
+//!
+//! Regenerates the exact series the paper plots (both 10 GB/s and 50 GB/s
+//! PFS configurations, f ∈ {0.2, 0.5}) and prints each crossover next to
+//! the paper's number. These are analytic — evaluation is instant — so
+//! this bench doubles as the regression gate for eqs. (1)–(7).
+//!
+//! Run: `cargo bench --bench fig5_model_crossover`
+
+use tlstore::model::{CaseStudyParams, ClusterParams};
+
+fn series(b_mbs: f64) {
+    let m = CaseStudyParams::new(b_mbs);
+    println!(
+        "\n== Figure 5 series @ PFS aggregate {} GB/s (MB/s, aggregate) ==",
+        b_mbs / 1000.0
+    );
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12} | {:>12} {:>12}",
+        "N", "hdfs_rd", "pfs_rd", "tls_rd f=.2", "tls_rd f=.5", "hdfs_wr", "pfs/tls_wr"
+    );
+    let mut n = 1u32;
+    while n <= 2048 {
+        println!(
+            "{:>6} {:>12.0} {:>12.0} {:>12.0} {:>12.0} | {:>12.0} {:>12.0}",
+            n,
+            m.hdfs_read_aggregate(n),
+            m.pfs_aggregate_throughput(n),
+            m.tls_read_aggregate(n, 0.2),
+            m.tls_read_aggregate(n, 0.5),
+            m.hdfs_write_aggregate(n),
+            m.tls_write_aggregate(n),
+        );
+        n *= 2;
+    }
+}
+
+fn check(label: &str, got: u32, paper: u32) {
+    let status = if got == paper { "EXACT" } else { "DIFFERS" };
+    println!("{label:<46} ours: {got:>5}   paper: {paper:>5}   [{status}]");
+}
+
+fn main() {
+    series(10_000.0);
+    series(50_000.0);
+
+    println!("\n== crossover points (compute nodes needed for HDFS to win) ==");
+    let m10 = CaseStudyParams::new(10_000.0);
+    let m50 = CaseStudyParams::new(50_000.0);
+    check("read vs PFS @10 GB/s", m10.crossover_read_vs_pfs(), 43);
+    check("read vs TLS(f=0.2) @10 GB/s", m10.crossover_read_vs_tls(0.2), 53);
+    check("read vs TLS(f=0.5) @10 GB/s", m10.crossover_read_vs_tls(0.5), 83);
+    check("read vs PFS @50 GB/s", m50.crossover_read_vs_pfs(), 211);
+    check("read vs TLS(f=0.2) @50 GB/s", m50.crossover_read_vs_tls(0.2), 262);
+    check("read vs TLS(f=0.5) @50 GB/s", m50.crossover_read_vs_tls(0.5), 414);
+    check("write @10 GB/s", m10.crossover_write(), 259);
+    check("write @50 GB/s", m50.crossover_write(), 1294);
+
+    println!("\n== TLS aggregate-read gains over bare PFS (paper: +25% f=0.2, +95% f=0.5) ==");
+    for (f, paper) in [(0.2, 25.0), (0.5, 95.0)] {
+        let gain = (m10.tls_asymptotic_gain(f, 2000) - 1.0) * 100.0;
+        println!("f={f}: ours +{gain:.0}%   paper +{paper:.0}%");
+    }
+
+    println!("\n== general model (eqs. 1–7) on the Palmetto §5.1 testbed ==");
+    let p = ClusterParams::palmetto();
+    println!(
+        "hdfs: read(local) {:.0}  read(remote) {:.0}  write {:.1} MB/s",
+        p.hdfs_read_local(),
+        p.hdfs_read_remote(),
+        p.hdfs_write()
+    );
+    println!(
+        "ofs : read {:.1}  write {:.1} MB/s per compute node",
+        p.ofs_read(),
+        p.ofs_write()
+    );
+    println!(
+        "tachyon: read(local) {:.0}  write {:.0} MB/s",
+        p.tachyon_read_local(),
+        p.tachyon_write()
+    );
+    for f in [0.0, 0.2, 0.5, 0.8, 1.0] {
+        println!("tls read @f={f}: {:.1} MB/s", p.tls_read(f));
+    }
+    println!(
+        "tls write: {:.1} MB/s (bounded by the PFS leg, eq. 6)",
+        p.tls_write()
+    );
+}

@@ -1,0 +1,107 @@
+//! Figure 6: the storage mountain — read throughput vs (data size × skip
+//! size) for the two-level store.
+//!
+//! Two reproductions:
+//! 1. **Paper scale (simulated)**: the §5.2 setup — 16 GB Tachyon over a
+//!    12 TB OrangeFS, data 1–256 GB, skip 0–64 MB — via the calibrated
+//!    latency/bandwidth surface model. Shows both ridges, the capacity
+//!    cliff at 16 GB, and the skip slopes past the 1 MB buffer.
+//! 2. **Host scale (measured)**: the real engine with an 8 MiB memory
+//!    tier, sweeping data size across the capacity cliff.
+//!
+//! Run: `cargo bench --bench fig6_storage_mountain`
+
+use tlstore::sim::mountain::{mountain_point, MountainParams};
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::{ReadMode, WriteMode};
+use tlstore::testing::TempDir;
+use tlstore::util::bytes::fmt_bytes;
+use tlstore::util::rng::Pcg32;
+
+fn paper_scale() {
+    let p = MountainParams::default();
+    const GIB: f64 = (1u64 << 30) as f64;
+    const MIB: f64 = (1u64 << 20) as f64;
+    let skips: Vec<f64> = vec![0.0, 0.25 * MIB, MIB, 4.0 * MIB, 16.0 * MIB, 64.0 * MIB];
+    println!("== Figure 6 @ paper scale (simulated, MB/s) — 16 GB memory tier ==");
+    print!("{:>10}", "data\\skip");
+    for s in &skips {
+        print!("{:>10}", fmt_bytes(*s as u64));
+    }
+    println!();
+    for exp in 0..=8 {
+        let data = (1u64 << exp) as f64 * GIB;
+        print!("{:>10}", fmt_bytes(data as u64));
+        for &skip in &skips {
+            print!("{:>10.0}", mountain_point(&p, data, skip).throughput_mbs);
+        }
+        println!();
+    }
+    // annotate the two ridges
+    let high = mountain_point(&p, 8.0 * GIB, 0.0).throughput_mbs;
+    let low = mountain_point(&p, 256.0 * GIB, 0.0).throughput_mbs;
+    println!(
+        "Tachyon ridge ≈ {high:.0} MB/s, OrangeFS ridge ≈ {low:.0} MB/s, ratio {:.1}×\n",
+        high / low
+    );
+}
+
+fn host_scale() {
+    let mem_cap: u64 = 8 << 20;
+    let dir = TempDir::new("fig6").unwrap();
+    let cfg = TlsConfig::builder(dir.path())
+        .mem_capacity(mem_cap)
+        .block_size(256 << 10)
+        .pfs_servers(4)
+        .stripe_size(128 << 10)
+        .build()
+        .unwrap();
+    let store = TwoLevelStore::open(cfg).unwrap();
+    let request: u64 = 256 << 10;
+    let sizes: [u64; 5] = [1 << 20, 4 << 20, 8 << 20, 16 << 20, 32 << 20];
+    let skips: [u64; 4] = [0, 128 << 10, 512 << 10, 2 << 20];
+
+    println!("== Figure 6 @ host scale (measured on the real engine, MB/s) — {} memory tier ==", fmt_bytes(mem_cap));
+    print!("{:>10}", "data\\skip");
+    for s in skips {
+        print!("{:>10}", fmt_bytes(s));
+    }
+    println!();
+
+    let mut rng = Pcg32::new(2, 2);
+    for size in sizes {
+        let key = format!("m/{size}");
+        let mut data = vec![0u8; size as usize];
+        rng.fill_bytes(&mut data);
+        store.write(&key, &data, WriteMode::WriteThrough).unwrap();
+        // warm pass fixes residency for this size
+        let _ = read_sweep(&store, &key, size, 0, request);
+        print!("{:>10}", fmt_bytes(size));
+        for skip in skips {
+            print!("{:>10.0}", read_sweep(&store, &key, size, skip, request));
+        }
+        println!();
+        use tlstore::storage::ObjectStore;
+        store.delete(&key).unwrap();
+    }
+}
+
+fn read_sweep(store: &TwoLevelStore, key: &str, size: u64, skip: u64, request: u64) -> f64 {
+    let t = std::time::Instant::now();
+    let mut off = 0u64;
+    let mut bytes = 0u64;
+    while off < size {
+        let take = request.min(size - off);
+        bytes += store
+            .read_range(key, off, take as usize, ReadMode::TwoLevel)
+            .unwrap()
+            .len() as u64;
+        off += take + skip;
+    }
+    bytes as f64 / 1e6 / t.elapsed().as_secs_f64()
+}
+
+fn main() {
+    paper_scale();
+    host_scale();
+}

@@ -1,0 +1,134 @@
+//! Figure 7 + Table 3: TeraSort on HDFS vs OrangeFS vs two-level storage.
+//!
+//! Three reproductions:
+//! 1. **Paper scale (simulated)** — the §5.1 testbed (Table 3 constants,
+//!    16×16 containers, 2 data nodes, panels a–e as utilization means,
+//!    panel f as phase times, panel g as the data-node sweep).
+//! 2. **Host scale (measured)** — real TeraGen/TeraSort/TeraValidate
+//!    through the real engines with the PJRT sort kernel, all three
+//!    backends.
+//!
+//! Run: `cargo bench --bench fig7_terasort` (artifacts required for part 2)
+
+use std::path::Path;
+use std::sync::Arc;
+
+use tlstore::config::presets::PALMETTO;
+use tlstore::mapreduce::Engine;
+use tlstore::runtime::Runtime;
+use tlstore::sim::{simulate_terasort, BackendKind, SimConstants};
+use tlstore::storage::hdfs::HdfsLike;
+use tlstore::storage::pfs::Pfs;
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::ObjectStore;
+use tlstore::terasort::{input_checksum, run_terasort, teragen, teravalidate};
+use tlstore::testing::TempDir;
+
+fn paper_scale() {
+    println!("== Table 3 testbed (simulated): {} compute × {} containers, {} data nodes ==",
+        PALMETTO.compute_nodes, PALMETTO.containers_per_node, PALMETTO.data_nodes);
+    let constants = SimConstants::default();
+    let gb = 16.0; // time-scale-free: every stage is linear in bytes
+
+    let mut results = Vec::new();
+    for backend in [BackendKind::Hdfs, BackendKind::Ofs, BackendKind::Tls { f_pct: 100 }] {
+        let r = simulate_terasort(
+            backend,
+            PALMETTO.compute_nodes,
+            PALMETTO.data_nodes,
+            PALMETTO.containers_per_node,
+            gb,
+            constants,
+        )
+        .unwrap();
+        println!(
+            "\n[{}] map {:.1}s, reduce {:.1}s — Fig 7(a–e) utilization means:",
+            r.backend, r.map_time, r.reduce_time
+        );
+        for series in ["cpu0", "disk0", "ram0", "nic0", "raidr0", "raidw0", "dnic0"] {
+            let map_u = r.result_map.timelines.get(series).map(|t| t.mean()).unwrap_or(0.0);
+            let red_u = r.result_reduce.timelines.get(series).map(|t| t.mean()).unwrap_or(0.0);
+            println!("  {series:<8} map {:5.1}%   reduce {:5.1}%", map_u * 100.0, red_u * 100.0);
+        }
+        results.push(r);
+    }
+    println!("\nFig 7(f) mapper speedups (two-level vs …):");
+    println!(
+        "  vs HDFS: {:.1}× (paper 5.4×)   vs OFS: {:.1}× (paper 4.2×)",
+        results[0].map_time / results[2].map_time,
+        results[1].map_time / results[2].map_time
+    );
+    println!("\nFig 7(g) reduce scaling with data nodes (two-level):");
+    let base = simulate_terasort(BackendKind::Tls { f_pct: 100 }, 16, 2, 16, gb, constants).unwrap();
+    for (m, paper) in [(4usize, 1.9), (12, 4.5)] {
+        let r = simulate_terasort(BackendKind::Tls { f_pct: 100 }, 16, m, 16, gb, constants).unwrap();
+        println!(
+            "  {m:>2} data nodes: {:.1}× (paper {paper}×)",
+            base.reduce_time / r.reduce_time
+        );
+    }
+}
+
+fn host_scale() {
+    if !Path::new("artifacts/manifest.toml").exists() {
+        println!("\n(artifacts/ not built — skipping measured host-scale part)");
+        return;
+    }
+    let runtime = Arc::new(Runtime::load_dir(Path::new("artifacts")).unwrap());
+    let records: u64 = std::env::var("TLSTORE_BENCH_RECORDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100_000);
+    println!("\n== host scale (measured, {records} records, PJRT kernel on map path) ==");
+    println!(
+        "{:<8} {:>10} {:>12} {:>10} {:>12}  {}",
+        "backend", "map s", "map MB/s", "reduce s", "red MB/s", "valid"
+    );
+    for name in ["hdfs", "pfs", "tls"] {
+        let dir = TempDir::new(&format!("fig7-{name}")).unwrap();
+        let store: Arc<dyn ObjectStore> = match name {
+            "tls" => {
+                let cfg = TlsConfig::builder(dir.path())
+                    .mem_capacity(256 << 20)
+                    .block_size(4 << 20)
+                    .pfs_servers(4)
+                    .stripe_size(1 << 20)
+                    .build()
+                    .unwrap();
+                Arc::new(TwoLevelStore::open(cfg).unwrap())
+            }
+            "pfs" => Arc::new(Pfs::open(dir.path(), 4, 1 << 20).unwrap()),
+            _ => Arc::new(HdfsLike::open(dir.path(), 4, 3).unwrap()),
+        };
+        teragen(store.as_ref(), "in/", records, records / 8 + 1, 42).unwrap();
+        let (cnt, sum) = input_checksum(store.as_ref(), "in/").unwrap();
+        let engine = Engine::local();
+        let stats = run_terasort(
+            &engine,
+            Arc::clone(&store),
+            Arc::clone(&runtime),
+            "in/",
+            "out/",
+            8,
+            4 << 20,
+            true,
+        )
+        .unwrap();
+        let rep = teravalidate(store.as_ref(), "out/").unwrap();
+        let ok = rep.sorted && rep.records == cnt && rep.checksum == sum;
+        println!(
+            "{:<8} {:>10.2} {:>12.1} {:>10.2} {:>12.1}  {}",
+            name,
+            stats.map_time.as_secs_f64(),
+            stats.map_read_mbs(),
+            stats.reduce_time.as_secs_f64(),
+            stats.reduce_write_mbs(),
+            if ok { "OK" } else { "FAILED" }
+        );
+    }
+}
+
+fn main() {
+    paper_scale();
+    host_scale();
+}

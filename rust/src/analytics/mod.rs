@@ -1,0 +1,288 @@
+//! Log-analytics job: MapReduce aggregation of wide numeric event tables
+//! using the AOT-compiled `analytics_agg` Pallas kernel via PJRT.
+//!
+//! This is the second workload class the paper's introduction motivates
+//! (machine-learning / analytics frameworks over data staged in the
+//! memory tier). Mappers route rows by table id; reducers batch rows
+//! through the kernel (artifact shape `4096×8` f32) and emit per-table
+//! column statistics.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::{
+    Engine, InputSplit, JobSpec, JobStats, KV, MapContext, Mapper, MergeIter, Reducer,
+};
+use crate::runtime::{f32_bytes, Runtime};
+use crate::storage::ObjectStore;
+use crate::util::rng::Pcg32;
+
+/// Artifact row batch (must match `python/compile/kernels/aggregate.py`).
+pub const ROWS: usize = 4096;
+/// Columns per event row (artifact shape).
+pub const COLS: usize = 8;
+
+/// Per-column statistics of one table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableStats {
+    pub table_id: u32,
+    pub rows: u64,
+    pub mean: [f64; COLS],
+    pub min: [f64; COLS],
+    pub max: [f64; COLS],
+}
+
+/// Generate `tables` synthetic event tables of `rows` rows into
+/// `{prefix}table-{i}` and return the generator-side expected means
+/// (used by tests/examples to verify the kernel path).
+pub fn generate_tables(
+    store: &dyn ObjectStore,
+    prefix: &str,
+    tables: u32,
+    rows: usize,
+    seed: u64,
+) -> Result<Vec<[f64; COLS]>> {
+    let mut expected = Vec::with_capacity(tables as usize);
+    for t in 0..tables {
+        let mut rng = Pcg32::for_task(seed, t as u64);
+        let mut buf = Vec::with_capacity(rows * COLS * 4);
+        let mut sum = [0f64; COLS];
+        for _ in 0..rows {
+            for (c, s) in sum.iter_mut().enumerate() {
+                let v = (rng.gen_f64() * 100.0 - 50.0 + c as f64 * 10.0) as f32;
+                *s += v as f64;
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut means = [0f64; COLS];
+        for c in 0..COLS {
+            means[c] = sum[c] / rows as f64;
+        }
+        expected.push(means);
+        store.write(&format!("{prefix}table-{t}"), &buf)?;
+    }
+    Ok(expected)
+}
+
+/// Mapper: one record per row, keyed by table id.
+pub struct RowMapper;
+
+impl Mapper for RowMapper {
+    fn map(&self, split: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+        if data.len() % (COLS * 4) != 0 {
+            return Err(Error::Job(format!(
+                "{}: not a row multiple ({} bytes)",
+                split.object,
+                data.len()
+            )));
+        }
+        let table_id: u32 = split
+            .object
+            .rsplit('-')
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Job(format!("{}: no table id", split.object)))?;
+        let p = table_id % ctx.num_partitions();
+        for row in data.chunks_exact(COLS * 4) {
+            ctx.emit(p, KV::new(&table_id.to_be_bytes(), row));
+        }
+        Ok(())
+    }
+}
+
+/// Reducer: batches each table's rows through the PJRT kernel.
+pub struct AggReducer {
+    pub runtime: Arc<Runtime>,
+}
+
+impl AggReducer {
+    fn flush(&self, key: &[u8], rows: &[f32], out: &mut Vec<u8>) -> Result<()> {
+        if rows.is_empty() {
+            return Ok(());
+        }
+        let art = self.runtime.artifact("analytics_agg")?;
+        let n_real = rows.len() / COLS;
+        let mut sums = [0f64; COLS];
+        let mut mins = [f64::INFINITY; COLS];
+        let mut maxs = [f64::NEG_INFINITY; COLS];
+        let mut processed = 0usize;
+        while processed < n_real {
+            let take = (n_real - processed).min(ROWS);
+            let mut batch = rows[processed * COLS..(processed + take) * COLS].to_vec();
+            // pad the tail batch with repeats of its last row; min/max are
+            // unaffected, the padded contribution to sums is subtracted
+            let pad_rows = ROWS - take;
+            let last_row = batch[(take - 1) * COLS..take * COLS].to_vec();
+            for _ in 0..pad_rows {
+                batch.extend_from_slice(&last_row);
+            }
+            let got = art.call_bytes(&[&f32_bytes(&batch)])?;
+            let stats = got[0].as_f32()?;
+            for c in 0..COLS {
+                sums[c] += stats[c] as f64 - last_row[c] as f64 * pad_rows as f64;
+                mins[c] = mins[c].min(stats[COLS + c] as f64);
+                maxs[c] = maxs[c].max(stats[2 * COLS + c] as f64);
+            }
+            processed += take;
+        }
+        let id = u32::from_be_bytes(key.try_into().map_err(|_| Error::Job("bad key".into()))?);
+        out.extend_from_slice(format!("table {id}: rows={n_real}").as_bytes());
+        for c in 0..COLS {
+            out.extend_from_slice(
+                format!(
+                    " c{c}(mean={:.3},min={:.2},max={:.2})",
+                    sums[c] / n_real as f64,
+                    mins[c],
+                    maxs[c]
+                )
+                .as_bytes(),
+            );
+        }
+        out.push(b'\n');
+        Ok(())
+    }
+}
+
+impl Reducer for AggReducer {
+    fn reduce(&self, _p: u32, records: MergeIter, out: &mut Vec<u8>) -> Result<()> {
+        let mut current: Option<(Vec<u8>, Vec<f32>)> = None;
+        for kv in records {
+            let key = kv.key().to_vec();
+            match &mut current {
+                Some((k, rows)) if *k == key => {
+                    rows.extend(kv.value().chunks_exact(4).map(|b| {
+                        f32::from_le_bytes(b.try_into().unwrap())
+                    }));
+                }
+                _ => {
+                    if let Some((k, rows)) = current.take() {
+                        self.flush(&k, &rows, out)?;
+                    }
+                    let rows: Vec<f32> = kv
+                        .value()
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                        .collect();
+                    current = Some((key, rows));
+                }
+            }
+        }
+        if let Some((k, rows)) = current.take() {
+            self.flush(&k, &rows, out)?;
+        }
+        Ok(())
+    }
+}
+
+/// Run the analytics job over `{in_prefix}table-*`, writing report lines
+/// to `{out_prefix}part-r-*`.
+pub fn run_analytics(
+    engine: &Engine,
+    store: Arc<dyn ObjectStore>,
+    runtime: Arc<Runtime>,
+    in_prefix: &str,
+    out_prefix: &str,
+    num_reducers: u32,
+) -> Result<JobStats> {
+    engine.run(
+        store,
+        &JobSpec {
+            name: "log-analytics",
+            input_prefix: in_prefix,
+            output_prefix: out_prefix,
+            num_reducers,
+            // rows must stay whole: one split per table object
+            split_size: u64::MAX,
+        },
+        Arc::new(RowMapper),
+        Arc::new(AggReducer { runtime }),
+    )
+}
+
+/// Parse one report line back into [`TableStats`] (used by tests and the
+/// CLI to post-process job output).
+pub fn parse_report_line(line: &str) -> Option<TableStats> {
+    let rest = line.strip_prefix("table ")?;
+    let (id, rest) = rest.split_once(':')?;
+    let rows: u64 = rest.trim().strip_prefix("rows=")?.split(' ').next()?.parse().ok()?;
+    let mut stats = TableStats {
+        table_id: id.trim().parse().ok()?,
+        rows,
+        mean: [0.0; COLS],
+        min: [0.0; COLS],
+        max: [0.0; COLS],
+    };
+    for c in 0..COLS {
+        let tag = format!("c{c}(mean=");
+        let seg = line.split(&tag).nth(1)?;
+        let (mean, seg) = seg.split_once(",min=")?;
+        let (min, seg) = seg.split_once(",max=")?;
+        let (max, _) = seg.split_once(')')?;
+        stats.mean[c] = mean.parse().ok()?;
+        stats.min[c] = min.parse().ok()?;
+        stats.max[c] = max.parse().ok()?;
+    }
+    Some(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_tables_is_deterministic_and_sized() {
+        let store = crate::storage::memstore::MemStore::new(u64::MAX, "lru").unwrap();
+        struct S(crate::storage::memstore::MemStore);
+        impl ObjectStore for S {
+            fn write(&self, k: &str, d: &[u8]) -> Result<()> {
+                self.0.put(k, d.to_vec().into())?;
+                Ok(())
+            }
+            fn read(&self, k: &str) -> Result<Vec<u8>> {
+                self.0
+                    .get(k)
+                    .map(|b| b.to_vec())
+                    .ok_or_else(|| Error::NotFound(k.into()))
+            }
+            fn read_range(&self, k: &str, o: u64, l: usize) -> Result<Vec<u8>> {
+                let v = self.read(k)?;
+                let s = (o as usize).min(v.len());
+                Ok(v[s..(s + l).min(v.len())].to_vec())
+            }
+            fn size(&self, k: &str) -> Result<u64> {
+                Ok(self.read(k)?.len() as u64)
+            }
+            fn exists(&self, k: &str) -> bool {
+                self.0.contains(k)
+            }
+            fn delete(&self, k: &str) -> Result<()> {
+                self.0.remove(k);
+                Ok(())
+            }
+            fn list(&self, p: &str) -> Vec<String> {
+                self.0.list(p)
+            }
+            fn kind(&self) -> &'static str {
+                "mem"
+            }
+        }
+        let s = S(store);
+        let m1 = generate_tables(&s, "a/", 3, 100, 7).unwrap();
+        let m2 = generate_tables(&s, "b/", 3, 100, 7).unwrap();
+        assert_eq!(m1, m2);
+        assert_eq!(s.size("a/table-0").unwrap(), 100 * COLS as u64 * 4);
+        // column offsets shift the means by ~10·c
+        assert!(m1[0][7] > m1[0][0] + 60.0);
+    }
+
+    #[test]
+    fn report_line_roundtrip() {
+        let line = "table 3: rows=6000 c0(mean=0.151,min=-49.99,max=49.98) c1(mean=10.1,min=-39.9,max=59.9) c2(mean=20.2,min=-30.0,max=69.9) c3(mean=29.2,min=-20.0,max=79.9) c4(mean=39.6,min=-10.0,max=89.9) c5(mean=49.9,min=0.0,max=99.9) c6(mean=59.7,min=0.0,max=109.9) c7(mean=70.0,min=0.0,max=119.9)";
+        let st = parse_report_line(line).unwrap();
+        assert_eq!(st.table_id, 3);
+        assert_eq!(st.rows, 6000);
+        assert!((st.mean[0] - 0.151).abs() < 1e-9);
+        assert!((st.max[7] - 119.9).abs() < 1e-9);
+        assert!(parse_report_line("garbage").is_none());
+    }
+}

@@ -1,0 +1,188 @@
+//! Miniature benchmark harness (criterion is not in the offline crate set).
+//!
+//! Benches are `harness = false` binaries that call [`Bencher::iter`] /
+//! [`run_named`]; the harness does warmup, adaptively sizes batches to hit
+//! a target measurement time, and reports mean / p50 / p95 plus derived
+//! throughput when a byte count is attached.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    /// bytes processed per iteration (for MB/s reporting), if meaningful
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl Measurement {
+    /// Mean throughput in MB/s if `bytes_per_iter` was set.
+    pub fn throughput_mbs(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / 1e6 / self.mean.as_secs_f64())
+    }
+
+    /// One-line report, criterion-ish.
+    pub fn report(&self) -> String {
+        let thr = match self.throughput_mbs() {
+            Some(t) => format!("  {t:10.1} MB/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}{}  ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            thr,
+            self.iters
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark driver with a measurement-time budget.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // TLSTORE_BENCH_FAST=1 trims times for CI-style smoke runs.
+        let fast = std::env::var("TLSTORE_BENCH_FAST").is_ok();
+        Self {
+            warmup: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            measure: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bencher {
+    /// Measure `f`, which performs one logical iteration per call.
+    pub fn iter(&self, name: &str, bytes_per_iter: Option<u64>, mut f: impl FnMut()) -> Measurement {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // sample
+        let mut samples: Vec<Duration> = Vec::with_capacity(self.max_samples);
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.measure || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort_unstable();
+        let iters = samples.len() as u64;
+        let total: Duration = samples.iter().sum();
+        let mean = total / iters as u32;
+        let p50 = samples[samples.len() / 2];
+        let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+        Measurement {
+            name: name.to_string(),
+            iters,
+            mean,
+            p50,
+            p95,
+            bytes_per_iter,
+        }
+    }
+}
+
+/// Run a closure once as a named measurement (for end-to-end phases where
+/// repetition is too expensive); returns elapsed time and prints a row.
+pub fn run_named<T>(name: &str, bytes: Option<u64>, f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    let dt = t.elapsed();
+    let thr = bytes
+        .map(|b| format!("  {:10.1} MB/s", b as f64 / 1e6 / dt.as_secs_f64()))
+        .unwrap_or_default();
+    println!("{name:<44} {:>12}{thr}", fmt_dur(dt));
+    (out, dt)
+}
+
+/// Print the standard bench table header.
+pub fn header() {
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "p50", "p95"
+    );
+    println!("{}", "-".repeat(100));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_samples: 3,
+            max_samples: 50,
+        };
+        let m = b.iter("noop-ish", Some(1_000_000), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.throughput_mbs().unwrap() > 0.0);
+        assert!(m.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            min_samples: 5,
+            max_samples: 20,
+        };
+        let m = b.iter("ordered", None, || {
+            std::thread::sleep(Duration::from_micros(50));
+        });
+        assert!(m.p50 <= m.p95);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(10)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(10)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(10)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(10)).contains('s'));
+    }
+}

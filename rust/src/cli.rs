@@ -1,0 +1,158 @@
+//! Minimal CLI argument parser (the offline crate set has no clap).
+//!
+//! Grammar: `tlstore <command> [--flag value]... [--switch]... [positional]...`
+//! Flags may be `--key value` or `--key=value`; `--switch` with no value
+//! is boolean. Unknown flags are rejected by [`Args::finish`] so typos
+//! fail loudly.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                if flag.is_empty() {
+                    return Err(Error::InvalidArg("bare `--`".into()));
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(flag.to_string(), v);
+                } else {
+                    out.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::InvalidArg(format!("bad value for --{key}: {v}"))),
+        }
+    }
+
+    /// Byte-size flag (accepts `4M`, `512k`, plain integers).
+    pub fn get_bytes(&self, key: &str, default: u64) -> Result<u64> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => crate::util::bytes::parse_bytes(v)
+                .ok_or_else(|| Error::InvalidArg(format!("bad byte size for --{key}: {v}"))),
+        }
+    }
+
+    /// Boolean switch.
+    pub fn has(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags.contains_key(key)
+    }
+
+    /// Error on any flag that no handler consumed (typo guard). Call after
+    /// all `get*`/`has` lookups.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !consumed.contains(k) {
+                return Err(Error::InvalidArg(format!("unknown flag --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_flags_positionals() {
+        let a = parse(&["terasort", "--reducers", "8", "--backend=tls", "extra"]);
+        assert_eq!(a.command.as_deref(), Some("terasort"));
+        assert_eq!(a.get_parse("reducers", 1u32).unwrap(), 8);
+        assert_eq!(a.get("backend", "hdfs"), "tls");
+        assert_eq!(a.positional, vec!["extra"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["cmd"]);
+        assert_eq!(a.get("missing", "dflt"), "dflt");
+        assert_eq!(a.get_parse("n", 42u32).unwrap(), 42);
+        assert!(!a.has("quick"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn boolean_switches() {
+        let a = parse(&["cmd", "--quick", "--out", "x"]);
+        assert!(a.has("quick"));
+        assert_eq!(a.get("out", ""), "x");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn byte_sizes() {
+        let a = parse(&["cmd", "--block", "4M"]);
+        assert_eq!(a.get_bytes("block", 0).unwrap(), 4 << 20);
+        assert_eq!(a.get_bytes("other", 7).unwrap(), 7);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected_by_finish() {
+        let a = parse(&["cmd", "--tpyo", "x"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = parse(&["cmd", "--n", "abc"]);
+        assert!(a.get_parse("n", 1u32).is_err());
+    }
+
+    #[test]
+    fn switch_before_flag_not_swallowed() {
+        let a = parse(&["cmd", "--verbose", "--n", "3"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_parse("n", 0u32).unwrap(), 3);
+    }
+}

@@ -1,0 +1,249 @@
+//! Typed configuration for engines, jobs, and simulations.
+//!
+//! Configs load from TOML files (see [`toml`] for the supported subset),
+//! from defaults, or programmatically via builders. [`presets`] ships the
+//! paper's testbed constants (Table 1, Table 3, the Figure 1 measurements)
+//! so experiments reference them by name.
+
+pub mod presets;
+#[allow(clippy::module_inception)]
+pub mod toml;
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::bytes::parse_bytes;
+use toml::Value;
+
+/// Which storage backend a job runs against (the paper's three contenders).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// HDFS-like: replicated blocks on compute-node local disks.
+    Hdfs,
+    /// OrangeFS-like parallel FS only (bypass the memory tier).
+    Pfs,
+    /// The paper's contribution: memory tier over the parallel FS.
+    TwoLevel,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hdfs" => Ok(Backend::Hdfs),
+            "pfs" | "ofs" | "orangefs" => Ok(Backend::Pfs),
+            "tls" | "two-level" | "twolevel" => Ok(Backend::TwoLevel),
+            other => Err(Error::InvalidArg(format!("unknown backend `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Hdfs => "hdfs",
+            Backend::Pfs => "pfs",
+            Backend::TwoLevel => "tls",
+        }
+    }
+}
+
+/// Top-level engine configuration (storage + job + runtime paths).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Root directory for all on-disk state.
+    pub root: PathBuf,
+    /// Memory-tier capacity in bytes (the paper's Tachyon allocation).
+    pub mem_capacity: u64,
+    /// Logical block size of the memory tier (paper: 512 MB at scale;
+    /// scaled down for laptop runs).
+    pub block_size: u64,
+    /// Number of PFS server directories (the paper's data nodes × RAID).
+    pub pfs_servers: usize,
+    /// Stripe size of the PFS tier (paper: 64 MB).
+    pub stripe_size: u64,
+    /// I/O buffer between application and memory tier (paper: 1 MB).
+    pub app_buffer: u64,
+    /// I/O buffer between memory tier and PFS (paper: 4 MB).
+    pub pfs_buffer: u64,
+    /// HDFS-baseline replication factor (paper/Hadoop default: 3).
+    pub replication: usize,
+    /// Eviction policy for the memory tier: "lru" or "lfu".
+    pub eviction: String,
+    /// Worker threads for parallel I/O and MapReduce containers.
+    pub workers: usize,
+    /// Directory holding AOT artifacts (HLO text + manifest).
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            root: PathBuf::from("/tmp/tlstore"),
+            mem_capacity: 256 << 20,
+            block_size: 4 << 20,
+            pfs_servers: 4,
+            stripe_size: 1 << 20,
+            app_buffer: 1 << 20,  // paper §3.2: 1 MB
+            pfs_buffer: 4 << 20,  // paper §3.2: 4 MB
+            replication: 3,
+            eviction: "lru".into(),
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2),
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Load from a TOML file; missing keys fall back to defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML text. Recognized keys live under `[engine]`.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = toml::parse(text)?;
+        let mut cfg = Self::default();
+        let Some(engine) = doc.get("engine") else {
+            return Ok(cfg);
+        };
+        let get_str = |k: &str| engine.get(k).and_then(Value::as_str).map(str::to_string);
+        let get_bytes = |k: &str| -> Result<Option<u64>> {
+            match engine.get(k) {
+                None => Ok(None),
+                Some(Value::Integer(i)) if *i >= 0 => Ok(Some(*i as u64)),
+                Some(Value::String(s)) => parse_bytes(s)
+                    .map(Some)
+                    .ok_or_else(|| Error::Config(format!("bad byte size for `{k}`: {s}"))),
+                Some(other) => Err(Error::Config(format!("bad value for `{k}`: {other:?}"))),
+            }
+        };
+        if let Some(v) = get_str("root") {
+            cfg.root = PathBuf::from(v);
+        }
+        if let Some(v) = get_bytes("mem_capacity")? {
+            cfg.mem_capacity = v;
+        }
+        if let Some(v) = get_bytes("block_size")? {
+            cfg.block_size = v;
+        }
+        if let Some(v) = engine.get("pfs_servers").and_then(Value::as_int) {
+            cfg.pfs_servers = v as usize;
+        }
+        if let Some(v) = get_bytes("stripe_size")? {
+            cfg.stripe_size = v;
+        }
+        if let Some(v) = get_bytes("app_buffer")? {
+            cfg.app_buffer = v;
+        }
+        if let Some(v) = get_bytes("pfs_buffer")? {
+            cfg.pfs_buffer = v;
+        }
+        if let Some(v) = engine.get("replication").and_then(Value::as_int) {
+            cfg.replication = v as usize;
+        }
+        if let Some(v) = get_str("eviction") {
+            cfg.eviction = v;
+        }
+        if let Some(v) = engine.get("workers").and_then(Value::as_int) {
+            cfg.workers = v as usize;
+        }
+        if let Some(v) = get_str("artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(v);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check invariants the engines rely on.
+    pub fn validate(&self) -> Result<()> {
+        if self.block_size == 0 {
+            return Err(Error::Config("block_size must be > 0".into()));
+        }
+        if self.stripe_size == 0 {
+            return Err(Error::Config("stripe_size must be > 0".into()));
+        }
+        if self.pfs_servers == 0 {
+            return Err(Error::Config("pfs_servers must be > 0".into()));
+        }
+        if self.replication == 0 {
+            return Err(Error::Config("replication must be > 0".into()));
+        }
+        if self.app_buffer == 0 || self.pfs_buffer == 0 {
+            return Err(Error::Config("buffers must be > 0".into()));
+        }
+        if self.eviction != "lru" && self.eviction != "lfu" {
+            return Err(Error::Config(format!(
+                "eviction must be lru|lfu, got `{}`",
+                self.eviction
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        EngineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_toml_overrides_and_defaults() {
+        let cfg = EngineConfig::from_toml_str(
+            r#"
+[engine]
+root = "/tmp/x"
+mem_capacity = "64M"
+block_size = "1M"
+pfs_servers = 8
+eviction = "lfu"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.root, PathBuf::from("/tmp/x"));
+        assert_eq!(cfg.mem_capacity, 64 << 20);
+        assert_eq!(cfg.block_size, 1 << 20);
+        assert_eq!(cfg.pfs_servers, 8);
+        assert_eq!(cfg.eviction, "lfu");
+        // untouched keys keep defaults
+        assert_eq!(cfg.app_buffer, 1 << 20);
+        assert_eq!(cfg.pfs_buffer, 4 << 20);
+    }
+
+    #[test]
+    fn empty_doc_gives_defaults() {
+        let cfg = EngineConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.replication, 3);
+    }
+
+    #[test]
+    fn integer_byte_sizes_accepted() {
+        let cfg =
+            EngineConfig::from_toml_str("[engine]\nblock_size = 1048576\n").unwrap();
+        assert_eq!(cfg.block_size, 1 << 20);
+    }
+
+    #[test]
+    fn rejects_bad_eviction() {
+        assert!(EngineConfig::from_toml_str("[engine]\neviction = \"random\"\n").is_err());
+    }
+
+    #[test]
+    fn rejects_zero_sizes() {
+        assert!(EngineConfig::from_toml_str("[engine]\nblock_size = 0\n").is_err());
+        assert!(EngineConfig::from_toml_str("[engine]\npfs_servers = 0\n").is_err());
+    }
+
+    #[test]
+    fn backend_parsing() {
+        assert_eq!(Backend::parse("hdfs").unwrap(), Backend::Hdfs);
+        assert_eq!(Backend::parse("OrangeFS").unwrap(), Backend::Pfs);
+        assert_eq!(Backend::parse("two-level").unwrap(), Backend::TwoLevel);
+        assert!(Backend::parse("s3").is_err());
+        assert_eq!(Backend::TwoLevel.name(), "tls");
+    }
+}

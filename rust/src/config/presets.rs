@@ -1,0 +1,143 @@
+//! The paper's published testbed constants, as named presets.
+//!
+//! Table 1 (compute-node storage statistics of five national HPC
+//! clusters), Table 3 (Palmetto node hardware), and the Figure 1 / §4.5 /
+//! §5.1 measured throughputs. These drive the analytic models
+//! ([`crate::model`]) and the simulator ([`crate::sim`]); the benches print
+//! them next to measured values so paper-vs-ours comparisons are explicit.
+
+/// One row of Table 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HpcSystem {
+    pub name: &'static str,
+    pub local_disk_gb: f64,
+    pub ram_gb: f64,
+    pub pfs_gb: f64,
+    pub cpu_cores: u32,
+}
+
+/// Table 1: Compute Node Storage Space Statistics on National HPC Clusters.
+pub const TABLE1: [HpcSystem; 5] = [
+    HpcSystem { name: "Stampede", local_disk_gb: 80.0,  ram_gb: 32.0,  pfs_gb: 14e6,  cpu_cores: 16 },
+    HpcSystem { name: "Maverick", local_disk_gb: 240.0, ram_gb: 256.0, pfs_gb: 20e6,  cpu_cores: 20 },
+    HpcSystem { name: "Gordon",   local_disk_gb: 280.0, ram_gb: 64.0,  pfs_gb: 1.6e6, cpu_cores: 16 },
+    HpcSystem { name: "Trestles", local_disk_gb: 50.0,  ram_gb: 64.0,  pfs_gb: 1.4e6, cpu_cores: 32 },
+    HpcSystem { name: "Palmetto", local_disk_gb: 900.0, ram_gb: 128.0, pfs_gb: 0.2e6, cpu_cores: 20 },
+];
+
+/// Average row of Table 1 (the paper's "Avg." line).
+pub fn table1_average() -> HpcSystem {
+    let n = TABLE1.len() as f64;
+    HpcSystem {
+        name: "Avg.",
+        local_disk_gb: TABLE1.iter().map(|s| s.local_disk_gb).sum::<f64>() / n,
+        ram_gb: TABLE1.iter().map(|s| s.ram_gb).sum::<f64>() / n,
+        pfs_gb: TABLE1.iter().map(|s| s.pfs_gb).sum::<f64>() / n,
+        cpu_cores: (TABLE1.iter().map(|s| s.cpu_cores).sum::<u32>() as f64 / n).round() as u32,
+    }
+}
+
+/// §4.5 case-study constants (all MB/s), taken from the Figure 1 averages.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PaperConstants {
+    /// ρ — NIC bandwidth per node.
+    pub nic_mbs: f64,
+    /// μ read — local single-disk read throughput on compute nodes.
+    pub disk_read_mbs: f64,
+    /// μ write — local single-disk write throughput on compute nodes.
+    pub disk_write_mbs: f64,
+    /// ν — local RAM throughput.
+    pub ram_mbs: f64,
+}
+
+/// The §4.5 numbers: "network bandwidth is set to 1,170 MB/s per node; local
+/// disk read 237 MB/s; local disk write 116 MB/s; memory 6,267 MB/s."
+pub const PAPER_CONSTANTS: PaperConstants = PaperConstants {
+    nic_mbs: 1170.0,
+    disk_read_mbs: 237.0,
+    disk_write_mbs: 116.0,
+    ram_mbs: 6267.0,
+};
+
+/// §5.1 measured concurrent throughputs on the Palmetto experiment nodes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PalmettoExperiment {
+    /// Concurrent read/write on each compute node's single SATA disk.
+    pub compute_disk_mbs: f64,
+    /// Concurrent write throughput of each data node's RAID array.
+    pub data_raid_write_mbs: f64,
+    /// Concurrent read throughput of each data node's RAID array.
+    pub data_raid_read_mbs: f64,
+    /// Compute nodes in the TeraSort experiment.
+    pub compute_nodes: usize,
+    /// Data nodes backing the PFS.
+    pub data_nodes: usize,
+    /// Containers (CPU slots used) per compute node.
+    pub containers_per_node: usize,
+    /// Tachyon capacity per compute node, bytes.
+    pub tachyon_capacity: u64,
+    /// Tachyon block size, bytes (512 MB).
+    pub tachyon_block: u64,
+    /// OrangeFS stripe size, bytes (64 MB).
+    pub ofs_stripe: u64,
+    /// TeraSort input size, bytes (256 GB).
+    pub terasort_input: u64,
+}
+
+/// Table 3 + §5.1: the Palmetto TeraSort testbed.
+pub const PALMETTO: PalmettoExperiment = PalmettoExperiment {
+    compute_disk_mbs: 60.0,
+    data_raid_write_mbs: 200.0,
+    data_raid_read_mbs: 400.0,
+    compute_nodes: 16,
+    data_nodes: 2,
+    containers_per_node: 16,
+    tachyon_capacity: 32 << 30,
+    tachyon_block: 512 << 20,
+    ofs_stripe: 64 << 20,
+    terasort_input: 256 << 30,
+};
+
+/// Figure 1 ratios quoted in §2.2 (used as cross-checks in tests/benches):
+/// RAM read ≈ 10× global read; global read ≈ 2.65× local read;
+/// RAM write ≈ 6.57× global write; global write ≈ 4× local write.
+pub mod fig1_ratios {
+    pub const RAM_OVER_GLOBAL_READ: f64 = 10.0;
+    pub const GLOBAL_OVER_LOCAL_READ: f64 = 2.65;
+    pub const RAM_OVER_GLOBAL_WRITE: f64 = 6.57;
+    pub const GLOBAL_OVER_LOCAL_WRITE: f64 = 4.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_average_matches_paper_row() {
+        // the paper's Avg. line: disk 310 GB, RAM 109 GB, PFS 7.4e6 GB, 21 cores
+        let avg = table1_average();
+        assert!((avg.local_disk_gb - 310.0).abs() < 1.0, "{}", avg.local_disk_gb);
+        assert!((avg.ram_gb - 108.8).abs() < 1.0, "{}", avg.ram_gb);
+        assert!((avg.pfs_gb - 7.44e6).abs() < 0.1e6, "{}", avg.pfs_gb);
+        assert_eq!(avg.cpu_cores, 21);
+    }
+
+    #[test]
+    fn paper_constants_are_fig1_consistent() {
+        // ν / global-read ratio ≈ 10 with global read = 237*2.65 ≈ 628 MB/s
+        let global_read = PAPER_CONSTANTS.disk_read_mbs * fig1_ratios::GLOBAL_OVER_LOCAL_READ;
+        let ram_ratio = PAPER_CONSTANTS.ram_mbs / global_read;
+        assert!((ram_ratio - fig1_ratios::RAM_OVER_GLOBAL_READ).abs() < 0.5, "{ram_ratio}");
+    }
+
+    #[test]
+    fn palmetto_capacity_arithmetic() {
+        // §5.1: 16 nodes × 32 GB Tachyon = 512 GB total
+        let total = PALMETTO.tachyon_capacity * PALMETTO.compute_nodes as u64;
+        assert_eq!(total, 512 << 30);
+        // block striped into 8 chunks of 64 MB
+        assert_eq!(PALMETTO.tachyon_block / PALMETTO.ofs_stripe, 8);
+        // 256 mappers/reducers
+        assert_eq!(PALMETTO.compute_nodes * PALMETTO.containers_per_node, 256);
+    }
+}

@@ -1,0 +1,364 @@
+//! Minimal TOML-subset parser.
+//!
+//! The offline crate set has no `toml`/`serde` facade, so tlstore parses
+//! its own configs and the AOT `manifest.toml` with this module. Supported
+//! subset (all this repo emits or consumes):
+//!
+//! - `[table]` headers (dotted names create nested tables)
+//! - `key = value` with string / integer / float / boolean / array values
+//! - `#` comments, blank lines
+//! - bare and quoted keys
+//!
+//! Unsupported TOML (multi-line strings, inline tables, datetimes, array
+//! of tables) is rejected with a line-numbered error rather than silently
+//! misparsed.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Boolean(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Boolean(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Walk a dotted path through nested tables.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for seg in path.split('.') {
+            cur = cur.as_table()?.get(seg)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse a TOML document into its root table.
+pub fn parse(input: &str) -> Result<Value> {
+    let mut root = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| Error::TomlParse {
+            line: lineno + 1,
+            msg: msg.to_string(),
+        };
+
+        if let Some(header) = line.strip_prefix('[') {
+            if header.starts_with('[') {
+                return Err(err("array-of-tables is not supported"));
+            }
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated table header"))?;
+            current_path = header
+                .split('.')
+                .map(|s| unquote_key(s.trim()))
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| err("bad table name"))?;
+            // materialize the table
+            table_at(&mut root, &current_path, lineno + 1)?;
+            continue;
+        }
+
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err("expected `key = value`"))?;
+        let key = unquote_key(line[..eq].trim()).ok_or_else(|| err("bad key"))?;
+        let (value, rest) = parse_value(line[eq + 1..].trim(), lineno + 1)?;
+        if !rest.trim().is_empty() {
+            return Err(err("trailing characters after value"));
+        }
+        let table = table_at(&mut root, &current_path, lineno + 1)?;
+        if table.insert(key.clone(), value).is_some() {
+            return Err(err(&format!("duplicate key `{key}`")));
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` outside a quoted string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote_key(s: &str) -> Option<String> {
+    if s.is_empty() {
+        return None;
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+        return Some(inner.to_string());
+    }
+    if s
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        Some(s.to_string())
+    } else {
+        None
+    }
+}
+
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut BTreeMap<String, Value>> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            _ => {
+                return Err(Error::TomlParse {
+                    line,
+                    msg: format!("`{seg}` is not a table"),
+                })
+            }
+        };
+    }
+    Ok(cur)
+}
+
+/// Parse one value from the front of `s`; return the value and the unparsed
+/// remainder.
+fn parse_value(s: &str, line: usize) -> Result<(Value, &str)> {
+    let err = |msg: &str| Error::TomlParse {
+        line,
+        msg: msg.to_string(),
+    };
+    let s = s.trim_start();
+    if s.is_empty() {
+        return Err(err("missing value"));
+    }
+
+    if let Some(rest) = s.strip_prefix('"') {
+        let mut out = String::new();
+        let mut chars = rest.char_indices();
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => out.push('\n'),
+                    Some((_, 't')) => out.push('\t'),
+                    Some((_, '"')) => out.push('"'),
+                    Some((_, '\\')) => out.push('\\'),
+                    _ => return Err(err("bad escape")),
+                },
+                '"' => return Ok((Value::String(out), &rest[i + 1..])),
+                _ => out.push(c),
+            }
+        }
+        return Err(err("unterminated string"));
+    }
+
+    if let Some(rest) = s.strip_prefix('[') {
+        let mut items = Vec::new();
+        let mut rem = rest.trim_start();
+        loop {
+            if let Some(r) = rem.strip_prefix(']') {
+                return Ok((Value::Array(items), r));
+            }
+            let (v, r) = parse_value(rem, line)?;
+            items.push(v);
+            rem = r.trim_start();
+            if let Some(r) = rem.strip_prefix(',') {
+                rem = r.trim_start();
+            } else if !rem.starts_with(']') {
+                return Err(err("expected `,` or `]` in array"));
+            }
+        }
+    }
+
+    if s.starts_with("true") {
+        return Ok((Value::Boolean(true), &s[4..]));
+    }
+    if s.starts_with("false") {
+        return Ok((Value::Boolean(false), &s[5..]));
+    }
+
+    // number: consume [0-9+-._eE] prefix
+    let end = s
+        .find(|c: char| !(c.is_ascii_digit() || "+-._eE".contains(c)))
+        .unwrap_or(s.len());
+    let tok = &s[..end];
+    let rest = &s[end..];
+    if tok.is_empty() {
+        return Err(err("unrecognized value"));
+    }
+    let clean = tok.replace('_', "");
+    if !tok.contains('.') && !tok.contains('e') && !tok.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok((Value::Integer(i), rest));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(|f| (Value::Float(f), rest))
+        .map_err(|_| err(&format!("bad number `{tok}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let v = parse("a = 1\nb = \"two\"\nc = 3.5\nd = true\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("two"));
+        assert_eq!(v.get("c").unwrap().as_float(), Some(3.5));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_tables_and_dotted_headers() {
+        let v = parse("[x]\na=1\n[x.y]\nb=2\n[z]\nc=3\n").unwrap();
+        assert_eq!(v.get("x.a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("x.y.b").unwrap().as_int(), Some(2));
+        assert_eq!(v.get("z.c").unwrap().as_int(), Some(3));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse(r#"a = [1, 2, 3]
+b = ["x", "y"]
+c = []
+"#)
+        .unwrap();
+        assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(
+            v.get("b").unwrap().as_array().unwrap()[1].as_str(),
+            Some("y")
+        );
+        assert!(v.get("c").unwrap().as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn parses_manifest_shape() {
+        let v = parse(
+            r#"# generated
+[sort_block]
+file = "sort_block.hlo.txt"
+inputs = ["u32[16x256]"]
+outputs = ["u32[16x256]", "s32[16x256]", "s32[256]"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            v.get("sort_block.file").unwrap().as_str(),
+            Some("sort_block.hlo.txt")
+        );
+        assert_eq!(
+            v.get("sort_block.outputs").unwrap().as_array().unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let v = parse("# top\n\na = 1 # trailing\nb = \"has # inside\"\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("has # inside"));
+    }
+
+    #[test]
+    fn quoted_keys_and_escapes() {
+        let v = parse("\"weird key\" = \"a\\nb\"\n").unwrap();
+        assert_eq!(
+            v.as_table().unwrap().get("weird key").unwrap().as_str(),
+            Some("a\nb")
+        );
+    }
+
+    #[test]
+    fn negative_and_underscored_numbers() {
+        let v = parse("a = -5\nb = 1_000_000\nc = 2.5e3\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(-5));
+        assert_eq!(v.get("b").unwrap().as_int(), Some(1_000_000));
+        assert_eq!(v.get("c").unwrap().as_float(), Some(2500.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nb =\n").unwrap_err();
+        match e {
+            Error::TomlParse { line, .. } => assert_eq!(line, 2),
+            other => panic!("wrong error {other}"),
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unsupported_syntax() {
+        assert!(parse("[[arr]]\n").is_err());
+        assert!(parse("a = {x = 1}\n").is_err());
+        assert!(parse("[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn rejects_scalar_redefined_as_table() {
+        assert!(parse("x = 1\n[x]\ny = 2\n").is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! Background checkpoint daemon with bounded backlog (backpressure).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::storage::tls::TwoLevelStore;
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct CheckpointerConfig {
+    /// Maximum queued (not yet persisted) objects before `enqueue` blocks.
+    pub max_pending: usize,
+    /// Poll interval when idle.
+    pub idle_sleep: Duration,
+}
+
+impl Default for CheckpointerConfig {
+    fn default() -> Self {
+        Self {
+            max_pending: 64,
+            idle_sleep: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CheckpointerStats {
+    pub enqueued: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Times `enqueue` had to block on the backlog bound.
+    pub backpressure_events: u64,
+}
+
+#[derive(Default)]
+struct State {
+    queue: VecDeque<String>,
+    in_flight: usize,
+    stats: CheckpointerStats,
+    stopping: bool,
+    /// last error message, surfaced by flush()/stop()
+    error: Option<String>,
+}
+
+/// Background thread draining checkpoint requests into the PFS tier.
+pub struct Checkpointer {
+    state: Arc<(Mutex<State>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+    cfg: CheckpointerConfig,
+}
+
+impl Checkpointer {
+    pub fn start(store: Arc<TwoLevelStore>, cfg: CheckpointerConfig) -> Self {
+        let state = Arc::new((Mutex::new(State::default()), Condvar::new()));
+        let thread_state = Arc::clone(&state);
+        let idle = cfg.idle_sleep;
+        let handle = std::thread::Builder::new()
+            .name("tlstore-checkpointer".into())
+            .spawn(move || {
+                let (lock, cv) = &*thread_state;
+                loop {
+                    let key = {
+                        let mut g = lock.lock().unwrap();
+                        loop {
+                            if let Some(k) = g.queue.pop_front() {
+                                g.in_flight += 1;
+                                break Some(k);
+                            }
+                            if g.stopping {
+                                break None;
+                            }
+                            let (ng, _timeout) = cv.wait_timeout(g, idle).unwrap();
+                            g = ng;
+                        }
+                    };
+                    let Some(key) = key else { return };
+                    let result = store.checkpoint(&key);
+                    let mut g = lock.lock().unwrap();
+                    g.in_flight -= 1;
+                    match result {
+                        Ok(()) => g.stats.completed += 1,
+                        Err(e) => {
+                            g.stats.failed += 1;
+                            g.error = Some(format!("checkpoint {key}: {e}"));
+                            log::warn!("checkpoint {key} failed: {e}");
+                        }
+                    }
+                    cv.notify_all();
+                }
+            })
+            .expect("spawn checkpointer");
+        Self {
+            state,
+            handle: Some(handle),
+            cfg,
+        }
+    }
+
+    /// Queue `key` for persistence. Blocks while the backlog is at
+    /// `max_pending` (backpressure: memory-speed writers cannot outrun the
+    /// PFS forever).
+    pub fn enqueue(&self, key: &str) {
+        let (lock, cv) = &*self.state;
+        let mut g = lock.lock().unwrap();
+        if g.queue.len() + g.in_flight >= self.cfg.max_pending {
+            g.stats.backpressure_events += 1;
+            while g.queue.len() + g.in_flight >= self.cfg.max_pending && !g.stopping {
+                g = cv.wait(g).unwrap();
+            }
+        }
+        g.stats.enqueued += 1;
+        g.queue.push_back(key.to_string());
+        cv.notify_all();
+    }
+
+    /// Block until the queue and in-flight work are empty; surfaces the
+    /// first checkpoint error if any occurred.
+    pub fn flush(&self) -> Result<()> {
+        let (lock, cv) = &*self.state;
+        let mut g = lock.lock().unwrap();
+        while !g.queue.is_empty() || g.in_flight > 0 {
+            g = cv.wait(g).unwrap();
+        }
+        match g.error.take() {
+            Some(msg) => Err(Error::Job(msg)),
+            None => Ok(()),
+        }
+    }
+
+    /// Pending + in-flight count (for tests and metrics).
+    pub fn backlog(&self) -> usize {
+        let g = self.state.0.lock().unwrap();
+        g.queue.len() + g.in_flight
+    }
+
+    pub fn stats(&self) -> CheckpointerStats {
+        self.state.0.lock().unwrap().stats
+    }
+
+    /// Flush, then stop the daemon thread.
+    pub fn stop(mut self) -> Result<()> {
+        let result = self.flush();
+        {
+            let (lock, cv) = &*self.state;
+            lock.lock().unwrap().stopping = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        result
+    }
+}
+
+impl Drop for Checkpointer {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.state;
+        lock.lock().unwrap().stopping = true;
+        cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::tls::TlsConfig;
+    use crate::storage::{ReadMode, WriteMode};
+    use crate::testing::TempDir;
+
+    fn store(dir: &TempDir) -> Arc<TwoLevelStore> {
+        let cfg = TlsConfig::builder(dir.path())
+            .mem_capacity(1 << 20)
+            .block_size(4096)
+            .pfs_servers(2)
+            .stripe_size(1024)
+            .build()
+            .unwrap();
+        Arc::new(TwoLevelStore::open(cfg).unwrap())
+    }
+
+    #[test]
+    fn drains_queue_and_persists() {
+        let dir = TempDir::new("ckpt").unwrap();
+        let s = store(&dir);
+        let ck = Checkpointer::start(Arc::clone(&s), CheckpointerConfig::default());
+        s.write("x", &[7u8; 5000], WriteMode::MemOnly).unwrap();
+        ck.enqueue("x");
+        ck.flush().unwrap();
+        assert_eq!(s.read("x", ReadMode::Bypass).unwrap(), vec![7u8; 5000]);
+        assert_eq!(ck.stats().completed, 1);
+        ck.stop().unwrap();
+    }
+
+    #[test]
+    fn backpressure_blocks_until_drained() {
+        let dir = TempDir::new("ckpt-bp").unwrap();
+        let s = store(&dir);
+        let ck = Checkpointer::start(
+            Arc::clone(&s),
+            CheckpointerConfig {
+                max_pending: 2,
+                ..Default::default()
+            },
+        );
+        for i in 0..10 {
+            let key = format!("k{i}");
+            s.write(&key, &[i as u8; 2000], WriteMode::MemOnly).unwrap();
+            ck.enqueue(&key); // must not deadlock
+        }
+        ck.flush().unwrap();
+        let st = ck.stats();
+        assert_eq!(st.completed, 10);
+        assert!(st.backpressure_events > 0, "bound of 2 must trigger");
+        assert_eq!(ck.backlog(), 0);
+        ck.stop().unwrap();
+    }
+
+    #[test]
+    fn checkpoint_error_surfaces_at_flush() {
+        let dir = TempDir::new("ckpt-err").unwrap();
+        let s = store(&dir);
+        let ck = Checkpointer::start(Arc::clone(&s), CheckpointerConfig::default());
+        ck.enqueue("does-not-exist");
+        let err = ck.flush().unwrap_err();
+        assert!(format!("{err}").contains("does-not-exist"));
+        // error is cleared after surfacing once
+        ck.flush().unwrap();
+        assert_eq!(ck.stats().failed, 1);
+        ck.stop().unwrap();
+    }
+
+    #[test]
+    fn drop_without_stop_does_not_hang() {
+        let dir = TempDir::new("ckpt-drop").unwrap();
+        let s = store(&dir);
+        let ck = Checkpointer::start(Arc::clone(&s), CheckpointerConfig::default());
+        s.write("y", &[1u8; 100], WriteMode::MemOnly).unwrap();
+        ck.enqueue("y");
+        drop(ck); // must join cleanly
+    }
+}

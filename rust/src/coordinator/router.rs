@@ -1,0 +1,148 @@
+//! Priority read router (§3.2): every read goes to the nearest tier that
+//! holds the data — memory first, then the PFS — with per-tier accounting
+//! so experiments can report the effective `f` ratio.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::storage::block::{BlockGeometry, BlockId};
+use crate::storage::tls::TwoLevelStore;
+use crate::storage::{ObjectStore, ReadMode};
+
+/// Router counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterStats {
+    /// Reads fully served by the memory tier.
+    pub mem_reads: u64,
+    /// Reads partially or fully served by the PFS tier.
+    pub pfs_reads: u64,
+    pub bytes: u64,
+}
+
+/// Residency-aware read front-end over a [`TwoLevelStore`].
+pub struct Router {
+    store: Arc<TwoLevelStore>,
+    mem_reads: AtomicU64,
+    pfs_reads: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Router {
+    pub fn new(store: Arc<TwoLevelStore>) -> Self {
+        Self {
+            store,
+            mem_reads: AtomicU64::new(0),
+            pfs_reads: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether every block of `key` is currently memory-resident.
+    pub fn fully_resident(&self, key: &str) -> bool {
+        let Ok(size) = self.store.size(key) else {
+            return false;
+        };
+        let geo = BlockGeometry::new(size, self.store.config().block_size).unwrap();
+        (0..geo.num_blocks())
+            .all(|i| self.store.mem().contains(&BlockId::new(key, i).storage_key()))
+    }
+
+    /// Route a read: memory-resident objects use mode (d) (no PFS probe at
+    /// all); everything else uses mode (f) (two-level with caching).
+    pub fn read(&self, key: &str) -> Result<Vec<u8>> {
+        let resident = self.fully_resident(key);
+        let mode = if resident {
+            ReadMode::MemOnly
+        } else {
+            ReadMode::TwoLevel
+        };
+        let data = match self.store.read(key, mode) {
+            Ok(d) => d,
+            // racy eviction between residency probe and read: fall back
+            Err(_) if resident => self.store.read(key, ReadMode::TwoLevel)?,
+            Err(e) => return Err(e),
+        };
+        if resident {
+            self.mem_reads.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.pfs_reads.fetch_add(1, Ordering::Relaxed);
+        }
+        self.bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            mem_reads: self.mem_reads.load(Ordering::Relaxed),
+            pfs_reads: self.pfs_reads.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::tls::TlsConfig;
+    use crate::storage::WriteMode;
+    use crate::testing::TempDir;
+
+    fn mk(dir: &TempDir) -> (Arc<TwoLevelStore>, Router) {
+        let cfg = TlsConfig::builder(dir.path())
+            .mem_capacity(64 << 10)
+            .block_size(4096)
+            .pfs_servers(2)
+            .stripe_size(1024)
+            .build()
+            .unwrap();
+        let store = Arc::new(TwoLevelStore::open(cfg).unwrap());
+        let router = Router::new(Arc::clone(&store));
+        (store, router)
+    }
+
+    #[test]
+    fn resident_object_routes_to_memory() {
+        let dir = TempDir::new("router").unwrap();
+        let (store, router) = mk(&dir);
+        store.write("hot", &[1u8; 8192], WriteMode::WriteThrough).unwrap();
+        assert!(router.fully_resident("hot"));
+        assert_eq!(router.read("hot").unwrap().len(), 8192);
+        let st = router.stats();
+        assert_eq!((st.mem_reads, st.pfs_reads), (1, 0));
+        assert_eq!(st.bytes, 8192);
+    }
+
+    #[test]
+    fn evicted_object_routes_two_level_and_recaches() {
+        let dir = TempDir::new("router2").unwrap();
+        let (store, router) = mk(&dir);
+        store.write("cold", &[2u8; 8192], WriteMode::Bypass).unwrap();
+        assert!(!router.fully_resident("cold"));
+        assert_eq!(router.read("cold").unwrap().len(), 8192);
+        assert_eq!(router.stats().pfs_reads, 1);
+        // mode (f) cached it → second read is a memory read
+        assert!(router.fully_resident("cold"));
+        assert_eq!(router.read("cold").unwrap().len(), 8192);
+        assert_eq!(router.stats().mem_reads, 1);
+    }
+
+    #[test]
+    fn partial_residency_counts_as_pfs() {
+        let dir = TempDir::new("router3").unwrap();
+        let (store, router) = mk(&dir);
+        store.write("mix", &[3u8; 8192], WriteMode::WriteThrough).unwrap();
+        store.mem().remove("mix#1");
+        assert!(!router.fully_resident("mix"));
+        let _ = router.read("mix").unwrap();
+        assert_eq!(router.stats().pfs_reads, 1);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let dir = TempDir::new("router4").unwrap();
+        let (_store, router) = mk(&dir);
+        assert!(router.read("nope").is_err());
+        assert!(!router.fully_resident("nope"));
+    }
+}

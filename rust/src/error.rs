@@ -1,0 +1,70 @@
+//! Library-wide error type.
+
+use std::path::PathBuf;
+
+/// All fallible tlstore operations return [`Result`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error for storage, runtime, config, and job execution failures.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("i/o error on {path:?}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+
+    #[error("object not found: {0}")]
+    NotFound(String),
+
+    #[error("object already exists: {0}")]
+    AlreadyExists(String),
+
+    #[error("memory tier over capacity: need {need} bytes, capacity {capacity}")]
+    OverCapacity { need: u64, capacity: u64 },
+
+    #[error("checksum mismatch on {object}: stored {stored:#010x}, computed {computed:#010x}")]
+    ChecksumMismatch {
+        object: String,
+        stored: u32,
+        computed: u32,
+    },
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("toml parse error at line {line}: {msg}")]
+    TomlParse { line: usize, msg: String },
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("job failed: {0}")]
+    Job(String),
+
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+}
+
+impl Error {
+    /// Wrap an `io::Error` with the path it occurred on.
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        Error::Io {
+            path: path.into(),
+            source,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,59 @@
+//! # tlstore — Two-Level Storage for Big-Data Analytics on HPC
+//!
+//! A full reimplementation of *"Big Data Analytics on Traditional HPC
+//! Infrastructure Using Two-Level Storage"* (Xuan et al., 2015): an
+//! in-memory storage tier (the paper's Tachyon) layered over a striped
+//! parallel-file-system tier (the paper's OrangeFS), plus every substrate
+//! the paper's evaluation depends on — an HDFS-like replicated baseline, a
+//! locality-aware MapReduce engine, the TeraSort benchmark suite, the
+//! analytic I/O-throughput models of §4, and a discrete-event cluster
+//! simulator standing in for the Palmetto HPC testbed.
+//!
+//! The compute hot-spots (TeraSort's block sort + range-partition
+//! histogram, and the log-analytics column aggregation) are JAX/Pallas
+//! kernels AOT-lowered to HLO text at build time (`python/compile/`) and
+//! executed from Rust through the PJRT CPU client ([`runtime`]). Python is
+//! never on the request path.
+//!
+//! ## Layer map
+//!
+//! | Layer | Module | Role |
+//! |---|---|---|
+//! | L3 | [`storage`], [`coordinator`], [`mapreduce`], [`terasort`] | the paper's system |
+//! | L3 | [`model`], [`sim`] | §4 analytic models + cluster simulator |
+//! | L3 | [`runtime`] | PJRT: load + execute AOT artifacts |
+//! | L2/L1 | `python/compile/` | JAX graph + Pallas kernels (build time) |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use tlstore::storage::{tls::{TwoLevelStore, TlsConfig}, WriteMode, ReadMode};
+//!
+//! let cfg = TlsConfig::builder("/tmp/tls-demo")
+//!     .mem_capacity(64 << 20)
+//!     .pfs_servers(4)
+//!     .build()
+//!     .unwrap();
+//! let store = TwoLevelStore::open(cfg).unwrap();
+//! store.write("dataset/part-0", b"hello", WriteMode::WriteThrough).unwrap();
+//! let bytes = store.read("dataset/part-0", ReadMode::TwoLevel).unwrap();
+//! assert_eq!(&bytes[..], b"hello");
+//! ```
+
+pub mod analytics;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod mapreduce;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod terasort;
+pub mod testing;
+pub mod util;
+
+pub use error::{Error, Result};

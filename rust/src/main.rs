@@ -1,0 +1,317 @@
+//! `tlstore` — the command-line launcher.
+//!
+//! ```text
+//! tlstore info
+//! tlstore teragen   --root DIR --backend tls|pfs|hdfs --records N
+//! tlstore terasort  --root DIR --backend tls|pfs|hdfs --reducers R
+//! tlstore validate  --root DIR --backend tls|pfs|hdfs
+//! tlstore model     [--pfs-aggregate MB/s] [--f 0.2]      (Figure 5)
+//! tlstore sim       [--backend ...] [--nodes N] [--data-nodes M] (Figure 7)
+//! tlstore mountain                                        (Figure 6, sim)
+//! ```
+//!
+//! Storage roots persist between invocations: `teragen`, `terasort`, and
+//! `validate` compose into the paper's §5.3 pipeline.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tlstore::cli::Args;
+use tlstore::config::presets;
+use tlstore::config::Backend;
+use tlstore::error::{Error, Result};
+use tlstore::mapreduce::Engine;
+use tlstore::model::CaseStudyParams;
+use tlstore::runtime::Runtime;
+use tlstore::sim::{simulate_terasort, BackendKind, SimConstants};
+use tlstore::storage::hdfs::HdfsLike;
+use tlstore::storage::pfs::Pfs;
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::ObjectStore;
+use tlstore::terasort;
+
+fn open_store(args: &Args) -> Result<Arc<dyn ObjectStore>> {
+    let backend = Backend::parse(&args.get("backend", "tls"))?;
+    let root = PathBuf::from(args.get("root", "/tmp/tlstore"));
+    let servers = args.get_parse("pfs-servers", 4usize)?;
+    Ok(match backend {
+        Backend::TwoLevel => {
+            let cfg = TlsConfig::builder(&root)
+                .mem_capacity(args.get_bytes("mem-capacity", 256 << 20)?)
+                .block_size(args.get_bytes("block-size", 4 << 20)?)
+                .stripe_size(args.get_bytes("stripe-size", 1 << 20)?)
+                .pfs_servers(servers)
+                .eviction(&args.get("eviction", "lru"))
+                .build()?;
+            Arc::new(TwoLevelStore::open(cfg)?)
+        }
+        Backend::Pfs => Arc::new(Pfs::open(
+            &root,
+            servers,
+            args.get_bytes("stripe-size", 1 << 20)?,
+        )?),
+        Backend::Hdfs => Arc::new(HdfsLike::open(
+            &root,
+            args.get_parse("nodes", 4usize)?,
+            args.get_parse("replication", 3usize)?,
+        )?),
+    })
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.finish()?;
+    println!("tlstore — two-level storage for big-data analytics on HPC");
+    println!("paper: Xuan et al., 2015 (DOI 10.1145/2831244.2831253)\n");
+    match Runtime::load_dir(std::path::Path::new("artifacts")) {
+        Ok(rt) => {
+            println!("PJRT platform : {}", rt.platform());
+            for name in rt.names() {
+                let a = rt.artifact(name)?;
+                println!(
+                    "artifact      : {name}  in={:?} out={:?}",
+                    a.spec.inputs.iter().map(|t| t.render()).collect::<Vec<_>>(),
+                    a.spec.outputs.iter().map(|t| t.render()).collect::<Vec<_>>(),
+                );
+            }
+        }
+        Err(e) => println!("artifacts     : not loaded ({e}) — run `make artifacts`"),
+    }
+    println!("\nTable 1 (paper testbeds):");
+    println!("{:<10} {:>10} {:>8} {:>12} {:>6}", "system", "disk GB", "RAM GB", "PFS GB", "cores");
+    for s in presets::TABLE1 {
+        println!(
+            "{:<10} {:>10.0} {:>8.0} {:>12.0} {:>6}",
+            s.name, s.local_disk_gb, s.ram_gb, s.pfs_gb, s.cpu_cores
+        );
+    }
+    Ok(())
+}
+
+fn cmd_teragen(args: &Args) -> Result<()> {
+    let store = open_store(args)?;
+    let records = args.get_parse("records", 100_000u64)?;
+    let per_object = args.get_parse("records-per-object", 25_000u64)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let prefix = args.get("prefix", "in/");
+    args.finish()?;
+    let (_, dt) = tlstore::bench::run_named(
+        &format!("teragen {records} records → {} ({})", prefix, store.kind()),
+        Some(records * terasort::RECORD_SIZE as u64),
+        || terasort::teragen(store.as_ref(), &prefix, records, per_object, seed),
+    );
+    let _ = dt;
+    Ok(())
+}
+
+fn cmd_terasort(args: &Args) -> Result<()> {
+    let store = open_store(args)?;
+    let runtime = Arc::new(Runtime::load_dir(std::path::Path::new(
+        &args.get("artifacts", "artifacts"),
+    ))?);
+    let reducers = args.get_parse("reducers", 4u32)?;
+    let split = args.get_bytes("split-size", 8 << 20)?;
+    let workers = args.get_parse("workers", 0usize)?;
+    let in_prefix = args.get("prefix", "in/");
+    let out_prefix = args.get("out", "out/");
+    args.finish()?;
+    let engine = if workers == 0 {
+        Engine::local()
+    } else {
+        Engine::new(workers, 1, workers)
+    };
+    let stats = terasort::run_terasort(
+        &engine,
+        store,
+        runtime,
+        &in_prefix,
+        &out_prefix,
+        reducers,
+        split,
+        true,
+    )?;
+    println!("{}", stats.report());
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let store = open_store(args)?;
+    let out_prefix = args.get("out", "out/");
+    let in_prefix = args.get("prefix", "in/");
+    args.finish()?;
+    let report = terasort::teravalidate(store.as_ref(), &out_prefix)?;
+    let (in_records, in_sum) = terasort::input_checksum(store.as_ref(), &in_prefix)?;
+    println!(
+        "records={} sorted={} checksum_match={}",
+        report.records,
+        report.sorted,
+        report.records == in_records && report.checksum == in_sum
+    );
+    if !report.sorted || report.records != in_records || report.checksum != in_sum {
+        return Err(Error::Job("teravalidate FAILED".into()));
+    }
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> Result<()> {
+    let b = args.get_parse("pfs-aggregate", 10_000.0f64)?;
+    args.finish()?;
+    let m = CaseStudyParams::new(b);
+    println!("Figure 5 case study @ PFS aggregate {:.0} MB/s", b);
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>14} {:>14}",
+        "N", "hdfs_read", "pfs_read", "tls_read(0.2)", "tls_read(0.5)", "hdfs_write"
+    );
+    for n in [1u32, 8, 16, 32, 43, 53, 64, 83, 128, 211, 259, 262, 414, 512, 1024, 1294] {
+        println!(
+            "{:>6} {:>14.0} {:>14.0} {:>14.0} {:>14.0} {:>14.0}",
+            n,
+            m.hdfs_read_aggregate(n),
+            m.pfs_aggregate_throughput(n),
+            m.tls_read_aggregate(n, 0.2),
+            m.tls_read_aggregate(n, 0.5),
+            m.hdfs_write_aggregate(n),
+        );
+    }
+    println!(
+        "\ncrossovers: read vs pfs N={}  vs tls(f=0.2) N={}  vs tls(f=0.5) N={}  write N={}",
+        m.crossover_read_vs_pfs(),
+        m.crossover_read_vs_tls(0.2),
+        m.crossover_read_vs_tls(0.5),
+        m.crossover_write()
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let n = args.get_parse("nodes", 16usize)?;
+    let m = args.get_parse("data-nodes", 2usize)?;
+    let containers = args.get_parse("containers", 16usize)?;
+    let input_gb = args.get_parse("input-gb", 16.0f64)?;
+    let backend = match args.get("backend", "all").as_str() {
+        "hdfs" => vec![BackendKind::Hdfs],
+        "ofs" | "pfs" => vec![BackendKind::Ofs],
+        "tls" => vec![BackendKind::Tls { f_pct: 100 }],
+        "all" => vec![
+            BackendKind::Hdfs,
+            BackendKind::Ofs,
+            BackendKind::Tls { f_pct: 100 },
+        ],
+        other => return Err(Error::InvalidArg(format!("unknown backend {other}"))),
+    };
+    let show_timelines = args.has("timelines");
+    args.finish()?;
+    println!(
+        "TeraSort simulation: {n} compute × {containers} containers, {m} data nodes, {input_gb} GB"
+    );
+    for b in backend {
+        let r = simulate_terasort(b, n, m, containers, input_gb, SimConstants::default())?;
+        println!(
+            "{:<12} map={:>8.1}s  reduce={:>8.1}s  total={:>8.1}s",
+            r.backend,
+            r.map_time,
+            r.reduce_time,
+            r.total()
+        );
+        if show_timelines {
+            println!("-- map phase utilization --");
+            print!("{}", r.result_map.timelines.render(48));
+            println!("-- reduce phase utilization --");
+            print!("{}", r.result_reduce.timelines.render(48));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_analytics(args: &Args) -> Result<()> {
+    let store = open_store(args)?;
+    let runtime = Arc::new(Runtime::load_dir(std::path::Path::new(
+        &args.get("artifacts", "artifacts"),
+    ))?);
+    let tables = args.get_parse("tables", 8u32)?;
+    let rows = args.get_parse("rows", 6000usize)?;
+    let reducers = args.get_parse("reducers", 4u32)?;
+    let generate = !args.has("no-generate");
+    args.finish()?;
+
+    if generate {
+        tlstore::analytics::generate_tables(store.as_ref(), "events/", tables, rows, 7)?;
+        println!("generated {tables} tables × {rows} rows into {}", store.kind());
+    }
+    let engine = Engine::local();
+    let stats = tlstore::analytics::run_analytics(
+        &engine,
+        Arc::clone(&store),
+        runtime,
+        "events/",
+        "stats/",
+        reducers,
+    )?;
+    println!("{}", stats.report());
+    for key in store.list("stats/") {
+        print!("{}", String::from_utf8_lossy(&store.read(&key)?));
+    }
+    Ok(())
+}
+
+fn cmd_mountain(args: &Args) -> Result<()> {
+    args.finish()?;
+    let params = tlstore::sim::mountain::MountainParams::default();
+    let pts = tlstore::sim::mountain_surface(&params);
+    println!("storage mountain (simulated at paper scale) — MB/s");
+    print!("{:>10}", "data\\skip");
+    let skips: Vec<f64> = {
+        let mut s: Vec<f64> = pts.iter().map(|p| p.skip_bytes).collect();
+        s.dedup();
+        s.truncate(16);
+        s
+    };
+    for s in &skips {
+        print!("{:>9}", tlstore::util::bytes::fmt_bytes(*s as u64));
+    }
+    println!();
+    let mut row_data = f64::NAN;
+    for p in &pts {
+        if p.data_bytes != row_data {
+            row_data = p.data_bytes;
+            print!("\n{:>10}", tlstore::util::bytes::fmt_bytes(p.data_bytes as u64));
+        }
+        print!("{:>9.0}", p.throughput_mbs);
+    }
+    println!();
+    Ok(())
+}
+
+fn usage() -> String {
+    "usage: tlstore <info|teragen|terasort|validate|analytics|model|sim|mountain> [flags]\n\
+     see `tlstore <cmd> --help` equivalents in README.md"
+        .to_string()
+}
+
+fn main() {
+    tlstore::util::logger::init();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("teragen") => cmd_teragen(&args),
+        Some("terasort") => cmd_terasort(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("analytics") => cmd_analytics(&args),
+        Some("model") => cmd_model(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("mountain") => cmd_mountain(&args),
+        _ => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,334 @@
+//! The MapReduce engine: drives map → shuffle → reduce over an
+//! [`ObjectStore`] with a worker pool, locality accounting, and per-phase
+//! timings (the quantities behind Figure 7(f–g)).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::scheduler::LocalityScheduler;
+use super::shuffle::{MergeIter, Run};
+use super::{close_context, plan_splits, InputSplit, JobSpec, MapContext, Mapper, Reducer};
+use crate::error::{Error, Result};
+use crate::storage::ObjectStore;
+use crate::util::pool::ThreadPool;
+
+/// Per-job result metrics.
+#[derive(Debug, Clone)]
+pub struct JobStats {
+    pub job: String,
+    pub splits: usize,
+    pub reducers: u32,
+    pub map_time: Duration,
+    pub reduce_time: Duration,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+    pub shuffle_records: u64,
+    pub locality_hits: usize,
+}
+
+impl JobStats {
+    /// Aggregate map-phase read throughput, MB/s.
+    pub fn map_read_mbs(&self) -> f64 {
+        self.input_bytes as f64 / 1e6 / self.map_time.as_secs_f64().max(1e-9)
+    }
+
+    /// Aggregate reduce-phase write throughput, MB/s.
+    pub fn reduce_write_mbs(&self) -> f64 {
+        self.output_bytes as f64 / 1e6 / self.reduce_time.as_secs_f64().max(1e-9)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "job={} splits={} reducers={} map={:.3}s ({:.1} MB/s in) reduce={:.3}s ({:.1} MB/s out) shuffle={} rec locality={}/{}",
+            self.job,
+            self.splits,
+            self.reducers,
+            self.map_time.as_secs_f64(),
+            self.map_read_mbs(),
+            self.reduce_time.as_secs_f64(),
+            self.reduce_write_mbs(),
+            self.shuffle_records,
+            self.locality_hits,
+            self.splits
+        )
+    }
+}
+
+/// Engine configuration: worker pool size models the paper's containers.
+pub struct Engine {
+    pool: ThreadPool,
+    /// Logical node count for the locality scheduler (single-host runs
+    /// still model the paper's 16-node placement).
+    pub nodes: usize,
+    pub containers_per_node: usize,
+}
+
+impl Engine {
+    pub fn new(workers: usize, nodes: usize, containers_per_node: usize) -> Self {
+        Self {
+            pool: ThreadPool::new(workers),
+            nodes,
+            containers_per_node,
+        }
+    }
+
+    /// Single-host default: workers = available parallelism, one logical
+    /// node.
+    pub fn local() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2);
+        Self::new(n, 1, n)
+    }
+
+    /// Run a job: plan splits, map with locality scheduling, shuffle,
+    /// reduce, write `part-r-*` outputs.
+    pub fn run(
+        &self,
+        store: Arc<dyn ObjectStore>,
+        spec: &JobSpec,
+        mapper: Arc<dyn Mapper>,
+        reducer: Arc<dyn Reducer>,
+    ) -> Result<JobStats> {
+        let splits = plan_splits(store.as_ref(), spec.input_prefix, spec.split_size, self.nodes)?;
+        if splits.is_empty() {
+            return Err(Error::Job(format!(
+                "{}: no input under `{}`",
+                spec.name, spec.input_prefix
+            )));
+        }
+        let scheduler = LocalityScheduler::new(self.nodes, self.containers_per_node);
+        let (_assignments, locality_hits) = scheduler.assign(&splits);
+
+        // ---- map phase ----------------------------------------------------
+        let t_map = Instant::now();
+        let num_parts = spec.num_reducers.max(1);
+        let splits_arc: Arc<Vec<InputSplit>> = Arc::new(splits);
+        let splits_for_map = Arc::clone(&splits_arc);
+        let store_for_map = Arc::clone(&store);
+        let mapper = Arc::clone(&mapper);
+
+        // each map task returns (input_bytes, per-partition runs)
+        let map_outputs: Vec<Result<(u64, Vec<Vec<Run>>)>> = self
+            .pool
+            .map(splits_arc.len(), move |i| {
+                let split = &splits_for_map[i];
+                let data =
+                    store_for_map.read_range(&split.object, split.offset, split.len as usize)?;
+                let mut ctx = MapContext::new(num_parts);
+                mapper.map(split, &data, &mut ctx)?;
+                Ok((data.len() as u64, close_context(ctx)))
+            })
+            .map_err(Error::Job)?;
+
+        let mut input_bytes = 0u64;
+        let mut shuffle: Vec<Vec<Run>> = (0..num_parts).map(|_| Vec::new()).collect();
+        let mut shuffle_records = 0u64;
+        for out in map_outputs {
+            let (bytes, runs) = out?;
+            input_bytes += bytes;
+            for (p, prt) in runs.into_iter().enumerate() {
+                for run in prt {
+                    shuffle_records += run.len() as u64;
+                    shuffle[p].push(run);
+                }
+            }
+        }
+        let map_time = t_map.elapsed();
+
+        // ---- reduce phase --------------------------------------------------
+        let t_reduce = Instant::now();
+        let shuffle = Arc::new(Mutex::new(
+            shuffle.into_iter().map(Some).collect::<Vec<Option<Vec<Run>>>>(),
+        ));
+        let store_for_reduce = Arc::clone(&store);
+        let reducer = Arc::clone(&reducer);
+        let out_prefix = spec.output_prefix.to_string();
+
+        let reduce_outputs: Vec<Result<u64>> = self
+            .pool
+            .map(num_parts as usize, move |p| {
+                let runs = shuffle.lock().unwrap()[p]
+                    .take()
+                    .expect("partition taken once");
+                let merged = MergeIter::new(runs);
+                let mut out = Vec::new();
+                reducer.reduce(p as u32, merged, &mut out)?;
+                let key = format!("{}part-r-{:05}", out_prefix, p);
+                store_for_reduce.write(&key, &out)?;
+                Ok(out.len() as u64)
+            })
+            .map_err(Error::Job)?;
+
+        let mut output_bytes = 0;
+        for r in reduce_outputs {
+            output_bytes += r?;
+        }
+        let reduce_time = t_reduce.elapsed();
+
+        Ok(JobStats {
+            job: spec.name.to_string(),
+            splits: splits_arc.len(),
+            reducers: num_parts,
+            map_time,
+            reduce_time,
+            input_bytes,
+            output_bytes,
+            shuffle_records,
+            locality_hits,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::tests::MapStore;
+    use crate::mapreduce::KV;
+
+    /// word-count-ish job: input objects hold whitespace-separated words;
+    /// mapper emits (word, 1); reducer sums counts per word.
+    struct WcMapper;
+    impl Mapper for WcMapper {
+        fn map(&self, _s: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+            for word in data.split(|b| b.is_ascii_whitespace()) {
+                if word.is_empty() {
+                    continue;
+                }
+                let p = (word[0] as u32) % ctx.num_partitions();
+                ctx.emit(p, KV::new(word, &1u32.to_le_bytes()));
+            }
+            Ok(())
+        }
+    }
+
+    struct WcReducer;
+    impl Reducer for WcReducer {
+        fn reduce(&self, _p: u32, records: MergeIter, out: &mut Vec<u8>) -> Result<()> {
+            let mut cur: Option<(Vec<u8>, u64)> = None;
+            for kv in records {
+                match &mut cur {
+                    Some((k, n)) if k.as_slice() == kv.key() => *n += 1,
+                    _ => {
+                        if let Some((k, n)) = cur.take() {
+                            out.extend_from_slice(&k);
+                            out.extend_from_slice(format!(" {n}\n").as_bytes());
+                        }
+                        cur = Some((kv.key().to_vec(), 1));
+                    }
+                }
+            }
+            if let Some((k, n)) = cur {
+                out.extend_from_slice(&k);
+                out.extend_from_slice(format!(" {n}\n").as_bytes());
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn word_count_end_to_end() {
+        let store = Arc::new(MapStore::new());
+        store.write("in/a", b"apple banana apple").unwrap();
+        store.write("in/b", b"banana cherry banana apple").unwrap();
+        let engine = Engine::new(4, 2, 2);
+        let stats = engine
+            .run(
+                store.clone() as Arc<dyn ObjectStore>,
+                &JobSpec {
+                    name: "wc",
+                    input_prefix: "in/",
+                    output_prefix: "out/",
+                    num_reducers: 3,
+                    split_size: 1 << 20,
+                },
+                Arc::new(WcMapper),
+                Arc::new(WcReducer),
+            )
+            .unwrap();
+        assert_eq!(stats.splits, 2);
+        assert_eq!(stats.shuffle_records, 7);
+        assert!(stats.input_bytes > 0);
+
+        // gather all outputs and check counts
+        let mut all = String::new();
+        for key in store.list("out/") {
+            all.push_str(std::str::from_utf8(&store.read(&key).unwrap()).unwrap());
+        }
+        assert!(all.contains("apple 3"), "{all}");
+        assert!(all.contains("banana 3"), "{all}");
+        assert!(all.contains("cherry 1"), "{all}");
+    }
+
+    #[test]
+    fn reducer_output_objects_created_per_partition() {
+        let store = Arc::new(MapStore::new());
+        store.write("in/x", b"a b c d e f").unwrap();
+        let engine = Engine::new(2, 1, 2);
+        let stats = engine
+            .run(
+                store.clone() as Arc<dyn ObjectStore>,
+                &JobSpec {
+                    name: "parts",
+                    input_prefix: "in/",
+                    output_prefix: "o/",
+                    num_reducers: 4,
+                    split_size: 4,
+                },
+                Arc::new(WcMapper),
+                Arc::new(WcReducer),
+            )
+            .unwrap();
+        assert_eq!(store.list("o/").len(), 4);
+        assert!(stats.splits >= 2, "split_size=4 must split the object");
+    }
+
+    #[test]
+    fn empty_input_is_an_error() {
+        let store = Arc::new(MapStore::new());
+        let engine = Engine::new(2, 1, 2);
+        let err = engine
+            .run(
+                store as Arc<dyn ObjectStore>,
+                &JobSpec {
+                    name: "none",
+                    input_prefix: "missing/",
+                    output_prefix: "o/",
+                    num_reducers: 1,
+                    split_size: 100,
+                },
+                Arc::new(WcMapper),
+                Arc::new(WcReducer),
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Job(_)));
+    }
+
+    #[test]
+    fn mapper_errors_propagate() {
+        struct FailMapper;
+        impl Mapper for FailMapper {
+            fn map(&self, _s: &InputSplit, _d: &[u8], _c: &mut MapContext) -> Result<()> {
+                Err(Error::Job("mapper exploded".into()))
+            }
+        }
+        let store = Arc::new(MapStore::new());
+        store.write("in/x", b"data").unwrap();
+        let engine = Engine::new(2, 1, 2);
+        let err = engine
+            .run(
+                store as Arc<dyn ObjectStore>,
+                &JobSpec {
+                    name: "fail",
+                    input_prefix: "in/",
+                    output_prefix: "o/",
+                    num_reducers: 1,
+                    split_size: 100,
+                },
+                Arc::new(FailMapper),
+                Arc::new(WcReducer),
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("mapper exploded"));
+    }
+}

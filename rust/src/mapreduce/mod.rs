@@ -1,0 +1,284 @@
+//! A miniature MapReduce engine — the "Hadoop" the paper deploys over its
+//! storage backends.
+//!
+//! Scope matches what the paper's evaluation needs: input splits, a
+//! locality-aware scheduler ([`scheduler`]), mapper containers running on
+//! a worker pool, a sorted shuffle ([`shuffle`]), reducer containers, and
+//! per-phase metrics (the running-time bars of Figure 7(f–g)).
+//!
+//! Mappers may emit unsorted records (the framework run-sorts them at
+//! shuffle time) **or** pre-sorted runs — the TeraSort mapper uses the
+//! latter after sorting record blocks with the AOT-compiled Pallas kernel
+//! through PJRT ([`crate::terasort`]).
+
+pub mod engine;
+pub mod scheduler;
+pub mod shuffle;
+
+pub use engine::{Engine, JobStats};
+pub use scheduler::{Assignment, LocalityScheduler};
+pub use shuffle::{merge_runs, MergeIter, Run};
+
+use crate::error::Result;
+use crate::storage::ObjectStore;
+
+/// One record flowing through the shuffle: a single buffer with the key as
+/// its prefix (one allocation per record — deliberate; see shuffle docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KV {
+    pub bytes: Vec<u8>,
+    pub key_len: u32,
+}
+
+impl KV {
+    pub fn new(key: &[u8], value: &[u8]) -> Self {
+        let mut bytes = Vec::with_capacity(key.len() + value.len());
+        bytes.extend_from_slice(key);
+        bytes.extend_from_slice(value);
+        Self {
+            bytes,
+            key_len: key.len() as u32,
+        }
+    }
+
+    /// Build from an already-concatenated record.
+    pub fn from_record(bytes: Vec<u8>, key_len: u32) -> Self {
+        debug_assert!(key_len as usize <= bytes.len());
+        Self { bytes, key_len }
+    }
+
+    pub fn key(&self) -> &[u8] {
+        &self.bytes[..self.key_len as usize]
+    }
+
+    pub fn value(&self) -> &[u8] {
+        &self.bytes[self.key_len as usize..]
+    }
+}
+
+/// A contiguous byte range of one input object, with an optional locality
+/// preference (the node that holds the bytes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSplit {
+    pub object: String,
+    pub offset: u64,
+    pub len: u64,
+    pub preferred_node: Option<usize>,
+}
+
+/// Mapper context: emit records (optionally pre-sorted) into partitions.
+pub struct MapContext {
+    num_partitions: u32,
+    /// per-partition list of runs; a "run" is sorted ascending by key
+    runs: Vec<Vec<Run>>,
+    /// per-partition unsorted spill (framework sorts at close)
+    unsorted: Vec<Vec<KV>>,
+}
+
+impl MapContext {
+    pub fn new(num_partitions: u32) -> Self {
+        Self {
+            num_partitions,
+            runs: (0..num_partitions).map(|_| Vec::new()).collect(),
+            unsorted: (0..num_partitions).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    pub fn num_partitions(&self) -> u32 {
+        self.num_partitions
+    }
+
+    /// Emit one record into `partition` (framework will sort).
+    pub fn emit(&mut self, partition: u32, kv: KV) {
+        self.unsorted[partition as usize].push(kv);
+    }
+
+    /// Emit a whole pre-sorted run (ascending by key). Used by mappers
+    /// that sort themselves (TeraSort via the PJRT kernel).
+    pub fn emit_sorted_run(&mut self, partition: u32, run: Run) {
+        debug_assert!(
+            run.windows(2).all(|w| w[0].key() <= w[1].key()),
+            "emit_sorted_run: run not sorted"
+        );
+        self.runs[partition as usize].push(run);
+    }
+
+    /// Finish: sort any unsorted spills, return per-partition runs.
+    fn close(mut self) -> Vec<Vec<Run>> {
+        for (p, mut spill) in self.unsorted.into_iter().enumerate() {
+            if !spill.is_empty() {
+                spill.sort_by(|a, b| a.key().cmp(b.key()));
+                self.runs[p].push(spill);
+            }
+        }
+        self.runs
+    }
+
+    #[cfg(test)]
+    fn close_for_test(self) -> Vec<Vec<Run>> {
+        self.close()
+    }
+}
+
+// engine needs access to close()
+pub(crate) fn close_context(ctx: MapContext) -> Vec<Vec<Run>> {
+    ctx.close()
+}
+
+/// Map task: parse `data` (the split's bytes) and emit records.
+pub trait Mapper: Send + Sync {
+    fn map(&self, split: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()>;
+}
+
+/// Reduce task: consume the merged, key-ordered record stream of one
+/// partition and produce the partition's output object.
+pub trait Reducer: Send + Sync {
+    fn reduce(&self, partition: u32, records: MergeIter, out: &mut Vec<u8>) -> Result<()>;
+}
+
+/// Job description handed to [`Engine::run`].
+pub struct JobSpec<'a> {
+    pub name: &'a str,
+    /// Input objects: every object with this prefix becomes input.
+    pub input_prefix: &'a str,
+    /// Output objects are written as `{output_prefix}part-r-{p:05}`.
+    pub output_prefix: &'a str,
+    pub num_reducers: u32,
+    /// Maximum bytes per input split (objects larger than this are split).
+    pub split_size: u64,
+}
+
+/// Derive input splits from the store contents (one split per
+/// `split_size` range of each input object).
+pub fn plan_splits(
+    store: &dyn ObjectStore,
+    prefix: &str,
+    split_size: u64,
+    nodes: usize,
+) -> Result<Vec<InputSplit>> {
+    let mut splits = Vec::new();
+    for (i, key) in store.list(prefix).into_iter().enumerate() {
+        let size = store.size(&key)?;
+        if size == 0 {
+            continue;
+        }
+        let mut off = 0;
+        let mut piece = 0usize;
+        while off < size {
+            let len = (size - off).min(split_size);
+            splits.push(InputSplit {
+                object: key.clone(),
+                offset: off,
+                len,
+                // simple block-placement model: object i, piece j prefers
+                // node (i + j) % nodes — spreads load like HDFS placement
+                preferred_node: if nodes > 0 {
+                    Some((i + piece) % nodes)
+                } else {
+                    None
+                },
+            });
+            off += len;
+            piece += 1;
+        }
+    }
+    Ok(splits)
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::storage::memstore::MemStore;
+    use crate::storage::ObjectStore;
+
+    // a tiny in-memory ObjectStore for framework tests
+    pub(crate) struct MapStore(pub MemStore);
+    impl MapStore {
+        pub fn new() -> Self {
+            Self(MemStore::new(u64::MAX, "lru").unwrap())
+        }
+    }
+    impl ObjectStore for MapStore {
+        fn write(&self, key: &str, data: &[u8]) -> Result<()> {
+            self.0.put(key, data.to_vec().into())?;
+            Ok(())
+        }
+        fn read(&self, key: &str) -> Result<Vec<u8>> {
+            self.0
+                .get(key)
+                .map(|b| b.to_vec())
+                .ok_or_else(|| crate::Error::NotFound(key.into()))
+        }
+        fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+            let all = self.read(key)?;
+            let s = (offset as usize).min(all.len());
+            let e = (s + len).min(all.len());
+            Ok(all[s..e].to_vec())
+        }
+        fn size(&self, key: &str) -> Result<u64> {
+            Ok(self.read(key)?.len() as u64)
+        }
+        fn exists(&self, key: &str) -> bool {
+            self.0.contains(key)
+        }
+        fn delete(&self, key: &str) -> Result<()> {
+            self.0.remove(key);
+            Ok(())
+        }
+        fn list(&self, prefix: &str) -> Vec<String> {
+            self.0.list(prefix)
+        }
+        fn kind(&self) -> &'static str {
+            "map"
+        }
+    }
+
+    #[test]
+    fn kv_accessors() {
+        let kv = KV::new(b"key", b"value");
+        assert_eq!(kv.key(), b"key");
+        assert_eq!(kv.value(), b"value");
+        let kv2 = KV::from_record(b"keyvalue".to_vec(), 3);
+        assert_eq!(kv, kv2);
+    }
+
+    #[test]
+    fn map_context_sorts_unsorted_spills() {
+        let mut ctx = MapContext::new(2);
+        ctx.emit(0, KV::new(b"b", b"2"));
+        ctx.emit(0, KV::new(b"a", b"1"));
+        ctx.emit(1, KV::new(b"z", b"3"));
+        ctx.emit_sorted_run(0, vec![KV::new(b"c", b"4"), KV::new(b"d", b"5")]);
+        let runs = ctx.close_for_test();
+        assert_eq!(runs[0].len(), 2); // one presorted + one sorted spill
+        let spill = &runs[0][1];
+        assert_eq!(spill[0].key(), b"a");
+        assert_eq!(spill[1].key(), b"b");
+        assert_eq!(runs[1].len(), 1);
+    }
+
+    #[test]
+    fn plan_splits_ranges_large_objects() {
+        let store = MapStore::new();
+        store.write("in/a", &vec![0u8; 250]).unwrap();
+        store.write("in/b", &vec![0u8; 100]).unwrap();
+        store.write("in/empty", b"").unwrap();
+        store.write("other", &vec![0u8; 50]).unwrap();
+        let splits = plan_splits(&store, "in/", 100, 4).unwrap();
+        assert_eq!(splits.len(), 4); // 250 → 3 splits; 100 → 1; empty → 0
+        assert_eq!(splits[0], InputSplit { object: "in/a".into(), offset: 0, len: 100, preferred_node: Some(0) });
+        assert_eq!(splits[2].len, 50);
+        assert_eq!(splits[3].object, "in/b");
+        // every byte covered exactly once
+        let total: u64 = splits.iter().map(|s| s.len).sum();
+        assert_eq!(total, 350);
+    }
+
+    #[test]
+    fn plan_splits_zero_nodes() {
+        let store = MapStore::new();
+        store.write("in/a", &[1, 2, 3]).unwrap();
+        let splits = plan_splits(&store, "in/", 10, 0).unwrap();
+        assert_eq!(splits[0].preferred_node, None);
+    }
+}

@@ -1,0 +1,141 @@
+//! Locality-aware split scheduling.
+//!
+//! Hadoop schedules a map task onto the node holding its block whenever a
+//! container is free there — that is the mechanism that makes HDFS reads
+//! "local" in §4.1's model and the two-level store's memory tier hit in
+//! §3.2. The same greedy policy is implemented here: fill each node's
+//! containers with its local splits first, then steal the remainder
+//! round-robin.
+
+use super::InputSplit;
+
+/// One split → (node, container) placement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    pub split: usize,
+    pub node: usize,
+    /// Whether the split ran on its preferred node.
+    pub local: bool,
+}
+
+/// Greedy locality scheduler over `nodes × containers_per_node` slots.
+pub struct LocalityScheduler {
+    pub nodes: usize,
+    pub containers_per_node: usize,
+}
+
+impl LocalityScheduler {
+    pub fn new(nodes: usize, containers_per_node: usize) -> Self {
+        Self {
+            nodes: nodes.max(1),
+            containers_per_node: containers_per_node.max(1),
+        }
+    }
+
+    /// Assign every split to a node. Splits preferring a node are placed
+    /// there while it has free *waves* (capacity is rounded up in whole
+    /// waves: a node can run any number of tasks sequentially, so
+    /// "capacity" here balances load rather than hard-limits it).
+    ///
+    /// Returns assignments in split order plus the locality hit count.
+    pub fn assign(&self, splits: &[InputSplit]) -> (Vec<Assignment>, usize) {
+        let per_node_cap = splits.len().div_ceil(self.nodes);
+        let mut load = vec![0usize; self.nodes];
+        let mut out: Vec<Option<Assignment>> = vec![None; splits.len()];
+        let mut hits = 0;
+
+        // pass 1: locality placements up to the balanced cap
+        for (i, s) in splits.iter().enumerate() {
+            if let Some(pref) = s.preferred_node {
+                let pref = pref % self.nodes;
+                if load[pref] < per_node_cap {
+                    load[pref] += 1;
+                    hits += 1;
+                    out[i] = Some(Assignment {
+                        split: i,
+                        node: pref,
+                        local: true,
+                    });
+                }
+            }
+        }
+        // pass 2: everything else goes to the least-loaded node
+        for (i, _s) in splits.iter().enumerate() {
+            if out[i].is_none() {
+                let node = (0..self.nodes).min_by_key(|&n| load[n]).unwrap();
+                load[node] += 1;
+                out[i] = Some(Assignment {
+                    split: i,
+                    node,
+                    local: false,
+                });
+            }
+        }
+        (out.into_iter().map(Option::unwrap).collect(), hits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn split(pref: Option<usize>) -> InputSplit {
+        InputSplit {
+            object: "o".into(),
+            offset: 0,
+            len: 1,
+            preferred_node: pref,
+        }
+    }
+
+    #[test]
+    fn all_local_when_spread_evenly() {
+        let sched = LocalityScheduler::new(4, 2);
+        let splits: Vec<InputSplit> = (0..8).map(|i| split(Some(i % 4))).collect();
+        let (assigns, hits) = sched.assign(&splits);
+        assert_eq!(hits, 8);
+        assert!(assigns.iter().all(|a| a.local));
+        // perfectly balanced
+        for n in 0..4 {
+            assert_eq!(assigns.iter().filter(|a| a.node == n).count(), 2);
+        }
+    }
+
+    #[test]
+    fn hot_node_overflow_steals_to_others() {
+        let sched = LocalityScheduler::new(2, 1);
+        // all 4 splits prefer node 0; cap per node = 2
+        let splits: Vec<InputSplit> = (0..4).map(|_| split(Some(0))).collect();
+        let (assigns, hits) = sched.assign(&splits);
+        assert_eq!(hits, 2);
+        assert_eq!(assigns.iter().filter(|a| a.node == 0).count(), 2);
+        assert_eq!(assigns.iter().filter(|a| a.node == 1).count(), 2);
+    }
+
+    #[test]
+    fn no_preference_balances() {
+        let sched = LocalityScheduler::new(3, 4);
+        let splits: Vec<InputSplit> = (0..9).map(|_| split(None)).collect();
+        let (assigns, hits) = sched.assign(&splits);
+        assert_eq!(hits, 0);
+        for n in 0..3 {
+            assert_eq!(assigns.iter().filter(|a| a.node == n).count(), 3);
+        }
+    }
+
+    #[test]
+    fn preferred_node_out_of_range_wraps() {
+        let sched = LocalityScheduler::new(2, 1);
+        let (assigns, hits) = sched.assign(&[split(Some(7))]);
+        assert_eq!(hits, 1);
+        assert_eq!(assigns[0].node, 1);
+    }
+
+    #[test]
+    fn empty_splits() {
+        let sched = LocalityScheduler::new(2, 2);
+        let (assigns, hits) = sched.assign(&[]);
+        assert!(assigns.is_empty());
+        assert_eq!(hits, 0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Log-bucketed histogram (HdrHistogram-style, power-of-two buckets with
+//! linear sub-buckets) for latencies and sizes. Lock-free recording.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const SUB_BITS: u32 = 4; // 16 linear sub-buckets per octave
+const SUB: usize = 1 << SUB_BITS;
+const OCTAVES: usize = 64 - SUB_BITS as usize;
+const BUCKETS: usize = OCTAVES * SUB;
+
+/// Records `u64` values (nanoseconds, bytes, …) with ~6% relative error.
+pub struct Histogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        // SAFETY: AtomicU64 is zero-initializable.
+        let buckets: Box<[AtomicU64; BUCKETS]> =
+            unsafe { Box::new(std::mem::zeroed()) };
+        Self {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let octave = 63 - v.leading_zeros();
+    let sub = (v >> (octave - SUB_BITS)) & (SUB as u64 - 1);
+    ((octave - SUB_BITS + 1) as usize * SUB + sub as usize).min(BUCKETS - 1)
+}
+
+#[inline]
+fn bucket_low(idx: usize) -> u64 {
+    let octave = idx / SUB;
+    let sub = (idx % SUB) as u64;
+    if octave == 0 {
+        return sub;
+    }
+    let o = octave as u32 + SUB_BITS - 1;
+    (1u64 << o) + (sub << (o - SUB_BITS))
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// Lower bound of the bucket containing quantile `q` (0.0..=1.0).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for i in 0..BUCKETS {
+            seen += self.buckets[i].load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_low(i);
+            }
+        }
+        self.max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_roundtrip_monotone() {
+        let mut last = 0;
+        for v in [0u64, 1, 5, 15, 16, 17, 100, 1_000, 65_535, 1 << 30, u64::MAX / 2] {
+            let idx = bucket_index(v);
+            assert!(bucket_low(idx) <= v, "v={v} low={}", bucket_low(idx));
+            assert!(idx >= last, "indices must be monotone in v");
+            last = idx;
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = Histogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.01), 0);
+        assert_eq!(h.quantile(1.0), 15);
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.sum(), (0..16).sum::<u64>());
+    }
+
+    #[test]
+    fn quantiles_are_close_for_uniform() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5) as f64;
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.10, "p50={p50}");
+        let p95 = h.quantile(0.95) as f64;
+        assert!((p95 - 9500.0).abs() / 9500.0 < 0.10, "p95={p95}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn max_tracks_largest() {
+        let h = Histogram::new();
+        h.record(7);
+        h.record(1 << 40);
+        h.record(12);
+        assert_eq!(h.max(), 1 << 40);
+    }
+}

@@ -1,0 +1,184 @@
+//! Metrics: counters, gauges, latency histograms, and the utilization
+//! timeline used to regenerate the paper's Figure 7 profiles.
+//!
+//! All primitives are lock-free on the hot path (atomics); the registry is
+//! a name-keyed map behind a mutex used only at registration/report time.
+
+pub mod hist;
+pub mod timeline;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use hist::Histogram;
+pub use timeline::{Timeline, UtilSample};
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Signed gauge (e.g. queue depth, memory in use).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Process-wide named metrics.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            self.counters
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(
+            self.gauges
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            self.histograms
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Render all metrics as sorted `name value` lines.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} {}\n", c.get()));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {k} {}\n", g.get()));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "hist {k} count={} p50={} p95={} p99={} max={}\n",
+                h.count(),
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.quantile(0.99),
+                h.max(),
+            ));
+        }
+        out
+    }
+}
+
+/// The global registry used by the engines (examples/benches may also make
+/// private registries).
+pub fn global() -> &'static Registry {
+    static GLOBAL: once_cell::sync::Lazy<Registry> = once_cell::sync::Lazy::new(Registry::new);
+    &GLOBAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = Registry::new();
+        let c = r.counter("reads");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("reads").get(), 5);
+        // distinct names are distinct counters
+        assert_eq!(r.counter("writes").get(), 0);
+    }
+
+    #[test]
+    fn gauges_move_both_ways() {
+        let r = Registry::new();
+        let g = r.gauge("depth");
+        g.add(10);
+        g.add(-3);
+        assert_eq!(g.get(), 7);
+        g.set(0);
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn counters_are_thread_safe() {
+        let r = Arc::new(Registry::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let r = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                let c = r.counter("shared");
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("shared").get(), 8000);
+    }
+
+    #[test]
+    fn report_lists_everything() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.gauge("b").set(2);
+        r.histogram("c").record(5);
+        let rep = r.report();
+        assert!(rep.contains("counter a 1"));
+        assert!(rep.contains("gauge b 2"));
+        assert!(rep.contains("hist c count=1"));
+    }
+
+    #[test]
+    fn global_registry_is_singleton() {
+        global().counter("singleton-test").inc();
+        assert!(global().counter("singleton-test").get() >= 1);
+    }
+}

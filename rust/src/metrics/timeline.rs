@@ -1,0 +1,224 @@
+//! Utilization timelines — the data behind the paper's Figure 7 (a–e):
+//! per-node CPU / disk / network utilization sampled over a job's life.
+//!
+//! Real runs sample via [`Timeline::sample`]; the simulator pushes exact
+//! per-interval utilizations via [`Timeline::push`]. Either way the result
+//! renders as an ASCII sparkline table or CSV for plotting.
+
+/// One utilization sample in `[0, 1]` at a timestamp (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilSample {
+    pub t: f64,
+    pub util: f64,
+}
+
+/// A named utilization series (e.g. `compute.cpu`, `data.disk`).
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub name: String,
+    pub samples: Vec<UtilSample>,
+}
+
+impl Timeline {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Append a sample (time must be non-decreasing; enforced by debug
+    /// assert so the simulator can't emit garbled series).
+    pub fn push(&mut self, t: f64, util: f64) {
+        debug_assert!(
+            self.samples.last().map_or(true, |s| t >= s.t),
+            "timeline {} not monotone",
+            self.name
+        );
+        self.samples.push(UtilSample {
+            t,
+            util: util.clamp(0.0, 1.0),
+        });
+    }
+
+    /// Mean utilization over the series. Samples are treated as a step
+    /// function: sample `i`'s value holds over `[t_i, t_{i+1})` — the
+    /// semantics the simulator emits (a final sample marks the end time).
+    pub fn mean(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return self.samples.first().map_or(0.0, |s| s.util);
+        }
+        let mut area = 0.0;
+        let mut span = 0.0;
+        for w in self.samples.windows(2) {
+            let dt = w[1].t - w[0].t;
+            area += dt * w[0].util;
+            span += dt;
+        }
+        if span == 0.0 {
+            0.0
+        } else {
+            area / span
+        }
+    }
+
+    /// Peak utilization.
+    pub fn peak(&self) -> f64 {
+        self.samples.iter().map(|s| s.util).fold(0.0, f64::max)
+    }
+
+    /// Resample into `n` equal buckets over the series' span (mean per
+    /// bucket) — used by the ASCII renderer.
+    pub fn rebucket(&self, n: usize) -> Vec<f64> {
+        if self.samples.is_empty() || n == 0 {
+            return vec![0.0; n];
+        }
+        let t0 = self.samples[0].t;
+        let t1 = self.samples.last().unwrap().t;
+        let span = (t1 - t0).max(1e-9);
+        let mut sums = vec![0.0; n];
+        let mut counts = vec![0usize; n];
+        for s in &self.samples {
+            let b = (((s.t - t0) / span) * n as f64) as usize;
+            let b = b.min(n - 1);
+            sums[b] += s.util;
+            counts[b] += 1;
+        }
+        // forward-fill empty buckets with the previous value
+        let mut out = vec![0.0; n];
+        let mut prev = 0.0;
+        for i in 0..n {
+            if counts[i] > 0 {
+                prev = sums[i] / counts[i] as f64;
+            }
+            out[i] = prev;
+        }
+        out
+    }
+
+    /// Render as a one-line unicode sparkline (`n` columns).
+    pub fn sparkline(&self, n: usize) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        self.rebucket(n)
+            .into_iter()
+            .map(|u| BARS[((u * 7.0).round() as usize).min(7)])
+            .collect()
+    }
+
+    /// CSV rows `t,util` (header included).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t_seconds,utilization\n");
+        for s in &self.samples {
+            out.push_str(&format!("{:.4},{:.4}\n", s.t, s.util));
+        }
+        out
+    }
+}
+
+/// Group of timelines for one experiment run (one per node×resource).
+#[derive(Debug, Default)]
+pub struct TimelineSet {
+    pub series: Vec<Timeline>,
+}
+
+impl TimelineSet {
+    pub fn timeline(&mut self, name: &str) -> &mut Timeline {
+        if let Some(idx) = self.series.iter().position(|t| t.name == name) {
+            return &mut self.series[idx];
+        }
+        self.series.push(Timeline::new(name));
+        self.series.last_mut().unwrap()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Timeline> {
+        self.series.iter().find(|t| t.name == name)
+    }
+
+    /// Render the whole set as a Figure-7-style table of sparklines.
+    pub fn render(&self, cols: usize) -> String {
+        let mut out = String::new();
+        for tl in &self.series {
+            out.push_str(&format!(
+                "{:<24} {}  mean={:5.1}% peak={:5.1}%\n",
+                tl.name,
+                tl.sparkline(cols),
+                tl.mean() * 100.0,
+                tl.peak() * 100.0
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_is_step_time_weighted() {
+        let mut tl = Timeline::new("x");
+        tl.push(0.0, 1.0); // [0,1): 100%
+        tl.push(1.0, 0.5); // [1,3): 50%
+        tl.push(3.0, 0.0); // end marker
+        // area = 1·1 + 2·0.5 = 2.0 over span 3
+        assert!((tl.mean() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_and_clamp() {
+        let mut tl = Timeline::new("x");
+        tl.push(0.0, 1.7); // clamped to 1.0
+        tl.push(1.0, 0.3);
+        assert_eq!(tl.peak(), 1.0);
+    }
+
+    #[test]
+    fn rebucket_handles_sparse_series() {
+        let mut tl = Timeline::new("x");
+        tl.push(0.0, 0.2);
+        tl.push(10.0, 0.8);
+        let b = tl.rebucket(5);
+        assert_eq!(b.len(), 5);
+        assert!((b[0] - 0.2).abs() < 1e-9);
+        assert!((b[4] - 0.8).abs() < 1e-9);
+        // middle buckets forward-filled
+        assert!((b[2] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparkline_has_requested_width() {
+        let mut tl = Timeline::new("x");
+        for i in 0..100 {
+            tl.push(i as f64, i as f64 / 100.0);
+        }
+        assert_eq!(tl.sparkline(40).chars().count(), 40);
+    }
+
+    #[test]
+    fn set_dedups_by_name() {
+        let mut set = TimelineSet::default();
+        set.timeline("a").push(0.0, 0.5);
+        set.timeline("a").push(1.0, 0.7);
+        set.timeline("b").push(0.0, 0.1);
+        assert_eq!(set.series.len(), 2);
+        assert_eq!(set.get("a").unwrap().samples.len(), 2);
+        assert!(set.render(10).contains("a"));
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut tl = Timeline::new("x");
+        tl.push(0.5, 0.25);
+        let csv = tl.to_csv();
+        assert!(csv.starts_with("t_seconds,utilization\n"));
+        assert!(csv.contains("0.5000,0.2500"));
+    }
+
+    #[test]
+    fn empty_timeline_defaults() {
+        let tl = Timeline::new("e");
+        assert_eq!(tl.mean(), 0.0);
+        assert_eq!(tl.peak(), 0.0);
+        assert_eq!(tl.rebucket(3), vec![0.0, 0.0, 0.0]);
+    }
+}

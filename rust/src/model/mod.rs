@@ -1,0 +1,316 @@
+//! Analytic I/O-throughput models — §4, equations (1)–(7).
+//!
+//! Per-compute-node throughputs for the four storages (HDFS, OrangeFS,
+//! Tachyon, two-level) as functions of the cluster geometry and the
+//! measured device constants, plus the §4.5 aggregate case study (Figure
+//! 5) with its crossover points.
+//!
+//! Two parameterizations are provided, matching the paper's own usage:
+//! - [`ClusterParams`]: the general eqs. (1)–(7), with `M` data nodes.
+//! - [`CaseStudyParams`]: §4.5's simplification, where the parallel FS is
+//!   summarized by one aggregate bandwidth `B` (10 or 50 GB/s in the
+//!   paper) shared by the `N` compute nodes.
+
+use crate::config::presets::PaperConstants;
+
+/// General model parameters (Table 2 symbols).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterParams {
+    /// N — compute nodes.
+    pub n: u32,
+    /// M — data nodes.
+    pub m: u32,
+    /// Φ — switch backplane bisection bandwidth, MB/s.
+    pub phi: f64,
+    /// ρ — per-node NIC bandwidth, MB/s.
+    pub rho: f64,
+    /// μ — compute-node local disk throughput, MB/s (read, write).
+    pub mu_read: f64,
+    pub mu_write: f64,
+    /// μ′ — data-node disk (RAID) throughput, MB/s (read, write).
+    pub mu_p_read: f64,
+    pub mu_p_write: f64,
+    /// ν — RAM throughput, MB/s.
+    pub nu: f64,
+}
+
+impl ClusterParams {
+    /// The Palmetto TeraSort testbed (§5.1 constants).
+    pub fn palmetto() -> Self {
+        use crate::config::presets::PALMETTO as P;
+        Self {
+            n: P.compute_nodes as u32,
+            m: P.data_nodes as u32,
+            phi: 800_000.0, // 6.4 Tbps backplane ≫ everything else
+            rho: 1170.0,
+            mu_read: P.compute_disk_mbs,
+            mu_write: P.compute_disk_mbs,
+            mu_p_read: P.data_raid_read_mbs,
+            mu_p_write: P.data_raid_write_mbs,
+            nu: 6267.0,
+        }
+    }
+
+    fn min3(a: f64, b: f64, c: f64) -> f64 {
+        a.min(b).min(c)
+    }
+
+    /// Eq. (1), local branch: HDFS read served by the local disk.
+    pub fn hdfs_read_local(&self) -> f64 {
+        self.mu_read
+    }
+
+    /// Eq. (1), remote branch.
+    pub fn hdfs_read_remote(&self) -> f64 {
+        Self::min3(self.rho, self.phi / self.n as f64, self.mu_read)
+    }
+
+    /// Eq. (2): HDFS write with 3 replicas (1 local + 2 remote).
+    pub fn hdfs_write(&self) -> f64 {
+        Self::min3(
+            self.rho / 2.0,
+            self.phi / (2.0 * self.n as f64),
+            self.mu_write / 3.0,
+        )
+    }
+
+    /// Eq. (3) for reads: OrangeFS-style parallel FS.
+    pub fn ofs_read(&self) -> f64 {
+        let nf = self.n as f64;
+        let mf = self.m as f64;
+        (self.rho)
+            .min(self.phi / nf)
+            .min(mf * self.rho / nf)
+            .min(mf * self.mu_p_read / nf)
+    }
+
+    /// Eq. (3) for writes.
+    pub fn ofs_write(&self) -> f64 {
+        let nf = self.n as f64;
+        let mf = self.m as f64;
+        (self.rho)
+            .min(self.phi / nf)
+            .min(mf * self.rho / nf)
+            .min(mf * self.mu_p_write / nf)
+    }
+
+    /// Eq. (4), local branch: Tachyon read from local RAM.
+    pub fn tachyon_read_local(&self) -> f64 {
+        self.nu
+    }
+
+    /// Eq. (4), remote branch.
+    pub fn tachyon_read_remote(&self) -> f64 {
+        Self::min3(self.rho, self.phi / self.n as f64, self.nu)
+    }
+
+    /// Eq. (5): Tachyon write (RAM only; lineage, no replication).
+    pub fn tachyon_write(&self) -> f64 {
+        self.nu
+    }
+
+    /// Eq. (6): two-level write = min(Tachyon, OFS) = OFS (synchronous
+    /// write-through is bounded by the slower leg).
+    pub fn tls_write(&self) -> f64 {
+        self.tachyon_write().min(self.ofs_write())
+    }
+
+    /// Eq. (7): two-level read at memory-residency ratio `f`:
+    /// `1 / (f/ν + (1−f)/q_read_OFS)`.
+    pub fn tls_read(&self, f: f64) -> f64 {
+        let f = f.clamp(0.0, 1.0);
+        let ofs = self.ofs_read();
+        if ofs <= 0.0 {
+            return if f >= 1.0 { self.nu } else { 0.0 };
+        }
+        1.0 / (f / self.nu + (1.0 - f) / ofs)
+    }
+
+    /// Same parameters at a different N (for sweeps).
+    pub fn with_n(&self, n: u32) -> Self {
+        Self { n, ..*self }
+    }
+}
+
+// -------------------------------------------------------- §4.5 case study
+
+/// §4.5 parameterization: the PFS is a single aggregate bandwidth `B`.
+#[derive(Debug, Clone, Copy)]
+pub struct CaseStudyParams {
+    /// Aggregate PFS bandwidth, MB/s (paper: 10_000 and 50_000).
+    pub pfs_aggregate: f64,
+    pub constants: PaperConstants,
+}
+
+impl CaseStudyParams {
+    pub fn new(pfs_aggregate_mbs: f64) -> Self {
+        Self {
+            pfs_aggregate: pfs_aggregate_mbs,
+            constants: crate::config::presets::PAPER_CONSTANTS,
+        }
+    }
+
+    /// Per-node PFS read/write throughput at `n` compute nodes:
+    /// `min(ρ, B/n)`.
+    pub fn pfs_per_node(&self, n: u32) -> f64 {
+        self.constants.nic_mbs.min(self.pfs_aggregate / n as f64)
+    }
+
+    /// Aggregate HDFS read: N × local-disk read.
+    pub fn hdfs_read_aggregate(&self, n: u32) -> f64 {
+        n as f64 * self.constants.disk_read_mbs
+    }
+
+    /// Aggregate HDFS write: N × μ_write/3 (three synchronous copies; the
+    /// NIC terms don't bind with the paper's constants).
+    pub fn hdfs_write_aggregate(&self, n: u32) -> f64 {
+        n as f64
+            * (self.constants.disk_write_mbs / 3.0)
+                .min(self.constants.nic_mbs / 2.0)
+    }
+
+    /// Aggregate PFS read/write: min(N·ρ, B).
+    pub fn pfs_aggregate_throughput(&self, n: u32) -> f64 {
+        (n as f64 * self.constants.nic_mbs).min(self.pfs_aggregate)
+    }
+
+    /// Aggregate two-level read at residency `f` (eq. (7) × N).
+    pub fn tls_read_aggregate(&self, n: u32, f: f64) -> f64 {
+        let per_node = 1.0
+            / (f / self.constants.ram_mbs + (1.0 - f) / self.pfs_per_node(n));
+        n as f64 * per_node
+    }
+
+    /// Aggregate two-level write = PFS aggregate (eq. (6)).
+    pub fn tls_write_aggregate(&self, n: u32) -> f64 {
+        self.pfs_aggregate_throughput(n)
+    }
+
+    /// Smallest N where aggregate HDFS read exceeds the PFS curve.
+    pub fn crossover_read_vs_pfs(&self) -> u32 {
+        (1..100_000)
+            .find(|&n| self.hdfs_read_aggregate(n) > self.pfs_aggregate_throughput(n))
+            .unwrap_or(u32::MAX)
+    }
+
+    /// Smallest N where aggregate HDFS read exceeds the TLS curve at `f`.
+    pub fn crossover_read_vs_tls(&self, f: f64) -> u32 {
+        (1..100_000)
+            .find(|&n| self.hdfs_read_aggregate(n) > self.tls_read_aggregate(n, f))
+            .unwrap_or(u32::MAX)
+    }
+
+    /// Smallest N where aggregate HDFS write exceeds the PFS/TLS curve.
+    pub fn crossover_write(&self) -> u32 {
+        (1..100_000)
+            .find(|&n| self.hdfs_write_aggregate(n) > self.tls_write_aggregate(n))
+            .unwrap_or(u32::MAX)
+    }
+
+    /// Asymptotic TLS read gain over the bare PFS: `1/(1−f)` (the paper's
+    /// "+25% at f=0.2, +95% at f=0.5").
+    pub fn tls_asymptotic_gain(&self, f: f64, n: u32) -> f64 {
+        self.tls_read_aggregate(n, f) / self.pfs_aggregate_throughput(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- the paper's §4.5 crossover numbers, reproduced exactly --------
+
+    #[test]
+    fn fig5_read_crossovers_at_10gbs() {
+        let m = CaseStudyParams::new(10_000.0);
+        assert_eq!(m.crossover_read_vs_pfs(), 43); // paper: 43 nodes
+        assert_eq!(m.crossover_read_vs_tls(0.2), 53); // paper: 53 nodes
+        assert_eq!(m.crossover_read_vs_tls(0.5), 83); // paper: 83 nodes
+    }
+
+    #[test]
+    fn fig5_read_crossovers_at_50gbs() {
+        let m = CaseStudyParams::new(50_000.0);
+        assert_eq!(m.crossover_read_vs_pfs(), 211); // paper: 211
+        assert_eq!(m.crossover_read_vs_tls(0.2), 262); // paper: 262
+        assert_eq!(m.crossover_read_vs_tls(0.5), 414); // paper: 414
+    }
+
+    #[test]
+    fn fig5_write_crossovers() {
+        assert_eq!(CaseStudyParams::new(10_000.0).crossover_write(), 259); // paper: 259
+        assert_eq!(CaseStudyParams::new(50_000.0).crossover_write(), 1294); // paper: 1294
+    }
+
+    #[test]
+    fn fig5_tls_gain_percentages() {
+        let m = CaseStudyParams::new(10_000.0);
+        // paper: ~25% at f=0.2 (10 → 12.5 GB/s), ~95% at f=0.5 (10 → 19.6)
+        let g02 = m.tls_asymptotic_gain(0.2, 2000);
+        let g05 = m.tls_asymptotic_gain(0.5, 2000);
+        assert!((g02 - 1.25).abs() < 0.02, "f=0.2 gain {g02}");
+        assert!((g05 - 1.96).abs() < 0.04, "f=0.5 gain {g05}");
+    }
+
+    // ---- eq-level sanity on the general parameterization ----------------
+
+    #[test]
+    fn eq1_eq2_hdfs() {
+        let p = ClusterParams::palmetto();
+        assert_eq!(p.hdfs_read_local(), 60.0);
+        // remote read bounded by disk (60) not NIC (1170)
+        assert_eq!(p.hdfs_read_remote(), 60.0);
+        // write: μ/3 = 20 binds
+        assert_eq!(p.hdfs_write(), 20.0);
+    }
+
+    #[test]
+    fn eq3_ofs_shrinks_with_n() {
+        let p = ClusterParams::palmetto();
+        // N=16, M=2: (M/N)·μ′_read = 2·400/16 = 50 binds
+        assert!((p.ofs_read() - 50.0).abs() < 1e-9);
+        assert!((p.ofs_write() - 25.0).abs() < 1e-9);
+        let p64 = p.with_n(64);
+        assert!(p64.ofs_read() < p.ofs_read());
+    }
+
+    #[test]
+    fn eq4_eq5_tachyon() {
+        let p = ClusterParams::palmetto();
+        assert_eq!(p.tachyon_read_local(), 6267.0);
+        assert_eq!(p.tachyon_read_remote(), 1170.0); // NIC binds
+        assert_eq!(p.tachyon_write(), 6267.0);
+    }
+
+    #[test]
+    fn eq6_tls_write_is_ofs_bound() {
+        let p = ClusterParams::palmetto();
+        assert_eq!(p.tls_write(), p.ofs_write());
+    }
+
+    #[test]
+    fn eq7_tls_read_boundaries() {
+        let p = ClusterParams::palmetto();
+        // f=1 → pure RAM; f=0 → pure OFS
+        assert!((p.tls_read(1.0) - p.nu).abs() < 1e-6);
+        assert!((p.tls_read(0.0) - p.ofs_read()).abs() < 1e-9);
+        // monotone in f
+        let mut last = 0.0;
+        for i in 0..=10 {
+            let q = p.tls_read(i as f64 / 10.0);
+            assert!(q >= last);
+            last = q;
+        }
+        // out-of-range f clamps
+        assert_eq!(p.tls_read(2.0), p.tls_read(1.0));
+        assert_eq!(p.tls_read(-1.0), p.tls_read(0.0));
+    }
+
+    #[test]
+    fn tls_read_harmonic_mean_value() {
+        let p = ClusterParams::palmetto();
+        // hand-computed: f=0.5, ν=6267, ofs=50 → 1/(0.5/6267 + 0.5/50)
+        let expect = 1.0 / (0.5 / 6267.0 + 0.5 / 50.0);
+        assert!((p.tls_read(0.5) - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,237 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `artifacts/manifest.toml` describes every AOT-lowered HLO module: file
+//! name, input specs, output specs (dtype + dims, e.g. `u32[16x256]`). The
+//! runtime validates the manifest against the shapes it marshals, so a
+//! Python-side shape change fails loudly at load time instead of
+//! corrupting buffers at run time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::toml;
+use crate::error::{Error, Result};
+
+/// Element dtype of an artifact tensor (subset the kernels use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    U32,
+    S32,
+    F32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "u32" => Some(DType::U32),
+            "s32" => Some(DType::S32),
+            "f32" => Some(DType::F32),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::U32 => "u32",
+            DType::S32 => "s32",
+            DType::F32 => "f32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+
+    /// The xla crate element type.
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::U32 => xla::ElementType::U32,
+            DType::S32 => xla::ElementType::S32,
+            DType::F32 => xla::ElementType::F32,
+        }
+    }
+}
+
+/// Shape spec `dtype[d0xd1x...]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse e.g. `"u32[16x256]"`, `"s32[256]"`, `"f32[]"` (scalar).
+    pub fn parse(s: &str) -> Result<Self> {
+        let err = || Error::Artifact(format!("bad tensor spec `{s}`"));
+        let open = s.find('[').ok_or_else(err)?;
+        let dtype = DType::parse(&s[..open]).ok_or_else(err)?;
+        let dims_str = s[open + 1..].strip_suffix(']').ok_or_else(err)?;
+        let dims = if dims_str.is_empty() {
+            Vec::new()
+        } else {
+            dims_str
+                .split('x')
+                .map(|d| d.parse::<usize>().map_err(|_| err()))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self { dtype, dims })
+    }
+
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Total byte size.
+    pub fn byte_len(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+
+    pub fn render(&self) -> String {
+        let dims = self
+            .dims
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        format!("{}[{dims}]", self.dtype.name())
+    }
+}
+
+/// One artifact entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parse `manifest.toml` in `dir`.
+pub fn load_manifest(dir: &Path) -> Result<BTreeMap<String, ArtifactSpec>> {
+    let path = dir.join("manifest.toml");
+    let text = std::fs::read_to_string(&path).map_err(|e| Error::io(&path, e))?;
+    let doc = toml::parse(&text)?;
+    let table = doc
+        .as_table()
+        .ok_or_else(|| Error::Artifact("manifest root must be a table".into()))?;
+
+    let mut specs = BTreeMap::new();
+    for (name, entry) in table {
+        let entry = entry
+            .as_table()
+            .ok_or_else(|| Error::Artifact(format!("[{name}] must be a table")))?;
+        let file = entry
+            .get("file")
+            .and_then(toml::Value::as_str)
+            .ok_or_else(|| Error::Artifact(format!("[{name}] missing `file`")))?;
+        let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+            entry
+                .get(key)
+                .and_then(toml::Value::as_array)
+                .ok_or_else(|| Error::Artifact(format!("[{name}] missing `{key}`")))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .ok_or_else(|| Error::Artifact(format!("[{name}] bad `{key}` entry")))
+                        .and_then(TensorSpec::parse)
+                })
+                .collect()
+        };
+        specs.insert(
+            name.clone(),
+            ArtifactSpec {
+                name: name.clone(),
+                path: dir.join(file),
+                inputs: parse_list("inputs")?,
+                outputs: parse_list("outputs")?,
+            },
+        );
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::TempDir;
+
+    #[test]
+    fn tensor_spec_parsing() {
+        let t = TensorSpec::parse("u32[16x256]").unwrap();
+        assert_eq!(t.dtype, DType::U32);
+        assert_eq!(t.dims, vec![16, 256]);
+        assert_eq!(t.elements(), 4096);
+        assert_eq!(t.byte_len(), 16384);
+        assert_eq!(t.render(), "u32[16x256]");
+
+        let t = TensorSpec::parse("s32[256]").unwrap();
+        assert_eq!(t.dims, vec![256]);
+
+        let t = TensorSpec::parse("f32[]").unwrap();
+        assert!(t.dims.is_empty());
+        assert_eq!(t.elements(), 1);
+    }
+
+    #[test]
+    fn tensor_spec_rejects_garbage() {
+        for bad in ["u32", "u32[1x]", "u8[4]", "u32[a]", "u32[4", "[4]"] {
+            assert!(TensorSpec::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = TempDir::new("manifest").unwrap();
+        std::fs::write(
+            dir.join("manifest.toml"),
+            r#"
+[sort_block]
+file = "sort_block.hlo.txt"
+inputs = ["u32[16x256]"]
+outputs = ["u32[16x256]", "s32[16x256]", "s32[256]"]
+sha256_16 = "abc"
+
+[analytics_agg]
+file = "analytics_agg.hlo.txt"
+inputs = ["f32[4096x8]"]
+outputs = ["f32[4x8]", "f32[8]", "f32[8]"]
+sha256_16 = "def"
+"#,
+        )
+        .unwrap();
+        let specs = load_manifest(dir.path()).unwrap();
+        assert_eq!(specs.len(), 2);
+        let sb = &specs["sort_block"];
+        assert_eq!(sb.inputs.len(), 1);
+        assert_eq!(sb.outputs.len(), 3);
+        assert_eq!(sb.outputs[2].render(), "s32[256]");
+        assert!(sb.path.ends_with("sort_block.hlo.txt"));
+    }
+
+    #[test]
+    fn manifest_missing_fields_error() {
+        let dir = TempDir::new("manifest2").unwrap();
+        std::fs::write(dir.join("manifest.toml"), "[x]\nfile = \"x.hlo\"\n").unwrap();
+        assert!(load_manifest(dir.path()).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_io_error() {
+        let dir = TempDir::new("manifest3").unwrap();
+        assert!(matches!(load_manifest(dir.path()), Err(Error::Io { .. })));
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // if `make artifacts` has run, validate the real manifest contract
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.toml").exists() {
+            let specs = load_manifest(dir).unwrap();
+            assert!(specs.contains_key("sort_block"));
+            assert!(specs.contains_key("analytics_agg"));
+            assert_eq!(specs["sort_block"].inputs[0].dtype, DType::U32);
+        }
+    }
+}

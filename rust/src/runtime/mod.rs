@@ -1,0 +1,263 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust hot path.
+//!
+//! Pipeline (see `/opt/xla-example/load_hlo` and DESIGN.md):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` (once per artifact) →
+//! [`Artifact::call_bytes`] per request.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 emits serialized
+//! protos with 64-bit instruction ids that this xla_extension rejects; the
+//! text parser reassigns ids.
+//!
+//! Thread-safety: `PjRtLoadedExecutable` wraps a raw pointer without
+//! `Send`/`Sync`. PJRT's `Execute` is thread-compatible, but to stay
+//! conservative each artifact guards execution with a mutex, and all
+//! `Literal` values (also raw pointers) are created and consumed inside
+//! [`Artifact::call_bytes`] so they never cross threads.
+
+pub mod artifacts;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+pub use artifacts::{ArtifactSpec, DType, TensorSpec};
+
+use crate::error::{Error, Result};
+
+/// A typed output tensor copied back to host memory.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    U32(Vec<u32>),
+    S32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl HostTensor {
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            HostTensor::U32(v) => Ok(v),
+            other => Err(Error::Artifact(format!("expected u32, got {other:?}"))),
+        }
+    }
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::S32(v) => Ok(v),
+            other => Err(Error::Artifact(format!("expected s32, got {other:?}"))),
+        }
+    }
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            other => Err(Error::Artifact(format!("expected f32, got {other:?}"))),
+        }
+    }
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::U32(v) => v.len(),
+            HostTensor::S32(v) => v.len(),
+            HostTensor::F32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the executable handle is only ever *used* under `Artifact.loaded`'s
+// mutex; PJRT loaded executables are internally thread-compatible for
+// Execute and we never mutate the handle after compilation.
+unsafe impl Send for Loaded {}
+unsafe impl Sync for Loaded {}
+
+/// One compiled artifact: spec + mutex-guarded executable.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    loaded: Mutex<Loaded>,
+    calls: std::sync::atomic::AtomicU64,
+}
+
+impl Artifact {
+    /// Execute with raw little-endian input buffers (one per manifest
+    /// input, exact byte length enforced). Returns one [`HostTensor`] per
+    /// manifest output.
+    pub fn call_bytes(&self, inputs: &[&[u8]]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        // Build input literals (thread-confined).
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (bytes, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if bytes.len() != spec.byte_len() {
+                return Err(Error::Artifact(format!(
+                    "{}: input {} wants {} bytes, got {}",
+                    self.spec.name,
+                    spec.render(),
+                    spec.byte_len(),
+                    bytes.len()
+                )));
+            }
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                spec.dtype.element_type(),
+                &spec.dims,
+                bytes,
+            )?;
+            literals.push(lit);
+        }
+
+        let result = {
+            let guard = self.loaded.lock().unwrap();
+            let bufs = guard.exe.execute::<xla::Literal>(&literals)?;
+            bufs[0][0].to_literal_sync()?
+        };
+        self.calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+
+        // aot.py lowers with return_tuple=True → always a tuple literal.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::Artifact(format!(
+                "{}: manifest promises {} outputs, module returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.spec.outputs) {
+            if lit.element_count() != spec.elements() {
+                return Err(Error::Artifact(format!(
+                    "{}: output {} wants {} elements, got {}",
+                    self.spec.name,
+                    spec.render(),
+                    spec.elements(),
+                    lit.element_count()
+                )));
+            }
+            out.push(match spec.dtype {
+                DType::U32 => HostTensor::U32(lit.to_vec::<u32>()?),
+                DType::S32 => HostTensor::S32(lit.to_vec::<i32>()?),
+                DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Number of completed calls (for metrics / perf logs).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+/// The runtime: a PJRT CPU client plus every artifact from a manifest,
+/// compiled once at startup.
+pub struct Runtime {
+    artifacts: BTreeMap<String, Artifact>,
+    platform: String,
+}
+
+impl Runtime {
+    /// Load and compile every artifact in `dir` (must contain
+    /// `manifest.toml`; run `make artifacts` first).
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let platform = format!(
+            "{} ({} devices)",
+            client.platform_name(),
+            client.device_count()
+        );
+        let specs = artifacts::load_manifest(dir)?;
+        let mut arts = BTreeMap::new();
+        for (name, spec) in specs {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path
+                    .to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            log::info!("compiled artifact `{name}` from {}", spec.path.display());
+            arts.insert(
+                name,
+                Artifact {
+                    spec,
+                    loaded: Mutex::new(Loaded { exe }),
+                    calls: std::sync::atomic::AtomicU64::new(0),
+                },
+            );
+        }
+        Ok(Self {
+            artifacts: arts,
+            platform,
+        })
+    }
+
+    /// PJRT platform description.
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Fetch an artifact by manifest name.
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact `{name}`")))
+    }
+
+    /// All artifact names.
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Convert a `&[u32]` to its little-endian byte image (the explicit copy
+/// is cheap relative to the kernel call and keeps the API safe).
+pub fn u32_bytes(v: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Convert a `&[f32]` to its little-endian byte image.
+pub fn f32_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_conversions() {
+        assert_eq!(u32_bytes(&[1, 0x0203]), vec![1, 0, 0, 0, 3, 2, 0, 0]);
+        assert_eq!(f32_bytes(&[1.0]), 1.0f32.to_le_bytes().to_vec());
+    }
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::U32(vec![1, 2]);
+        assert_eq!(t.as_u32().unwrap(), &[1, 2]);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+    }
+
+    // Full load/execute integration lives in rust/tests/integration_runtime.rs
+    // (it needs `make artifacts` to have produced the HLO text files).
+}

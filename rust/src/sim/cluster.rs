@@ -1,0 +1,427 @@
+//! Cluster resource construction + per-backend flow builders.
+//!
+//! Resources per compute node `i`: `cpu{i}`, `disk{i}`, `ram{i}`,
+//! `nic{i}`; per data node `j`: `dnic{j}`, `raidr{j}` (read) and
+//! `raidw{j}` (write — the paper's RAID measures 400 read / 200 write);
+//! one shared `backplane`.
+//!
+//! The flow builders translate "node `i` reads/writes `D` MB on backend
+//! X" into weighted resource paths: striped PFS traffic puts weight `1/M`
+//! on every data node, HDFS replication puts weight `2/N` of remote
+//! copies on every disk, TLS splits reads between `ram{i}` and the PFS
+//! path at the residency ratio `f`.
+
+use super::engine::{FlowSpec, Resource};
+
+/// Storage backend being simulated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Hdfs,
+    Ofs,
+    /// Two-level with residency ratio `f` (1.0 = everything in memory).
+    Tls { f_pct: u8 },
+}
+
+impl BackendKind {
+    pub fn name(&self) -> String {
+        match self {
+            BackendKind::Hdfs => "hdfs".into(),
+            BackendKind::Ofs => "ofs".into(),
+            BackendKind::Tls { f_pct } => format!("tls(f={})", *f_pct as f64 / 100.0),
+        }
+    }
+}
+
+/// Device constants (MB/s) — defaults are the paper's measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConstants {
+    pub disk_mbs: f64,
+    pub raid_read_mbs: f64,
+    pub raid_write_mbs: f64,
+    pub ram_mbs: f64,
+    pub nic_mbs: f64,
+    pub backplane_mbs: f64,
+    /// Per-container TeraSort processing rate (calibrated so the HDFS
+    /// mapper ratio matches Figure 7; see DESIGN.md).
+    pub cpu_per_container_mbs: f64,
+    /// Reduce-phase CPU work per byte relative to map (k-way merge +
+    /// serialization; calibrated to Figure 7(g)'s 12-data-node point).
+    pub reduce_cpu_factor: f64,
+    /// Model the OS page cache absorbing HDFS *output* writes (§5.3
+    /// discusses exactly this effect for the write path; reducer output is
+    /// asynchronously flushed, so the reducer is not disk-bound on its own
+    /// writes). Input reads and mapper spills still hit the disk — the
+    /// experiment drops caches first and the spill set exceeds RAM.
+    pub hdfs_page_cache: bool,
+}
+
+impl Default for SimConstants {
+    fn default() -> Self {
+        use crate::config::presets::{PALMETTO, PAPER_CONSTANTS};
+        Self {
+            disk_mbs: PALMETTO.compute_disk_mbs,        // 60
+            raid_read_mbs: PALMETTO.data_raid_read_mbs, // 400
+            raid_write_mbs: PALMETTO.data_raid_write_mbs, // 200
+            ram_mbs: PAPER_CONSTANTS.ram_mbs,           // 6267
+            nic_mbs: PAPER_CONSTANTS.nic_mbs,           // 1170
+            backplane_mbs: 800_000.0,                   // 6.4 Tbps MLXe-32
+            cpu_per_container_mbs: 10.0,
+            reduce_cpu_factor: 1.4,
+            hdfs_page_cache: true,
+        }
+    }
+}
+
+/// Resource ids for one constructed cluster.
+pub struct ClusterSim {
+    pub n: usize,
+    pub m: usize,
+    pub constants: SimConstants,
+    pub resources: Vec<Resource>,
+    cpu0: usize,
+    disk0: usize,
+    ram0: usize,
+    nic0: usize,
+    dnic0: usize,
+    raidr0: usize,
+    raidw0: usize,
+    pub backplane: usize,
+}
+
+impl ClusterSim {
+    /// Build resources for `n` compute and `m` data nodes with
+    /// `containers` CPU slots per compute node.
+    pub fn new(n: usize, m: usize, containers: usize, constants: SimConstants) -> Self {
+        fn group(
+            resources: &mut Vec<Resource>,
+            count: usize,
+            f: impl Fn(usize) -> (String, f64),
+        ) -> usize {
+            let first = resources.len();
+            for k in 0..count {
+                let (name, capacity) = f(k);
+                resources.push(Resource { name, capacity });
+            }
+            first
+        }
+        let mut resources = Vec::new();
+        let cpu_cap = constants.cpu_per_container_mbs * containers as f64;
+        let cpu0 = group(&mut resources, n, |i| (format!("cpu{i}"), cpu_cap));
+        let disk0 = group(&mut resources, n, |i| (format!("disk{i}"), constants.disk_mbs));
+        let ram0 = group(&mut resources, n, |i| (format!("ram{i}"), constants.ram_mbs));
+        let nic0 = group(&mut resources, n, |i| (format!("nic{i}"), constants.nic_mbs));
+        let dnic0 = group(&mut resources, m, |j| (format!("dnic{j}"), constants.nic_mbs));
+        let raidr0 = group(&mut resources, m, |j| {
+            (format!("raidr{j}"), constants.raid_read_mbs)
+        });
+        let raidw0 = group(&mut resources, m, |j| {
+            (format!("raidw{j}"), constants.raid_write_mbs)
+        });
+        let backplane = group(&mut resources, 1, |_| {
+            ("backplane".to_string(), constants.backplane_mbs)
+        });
+        Self {
+            n,
+            m,
+            constants,
+            resources,
+            cpu0,
+            disk0,
+            ram0,
+            nic0,
+            dnic0,
+            raidr0,
+            raidw0,
+            backplane,
+        }
+    }
+
+    pub fn cpu(&self, i: usize) -> usize {
+        self.cpu0 + i
+    }
+    pub fn disk(&self, i: usize) -> usize {
+        self.disk0 + i
+    }
+    pub fn ram(&self, i: usize) -> usize {
+        self.ram0 + i
+    }
+    pub fn nic(&self, i: usize) -> usize {
+        self.nic0 + i
+    }
+    pub fn dnic(&self, j: usize) -> usize {
+        self.dnic0 + j
+    }
+    pub fn raid_read(&self, j: usize) -> usize {
+        self.raidr0 + j
+    }
+    pub fn raid_write(&self, j: usize) -> usize {
+        self.raidw0 + j
+    }
+
+    /// Striped PFS path for node `i` (direction picks raid read or write).
+    fn pfs_path(&self, i: usize, write: bool) -> Vec<(usize, f64)> {
+        let mut path = vec![(self.nic(i), 1.0), (self.backplane, 1.0)];
+        let w = 1.0 / self.m as f64;
+        for j in 0..self.m {
+            path.push((self.dnic(j), w));
+            path.push((
+                if write {
+                    self.raid_write(j)
+                } else {
+                    self.raid_read(j)
+                },
+                w,
+            ));
+        }
+        path
+    }
+
+    /// Input-read flows for a mapper on node `i` reading `d` MB.
+    pub fn read_flows(&self, backend: BackendKind, i: usize, d: f64) -> Vec<FlowSpec> {
+        match backend {
+            // HDFS with locality scheduling: local disk read
+            BackendKind::Hdfs => vec![FlowSpec {
+                bytes: d,
+                path: vec![(self.disk(i), 1.0)],
+                rate_cap: None,
+            }],
+            BackendKind::Ofs => vec![FlowSpec {
+                bytes: d,
+                path: self.pfs_path(i, false),
+                rate_cap: None,
+            }],
+            BackendKind::Tls { f_pct } => {
+                let f = f_pct as f64 / 100.0;
+                let mut flows = Vec::new();
+                if f > 0.0 {
+                    flows.push(FlowSpec {
+                        bytes: d * f,
+                        path: vec![(self.ram(i), 1.0)],
+                        rate_cap: None,
+                    });
+                }
+                if f < 1.0 {
+                    flows.push(FlowSpec {
+                        bytes: d * (1.0 - f),
+                        path: self.pfs_path(i, false),
+                        rate_cap: None,
+                    });
+                }
+                flows
+            }
+        }
+    }
+
+    /// Output-write flows for a reducer on node `i` writing `d` MB.
+    pub fn write_flows(&self, backend: BackendKind, i: usize, d: f64) -> Vec<FlowSpec> {
+        match backend {
+            // eq. (2): 1 local copy + 2 remote copies through the network,
+            // remote copies spread over the other nodes' disks. With the
+            // page cache on, the disks are absorbed (async flush) and only
+            // the synchronous network pipeline remains.
+            BackendKind::Hdfs => {
+                let mut path = vec![(self.nic(i), 2.0), (self.backplane, 2.0)];
+                if !self.constants.hdfs_page_cache {
+                    path.push((self.disk(i), 1.0));
+                    let others = (self.n - 1).max(1) as f64;
+                    for j in 0..self.n {
+                        if j != i {
+                            path.push((self.disk(j), 2.0 / others));
+                        }
+                    }
+                }
+                vec![FlowSpec {
+                    bytes: d,
+                    path,
+                    rate_cap: None,
+                }]
+            }
+            BackendKind::Ofs => vec![FlowSpec {
+                bytes: d,
+                path: self.pfs_path(i, true),
+                rate_cap: None,
+            }],
+            // mode (c): synchronous write to RAM and PFS in parallel —
+            // completion gated by the slower (PFS) leg, eq. (6)
+            BackendKind::Tls { .. } => vec![
+                FlowSpec {
+                    bytes: d,
+                    path: vec![(self.ram(i), 1.0)],
+                    rate_cap: None,
+                },
+                FlowSpec {
+                    bytes: d,
+                    path: self.pfs_path(i, true),
+                    rate_cap: None,
+                },
+            ],
+        }
+    }
+
+    /// Where a mapper spills its intermediate output: local disk for
+    /// HDFS/OFS deployments, the memory tier when running on TLS (the
+    /// Tachyon-as-intermediate configuration; see DESIGN.md).
+    pub fn spill_flow(&self, backend: BackendKind, i: usize, d: f64) -> FlowSpec {
+        match backend {
+            BackendKind::Tls { .. } => FlowSpec {
+                bytes: d,
+                path: vec![(self.ram(i), 1.0)],
+                rate_cap: None,
+            },
+            _ => FlowSpec {
+                bytes: d,
+                path: vec![(self.disk(i), 1.0)],
+                rate_cap: None,
+            },
+        }
+    }
+
+    /// CPU processing flow for `d` MB on node `i` (one container).
+    pub fn cpu_flow(&self, i: usize, d: f64) -> FlowSpec {
+        FlowSpec {
+            bytes: d,
+            path: vec![(self.cpu(i), 1.0)],
+            rate_cap: Some(self.constants.cpu_per_container_mbs),
+        }
+    }
+
+    /// Shuffle-read flow: reducer on node `i` pulls `d` MB spread across
+    /// all compute nodes' spill media.
+    pub fn shuffle_flow(&self, backend: BackendKind, i: usize, d: f64) -> FlowSpec {
+        let w = 1.0 / self.n as f64;
+        let mut path = vec![(self.nic(i), 1.0), (self.backplane, 1.0)];
+        for j in 0..self.n {
+            match backend {
+                BackendKind::Tls { .. } => path.push((self.ram(j), w)),
+                _ => path.push((self.disk(j), w)),
+            }
+        }
+        FlowSpec {
+            bytes: d,
+            path,
+            rate_cap: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{Simulator, Stage, Task};
+
+    fn one_stage(node: usize, flows: Vec<FlowSpec>) -> Task {
+        Task {
+            node,
+            stages: vec![Stage { flows }],
+        }
+    }
+
+    #[test]
+    fn resource_names_and_counts() {
+        let c = ClusterSim::new(3, 2, 4, SimConstants::default());
+        // 3×(cpu,disk,ram,nic) + 2×(dnic,raidr,raidw) + backplane
+        assert_eq!(c.resources.len(), 3 * 4 + 2 * 3 + 1);
+        assert_eq!(c.resources[c.cpu(1)].name, "cpu1");
+        assert_eq!(c.resources[c.raid_write(0)].name, "raidw0");
+        assert_eq!(c.resources[c.backplane].name, "backplane");
+        assert_eq!(c.resources[c.cpu(0)].capacity, 40.0); // 4 containers × 10
+    }
+
+    #[test]
+    fn ofs_read_matches_eq3() {
+        // N=16, M=2: per-node OFS read ≈ M·μ′_r/N = 50 MB/s (eq. 3)
+        let c = ClusterSim::new(16, 2, 1, SimConstants::default());
+        let sim = Simulator::new(c.resources.clone(), vec![1; 16]);
+        let d = 100.0;
+        let tasks: Vec<Task> = (0..16)
+            .map(|i| one_stage(i, c.read_flows(BackendKind::Ofs, i, d)))
+            .collect();
+        let out = sim.run(tasks).unwrap();
+        let per_node = d / out.makespan;
+        assert!((per_node - 50.0).abs() / 50.0 < 0.05, "{per_node}");
+    }
+
+    #[test]
+    fn ofs_write_matches_eq3() {
+        let c = ClusterSim::new(16, 2, 1, SimConstants::default());
+        let sim = Simulator::new(c.resources.clone(), vec![1; 16]);
+        let d = 100.0;
+        let tasks: Vec<Task> = (0..16)
+            .map(|i| one_stage(i, c.write_flows(BackendKind::Ofs, i, d)))
+            .collect();
+        let out = sim.run(tasks).unwrap();
+        let per_node = d / out.makespan;
+        // M·μ′_w/N = 2·200/16 = 25
+        assert!((per_node - 25.0).abs() / 25.0 < 0.05, "{per_node}");
+    }
+
+    #[test]
+    fn hdfs_write_matches_eq2() {
+        // eq. (2) models synchronous durable writes — page cache off
+        let constants = SimConstants {
+            hdfs_page_cache: false,
+            ..SimConstants::default()
+        };
+        let c = ClusterSim::new(8, 2, 1, constants);
+        let sim = Simulator::new(c.resources.clone(), vec![1; 8]);
+        let d = 100.0;
+        let tasks: Vec<Task> = (0..8)
+            .map(|i| one_stage(i, c.write_flows(BackendKind::Hdfs, i, d)))
+            .collect();
+        let out = sim.run(tasks).unwrap();
+        let per_node = d / out.makespan;
+        // μ/3 = 20 MB/s
+        assert!((per_node - 20.0).abs() / 20.0 < 0.25, "{per_node}");
+    }
+
+    #[test]
+    fn tls_read_fully_resident_is_ram_speed() {
+        let c = ClusterSim::new(4, 2, 1, SimConstants::default());
+        let sim = Simulator::new(c.resources.clone(), vec![1; 4]);
+        let d = 1000.0;
+        let tasks: Vec<Task> = (0..4)
+            .map(|i| one_stage(i, c.read_flows(BackendKind::Tls { f_pct: 100 }, i, d)))
+            .collect();
+        let out = sim.run(tasks).unwrap();
+        let per_node = d / out.makespan;
+        assert!(per_node > 6000.0, "{per_node} should be ≈ RAM speed");
+    }
+
+    #[test]
+    fn tls_read_mixed_matches_eq7() {
+        // f=0.5 at N=16,M=2: 1/(0.5/6267 + 0.5/50) ≈ 99.2 MB/s
+        let c = ClusterSim::new(16, 2, 1, SimConstants::default());
+        let sim = Simulator::new(c.resources.clone(), vec![2; 16]);
+        let d = 100.0;
+        let tasks: Vec<Task> = (0..16)
+            .map(|i| one_stage(i, c.read_flows(BackendKind::Tls { f_pct: 50 }, i, d)))
+            .collect();
+        let out = sim.run(tasks).unwrap();
+        let per_node = d / out.makespan;
+        let expect = crate::model::ClusterParams::palmetto().tls_read(0.5);
+        assert!(
+            (per_node - expect).abs() / expect < 0.10,
+            "sim {per_node} vs model {expect}"
+        );
+    }
+
+    #[test]
+    fn tls_write_bounded_by_pfs_leg() {
+        let c = ClusterSim::new(16, 2, 1, SimConstants::default());
+        let sim = Simulator::new(c.resources.clone(), vec![1; 16]);
+        let d = 100.0;
+        let tasks: Vec<Task> = (0..16)
+            .map(|i| one_stage(i, c.write_flows(BackendKind::Tls { f_pct: 100 }, i, d)))
+            .collect();
+        let out = sim.run(tasks).unwrap();
+        let per_node = d / out.makespan;
+        // eq. (6): same as OFS write ≈ 25
+        assert!((per_node - 25.0).abs() / 25.0 < 0.05, "{per_node}");
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(BackendKind::Hdfs.name(), "hdfs");
+        assert_eq!(BackendKind::Tls { f_pct: 20 }.name(), "tls(f=0.2)");
+    }
+}

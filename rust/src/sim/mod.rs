@@ -1,0 +1,29 @@
+//! Discrete-event cluster simulator — the stand-in for the paper's
+//! Palmetto testbed (see DESIGN.md §Substitutions).
+//!
+//! The paper's claims are about *bandwidth contention* between shared
+//! resources (disks, NICs, the switch backplane, RAM); the simulator
+//! models exactly that: a set of capacity-limited [`engine::Resource`]s,
+//! and flows that consume weighted capacity on a path of resources, with
+//! **max-min fair** progressive-filling rate allocation. Tasks are stage
+//! chains gated by per-node container slots (the paper's "16 containers
+//! per node").
+//!
+//! - [`engine`] — generic flow/stage/task event loop + utilization
+//!   timelines (Figure 7 a–e).
+//! - [`cluster`] — resource construction from the paper's measured
+//!   constants and per-backend flow path builders (HDFS / OFS / TLS).
+//! - [`terasort`] — the §5.3 workload: map and reduce phases over any
+//!   backend; produces phase times (Figure 7 f–g).
+//! - [`mountain`] — the §5.2 storage-mountain surface at paper scale
+//!   (Figure 6).
+
+pub mod cluster;
+pub mod engine;
+pub mod mountain;
+pub mod terasort;
+
+pub use cluster::{BackendKind, ClusterSim, SimConstants};
+pub use engine::{FlowSpec, SimResult, Simulator, Stage, Task};
+pub use mountain::{mountain_surface, MountainPoint};
+pub use terasort::{simulate_terasort, TerasortSimReport};

@@ -1,0 +1,177 @@
+//! The storage mountain (§5.2, Figure 6) at paper scale.
+//!
+//! Read throughput as a function of (data size, skip size) for the
+//! prototype two-level store: one compute node (16 GB Tachyon allocation,
+//! 1 MB app buffer) against one data node (12 TB OrangeFS, 4 MB transfer
+//! buffer).
+//!
+//! Model: each 1 MB application request costs `req/bw + lat × ceil(skip /
+//! buffer)` seconds on its tier — a skip larger than the tier's buffer
+//! forces extra positioning operations, which is why both ridges slope
+//! down past skip ≈ buffer, and OrangeFS (high per-operation latency)
+//! slopes much harder than Tachyon. Residency follows capacity:
+//! `f = min(1, mem_capacity / data_size)` — the cliff between the two
+//! ridges at 16 GB. Small data sizes pay a fixed per-request software
+//! overhead that drowns the I/O cost (the low-data droop the paper calls
+//! out).
+
+/// Tier and system constants for the mountain (defaults = §5 testbed).
+#[derive(Debug, Clone, Copy)]
+pub struct MountainParams {
+    /// Memory-tier capacity, bytes (paper: 16 GB).
+    pub mem_capacity: f64,
+    /// Memory-tier streaming bandwidth, MB/s.
+    pub mem_mbs: f64,
+    /// PFS streaming bandwidth seen by one client, MB/s.
+    pub pfs_mbs: f64,
+    /// Per-positioning-op latency of the memory tier, s.
+    pub mem_lat: f64,
+    /// Per-positioning-op latency of the PFS tier, s (network RTT + seek).
+    pub pfs_lat: f64,
+    /// Application request size, bytes (paper: 1 MB).
+    pub request: f64,
+    /// Memory-tier buffer, bytes (1 MB).
+    pub mem_buffer: f64,
+    /// PFS transfer buffer, bytes (4 MB).
+    pub pfs_buffer: f64,
+    /// Fixed software overhead per request, s (scheduling, serialization).
+    pub sw_overhead: f64,
+}
+
+impl Default for MountainParams {
+    fn default() -> Self {
+        Self {
+            mem_capacity: 16.0 * (1u64 << 30) as f64,
+            mem_mbs: 6267.0,
+            pfs_mbs: 400.0,
+            mem_lat: 8e-6,
+            pfs_lat: 2.5e-3,
+            request: (1u64 << 20) as f64,
+            mem_buffer: (1u64 << 20) as f64,
+            pfs_buffer: (4u64 << 20) as f64,
+            sw_overhead: 25e-6,
+        }
+    }
+}
+
+/// One surface sample.
+#[derive(Debug, Clone, Copy)]
+pub struct MountainPoint {
+    pub data_bytes: f64,
+    pub skip_bytes: f64,
+    /// Effective read throughput, MB/s.
+    pub throughput_mbs: f64,
+    /// Residency ratio used.
+    pub f: f64,
+}
+
+/// Seconds to serve one `request`-sized access on a tier.
+fn access_time(bw_mbs: f64, lat: f64, buffer: f64, request: f64, skip: f64) -> f64 {
+    let transfer = request / (bw_mbs * 1e6);
+    // positioning ops forced by the skip (0 when skip ≤ buffer slack)
+    let ops = if skip <= 0.0 {
+        0.0
+    } else {
+        (skip / buffer).ceil()
+    };
+    transfer + lat * (1.0 + ops)
+}
+
+/// Throughput of one (data size, skip) cell.
+pub fn mountain_point(p: &MountainParams, data_bytes: f64, skip_bytes: f64) -> MountainPoint {
+    let f = (p.mem_capacity / data_bytes).min(1.0);
+    let t_mem = access_time(p.mem_mbs, p.mem_lat, p.mem_buffer, p.request, skip_bytes);
+    let t_pfs = access_time(p.pfs_mbs, p.pfs_lat, p.pfs_buffer, p.request, skip_bytes);
+    // per paper eq. (7): harmonic mix weighted by residency + fixed
+    // software overhead per request
+    let per_req = f * t_mem + (1.0 - f) * t_pfs + p.sw_overhead;
+    // small data: fixed warmup/scheduling cost amortized over few requests
+    let reqs = (data_bytes / p.request).max(1.0);
+    let warmup = 0.05 / reqs; // 50 ms job overhead, spread
+    let throughput = p.request / 1e6 / (per_req + warmup);
+    MountainPoint {
+        data_bytes,
+        skip_bytes,
+        throughput_mbs: throughput,
+        f,
+    }
+}
+
+/// The full surface over the paper's axes: data 1–256 GB (powers of two),
+/// skip 0–64 MB (powers of two + 0).
+pub fn mountain_surface(p: &MountainParams) -> Vec<MountainPoint> {
+    let mut out = Vec::new();
+    let gib = (1u64 << 30) as f64;
+    for exp in 0..=8 {
+        let data = (1u64 << exp) as f64 * gib;
+        // skip = 0, 4 KiB .. 64 MiB
+        out.push(mountain_point(p, data, 0.0));
+        for sexp in 12..=26 {
+            out.push(mountain_point(p, data, (1u64 << sexp) as f64));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GIB: f64 = (1u64 << 30) as f64;
+    const MIB: f64 = (1u64 << 20) as f64;
+
+    #[test]
+    fn two_ridges_exist() {
+        let p = MountainParams::default();
+        // data ≤ 16 GB: Tachyon ridge (RAM-class throughput)
+        let high = mountain_point(&p, 8.0 * GIB, 0.0);
+        assert_eq!(high.f, 1.0);
+        assert!(high.throughput_mbs > 2000.0, "{}", high.throughput_mbs);
+        // data ≫ 16 GB: OrangeFS ridge
+        let low = mountain_point(&p, 256.0 * GIB, 0.0);
+        assert!(low.f < 0.07);
+        assert!(low.throughput_mbs < 500.0, "{}", low.throughput_mbs);
+        assert!(high.throughput_mbs / low.throughput_mbs > 5.0);
+    }
+
+    #[test]
+    fn slope_between_ridges_at_capacity() {
+        let p = MountainParams::default();
+        let t16 = mountain_point(&p, 16.0 * GIB, 0.0).throughput_mbs;
+        let t32 = mountain_point(&p, 32.0 * GIB, 0.0).throughput_mbs;
+        let t64 = mountain_point(&p, 64.0 * GIB, 0.0).throughput_mbs;
+        assert!(t16 > t32 && t32 > t64, "{t16} {t32} {t64}");
+    }
+
+    #[test]
+    fn skip_slopes_start_past_buffer() {
+        let p = MountainParams::default();
+        // Tachyon ridge: skip ≤ 1 MB buffer ≈ flat, then drops
+        let flat = mountain_point(&p, 4.0 * GIB, 0.5 * MIB).throughput_mbs;
+        let bent = mountain_point(&p, 4.0 * GIB, 16.0 * MIB).throughput_mbs;
+        assert!(bent < flat * 0.95, "{flat} → {bent}");
+        // OrangeFS ridge slopes much harder (latency dominates)
+        let oflat = mountain_point(&p, 256.0 * GIB, 0.0).throughput_mbs;
+        let obent = mountain_point(&p, 256.0 * GIB, 64.0 * MIB).throughput_mbs;
+        assert!(obent < oflat * 0.4, "{oflat} → {obent}");
+    }
+
+    #[test]
+    fn small_data_droops() {
+        let p = MountainParams::default();
+        let tiny = mountain_point(&p, 0.25 * GIB, 0.0).throughput_mbs;
+        let big = mountain_point(&p, 8.0 * GIB, 0.0).throughput_mbs;
+        assert!(tiny < big, "small data must pay fixed overheads: {tiny} vs {big}");
+    }
+
+    #[test]
+    fn surface_covers_paper_axes() {
+        let pts = mountain_surface(&MountainParams::default());
+        assert_eq!(pts.len(), 9 * 16);
+        let max_data = pts.iter().map(|p| p.data_bytes).fold(0.0, f64::max);
+        let max_skip = pts.iter().map(|p| p.skip_bytes).fold(0.0, f64::max);
+        assert_eq!(max_data, 256.0 * GIB);
+        assert_eq!(max_skip, 64.0 * MIB);
+        assert!(pts.iter().all(|p| p.throughput_mbs > 0.0));
+    }
+}

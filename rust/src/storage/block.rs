@@ -1,0 +1,184 @@
+//! Block abstraction: fixed-size logical blocks with checksums.
+//!
+//! The paper (§3.1, Figure 3): "an input file is stored in Tachyon as a set
+//! of fixed size logical blocks"; the PFS side stores stripes. This module
+//! owns the block math shared by the memory tier and the layout mapper.
+
+use crate::error::{Error, Result};
+
+/// Identifies one logical block of an object.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId {
+    /// Object key the block belongs to.
+    pub object: String,
+    /// Zero-based block index within the object.
+    pub index: u64,
+}
+
+impl BlockId {
+    pub fn new(object: impl Into<String>, index: u64) -> Self {
+        Self {
+            object: object.into(),
+            index,
+        }
+    }
+
+    /// Canonical storage key (used as the memstore map key).
+    pub fn storage_key(&self) -> String {
+        format!("{}#{}", self.object, self.index)
+    }
+}
+
+/// Geometry of an object split into fixed-size blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockGeometry {
+    pub object_size: u64,
+    pub block_size: u64,
+}
+
+impl BlockGeometry {
+    pub fn new(object_size: u64, block_size: u64) -> Result<Self> {
+        if block_size == 0 {
+            return Err(Error::InvalidArg("block_size must be > 0".into()));
+        }
+        Ok(Self {
+            object_size,
+            block_size,
+        })
+    }
+
+    /// Number of blocks (last may be partial). Zero-byte objects still
+    /// occupy zero blocks.
+    pub fn num_blocks(&self) -> u64 {
+        self.object_size.div_ceil(self.block_size)
+    }
+
+    /// Size of block `i`.
+    pub fn block_len(&self, i: u64) -> u64 {
+        debug_assert!(i < self.num_blocks() || self.object_size == 0);
+        let start = i * self.block_size;
+        (self.object_size - start).min(self.block_size)
+    }
+
+    /// Byte range `[start, end)` of block `i` within the object.
+    pub fn block_range(&self, i: u64) -> (u64, u64) {
+        let start = i * self.block_size;
+        (start, start + self.block_len(i))
+    }
+
+    /// Which blocks overlap the byte range `[offset, offset+len)`, clamped
+    /// to the object, with the in-block sub-ranges.
+    pub fn blocks_for_range(&self, offset: u64, len: u64) -> Vec<(u64, u64, u64)> {
+        let end = (offset + len).min(self.object_size);
+        if offset >= end {
+            return Vec::new();
+        }
+        let first = offset / self.block_size;
+        let last = (end - 1) / self.block_size;
+        (first..=last)
+            .map(|i| {
+                let (bs, be) = self.block_range(i);
+                let s = offset.max(bs) - bs;
+                let e = end.min(be) - bs;
+                (i, s, e)
+            })
+            .collect()
+    }
+}
+
+/// CRC32 checksum of a block (the PFS tier verifies on read; the paper's
+/// data-node-level erasure coding is out of scope, per-block CRC gives the
+/// equivalent corruption *detection* signal).
+pub fn checksum(data: &[u8]) -> u32 {
+    let mut h = crc32fast::Hasher::new();
+    h.update(data);
+    h.finalize()
+}
+
+/// Verify `data` against `stored`, or return [`Error::ChecksumMismatch`].
+pub fn verify_checksum(object: &str, data: &[u8], stored: u32) -> Result<()> {
+    let computed = checksum(data);
+    if computed != stored {
+        return Err(Error::ChecksumMismatch {
+            object: object.to_string(),
+            stored,
+            computed,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storage_key_is_unique_per_index() {
+        assert_ne!(
+            BlockId::new("a", 0).storage_key(),
+            BlockId::new("a", 1).storage_key()
+        );
+        assert_eq!(BlockId::new("x/y", 3).storage_key(), "x/y#3");
+    }
+
+    #[test]
+    fn geometry_block_counts() {
+        let g = BlockGeometry::new(100, 40).unwrap();
+        assert_eq!(g.num_blocks(), 3);
+        assert_eq!(g.block_len(0), 40);
+        assert_eq!(g.block_len(1), 40);
+        assert_eq!(g.block_len(2), 20);
+        assert_eq!(g.block_range(2), (80, 100));
+    }
+
+    #[test]
+    fn geometry_exact_multiple() {
+        let g = BlockGeometry::new(80, 40).unwrap();
+        assert_eq!(g.num_blocks(), 2);
+        assert_eq!(g.block_len(1), 40);
+    }
+
+    #[test]
+    fn geometry_empty_object() {
+        let g = BlockGeometry::new(0, 40).unwrap();
+        assert_eq!(g.num_blocks(), 0);
+        assert!(g.blocks_for_range(0, 10).is_empty());
+    }
+
+    #[test]
+    fn geometry_rejects_zero_block() {
+        assert!(BlockGeometry::new(10, 0).is_err());
+    }
+
+    #[test]
+    fn blocks_for_range_spans() {
+        let g = BlockGeometry::new(100, 40).unwrap();
+        // range [30, 90) touches blocks 0 (30..40), 1 (0..40), 2 (0..10)
+        assert_eq!(
+            g.blocks_for_range(30, 60),
+            vec![(0, 30, 40), (1, 0, 40), (2, 0, 10)]
+        );
+        // clamped at EOF
+        assert_eq!(g.blocks_for_range(95, 1000), vec![(2, 15, 20)]);
+        // empty past EOF
+        assert!(g.blocks_for_range(100, 5).is_empty());
+        assert!(g.blocks_for_range(40, 0).is_empty());
+    }
+
+    #[test]
+    fn checksum_detects_flip() {
+        let data = b"The quick brown fox".to_vec();
+        let c = checksum(&data);
+        verify_checksum("obj", &data, c).unwrap();
+        let mut bad = data.clone();
+        bad[3] ^= 1;
+        let err = verify_checksum("obj", &bad, c).unwrap_err();
+        assert!(matches!(err, Error::ChecksumMismatch { .. }));
+    }
+
+    #[test]
+    fn checksum_known_value() {
+        // IEEE CRC32 of "123456789" is 0xCBF43926
+        assert_eq!(checksum(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,165 @@
+//! I/O buffer management (§3.2).
+//!
+//! The paper uses two tuned buffers — 1 MB between the application and the
+//! memory tier, 4 MB between the memory tier and the PFS — "selected by
+//! performing a series of I/O throughput measurements" (our ablation bench
+//! reruns that series). [`BufferPool`] recycles those buffers so the read
+//! path allocates nothing in steady state, and [`copy_chunked`] is the
+//! shared chunked-transfer loop.
+
+use std::sync::Mutex;
+
+/// A recycling pool of fixed-size byte buffers.
+pub struct BufferPool {
+    buf_size: usize,
+    max_pooled: usize,
+    free: Mutex<Vec<Vec<u8>>>,
+}
+
+impl BufferPool {
+    /// Pool of `buf_size`-byte buffers, retaining at most `max_pooled`
+    /// free buffers (excess simply drop).
+    pub fn new(buf_size: usize, max_pooled: usize) -> Self {
+        Self {
+            buf_size,
+            max_pooled,
+            free: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn buf_size(&self) -> usize {
+        self.buf_size
+    }
+
+    /// Take a zero-length buffer with `buf_size` capacity.
+    pub fn take(&self) -> PooledBuf<'_> {
+        let buf = self
+            .free
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| Vec::with_capacity(self.buf_size));
+        PooledBuf { pool: self, buf }
+    }
+
+    fn give_back(&self, mut buf: Vec<u8>) {
+        if buf.capacity() < self.buf_size {
+            return; // someone grew/shrank it oddly; don't pool
+        }
+        buf.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_pooled {
+            free.push(buf);
+        }
+    }
+
+    /// Currently pooled free buffers (for tests/metrics).
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+/// RAII handle returning its buffer to the pool on drop.
+pub struct PooledBuf<'a> {
+    pool: &'a BufferPool,
+    buf: Vec<u8>,
+}
+
+impl std::ops::Deref for PooledBuf<'_> {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for PooledBuf<'_> {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for PooledBuf<'_> {
+    fn drop(&mut self) {
+        self.pool.give_back(std::mem::take(&mut self.buf));
+    }
+}
+
+/// Copy `src` into `dst` through chunks of `chunk` bytes, invoking
+/// `on_chunk(bytes_so_far)` after each chunk — the hook the throughput
+/// meters and the simulator's pacing use. Returns bytes copied.
+pub fn copy_chunked(
+    src: &[u8],
+    dst: &mut Vec<u8>,
+    chunk: usize,
+    mut on_chunk: impl FnMut(usize),
+) -> usize {
+    debug_assert!(chunk > 0);
+    dst.reserve(src.len());
+    let mut done = 0;
+    for piece in src.chunks(chunk.max(1)) {
+        dst.extend_from_slice(piece);
+        done += piece.len();
+        on_chunk(done);
+    }
+    done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_recycles_buffers() {
+        let pool = BufferPool::new(1024, 4);
+        {
+            let mut b = pool.take();
+            b.extend_from_slice(&[1, 2, 3]);
+            assert!(b.capacity() >= 1024);
+        }
+        assert_eq!(pool.pooled(), 1);
+        {
+            let b = pool.take();
+            assert!(b.is_empty(), "recycled buffer must be cleared");
+        }
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn pool_caps_retention() {
+        let pool = BufferPool::new(64, 2);
+        let a = pool.take();
+        let b = pool.take();
+        let c = pool.take();
+        drop(a);
+        drop(b);
+        drop(c);
+        assert_eq!(pool.pooled(), 2);
+    }
+
+    #[test]
+    fn copy_chunked_covers_all_bytes() {
+        let src: Vec<u8> = (0..=255u8).collect();
+        let mut dst = Vec::new();
+        let mut calls = Vec::new();
+        let n = copy_chunked(&src, &mut dst, 100, |done| calls.push(done));
+        assert_eq!(n, 256);
+        assert_eq!(dst, src);
+        assert_eq!(calls, vec![100, 200, 256]);
+    }
+
+    #[test]
+    fn copy_chunked_empty_source() {
+        let mut dst = Vec::new();
+        let n = copy_chunked(&[], &mut dst, 8, |_| panic!("no chunks expected"));
+        assert_eq!(n, 0);
+        assert!(dst.is_empty());
+    }
+
+    #[test]
+    fn copy_chunked_chunk_larger_than_source() {
+        let mut dst = Vec::new();
+        let n = copy_chunked(b"abc", &mut dst, 1 << 20, |d| assert_eq!(d, 3));
+        assert_eq!(n, 3);
+        assert_eq!(dst, b"abc");
+    }
+}

@@ -1,0 +1,209 @@
+//! Block eviction policies for the memory tier.
+//!
+//! §3.2: "caching reusable data to improve read performance with a matched
+//! data eviction policy, such as LRU/LFU". Both are implemented behind one
+//! trait so the ablation bench can swap them per run.
+
+use std::collections::{BTreeSet, HashMap};
+
+/// Eviction bookkeeping. The memstore calls the hooks; `victim` names the
+/// next block to drop when capacity is exceeded.
+pub trait EvictionPolicy: Send {
+    /// A key was inserted (counts as an access).
+    fn on_insert(&mut self, key: &str);
+    /// A key was read.
+    fn on_access(&mut self, key: &str);
+    /// A key was removed externally (delete or eviction completes).
+    fn on_remove(&mut self, key: &str);
+    /// Next victim, or `None` if empty. Must be a currently-tracked key.
+    fn victim(&mut self) -> Option<String>;
+    /// Policy name (for metrics/benches).
+    fn name(&self) -> &'static str;
+}
+
+/// Build a policy by name (`lru` | `lfu`).
+pub fn by_name(name: &str) -> Option<Box<dyn EvictionPolicy>> {
+    match name {
+        "lru" => Some(Box::new(Lru::new())),
+        "lfu" => Some(Box::new(Lfu::new())),
+        _ => None,
+    }
+}
+
+/// Least-recently-used: victims in order of last access.
+pub struct Lru {
+    tick: u64,
+    last_use: HashMap<String, u64>,
+    order: BTreeSet<(u64, String)>,
+}
+
+impl Lru {
+    pub fn new() -> Self {
+        Self {
+            tick: 0,
+            last_use: HashMap::new(),
+            order: BTreeSet::new(),
+        }
+    }
+
+    fn touch(&mut self, key: &str) {
+        self.tick += 1;
+        if let Some(old) = self.last_use.insert(key.to_string(), self.tick) {
+            self.order.remove(&(old, key.to_string()));
+        }
+        self.order.insert((self.tick, key.to_string()));
+    }
+}
+
+impl Default for Lru {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvictionPolicy for Lru {
+    fn on_insert(&mut self, key: &str) {
+        self.touch(key);
+    }
+    fn on_access(&mut self, key: &str) {
+        self.touch(key);
+    }
+    fn on_remove(&mut self, key: &str) {
+        if let Some(old) = self.last_use.remove(key) {
+            self.order.remove(&(old, key.to_string()));
+        }
+    }
+    fn victim(&mut self) -> Option<String> {
+        self.order.iter().next().map(|(_, k)| k.clone())
+    }
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+}
+
+/// Least-frequently-used with LRU tie-break.
+pub struct Lfu {
+    tick: u64,
+    state: HashMap<String, (u64, u64)>, // key -> (freq, last tick)
+    order: BTreeSet<(u64, u64, String)>, // (freq, last tick, key)
+}
+
+impl Lfu {
+    pub fn new() -> Self {
+        Self {
+            tick: 0,
+            state: HashMap::new(),
+            order: BTreeSet::new(),
+        }
+    }
+
+    fn bump(&mut self, key: &str, df: u64) {
+        self.tick += 1;
+        let (freq, last) = self.state.get(key).copied().unwrap_or((0, 0));
+        if freq != 0 || last != 0 || self.state.contains_key(key) {
+            self.order.remove(&(freq, last, key.to_string()));
+        }
+        let nf = freq + df;
+        self.state.insert(key.to_string(), (nf, self.tick));
+        self.order.insert((nf, self.tick, key.to_string()));
+    }
+}
+
+impl Default for Lfu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvictionPolicy for Lfu {
+    fn on_insert(&mut self, key: &str) {
+        self.bump(key, 1);
+    }
+    fn on_access(&mut self, key: &str) {
+        self.bump(key, 1);
+    }
+    fn on_remove(&mut self, key: &str) {
+        if let Some((f, l)) = self.state.remove(key) {
+            self.order.remove(&(f, l, key.to_string()));
+        }
+    }
+    fn victim(&mut self) -> Option<String> {
+        self.order.iter().next().map(|(_, _, k)| k.clone())
+    }
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves() {
+        assert_eq!(by_name("lru").unwrap().name(), "lru");
+        assert_eq!(by_name("lfu").unwrap().name(), "lfu");
+        assert!(by_name("fifo").is_none());
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut p = Lru::new();
+        p.on_insert("a");
+        p.on_insert("b");
+        p.on_insert("c");
+        p.on_access("a"); // now b is the oldest
+        assert_eq!(p.victim().unwrap(), "b");
+        p.on_remove("b");
+        assert_eq!(p.victim().unwrap(), "c");
+    }
+
+    #[test]
+    fn lru_remove_unknown_is_noop() {
+        let mut p = Lru::new();
+        p.on_remove("ghost");
+        assert!(p.victim().is_none());
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequent() {
+        let mut p = Lfu::new();
+        p.on_insert("hot");
+        p.on_insert("cold");
+        for _ in 0..5 {
+            p.on_access("hot");
+        }
+        assert_eq!(p.victim().unwrap(), "cold");
+        p.on_remove("cold");
+        assert_eq!(p.victim().unwrap(), "hot");
+    }
+
+    #[test]
+    fn lfu_ties_break_lru() {
+        let mut p = Lfu::new();
+        p.on_insert("first");
+        p.on_insert("second");
+        // equal frequency → older last-use goes first
+        assert_eq!(p.victim().unwrap(), "first");
+    }
+
+    #[test]
+    fn policies_track_reinsertion() {
+        for mut p in [by_name("lru").unwrap(), by_name("lfu").unwrap()] {
+            p.on_insert("x");
+            p.on_remove("x");
+            assert!(p.victim().is_none(), "{}", p.name());
+            p.on_insert("x");
+            assert_eq!(p.victim().unwrap(), "x");
+        }
+    }
+
+    #[test]
+    fn victim_is_stable_without_updates() {
+        let mut p = Lru::new();
+        p.on_insert("a");
+        p.on_insert("b");
+        assert_eq!(p.victim().unwrap(), "a");
+        assert_eq!(p.victim().unwrap(), "a");
+    }
+}

@@ -1,0 +1,337 @@
+//! HDFS-like baseline: replicated whole objects on compute-node local
+//! disks.
+//!
+//! Hadoop's write path ("one copy to local disk, two mirrored copies
+//! streamed to other nodes", §4.1) is reproduced structurally: `nodes`
+//! directories stand in for the compute nodes' single SATA disks, an
+//! object's *primary* replica lands on the node that wrote it, and
+//! `replication - 1` mirror copies go to other nodes. Reads prefer the
+//! local replica (Hadoop's locality scheduling); a read from a node
+//! without a replica counts as a remote read — the quantity the §4.1
+//! model charges network bandwidth for.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::storage::ObjectStore;
+use crate::util::pool::ThreadPool;
+use crate::util::rng::SplitMix64;
+
+/// Counters (note `bytes_written_physical` ≈ 3× logical — the paper's
+/// write-amplification argument).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HdfsStats {
+    pub bytes_written_logical: u64,
+    pub bytes_written_physical: u64,
+    pub bytes_read: u64,
+    pub local_reads: u64,
+    pub remote_reads: u64,
+}
+
+/// Replicated local-disk object store.
+pub struct HdfsLike {
+    node_dirs: Vec<PathBuf>,
+    replication: usize,
+    pool: Arc<ThreadPool>,
+    /// Node id this client "runs on" (for locality accounting).
+    pub local_node: usize,
+    logical: AtomicU64,
+    physical: AtomicU64,
+    read_bytes: AtomicU64,
+    local_reads: AtomicU64,
+    remote_reads: AtomicU64,
+}
+
+impl HdfsLike {
+    /// Open with `nodes` node directories and `replication` copies.
+    pub fn open(root: &Path, nodes: usize, replication: usize) -> Result<Self> {
+        if nodes == 0 {
+            return Err(Error::Config("hdfs needs at least one node".into()));
+        }
+        let replication = replication.clamp(1, nodes);
+        let mut node_dirs = Vec::with_capacity(nodes);
+        for n in 0..nodes {
+            let dir = root.join(format!("node{n}"));
+            fs::create_dir_all(&dir).map_err(|e| Error::io(&dir, e))?;
+            node_dirs.push(dir);
+        }
+        Ok(Self {
+            node_dirs,
+            replication,
+            pool: Arc::new(ThreadPool::new(replication.max(2))),
+            local_node: 0,
+            logical: AtomicU64::new(0),
+            physical: AtomicU64::new(0),
+            read_bytes: AtomicU64::new(0),
+            local_reads: AtomicU64::new(0),
+            remote_reads: AtomicU64::new(0),
+        })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.node_dirs.len()
+    }
+
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    pub fn stats(&self) -> HdfsStats {
+        HdfsStats {
+            bytes_written_logical: self.logical.load(Ordering::Relaxed),
+            bytes_written_physical: self.physical.load(Ordering::Relaxed),
+            bytes_read: self.read_bytes.load(Ordering::Relaxed),
+            local_reads: self.local_reads.load(Ordering::Relaxed),
+            remote_reads: self.remote_reads.load(Ordering::Relaxed),
+        }
+    }
+
+    fn enc(key: &str) -> String {
+        key.replace('%', "%25").replace('/', "%2F")
+    }
+
+    fn replica_path(&self, key: &str, node: usize) -> PathBuf {
+        self.node_dirs[node].join(format!("{}.blk", Self::enc(key)))
+    }
+
+    /// Replica placement: primary on `local_node`, mirrors deterministic
+    /// pseudo-random (keyed by object name, like HDFS's random target
+    /// choice but reproducible for tests).
+    pub fn replica_nodes(&self, key: &str) -> Vec<usize> {
+        let n = self.node_dirs.len();
+        let mut nodes = vec![self.local_node];
+        let mut rng = SplitMix64::new(key.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64)));
+        while nodes.len() < self.replication {
+            let cand = (rng.next_u64() % n as u64) as usize;
+            if !nodes.contains(&cand) {
+                nodes.push(cand);
+            }
+        }
+        nodes
+    }
+
+    fn find_replica(&self, key: &str) -> Option<usize> {
+        // prefer local
+        if self.replica_path(key, self.local_node).exists() {
+            return Some(self.local_node);
+        }
+        (0..self.node_dirs.len()).find(|&n| self.replica_path(key, n).exists())
+    }
+}
+
+impl ObjectStore for HdfsLike {
+    fn write(&self, key: &str, data: &[u8]) -> Result<()> {
+        let replicas = self.replica_nodes(key);
+        let paths: Vec<PathBuf> = replicas
+            .iter()
+            .map(|&n| self.replica_path(key, n))
+            .collect();
+        let payload: Arc<(Vec<PathBuf>, Vec<u8>)> = Arc::new((paths, data.to_vec()));
+        let p2 = Arc::clone(&payload);
+        // synchronous pipeline: all replicas must land (Hadoop default)
+        let results = self
+            .pool
+            .map(payload.0.len(), move |i| {
+                let path = &p2.0[i];
+                fs::write(path, &p2.1).map_err(|e| Error::io(path, e))
+            })
+            .map_err(Error::Job)?;
+        for r in results {
+            r?;
+        }
+        self.logical.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.physical
+            .fetch_add((data.len() * self.replication) as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn read(&self, key: &str) -> Result<Vec<u8>> {
+        let node = self
+            .find_replica(key)
+            .ok_or_else(|| Error::NotFound(key.to_string()))?;
+        if node == self.local_node {
+            self.local_reads.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.remote_reads.fetch_add(1, Ordering::Relaxed);
+        }
+        let path = self.replica_path(key, node);
+        let data = fs::read(&path).map_err(|e| Error::io(&path, e))?;
+        self.read_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        use std::io::{Read, Seek, SeekFrom};
+        let node = self
+            .find_replica(key)
+            .ok_or_else(|| Error::NotFound(key.to_string()))?;
+        if node == self.local_node {
+            self.local_reads.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.remote_reads.fetch_add(1, Ordering::Relaxed);
+        }
+        let path = self.replica_path(key, node);
+        let mut f = fs::File::open(&path).map_err(|e| Error::io(&path, e))?;
+        let size = f.metadata().map_err(|e| Error::io(&path, e))?.len();
+        let end = (offset + len as u64).min(size);
+        if offset >= end {
+            return Ok(Vec::new());
+        }
+        f.seek(SeekFrom::Start(offset)).map_err(|e| Error::io(&path, e))?;
+        let mut buf = vec![0u8; (end - offset) as usize];
+        f.read_exact(&mut buf).map_err(|e| Error::io(&path, e))?;
+        self.read_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        Ok(buf)
+    }
+
+    fn size(&self, key: &str) -> Result<u64> {
+        let node = self
+            .find_replica(key)
+            .ok_or_else(|| Error::NotFound(key.to_string()))?;
+        let path = self.replica_path(key, node);
+        Ok(fs::metadata(&path).map_err(|e| Error::io(&path, e))?.len())
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.find_replica(key).is_some()
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        for n in 0..self.node_dirs.len() {
+            let _ = fs::remove_file(self.replica_path(key, n));
+        }
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        let mut keys = std::collections::BTreeSet::new();
+        for dir in &self.node_dirs {
+            if let Ok(entries) = fs::read_dir(dir) {
+                for e in entries.flatten() {
+                    let name = e.file_name().to_string_lossy().into_owned();
+                    if let Some(enc) = name.strip_suffix(".blk") {
+                        let key = enc.replace("%2F", "/").replace("%25", "%");
+                        if key.starts_with(prefix) {
+                            keys.insert(key);
+                        }
+                    }
+                }
+            }
+        }
+        keys.into_iter().collect()
+    }
+
+    fn kind(&self) -> &'static str {
+        "hdfs"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::TempDir;
+
+    #[test]
+    fn write_creates_replicas() {
+        let dir = TempDir::new("hdfs").unwrap();
+        let h = HdfsLike::open(dir.path(), 5, 3).unwrap();
+        h.write("obj", b"payload").unwrap();
+        let copies = (0..5)
+            .filter(|&n| h.replica_path("obj", n).exists())
+            .count();
+        assert_eq!(copies, 3);
+        // primary is local
+        assert!(h.replica_path("obj", 0).exists());
+        let s = h.stats();
+        assert_eq!(s.bytes_written_logical, 7);
+        assert_eq!(s.bytes_written_physical, 21);
+    }
+
+    #[test]
+    fn replication_clamped_to_nodes() {
+        let dir = TempDir::new("hdfs").unwrap();
+        let h = HdfsLike::open(dir.path(), 2, 3).unwrap();
+        assert_eq!(h.replication(), 2);
+        h.write("o", b"x").unwrap();
+    }
+
+    #[test]
+    fn read_prefers_local_replica() {
+        let dir = TempDir::new("hdfs").unwrap();
+        let h = HdfsLike::open(dir.path(), 4, 2).unwrap();
+        h.write("a", b"data").unwrap();
+        assert_eq!(h.read("a").unwrap(), b"data");
+        let s = h.stats();
+        assert_eq!((s.local_reads, s.remote_reads), (1, 0));
+    }
+
+    #[test]
+    fn remote_read_counted_when_local_missing() {
+        let dir = TempDir::new("hdfs").unwrap();
+        let mut h = HdfsLike::open(dir.path(), 4, 2).unwrap();
+        h.write("a", b"data").unwrap();
+        // remove the local copy → read must go "remote"
+        fs::remove_file(h.replica_path("a", 0)).unwrap();
+        assert_eq!(h.read("a").unwrap(), b"data");
+        assert_eq!(h.stats().remote_reads, 1);
+        // a different local node also reads remotely
+        h.local_node = 3;
+        let _ = h.read("a");
+        assert!(h.stats().remote_reads >= 1);
+    }
+
+    #[test]
+    fn replica_placement_deterministic_and_distinct() {
+        let dir = TempDir::new("hdfs").unwrap();
+        let h = HdfsLike::open(dir.path(), 8, 3).unwrap();
+        let a = h.replica_nodes("some/object");
+        let b = h.replica_nodes("some/object");
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "replicas must be on distinct nodes");
+    }
+
+    #[test]
+    fn read_range_and_size() {
+        let dir = TempDir::new("hdfs").unwrap();
+        let h = HdfsLike::open(dir.path(), 3, 2).unwrap();
+        h.write("r", b"0123456789").unwrap();
+        assert_eq!(h.read_range("r", 3, 4).unwrap(), b"3456");
+        assert_eq!(h.read_range("r", 8, 100).unwrap(), b"89");
+        assert_eq!(h.read_range("r", 20, 5).unwrap(), b"");
+        assert_eq!(h.size("r").unwrap(), 10);
+    }
+
+    #[test]
+    fn delete_removes_all_replicas() {
+        let dir = TempDir::new("hdfs").unwrap();
+        let h = HdfsLike::open(dir.path(), 4, 3).unwrap();
+        h.write("d", b"x").unwrap();
+        h.delete("d").unwrap();
+        assert!(!h.exists("d"));
+        for n in 0..4 {
+            assert!(!h.replica_path("d", n).exists());
+        }
+    }
+
+    #[test]
+    fn list_dedups_across_replicas() {
+        let dir = TempDir::new("hdfs").unwrap();
+        let h = HdfsLike::open(dir.path(), 4, 3).unwrap();
+        h.write("in/p0", b"a").unwrap();
+        h.write("in/p1", b"b").unwrap();
+        assert_eq!(h.list("in/"), vec!["in/p0", "in/p1"]);
+    }
+
+    #[test]
+    fn missing_object_errors() {
+        let dir = TempDir::new("hdfs").unwrap();
+        let h = HdfsLike::open(dir.path(), 2, 1).unwrap();
+        assert!(matches!(h.read("ghost"), Err(Error::NotFound(_))));
+    }
+}

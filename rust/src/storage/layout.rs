@@ -1,0 +1,207 @@
+//! Data layout mapping between the memory tier's logical blocks and the
+//! PFS tier's stripes (the paper's §3.1 / Figure 3).
+//!
+//! A block of `block_size` bytes maps onto `block_size / stripe_size`
+//! stripes distributed round-robin over the PFS servers. Getting this
+//! mapping right is what the paper's "hints" tune: a block should spread
+//! across *all* servers so a single block read engages every data node.
+
+use crate::error::{Error, Result};
+
+/// Striping geometry of one object on the PFS tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StripeLayout {
+    /// Stripe unit in bytes (paper default 64 MB at scale).
+    pub stripe_size: u64,
+    /// Number of PFS servers the object spreads over.
+    pub servers: usize,
+}
+
+impl StripeLayout {
+    pub fn new(stripe_size: u64, servers: usize) -> Result<Self> {
+        if stripe_size == 0 {
+            return Err(Error::InvalidArg("stripe_size must be > 0".into()));
+        }
+        if servers == 0 {
+            return Err(Error::InvalidArg("servers must be > 0".into()));
+        }
+        Ok(Self {
+            stripe_size,
+            servers,
+        })
+    }
+
+    /// Total stripes an object of `size` bytes occupies.
+    pub fn num_stripes(&self, size: u64) -> u64 {
+        size.div_ceil(self.stripe_size)
+    }
+
+    /// Server that stores stripe `s` (round-robin — the paper's §5.1
+    /// "evenly distributed across 2 data nodes with round-robin fashion").
+    pub fn server_of(&self, stripe: u64) -> usize {
+        (stripe % self.servers as u64) as usize
+    }
+
+    /// Index of stripe `s` within its server's datafile.
+    pub fn local_index(&self, stripe: u64) -> u64 {
+        stripe / self.servers as u64
+    }
+
+    /// Map a byte range `[offset, offset+len)` of an object of `size`
+    /// bytes to per-stripe segments `(stripe, server, local_off, seg_len)`,
+    /// where `local_off` is the offset inside that server's datafile.
+    pub fn map_range(&self, size: u64, offset: u64, len: u64) -> Vec<StripeSegment> {
+        let end = (offset + len).min(size);
+        if offset >= end {
+            return Vec::new();
+        }
+        let first = offset / self.stripe_size;
+        let last = (end - 1) / self.stripe_size;
+        (first..=last)
+            .map(|s| {
+                let stripe_start = s * self.stripe_size;
+                let seg_start = offset.max(stripe_start);
+                let seg_end = end.min(stripe_start + self.stripe_size);
+                StripeSegment {
+                    stripe: s,
+                    server: self.server_of(s),
+                    local_offset: self.local_index(s) * self.stripe_size
+                        + (seg_start - stripe_start),
+                    object_offset: seg_start,
+                    len: seg_end - seg_start,
+                }
+            })
+            .collect()
+    }
+
+    /// Bytes of an object of `size` living on `server` (capacity planning
+    /// + the load-balance property test).
+    pub fn server_bytes(&self, size: u64, server: usize) -> u64 {
+        let mut total = 0;
+        for s in 0..self.num_stripes(size) {
+            if self.server_of(s) == server {
+                total += (size - s * self.stripe_size).min(self.stripe_size);
+            }
+        }
+        total
+    }
+
+    /// How many distinct servers a single `block_size` block touches —
+    /// the §3.1 tuning metric (ideal: min(block/stripe, servers)).
+    pub fn servers_per_block(&self, block_size: u64) -> usize {
+        let stripes = self.num_stripes(block_size).min(self.servers as u64);
+        stripes as usize
+    }
+}
+
+/// One contiguous piece of a mapped range on one server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StripeSegment {
+    /// Global stripe index within the object.
+    pub stripe: u64,
+    /// Server owning the stripe.
+    pub server: usize,
+    /// Byte offset inside the server's datafile.
+    pub local_offset: u64,
+    /// Byte offset inside the object.
+    pub object_offset: u64,
+    /// Segment length in bytes.
+    pub len: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry_block_spans_both_servers() {
+        // §5.1: 512 MB block, 64 MB stripes, 2 data nodes → 8 chunks, both
+        // servers engaged
+        let l = StripeLayout::new(64 << 20, 2).unwrap();
+        assert_eq!(l.num_stripes(512 << 20), 8);
+        assert_eq!(l.servers_per_block(512 << 20), 2);
+        let segs = l.map_range(512 << 20, 0, 512 << 20);
+        assert_eq!(segs.len(), 8);
+        let s0: u64 = segs.iter().filter(|s| s.server == 0).map(|s| s.len).sum();
+        let s1: u64 = segs.iter().filter(|s| s.server == 1).map(|s| s.len).sum();
+        assert_eq!(s0, s1); // perfect balance
+    }
+
+    #[test]
+    fn round_robin_placement() {
+        let l = StripeLayout::new(10, 3).unwrap();
+        assert_eq!(l.server_of(0), 0);
+        assert_eq!(l.server_of(1), 1);
+        assert_eq!(l.server_of(2), 2);
+        assert_eq!(l.server_of(3), 0);
+        assert_eq!(l.local_index(0), 0);
+        assert_eq!(l.local_index(3), 1);
+        assert_eq!(l.local_index(7), 2);
+    }
+
+    #[test]
+    fn map_range_partial_stripes() {
+        let l = StripeLayout::new(10, 2).unwrap();
+        // object of 25 bytes: stripes 0(srv0) 1(srv1) 2(srv0, 5 bytes)
+        let segs = l.map_range(25, 5, 15);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0], StripeSegment { stripe: 0, server: 0, local_offset: 5, object_offset: 5, len: 5 });
+        assert_eq!(segs[1], StripeSegment { stripe: 1, server: 1, local_offset: 0, object_offset: 10, len: 10 });
+        // clamp at object end
+        let segs = l.map_range(25, 20, 100);
+        assert_eq!(segs, vec![StripeSegment { stripe: 2, server: 0, local_offset: 10, object_offset: 20, len: 5 }]);
+    }
+
+    #[test]
+    fn map_range_empty_cases() {
+        let l = StripeLayout::new(10, 2).unwrap();
+        assert!(l.map_range(25, 25, 10).is_empty());
+        assert!(l.map_range(25, 5, 0).is_empty());
+        assert!(l.map_range(0, 0, 10).is_empty());
+    }
+
+    #[test]
+    fn segments_cover_range_exactly() {
+        let l = StripeLayout::new(7, 3).unwrap();
+        let size = 100u64;
+        for (off, len) in [(0, 100), (1, 98), (13, 7), (93, 20), (0, 1)] {
+            let segs = l.map_range(size, off, len);
+            let covered: u64 = segs.iter().map(|s| s.len).sum();
+            let expect = (off + len).min(size).saturating_sub(off);
+            assert_eq!(covered, expect, "off={off} len={len}");
+            // contiguous in object space
+            let mut cur = off;
+            for s in &segs {
+                assert_eq!(s.object_offset, cur);
+                cur += s.len;
+            }
+        }
+    }
+
+    #[test]
+    fn server_bytes_sums_to_object() {
+        let l = StripeLayout::new(8, 3).unwrap();
+        let size = 1000u64;
+        let total: u64 = (0..3).map(|s| l.server_bytes(size, s)).sum();
+        assert_eq!(total, size);
+        // balance within one stripe unit
+        for s in 0..3 {
+            let b = l.server_bytes(size, s);
+            assert!((b as i64 - (size / 3) as i64).unsigned_abs() <= 8 * 2);
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_layouts() {
+        assert!(StripeLayout::new(0, 2).is_err());
+        assert!(StripeLayout::new(8, 0).is_err());
+    }
+
+    #[test]
+    fn servers_per_block_tuning_metric() {
+        let l = StripeLayout::new(64, 4).unwrap();
+        assert_eq!(l.servers_per_block(64), 1); // one stripe: bad spread
+        assert_eq!(l.servers_per_block(256), 4); // engages all servers
+        assert_eq!(l.servers_per_block(1024), 4); // capped at server count
+    }
+}

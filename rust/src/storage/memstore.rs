@@ -1,0 +1,330 @@
+//! The in-memory storage tier (the paper's Tachyon).
+//!
+//! A capacity-bounded block store: values are `Arc<[u8]>` so reads are
+//! zero-copy, eviction runs under the same short critical section as the
+//! insert that overflowed, and hit/miss/eviction counters feed the
+//! Figure-6/ablation benches.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::storage::eviction::{self, EvictionPolicy};
+
+/// Snapshot of the tier's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub inserts: u64,
+    pub used: u64,
+    pub capacity: u64,
+}
+
+impl MemStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Inner {
+    map: HashMap<String, Arc<[u8]>>,
+    policy: Box<dyn EvictionPolicy>,
+    used: u64,
+}
+
+/// Capacity-bounded in-memory block store with pluggable eviction.
+pub struct MemStore {
+    inner: Mutex<Inner>,
+    capacity: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    inserts: AtomicU64,
+}
+
+impl MemStore {
+    /// `capacity` bytes, `policy` = `"lru"` | `"lfu"`.
+    pub fn new(capacity: u64, policy: &str) -> Result<Self> {
+        let policy = eviction::by_name(policy)
+            .ok_or_else(|| Error::Config(format!("unknown eviction policy `{policy}`")))?;
+        Ok(Self {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                policy,
+                used: 0,
+            }),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+        })
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Insert a block, evicting per policy until it fits. Returns the
+    /// evicted `(key, bytes)` pairs so the caller (the two-level store)
+    /// can spill un-persisted victims to the PFS before the bytes are
+    /// forgotten.
+    ///
+    /// A block larger than the whole tier is rejected with
+    /// [`Error::OverCapacity`] — the paper's answer to that case is the
+    /// PFS tier, not the memory tier.
+    pub fn put(&self, key: &str, data: Arc<[u8]>) -> Result<Vec<(String, Arc<[u8]>)>> {
+        let len = data.len() as u64;
+        if len > self.capacity {
+            return Err(Error::OverCapacity {
+                need: len,
+                capacity: self.capacity,
+            });
+        }
+        let mut g = self.inner.lock().unwrap();
+        let mut evicted = Vec::new();
+        // replace-in-place frees the old bytes first
+        if let Some(old) = g.map.remove(key) {
+            g.used -= old.len() as u64;
+            g.policy.on_remove(key);
+        }
+        while g.used + len > self.capacity {
+            let victim = g
+                .policy
+                .victim()
+                .expect("used > 0 implies a tracked victim");
+            let bytes = g.map.remove(&victim).expect("policy tracks live keys");
+            g.used -= bytes.len() as u64;
+            g.policy.on_remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            evicted.push((victim, bytes));
+        }
+        g.map.insert(key.to_string(), data);
+        g.used += len;
+        g.policy.on_insert(key);
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        Ok(evicted)
+    }
+
+    /// Fetch a block (recording a hit or miss and a policy access).
+    pub fn get(&self, key: &str) -> Option<Arc<[u8]>> {
+        let mut g = self.inner.lock().unwrap();
+        match g.map.get(key).cloned() {
+            Some(v) => {
+                g.policy.on_access(key);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Peek without touching eviction state or counters (used by tests and
+    /// the checkpointer).
+    pub fn peek(&self, key: &str) -> Option<Arc<[u8]>> {
+        self.inner.lock().unwrap().map.get(key).cloned()
+    }
+
+    /// Whether the key is currently resident.
+    pub fn contains(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().map.contains_key(key)
+    }
+
+    /// Remove a block if present; returns whether it was.
+    pub fn remove(&self, key: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.map.remove(key) {
+            Some(bytes) => {
+                g.used -= bytes.len() as u64;
+                g.policy.on_remove(key);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Resident keys with `prefix`, sorted.
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        let g = self.inner.lock().unwrap();
+        let mut keys: Vec<String> = g
+            .map
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        keys.sort();
+        keys
+    }
+
+    /// Bytes currently resident.
+    pub fn used(&self) -> u64 {
+        self.inner.lock().unwrap().used
+    }
+
+    pub fn stats(&self) -> MemStats {
+        MemStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            used: self.used(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bytes(n: usize, fill: u8) -> Arc<[u8]> {
+        vec![fill; n].into()
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let m = MemStore::new(1024, "lru").unwrap();
+        m.put("a", bytes(10, 1)).unwrap();
+        assert_eq!(&m.get("a").unwrap()[..], &[1u8; 10][..]);
+        assert_eq!(m.used(), 10);
+        assert!(m.contains("a"));
+        assert!(!m.contains("b"));
+    }
+
+    #[test]
+    fn capacity_eviction_lru_order() {
+        let m = MemStore::new(100, "lru").unwrap();
+        m.put("a", bytes(40, 0)).unwrap();
+        m.put("b", bytes(40, 0)).unwrap();
+        let _ = m.get("a"); // b becomes LRU
+        let evicted = m.put("c", bytes(40, 0)).unwrap();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].0, "b");
+        assert_eq!(evicted[0].1.len(), 40); // victim bytes travel with it
+        assert!(m.contains("a") && m.contains("c"));
+        assert_eq!(m.used(), 80);
+        assert_eq!(m.stats().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_block_rejected() {
+        let m = MemStore::new(100, "lru").unwrap();
+        let err = m.put("big", bytes(101, 0)).unwrap_err();
+        assert!(matches!(err, Error::OverCapacity { .. }));
+        assert_eq!(m.used(), 0);
+    }
+
+    #[test]
+    fn exact_fit_allowed() {
+        let m = MemStore::new(100, "lru").unwrap();
+        m.put("x", bytes(100, 7)).unwrap();
+        assert_eq!(m.used(), 100);
+        // replacing with same size evicts nothing
+        assert!(m.put("x", bytes(100, 8)).unwrap().is_empty());
+        assert_eq!(m.get("x").unwrap()[0], 8);
+    }
+
+    #[test]
+    fn replace_updates_accounting() {
+        let m = MemStore::new(100, "lru").unwrap();
+        m.put("k", bytes(60, 1)).unwrap();
+        m.put("k", bytes(20, 2)).unwrap();
+        assert_eq!(m.used(), 20);
+        assert_eq!(m.get("k").unwrap().len(), 20);
+    }
+
+    #[test]
+    fn multi_eviction_for_large_insert() {
+        let m = MemStore::new(100, "lru").unwrap();
+        m.put("a", bytes(30, 0)).unwrap();
+        m.put("b", bytes(30, 0)).unwrap();
+        m.put("c", bytes(30, 0)).unwrap();
+        let evicted = m.put("d", bytes(90, 0)).unwrap();
+        assert_eq!(evicted.len(), 3);
+        assert_eq!(m.used(), 90);
+    }
+
+    #[test]
+    fn hit_miss_counters() {
+        let m = MemStore::new(100, "lfu").unwrap();
+        m.put("a", bytes(10, 0)).unwrap();
+        let _ = m.get("a");
+        let _ = m.get("a");
+        let _ = m.get("nope");
+        let s = m.stats();
+        assert_eq!((s.hits, s.misses), (2, 1));
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lfu_keeps_hot_blocks() {
+        let m = MemStore::new(100, "lfu").unwrap();
+        m.put("hot", bytes(50, 0)).unwrap();
+        for _ in 0..10 {
+            let _ = m.get("hot");
+        }
+        m.put("cold", bytes(50, 0)).unwrap();
+        let evicted = m.put("new", bytes(50, 0)).unwrap();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].0, "cold");
+        assert!(m.contains("hot"));
+    }
+
+    #[test]
+    fn peek_does_not_count() {
+        let m = MemStore::new(100, "lru").unwrap();
+        m.put("a", bytes(10, 0)).unwrap();
+        let _ = m.peek("a");
+        let s = m.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+    }
+
+    #[test]
+    fn remove_frees_space() {
+        let m = MemStore::new(100, "lru").unwrap();
+        m.put("a", bytes(70, 0)).unwrap();
+        assert!(m.remove("a"));
+        assert!(!m.remove("a"));
+        assert_eq!(m.used(), 0);
+        m.put("b", bytes(100, 0)).unwrap(); // fits again
+    }
+
+    #[test]
+    fn list_filters_and_sorts() {
+        let m = MemStore::new(1000, "lru").unwrap();
+        for k in ["x#2", "x#0", "y#0", "x#1"] {
+            m.put(k, bytes(1, 0)).unwrap();
+        }
+        assert_eq!(m.list("x#"), vec!["x#0", "x#1", "x#2"]);
+        assert_eq!(m.list("z"), Vec::<String>::new());
+    }
+
+    #[test]
+    fn concurrent_puts_respect_capacity() {
+        let m = Arc::new(MemStore::new(1000, "lru").unwrap());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    m.put(&format!("t{t}-{i}"), bytes(64, t as u8)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(m.used() <= 1000, "used={} cap=1000", m.used());
+    }
+}

@@ -1,0 +1,93 @@
+//! Storage engines: the paper's two-level storage plus every baseline.
+//!
+//! - [`memstore`] — the in-memory tier (the paper's **Tachyon**): block
+//!   store with capacity accounting and pluggable LRU/LFU eviction.
+//! - [`pfs`] — the parallel-FS tier (the paper's **OrangeFS**): objects
+//!   striped round-robin across server directories, with layout hints.
+//! - [`hdfs`] — the baseline: replicated whole blocks on "compute node"
+//!   local disks (Hadoop's 1 local + N−1 remote copies).
+//! - [`tls`] — the contribution: the two-level store combining the memory
+//!   tier with the PFS tier under the paper's three write modes and three
+//!   read modes (Figure 4), dual I/O buffers (§3.2), and block↔stripe
+//!   layout mapping (Figure 3, [`layout`]).
+//!
+//! All engines implement [`ObjectStore`], so MapReduce jobs and benches are
+//! generic over the backend — exactly how the paper swaps HDFS / OrangeFS /
+//! two-level under the same TeraSort workload.
+
+pub mod block;
+pub mod buffer;
+pub mod eviction;
+pub mod hdfs;
+pub mod layout;
+pub mod memstore;
+pub mod pfs;
+pub mod tls;
+
+use crate::error::Result;
+
+/// The paper's write modes (Figure 4 a–c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum WriteMode {
+    /// (a) data lands in the memory tier only (fastest, no persistence
+    /// until a checkpoint runs).
+    MemOnly,
+    /// (b) bypass the memory tier, write straight to the PFS.
+    Bypass,
+    /// (c) synchronous write-through to memory tier **and** PFS — the mode
+    /// the paper models and evaluates.
+    #[default]
+    WriteThrough,
+}
+
+/// The paper's read modes (Figure 4 d–f).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ReadMode {
+    /// (d) memory tier only; error if a block was evicted.
+    MemOnly,
+    /// (e) PFS directly, without caching into the memory tier.
+    Bypass,
+    /// (f) the primary pattern: memory tier first, fall back to the PFS
+    /// and cache what was fetched (priority-based read policy, §3.2).
+    #[default]
+    TwoLevel,
+}
+
+/// Minimal object-store interface every backend implements.
+///
+/// Objects are immutable once written (the Hadoop write-once-read-many
+/// model the paper assumes); `write` to an existing key replaces it.
+pub trait ObjectStore: Send + Sync {
+    /// Store `data` under `key`.
+    fn write(&self, key: &str, data: &[u8]) -> Result<()>;
+
+    /// Fetch the whole object.
+    fn read(&self, key: &str) -> Result<Vec<u8>>;
+
+    /// Fetch `len` bytes starting at `offset` (reads clamp at EOF).
+    fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>>;
+
+    /// Object size in bytes.
+    fn size(&self, key: &str) -> Result<u64>;
+
+    /// Whether `key` exists.
+    fn exists(&self, key: &str) -> bool;
+
+    /// Remove an object (idempotent: missing keys are not an error).
+    fn delete(&self, key: &str) -> Result<()>;
+
+    /// Keys starting with `prefix`, sorted.
+    fn list(&self, prefix: &str) -> Vec<String>;
+
+    /// Human name for logs/benches.
+    fn kind(&self) -> &'static str;
+}
+
+/// Convenience: total bytes under a prefix.
+pub fn prefix_bytes(store: &dyn ObjectStore, prefix: &str) -> Result<u64> {
+    let mut total = 0;
+    for key in store.list(prefix) {
+        total += store.size(&key)?;
+    }
+    Ok(total)
+}

@@ -1,0 +1,543 @@
+//! The parallel-file-system tier (the paper's OrangeFS).
+//!
+//! Objects are striped round-robin across `servers` directories — each
+//! directory standing in for one data node's RAID volume — with one
+//! *datafile* per server per object (exactly OrangeFS's layout: a file is
+//! N datafiles, stripe k lives at offset `(k / N) * stripe` of datafile
+//! `k % N`). A small metadata file records size/geometry/CRC, playing the
+//! metadata-server role.
+//!
+//! The "Tachyon-OFS plug-in hints" of §3 map to [`Hints`]: per-write
+//! stripe-size and server-count overrides.
+//!
+//! Server I/O is issued in parallel (one task per server via the shared
+//! [`ThreadPool`]), which is what gives the tier its aggregate-bandwidth
+//! behaviour: a read of one object engages every data node at once.
+
+use std::fs;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::storage::block::{checksum, verify_checksum};
+use crate::storage::layout::StripeLayout;
+use crate::storage::ObjectStore;
+use crate::util::pool::ThreadPool;
+
+/// Per-write layout overrides (the plug-in "hints" of §3.1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Hints {
+    /// Override stripe size for this object.
+    pub stripe_size: Option<u64>,
+    /// Use only the first `n` servers (e.g. to emulate fewer data nodes).
+    pub servers: Option<usize>,
+}
+
+/// Counters for the tier.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PfsStats {
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    pub objects_written: u64,
+    pub reads: u64,
+}
+
+/// Striped object store over `servers` directories.
+pub struct Pfs {
+    meta_dir: PathBuf,
+    server_dirs: Vec<PathBuf>,
+    default_stripe: u64,
+    pool: Arc<ThreadPool>,
+    bytes_written: AtomicU64,
+    bytes_read: AtomicU64,
+    objects_written: AtomicU64,
+    reads: AtomicU64,
+    /// Verify stripe CRCs on every read (on by default; the ablation bench
+    /// measures its cost).
+    pub verify_reads: bool,
+}
+
+impl Pfs {
+    /// Open (creating directories) a PFS rooted at `root` with `servers`
+    /// server directories and `stripe` default stripe size.
+    pub fn open(root: &Path, servers: usize, stripe: u64) -> Result<Self> {
+        Self::open_with_pool(root, servers, stripe, Arc::new(ThreadPool::new(servers)))
+    }
+
+    /// As [`Pfs::open`] but sharing a caller-owned thread pool.
+    pub fn open_with_pool(
+        root: &Path,
+        servers: usize,
+        stripe: u64,
+        pool: Arc<ThreadPool>,
+    ) -> Result<Self> {
+        if servers == 0 {
+            return Err(Error::Config("pfs needs at least one server".into()));
+        }
+        if stripe == 0 {
+            return Err(Error::Config("stripe size must be > 0".into()));
+        }
+        let meta_dir = root.join("meta");
+        fs::create_dir_all(&meta_dir).map_err(|e| Error::io(&meta_dir, e))?;
+        let mut server_dirs = Vec::with_capacity(servers);
+        for s in 0..servers {
+            let dir = root.join(format!("server{s}"));
+            fs::create_dir_all(&dir).map_err(|e| Error::io(&dir, e))?;
+            server_dirs.push(dir);
+        }
+        Ok(Self {
+            meta_dir,
+            server_dirs,
+            default_stripe: stripe,
+            pool,
+            bytes_written: AtomicU64::new(0),
+            bytes_read: AtomicU64::new(0),
+            objects_written: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+            verify_reads: true,
+        })
+    }
+
+    pub fn servers(&self) -> usize {
+        self.server_dirs.len()
+    }
+
+    pub fn default_stripe(&self) -> u64 {
+        self.default_stripe
+    }
+
+    pub fn stats(&self) -> PfsStats {
+        PfsStats {
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            objects_written: self.objects_written.load(Ordering::Relaxed),
+            reads: self.reads.load(Ordering::Relaxed),
+        }
+    }
+
+    // -- path helpers -----------------------------------------------------
+
+    /// Object keys may contain `/`; encode for flat filenames.
+    fn enc(key: &str) -> String {
+        key.replace('%', "%25").replace('/', "%2F")
+    }
+
+    fn meta_path(&self, key: &str) -> PathBuf {
+        self.meta_dir.join(format!("{}.meta", Self::enc(key)))
+    }
+
+    fn datafile(&self, key: &str, server: usize) -> PathBuf {
+        self.server_dirs[server].join(format!("{}.df", Self::enc(key)))
+    }
+
+    // -- metadata ----------------------------------------------------------
+
+    fn write_meta(&self, key: &str, meta: &ObjectMeta) -> Result<()> {
+        let path = self.meta_path(key);
+        let text = format!(
+            "size = {}\nstripe = {}\nservers = {}\ncrc = {}\n",
+            meta.size, meta.stripe, meta.servers, meta.crc
+        );
+        // write-then-rename so readers never observe a torn meta file
+        let tmp = path.with_extension("meta.tmp");
+        fs::write(&tmp, text).map_err(|e| Error::io(&tmp, e))?;
+        fs::rename(&tmp, &path).map_err(|e| Error::io(&path, e))?;
+        Ok(())
+    }
+
+    fn read_meta(&self, key: &str) -> Result<ObjectMeta> {
+        let path = self.meta_path(key);
+        let text = fs::read_to_string(&path).map_err(|_| Error::NotFound(key.to_string()))?;
+        ObjectMeta::parse(&text).ok_or_else(|| Error::Artifact(format!("bad meta for {key}")))
+    }
+
+    fn layout_of(&self, meta: &ObjectMeta) -> Result<StripeLayout> {
+        StripeLayout::new(meta.stripe, meta.servers)
+    }
+
+    /// Write with explicit hints.
+    pub fn write_with_hints(&self, key: &str, data: &[u8], hints: Hints) -> Result<()> {
+        let stripe = hints.stripe_size.unwrap_or(self.default_stripe);
+        let servers = hints
+            .servers
+            .unwrap_or(self.server_dirs.len())
+            .min(self.server_dirs.len());
+        let layout = StripeLayout::new(stripe, servers.max(1))?;
+
+        // Partition the object into per-server contiguous datafile images
+        // (batched: one write syscall per server, not per stripe).
+        let segs = layout.map_range(data.len() as u64, 0, data.len() as u64);
+        let mut per_server: Vec<Vec<u8>> = vec![Vec::new(); servers.max(1)];
+        for seg in &segs {
+            per_server[seg.server].extend_from_slice(
+                &data[seg.object_offset as usize..(seg.object_offset + seg.len) as usize],
+            );
+        }
+
+        let results: Vec<Result<()>> = {
+            let paths: Vec<PathBuf> = (0..per_server.len())
+                .map(|s| self.datafile(key, s))
+                .collect();
+            let payload: Vec<(PathBuf, Vec<u8>)> =
+                paths.into_iter().zip(per_server).collect();
+            let payload = Arc::new(payload);
+            let p2 = Arc::clone(&payload);
+            self.pool
+                .map(payload.len(), move |i| {
+                    let (path, bytes) = &p2[i];
+                    fs::write(path, bytes).map_err(|e| Error::io(path, e))
+                })
+                .map_err(Error::Job)?
+        };
+        for r in results {
+            r?;
+        }
+
+        // remove stale datafiles if the object previously spread wider
+        for s in servers..self.server_dirs.len() {
+            let p = self.datafile(key, s);
+            let _ = fs::remove_file(p);
+        }
+
+        self.write_meta(
+            key,
+            &ObjectMeta {
+                size: data.len() as u64,
+                stripe,
+                servers: servers.max(1),
+                crc: checksum(data),
+            },
+        )?;
+        self.bytes_written
+            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.objects_written.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The layout geometry an object was stored with.
+    pub fn object_layout(&self, key: &str) -> Result<(u64, StripeLayout)> {
+        let meta = self.read_meta(key)?;
+        Ok((meta.size, self.layout_of(&meta)?))
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ObjectMeta {
+    size: u64,
+    stripe: u64,
+    servers: usize,
+    crc: u32,
+}
+
+impl ObjectMeta {
+    fn parse(text: &str) -> Option<Self> {
+        let mut size = None;
+        let mut stripe = None;
+        let mut servers = None;
+        let mut crc = None;
+        for line in text.lines() {
+            let (k, v) = line.split_once('=')?;
+            let v = v.trim();
+            match k.trim() {
+                "size" => size = v.parse().ok(),
+                "stripe" => stripe = v.parse().ok(),
+                "servers" => servers = v.parse().ok(),
+                "crc" => crc = v.parse().ok(),
+                _ => return None,
+            }
+        }
+        Some(Self {
+            size: size?,
+            stripe: stripe?,
+            servers: servers?,
+            crc: crc?,
+        })
+    }
+}
+
+impl ObjectStore for Pfs {
+    fn write(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.write_with_hints(key, data, Hints::default())
+    }
+
+    fn read(&self, key: &str) -> Result<Vec<u8>> {
+        let meta = self.read_meta(key)?;
+        let layout = self.layout_of(&meta)?;
+        self.reads.fetch_add(1, Ordering::Relaxed);
+
+        // Parallel full-datafile reads, then de-stripe.
+        let servers = meta.servers;
+        let paths: Vec<PathBuf> = (0..servers).map(|s| self.datafile(key, s)).collect();
+        let paths = Arc::new(paths);
+        let p2 = Arc::clone(&paths);
+        let images: Vec<Result<Vec<u8>>> = self
+            .pool
+            .map(servers, move |s| {
+                let path = &p2[s];
+                if meta.size == 0 {
+                    return Ok(Vec::new());
+                }
+                match fs::read(path) {
+                    Ok(v) => Ok(v),
+                    // a server with no stripes for a tiny object has no file
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Vec::new()),
+                    Err(e) => Err(Error::io(path, e)),
+                }
+            })
+            .map_err(Error::Job)?;
+
+        let mut out = vec![0u8; meta.size as usize];
+        let mut cursors = vec![0usize; servers];
+        let segs = layout.map_range(meta.size, 0, meta.size);
+        for seg in segs {
+            let img = match &images[seg.server] {
+                Ok(v) => v,
+                Err(e) => return Err(Error::Artifact(format!("server {} read: {e}", seg.server))),
+            };
+            let start = cursors[seg.server];
+            let end = start + seg.len as usize;
+            if end > img.len() {
+                return Err(Error::Artifact(format!(
+                    "truncated datafile for {key} on server {}",
+                    seg.server
+                )));
+            }
+            out[seg.object_offset as usize..(seg.object_offset + seg.len) as usize]
+                .copy_from_slice(&img[start..end]);
+            cursors[seg.server] = end;
+        }
+
+        if self.verify_reads {
+            verify_checksum(key, &out, meta.crc)?;
+        }
+        self.bytes_read.fetch_add(meta.size, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let meta = self.read_meta(key)?;
+        let layout = self.layout_of(&meta)?;
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        let segs = layout.map_range(meta.size, offset, len as u64);
+        let total: u64 = segs.iter().map(|s| s.len).sum();
+        let mut out = vec![0u8; total as usize];
+        let base = offset;
+        for seg in segs {
+            let path = self.datafile(key, seg.server);
+            let mut f = fs::File::open(&path).map_err(|e| Error::io(&path, e))?;
+            f.seek(SeekFrom::Start(seg.local_offset))
+                .map_err(|e| Error::io(&path, e))?;
+            let dst_start = (seg.object_offset - base) as usize;
+            f.read_exact(&mut out[dst_start..dst_start + seg.len as usize])
+                .map_err(|e| Error::io(&path, e))?;
+        }
+        self.bytes_read.fetch_add(total, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    fn size(&self, key: &str) -> Result<u64> {
+        Ok(self.read_meta(key)?.size)
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.meta_path(key).exists()
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let _ = fs::remove_file(self.meta_path(key));
+        for s in 0..self.server_dirs.len() {
+            let _ = fs::remove_file(self.datafile(key, s));
+        }
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        let mut keys = Vec::new();
+        if let Ok(entries) = fs::read_dir(&self.meta_dir) {
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if let Some(enc) = name.strip_suffix(".meta") {
+                    let key = enc.replace("%2F", "/").replace("%25", "%");
+                    if key.starts_with(prefix) {
+                        keys.push(key);
+                    }
+                }
+            }
+        }
+        keys.sort();
+        keys
+    }
+
+    fn kind(&self) -> &'static str {
+        "pfs"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::TempDir;
+    use crate::util::rng::Pcg32;
+
+    fn rand_data(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg32::new(seed, 1);
+        let mut v = vec![0u8; n];
+        rng.fill_bytes(&mut v);
+        v
+    }
+
+    fn open(dir: &TempDir, servers: usize, stripe: u64) -> Pfs {
+        Pfs::open(dir.path(), servers, stripe).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_various_sizes() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 3, 64);
+        for (i, n) in [0usize, 1, 63, 64, 65, 128, 1000, 10_000].iter().enumerate() {
+            let key = format!("obj{i}");
+            let data = rand_data(*n, i as u64);
+            pfs.write(&key, &data).unwrap();
+            assert_eq!(pfs.read(&key).unwrap(), data, "size {n}");
+            assert_eq!(pfs.size(&key).unwrap(), *n as u64);
+        }
+    }
+
+    #[test]
+    fn stripes_actually_distributed() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 4, 32);
+        pfs.write("spread", &rand_data(256, 7)).unwrap();
+        // each server holds a 64-byte datafile (2 stripes of 32)
+        for s in 0..4 {
+            let df = dir.path().join(format!("server{s}")).join("spread.df");
+            assert_eq!(fs::metadata(df).unwrap().len(), 64, "server {s}");
+        }
+    }
+
+    #[test]
+    fn read_range_matches_slice() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 3, 50);
+        let data = rand_data(1000, 9);
+        pfs.write("r", &data).unwrap();
+        for (off, len) in [(0usize, 1000usize), (0, 10), (45, 10), (999, 1), (990, 100), (1000, 5)] {
+            let got = pfs.read_range("r", off as u64, len).unwrap();
+            let end = (off + len).min(1000);
+            assert_eq!(got, &data[off.min(1000)..end], "off={off} len={len}");
+        }
+    }
+
+    #[test]
+    fn hints_override_layout() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 4, 64);
+        let data = rand_data(512, 3);
+        pfs.write_with_hints(
+            "hinted",
+            &data,
+            Hints {
+                stripe_size: Some(128),
+                servers: Some(2),
+            },
+        )
+        .unwrap();
+        let (size, layout) = pfs.object_layout("hinted").unwrap();
+        assert_eq!(size, 512);
+        assert_eq!(layout.stripe_size, 128);
+        assert_eq!(layout.servers, 2);
+        assert_eq!(pfs.read("hinted").unwrap(), data);
+        // servers 2..4 must hold nothing
+        assert!(!dir.path().join("server2").join("hinted.df").exists());
+    }
+
+    #[test]
+    fn rewrite_shrinks_cleanly() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 3, 16);
+        pfs.write("k", &rand_data(160, 1)).unwrap();
+        let small = rand_data(8, 2);
+        pfs.write("k", &small).unwrap();
+        assert_eq!(pfs.read("k").unwrap(), small);
+        assert_eq!(pfs.size("k").unwrap(), 8);
+    }
+
+    #[test]
+    fn corruption_detected_on_read() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 2, 32);
+        pfs.write("c", &rand_data(100, 5)).unwrap();
+        // flip a byte in server0's datafile
+        let df = dir.path().join("server0").join("c.df");
+        let mut bytes = fs::read(&df).unwrap();
+        bytes[0] ^= 0xFF;
+        fs::write(&df, bytes).unwrap();
+        let err = pfs.read("c").unwrap_err();
+        assert!(matches!(err, Error::ChecksumMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn missing_object_is_not_found() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 2, 32);
+        assert!(matches!(pfs.read("ghost"), Err(Error::NotFound(_))));
+        assert!(!pfs.exists("ghost"));
+    }
+
+    #[test]
+    fn delete_is_idempotent_and_complete() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 2, 32);
+        pfs.write("d", &rand_data(100, 6)).unwrap();
+        pfs.delete("d").unwrap();
+        pfs.delete("d").unwrap();
+        assert!(!pfs.exists("d"));
+        assert!(!dir.path().join("server0").join("d.df").exists());
+        assert!(!dir.path().join("server1").join("d.df").exists());
+    }
+
+    #[test]
+    fn list_decodes_slashed_keys() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 2, 32);
+        pfs.write("in/part-0", b"a").unwrap();
+        pfs.write("in/part-1", b"b").unwrap();
+        pfs.write("out/part-0", b"c").unwrap();
+        assert_eq!(pfs.list("in/"), vec!["in/part-0", "in/part-1"]);
+        assert_eq!(pfs.list(""), vec!["in/part-0", "in/part-1", "out/part-0"]);
+    }
+
+    #[test]
+    fn percent_keys_roundtrip() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 2, 32);
+        pfs.write("we%ird/na%2Fme", b"x").unwrap();
+        assert_eq!(pfs.list("we%"), vec!["we%ird/na%2Fme"]);
+        assert_eq!(pfs.read("we%ird/na%2Fme").unwrap(), b"x");
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 2, 32);
+        pfs.write("s", &rand_data(100, 8)).unwrap();
+        let _ = pfs.read("s").unwrap();
+        let _ = pfs.read_range("s", 0, 10).unwrap();
+        let st = pfs.stats();
+        assert_eq!(st.bytes_written, 100);
+        assert_eq!(st.bytes_read, 110);
+        assert_eq!(st.objects_written, 1);
+        assert_eq!(st.reads, 2);
+    }
+
+    #[test]
+    fn empty_object_roundtrip() {
+        let dir = TempDir::new("pfs").unwrap();
+        let pfs = open(&dir, 3, 64);
+        pfs.write("empty", b"").unwrap();
+        assert_eq!(pfs.read("empty").unwrap(), Vec::<u8>::new());
+        assert!(pfs.exists("empty"));
+    }
+}

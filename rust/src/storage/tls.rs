@@ -1,0 +1,866 @@
+//! The two-level storage system — the paper's contribution (§3).
+//!
+//! Composition: an in-memory block tier ([`MemStore`], the paper's
+//! Tachyon) over a striped parallel-FS tier ([`Pfs`], the paper's
+//! OrangeFS), glued by:
+//!
+//! - the three **write modes** and three **read modes** of Figure 4
+//!   ([`WriteMode`], [`ReadMode`]),
+//! - the **block ↔ stripe layout mapping** of Figure 3 (objects live in
+//!   the memory tier as `block_size` logical blocks and on the PFS as a
+//!   striped checkpoint file),
+//! - the dual **I/O buffers** of §3.2 (`app_buffer` between application
+//!   and memory tier, `pfs_buffer` between the tiers),
+//! - the **priority-based read policy** of §3.2: every block read goes to
+//!   the nearest tier that has it (memory first, then PFS), and two-level
+//!   reads cache what they fetched, subject to LRU/LFU eviction.
+//!
+//! Mode-(a) writes leave *dirty* blocks that exist only in memory; if
+//! eviction pushes a dirty block out, it is checkpointed to a per-block
+//! PFS object first (the safety net standing in for Tachyon's lineage),
+//! and [`TwoLevelStore::checkpoint`] consolidates an object into its
+//! striped PFS file (what the paper's synchronous mode (c) does inline).
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::storage::block::{BlockGeometry, BlockId};
+use crate::storage::memstore::{MemStats, MemStore};
+use crate::storage::pfs::{Pfs, PfsStats};
+use crate::storage::{ObjectStore, ReadMode, WriteMode};
+use crate::util::pool::ThreadPool;
+
+/// Namespace prefix for dirty-block spill objects on the PFS.
+const DIRTY_NS: &str = ".dirty/";
+/// Marker file pinning the block size of a store root.
+const GEOMETRY_MARKER: &str = ".tls-geometry";
+
+/// Configuration for [`TwoLevelStore`].
+#[derive(Debug, Clone)]
+pub struct TlsConfig {
+    pub root: PathBuf,
+    pub mem_capacity: u64,
+    pub block_size: u64,
+    pub pfs_servers: usize,
+    pub stripe_size: u64,
+    pub app_buffer: u64,
+    pub pfs_buffer: u64,
+    pub eviction: String,
+    pub workers: usize,
+}
+
+impl TlsConfig {
+    /// Builder with the paper's §3.2 buffer defaults.
+    pub fn builder(root: impl Into<PathBuf>) -> TlsConfigBuilder {
+        TlsConfigBuilder {
+            cfg: TlsConfig {
+                root: root.into(),
+                mem_capacity: 256 << 20,
+                block_size: 4 << 20,
+                pfs_servers: 4,
+                stripe_size: 1 << 20,
+                app_buffer: 1 << 20,
+                pfs_buffer: 4 << 20,
+                eviction: "lru".into(),
+                workers: 4,
+            },
+        }
+    }
+
+    /// Derive from an [`crate::config::EngineConfig`].
+    pub fn from_engine(e: &crate::config::EngineConfig) -> Self {
+        Self {
+            root: e.root.clone(),
+            mem_capacity: e.mem_capacity,
+            block_size: e.block_size,
+            pfs_servers: e.pfs_servers,
+            stripe_size: e.stripe_size,
+            app_buffer: e.app_buffer,
+            pfs_buffer: e.pfs_buffer,
+            eviction: e.eviction.clone(),
+            workers: e.workers,
+        }
+    }
+}
+
+/// Fluent builder for [`TlsConfig`].
+pub struct TlsConfigBuilder {
+    cfg: TlsConfig,
+}
+
+impl TlsConfigBuilder {
+    pub fn mem_capacity(mut self, v: u64) -> Self {
+        self.cfg.mem_capacity = v;
+        self
+    }
+    pub fn block_size(mut self, v: u64) -> Self {
+        self.cfg.block_size = v;
+        self
+    }
+    pub fn pfs_servers(mut self, v: usize) -> Self {
+        self.cfg.pfs_servers = v;
+        self
+    }
+    pub fn stripe_size(mut self, v: u64) -> Self {
+        self.cfg.stripe_size = v;
+        self
+    }
+    pub fn app_buffer(mut self, v: u64) -> Self {
+        self.cfg.app_buffer = v;
+        self
+    }
+    pub fn pfs_buffer(mut self, v: u64) -> Self {
+        self.cfg.pfs_buffer = v;
+        self
+    }
+    pub fn eviction(mut self, v: &str) -> Self {
+        self.cfg.eviction = v.into();
+        self
+    }
+    pub fn workers(mut self, v: usize) -> Self {
+        self.cfg.workers = v;
+        self
+    }
+    pub fn build(self) -> Result<TlsConfig> {
+        let c = &self.cfg;
+        if c.block_size == 0 || c.stripe_size == 0 || c.app_buffer == 0 || c.pfs_buffer == 0 {
+            return Err(Error::Config("sizes must be > 0".into()));
+        }
+        if c.pfs_servers == 0 {
+            return Err(Error::Config("pfs_servers must be > 0".into()));
+        }
+        Ok(self.cfg)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ObjEntry {
+    size: u64,
+    /// Whole-object striped checkpoint exists on the PFS.
+    persisted: bool,
+}
+
+/// Tier-level counters for the Figure-6 / ablation measurements.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TlsStats {
+    /// Bytes served from the memory tier.
+    pub mem_bytes_read: u64,
+    /// Bytes served from the PFS tier.
+    pub pfs_bytes_read: u64,
+    /// Dirty blocks spilled by eviction pressure.
+    pub dirty_spills: u64,
+    /// Whole-object checkpoints written.
+    pub checkpoints: u64,
+}
+
+impl TlsStats {
+    /// Measured fraction of reads served by the memory tier — the paper's
+    /// `f` parameter, observed.
+    pub fn f_ratio(&self) -> f64 {
+        let total = self.mem_bytes_read + self.pfs_bytes_read;
+        if total == 0 {
+            0.0
+        } else {
+            self.mem_bytes_read as f64 / total as f64
+        }
+    }
+}
+
+/// The two-level store.
+pub struct TwoLevelStore {
+    cfg: TlsConfig,
+    mem: MemStore,
+    pfs: Pfs,
+    objects: Mutex<HashMap<String, ObjEntry>>,
+    dirty: Mutex<HashSet<String>>, // storage_key of dirty blocks
+    mem_bytes_read: AtomicU64,
+    pfs_bytes_read: AtomicU64,
+    dirty_spills: AtomicU64,
+    checkpoints: AtomicU64,
+}
+
+impl TwoLevelStore {
+    /// Open (or create) a store. Re-opening a root recovers persisted
+    /// objects from the PFS tier; the memory tier starts cold, exactly
+    /// like a Tachyon restart over OrangeFS.
+    pub fn open(cfg: TlsConfig) -> Result<Self> {
+        let pool = Arc::new(ThreadPool::new(cfg.workers.max(2)));
+        let pfs = Pfs::open_with_pool(
+            &cfg.root.join("pfs"),
+            cfg.pfs_servers,
+            cfg.stripe_size,
+            pool,
+        )?;
+        Self::check_geometry_marker(&cfg)?;
+        let mem = MemStore::new(cfg.mem_capacity, &cfg.eviction)?;
+
+        // Recover the object table from PFS contents.
+        let mut objects = HashMap::new();
+        for key in pfs.list("") {
+            if key.starts_with(DIRTY_NS) {
+                // spilled block of an unpersisted object
+                if let Some((obj, _idx)) = key[DIRTY_NS.len()..].rsplit_once('#') {
+                    objects
+                        .entry(obj.to_string())
+                        .or_insert(ObjEntry {
+                            size: 0,
+                            persisted: false,
+                        });
+                }
+                continue;
+            }
+            let size = pfs.size(&key)?;
+            objects.insert(
+                key,
+                ObjEntry {
+                    size,
+                    persisted: true,
+                },
+            );
+        }
+
+        Ok(Self {
+            cfg,
+            mem,
+            pfs,
+            objects: Mutex::new(objects),
+            dirty: Mutex::new(HashSet::new()),
+            mem_bytes_read: AtomicU64::new(0),
+            pfs_bytes_read: AtomicU64::new(0),
+            dirty_spills: AtomicU64::new(0),
+            checkpoints: AtomicU64::new(0),
+        })
+    }
+
+    fn check_geometry_marker(cfg: &TlsConfig) -> Result<()> {
+        let marker = cfg.root.join(GEOMETRY_MARKER);
+        match std::fs::read_to_string(&marker) {
+            Ok(text) => {
+                let stored: u64 = text
+                    .trim()
+                    .parse()
+                    .map_err(|_| Error::Config("corrupt geometry marker".into()))?;
+                if stored != cfg.block_size {
+                    return Err(Error::Config(format!(
+                        "store was created with block_size {stored}, reopened with {}",
+                        cfg.block_size
+                    )));
+                }
+                Ok(())
+            }
+            Err(_) => {
+                std::fs::create_dir_all(&cfg.root).map_err(|e| Error::io(&cfg.root, e))?;
+                std::fs::write(&marker, cfg.block_size.to_string())
+                    .map_err(|e| Error::io(&marker, e))?;
+                Ok(())
+            }
+        }
+    }
+
+    pub fn config(&self) -> &TlsConfig {
+        &self.cfg
+    }
+
+    pub fn mem_stats(&self) -> MemStats {
+        self.mem.stats()
+    }
+
+    pub fn pfs_stats(&self) -> PfsStats {
+        self.pfs.stats()
+    }
+
+    pub fn stats(&self) -> TlsStats {
+        TlsStats {
+            mem_bytes_read: self.mem_bytes_read.load(Ordering::Relaxed),
+            pfs_bytes_read: self.pfs_bytes_read.load(Ordering::Relaxed),
+            dirty_spills: self.dirty_spills.load(Ordering::Relaxed),
+            checkpoints: self.checkpoints.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Direct access to the PFS tier (the coordinator and benches use it).
+    pub fn pfs(&self) -> &Pfs {
+        &self.pfs
+    }
+
+    /// Direct access to the memory tier.
+    pub fn mem(&self) -> &MemStore {
+        &self.mem
+    }
+
+    fn geometry(&self, size: u64) -> BlockGeometry {
+        BlockGeometry::new(size, self.cfg.block_size).expect("validated block size")
+    }
+
+    fn dirty_key(object: &str, index: u64) -> String {
+        format!("{DIRTY_NS}{object}#{index}")
+    }
+
+    /// Handle eviction victims: dirty blocks must hit the PFS before the
+    /// bytes disappear (the safety net standing in for Tachyon lineage).
+    fn spill_evicted(&self, evicted: Vec<(String, Arc<[u8]>)>) -> Result<()> {
+        if evicted.is_empty() {
+            return Ok(());
+        }
+        let mut dirty = self.dirty.lock().unwrap();
+        for (key, bytes) in evicted {
+            if dirty.remove(&key) {
+                let (obj, idx) = key.rsplit_once('#').expect("storage key format");
+                self.pfs
+                    .write(&Self::dirty_key(obj, idx.parse().unwrap()), &bytes)?;
+                self.dirty_spills.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    /// Insert blocks into the memory tier, spilling dirty victims.
+    fn put_blocks(&self, object: &str, data: &[u8], mark_dirty: bool) -> Result<()> {
+        let geo = self.geometry(data.len() as u64);
+        for i in 0..geo.num_blocks() {
+            let (s, e) = geo.block_range(i);
+            let bytes: Arc<[u8]> = data[s as usize..e as usize].to_vec().into();
+            let key = BlockId::new(object, i).storage_key();
+            if mark_dirty {
+                self.dirty.lock().unwrap().insert(key.clone());
+            }
+            let evicted = self.mem.put(&key, bytes)?;
+            self.spill_evicted(evicted)?;
+        }
+        Ok(())
+    }
+
+    /// Write under an explicit mode (Figure 4 a–c).
+    pub fn write(&self, key: &str, data: &[u8], mode: WriteMode) -> Result<()> {
+        if key.starts_with('.') {
+            return Err(Error::InvalidArg(
+                "keys starting with '.' are reserved".into(),
+            ));
+        }
+        match mode {
+            WriteMode::MemOnly => {
+                // a block bigger than the memory tier can never be MemOnly
+                if self.cfg.block_size.min(data.len() as u64) > self.cfg.mem_capacity {
+                    return Err(Error::OverCapacity {
+                        need: data.len() as u64,
+                        capacity: self.cfg.mem_capacity,
+                    });
+                }
+                self.put_blocks(key, data, true)?;
+                self.objects.lock().unwrap().insert(
+                    key.to_string(),
+                    ObjEntry {
+                        size: data.len() as u64,
+                        persisted: false,
+                    },
+                );
+            }
+            WriteMode::Bypass => {
+                self.pfs.write(key, data)?;
+                self.objects.lock().unwrap().insert(
+                    key.to_string(),
+                    ObjEntry {
+                        size: data.len() as u64,
+                        persisted: true,
+                    },
+                );
+            }
+            WriteMode::WriteThrough => {
+                // §4, eq. (6): synchronous write to both tiers; throughput
+                // bounded by the PFS (the slower leg).
+                self.put_blocks(key, data, false)?;
+                self.pfs.write(key, data)?;
+                self.objects.lock().unwrap().insert(
+                    key.to_string(),
+                    ObjEntry {
+                        size: data.len() as u64,
+                        persisted: true,
+                    },
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn entry(&self, key: &str) -> Result<ObjEntry> {
+        self.objects
+            .lock()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| Error::NotFound(key.to_string()))
+    }
+
+    /// Fetch one block through the priority policy. Returns the bytes and
+    /// which tier served them.
+    ///
+    /// Concurrency: a dirty block evicted by another thread is briefly in
+    /// flight between leaving the memory tier and landing in the PFS dirty
+    /// namespace (eviction and spill are not one atomic step). The block
+    /// is never *lost* — it is in memory, in `.dirty/`, or the object has
+    /// just been checkpointed — so a miss on every tier retries with a
+    /// fresh object-table snapshot until the in-flight write lands.
+    fn read_block(&self, key: &str, index: u64, cache: bool) -> Result<(Arc<[u8]>, bool)> {
+        let skey = BlockId::new(key, index).storage_key();
+        const MAX_ATTEMPTS: u32 = 500;
+        for attempt in 0..MAX_ATTEMPTS {
+            if let Some(bytes) = self.mem.get(&skey) {
+                return Ok((bytes, true));
+            }
+            // miss → PFS: prefer the consolidated checkpoint, else spill
+            let entry = self.entry(key)?;
+            let geo = self.geometry(entry.size);
+            let (s, e) = geo.block_range(index);
+            let fetched: Result<Vec<u8>> = if entry.persisted {
+                // chunked transfer through the §3.2 pfs buffer
+                let mut out = Vec::with_capacity((e - s) as usize);
+                let mut off = s;
+                let mut ok = Ok(());
+                while off < e {
+                    let chunk = (e - off).min(self.cfg.pfs_buffer);
+                    match self.pfs.read_range(key, off, chunk as usize) {
+                        Ok(part) => out.extend_from_slice(&part),
+                        Err(err) => {
+                            ok = Err(err);
+                            break;
+                        }
+                    }
+                    off += chunk;
+                }
+                ok.map(|_| out)
+            } else {
+                self.pfs.read(&Self::dirty_key(key, index))
+            };
+            match fetched {
+                Ok(bytes) => {
+                    let bytes: Arc<[u8]> = bytes.into();
+                    if cache {
+                        let evicted = self.mem.put(&skey, Arc::clone(&bytes))?;
+                        self.spill_evicted(evicted)?;
+                    }
+                    return Ok((bytes, false));
+                }
+                // in-flight spill/checkpoint: back off and re-snapshot
+                Err(Error::NotFound(_)) if attempt + 1 < MAX_ATTEMPTS => {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(Error::NotFound(format!("{key} block {index}: lost")))
+    }
+
+    /// Read under an explicit mode (Figure 4 d–f).
+    pub fn read(&self, key: &str, mode: ReadMode) -> Result<Vec<u8>> {
+        let entry = self.entry(key)?;
+        match mode {
+            ReadMode::Bypass => {
+                if !entry.persisted {
+                    return Err(Error::NotFound(format!(
+                        "{key}: not persisted; Bypass reads only the PFS tier"
+                    )));
+                }
+                let data = self.pfs.read(key)?;
+                self.pfs_bytes_read
+                    .fetch_add(data.len() as u64, Ordering::Relaxed);
+                Ok(data)
+            }
+            ReadMode::MemOnly | ReadMode::TwoLevel => {
+                let geo = self.geometry(entry.size);
+                let mut out = Vec::with_capacity(entry.size as usize);
+                for i in 0..geo.num_blocks() {
+                    let skey = BlockId::new(key, i).storage_key();
+                    let (bytes, from_mem) = match mode {
+                        ReadMode::MemOnly => match self.mem.get(&skey) {
+                            Some(b) => (b, true),
+                            None => {
+                                return Err(Error::NotFound(format!(
+                                    "{key} block {i}: evicted from memory tier (MemOnly read)"
+                                )))
+                            }
+                        },
+                        _ => self.read_block(key, i, true)?,
+                    };
+                    if from_mem {
+                        self.mem_bytes_read
+                            .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                    } else {
+                        self.pfs_bytes_read
+                            .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                    }
+                    out.extend_from_slice(&bytes);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Ranged read under a mode.
+    pub fn read_range(&self, key: &str, offset: u64, len: usize, mode: ReadMode) -> Result<Vec<u8>> {
+        let entry = self.entry(key)?;
+        if matches!(mode, ReadMode::Bypass) {
+            if !entry.persisted {
+                return Err(Error::NotFound(format!("{key}: not persisted")));
+            }
+            let data = self.pfs.read_range(key, offset, len)?;
+            self.pfs_bytes_read
+                .fetch_add(data.len() as u64, Ordering::Relaxed);
+            return Ok(data);
+        }
+        let geo = self.geometry(entry.size);
+        let pieces = geo.blocks_for_range(offset, len as u64);
+        let mut out = Vec::new();
+        for (i, s, e) in pieces {
+            let (bytes, from_mem) = match mode {
+                ReadMode::MemOnly => {
+                    let skey = BlockId::new(key, i).storage_key();
+                    match self.mem.get(&skey) {
+                        Some(b) => (b, true),
+                        None => {
+                            return Err(Error::NotFound(format!(
+                                "{key} block {i}: not in memory tier"
+                            )))
+                        }
+                    }
+                }
+                _ => self.read_block(key, i, true)?,
+            };
+            let served = (e - s) as u64;
+            if from_mem {
+                self.mem_bytes_read.fetch_add(served, Ordering::Relaxed);
+            } else {
+                self.pfs_bytes_read.fetch_add(served, Ordering::Relaxed);
+            }
+            out.extend_from_slice(&bytes[s as usize..e as usize]);
+        }
+        Ok(out)
+    }
+
+    /// Consolidate `key` into its striped whole-object checkpoint on the
+    /// PFS (no-op if already persisted). This is what the coordinator's
+    /// checkpointer calls for mode-(a) data.
+    pub fn checkpoint(&self, key: &str) -> Result<()> {
+        let entry = self.entry(key)?;
+        if entry.persisted {
+            return Ok(());
+        }
+        let data = self.read(key, ReadMode::TwoLevel)?;
+        self.pfs.write(key, &data)?;
+        // Flip the object to persisted *before* dropping the spill blocks:
+        // concurrent readers that miss memory then re-snapshot the entry
+        // and route to the consolidated checkpoint instead of the (soon to
+        // vanish) dirty namespace.
+        self.objects.lock().unwrap().insert(
+            key.to_string(),
+            ObjEntry {
+                size: entry.size,
+                persisted: true,
+            },
+        );
+        let geo = self.geometry(entry.size);
+        let mut dirty = self.dirty.lock().unwrap();
+        for i in 0..geo.num_blocks() {
+            dirty.remove(&BlockId::new(key, i).storage_key());
+            let _ = self.pfs.delete(&Self::dirty_key(key, i));
+        }
+        drop(dirty);
+        self.checkpoints.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Keys of objects not yet persisted (the checkpointer's work queue).
+    pub fn unpersisted(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .objects
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, e)| !e.persisted)
+            .map(|(k, _)| k.clone())
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Evict an object's blocks from the memory tier (for cache-pressure
+    /// experiments); dirty blocks are spilled first via checkpoint.
+    pub fn evict_object(&self, key: &str) -> Result<()> {
+        let entry = self.entry(key)?;
+        if !entry.persisted {
+            self.checkpoint(key)?;
+        }
+        let geo = self.geometry(entry.size);
+        for i in 0..geo.num_blocks() {
+            self.mem.remove(&BlockId::new(key, i).storage_key());
+        }
+        Ok(())
+    }
+}
+
+impl ObjectStore for TwoLevelStore {
+    fn write(&self, key: &str, data: &[u8]) -> Result<()> {
+        TwoLevelStore::write(self, key, data, WriteMode::WriteThrough)
+    }
+
+    fn read(&self, key: &str) -> Result<Vec<u8>> {
+        TwoLevelStore::read(self, key, ReadMode::TwoLevel)
+    }
+
+    fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        TwoLevelStore::read_range(self, key, offset, len, ReadMode::TwoLevel)
+    }
+
+    fn size(&self, key: &str) -> Result<u64> {
+        Ok(self.entry(key)?.size)
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.objects.lock().unwrap().contains_key(key)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let entry = match self.entry(key) {
+            Ok(e) => e,
+            Err(_) => return Ok(()),
+        };
+        let geo = self.geometry(entry.size);
+        let mut dirty = self.dirty.lock().unwrap();
+        for i in 0..geo.num_blocks() {
+            let skey = BlockId::new(key, i).storage_key();
+            self.mem.remove(&skey);
+            dirty.remove(&skey);
+            let _ = self.pfs.delete(&Self::dirty_key(key, i));
+        }
+        drop(dirty);
+        self.pfs.delete(key)?;
+        self.objects.lock().unwrap().remove(key);
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        let mut keys: Vec<String> = self
+            .objects
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        keys.sort();
+        keys
+    }
+
+    fn kind(&self) -> &'static str {
+        "tls"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::TempDir;
+    use crate::util::rng::Pcg32;
+
+    fn rand_data(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg32::new(seed, 1);
+        let mut v = vec![0u8; n];
+        rng.fill_bytes(&mut v);
+        v
+    }
+
+    fn store(dir: &TempDir, mem_cap: u64, block: u64) -> TwoLevelStore {
+        let cfg = TlsConfig::builder(dir.path())
+            .mem_capacity(mem_cap)
+            .block_size(block)
+            .pfs_servers(3)
+            .stripe_size(64)
+            .pfs_buffer(128)
+            .build()
+            .unwrap();
+        TwoLevelStore::open(cfg).unwrap()
+    }
+
+    #[test]
+    fn write_through_lands_in_both_tiers() {
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 4096, 256);
+        let data = rand_data(1000, 1);
+        s.write("obj", &data, WriteMode::WriteThrough).unwrap();
+        // read (d): memory only — must fully succeed
+        assert_eq!(s.read("obj", ReadMode::MemOnly).unwrap(), data);
+        // read (e): PFS only — must also succeed
+        assert_eq!(s.read("obj", ReadMode::Bypass).unwrap(), data);
+    }
+
+    #[test]
+    fn mem_only_write_not_on_pfs_until_checkpoint() {
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 4096, 256);
+        let data = rand_data(500, 2);
+        s.write("hot", &data, WriteMode::MemOnly).unwrap();
+        assert!(matches!(s.read("hot", ReadMode::Bypass), Err(Error::NotFound(_))));
+        assert_eq!(s.unpersisted(), vec!["hot"]);
+        s.checkpoint("hot").unwrap();
+        assert_eq!(s.read("hot", ReadMode::Bypass).unwrap(), data);
+        assert!(s.unpersisted().is_empty());
+        assert_eq!(s.stats().checkpoints, 1);
+    }
+
+    #[test]
+    fn bypass_write_skips_memory_tier() {
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 4096, 256);
+        let data = rand_data(600, 3);
+        s.write("cold", &data, WriteMode::Bypass).unwrap();
+        assert!(matches!(s.read("cold", ReadMode::MemOnly), Err(Error::NotFound(_))));
+        // two-level read pulls it up and caches it
+        assert_eq!(s.read("cold", ReadMode::TwoLevel).unwrap(), data);
+        assert_eq!(s.read("cold", ReadMode::MemOnly).unwrap(), data);
+    }
+
+    #[test]
+    fn two_level_read_mixes_tiers_and_tracks_f() {
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 4096, 256);
+        let data = rand_data(1024, 4);
+        s.write("obj", &data, WriteMode::WriteThrough).unwrap();
+        // evict half the blocks from memory
+        s.mem().remove("obj#0");
+        s.mem().remove("obj#1");
+        assert_eq!(s.read("obj", ReadMode::TwoLevel).unwrap(), data);
+        let st = s.stats();
+        assert_eq!(st.mem_bytes_read, 512);
+        assert_eq!(st.pfs_bytes_read, 512);
+        assert!((st.f_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dirty_blocks_survive_eviction_pressure() {
+        let dir = TempDir::new("tls").unwrap();
+        // memory fits only 2 blocks of 256
+        let s = store(&dir, 512, 256);
+        let a = rand_data(512, 5);
+        let b = rand_data(512, 6);
+        s.write("a", &a, WriteMode::MemOnly).unwrap();
+        s.write("b", &b, WriteMode::MemOnly).unwrap(); // evicts a's blocks
+        assert!(s.stats().dirty_spills >= 1);
+        // 'a' must still be fully readable (spilled blocks come from PFS)
+        assert_eq!(s.read("a", ReadMode::TwoLevel).unwrap(), a);
+        assert_eq!(s.read("b", ReadMode::TwoLevel).unwrap(), b);
+    }
+
+    #[test]
+    fn checkpoint_consolidates_spilled_blocks() {
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 512, 256);
+        let a = rand_data(512, 7);
+        s.write("a", &a, WriteMode::MemOnly).unwrap();
+        s.write("b", &rand_data(512, 8), WriteMode::MemOnly).unwrap();
+        s.checkpoint("a").unwrap();
+        assert_eq!(s.read("a", ReadMode::Bypass).unwrap(), a);
+        // dirty spill objects cleaned up
+        assert!(s.pfs().list(DIRTY_NS).is_empty() || !s.pfs().list(DIRTY_NS).iter().any(|k| k.contains("a#")));
+    }
+
+    #[test]
+    fn read_range_spans_blocks() {
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 4096, 100);
+        let data = rand_data(1000, 9);
+        s.write("r", &data, WriteMode::WriteThrough).unwrap();
+        for (off, len) in [(0usize, 1000usize), (95, 10), (0, 1), (950, 100), (1000, 4)] {
+            let got = s.read_range("r", off as u64, len, ReadMode::TwoLevel).unwrap();
+            let end = (off + len).min(1000);
+            assert_eq!(got, &data[off.min(1000)..end], "off={off}");
+        }
+    }
+
+    #[test]
+    fn reopen_recovers_persisted_objects() {
+        let dir = TempDir::new("tls").unwrap();
+        let data = rand_data(700, 10);
+        {
+            let s = store(&dir, 4096, 256);
+            s.write("keep", &data, WriteMode::WriteThrough).unwrap();
+        }
+        let s = store(&dir, 4096, 256);
+        assert!(s.exists("keep"));
+        // memory tier is cold: first read comes from the PFS
+        assert_eq!(s.read("keep", ReadMode::TwoLevel).unwrap(), data);
+        assert!(s.stats().pfs_bytes_read >= 700);
+        // second read is hot
+        assert_eq!(s.read("keep", ReadMode::TwoLevel).unwrap(), data);
+        assert!(s.stats().mem_bytes_read >= 700);
+    }
+
+    #[test]
+    fn reopen_with_other_block_size_rejected() {
+        let dir = TempDir::new("tls").unwrap();
+        {
+            let _ = store(&dir, 4096, 256);
+        }
+        let cfg = TlsConfig::builder(dir.path())
+            .mem_capacity(4096)
+            .block_size(128)
+            .build()
+            .unwrap();
+        assert!(matches!(TwoLevelStore::open(cfg), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn reserved_keys_rejected() {
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 4096, 256);
+        assert!(s.write(".dirty/evil", b"x", WriteMode::Bypass).is_err());
+    }
+
+    #[test]
+    fn delete_cleans_all_tiers() {
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 4096, 256);
+        s.write("d", &rand_data(500, 11), WriteMode::WriteThrough).unwrap();
+        ObjectStore::delete(&s, "d").unwrap();
+        assert!(!s.exists("d"));
+        assert!(matches!(s.read("d", ReadMode::TwoLevel), Err(Error::NotFound(_))));
+        assert!(!s.mem().contains("d#0"));
+        // idempotent
+        ObjectStore::delete(&s, "d").unwrap();
+    }
+
+    #[test]
+    fn object_store_trait_defaults() {
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 4096, 256);
+        let data = rand_data(300, 12);
+        ObjectStore::write(&s, "t", &data).unwrap();
+        assert_eq!(ObjectStore::read(&s, "t").unwrap(), data);
+        assert_eq!(ObjectStore::size(&s, "t").unwrap(), 300);
+        assert_eq!(s.list("t"), vec!["t"]);
+        assert_eq!(s.kind(), "tls");
+    }
+
+    #[test]
+    fn empty_object() {
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 4096, 256);
+        s.write("e", b"", WriteMode::WriteThrough).unwrap();
+        assert_eq!(s.read("e", ReadMode::TwoLevel).unwrap(), Vec::<u8>::new());
+        assert_eq!(s.read("e", ReadMode::MemOnly).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn large_object_exceeding_memory_two_level_reads() {
+        let dir = TempDir::new("tls").unwrap();
+        // 1 KiB memory, 4 KiB object: mode (f) with capacity slope (Fig 6)
+        let s = store(&dir, 1024, 256);
+        let data = rand_data(4096, 13);
+        s.write("big", &data, WriteMode::WriteThrough).unwrap();
+        assert_eq!(s.read("big", ReadMode::TwoLevel).unwrap(), data);
+        let st = s.stats();
+        assert!(st.pfs_bytes_read > 0, "must have spilled to PFS");
+        assert!(s.mem().used() <= 1024);
+    }
+}

@@ -1,0 +1,502 @@
+//! TeraSort — the paper's §5.3 benchmark workload.
+//!
+//! Three stages over any [`ObjectStore`] backend, matching Hadoop's suite:
+//!
+//! - [`teragen`]: Map-only deterministic record generation (100-byte
+//!   records: 10-byte random key, 90-byte payload carrying the row id).
+//! - [`run_terasort`]: one map/reduce cycle. The **mapper** reads its
+//!   split, sorts record blocks with the AOT-compiled Pallas bitonic
+//!   kernel via PJRT (u32 key-prefix sort + tie refinement on the full
+//!   key), and emits pre-sorted runs per partition; the **reducer** k-way
+//!   merges runs and writes the globally ordered output partition.
+//! - [`teravalidate`]: checks per-partition ordering, cross-partition
+//!   boundaries, record count, and an order-insensitive checksum against
+//!   the input.
+//!
+//! The range partitioner is built from the kernel's bucket histogram
+//! ([`Partitioner::from_histogram`]) — Hadoop's TotalOrderPartitioner
+//! sampling step, done with the same compute artifact.
+
+pub mod records;
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::{Engine, InputSplit, JobSpec, JobStats, KV, MapContext, Mapper, MergeIter, Reducer};
+use crate::runtime::{u32_bytes, Artifact, Runtime};
+use crate::storage::ObjectStore;
+use crate::util::rng::Pcg32;
+
+pub use records::{key_prefix, RECORD_SIZE, KEY_SIZE};
+
+/// Kernel geometry — must match `python/compile/kernels/sortnet.py` and
+/// the artifact manifest (validated at runtime load).
+pub const TILES: usize = 64;
+pub const LANE: usize = 256;
+pub const BLOCK_KEYS: usize = TILES * LANE;
+pub const BUCKETS: usize = 256;
+
+// ---------------------------------------------------------------- teragen
+
+/// Generate `num_records` TeraSort records into `{prefix}part-m-{i:05}`
+/// objects of at most `records_per_object`, deterministically from `seed`.
+/// Returns total bytes written.
+pub fn teragen(
+    store: &dyn ObjectStore,
+    prefix: &str,
+    num_records: u64,
+    records_per_object: u64,
+    seed: u64,
+) -> Result<u64> {
+    if records_per_object == 0 {
+        return Err(Error::InvalidArg("records_per_object must be > 0".into()));
+    }
+    let mut written = 0u64;
+    let mut part = 0u64;
+    let mut remaining = num_records;
+    let mut row = 0u64;
+    while remaining > 0 {
+        let n = remaining.min(records_per_object);
+        let mut buf = Vec::with_capacity((n * RECORD_SIZE as u64) as usize);
+        let mut rng = Pcg32::for_task(seed, part);
+        for _ in 0..n {
+            records::write_record(&mut buf, &mut rng, row);
+            row += 1;
+        }
+        store.write(&format!("{prefix}part-m-{part:05}"), &buf)?;
+        written += buf.len() as u64;
+        remaining -= n;
+        part += 1;
+    }
+    Ok(written)
+}
+
+// ------------------------------------------------------------ partitioner
+
+/// Total-order range partitioner over the 256 top-byte buckets.
+#[derive(Debug, Clone)]
+pub struct Partitioner {
+    /// `bucket_to_part[b]` = partition owning bucket `b`; non-decreasing.
+    bucket_to_part: Vec<u32>,
+    num_partitions: u32,
+}
+
+impl Partitioner {
+    /// Equal-width bucket split (uniform keys — TeraGen's distribution).
+    pub fn uniform(num_partitions: u32) -> Self {
+        let num_partitions = num_partitions.max(1);
+        let map = (0..BUCKETS)
+            .map(|b| ((b as u64 * num_partitions as u64) / BUCKETS as u64) as u32)
+            .collect();
+        Self {
+            bucket_to_part: map,
+            num_partitions,
+        }
+    }
+
+    /// Balance partitions by cumulative bucket counts (the sampling step:
+    /// feed it the kernel's histogram of a data sample).
+    pub fn from_histogram(hist: &[i64; BUCKETS], num_partitions: u32) -> Self {
+        let num_partitions = num_partitions.max(1);
+        let total: i64 = hist.iter().sum();
+        if total == 0 {
+            return Self::uniform(num_partitions);
+        }
+        let per_part = total as f64 / num_partitions as f64;
+        let mut map = Vec::with_capacity(BUCKETS);
+        let mut cum = 0i64;
+        for b in 0..BUCKETS {
+            // partition by the cumulative count *before* this bucket so a
+            // giant bucket doesn't push itself over
+            let p = ((cum as f64 / per_part) as u32).min(num_partitions - 1);
+            map.push(p);
+            cum += hist[b];
+        }
+        Self {
+            bucket_to_part: map,
+            num_partitions,
+        }
+    }
+
+    pub fn num_partitions(&self) -> u32 {
+        self.num_partitions
+    }
+
+    /// Partition of a key (by its u32 big-endian prefix).
+    #[inline]
+    pub fn partition_of(&self, prefix: u32) -> u32 {
+        self.bucket_to_part[(prefix >> 24) as usize]
+    }
+
+    /// Monotonicity invariant (property-tested).
+    pub fn is_monotone(&self) -> bool {
+        self.bucket_to_part.windows(2).all(|w| w[0] <= w[1])
+            && self.bucket_to_part.iter().all(|&p| p < self.num_partitions)
+    }
+}
+
+/// Sample the input and build a balanced partitioner using the sort
+/// kernel's histogram output (the paper's workload uses 256 reducers; we
+/// sample ~`sample_objects` objects).
+pub fn sample_partitioner(
+    store: &dyn ObjectStore,
+    prefix: &str,
+    runtime: &Runtime,
+    num_partitions: u32,
+    sample_objects: usize,
+) -> Result<Partitioner> {
+    let art = runtime.artifact("sort_block")?;
+    let keys_per_block = BLOCK_KEYS;
+    let mut hist = [0i64; BUCKETS];
+    for key in store.list(prefix).into_iter().take(sample_objects.max(1)) {
+        let sample_len = (keys_per_block * RECORD_SIZE).min(store.size(&key)? as usize);
+        let data = store.read_range(&key, 0, sample_len)?;
+        let mut prefixes: Vec<u32> = data
+            .chunks_exact(RECORD_SIZE)
+            .map(records::key_prefix)
+            .collect();
+        if prefixes.is_empty() {
+            continue;
+        }
+        prefixes.resize(keys_per_block, u32::MAX); // pad ignored below
+        let pad = keys_per_block - data.len() / RECORD_SIZE;
+        let out = art.call_bytes(&[&u32_bytes(&prefixes)])?;
+        let h = out[2].as_s32()?;
+        for b in 0..BUCKETS {
+            hist[b] += h[b] as i64;
+        }
+        // padding inflates the last bucket; subtract it
+        hist[BUCKETS - 1] -= pad as i64;
+    }
+    Ok(Partitioner::from_histogram(&hist, num_partitions))
+}
+
+// ---------------------------------------------------------------- mapper
+
+/// TeraSort mapper: kernel-sorted runs per partition.
+pub struct SortMapper {
+    artifact: Arc<ArtifactHandle>,
+    partitioner: Partitioner,
+}
+
+/// `Runtime` outlives jobs; this handle lets mappers share one compiled
+/// executable across threads.
+pub struct ArtifactHandle {
+    runtime: Arc<Runtime>,
+    name: String,
+}
+
+impl ArtifactHandle {
+    pub fn new(runtime: Arc<Runtime>, name: &str) -> Result<Self> {
+        runtime.artifact(name)?; // validate now
+        Ok(Self {
+            runtime,
+            name: name.to_string(),
+        })
+    }
+
+    pub fn get(&self) -> &Artifact {
+        self.runtime.artifact(&self.name).expect("validated")
+    }
+}
+
+impl SortMapper {
+    pub fn new(runtime: Arc<Runtime>, partitioner: Partitioner) -> Result<Self> {
+        Ok(Self {
+            artifact: Arc::new(ArtifactHandle::new(runtime, "sort_block")?),
+            partitioner,
+        })
+    }
+
+    /// Sort `records` (multiple of [`RECORD_SIZE`] bytes) by full 10-byte
+    /// key using the PJRT kernel for the u32-prefix pass. Returns record
+    /// indices in sorted order.
+    fn kernel_sort_indices(&self, data: &[u8]) -> Result<Vec<u32>> {
+        let n = data.len() / RECORD_SIZE;
+        let art = self.artifact.get();
+        let mut order = Vec::with_capacity(n);
+
+        let mut block = vec![u32::MAX; BLOCK_KEYS];
+        let mut base = 0usize;
+        while base < n {
+            let take = (n - base).min(BLOCK_KEYS);
+            for i in 0..take {
+                block[i] =
+                    records::key_prefix(&data[(base + i) * RECORD_SIZE..(base + i + 1) * RECORD_SIZE]);
+            }
+            for slot in block.iter_mut().skip(take) {
+                *slot = u32::MAX; // pad sorts to the tile tails
+            }
+            let out = art.call_bytes(&[&u32_bytes(&block)])?;
+            let sorted = out[0].as_u32()?;
+            let perm = out[1].as_s32()?;
+
+            // tiles are sorted independently; merge the TILES tile runs,
+            // skipping padded slots
+            let mut tile_runs: Vec<Vec<u32>> = Vec::with_capacity(TILES);
+            for t in 0..TILES {
+                let mut run = Vec::with_capacity(LANE);
+                for l in 0..LANE {
+                    let flat = t * LANE + l;
+                    let local_idx = t * LANE + perm[flat] as usize;
+                    // padding occupies exactly the local slots >= take, so
+                    // this single bound check filters it (a *real* record
+                    // with prefix u32::MAX still has local_idx < take)
+                    if local_idx < take {
+                        run.push((base + local_idx) as u32);
+                    }
+                }
+                debug_assert!(sorted.len() == BLOCK_KEYS);
+                tile_runs.push(run);
+            }
+            let merged = crate::util::kwaymerge::KWayMerge::new(tile_runs, |&idx: &u32| {
+                records::full_key(data, idx as usize)
+            });
+            order.extend(merged);
+            base += take;
+        }
+
+        // blocks of BLOCK_KEYS were sorted independently; if there were
+        // several, merge them too
+        if n > BLOCK_KEYS {
+            let mut runs: Vec<Vec<u32>> = Vec::new();
+            let mut cur = Vec::new();
+            let mut count = 0;
+            for idx in order {
+                cur.push(idx);
+                count += 1;
+                if count % BLOCK_KEYS == 0 {
+                    runs.push(std::mem::take(&mut cur));
+                }
+            }
+            if !cur.is_empty() {
+                runs.push(cur);
+            }
+            order = crate::util::kwaymerge::KWayMerge::new(runs, |&idx: &u32| {
+                records::full_key(data, idx as usize)
+            })
+            .collect();
+        }
+
+        // refine ties on the full key: the kernel ordered by u32 prefix;
+        // KWayMerge above already compared full keys *between* runs, and
+        // equal-prefix records *within* a tile keep input order (stable) —
+        // but their full keys may still be out of order. Fix short runs.
+        refine_equal_prefix_runs(data, &mut order);
+        Ok(order)
+    }
+}
+
+/// Sort runs of records whose u32 prefixes are equal by their full keys
+/// (insertion-style; equal-prefix runs are tiny for random data).
+fn refine_equal_prefix_runs(data: &[u8], order: &mut [u32]) {
+    let n = order.len();
+    let mut i = 0;
+    while i < n {
+        let p = records::key_prefix(&data[order[i] as usize * RECORD_SIZE..]);
+        let mut j = i + 1;
+        while j < n
+            && records::key_prefix(&data[order[j] as usize * RECORD_SIZE..]) == p
+        {
+            j += 1;
+        }
+        if j - i > 1 {
+            order[i..j].sort_by_key(|&idx| records::full_key(data, idx as usize));
+        }
+        i = j;
+    }
+}
+
+impl Mapper for SortMapper {
+    fn map(&self, split: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+        if data.len() % RECORD_SIZE != 0 {
+            return Err(Error::Job(format!(
+                "split {} length {} not a record multiple",
+                split.object,
+                data.len()
+            )));
+        }
+        let order = self.kernel_sort_indices(data)?;
+
+        // slice the sorted stream into per-partition sorted runs
+        let mut current: Option<(u32, Vec<KV>)> = None;
+        for idx in order {
+            let rec = &data[idx as usize * RECORD_SIZE..(idx as usize + 1) * RECORD_SIZE];
+            let p = self.partitioner.partition_of(records::key_prefix(rec));
+            match &mut current {
+                Some((cp, run)) if *cp == p => {
+                    run.push(KV::from_record(rec.to_vec(), KEY_SIZE as u32))
+                }
+                _ => {
+                    if let Some((cp, run)) = current.take() {
+                        ctx.emit_sorted_run(cp, run);
+                    }
+                    current = Some((p, vec![KV::from_record(rec.to_vec(), KEY_SIZE as u32)]));
+                }
+            }
+        }
+        if let Some((cp, run)) = current {
+            ctx.emit_sorted_run(cp, run);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- reducer
+
+/// TeraSort reducer: concatenates the merged record stream.
+pub struct SortReducer;
+
+impl Reducer for SortReducer {
+    fn reduce(&self, _p: u32, records: MergeIter, out: &mut Vec<u8>) -> Result<()> {
+        out.reserve(records.remaining() * RECORD_SIZE);
+        for kv in records {
+            out.extend_from_slice(&kv.bytes);
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------------ jobs
+
+/// Run the TeraSort map/reduce cycle: `{in_prefix}` → `{out_prefix}part-r-*`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_terasort(
+    engine: &Engine,
+    store: Arc<dyn ObjectStore>,
+    runtime: Arc<Runtime>,
+    in_prefix: &str,
+    out_prefix: &str,
+    num_reducers: u32,
+    split_size: u64,
+    sample_for_balance: bool,
+) -> Result<JobStats> {
+    // splits must land on record boundaries
+    let split_size = (split_size / RECORD_SIZE as u64).max(1) * RECORD_SIZE as u64;
+    let partitioner = if sample_for_balance {
+        sample_partitioner(store.as_ref(), in_prefix, &runtime, num_reducers, 4)?
+    } else {
+        Partitioner::uniform(num_reducers)
+    };
+    let mapper = Arc::new(SortMapper::new(runtime, partitioner)?);
+    engine.run(
+        store,
+        &JobSpec {
+            name: "terasort",
+            input_prefix: in_prefix,
+            output_prefix: out_prefix,
+            num_reducers,
+            split_size,
+        },
+        mapper,
+        Arc::new(SortReducer),
+    )
+}
+
+/// TeraValidate result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValidateReport {
+    pub records: u64,
+    pub sorted: bool,
+    pub checksum: u64,
+}
+
+/// Order-insensitive checksum + global order check over `{prefix}part-r-*`.
+pub fn teravalidate(store: &dyn ObjectStore, prefix: &str) -> Result<ValidateReport> {
+    let mut records = 0u64;
+    let mut checksum = 0u64;
+    let mut sorted = true;
+    let mut last_key: Option<[u8; KEY_SIZE]> = None;
+
+    for key in store.list(prefix) {
+        let data = store.read(&key)?;
+        if data.len() % RECORD_SIZE != 0 {
+            return Err(Error::Job(format!("{key}: not a record multiple")));
+        }
+        for rec in data.chunks_exact(RECORD_SIZE) {
+            let k: [u8; KEY_SIZE] = rec[..KEY_SIZE].try_into().unwrap();
+            if let Some(prev) = last_key {
+                if k < prev {
+                    sorted = false;
+                }
+            }
+            last_key = Some(k);
+            records += 1;
+            checksum = checksum.wrapping_add(records::record_checksum(rec));
+        }
+    }
+    Ok(ValidateReport {
+        records,
+        sorted,
+        checksum,
+    })
+}
+
+/// Checksum of an *input* prefix (for input-vs-output comparison).
+pub fn input_checksum(store: &dyn ObjectStore, prefix: &str) -> Result<(u64, u64)> {
+    let mut records = 0u64;
+    let mut checksum = 0u64;
+    for key in store.list(prefix) {
+        let data = store.read(&key)?;
+        for rec in data.chunks_exact(RECORD_SIZE) {
+            records += 1;
+            checksum = checksum.wrapping_add(records::record_checksum(rec));
+        }
+    }
+    Ok((records, checksum))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_partitioner_is_monotone_and_covers() {
+        for parts in [1u32, 2, 3, 16, 255, 256] {
+            let p = Partitioner::uniform(parts);
+            assert!(p.is_monotone(), "parts={parts}");
+            assert_eq!(p.partition_of(0), 0);
+            assert_eq!(p.partition_of(u32::MAX), parts - 1);
+        }
+    }
+
+    #[test]
+    fn histogram_partitioner_balances_skew() {
+        // everything in bucket 0..2 → with 2 partitions, the split must
+        // fall inside the low buckets, not at 128
+        let mut hist = [0i64; BUCKETS];
+        hist[0] = 500;
+        hist[1] = 500;
+        hist[2] = 500;
+        let p = Partitioner::from_histogram(&hist, 2);
+        assert!(p.is_monotone());
+        assert_eq!(p.partition_of(0), 0);
+        assert_eq!(p.partition_of(2 << 24), 1);
+        assert_eq!(p.partition_of(200 << 24), 1);
+    }
+
+    #[test]
+    fn empty_histogram_falls_back_to_uniform() {
+        let hist = [0i64; BUCKETS];
+        let p = Partitioner::from_histogram(&hist, 4);
+        assert!(p.is_monotone());
+        assert_eq!(p.partition_of(u32::MAX), 3);
+    }
+
+    #[test]
+    fn refine_fixes_prefix_ties() {
+        // two records with equal u32 prefix, unequal later key bytes
+        let mut data = Vec::new();
+        let mut rec = |suffix: u8| {
+            let mut r = vec![0u8; RECORD_SIZE];
+            r[..4].copy_from_slice(&[1, 2, 3, 4]);
+            r[4] = suffix;
+            data.extend_from_slice(&r);
+        };
+        rec(9);
+        rec(3);
+        let mut order = vec![0u32, 1];
+        refine_equal_prefix_runs(&data, &mut order);
+        assert_eq!(order, vec![1, 0]);
+    }
+}

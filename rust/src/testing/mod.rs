@@ -1,0 +1,167 @@
+//! Test support: a miniature property-testing harness and a self-cleaning
+//! temporary directory.
+//!
+//! `proptest` is not in the offline crate set, so [`proprun`] provides the
+//! subset the suite needs: seeded random generation, many cases per
+//! property, and on failure a greedy shrink over the generator's size
+//! parameter with the failing seed printed for reproduction.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::rng::Pcg32;
+
+/// A self-cleaning temp dir (like `tempfile::TempDir`).
+pub struct TempDir {
+    path: PathBuf,
+}
+
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl TempDir {
+    /// Create a fresh directory under the system temp dir.
+    pub fn new(tag: &str) -> std::io::Result<Self> {
+        let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "tlstore-{tag}-{}-{seq}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .subsec_nanos()
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Path of a child entry.
+    pub fn join(&self, rel: &str) -> PathBuf {
+        self.path.join(rel)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Per-case input generator: receives an RNG and a `size` hint in
+/// `1..=max_size` (cases cycle through sizes so small inputs run early).
+pub type Gen<T> = fn(&mut Pcg32, usize) -> T;
+
+/// Configuration for [`proprun`].
+pub struct PropConfig {
+    pub cases: u32,
+    pub max_size: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // TLSTORE_PROP_CASES overrides for soak runs.
+        let cases = std::env::var("TLSTORE_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        Self {
+            cases,
+            max_size: 64,
+            seed: xt_seed(),
+        }
+    }
+}
+
+fn xt_seed() -> u64 {
+    std::env::var("TLSTORE_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_CAFE)
+}
+
+/// Run `prop` against `cases` generated inputs. On failure, retry with
+/// progressively smaller size hints to find a smaller counterexample, then
+/// panic with the reproduction seed.
+pub fn proprun<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let size = 1 + (case as usize * cfg.max_size / cfg.cases.max(1) as usize).min(cfg.max_size - 1);
+        let mut rng = Pcg32::new(case_seed, 0xDA7A);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink: same seed, smaller sizes
+            let mut best: (usize, String, String) = (size, msg.clone(), format!("{input:?}"));
+            for s in (1..size).rev() {
+                let mut rng = Pcg32::new(case_seed, 0xDA7A);
+                let smaller = gen(&mut rng, s);
+                if let Err(m) = prop(&smaller) {
+                    best = (s, m, format!("{smaller:?}"));
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, size {}):\n  {}\n  input: {}\n  rerun with TLSTORE_PROP_SEED={}",
+                best.0, best.1, best.2, cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_creates_and_cleans() {
+        let p;
+        {
+            let d = TempDir::new("t").unwrap();
+            p = d.path().to_path_buf();
+            std::fs::write(d.join("x"), b"1").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn proprun_passes_valid_property() {
+        proprun(
+            "reverse-reverse",
+            PropConfig::default(),
+            |rng, size| (0..size).map(|_| rng.next_u32()).collect::<Vec<_>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("reverse twice != id".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn proprun_reports_failure() {
+        proprun(
+            "always-fails",
+            PropConfig {
+                cases: 3,
+                max_size: 8,
+                seed: 1,
+            },
+            |rng, size| (0..size).map(|_| rng.next_u32()).collect::<Vec<_>>(),
+            |_| Err("nope".into()),
+        );
+    }
+}

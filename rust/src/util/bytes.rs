@@ -1,0 +1,101 @@
+//! Byte-size parsing/formatting and throughput display.
+
+/// Parse a human byte size: `"64"`, `"4k"`, `"1M"`, `"2.5G"`, `"1GiB"`,
+/// `"512 MB"` (case-insensitive; k/M/G/T are binary multiples, matching
+/// how the paper quotes block/stripe/buffer sizes).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let lower = s.to_ascii_lowercase();
+    let lower = lower.trim_end_matches("ib").trim_end_matches('b');
+    let (num, mult) = match lower.chars().last()? {
+        'k' => (&lower[..lower.len() - 1], 1u64 << 10),
+        'm' => (&lower[..lower.len() - 1], 1u64 << 20),
+        'g' => (&lower[..lower.len() - 1], 1u64 << 30),
+        't' => (&lower[..lower.len() - 1], 1u64 << 40),
+        _ => (lower, 1u64),
+    };
+    let num = num.trim();
+    if let Ok(v) = num.parse::<u64>() {
+        return v.checked_mul(mult);
+    }
+    let f = num.parse::<f64>().ok()?;
+    if !(f.is_finite() && f >= 0.0) {
+        return None;
+    }
+    Some((f * mult as f64) as u64)
+}
+
+/// Format a byte count: `1536 → "1.5 KiB"`.
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format a throughput in MB/s (the paper's unit everywhere).
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    format!("{:.1} MB/s", bytes_per_sec / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain_numbers() {
+        assert_eq!(parse_bytes("0"), Some(0));
+        assert_eq!(parse_bytes("1234"), Some(1234));
+    }
+
+    #[test]
+    fn parse_suffixes() {
+        assert_eq!(parse_bytes("4k"), Some(4 << 10));
+        assert_eq!(parse_bytes("4K"), Some(4 << 10));
+        assert_eq!(parse_bytes("1M"), Some(1 << 20));
+        assert_eq!(parse_bytes("1MB"), Some(1 << 20));
+        assert_eq!(parse_bytes("1MiB"), Some(1 << 20));
+        assert_eq!(parse_bytes("2G"), Some(2 << 30));
+        assert_eq!(parse_bytes("1T"), Some(1 << 40));
+        assert_eq!(parse_bytes("512 MB"), Some(512 << 20));
+    }
+
+    #[test]
+    fn parse_fractional() {
+        assert_eq!(parse_bytes("2.5k"), Some(2560));
+        assert_eq!(parse_bytes("0.5M"), Some(512 << 10));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert_eq!(parse_bytes(""), None);
+        assert_eq!(parse_bytes("abc"), None);
+        assert_eq!(parse_bytes("-5"), None);
+        assert_eq!(parse_bytes("nan"), None);
+    }
+
+    #[test]
+    fn fmt_roundtrip_readability() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(1023), "1023 B");
+        assert_eq!(fmt_bytes(1536), "1.5 KiB");
+        assert_eq!(fmt_bytes(1 << 20), "1.0 MiB");
+        assert_eq!(fmt_bytes(5 << 30), "5.0 GiB");
+    }
+
+    #[test]
+    fn fmt_rate_mbs() {
+        assert_eq!(fmt_rate(237e6), "237.0 MB/s");
+    }
+}

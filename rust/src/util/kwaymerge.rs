@@ -1,0 +1,168 @@
+//! K-way merge of sorted runs.
+//!
+//! The TeraSort reducer merges the sorted runs produced by the PJRT sort
+//! kernel; the merge is the reducer's CPU hot path, so it uses a binary
+//! heap of run cursors and keeps the head item of each run in a staging
+//! buffer (the heap stores only keys + run ids — no `T` moves through it).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Iterator merging `k` ascending-sorted vectors, comparing with the key
+/// extractor `F`. Ties break by run index, so merging runs produced by a
+/// stable partition remains globally stable.
+pub struct KWayMerge<T, K: Ord, F: Fn(&T) -> K> {
+    runs: Vec<std::vec::IntoIter<T>>,
+    staged: Vec<Option<T>>,
+    heap: BinaryHeap<HeapEntry<K>>,
+    key_fn: F,
+}
+
+struct HeapEntry<K: Ord> {
+    key: K,
+    run: usize,
+}
+
+impl<K: Ord> PartialEq for HeapEntry<K> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.run == other.run
+    }
+}
+impl<K: Ord> Eq for HeapEntry<K> {}
+impl<K: Ord> PartialOrd for HeapEntry<K> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<K: Ord> Ord for HeapEntry<K> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for ascending output.
+        other
+            .key
+            .cmp(&self.key)
+            .then_with(|| other.run.cmp(&self.run))
+    }
+}
+
+impl<T, K: Ord, F: Fn(&T) -> K> KWayMerge<T, K, F> {
+    /// Build a merge over `runs` (each must already be ascending under
+    /// `key_fn`; debug-asserted as items are popped).
+    pub fn new(runs: Vec<Vec<T>>, key_fn: F) -> Self {
+        let mut iters: Vec<std::vec::IntoIter<T>> =
+            runs.into_iter().map(|r| r.into_iter()).collect();
+        let mut heap = BinaryHeap::with_capacity(iters.len());
+        let mut staged: Vec<Option<T>> = Vec::with_capacity(iters.len());
+        for (i, it) in iters.iter_mut().enumerate() {
+            match it.next() {
+                Some(item) => {
+                    heap.push(HeapEntry {
+                        key: key_fn(&item),
+                        run: i,
+                    });
+                    staged.push(Some(item));
+                }
+                None => staged.push(None),
+            }
+        }
+        Self {
+            runs: iters,
+            staged,
+            heap,
+            key_fn,
+        }
+    }
+}
+
+impl<T, K: Ord, F: Fn(&T) -> K> Iterator for KWayMerge<T, K, F> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        let entry = self.heap.pop()?;
+        let item = self.staged[entry.run].take().expect("staged head");
+        if let Some(next) = self.runs[entry.run].next() {
+            let key = (self.key_fn)(&next);
+            debug_assert!(key >= entry.key, "run {} not sorted", entry.run);
+            self.heap.push(HeapEntry {
+                key,
+                run: entry.run,
+            });
+            self.staged[entry.run] = Some(next);
+        }
+        Some(item)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let staged = self.staged.iter().filter(|s| s.is_some()).count();
+        let (lo, hi) = self
+            .runs
+            .iter()
+            .fold((0usize, Some(0usize)), |(l, h), it| {
+                let (il, ih) = it.size_hint();
+                (l + il, h.zip(ih).map(|(a, b)| a + b))
+            });
+        (lo + staged, hi.map(|h| h + staged))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn merge_u32(runs: Vec<Vec<u32>>) -> Vec<u32> {
+        KWayMerge::new(runs, |x: &u32| *x).collect()
+    }
+
+    #[test]
+    fn merges_disjoint_runs() {
+        let out = merge_u32(vec![vec![1, 4, 7], vec![2, 5, 8], vec![3, 6, 9]]);
+        assert_eq!(out, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn merges_overlapping_runs_with_dups() {
+        let out = merge_u32(vec![vec![1, 1, 2], vec![1, 2, 2], vec![]]);
+        assert_eq!(out, vec![1, 1, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(merge_u32(vec![]), Vec::<u32>::new());
+        assert_eq!(merge_u32(vec![vec![], vec![]]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn single_run_passthrough() {
+        assert_eq!(merge_u32(vec![vec![3, 5, 9]]), vec![3, 5, 9]);
+    }
+
+    #[test]
+    fn stable_by_run_index() {
+        // items carry (key, run-tag); equal keys must come out in run order
+        let runs = vec![vec![(1u32, 'a'), (2, 'a')], vec![(1, 'b'), (2, 'b')]];
+        let out: Vec<(u32, char)> = KWayMerge::new(runs, |x: &(u32, char)| x.0).collect();
+        assert_eq!(out, vec![(1, 'a'), (1, 'b'), (2, 'a'), (2, 'b')]);
+    }
+
+    #[test]
+    fn size_hint_is_exact_for_vecs() {
+        let m = KWayMerge::new(vec![vec![1u32, 2], vec![3, 4, 5]], |x: &u32| *x);
+        assert_eq!(m.size_hint(), (5, Some(5)));
+    }
+
+    #[test]
+    fn large_random_merge_matches_sort() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(11, 13);
+        let mut runs = Vec::new();
+        let mut all = Vec::new();
+        for _ in 0..17 {
+            let len = rng.gen_range(200) as usize;
+            let mut run: Vec<u32> = (0..len).map(|_| rng.next_u32() % 1000).collect();
+            run.sort_unstable();
+            all.extend_from_slice(&run);
+            runs.push(run);
+        }
+        all.sort_unstable();
+        assert_eq!(merge_u32(runs), all);
+    }
+}

@@ -1,0 +1,67 @@
+//! Minimal `log` backend: level filter from `TLSTORE_LOG`, timestamps
+//! relative to process start, no allocation beyond the formatted line.
+
+use std::io::Write;
+use std::time::Instant;
+
+use once_cell::sync::OnceCell;
+
+struct Logger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for Logger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:10.3}s {:5} {}] {}",
+            record.level(),
+            record.target().rsplit("::").next().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceCell<Logger> = OnceCell::new();
+
+/// Install the logger (idempotent). Level comes from `TLSTORE_LOG`
+/// (`error|warn|info|debug|trace`, default `info`).
+pub fn init() {
+    let level = match std::env::var("TLSTORE_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| Logger {
+        start: Instant::now(),
+        level,
+    });
+    // set_logger fails if already set (e.g. by a test harness) — fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

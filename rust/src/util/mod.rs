@@ -1,0 +1,17 @@
+//! Small shared substrates: PRNG, logging, byte formatting, thread pool,
+//! k-way merge.
+//!
+//! Only the image's vendored crate set is reachable at build time, so the
+//! pieces a networked build would pull in (`rand`, `env_logger`,
+//! `rayon`-ish pooling) are implemented here as small, tested modules.
+
+pub mod bytes;
+pub mod kwaymerge;
+pub mod logger;
+pub mod pool;
+pub mod rng;
+
+pub use bytes::{fmt_bytes, fmt_rate, parse_bytes};
+pub use kwaymerge::KWayMerge;
+pub use pool::ThreadPool;
+pub use rng::{Pcg32, SplitMix64};

@@ -1,0 +1,221 @@
+//! Fixed-size thread pool used by the MapReduce engine and the storage
+//! engines' parallel stripe I/O.
+//!
+//! The vendored crate set has no tokio/rayon, and the workloads here are
+//! blocking file I/O plus CPU-bound PJRT calls — a plain worker pool with a
+//! `scope`-style fork/join API is both simpler and faster for that profile
+//! (no async reactor on the hot path).
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Task),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (clamped to ≥ 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
+                std::thread::Builder::new()
+                    .name(format!("tlstore-worker-{i}"))
+                    .spawn(move || worker_loop(rx, panics))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            tx,
+            workers,
+            size,
+            panics,
+        }
+    }
+
+    /// Pool sized to the host's parallelism.
+    pub fn for_host() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::new(n)
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Number of tasks that panicked since pool creation.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Fire-and-forget execution.
+    pub fn execute(&self, task: impl FnOnce() + Send + 'static) {
+        self.tx
+            .send(Msg::Run(Box::new(task)))
+            .expect("pool is alive");
+    }
+
+    /// Run `f(i)` for `i in 0..n` across the pool and collect results in
+    /// index order. Panics in tasks are propagated as an `Err` carrying the
+    /// first panic message.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Result<Vec<T>, String>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (rtx, rrx): (Sender<(usize, ResultSlot<T>)>, Receiver<_>) = channel();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let out = std::panic::catch_unwind(AssertUnwindSafe(|| f(i)));
+                let slot = match out {
+                    Ok(v) => ResultSlot::Ok(v),
+                    // `p.as_ref()` derefs the Box: `&p` would unsize-coerce
+                    // the Box itself to `dyn Any` and every downcast would
+                    // miss the real payload.
+                    Err(p) => ResultSlot::Panicked(panic_msg(p.as_ref())),
+                };
+                let _ = rtx.send((i, slot));
+            });
+        }
+        drop(rtx);
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<String> = None;
+        for _ in 0..n {
+            let (i, slot) = rrx.recv().map_err(|e| e.to_string())?;
+            match slot {
+                ResultSlot::Ok(v) => results[i] = Some(v),
+                ResultSlot::Panicked(msg) => {
+                    first_panic.get_or_insert(msg);
+                }
+            }
+        }
+        if let Some(msg) = first_panic {
+            return Err(msg);
+        }
+        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+    }
+}
+
+enum ResultSlot<T> {
+    Ok(T),
+    Panicked(String),
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked".to_string()
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, panics: Arc<AtomicUsize>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("pool receiver");
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Run(task)) => {
+                if std::panic::catch_unwind(AssertUnwindSafe(task)).is_err() {
+                    panics.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Ok(Msg::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(100, |i| i * 2).unwrap();
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_zero_tasks() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u32> = pool.map(0, |_| 1u32).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn execute_runs_concurrently() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..64 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // map acts as a barrier: all four workers drain the queue first
+        let _ = pool.map(4, |_| ()).unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn panics_are_reported_not_fatal() {
+        let pool = ThreadPool::new(2);
+        let err = pool
+            .map(8, |i| {
+                if i == 3 {
+                    panic!("boom {i}");
+                }
+                i
+            })
+            .unwrap_err();
+        assert!(err.contains("boom"), "{err}");
+        // pool still usable afterwards
+        assert_eq!(pool.map(4, |i| i).unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn size_clamped_to_one() {
+        assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration: the `tlstore` binary itself — the §5.3 pipeline
+//! (teragen → terasort → validate) driven through the CLI, plus the
+//! model/sim/mountain report commands.
+//!
+//! Uses the binary cargo builds for this test run (`CARGO_BIN_EXE_tlstore`).
+
+use std::process::Command;
+
+use tlstore::testing::TempDir;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_tlstore")
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .output()
+        .expect("spawn tlstore");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn model_command_prints_paper_crossovers() {
+    let (ok, text) = run(&["model", "--pfs-aggregate", "10000"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("read vs pfs N=43"), "{text}");
+    assert!(text.contains("vs tls(f=0.2) N=53"), "{text}");
+    assert!(text.contains("write N=259"), "{text}");
+}
+
+#[test]
+fn sim_command_reports_all_backends() {
+    let (ok, text) = run(&["sim", "--input-gb", "4"]);
+    assert!(ok, "{text}");
+    for b in ["hdfs", "ofs", "tls(f=1)"] {
+        assert!(text.contains(b), "missing {b}: {text}");
+    }
+    assert!(text.contains("map=") && text.contains("reduce="), "{text}");
+}
+
+#[test]
+fn mountain_command_prints_surface() {
+    let (ok, text) = run(&["mountain"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("storage mountain"), "{text}");
+    assert!(text.contains("256.0 GiB"), "{text}");
+}
+
+#[test]
+fn unknown_command_and_flags_fail_loudly() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("usage:"), "{text}");
+    let (ok, text) = run(&["model", "--no-such-flag", "1"]);
+    assert!(!ok);
+    assert!(text.contains("unknown flag"), "{text}");
+}
+
+#[test]
+fn teragen_terasort_validate_pipeline_via_cli() {
+    if !std::path::Path::new("artifacts/manifest.toml").exists() {
+        eprintln!("artifacts/ not built — skipping CLI terasort");
+        return;
+    }
+    let dir = TempDir::new("cli-ts").unwrap();
+    let root = dir.path().to_str().unwrap();
+
+    let (ok, text) = run(&[
+        "teragen",
+        "--root",
+        root,
+        "--backend",
+        "tls",
+        "--records",
+        "20000",
+    ]);
+    assert!(ok, "teragen: {text}");
+
+    let (ok, text) = run(&[
+        "terasort",
+        "--root",
+        root,
+        "--backend",
+        "tls",
+        "--reducers",
+        "4",
+        "--split-size",
+        "512k",
+    ]);
+    assert!(ok, "terasort: {text}");
+    assert!(text.contains("job=terasort"), "{text}");
+    assert!(text.contains("locality="), "{text}");
+
+    let (ok, text) = run(&["validate", "--root", root, "--backend", "tls"]);
+    assert!(ok, "validate: {text}");
+    assert!(
+        text.contains("records=20000 sorted=true checksum_match=true"),
+        "{text}"
+    );
+}
+
+#[test]
+fn validate_detects_unsorted_output() {
+    // validate against the *input* prefix (unsorted) must fail
+    if !std::path::Path::new("artifacts/manifest.toml").exists() {
+        return;
+    }
+    let dir = TempDir::new("cli-bad").unwrap();
+    let root = dir.path().to_str().unwrap();
+    let (ok, _) = run(&[
+        "teragen",
+        "--root",
+        root,
+        "--backend",
+        "pfs",
+        "--records",
+        "5000",
+    ]);
+    assert!(ok);
+    let (ok, text) = run(&[
+        "validate",
+        "--root",
+        root,
+        "--backend",
+        "pfs",
+        "--out",
+        "in/", // point "output" at the unsorted input
+    ]);
+    assert!(!ok, "validating unsorted data must fail: {text}");
+}

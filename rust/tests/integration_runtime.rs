@@ -1,0 +1,151 @@
+//! Integration: the full AOT bridge — artifacts/*.hlo.txt produced by
+//! `make artifacts` loaded through the PJRT CPU client and executed with
+//! real inputs, outputs checked against independently computed oracles.
+//!
+//! These tests are skipped (cleanly) if artifacts/ has not been built.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use tlstore::runtime::{f32_bytes, u32_bytes, Runtime};
+use tlstore::util::rng::Pcg32;
+
+fn runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<Option<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.toml").exists() {
+            eprintln!("artifacts/ not built — run `make artifacts`; skipping");
+            return None;
+        }
+        Some(Runtime::load_dir(dir).expect("load artifacts"))
+    })
+    .as_ref()
+}
+
+const TILES: usize = 64;
+const LANE: usize = 256;
+const BUCKETS: usize = 256;
+
+fn random_keys(seed: u64) -> Vec<u32> {
+    let mut rng = Pcg32::new(seed, 77);
+    (0..TILES * LANE).map(|_| rng.next_u32()).collect()
+}
+
+/// Host-side oracle: per-tile stable sort + top-byte histogram.
+fn sort_oracle(keys: &[u32]) -> (Vec<u32>, Vec<i32>, Vec<i32>) {
+    let mut sorted = Vec::with_capacity(keys.len());
+    let mut perm = Vec::with_capacity(keys.len());
+    let mut hist = vec![0i32; BUCKETS];
+    for tile in keys.chunks(LANE) {
+        let mut idx: Vec<i32> = (0..LANE as i32).collect();
+        idx.sort_by_key(|&i| (tile[i as usize], i));
+        perm.extend_from_slice(&idx);
+        sorted.extend(idx.iter().map(|&i| tile[i as usize]));
+    }
+    for &k in keys {
+        hist[(k >> 24) as usize] += 1;
+    }
+    (sorted, perm, hist)
+}
+
+#[test]
+fn platform_reports_cpu() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.platform().contains("cpu"), "{}", rt.platform());
+    assert_eq!(rt.names(), vec!["analytics_agg", "sort_block"]);
+}
+
+#[test]
+fn sort_block_matches_oracle_random() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.artifact("sort_block").unwrap();
+    for seed in [1u64, 2, 3] {
+        let keys = random_keys(seed);
+        let out = art.call_bytes(&[&u32_bytes(&keys)]).unwrap();
+        let (sorted, perm, hist) = sort_oracle(&keys);
+        assert_eq!(out[0].as_u32().unwrap(), &sorted[..], "seed {seed}");
+        assert_eq!(out[1].as_s32().unwrap(), &perm[..], "seed {seed}");
+        assert_eq!(out[2].as_s32().unwrap(), &hist[..], "seed {seed}");
+    }
+}
+
+#[test]
+fn sort_block_handles_duplicates_and_extremes() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.artifact("sort_block").unwrap();
+    // heavy duplicates
+    let mut rng = Pcg32::new(9, 9);
+    let mut keys: Vec<u32> = (0..TILES * LANE).map(|_| rng.gen_range(5)).collect();
+    keys[0] = u32::MAX;
+    keys[1] = 0;
+    let out = art.call_bytes(&[&u32_bytes(&keys)]).unwrap();
+    let (sorted, perm, hist) = sort_oracle(&keys);
+    assert_eq!(out[0].as_u32().unwrap(), &sorted[..]);
+    assert_eq!(out[1].as_s32().unwrap(), &perm[..]);
+    assert_eq!(out[2].as_s32().unwrap(), &hist[..]);
+    // histogram sums to the element count
+    let total: i32 = out[2].as_s32().unwrap().iter().sum();
+    assert_eq!(total as usize, TILES * LANE);
+}
+
+#[test]
+fn sort_block_rejects_wrong_sizes() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.artifact("sort_block").unwrap();
+    let short = vec![0u8; 16];
+    assert!(art.call_bytes(&[&short]).is_err());
+    assert!(art.call_bytes(&[]).is_err());
+}
+
+#[test]
+fn analytics_agg_matches_oracle() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.artifact("analytics_agg").unwrap();
+    const ROWS: usize = 4096;
+    const COLS: usize = 8;
+    let mut rng = Pcg32::new(4, 4);
+    let x: Vec<f32> = (0..ROWS * COLS)
+        .map(|_| (rng.gen_f64() * 200.0 - 100.0) as f32)
+        .collect();
+    let out = art.call_bytes(&[&f32_bytes(&x)]).unwrap();
+    let stats = out[0].as_f32().unwrap(); // (4, COLS): sum,min,max,sumsq
+    let mean = out[1].as_f32().unwrap();
+    let var = out[2].as_f32().unwrap();
+
+    for c in 0..COLS {
+        let col: Vec<f64> = (0..ROWS).map(|r| x[r * COLS + c] as f64).collect();
+        let sum: f64 = col.iter().sum();
+        let min = col.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = col.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let sumsq: f64 = col.iter().map(|v| v * v).sum();
+        let m = sum / ROWS as f64;
+        let v = sumsq / ROWS as f64 - m * m;
+        assert!((stats[c] as f64 - sum).abs() < 1.0, "col {c} sum");
+        assert!((stats[COLS + c] as f64 - min).abs() < 1e-4, "col {c} min");
+        assert!((stats[2 * COLS + c] as f64 - max).abs() < 1e-4, "col {c} max");
+        assert!(
+            (stats[3 * COLS + c] as f64 - sumsq).abs() / sumsq.max(1.0) < 1e-3,
+            "col {c} sumsq"
+        );
+        assert!((mean[c] as f64 - m).abs() < 1e-3, "col {c} mean");
+        assert!((var[c] as f64 - v).abs() / v.max(1.0) < 1e-2, "col {c} var");
+    }
+}
+
+#[test]
+fn concurrent_calls_are_safe() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.artifact("sort_block").unwrap();
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            s.spawn(move || {
+                let keys = random_keys(100 + t);
+                let out = art.call_bytes(&[&u32_bytes(&keys)]).unwrap();
+                let (sorted, _, _) = sort_oracle(&keys);
+                assert_eq!(out[0].as_u32().unwrap(), &sorted[..]);
+            });
+        }
+    });
+    assert!(art.calls() >= 4);
+}

@@ -1,0 +1,127 @@
+//! Integration: simulator vs analytic model — the two §4 artifacts must
+//! agree with each other, and the simulated Figure 5/7 shapes must match
+//! the paper's qualitative claims across a parameter sweep (not just the
+//! single calibrated point the unit tests pin).
+
+use tlstore::model::{CaseStudyParams, ClusterParams};
+use tlstore::sim::{simulate_terasort, BackendKind, ClusterSim, SimConstants, Simulator, Stage, Task};
+
+/// Per-node read throughput measured by simulating N concurrent readers.
+fn sim_read_per_node(backend: BackendKind, n: usize, m: usize) -> f64 {
+    let c = ClusterSim::new(n, m, 1, SimConstants::default());
+    let sim = Simulator::new(c.resources.clone(), vec![1; n]);
+    let d = 512.0;
+    let tasks: Vec<Task> = (0..n)
+        .map(|i| Task {
+            node: i,
+            stages: vec![Stage {
+                flows: c.read_flows(backend, i, d),
+            }],
+        })
+        .collect();
+    let out = sim.run(tasks).unwrap();
+    d / out.makespan
+}
+
+#[test]
+fn sim_matches_model_eq3_across_geometries() {
+    for (n, m) in [(4usize, 1usize), (8, 2), (16, 2), (32, 4), (64, 2)] {
+        let model = ClusterParams::palmetto().with_n(n as u32);
+        let model = ClusterParams { m: m as u32, ..model };
+        let sim = sim_read_per_node(BackendKind::Ofs, n, m);
+        let expect = model.ofs_read();
+        let err = (sim - expect).abs() / expect;
+        assert!(err < 0.10, "N={n} M={m}: sim {sim:.1} vs model {expect:.1}");
+    }
+}
+
+#[test]
+fn sim_matches_model_eq7_across_f() {
+    let p = ClusterParams::palmetto();
+    for f_pct in [0u8, 25, 50, 75, 100] {
+        let sim = sim_read_per_node(BackendKind::Tls { f_pct }, 16, 2);
+        let expect = p.tls_read(f_pct as f64 / 100.0);
+        let err = (sim - expect).abs() / expect;
+        assert!(err < 0.12, "f={f_pct}%: sim {sim:.1} vs model {expect:.1}");
+    }
+}
+
+#[test]
+fn tls_always_beats_bare_pfs_on_reads() {
+    // the paper's core claim: for any residency f > 0, two-level ≥ OFS
+    for f_pct in [10u8, 30, 60, 90] {
+        for (n, m) in [(8usize, 2usize), (16, 2), (32, 4)] {
+            let tls = sim_read_per_node(BackendKind::Tls { f_pct }, n, m);
+            let ofs = sim_read_per_node(BackendKind::Ofs, n, m);
+            assert!(
+                tls > ofs * 0.99,
+                "f={f_pct}% N={n} M={m}: tls {tls:.1} ≤ ofs {ofs:.1}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fig5_crossover_shape_holds_in_simulation() {
+    // HDFS aggregate read grows with N; PFS is flat — verify the ordering
+    // flips somewhere between N=4 and N=64 with a small PFS (M=1)
+    let mut flipped = false;
+    let mut last_hdfs_smaller = true;
+    for n in [4usize, 8, 16, 32, 64] {
+        let hdfs_agg = sim_read_per_node(BackendKind::Hdfs, n, 1) * n as f64;
+        let ofs_agg = sim_read_per_node(BackendKind::Ofs, n, 1) * n as f64;
+        let hdfs_smaller = hdfs_agg < ofs_agg;
+        if last_hdfs_smaller && !hdfs_smaller {
+            flipped = true;
+        }
+        last_hdfs_smaller = hdfs_smaller;
+    }
+    assert!(flipped, "HDFS must overtake the PFS as N grows (Figure 5)");
+}
+
+#[test]
+fn fig7_full_matrix_ordering_is_stable() {
+    // across data sizes and container counts, the mapper ordering
+    // TLS < OFS < HDFS (time) must hold
+    for gb in [4.0, 16.0] {
+        for containers in [8usize, 16] {
+            let hdfs = simulate_terasort(BackendKind::Hdfs, 16, 2, containers, gb, SimConstants::default()).unwrap();
+            let ofs = simulate_terasort(BackendKind::Ofs, 16, 2, containers, gb, SimConstants::default()).unwrap();
+            let tls = simulate_terasort(BackendKind::Tls { f_pct: 100 }, 16, 2, containers, gb, SimConstants::default()).unwrap();
+            assert!(
+                tls.map_time < ofs.map_time && ofs.map_time < hdfs.map_time,
+                "gb={gb} c={containers}: tls {:.1} ofs {:.1} hdfs {:.1}",
+                tls.map_time,
+                ofs.map_time,
+                hdfs.map_time
+            );
+        }
+    }
+}
+
+#[test]
+fn reduce_phase_scales_with_data_nodes_monotonically() {
+    let mut last = f64::INFINITY;
+    for m in [2usize, 4, 6, 8, 12] {
+        let r = simulate_terasort(BackendKind::Tls { f_pct: 100 }, 16, m, 16, 16.0, SimConstants::default()).unwrap();
+        assert!(
+            r.reduce_time <= last * 1.001,
+            "reduce time must not increase with data nodes (m={m})"
+        );
+        last = r.reduce_time;
+    }
+}
+
+#[test]
+fn case_study_params_internally_consistent() {
+    // the §4.5 parameterization must agree with its own general form as
+    // the PFS aggregate becomes the binding term
+    let cs = CaseStudyParams::new(10_000.0);
+    for n in [50u32, 100, 500] {
+        let per_node = cs.pfs_per_node(n);
+        assert!((per_node - (10_000.0 / n as f64).min(1170.0)).abs() < 1e-9);
+        // TLS read per node must interpolate between PFS and RAM
+        let tls = cs.tls_read_aggregate(n, 0.5) / n as f64;
+        assert!(tls > per_node && tls < 6267.0, "n={n} tls={tls}");
+    }
+}

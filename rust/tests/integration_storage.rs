@@ -1,0 +1,229 @@
+//! Integration: cross-module storage behaviour — the two-level store with
+//! its coordinator under concurrency, failure injection on the PFS tier,
+//! cache-pressure semantics, and backend interchangeability via the
+//! ObjectStore trait.
+
+use std::sync::Arc;
+
+use tlstore::coordinator::{CheckpointerConfig, Coordinator};
+use tlstore::storage::hdfs::HdfsLike;
+use tlstore::storage::pfs::Pfs;
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::{ObjectStore, ReadMode, WriteMode};
+use tlstore::testing::TempDir;
+use tlstore::util::rng::Pcg32;
+
+fn rand_data(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg32::new(seed, 1);
+    let mut v = vec![0u8; n];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+fn tls(dir: &TempDir, mem: u64) -> TwoLevelStore {
+    let cfg = TlsConfig::builder(dir.path())
+        .mem_capacity(mem)
+        .block_size(64 << 10)
+        .pfs_servers(3)
+        .stripe_size(16 << 10)
+        .build()
+        .unwrap();
+    TwoLevelStore::open(cfg).unwrap()
+}
+
+#[test]
+fn every_backend_honors_object_store_contract() {
+    let cases: Vec<(TempDir, Box<dyn Fn(&TempDir) -> Arc<dyn ObjectStore>>)> = vec![
+        (
+            TempDir::new("c-tls").unwrap(),
+            Box::new(|d: &TempDir| Arc::new(tls(d, 8 << 20)) as Arc<dyn ObjectStore>),
+        ),
+        (
+            TempDir::new("c-pfs").unwrap(),
+            Box::new(|d: &TempDir| Arc::new(Pfs::open(d.path(), 3, 4096).unwrap())),
+        ),
+        (
+            TempDir::new("c-hdfs").unwrap(),
+            Box::new(|d: &TempDir| Arc::new(HdfsLike::open(d.path(), 4, 2).unwrap())),
+        ),
+    ];
+    for (dir, mk) in &cases {
+        let store = mk(dir);
+        let kind = store.kind();
+        let a = rand_data(50_000, 1);
+        let b = rand_data(1, 2);
+        store.write("p/a", &a).unwrap();
+        store.write("p/b", &b).unwrap();
+        store.write("q/c", b"c").unwrap();
+
+        assert_eq!(store.read("p/a").unwrap(), a, "{kind}");
+        assert_eq!(store.read_range("p/a", 100, 50).unwrap(), &a[100..150], "{kind}");
+        assert_eq!(store.read_range("p/a", 49_999, 10).unwrap(), &a[49_999..], "{kind}");
+        assert_eq!(store.size("p/a").unwrap(), 50_000, "{kind}");
+        assert!(store.exists("p/b"), "{kind}");
+        assert_eq!(store.list("p/"), vec!["p/a", "p/b"], "{kind}");
+        // overwrite
+        store.write("p/a", &b).unwrap();
+        assert_eq!(store.read("p/a").unwrap(), b, "{kind}");
+        // delete idempotent
+        store.delete("p/a").unwrap();
+        store.delete("p/a").unwrap();
+        assert!(!store.exists("p/a"), "{kind}");
+        assert!(store.read("p/a").is_err(), "{kind}");
+    }
+}
+
+#[test]
+fn concurrent_mixed_workload_on_tls() {
+    let dir = TempDir::new("conc").unwrap();
+    let store = Arc::new(tls(&dir, 1 << 20)); // tight memory: force eviction
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let store = Arc::clone(&store);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::for_task(9, t);
+            for i in 0..30 {
+                let key = format!("t{t}/obj{i}");
+                let body = rand_data((rng.gen_range(120_000) + 1) as usize, t * 100 + i);
+                let mode = match i % 3 {
+                    0 => WriteMode::WriteThrough,
+                    1 => WriteMode::Bypass,
+                    _ => WriteMode::MemOnly,
+                };
+                store.write(&key, &body, mode).unwrap();
+                let back = store.read(&key, ReadMode::TwoLevel).unwrap();
+                assert_eq!(back, body, "{key}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // memory tier never exceeded capacity
+    assert!(store.mem().used() <= 1 << 20);
+    // every object still fully readable after the storm
+    for t in 0..6u64 {
+        for i in 0..30 {
+            let key = format!("t{t}/obj{i}");
+            assert!(store.read(&key, ReadMode::TwoLevel).is_ok(), "{key}");
+        }
+    }
+}
+
+#[test]
+fn pfs_server_loss_is_detected() {
+    let dir = TempDir::new("fault").unwrap();
+    let store = tls(&dir, 8 << 20);
+    let body = rand_data(200_000, 3);
+    store.write("victim", &body, WriteMode::WriteThrough).unwrap();
+    store.evict_object("victim").unwrap();
+
+    // destroy one PFS server directory (data-node failure)
+    let server0 = dir.path().join("pfs").join("server0");
+    std::fs::remove_dir_all(&server0).unwrap();
+
+    let err = store.read("victim", ReadMode::TwoLevel).unwrap_err();
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("server") || msg.contains("No such file") || msg.contains("i/o"),
+        "unexpected error: {msg}"
+    );
+}
+
+#[test]
+fn corruption_on_pfs_surfaces_as_checksum_error() {
+    let dir = TempDir::new("corrupt").unwrap();
+    let store = tls(&dir, 8 << 20);
+    let body = rand_data(100_000, 4);
+    store.write("c", &body, WriteMode::WriteThrough).unwrap();
+    store.evict_object("c").unwrap();
+
+    // flip one byte in one stripe file
+    let server1 = dir.path().join("pfs").join("server1");
+    let df = std::fs::read_dir(&server1)
+        .unwrap()
+        .flatten()
+        .find(|e| e.file_name().to_string_lossy().starts_with("c."))
+        .expect("datafile");
+    let mut bytes = std::fs::read(df.path()).unwrap();
+    bytes[10] ^= 0xFF;
+    std::fs::write(df.path(), bytes).unwrap();
+
+    // whole-object bypass read checks the object CRC
+    let err = store.read("c", ReadMode::Bypass).unwrap_err();
+    assert!(matches!(err, tlstore::Error::ChecksumMismatch { .. }), "{err}");
+}
+
+#[test]
+fn coordinator_survives_write_burst_with_tight_backpressure() {
+    let dir = TempDir::new("burst").unwrap();
+    let store = Arc::new(tls(&dir, 2 << 20));
+    let coord = Coordinator::new(
+        Arc::clone(&store),
+        CheckpointerConfig {
+            max_pending: 4,
+            ..Default::default()
+        },
+    );
+    for i in 0..64 {
+        coord
+            .write_async(&format!("burst/{i}"), &rand_data(30_000, i))
+            .unwrap();
+    }
+    coord.flush().unwrap();
+    let stats = coord.checkpointer().stats();
+    assert_eq!(stats.completed, 64);
+    assert!(stats.backpressure_events > 0);
+    for i in 0..64 {
+        assert_eq!(
+            store.read(&format!("burst/{i}"), ReadMode::Bypass).unwrap(),
+            rand_data(30_000, i)
+        );
+    }
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn restart_recovers_pfs_state_and_cold_cache_warms() {
+    let dir = TempDir::new("restart").unwrap();
+    let bodies: Vec<Vec<u8>> = (0..5).map(|i| rand_data(80_000, 50 + i)).collect();
+    {
+        let store = tls(&dir, 8 << 20);
+        for (i, b) in bodies.iter().enumerate() {
+            store.write(&format!("keep/{i}"), b, WriteMode::WriteThrough).unwrap();
+        }
+    }
+    let store = tls(&dir, 8 << 20);
+    assert_eq!(store.list("keep/").len(), 5);
+    // cold: first reads hit the PFS tier
+    for (i, b) in bodies.iter().enumerate() {
+        assert_eq!(&store.read(&format!("keep/{i}"), ReadMode::TwoLevel).unwrap(), b);
+    }
+    assert!(store.stats().pfs_bytes_read >= 5 * 80_000);
+    // warm: repeat reads come from memory
+    let before = store.stats().mem_bytes_read;
+    for i in 0..5 {
+        store.read(&format!("keep/{i}"), ReadMode::TwoLevel).unwrap();
+    }
+    assert!(store.stats().mem_bytes_read >= before + 5 * 80_000);
+}
+
+#[test]
+fn memonly_data_larger_than_memory_spills_and_survives() {
+    let dir = TempDir::new("spill").unwrap();
+    let store = tls(&dir, 256 << 10); // 4 blocks of 64 KiB
+    let bodies: Vec<Vec<u8>> = (0..8).map(|i| rand_data(128 << 10, 80 + i)).collect();
+    for (i, b) in bodies.iter().enumerate() {
+        store.write(&format!("big/{i}"), b, WriteMode::MemOnly).unwrap();
+    }
+    assert!(store.stats().dirty_spills > 0, "eviction must have spilled");
+    for (i, b) in bodies.iter().enumerate() {
+        assert_eq!(&store.read(&format!("big/{i}"), ReadMode::TwoLevel).unwrap(), b, "obj {i}");
+    }
+    // checkpoint everything; dirty namespace must drain
+    for key in store.unpersisted() {
+        store.checkpoint(&key).unwrap();
+    }
+    assert!(store.unpersisted().is_empty());
+    assert!(store.pfs().list(".dirty/").is_empty());
+}

@@ -1,0 +1,232 @@
+//! Property tests on coordinator invariants (routing, batching, state):
+//!
+//! - router: every read returns correct bytes regardless of residency;
+//!   mem_reads + pfs_reads == total reads
+//! - checkpointer: after flush, every enqueued object is persisted and
+//!   the dirty namespace is empty; backlog never exceeds max_pending
+//! - partitioner (TeraSort routing): monotone over the key space and
+//!   covers all partitions for balanced histograms
+//! - scheduler: every split assigned exactly once; load spread ≤ ceil
+
+use std::sync::Arc;
+
+use tlstore::coordinator::{CheckpointerConfig, Coordinator};
+use tlstore::mapreduce::{InputSplit, LocalityScheduler};
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::{ObjectStore, ReadMode, WriteMode};
+use tlstore::terasort::Partitioner;
+use tlstore::testing::{proprun, PropConfig, TempDir};
+
+fn cfg(cases: u32, max_size: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        max_size,
+        ..Default::default()
+    }
+}
+
+fn mk_store(dir: &TempDir) -> Arc<TwoLevelStore> {
+    Arc::new(
+        TwoLevelStore::open(
+            TlsConfig::builder(dir.path())
+                .mem_capacity(96 << 10)
+                .block_size(16 << 10)
+                .pfs_servers(2)
+                .stripe_size(8 << 10)
+                .build()
+                .unwrap(),
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn prop_router_counts_and_correctness() {
+    let dir = TempDir::new("prop-router").unwrap();
+    let store = mk_store(&dir);
+    let coord = Coordinator::new(Arc::clone(&store), CheckpointerConfig::default());
+    let counter = std::sync::atomic::AtomicU64::new(0);
+    proprun(
+        "router",
+        cfg(40, 32),
+        |rng, size| {
+            let n = rng.gen_range((size * 4096) as u32 + 1) as usize;
+            let mut v = vec![0u8; n];
+            rng.fill_bytes(&mut v);
+            let evict = rng.gen_range(2) == 0;
+            (v, evict)
+        },
+        |(data, evict)| {
+            let key = format!(
+                "r{}",
+                counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            );
+            let before = coord.router().stats();
+            coord.write_sync(&key, data).map_err(|e| format!("{e}"))?;
+            if *evict {
+                store.evict_object(&key).map_err(|e| format!("{e}"))?;
+            }
+            let got = coord.read(&key).map_err(|e| format!("{e}"))?;
+            if got != *data {
+                return Err("router returned wrong bytes".into());
+            }
+            let after = coord.router().stats();
+            let total = (after.mem_reads - before.mem_reads) + (after.pfs_reads - before.pfs_reads);
+            if total != 1 {
+                return Err(format!("read counted {total} times"));
+            }
+            if after.bytes - before.bytes != data.len() as u64 {
+                return Err("byte accounting off".into());
+            }
+            Ok(())
+        },
+    );
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn prop_checkpointer_flush_persists_everything() {
+    proprun(
+        "checkpointer",
+        cfg(12, 16),
+        |rng, size| {
+            let objects: Vec<usize> = (0..size.max(1))
+                .map(|_| rng.gen_range(40_000) as usize + 1)
+                .collect();
+            let max_pending = rng.gen_range(6) as usize + 1;
+            (objects, max_pending)
+        },
+        |(objects, max_pending)| {
+            let dir = TempDir::new("prop-ckpt").unwrap();
+            let store = mk_store(&dir);
+            let coord = Coordinator::new(
+                Arc::clone(&store),
+                CheckpointerConfig {
+                    max_pending: *max_pending,
+                    ..Default::default()
+                },
+            );
+            for (i, n) in objects.iter().enumerate() {
+                coord
+                    .write_async(&format!("o{i}"), &vec![(i % 251) as u8; *n])
+                    .map_err(|e| format!("{e}"))?;
+                if coord.checkpointer().backlog() > *max_pending {
+                    return Err("backlog exceeded max_pending".into());
+                }
+            }
+            coord.flush().map_err(|e| format!("{e}"))?;
+            if !store.unpersisted().is_empty() {
+                return Err(format!("unpersisted after flush: {:?}", store.unpersisted()));
+            }
+            if !store.pfs().list(".dirty/").is_empty() {
+                return Err("dirty namespace not drained".into());
+            }
+            for (i, n) in objects.iter().enumerate() {
+                let got = store
+                    .read(&format!("o{i}"), ReadMode::Bypass)
+                    .map_err(|e| format!("{e}"))?;
+                if got != vec![(i % 251) as u8; *n] {
+                    return Err(format!("object o{i} corrupted"));
+                }
+            }
+            coord.shutdown().map_err(|e| format!("{e}"))?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partitioner_monotone_and_complete() {
+    proprun(
+        "partitioner",
+        cfg(100, 64),
+        |rng, _size| {
+            let parts = rng.gen_range(255) + 1;
+            let mut hist = [0i64; 256];
+            for h in hist.iter_mut() {
+                *h = rng.gen_range(1000) as i64;
+            }
+            (parts, hist)
+        },
+        |&(parts, hist)| {
+            let p = Partitioner::from_histogram(&hist, parts);
+            if !p.is_monotone() {
+                return Err("not monotone".into());
+            }
+            // first bucket → partition 0; last bucket → last partition may
+            // be unused for skewed data, but never out of range
+            if p.partition_of(0) != 0 && hist[0] > 0 {
+                return Err("bucket 0 not in partition 0".into());
+            }
+            // keys in the same bucket always agree
+            for b in [0u32, 17, 255] {
+                let lo = b << 24;
+                let hi = (b << 24) | 0x00FF_FFFF;
+                if p.partition_of(lo) != p.partition_of(hi) {
+                    return Err(format!("bucket {b} split across partitions"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_assigns_each_split_once_balanced() {
+    proprun(
+        "scheduler",
+        cfg(100, 64),
+        |rng, size| {
+            let nodes = rng.gen_range(12) as usize + 1;
+            let splits: Vec<Option<usize>> = (0..size * 3)
+                .map(|_| {
+                    if rng.gen_range(4) == 0 {
+                        None
+                    } else {
+                        Some(rng.gen_range(16) as usize)
+                    }
+                })
+                .collect();
+            (nodes, splits)
+        },
+        |(nodes, prefs)| {
+            let splits: Vec<InputSplit> = prefs
+                .iter()
+                .map(|p| InputSplit {
+                    object: "o".into(),
+                    offset: 0,
+                    len: 1,
+                    preferred_node: *p,
+                })
+                .collect();
+            let sched = LocalityScheduler::new(*nodes, 4);
+            let (assigns, hits) = sched.assign(&splits);
+            if assigns.len() != splits.len() {
+                return Err("missing assignments".into());
+            }
+            let mut seen = vec![false; splits.len()];
+            let mut load = vec![0usize; *nodes];
+            for a in &assigns {
+                if seen[a.split] {
+                    return Err(format!("split {} assigned twice", a.split));
+                }
+                seen[a.split] = true;
+                if a.node >= *nodes {
+                    return Err("node out of range".into());
+                }
+                load[a.node] += 1;
+                if a.local && splits[a.split].preferred_node.map(|p| p % nodes) != Some(a.node) {
+                    return Err("local flag on non-preferred node".into());
+                }
+            }
+            if hits > splits.len() {
+                return Err("hits exceed splits".into());
+            }
+            let cap = splits.len().div_ceil(*nodes);
+            if load.iter().any(|&l| l > cap) {
+                return Err(format!("node over balanced cap: {load:?} cap {cap}"));
+            }
+            Ok(())
+        },
+    );
+}
