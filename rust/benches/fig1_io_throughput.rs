@@ -8,16 +8,25 @@
 //! tier, single local file. Absolute numbers differ from Palmetto's; the
 //! ordering (RAM ≫ striped PFS ≥ plain file ≥ replicated) must hold.
 //!
+//! The final section sweeps **concurrent clients** against both storage
+//! tiers in their old and new configurations — single-mutex vs
+//! lock-striped memory tier, sequential vs dual-leg write-through — the
+//! scaling the paper's §4 aggregate-throughput models predict. The
+//! striped/concurrent column should pull ahead of the single-lock
+//! baseline from 4 clients up.
+//!
 //! Run: `cargo bench --bench fig1_io_throughput`
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use tlstore::bench::{header, Bencher};
 use tlstore::config::presets::{self, fig1_ratios, PAPER_CONSTANTS};
 use tlstore::storage::hdfs::HdfsLike;
 use tlstore::storage::memstore::MemStore;
 use tlstore::storage::pfs::Pfs;
-use tlstore::storage::ObjectStore;
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::{ObjectStore, ReadMode, WriteMode};
 use tlstore::testing::TempDir;
 use tlstore::util::rng::Pcg32;
 
@@ -28,6 +37,69 @@ fn payload() -> Vec<u8> {
     let mut v = vec![0u8; SIZE];
     rng.fill_bytes(&mut v);
     v
+}
+
+/// Aggregate MB/s of `clients` threads doing mixed put/get against one
+/// memory tier with `shards` lock stripes (zero-copy puts: this measures
+/// lock contention and eviction accounting, which is exactly what striping
+/// removes).
+fn sweep_memstore(shards: usize, clients: usize, block: usize, ops: usize) -> f64 {
+    let m = Arc::new(MemStore::with_shards(64 << 20, "lru", shards).unwrap());
+    let payload: Arc<[u8]> = vec![0xA5u8; block].into();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let m = Arc::clone(&m);
+            let payload = Arc::clone(&payload);
+            s.spawn(move || {
+                for i in 0..ops {
+                    let key = format!("c{c}/b{i}");
+                    m.put(&key, Arc::clone(&payload)).unwrap();
+                    std::hint::black_box(m.get(&key));
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    (clients * ops * block * 2) as f64 / 1e6 / dt
+}
+
+/// Aggregate MB/s of `clients` threads each doing `ops` write-through
+/// writes plus two-level read-backs against one two-level store.
+fn sweep_tls(concurrent: bool, shards: usize, clients: usize, obj: usize, ops: usize) -> f64 {
+    let dir = TempDir::new(&format!("fig1-sweep-s{shards}-c{clients}")).unwrap();
+    let cfg = TlsConfig::builder(dir.path())
+        .mem_capacity(256 << 20)
+        .block_size(1 << 20)
+        .pfs_servers(4)
+        .stripe_size(256 << 10)
+        .mem_shards(shards)
+        .concurrent_writethrough(concurrent)
+        .build()
+        .unwrap();
+    let store = Arc::new(TwoLevelStore::open(cfg).unwrap());
+    let payload: Arc<Vec<u8>> = Arc::new({
+        let mut rng = Pcg32::new(7, 7);
+        let mut v = vec![0u8; obj];
+        rng.fill_bytes(&mut v);
+        v
+    });
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let store = Arc::clone(&store);
+            let payload = Arc::clone(&payload);
+            s.spawn(move || {
+                for i in 0..ops {
+                    let key = format!("c{c}/o{i}");
+                    store.write(&key, &payload, WriteMode::WriteThrough).unwrap();
+                    std::hint::black_box(store.read(&key, ReadMode::TwoLevel).unwrap());
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    (clients * ops * obj * 2) as f64 / 1e6 / dt
 }
 
 fn main() {
@@ -143,5 +215,46 @@ fn main() {
     println!(
         "  mem write {mem_write:.0} MB/s > pfs read {pfs_read:.0} MB/s : {}",
         if mem_write > pfs_read { "OK" } else { "VIOLATION" }
+    );
+
+    // -- concurrent-client sweep: old path vs new path --------------------
+    let fast = std::env::var("TLSTORE_BENCH_FAST").is_ok();
+    let (mem_block, mem_ops) = if fast { (256 << 10, 64) } else { (1 << 20, 256) };
+    let (tls_obj, tls_ops) = if fast { (1 << 20, 4) } else { (4 << 20, 8) };
+    let striped = presets::tuning::default_mem_shards().max(8);
+    println!(
+        "\n== concurrent-client sweep: single-lock vs striped ({striped} shards), sequential vs dual-leg write-through =="
+    );
+    println!(
+        "{:>7} {:>15} {:>15} {:>15} {:>15}",
+        "clients", "mem 1-shard", "mem striped", "tls sequential", "tls concurrent"
+    );
+    let mut base4 = (0.0f64, 0.0f64);
+    let mut new4 = (0.0f64, 0.0f64);
+    for clients in [1usize, 2, 4, 8] {
+        let m1 = sweep_memstore(1, clients, mem_block, mem_ops);
+        let ms = sweep_memstore(striped, clients, mem_block, mem_ops);
+        let t_seq = sweep_tls(false, 1, clients, tls_obj, tls_ops);
+        let t_conc = sweep_tls(true, striped, clients, tls_obj, tls_ops);
+        println!(
+            "{clients:>7} {m1:>10.0} MB/s {ms:>10.0} MB/s {t_seq:>10.0} MB/s {t_conc:>10.0} MB/s"
+        );
+        if clients == 4 {
+            base4 = (m1, t_seq);
+            new4 = (ms, t_conc);
+        }
+    }
+    println!("\nshape check (tentpole: concurrency must pay at 4+ clients):");
+    println!(
+        "  mem striped {:.0} MB/s > mem single-lock {:.0} MB/s @4 clients : {}",
+        new4.0,
+        base4.0,
+        if new4.0 > base4.0 { "OK" } else { "VIOLATION" }
+    );
+    println!(
+        "  tls concurrent {:.0} MB/s > tls sequential {:.0} MB/s @4 clients : {}",
+        new4.1,
+        base4.1,
+        if new4.1 > base4.1 { "OK" } else { "VIOLATION" }
     );
 }

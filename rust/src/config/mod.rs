@@ -69,6 +69,10 @@ pub struct EngineConfig {
     pub eviction: String,
     /// Worker threads for parallel I/O and MapReduce containers.
     pub workers: usize,
+    /// Lock stripes of the memory tier (1 = the single-mutex baseline).
+    pub mem_shards: usize,
+    /// Issue write-through's memory and PFS legs concurrently.
+    pub concurrent_writethrough: bool,
     /// Directory holding AOT artifacts (HLO text + manifest).
     pub artifacts_dir: PathBuf,
 }
@@ -88,6 +92,8 @@ impl Default for EngineConfig {
             workers: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(2),
+            mem_shards: presets::tuning::default_mem_shards(),
+            concurrent_writethrough: true,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -148,6 +154,15 @@ impl EngineConfig {
         if let Some(v) = engine.get("workers").and_then(Value::as_int) {
             cfg.workers = v as usize;
         }
+        if let Some(v) = engine.get("mem_shards").and_then(Value::as_int) {
+            if v <= 0 {
+                return Err(Error::Config(format!("mem_shards must be > 0, got {v}")));
+            }
+            cfg.mem_shards = v as usize;
+        }
+        if let Some(v) = engine.get("concurrent_writethrough").and_then(Value::as_bool) {
+            cfg.concurrent_writethrough = v;
+        }
         if let Some(v) = get_str("artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(v);
         }
@@ -171,6 +186,9 @@ impl EngineConfig {
         }
         if self.app_buffer == 0 || self.pfs_buffer == 0 {
             return Err(Error::Config("buffers must be > 0".into()));
+        }
+        if self.mem_shards == 0 {
+            return Err(Error::Config("mem_shards must be > 0".into()));
         }
         if self.eviction != "lru" && self.eviction != "lfu" {
             return Err(Error::Config(format!(
@@ -236,6 +254,22 @@ eviction = "lfu"
     fn rejects_zero_sizes() {
         assert!(EngineConfig::from_toml_str("[engine]\nblock_size = 0\n").is_err());
         assert!(EngineConfig::from_toml_str("[engine]\npfs_servers = 0\n").is_err());
+        assert!(EngineConfig::from_toml_str("[engine]\nmem_shards = 0\n").is_err());
+        assert!(EngineConfig::from_toml_str("[engine]\nmem_shards = -1\n").is_err());
+    }
+
+    #[test]
+    fn concurrency_knobs_parse() {
+        let cfg = EngineConfig::from_toml_str(
+            "[engine]\nmem_shards = 12\nconcurrent_writethrough = false\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.mem_shards, 12);
+        assert!(!cfg.concurrent_writethrough);
+        // defaults
+        let cfg = EngineConfig::from_toml_str("").unwrap();
+        assert!(cfg.mem_shards >= 1);
+        assert!(cfg.concurrent_writethrough);
     }
 
     #[test]

@@ -98,6 +98,27 @@ pub const PALMETTO: PalmettoExperiment = PalmettoExperiment {
     terasort_input: 256 << 30,
 };
 
+/// Concurrency tuning defaults for the real (non-simulated) engines.
+///
+/// These are *ours*, not the paper's: the paper's testbed fixes hardware
+/// parallelism (Table 3); on arbitrary hosts the storage tiers size their
+/// lock striping and I/O fan-out from the machine instead.
+pub mod tuning {
+    /// Upper bound on the default memory-tier shard count — beyond this,
+    /// extra stripes stop paying for their per-shard eviction state.
+    pub const MAX_DEFAULT_MEM_SHARDS: usize = 16;
+
+    /// Default lock stripes for the memory tier: one per available core,
+    /// clamped to `[1, MAX_DEFAULT_MEM_SHARDS]`. `1` reproduces the
+    /// pre-striping single-mutex behaviour.
+    pub fn default_mem_shards() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(1, MAX_DEFAULT_MEM_SHARDS)
+    }
+}
+
 /// Figure 1 ratios quoted in §2.2 (used as cross-checks in tests/benches):
 /// RAM read ≈ 10× global read; global read ≈ 2.65× local read;
 /// RAM write ≈ 6.57× global write; global write ≈ 4× local write.
@@ -128,6 +149,12 @@ mod tests {
         let global_read = PAPER_CONSTANTS.disk_read_mbs * fig1_ratios::GLOBAL_OVER_LOCAL_READ;
         let ram_ratio = PAPER_CONSTANTS.ram_mbs / global_read;
         assert!((ram_ratio - fig1_ratios::RAM_OVER_GLOBAL_READ).abs() < 0.5, "{ram_ratio}");
+    }
+
+    #[test]
+    fn tuning_defaults_in_range() {
+        let n = tuning::default_mem_shards();
+        assert!(n >= 1 && n <= tuning::MAX_DEFAULT_MEM_SHARDS, "{n}");
     }
 
     #[test]

@@ -86,7 +86,7 @@ impl Checkpointer {
                         Err(e) => {
                             g.stats.failed += 1;
                             g.error = Some(format!("checkpoint {key}: {e}"));
-                            log::warn!("checkpoint {key} failed: {e}");
+                            crate::log_warn!("checkpoint {key} failed: {e}");
                         }
                     }
                     cv.notify_all();

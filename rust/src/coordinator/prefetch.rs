@@ -5,9 +5,10 @@
 //!
 //! The detector tracks per-object read cursors; once `trigger` consecutive
 //! sequential block accesses are observed, the next `depth` blocks are
-//! pulled from the PFS tier into the memory tier ahead of the reader, so
-//! a streaming scan over a cold object pays the PFS latency once per
-//! window instead of once per block.
+//! pulled from the PFS tier into the memory tier ahead of the reader —
+//! concurrently, one scoped thread per block, each fanning its stripe
+//! reads out across the PFS servers — so a streaming scan over a cold
+//! object pays the PFS latency once per window instead of once per block.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -116,17 +117,50 @@ impl Prefetcher {
             }
             self.sequences.fetch_add(1, Ordering::Relaxed);
             let to = (from + self.cfg.depth).min(geo.num_blocks());
-            for b in from..to {
-                let skey = BlockId::new(key, b).storage_key();
-                if self.store.mem().contains(&skey) {
-                    continue;
+            let targets: Vec<u64> = (from..to)
+                .filter(|b| !self.store.mem().contains(&BlockId::new(key, *b).storage_key()))
+                .collect();
+            // Pull the readahead window concurrently — each block rides
+            // the two-level path (which caches it), and each block's
+            // stripe reads already fan out per PFS server. Scoped threads
+            // (not the PFS pool) on purpose: a pool task blocking on the
+            // pool's own `map` could deadlock. Fan-out per window is
+            // capped so a large configured `depth` cannot stampede the
+            // host with threads.
+            const MAX_WINDOW_FANOUT: usize = 8;
+            let mut first_err = None;
+            for chunk in targets.chunks(MAX_WINDOW_FANOUT) {
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = chunk
+                        .iter()
+                        .map(|&b| {
+                            scope.spawn(move || {
+                                let (s, e) = geo.block_range(b);
+                                self.store
+                                    .read_range(key, s, (e - s) as usize, ReadMode::TwoLevel)
+                                    .map(|_| ())
+                            })
+                        })
+                        .collect();
+                    for h in handles {
+                        match h.join().expect("prefetch fetch panicked") {
+                            Ok(()) => {
+                                self.issued.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => {
+                                if first_err.is_none() {
+                                    first_err = Some(e);
+                                }
+                            }
+                        }
+                    }
+                });
+                if first_err.is_some() {
+                    break;
                 }
-                // pull the block through the two-level path (caches it)
-                let (s, e) = geo.block_range(b);
-                let _ = self
-                    .store
-                    .read_range(key, s, (e - s) as usize, ReadMode::TwoLevel)?;
-                self.issued.fetch_add(1, Ordering::Relaxed);
+            }
+            if let Some(e) = first_err {
+                return Err(e);
             }
         }
         Ok(data)

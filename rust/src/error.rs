@@ -1,56 +1,93 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the crate builds
+//! offline with zero external dependencies.
 
+use std::fmt;
 use std::path::PathBuf;
 
 /// All fallible tlstore operations return [`Result`].
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Unified error for storage, runtime, config, and job execution failures.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("i/o error on {path:?}: {source}")]
     Io {
         path: PathBuf,
-        #[source]
         source: std::io::Error,
     },
 
-    #[error("object not found: {0}")]
     NotFound(String),
 
-    #[error("object already exists: {0}")]
     AlreadyExists(String),
 
-    #[error("memory tier over capacity: need {need} bytes, capacity {capacity}")]
-    OverCapacity { need: u64, capacity: u64 },
+    OverCapacity {
+        need: u64,
+        capacity: u64,
+    },
 
-    #[error("checksum mismatch on {object}: stored {stored:#010x}, computed {computed:#010x}")]
     ChecksumMismatch {
         object: String,
         stored: u32,
         computed: u32,
     },
 
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("toml parse error at line {line}: {msg}")]
-    TomlParse { line: usize, msg: String },
+    TomlParse {
+        line: usize,
+        msg: String,
+    },
 
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    #[error("xla/pjrt error: {0}")]
     Xla(String),
 
-    #[error("job failed: {0}")]
     Job(String),
 
-    #[error("simulation error: {0}")]
     Sim(String),
 
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io { path, source } => write!(f, "i/o error on {path:?}: {source}"),
+            Error::NotFound(k) => write!(f, "object not found: {k}"),
+            Error::AlreadyExists(k) => write!(f, "object already exists: {k}"),
+            Error::OverCapacity { need, capacity } => write!(
+                f,
+                "memory tier over capacity: need {need} bytes, capacity {capacity}"
+            ),
+            Error::ChecksumMismatch {
+                object,
+                stored,
+                computed,
+            } => write!(
+                f,
+                "checksum mismatch on {object}: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::TomlParse { line, msg } => {
+                write!(f, "toml parse error at line {line}: {msg}")
+            }
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Xla(msg) => write!(f, "xla/pjrt error: {msg}"),
+            Error::Job(msg) => write!(f, "job failed: {msg}"),
+            Error::Sim(msg) => write!(f, "simulation error: {msg}"),
+            Error::InvalidArg(msg) => write!(f, "invalid argument: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
@@ -63,8 +100,44 @@ impl Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_contract() {
+        let e = Error::OverCapacity {
+            need: 10,
+            capacity: 5,
+        };
+        assert_eq!(
+            e.to_string(),
+            "memory tier over capacity: need 10 bytes, capacity 5"
+        );
+        let e = Error::ChecksumMismatch {
+            object: "o".into(),
+            stored: 1,
+            computed: 2,
+        };
+        assert!(e.to_string().contains("0x00000001"));
+        assert!(Error::NotFound("k".into()).to_string().contains("k"));
+    }
+
+    #[test]
+    fn io_errors_carry_source() {
+        use std::error::Error as _;
+        let e = Error::io(
+            "/nope",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("/nope"));
     }
 }

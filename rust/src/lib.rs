@@ -19,10 +19,19 @@
 //!
 //! | Layer | Module | Role |
 //! |---|---|---|
-//! | L3 | [`storage`], [`coordinator`], [`mapreduce`], [`terasort`] | the paper's system |
+//! | L3 | [`storage`] | lock-striped memory tier + parallel striped PFS tier + two-level store |
+//! | L3 | [`coordinator`], [`mapreduce`], [`terasort`] | checkpointing/prefetch, engine, workload |
 //! | L3 | [`model`], [`sim`] | §4 analytic models + cluster simulator |
-//! | L3 | [`runtime`] | PJRT: load + execute AOT artifacts |
+//! | L3 | [`runtime`] | PJRT: load + execute AOT artifacts (stubbed without the `pjrt` feature) |
 //! | L2/L1 | `python/compile/` | JAX graph + Pallas kernels (build time) |
+//!
+//! Both storage tiers serve clients concurrently: the memory tier is
+//! sharded over `mem_shards` lock stripes with one global capacity
+//! accountant, the PFS tier fans every object and range access out across
+//! its server directories, and write-through drives both tier legs at
+//! once. The knobs thread through [`config::EngineConfig`] / the
+//! [`storage::tls::TlsConfig`] builder; `docs/ARCHITECTURE.md` documents
+//! the data path and invariants.
 //!
 //! ## Quickstart
 //!
@@ -32,6 +41,8 @@
 //! let cfg = TlsConfig::builder("/tmp/tls-demo")
 //!     .mem_capacity(64 << 20)
 //!     .pfs_servers(4)
+//!     .mem_shards(8)                 // lock stripes of the memory tier
+//!     .concurrent_writethrough(true) // dual-leg §3.2 write path
 //!     .build()
 //!     .unwrap();
 //! let store = TwoLevelStore::open(cfg).unwrap();

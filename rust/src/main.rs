@@ -42,6 +42,11 @@ fn open_store(args: &Args) -> Result<Arc<dyn ObjectStore>> {
                 .stripe_size(args.get_bytes("stripe-size", 1 << 20)?)
                 .pfs_servers(servers)
                 .eviction(&args.get("eviction", "lru"))
+                .mem_shards(args.get_parse(
+                    "mem-shards",
+                    presets::tuning::default_mem_shards(),
+                )?)
+                .concurrent_writethrough(!args.has("sequential-writethrough"))
                 .build()?;
             Arc::new(TwoLevelStore::open(cfg)?)
         }

@@ -115,8 +115,8 @@ impl Registry {
 /// The global registry used by the engines (examples/benches may also make
 /// private registries).
 pub fn global() -> &'static Registry {
-    static GLOBAL: once_cell::sync::Lazy<Registry> = once_cell::sync::Lazy::new(Registry::new);
-    &GLOBAL
+    static GLOBAL: std::sync::OnceLock<Registry> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
 }
 
 #[cfg(test)]

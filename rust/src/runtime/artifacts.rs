@@ -43,7 +43,8 @@ impl DType {
         4
     }
 
-    /// The xla crate element type.
+    /// The xla crate element type (only meaningful in `pjrt` builds).
+    #[cfg(feature = "pjrt")]
     pub fn element_type(&self) -> xla::ElementType {
         match self {
             DType::U32 => xla::ElementType::U32,

@@ -86,13 +86,38 @@ impl BlockGeometry {
     }
 }
 
+/// IEEE CRC-32 lookup table, built at compile time (the offline crate set
+/// has no `crc32fast`; a one-byte-at-a-time table walk is plenty for the
+/// payload sizes the tiers move).
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
 /// CRC32 checksum of a block (the PFS tier verifies on read; the paper's
 /// data-node-level erasure coding is out of scope, per-block CRC gives the
 /// equivalent corruption *detection* signal).
 pub fn checksum(data: &[u8]) -> u32 {
-    let mut h = crc32fast::Hasher::new();
-    h.update(data);
-    h.finalize()
+    let mut c = !0u32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
 }
 
 /// Verify `data` against `stored`, or return [`Error::ChecksumMismatch`].

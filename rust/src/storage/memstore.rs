@@ -1,9 +1,36 @@
 //! The in-memory storage tier (the paper's Tachyon).
 //!
 //! A capacity-bounded block store: values are `Arc<[u8]>` so reads are
-//! zero-copy, eviction runs under the same short critical section as the
-//! insert that overflowed, and hit/miss/eviction counters feed the
-//! Figure-6/ablation benches.
+//! zero-copy, and hit/miss/eviction counters feed the Figure-6/ablation
+//! benches.
+//!
+//! ## Concurrency: lock striping + a global capacity accountant
+//!
+//! The tier is sharded into `N` lock-striped shards keyed by a hash of the
+//! block key: each shard owns its slice of the map and its own eviction
+//! policy state, so concurrent clients touching different blocks never
+//! contend on one global mutex (the paper's aggregate-throughput argument
+//! needs the memory tier to scale with client count, §4).
+//!
+//! Capacity is accounted **globally** by a single atomic: a `put` admits
+//! its bytes only after a successful compare-and-swap reservation against
+//! the accountant, evicting victims shard-by-shard until the reservation
+//! fits. Invariants:
+//!
+//! - `used ≤ capacity` at all times (reservations are CAS-guarded; bytes
+//!   are never admitted above the limit, even mid-`put`),
+//! - at most **one shard lock** is ever held by a thread (eviction walks
+//!   shards one at a time, starting at the inserting key's home shard), so
+//!   there is no lock order to violate and no deadlock,
+//! - eviction victims leave `put` with their bytes attached, exactly as in
+//!   the single-lock design, so the two-level store can spill dirty
+//!   victims to the PFS before the bytes are forgotten.
+//!
+//! [`MemStore::new`] builds a single shard — the deterministic legacy
+//! behaviour (global LRU/LFU order) that the eviction-order unit tests and
+//! the fig1 baseline measure. [`MemStore::with_shards`] builds the striped
+//! version; [`crate::storage::tls::TlsConfig::mem_shards`] selects the
+//! count for the two-level store.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -34,16 +61,21 @@ impl MemStats {
     }
 }
 
-struct Inner {
+/// One lock stripe: its slice of the key space plus private eviction state.
+struct Shard {
     map: HashMap<String, Arc<[u8]>>,
     policy: Box<dyn EvictionPolicy>,
-    used: u64,
 }
 
-/// Capacity-bounded in-memory block store with pluggable eviction.
+/// Capacity-bounded in-memory block store with pluggable eviction and
+/// configurable lock striping.
 pub struct MemStore {
-    inner: Mutex<Inner>,
+    shards: Vec<Mutex<Shard>>,
     capacity: u64,
+    /// The global capacity accountant: bytes admitted (reserved or
+    /// resident). Only ever raised through a CAS that proves
+    /// `used + len ≤ capacity`.
+    used: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -51,17 +83,33 @@ pub struct MemStore {
 }
 
 impl MemStore {
-    /// `capacity` bytes, `policy` = `"lru"` | `"lfu"`.
+    /// `capacity` bytes, `policy` = `"lru"` | `"lfu"`; a single shard
+    /// (deterministic global eviction order — the pre-striping behaviour
+    /// and the fig1 baseline).
     pub fn new(capacity: u64, policy: &str) -> Result<Self> {
-        let policy = eviction::by_name(policy)
-            .ok_or_else(|| Error::Config(format!("unknown eviction policy `{policy}`")))?;
-        Ok(Self {
-            inner: Mutex::new(Inner {
+        Self::with_shards(capacity, policy, 1)
+    }
+
+    /// As [`MemStore::new`] but striped over `shards` locks. Eviction
+    /// order is deterministic *within* a shard; across shards it depends
+    /// on key placement.
+    pub fn with_shards(capacity: u64, policy: &str, shards: usize) -> Result<Self> {
+        if shards == 0 {
+            return Err(Error::Config("mem shards must be > 0".into()));
+        }
+        let mut v = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let policy = eviction::by_name(policy)
+                .ok_or_else(|| Error::Config(format!("unknown eviction policy `{policy}`")))?;
+            v.push(Mutex::new(Shard {
                 map: HashMap::new(),
                 policy,
-                used: 0,
-            }),
+            }));
+        }
+        Ok(Self {
+            shards: v,
             capacity,
+            used: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -73,6 +121,50 @@ impl MemStore {
         self.capacity
     }
 
+    /// Number of lock stripes.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// FNV-1a over the key selects the home shard.
+    fn shard_of(&self, key: &str) -> usize {
+        let n = self.shards.len();
+        if n == 1 {
+            return 0;
+        }
+        (crate::util::bytes::fnv1a(key.as_bytes()) % n as u64) as usize
+    }
+
+    /// Evict victims until `need` extra bytes fit under `capacity`,
+    /// visiting shards round-robin from `home` and holding one shard lock
+    /// at a time. Returns whether any victim was evicted this call.
+    fn evict_for(
+        &self,
+        home: usize,
+        need: u64,
+        evicted: &mut Vec<(String, Arc<[u8]>)>,
+    ) -> bool {
+        let n = self.shards.len();
+        let mut progress = false;
+        for off in 0..n {
+            let mut g = self.shards[(home + off) % n].lock().unwrap();
+            while self.used.load(Ordering::SeqCst).saturating_add(need) > self.capacity {
+                let Some(victim) = g.policy.victim() else { break };
+                let bytes = g.map.remove(&victim).expect("policy tracks live keys");
+                self.used.fetch_sub(bytes.len() as u64, Ordering::SeqCst);
+                g.policy.on_remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                evicted.push((victim, bytes));
+                progress = true;
+            }
+            drop(g);
+            if self.used.load(Ordering::SeqCst).saturating_add(need) <= self.capacity {
+                return true;
+            }
+        }
+        progress
+    }
+
     /// Insert a block, evicting per policy until it fits. Returns the
     /// evicted `(key, bytes)` pairs so the caller (the two-level store)
     /// can spill un-persisted victims to the PFS before the bytes are
@@ -81,6 +173,13 @@ impl MemStore {
     /// A block larger than the whole tier is rejected with
     /// [`Error::OverCapacity`] — the paper's answer to that case is the
     /// PFS tier, not the memory tier.
+    ///
+    /// Overwrite visibility: re-`put`ting a *resident* key frees the old
+    /// bytes before reserving the new ones, so a concurrent `get` of that
+    /// key can miss inside the replace window (it never observes torn
+    /// bytes — only old value, new value, or a miss). The storage contract
+    /// is write-once-read-many ([`crate::storage::ObjectStore`]); callers
+    /// racing reads against overwrites of the same key are outside it.
     pub fn put(&self, key: &str, data: Arc<[u8]>) -> Result<Vec<(String, Arc<[u8]>)>> {
         let len = data.len() as u64;
         if len > self.capacity {
@@ -89,34 +188,60 @@ impl MemStore {
                 capacity: self.capacity,
             });
         }
-        let mut g = self.inner.lock().unwrap();
+        let home = self.shard_of(key);
+
+        // Replace-in-place frees the old bytes before the reservation, so
+        // re-writing a key never evicts on its own account.
+        {
+            let mut g = self.shards[home].lock().unwrap();
+            if let Some(old) = g.map.remove(key) {
+                self.used.fetch_sub(old.len() as u64, Ordering::SeqCst);
+                g.policy.on_remove(key);
+            }
+        }
+
+        // Reserve space against the global accountant. The CAS only
+        // succeeds while the result stays ≤ capacity, so the invariant
+        // holds at every instant, not just between puts.
         let mut evicted = Vec::new();
-        // replace-in-place frees the old bytes first
-        if let Some(old) = g.map.remove(key) {
-            g.used -= old.len() as u64;
+        loop {
+            let cur = self.used.load(Ordering::SeqCst);
+            let new = cur.saturating_add(len);
+            if new <= self.capacity {
+                if self
+                    .used
+                    .compare_exchange(cur, new, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    break;
+                }
+                continue; // raced another reservation; re-read
+            }
+            if !self.evict_for(home, len, &mut evicted) {
+                // Nothing evictable: another thread holds a reservation it
+                // has not yet published. It will publish without blocking
+                // on us, so yield and retry.
+                std::thread::yield_now();
+            }
+        }
+
+        // Publish under the home shard lock.
+        let mut g = self.shards[home].lock().unwrap();
+        if let Some(old) = g.map.insert(key.to_string(), data) {
+            // Another thread published the same key between our removal
+            // and now; treat it as the replace above.
+            self.used.fetch_sub(old.len() as u64, Ordering::SeqCst);
             g.policy.on_remove(key);
         }
-        while g.used + len > self.capacity {
-            let victim = g
-                .policy
-                .victim()
-                .expect("used > 0 implies a tracked victim");
-            let bytes = g.map.remove(&victim).expect("policy tracks live keys");
-            g.used -= bytes.len() as u64;
-            g.policy.on_remove(&victim);
-            self.evictions.fetch_add(1, Ordering::Relaxed);
-            evicted.push((victim, bytes));
-        }
-        g.map.insert(key.to_string(), data);
-        g.used += len;
         g.policy.on_insert(key);
+        drop(g);
         self.inserts.fetch_add(1, Ordering::Relaxed);
         Ok(evicted)
     }
 
     /// Fetch a block (recording a hit or miss and a policy access).
     pub fn get(&self, key: &str) -> Option<Arc<[u8]>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shards[self.shard_of(key)].lock().unwrap();
         match g.map.get(key).cloned() {
             Some(v) => {
                 g.policy.on_access(key);
@@ -133,20 +258,29 @@ impl MemStore {
     /// Peek without touching eviction state or counters (used by tests and
     /// the checkpointer).
     pub fn peek(&self, key: &str) -> Option<Arc<[u8]>> {
-        self.inner.lock().unwrap().map.get(key).cloned()
+        self.shards[self.shard_of(key)]
+            .lock()
+            .unwrap()
+            .map
+            .get(key)
+            .cloned()
     }
 
     /// Whether the key is currently resident.
     pub fn contains(&self, key: &str) -> bool {
-        self.inner.lock().unwrap().map.contains_key(key)
+        self.shards[self.shard_of(key)]
+            .lock()
+            .unwrap()
+            .map
+            .contains_key(key)
     }
 
     /// Remove a block if present; returns whether it was.
     pub fn remove(&self, key: &str) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shards[self.shard_of(key)].lock().unwrap();
         match g.map.remove(key) {
             Some(bytes) => {
-                g.used -= bytes.len() as u64;
+                self.used.fetch_sub(bytes.len() as u64, Ordering::SeqCst);
                 g.policy.on_remove(key);
                 true
             }
@@ -154,22 +288,21 @@ impl MemStore {
         }
     }
 
-    /// Resident keys with `prefix`, sorted.
+    /// Resident keys with `prefix`, sorted (shards are visited one at a
+    /// time; the result is a point-in-time union, not an atomic snapshot).
     pub fn list(&self, prefix: &str) -> Vec<String> {
-        let g = self.inner.lock().unwrap();
-        let mut keys: Vec<String> = g
-            .map
-            .keys()
-            .filter(|k| k.starts_with(prefix))
-            .cloned()
-            .collect();
+        let mut keys = Vec::new();
+        for shard in &self.shards {
+            let g = shard.lock().unwrap();
+            keys.extend(g.map.keys().filter(|k| k.starts_with(prefix)).cloned());
+        }
         keys.sort();
         keys
     }
 
-    /// Bytes currently resident.
+    /// Bytes currently admitted (resident plus in-flight reservations).
     pub fn used(&self) -> u64 {
-        self.inner.lock().unwrap().used
+        self.used.load(Ordering::SeqCst)
     }
 
     pub fn stats(&self) -> MemStats {
@@ -326,5 +459,101 @@ mod tests {
             h.join().unwrap();
         }
         assert!(m.used() <= 1000, "used={} cap=1000", m.used());
+    }
+
+    // -- striped-shard behaviour ------------------------------------------
+
+    #[test]
+    fn sharded_roundtrip_and_accounting() {
+        let m = MemStore::with_shards(1 << 20, "lru", 8).unwrap();
+        assert_eq!(m.shards(), 8);
+        let mut total = 0u64;
+        for i in 0..64 {
+            m.put(&format!("obj#{i}"), bytes(100 + i, i as u8)).unwrap();
+            total += 100 + i as u64;
+        }
+        assert_eq!(m.used(), total);
+        for i in 0..64 {
+            assert_eq!(m.get(&format!("obj#{i}")).unwrap().len(), 100 + i);
+        }
+        assert_eq!(m.list("obj#").len(), 64);
+        assert!(m.remove("obj#0"));
+        assert_eq!(m.used(), total - 100);
+    }
+
+    #[test]
+    fn sharded_zero_shards_rejected() {
+        assert!(MemStore::with_shards(100, "lru", 0).is_err());
+        assert!(MemStore::with_shards(100, "nope", 4).is_err());
+    }
+
+    #[test]
+    fn sharded_eviction_crosses_shards() {
+        // With many shards and a capacity for only 2 blocks, inserting a
+        // third must evict from *some* shard, wherever the victims live.
+        let m = MemStore::with_shards(100, "lru", 16).unwrap();
+        m.put("a", bytes(40, 0)).unwrap();
+        m.put("b", bytes(40, 0)).unwrap();
+        let evicted = m.put("c", bytes(40, 0)).unwrap();
+        assert_eq!(evicted.len(), 1, "one 40-byte victim frees enough");
+        assert_eq!(m.used(), 80);
+        assert!(m.contains("c"), "the new key is never its own victim");
+    }
+
+    #[test]
+    fn sharded_concurrent_puts_never_exceed_capacity() {
+        let m = Arc::new(MemStore::with_shards(10_000, "lru", 8).unwrap());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        // sampler: the accountant invariant must hold at every instant
+        let sampler = {
+            let m = Arc::clone(&m);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut max_seen = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    max_seen = max_seen.max(m.used());
+                    std::thread::yield_now();
+                }
+                max_seen
+            })
+        };
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200 {
+                    m.put(&format!("t{t}/k{i}"), bytes(128, t as u8)).unwrap();
+                    let _ = m.get(&format!("t{t}/k{}", i / 2));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let max_seen = sampler.join().unwrap();
+        assert!(max_seen <= 10_000, "observed used {max_seen} > capacity");
+        assert!(m.used() <= 10_000);
+        assert!(m.stats().evictions > 0, "pressure must have evicted");
+    }
+
+    #[test]
+    fn sharded_concurrent_readers_and_writers_agree() {
+        let m = Arc::new(MemStore::with_shards(1 << 20, "lfu", 4).unwrap());
+        std::thread::scope(|s| {
+            for t in 0..4u8 {
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    for i in 0..100 {
+                        let key = format!("w{t}/{i}");
+                        m.put(&key, bytes(64, t)).unwrap();
+                        // read-your-writes under striping
+                        let back = m.get(&key).expect("own write visible");
+                        assert_eq!(back[0], t);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.list("w").len(), 400);
     }
 }

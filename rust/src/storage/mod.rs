@@ -1,19 +1,28 @@
 //! Storage engines: the paper's two-level storage plus every baseline.
 //!
-//! - [`memstore`] — the in-memory tier (the paper's **Tachyon**): block
-//!   store with capacity accounting and pluggable LRU/LFU eviction.
+//! - [`memstore`] — the in-memory tier (the paper's **Tachyon**): a
+//!   **lock-striped** block store (`mem_shards` stripes keyed by block
+//!   hash, per-shard LRU/LFU eviction state, one global CAS-guarded
+//!   capacity accountant) so concurrent clients scale instead of
+//!   serializing on a single mutex.
 //! - [`pfs`] — the parallel-FS tier (the paper's **OrangeFS**): objects
-//!   striped round-robin across server directories, with layout hints.
+//!   striped round-robin across server directories, with layout hints;
+//!   whole-object *and* ranged I/O fan out one task per server through the
+//!   shared thread pool.
 //! - [`hdfs`] — the baseline: replicated whole blocks on "compute node"
 //!   local disks (Hadoop's 1 local + N−1 remote copies).
 //! - [`tls`] — the contribution: the two-level store combining the memory
 //!   tier with the PFS tier under the paper's three write modes and three
-//!   read modes (Figure 4), dual I/O buffers (§3.2), and block↔stripe
-//!   layout mapping (Figure 3, [`layout`]).
+//!   read modes (Figure 4), dual I/O buffers (§3.2) with write-through
+//!   driving both tier legs concurrently, and block↔stripe layout mapping
+//!   (Figure 3, [`layout`]).
 //!
 //! All engines implement [`ObjectStore`], so MapReduce jobs and benches are
 //! generic over the backend — exactly how the paper swaps HDFS / OrangeFS /
-//! two-level under the same TeraSort workload.
+//! two-level under the same TeraSort workload. The concurrency knobs
+//! thread through [`crate::config::EngineConfig`] (`mem_shards`,
+//! `concurrent_writethrough`, `workers`) and the `TlsConfig` builder; see
+//! `docs/ARCHITECTURE.md` for the sharding and lock-order invariants.
 
 pub mod block;
 pub mod buffer;

@@ -12,7 +12,11 @@
 //!
 //! Server I/O is issued in parallel (one task per server via the shared
 //! [`ThreadPool`]), which is what gives the tier its aggregate-bandwidth
-//! behaviour: a read of one object engages every data node at once.
+//! behaviour: a read of one object engages every data node at once. This
+//! covers all three access shapes: whole-object writes, whole-object
+//! reads, and ranged reads (`read_range` groups the requested stripes per
+//! server and fans one task out per involved server — the path the
+//! two-level store's block reads ride).
 
 use std::fs;
 use std::io::{Read, Seek, SeekFrom};
@@ -22,7 +26,7 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::storage::block::{checksum, verify_checksum};
-use crate::storage::layout::StripeLayout;
+use crate::storage::layout::{StripeLayout, StripeSegment};
 use crate::storage::ObjectStore;
 use crate::util::pool::ThreadPool;
 
@@ -324,14 +328,69 @@ impl ObjectStore for Pfs {
         let total: u64 = segs.iter().map(|s| s.len).sum();
         let mut out = vec![0u8; total as usize];
         let base = offset;
-        for seg in segs {
-            let path = self.datafile(key, seg.server);
-            let mut f = fs::File::open(&path).map_err(|e| Error::io(&path, e))?;
-            f.seek(SeekFrom::Start(seg.local_offset))
-                .map_err(|e| Error::io(&path, e))?;
-            let dst_start = (seg.object_offset - base) as usize;
-            f.read_exact(&mut out[dst_start..dst_start + seg.len as usize])
-                .map_err(|e| Error::io(&path, e))?;
+
+        // Group segments per server: one task per involved server opens
+        // its datafile once and serves every segment it owns, so a range
+        // spanning many stripes engages all data nodes concurrently
+        // instead of seeking through them one stripe at a time.
+        let mut per_server: Vec<Vec<StripeSegment>> =
+            vec![Vec::new(); self.server_dirs.len()];
+        for seg in &segs {
+            per_server[seg.server].push(*seg);
+        }
+        let jobs: Vec<(PathBuf, Vec<StripeSegment>)> = per_server
+            .into_iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(s, v)| (self.datafile(key, s), v))
+            .collect();
+
+        fn read_server(
+            path: &Path,
+            segs: &[StripeSegment],
+            base: u64,
+        ) -> Result<Vec<(usize, Vec<u8>)>> {
+            let mut f = fs::File::open(path).map_err(|e| Error::io(path, e))?;
+            let mut pieces = Vec::with_capacity(segs.len());
+            for seg in segs {
+                f.seek(SeekFrom::Start(seg.local_offset))
+                    .map_err(|e| Error::io(path, e))?;
+                let mut buf = vec![0u8; seg.len as usize];
+                f.read_exact(&mut buf).map_err(|e| Error::io(path, e))?;
+                pieces.push(((seg.object_offset - base) as usize, buf));
+            }
+            Ok(pieces)
+        }
+
+        if jobs.len() <= 1 {
+            // Single-server fast path (e.g. a range within one stripe —
+            // the common small two-level block read): no pool dispatch,
+            // no temp buffers; read straight into the output.
+            if let Some((path, segs)) = jobs.first() {
+                let mut f = fs::File::open(path).map_err(|e| Error::io(path, e))?;
+                for seg in segs {
+                    f.seek(SeekFrom::Start(seg.local_offset))
+                        .map_err(|e| Error::io(path, e))?;
+                    let dst = (seg.object_offset - base) as usize;
+                    f.read_exact(&mut out[dst..dst + seg.len as usize])
+                        .map_err(|e| Error::io(path, e))?;
+                }
+            }
+        } else {
+            let jobs = Arc::new(jobs);
+            let j2 = Arc::clone(&jobs);
+            let results: Vec<Result<Vec<(usize, Vec<u8>)>>> = self
+                .pool
+                .map(jobs.len(), move |i| {
+                    let (path, segs) = &j2[i];
+                    read_server(path, segs, base)
+                })
+                .map_err(Error::Job)?;
+            for r in results {
+                for (dst_start, buf) in r? {
+                    out[dst_start..dst_start + buf.len()].copy_from_slice(&buf);
+                }
+            }
         }
         self.bytes_read.fetch_add(total, Ordering::Relaxed);
         Ok(out)
@@ -530,6 +589,31 @@ mod tests {
         assert_eq!(st.bytes_read, 110);
         assert_eq!(st.objects_written, 1);
         assert_eq!(st.reads, 2);
+    }
+
+    #[test]
+    fn concurrent_range_reads_are_consistent() {
+        let dir = TempDir::new("pfs-conc").unwrap();
+        let pfs = Arc::new(open(&dir, 4, 64));
+        let data = rand_data(64 * 41, 11); // odd stripe count over 4 servers
+        pfs.write("wide", &data).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let pfs = Arc::clone(&pfs);
+                let data = &data;
+                s.spawn(move || {
+                    for i in 0..20 {
+                        let off = (t * 97 + i * 131) % data.len();
+                        let len = 777.min(data.len() - off);
+                        assert_eq!(
+                            pfs.read_range("wide", off as u64, len).unwrap(),
+                            &data[off..off + len],
+                            "t={t} off={off}"
+                        );
+                    }
+                });
+            }
+        });
     }
 
     #[test]

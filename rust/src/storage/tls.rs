@@ -10,7 +10,11 @@
 //!   the memory tier as `block_size` logical blocks and on the PFS as a
 //!   striped checkpoint file),
 //! - the dual **I/O buffers** of §3.2 (`app_buffer` between application
-//!   and memory tier, `pfs_buffer` between the tiers),
+//!   and memory tier, `pfs_buffer` between the tiers) — write-through
+//!   drives both legs **concurrently** (`concurrent_writethrough`), one
+//!   scoped thread feeding the lock-striped memory tier
+//!   (`mem_shards`, see [`MemStore::with_shards`]) while the caller
+//!   drives the striped PFS write, which fans out one task per server,
 //! - the **priority-based read policy** of §3.2: every block read goes to
 //!   the nearest tier that has it (memory first, then PFS), and two-level
 //!   reads cache what they fetched, subject to LRU/LFU eviction.
@@ -50,6 +54,14 @@ pub struct TlsConfig {
     pub pfs_buffer: u64,
     pub eviction: String,
     pub workers: usize,
+    /// Lock stripes of the memory tier (see
+    /// [`MemStore::with_shards`]); `1` reproduces the single-mutex
+    /// baseline the fig1 bench compares against.
+    pub mem_shards: usize,
+    /// Issue the memory-tier and PFS legs of a
+    /// [`WriteMode::WriteThrough`] concurrently through the two §3.2
+    /// buffers (`false` reproduces the sequential baseline).
+    pub concurrent_writethrough: bool,
 }
 
 impl TlsConfig {
@@ -66,6 +78,8 @@ impl TlsConfig {
                 pfs_buffer: 4 << 20,
                 eviction: "lru".into(),
                 workers: 4,
+                mem_shards: crate::config::presets::tuning::default_mem_shards(),
+                concurrent_writethrough: true,
             },
         }
     }
@@ -82,6 +96,8 @@ impl TlsConfig {
             pfs_buffer: e.pfs_buffer,
             eviction: e.eviction.clone(),
             workers: e.workers,
+            mem_shards: e.mem_shards,
+            concurrent_writethrough: e.concurrent_writethrough,
         }
     }
 }
@@ -124,6 +140,14 @@ impl TlsConfigBuilder {
         self.cfg.workers = v;
         self
     }
+    pub fn mem_shards(mut self, v: usize) -> Self {
+        self.cfg.mem_shards = v;
+        self
+    }
+    pub fn concurrent_writethrough(mut self, v: bool) -> Self {
+        self.cfg.concurrent_writethrough = v;
+        self
+    }
     pub fn build(self) -> Result<TlsConfig> {
         let c = &self.cfg;
         if c.block_size == 0 || c.stripe_size == 0 || c.app_buffer == 0 || c.pfs_buffer == 0 {
@@ -131,6 +155,9 @@ impl TlsConfigBuilder {
         }
         if c.pfs_servers == 0 {
             return Err(Error::Config("pfs_servers must be > 0".into()));
+        }
+        if c.mem_shards == 0 {
+            return Err(Error::Config("mem_shards must be > 0".into()));
         }
         Ok(self.cfg)
     }
@@ -195,7 +222,7 @@ impl TwoLevelStore {
             pool,
         )?;
         Self::check_geometry_marker(&cfg)?;
-        let mem = MemStore::new(cfg.mem_capacity, &cfg.eviction)?;
+        let mem = MemStore::with_shards(cfg.mem_capacity, &cfg.eviction, cfg.mem_shards)?;
 
         // Recover the object table from PFS contents.
         let mut objects = HashMap::new();
@@ -370,9 +397,86 @@ impl TwoLevelStore {
             }
             WriteMode::WriteThrough => {
                 // §4, eq. (6): synchronous write to both tiers; throughput
-                // bounded by the PFS (the slower leg).
-                self.put_blocks(key, data, false)?;
-                self.pfs.write(key, data)?;
+                // bounded by the PFS (the slower leg). The two legs ride
+                // the two §3.2 buffers independently, so they are issued
+                // concurrently: one scoped thread feeds the memory tier
+                // while this thread drives the striped PFS write (which
+                // itself fans out per server). Per-block over-capacity is
+                // pre-checked so the failure mode matches the sequential
+                // path (no PFS write happens when the mem leg cannot fit
+                // a single block).
+                if !data.is_empty()
+                    && self.cfg.block_size.min(data.len() as u64) > self.cfg.mem_capacity
+                {
+                    return Err(Error::OverCapacity {
+                        need: data.len() as u64,
+                        capacity: self.cfg.mem_capacity,
+                    });
+                }
+                // `pfs_ran` distinguishes "PFS leg executed" (always, in
+                // the concurrent fork) from the sequential path, which
+                // never starts it after a mem-leg failure.
+                let (mem_res, pfs_res, pfs_ran) = if self.cfg.concurrent_writethrough {
+                    let (m, p) = std::thread::scope(|s| {
+                        let mem_leg = s.spawn(|| self.put_blocks(key, data, false));
+                        let pfs_res = self.pfs.write(key, data);
+                        (
+                            mem_leg.join().expect("memory-tier write leg panicked"),
+                            pfs_res,
+                        )
+                    });
+                    (m, p, true)
+                } else {
+                    match self.put_blocks(key, data, false) {
+                        Err(e) => (Err(e), Ok(()), false),
+                        Ok(()) => (Ok(()), self.pfs.write(key, data), true),
+                    }
+                };
+                if pfs_ran && pfs_res.is_err() {
+                    // The PFS leg failed: roll this key's freshly cached
+                    // blocks out of the memory tier so a write that
+                    // returned Err is never served from cache (readers
+                    // fall back to whatever the PFS holds).
+                    let geo = self.geometry(data.len() as u64);
+                    for i in 0..geo.num_blocks() {
+                        self.mem.remove(&BlockId::new(key, i).storage_key());
+                    }
+                } else if pfs_ran && mem_res.is_err() {
+                    // PFS leg landed, mem leg failed. For a fresh key,
+                    // remove the orphan so a restart's PFS recovery cannot
+                    // resurrect a write that returned Err — matching the
+                    // sequential path. For a previously persisted key the
+                    // old bytes are already overwritten in place and
+                    // cannot be restored; commit the fully landed new
+                    // object so reads stay self-consistent instead of
+                    // mixing the stale size with the new PFS contents.
+                    let old_entry = self.objects.lock().unwrap().get(key).cloned();
+                    match old_entry {
+                        Some(old) if old.persisted => {
+                            // Purge every cached block of either version
+                            // first: the failed mem leg may have stopped
+                            // partway, leaving stale old-version blocks
+                            // that the new geometry would happily serve.
+                            let max_size = old.size.max(data.len() as u64);
+                            let geo = self.geometry(max_size);
+                            for i in 0..geo.num_blocks() {
+                                self.mem.remove(&BlockId::new(key, i).storage_key());
+                            }
+                            self.objects.lock().unwrap().insert(
+                                key.to_string(),
+                                ObjEntry {
+                                    size: data.len() as u64,
+                                    persisted: true,
+                                },
+                            );
+                        }
+                        _ => {
+                            let _ = self.pfs.delete(key);
+                        }
+                    }
+                }
+                mem_res?;
+                pfs_res?;
                 self.objects.lock().unwrap().insert(
                     key.to_string(),
                     ObjEntry {

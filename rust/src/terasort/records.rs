@@ -45,14 +45,9 @@ pub fn row_id(rec: &[u8]) -> u64 {
 /// Order-insensitive checksum of one record (sum over the cluster-wide
 /// stream is compared input vs output).
 pub fn record_checksum(rec: &[u8]) -> u64 {
-    // FNV-1a over the record, folded — cheap and order-insensitive when
-    // summed with wrapping adds by the caller
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in rec {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x1000_0000_01b3);
-    }
-    h
+    // FNV-1a over the record — cheap and order-insensitive when summed
+    // with wrapping adds by the caller
+    crate::util::bytes::fnv1a(rec)
 }
 
 #[cfg(test)]

@@ -1,4 +1,17 @@
-//! Byte-size parsing/formatting and throughput display.
+//! Byte-size parsing/formatting, throughput display, and the shared
+//! FNV-1a hash.
+
+/// FNV-1a 64-bit over a byte slice — the crate's one cheap, deterministic
+/// hash (memstore shard placement, TeraSort record checksums).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
 
 /// Parse a human byte size: `"64"`, `"4k"`, `"1M"`, `"2.5G"`, `"1GiB"`,
 /// `"512 MB"` (case-insensitive; k/M/G/T are binary multiples, matching

@@ -1,67 +1,130 @@
-//! Minimal `log` backend: level filter from `TLSTORE_LOG`, timestamps
-//! relative to process start, no allocation beyond the formatted line.
+//! Minimal self-contained logger: level filter from `TLSTORE_LOG`,
+//! timestamps relative to process start, no allocation beyond the
+//! formatted line. The offline crate set has no `log`/`env_logger`, so the
+//! facade is two crate-local macros ([`log_info!`](crate::log_info) /
+//! [`log_warn!`](crate::log_warn)) over [`log_at`].
 
 use std::io::Write;
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use once_cell::sync::OnceCell;
+/// Log severity, ordered so that `Error < Warn < Info < Debug < Trace`
+/// compares by verbosity (a record is emitted when its level ≤ the filter).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    fn name(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
 
 struct Logger {
     start: Instant,
-    level: log::LevelFilter,
+    /// `None` = logging off.
+    level: Option<Level>,
 }
 
-impl log::Log for Logger {
-    fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= self.level
-    }
+static LOGGER: OnceLock<Logger> = OnceLock::new();
 
-    fn log(&self, record: &log::Record) {
-        if !self.enabled(record.metadata()) {
-            return;
+fn logger() -> &'static Logger {
+    LOGGER.get_or_init(|| {
+        let level = match std::env::var("TLSTORE_LOG").as_deref() {
+            Ok("error") => Some(Level::Error),
+            Ok("warn") => Some(Level::Warn),
+            Ok("debug") => Some(Level::Debug),
+            Ok("trace") => Some(Level::Trace),
+            Ok("off") => None,
+            _ => Some(Level::Info),
+        };
+        Logger {
+            start: Instant::now(),
+            level,
         }
-        let t = self.start.elapsed().as_secs_f64();
-        let mut err = std::io::stderr().lock();
-        let _ = writeln!(
-            err,
-            "[{t:10.3}s {:5} {}] {}",
-            record.level(),
-            record.target().rsplit("::").next().unwrap_or(""),
-            record.args()
-        );
-    }
-
-    fn flush(&self) {}
+    })
 }
-
-static LOGGER: OnceCell<Logger> = OnceCell::new();
 
 /// Install the logger (idempotent). Level comes from `TLSTORE_LOG`
-/// (`error|warn|info|debug|trace`, default `info`).
+/// (`error|warn|info|debug|trace|off`, default `info`). Calling this at
+/// startup pins the process-relative timestamp origin; the macros work
+/// even without it (first use initializes lazily).
 pub fn init() {
-    let level = match std::env::var("TLSTORE_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        Ok("off") => log::LevelFilter::Off,
-        _ => log::LevelFilter::Info,
+    let _ = logger();
+}
+
+/// Emit one record if `level` passes the filter. `target` is usually
+/// `module_path!()`; only its last segment is printed.
+pub fn log_at(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    let l = logger();
+    match l.level {
+        Some(max) if level <= max => {}
+        _ => return,
+    }
+    let t = l.start.elapsed().as_secs_f64();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(
+        err,
+        "[{t:10.3}s {:5} {}] {}",
+        level.name(),
+        target.rsplit("::").next().unwrap_or(""),
+        args
+    );
+}
+
+/// Log at `Info` level (format-args syntax, like `println!`).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log_at(
+            $crate::util::logger::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
     };
-    let logger = LOGGER.get_or_init(|| Logger {
-        start: Instant::now(),
-        level,
-    });
-    // set_logger fails if already set (e.g. by a test harness) — fine.
-    let _ = log::set_logger(logger);
-    log::set_max_level(level);
+}
+
+/// Log at `Warn` level (format-args syntax, like `println!`).
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log_at(
+            $crate::util::logger::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
-    fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logger smoke");
+    fn init_is_idempotent_and_macros_do_not_panic() {
+        init();
+        init();
+        crate::log_info!("logger smoke {}", 1);
+        crate::log_warn!("warn smoke");
+        log_at(Level::Trace, "tests", format_args!("filtered by default"));
+    }
+
+    #[test]
+    fn level_order_matches_verbosity() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
     }
 }

@@ -208,6 +208,123 @@ fn restart_recovers_pfs_state_and_cold_cache_warms() {
     assert!(store.stats().mem_bytes_read >= before + 5 * 80_000);
 }
 
+/// The tentpole stress test: 8 threads of mixed WriteThrough writes and
+/// TwoLevel reads against one store with the lock-striped memory tier and
+/// dual-leg write-through enabled. Asserts:
+/// - read-your-writes: a write that returned is immediately readable, in
+///   full, by the writing thread;
+/// - cross-thread visibility: objects written in phase 1 are readable by
+///   every other thread during the phase-2 storm;
+/// - the capacity invariant: the memory tier's global accountant never
+///   exceeds `mem_capacity`, sampled continuously while the storm runs.
+#[test]
+fn stress_sharded_writethrough_read_your_writes_and_capacity() {
+    const THREADS: u64 = 8;
+    const PHASE1: u64 = 16;
+    const PHASE2: u64 = 8;
+    const CAP: u64 = 2 << 20;
+
+    fn body_of(t: u64, i: u64) -> Vec<u8> {
+        let n = 40_000 + ((t * 31 + i * 17) % 90_000) as usize;
+        rand_data(n, t * 1_000 + i)
+    }
+
+    let dir = TempDir::new("stress").unwrap();
+    let cfg = TlsConfig::builder(dir.path())
+        .mem_capacity(CAP)
+        .block_size(64 << 10)
+        .pfs_servers(4)
+        .stripe_size(16 << 10)
+        .mem_shards(8)
+        .concurrent_writethrough(true)
+        .build()
+        .unwrap();
+    let store = Arc::new(TwoLevelStore::open(cfg).unwrap());
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let sampler = {
+        let store = Arc::clone(&store);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut max_seen = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                max_seen = max_seen.max(store.mem().used());
+                std::thread::yield_now();
+            }
+            max_seen
+        })
+    };
+
+    // phase 1: every thread writes its own objects and reads each back
+    // immediately (read-your-writes under the dual-leg write path)
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let store = Arc::clone(&store);
+            s.spawn(move || {
+                for i in 0..PHASE1 {
+                    let key = format!("t{t}/p1/{i}");
+                    let body = body_of(t, i);
+                    store.write(&key, &body, WriteMode::WriteThrough).unwrap();
+                    let back = store.read(&key, ReadMode::TwoLevel).unwrap();
+                    assert_eq!(back, body, "read-your-writes broken for {key}");
+                }
+            });
+        }
+    });
+
+    // phase 2: keep writing while every thread also reads its neighbour's
+    // phase-1 objects (cross-thread visibility under concurrent I/O)
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let store = Arc::clone(&store);
+            s.spawn(move || {
+                let peer = (t + 1) % THREADS;
+                for i in 0..PHASE2 {
+                    let key = format!("t{t}/p2/{i}");
+                    let body = body_of(t, 1_000 + i);
+                    store.write(&key, &body, WriteMode::WriteThrough).unwrap();
+                    assert_eq!(
+                        store.read(&key, ReadMode::TwoLevel).unwrap(),
+                        body,
+                        "read-your-writes broken for {key}"
+                    );
+                    let peer_key = format!("t{peer}/p1/{}", i % PHASE1);
+                    assert_eq!(
+                        store.read(&peer_key, ReadMode::TwoLevel).unwrap(),
+                        body_of(peer, i % PHASE1),
+                        "cross-thread read broken for {peer_key}"
+                    );
+                }
+            });
+        }
+    });
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let max_seen = sampler.join().unwrap();
+    assert!(
+        max_seen <= CAP,
+        "memory tier accountant exceeded capacity: {max_seen} > {CAP}"
+    );
+    assert!(store.mem().used() <= CAP);
+
+    // everything written in the storm is still fully readable
+    for t in 0..THREADS {
+        for i in 0..PHASE1 {
+            let key = format!("t{t}/p1/{i}");
+            assert_eq!(store.read(&key, ReadMode::TwoLevel).unwrap(), body_of(t, i), "{key}");
+        }
+        for i in 0..PHASE2 {
+            let key = format!("t{t}/p2/{i}");
+            assert_eq!(
+                store.read(&key, ReadMode::TwoLevel).unwrap(),
+                body_of(t, 1_000 + i),
+                "{key}"
+            );
+        }
+    }
+    assert_eq!(store.mem().shards(), 8);
+}
+
 #[test]
 fn memonly_data_larger_than_memory_spills_and_survives() {
     let dir = TempDir::new("spill").unwrap();
