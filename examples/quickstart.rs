@@ -1,6 +1,8 @@
-//! Quickstart: open a two-level store, exercise every write/read mode of
-//! the paper's Figure 4, watch the tier counters move, and let the
-//! coordinator checkpoint a memory-speed write in the background.
+//! Quickstart: open a two-level store and exercise the v2 streaming
+//! surface — writer handles whose chunked appends drive the paper's §3.2
+//! dual buffers, reader handles that fault blocks on demand into
+//! caller-owned buffers, every Figure-4 write/read mode, and the
+//! coordinator checkpointing a memory-speed write in the background.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -8,7 +10,7 @@ use std::sync::Arc;
 
 use tlstore::coordinator::{CheckpointerConfig, Coordinator};
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
-use tlstore::storage::{ReadMode, WriteMode};
+use tlstore::storage::{ObjectReader as _, ObjectStore, ObjectWriter as _, ReadMode, WriteMode};
 use tlstore::util::bytes::fmt_bytes;
 
 fn main() -> tlstore::Result<()> {
@@ -28,11 +30,21 @@ fn main() -> tlstore::Result<()> {
 
     let payload: Vec<u8> = (0..(8 << 20)).map(|i| (i % 251) as u8).collect();
 
-    // -- Figure 4 (c): synchronous write-through --------------------------
-    store.write("datasets/alpha", &payload, WriteMode::WriteThrough)?;
-    println!("\nwrite-through 8 MiB:");
+    // -- Figure 4 (c): streaming write-through ----------------------------
+    // Each 1 MiB append streams to the striped PFS temp files *and* fills
+    // the memory tier's block accumulators; commit publishes atomically.
+    let mut w = store.create_with("datasets/alpha", WriteMode::WriteThrough)?;
+    for chunk in payload.chunks(1 << 20) {
+        w.append(chunk)?;
+    }
+    w.commit()?;
+    println!("\nstreamed 8 MiB write-through (1 MiB appends):");
     println!("  memory tier used : {}", fmt_bytes(store.mem_stats().used));
     println!("  pfs bytes written: {}", fmt_bytes(store.pfs_stats().bytes_written));
+
+    // -- stat() subsumes size/exists --------------------------------------
+    let meta = store.stat("datasets/alpha")?;
+    println!("  stat             : {} = {}", meta.key, fmt_bytes(meta.size));
 
     // -- Figure 4 (d): memory-only read -----------------------------------
     let hot = store.read("datasets/alpha", ReadMode::MemOnly)?;
@@ -41,25 +53,42 @@ fn main() -> tlstore::Result<()> {
     let cold = store.read("datasets/alpha", ReadMode::Bypass)?;
     assert_eq!(cold, payload);
 
-    // -- Figure 4 (f): the two-level read path, after cache pressure ------
+    // -- Figure 4 (f): the streaming two-level read path ------------------
+    // After cache pressure, a reader handle faults only the blocks each
+    // read_at touches back into the memory tier — into a caller-owned
+    // buffer, no whole-object materialization.
     store.evict_object("datasets/alpha")?;
-    let back = store.read("datasets/alpha", ReadMode::TwoLevel)?;
-    assert_eq!(back, payload);
+    let reader = store.open_with("datasets/alpha", ReadMode::TwoLevel)?;
+    let mut buf = vec![0u8; 1 << 20];
+    let mut off = 0u64;
+    while off < reader.len() {
+        let n = reader.read_at(off, &mut buf)?;
+        assert_eq!(&buf[..n], &payload[off as usize..off as usize + n]);
+        off += n as u64;
+    }
+    drop(reader);
     let stats = store.stats();
-    println!("\nafter evict + two-level read:");
+    println!("\nafter evict + streaming two-level read:");
     println!("  served from memory: {}", fmt_bytes(stats.mem_bytes_read));
     println!("  served from pfs   : {}", fmt_bytes(stats.pfs_bytes_read));
     println!("  observed f ratio  : {:.2}", stats.f_ratio());
 
-    // second read is hot again (mode (f) re-cached it)
+    // the faulted blocks were cached: a second pass is hot
     let again = store.read("datasets/alpha", ReadMode::TwoLevel)?;
     assert_eq!(again, payload);
     println!("  f after re-read   : {:.2}", store.stats().f_ratio());
 
+    // -- abort: a writer that never commits leaves nothing ----------------
+    let mut scratch = store.create_with("datasets/scratch", WriteMode::WriteThrough)?;
+    scratch.append(&payload[..1 << 20])?;
+    scratch.abort()?;
+    assert!(!store.exists("datasets/scratch"));
+    println!("\naborted writer left no trace (exists = false)");
+
     // -- coordinator: memory-speed write + async checkpoint ---------------
     let coord = Coordinator::new(Arc::clone(&store), CheckpointerConfig::default());
     coord.write_async("datasets/beta", &payload)?;
-    println!("\nasync write returned immediately; flushing checkpointer…");
+    println!("async write returned immediately; flushing checkpointer…");
     coord.flush()?;
     assert_eq!(store.read("datasets/beta", ReadMode::Bypass)?, payload);
     println!("  checkpoints       : {}", store.stats().checkpoints);

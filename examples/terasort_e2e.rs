@@ -17,7 +17,7 @@ use tlstore::runtime::Runtime;
 use tlstore::storage::hdfs::HdfsLike;
 use tlstore::storage::pfs::Pfs;
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
-use tlstore::storage::ObjectStore;
+use tlstore::storage::{prefix_bytes, ObjectReader as _, ObjectStore};
 use tlstore::terasort::{input_checksum, run_terasort, teragen, teravalidate, RECORD_SIZE};
 use tlstore::testing::TempDir;
 
@@ -63,8 +63,22 @@ fn main() -> tlstore::Result<()> {
         let store = store_for(backend, &dir)?;
 
         let t = std::time::Instant::now();
+        // teragen streams each partition through a writer handle
+        // (create/append/commit) — no whole-object buffers
         teragen(store.as_ref(), "in/", records, records / 8 + 1, 42)?;
         let gen_s = t.elapsed().as_secs_f64();
+
+        // v2 surface: stat-backed accounting + a streamed peek at the
+        // first input record through a reader handle
+        let in_bytes = prefix_bytes(store.as_ref(), "in/")?;
+        debug_assert_eq!(in_bytes, records * RECORD_SIZE as u64);
+        if let Some(first) = store.list("in/").first() {
+            let meta = store.stat(first)?;
+            let reader = store.open(first)?;
+            let mut head = vec![0u8; RECORD_SIZE];
+            let n = reader.read_at(0, &mut head)?;
+            assert_eq!(n, RECORD_SIZE.min(meta.size as usize));
+        }
         let (in_count, in_sum) = input_checksum(store.as_ref(), "in/")?;
 
         let engine = Engine::local();

@@ -6,14 +6,18 @@
 //! - §3.1's block × stripe layout mapping.
 //! - §3.2's LRU vs LFU eviction under a skewed re-read workload.
 //! - PFS read-checksum verification cost.
+//! - The v2 streaming handles: bytes *copied* (and transiently buffered)
+//!   per op for whole-object reads/writes vs `read_at` into a reused
+//!   caller buffer, the `Arc` zero-copy path, and chunked writers.
 //!
 //! Run: `cargo bench --bench ablations`
 
 use tlstore::bench::{header, Bencher};
 use tlstore::storage::eviction;
+use tlstore::storage::memstore::MemStore;
 use tlstore::storage::pfs::Pfs;
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
-use tlstore::storage::{ObjectStore, ReadMode, WriteMode};
+use tlstore::storage::{read_full_at, ObjectStore, ObjectWriter as _, ReadMode, WriteMode};
 use tlstore::testing::TempDir;
 use tlstore::util::bytes::fmt_bytes;
 use tlstore::util::rng::Pcg32;
@@ -138,12 +142,102 @@ fn checksum_sweep(b: &Bencher) {
     }
 }
 
+/// v2 streaming-handle ablation: the same logical transfer measured along
+/// each data path, with the intermediate **bytes copied per op** (beyond
+/// the caller's own final copy) and the peak transient buffering printed
+/// next to the measured throughput — the quantities the zero-copy read
+/// path and the streaming write path exist to shrink.
+fn handle_sweep(b: &Bencher) {
+    const SIZE: usize = 4 << 20;
+    const CHUNK: usize = 1 << 20; // the paper's app-side buffer
+
+    println!("\n== v2 handles: bytes copied per 4 MiB op ==");
+    header();
+
+    // ---- memory-tier reads ---------------------------------------------
+    let mem = MemStore::new(1 << 30, "lru").unwrap();
+    ObjectStore::write(&mem, "x", &data(SIZE, 1)).unwrap();
+
+    // whole-object read(): allocates a fresh Vec and copies SIZE into it
+    let m = b.iter("mem read() whole-object", Some(SIZE as u64), || {
+        std::hint::black_box(ObjectStore::read(&mem, "x").unwrap());
+    });
+    println!("{}   [copied/op: {}, alloc/op: {}]", m.report(), fmt_bytes(SIZE as u64), fmt_bytes(SIZE as u64));
+
+    // handle read_at into one reused caller buffer: SIZE copied, 0 alloc
+    let reader = ObjectStore::open(&mem, "x").unwrap();
+    let mut sink = vec![0u8; SIZE];
+    let m = b.iter("mem open()+read_at (reused buffer)", Some(SIZE as u64), || {
+        read_full_at(reader.as_ref(), 0, &mut sink).unwrap();
+        std::hint::black_box(&sink);
+    });
+    println!("{}   [copied/op: {}, alloc/op: 0 B]", m.report(), fmt_bytes(SIZE as u64));
+    drop(reader);
+
+    // Arc clone via get(): the true zero-copy path — no bytes move
+    let m = b.iter("mem get() Arc clone (zero-copy)", Some(SIZE as u64), || {
+        std::hint::black_box(mem.get("x").unwrap());
+    });
+    println!("{}   [copied/op: 0 B, alloc/op: 0 B]", m.report());
+
+    // ---- two-level writes ----------------------------------------------
+    let dir = TempDir::new("abl-handles").unwrap();
+    let cfg = TlsConfig::builder(dir.path())
+        .mem_capacity(64 << 20)
+        .block_size(1 << 20)
+        .pfs_servers(4)
+        .stripe_size(512 << 10)
+        .build()
+        .unwrap();
+    let store = TwoLevelStore::open(cfg).unwrap();
+    let payload = data(SIZE, 2);
+
+    // whole-object write-through: the caller materializes SIZE up front
+    let mut i = 0u64;
+    let m = b.iter("tls write() whole-object (WT)", Some(SIZE as u64), || {
+        i += 1;
+        store
+            .write(&format!("w{}", i % 4), &payload, WriteMode::WriteThrough)
+            .unwrap();
+    });
+    println!("{}   [staged/op: {} up-front]", m.report(), fmt_bytes(SIZE as u64));
+
+    // streaming create/append: chunks flow to both tiers as they arrive;
+    // the writer's transient state is one block accumulator
+    let mut i = 0u64;
+    let m = b.iter("tls create()+append 1 MiB chunks (WT)", Some(SIZE as u64), || {
+        i += 1;
+        let mut w = store
+            .create_with(&format!("s{}", i % 4), WriteMode::WriteThrough)
+            .unwrap();
+        for chunk in payload.chunks(CHUNK) {
+            w.append(chunk).unwrap();
+        }
+        w.commit().unwrap();
+    });
+    println!("{}   [staged/op: {} block buffer]", m.report(), fmt_bytes(1u64 << 20));
+
+    // cold two-level reads through a reused buffer vs materializing
+    store.write("r", &payload, WriteMode::WriteThrough).unwrap();
+    let m = b.iter("tls read() whole-object (hot)", Some(SIZE as u64), || {
+        std::hint::black_box(store.read("r", ReadMode::TwoLevel).unwrap());
+    });
+    println!("{}   [alloc/op: {}]", m.report(), fmt_bytes(SIZE as u64));
+    let reader = store.open_with("r", ReadMode::TwoLevel).unwrap();
+    let m = b.iter("tls open()+read_at (hot, reused buffer)", Some(SIZE as u64), || {
+        read_full_at(reader.as_ref(), 0, &mut sink).unwrap();
+        std::hint::black_box(&sink);
+    });
+    println!("{}   [alloc/op: 0 B]", m.report());
+}
+
 fn main() {
     let b = Bencher::default();
     buffer_sweep(&b);
     layout_sweep(&b);
     eviction_sweep();
     checksum_sweep(&b);
+    handle_sweep(&b);
 
     // structural cross-check (the tuning metric of §3.1)
     println!("\nservers-per-block metric (ideal = engage all servers):");

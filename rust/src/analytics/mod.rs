@@ -14,7 +14,7 @@ use crate::mapreduce::{
     Engine, InputSplit, JobSpec, JobStats, KV, MapContext, Mapper, MergeIter, Reducer,
 };
 use crate::runtime::{f32_bytes, Runtime};
-use crate::storage::ObjectStore;
+use crate::storage::{ObjectStore, ObjectWriter as _};
 use crate::util::rng::Pcg32;
 
 /// Artifact row batch (must match `python/compile/kernels/aggregate.py`).
@@ -32,9 +32,16 @@ pub struct TableStats {
     pub max: [f64; COLS],
 }
 
+/// Rows per streamed generation chunk (≈ 128 KB of 32-byte rows).
+const GEN_CHUNK_ROWS: usize = 4096;
+
 /// Generate `tables` synthetic event tables of `rows` rows into
 /// `{prefix}table-{i}` and return the generator-side expected means
 /// (used by tests/examples to verify the kernel path).
+///
+/// Generation streams through a writer handle in `GEN_CHUNK_ROWS`-row
+/// chunks, so table size is not bounded by generator memory and row
+/// production overlaps tier I/O.
 pub fn generate_tables(
     store: &dyn ObjectStore,
     prefix: &str,
@@ -43,9 +50,10 @@ pub fn generate_tables(
     seed: u64,
 ) -> Result<Vec<[f64; COLS]>> {
     let mut expected = Vec::with_capacity(tables as usize);
+    let mut buf = Vec::with_capacity(GEN_CHUNK_ROWS * COLS * 4);
     for t in 0..tables {
         let mut rng = Pcg32::for_task(seed, t as u64);
-        let mut buf = Vec::with_capacity(rows * COLS * 4);
+        let mut w = store.create(&format!("{prefix}table-{t}"))?;
         let mut sum = [0f64; COLS];
         for _ in 0..rows {
             for (c, s) in sum.iter_mut().enumerate() {
@@ -53,13 +61,21 @@ pub fn generate_tables(
                 *s += v as f64;
                 buf.extend_from_slice(&v.to_le_bytes());
             }
+            if buf.len() >= GEN_CHUNK_ROWS * COLS * 4 {
+                w.append(&buf)?;
+                buf.clear();
+            }
         }
+        if !buf.is_empty() {
+            w.append(&buf)?;
+            buf.clear();
+        }
+        w.commit()?;
         let mut means = [0f64; COLS];
         for c in 0..COLS {
             means[c] = sum[c] / rows as f64;
         }
         expected.push(means);
-        store.write(&format!("{prefix}table-{t}"), &buf)?;
     }
     Ok(expected)
 }
@@ -231,46 +247,13 @@ mod tests {
 
     #[test]
     fn generate_tables_is_deterministic_and_sized() {
-        let store = crate::storage::memstore::MemStore::new(u64::MAX, "lru").unwrap();
-        struct S(crate::storage::memstore::MemStore);
-        impl ObjectStore for S {
-            fn write(&self, k: &str, d: &[u8]) -> Result<()> {
-                self.0.put(k, d.to_vec().into())?;
-                Ok(())
-            }
-            fn read(&self, k: &str) -> Result<Vec<u8>> {
-                self.0
-                    .get(k)
-                    .map(|b| b.to_vec())
-                    .ok_or_else(|| Error::NotFound(k.into()))
-            }
-            fn read_range(&self, k: &str, o: u64, l: usize) -> Result<Vec<u8>> {
-                let v = self.read(k)?;
-                let s = (o as usize).min(v.len());
-                Ok(v[s..(s + l).min(v.len())].to_vec())
-            }
-            fn size(&self, k: &str) -> Result<u64> {
-                Ok(self.read(k)?.len() as u64)
-            }
-            fn exists(&self, k: &str) -> bool {
-                self.0.contains(k)
-            }
-            fn delete(&self, k: &str) -> Result<()> {
-                self.0.remove(k);
-                Ok(())
-            }
-            fn list(&self, p: &str) -> Vec<String> {
-                self.0.list(p)
-            }
-            fn kind(&self) -> &'static str {
-                "mem"
-            }
-        }
-        let s = S(store);
+        // MemStore implements the full handle-based ObjectStore surface
+        let s = crate::storage::memstore::MemStore::new(u64::MAX, "lru").unwrap();
         let m1 = generate_tables(&s, "a/", 3, 100, 7).unwrap();
         let m2 = generate_tables(&s, "b/", 3, 100, 7).unwrap();
         assert_eq!(m1, m2);
         assert_eq!(s.size("a/table-0").unwrap(), 100 * COLS as u64 * 4);
+        assert_eq!(s.stat("a/table-0").unwrap().size, 100 * COLS as u64 * 4);
         // column offsets shift the means by ~10·c
         assert!(m1[0][7] > m1[0][0] + 60.0);
     }

@@ -17,7 +17,7 @@ use std::sync::{Arc, Mutex};
 use crate::error::Result;
 use crate::storage::block::{BlockGeometry, BlockId};
 use crate::storage::tls::TwoLevelStore;
-use crate::storage::{ObjectStore, ReadMode};
+use crate::storage::{read_full_at, ObjectReader, ReadMode};
 
 /// Prefetcher configuration.
 #[derive(Debug, Clone, Copy)]
@@ -82,10 +82,21 @@ impl Prefetcher {
     /// Ranged read with readahead: behaves exactly like
     /// `store.read_range(key, offset, len, TwoLevel)` plus prefetch of the
     /// blocks following a detected sequential scan.
+    ///
+    /// The whole exchange rides one [`ObjectReader`] handle: the
+    /// foreground range and every readahead block `read_at` through the
+    /// same two-level reader (which caches what it faults), so the
+    /// prefetch window shares the object-size snapshot with the read it
+    /// extends.
     pub fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
-        let data = self.store.read_range(key, offset, len, ReadMode::TwoLevel)?;
+        let reader = self.store.open_with(key, ReadMode::TwoLevel)?;
+        let size = reader.len();
+        let take = crate::storage::clamped_len(offset, len, size);
+        let mut data = vec![0u8; take];
+        if take > 0 {
+            read_full_at(reader.as_ref(), offset, &mut data)?;
+        }
 
-        let size = self.store.size(key)?;
         let block = self.store.config().block_size;
         let geo = BlockGeometry::new(size, block)?;
         let first_block = offset / block;
@@ -120,14 +131,16 @@ impl Prefetcher {
             let targets: Vec<u64> = (from..to)
                 .filter(|b| !self.store.mem().contains(&BlockId::new(key, *b).storage_key()))
                 .collect();
-            // Pull the readahead window concurrently — each block rides
-            // the two-level path (which caches it), and each block's
-            // stripe reads already fan out per PFS server. Scoped threads
-            // (not the PFS pool) on purpose: a pool task blocking on the
-            // pool's own `map` could deadlock. Fan-out per window is
-            // capped so a large configured `depth` cannot stampede the
-            // host with threads.
+            // Pull the readahead window concurrently — every worker
+            // `read_at`s through the *shared* two-level reader handle
+            // (readers are `Sync` and stateless), each fetch caching its
+            // block, each block's stripe reads fanning out per PFS
+            // server. Scoped threads (not the PFS pool) on purpose: a
+            // pool task blocking on the pool's own `map` could deadlock.
+            // Fan-out per window is capped so a large configured `depth`
+            // cannot stampede the host with threads.
             const MAX_WINDOW_FANOUT: usize = 8;
+            let reader_ref: &dyn ObjectReader = reader.as_ref();
             let mut first_err = None;
             for chunk in targets.chunks(MAX_WINDOW_FANOUT) {
                 std::thread::scope(|scope| {
@@ -136,9 +149,8 @@ impl Prefetcher {
                         .map(|&b| {
                             scope.spawn(move || {
                                 let (s, e) = geo.block_range(b);
-                                self.store
-                                    .read_range(key, s, (e - s) as usize, ReadMode::TwoLevel)
-                                    .map(|_| ())
+                                let mut scratch = vec![0u8; (e - s) as usize];
+                                read_full_at(reader_ref, s, &mut scratch)
                             })
                         })
                         .collect();

@@ -29,7 +29,13 @@
 //! sharded over `mem_shards` lock stripes with one global capacity
 //! accountant, the PFS tier fans every object and range access out across
 //! its server directories, and write-through drives both tier legs at
-//! once. The knobs thread through [`config::EngineConfig`] / the
+//! once. The storage API is **streaming** (v2): backends hand out
+//! [`storage::ObjectReader`] / [`storage::ObjectWriter`] handles whose
+//! `read_at` / `append` calls move data chunk-by-chunk through the
+//! paper's §3.2 buffers — reads land in caller-owned buffers (zero-copy
+//! off the memory tier), writes publish atomically on `commit`, and
+//! [`storage::ObjectStore::stat`] replaces the v1 `size`/`exists` pair.
+//! The knobs thread through [`config::EngineConfig`] / the
 //! [`storage::tls::TlsConfig`] builder; `docs/ARCHITECTURE.md` documents
 //! the data path and invariants.
 //!
@@ -37,6 +43,7 @@
 //!
 //! ```no_run
 //! use tlstore::storage::{tls::{TwoLevelStore, TlsConfig}, WriteMode, ReadMode};
+//! use tlstore::storage::{ObjectReader as _, ObjectWriter as _, ObjectStore};
 //!
 //! let cfg = TlsConfig::builder("/tmp/tls-demo")
 //!     .mem_capacity(64 << 20)
@@ -46,7 +53,21 @@
 //!     .build()
 //!     .unwrap();
 //! let store = TwoLevelStore::open(cfg).unwrap();
-//! store.write("dataset/part-0", b"hello", WriteMode::WriteThrough).unwrap();
+//!
+//! // v2 streaming surface: chunked writer, atomic commit
+//! let mut w = store.create_with("dataset/part-0", WriteMode::WriteThrough).unwrap();
+//! w.append(b"hel").unwrap();
+//! w.append(b"lo").unwrap();
+//! w.commit().unwrap(); // nothing was visible until here
+//!
+//! // stat subsumes size/exists; readers copy into caller-owned buffers
+//! assert_eq!(store.stat("dataset/part-0").unwrap().size, 5);
+//! let r = store.open_with("dataset/part-0", ReadMode::TwoLevel).unwrap();
+//! let mut buf = [0u8; 5];
+//! assert_eq!(r.read_at(0, &mut buf).unwrap(), 5);
+//! assert_eq!(&buf, b"hello");
+//!
+//! // the v1 whole-object methods still work as adapters
 //! let bytes = store.read("dataset/part-0", ReadMode::TwoLevel).unwrap();
 //! assert_eq!(&bytes[..], b"hello");
 //! ```

@@ -9,8 +9,12 @@ use super::scheduler::LocalityScheduler;
 use super::shuffle::{MergeIter, Run};
 use super::{close_context, plan_splits, InputSplit, JobSpec, MapContext, Mapper, Reducer};
 use crate::error::{Error, Result};
-use crate::storage::ObjectStore;
+use crate::storage::{read_full_at, ObjectReader as _, ObjectStore, ObjectWriter as _};
 use crate::util::pool::ThreadPool;
+
+/// Chunk size for streaming reducer output through an
+/// [`crate::storage::ObjectWriter`] (the paper's §3.2 app-side buffer).
+const OUTPUT_CHUNK: usize = 1 << 20;
 
 /// Per-job result metrics.
 #[derive(Debug, Clone)]
@@ -113,8 +117,15 @@ impl Engine {
             .pool
             .map(splits_arc.len(), move |i| {
                 let split = &splits_for_map[i];
-                let data =
-                    store_for_map.read_range(&split.object, split.offset, split.len as usize)?;
+                // handle read: one open per split, then a single read_at
+                // pass into a caller-owned buffer sized to the split
+                // (zero-copy off the memory tier's Arc blocks)
+                let reader = store_for_map.open(&split.object)?;
+                let end = (split.offset + split.len).min(reader.len());
+                let take = end.saturating_sub(split.offset) as usize;
+                let mut data = vec![0u8; take];
+                read_full_at(reader.as_ref(), split.offset, &mut data)?;
+                drop(reader);
                 let mut ctx = MapContext::new(num_parts);
                 mapper.map(split, &data, &mut ctx)?;
                 Ok((data.len() as u64, close_context(ctx)))
@@ -154,8 +165,16 @@ impl Engine {
                 let merged = MergeIter::new(runs);
                 let mut out = Vec::new();
                 reducer.reduce(p as u32, merged, &mut out)?;
+                // stream the partition out through a writer handle: the
+                // two-level backend drives both §3.2 legs per chunk, and a
+                // reducer that fails mid-write publishes nothing (commit
+                // is atomic)
                 let key = format!("{}part-r-{:05}", out_prefix, p);
-                store_for_reduce.write(&key, &out)?;
+                let mut w = store_for_reduce.create(&key)?;
+                for chunk in out.chunks(OUTPUT_CHUNK) {
+                    w.append(chunk)?;
+                }
+                w.commit()?;
                 Ok(out.len() as u64)
             })
             .map_err(Error::Job)?;
@@ -183,7 +202,7 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mapreduce::tests::MapStore;
+    use crate::mapreduce::tests::test_store;
     use crate::mapreduce::KV;
 
     /// word-count-ish job: input objects hold whitespace-separated words;
@@ -228,7 +247,7 @@ mod tests {
 
     #[test]
     fn word_count_end_to_end() {
-        let store = Arc::new(MapStore::new());
+        let store = Arc::new(test_store());
         store.write("in/a", b"apple banana apple").unwrap();
         store.write("in/b", b"banana cherry banana apple").unwrap();
         let engine = Engine::new(4, 2, 2);
@@ -262,7 +281,7 @@ mod tests {
 
     #[test]
     fn reducer_output_objects_created_per_partition() {
-        let store = Arc::new(MapStore::new());
+        let store = Arc::new(test_store());
         store.write("in/x", b"a b c d e f").unwrap();
         let engine = Engine::new(2, 1, 2);
         let stats = engine
@@ -285,7 +304,7 @@ mod tests {
 
     #[test]
     fn empty_input_is_an_error() {
-        let store = Arc::new(MapStore::new());
+        let store = Arc::new(test_store());
         let engine = Engine::new(2, 1, 2);
         let err = engine
             .run(
@@ -312,7 +331,7 @@ mod tests {
                 Err(Error::Job("mapper exploded".into()))
             }
         }
-        let store = Arc::new(MapStore::new());
+        let store = Arc::new(test_store());
         store.write("in/x", b"data").unwrap();
         let engine = Engine::new(2, 1, 2);
         let err = engine

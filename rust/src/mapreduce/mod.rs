@@ -19,7 +19,7 @@ pub use engine::{Engine, JobStats};
 pub use scheduler::{Assignment, LocalityScheduler};
 pub use shuffle::{merge_runs, MergeIter, Run};
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::storage::ObjectStore;
 
 /// One record flowing through the shuffle: a single buffer with the key as
@@ -149,7 +149,9 @@ pub struct JobSpec<'a> {
 }
 
 /// Derive input splits from the store contents (one split per
-/// `split_size` range of each input object).
+/// `split_size` range of each input object). Planning goes through
+/// [`ObjectStore::stat`]; an object deleted between `list` and `stat` is
+/// skipped rather than failing the job plan.
 pub fn plan_splits(
     store: &dyn ObjectStore,
     prefix: &str,
@@ -158,7 +160,11 @@ pub fn plan_splits(
 ) -> Result<Vec<InputSplit>> {
     let mut splits = Vec::new();
     for (i, key) in store.list(prefix).into_iter().enumerate() {
-        let size = store.size(&key)?;
+        let size = match store.stat(&key) {
+            Ok(meta) => meta.size,
+            Err(Error::NotFound(_)) => continue, // deleted since list
+            Err(e) => return Err(e),
+        };
         if size == 0 {
             continue;
         }
@@ -191,46 +197,11 @@ pub(crate) mod tests {
     use crate::storage::memstore::MemStore;
     use crate::storage::ObjectStore;
 
-    // a tiny in-memory ObjectStore for framework tests
-    pub(crate) struct MapStore(pub MemStore);
-    impl MapStore {
-        pub fn new() -> Self {
-            Self(MemStore::new(u64::MAX, "lru").unwrap())
-        }
-    }
-    impl ObjectStore for MapStore {
-        fn write(&self, key: &str, data: &[u8]) -> Result<()> {
-            self.0.put(key, data.to_vec().into())?;
-            Ok(())
-        }
-        fn read(&self, key: &str) -> Result<Vec<u8>> {
-            self.0
-                .get(key)
-                .map(|b| b.to_vec())
-                .ok_or_else(|| crate::Error::NotFound(key.into()))
-        }
-        fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
-            let all = self.read(key)?;
-            let s = (offset as usize).min(all.len());
-            let e = (s + len).min(all.len());
-            Ok(all[s..e].to_vec())
-        }
-        fn size(&self, key: &str) -> Result<u64> {
-            Ok(self.read(key)?.len() as u64)
-        }
-        fn exists(&self, key: &str) -> bool {
-            self.0.contains(key)
-        }
-        fn delete(&self, key: &str) -> Result<()> {
-            self.0.remove(key);
-            Ok(())
-        }
-        fn list(&self, prefix: &str) -> Vec<String> {
-            self.0.list(prefix)
-        }
-        fn kind(&self) -> &'static str {
-            "map"
-        }
+    /// Unbounded in-memory store for framework tests — `MemStore` itself
+    /// implements the full (handle-based) `ObjectStore` surface now, so
+    /// no adapter wrapper is needed.
+    pub(crate) fn test_store() -> MemStore {
+        MemStore::new(u64::MAX, "lru").unwrap()
     }
 
     #[test]
@@ -259,7 +230,7 @@ pub(crate) mod tests {
 
     #[test]
     fn plan_splits_ranges_large_objects() {
-        let store = MapStore::new();
+        let store = test_store();
         store.write("in/a", &vec![0u8; 250]).unwrap();
         store.write("in/b", &vec![0u8; 100]).unwrap();
         store.write("in/empty", b"").unwrap();
@@ -276,7 +247,7 @@ pub(crate) mod tests {
 
     #[test]
     fn plan_splits_zero_nodes() {
-        let store = MapStore::new();
+        let store = test_store();
         store.write("in/a", &[1, 2, 3]).unwrap();
         let splits = plan_splits(&store, "in/", 10, 0).unwrap();
         assert_eq!(splits[0].preferred_node, None);

@@ -109,15 +109,48 @@ const CRC32_TABLE: [u32; 256] = {
     table
 };
 
+/// Streaming IEEE CRC-32 accumulator: feed chunks as they arrive (the
+/// chunked [`crate::storage::ObjectWriter`] path), then [`Crc32::finish`].
+/// `Crc32::new().update(d).finish() == checksum(d)` for any split of `d`.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Self { state: !0u32 }
+    }
+
+    /// Absorb one chunk.
+    pub fn update(&mut self, data: &[u8]) {
+        let mut c = self.state;
+        for &b in data {
+            c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    /// Final checksum over every chunk absorbed so far (non-consuming, so
+    /// a writer can report a running CRC).
+    pub fn finish(&self) -> u32 {
+        !self.state
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// CRC32 checksum of a block (the PFS tier verifies on read; the paper's
 /// data-node-level erasure coding is out of scope, per-block CRC gives the
 /// equivalent corruption *detection* signal).
 pub fn checksum(data: &[u8]) -> u32 {
-    let mut c = !0u32;
-    for &b in data {
-        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
-    }
-    !c
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finish()
 }
 
 /// Verify `data` against `stored`, or return [`Error::ChecksumMismatch`].
@@ -205,5 +238,20 @@ mod tests {
     fn checksum_known_value() {
         // IEEE CRC32 of "123456789" is 0xCBF43926
         assert_eq!(checksum(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn streaming_crc_matches_one_shot_for_any_split() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let whole = checksum(&data);
+        for chunk in [1usize, 3, 7, 64, 999, 1000, 2000] {
+            let mut c = Crc32::new();
+            for piece in data.chunks(chunk) {
+                c.update(piece);
+            }
+            assert_eq!(c.finish(), whole, "chunk={chunk}");
+        }
+        // empty stream == checksum of empty slice
+        assert_eq!(Crc32::new().finish(), checksum(b""));
     }
 }

@@ -43,8 +43,14 @@ impl BufferPool {
     }
 
     fn give_back(&self, mut buf: Vec<u8>) {
+        // A buffer that *grew* past `buf_size` stays useful — truncating
+        // its length is free and the extra capacity just means fewer
+        // reallocations next time — so keep it. Only a buffer that ended
+        // up *below* `buf_size` capacity (shrunk via `shrink_to_fit` or
+        // swapped out) is dropped: pooling it would break the "take()
+        // yields `buf_size` capacity" contract.
         if buf.capacity() < self.buf_size {
-            return; // someone grew/shrank it oddly; don't pool
+            return;
         }
         buf.clear();
         let mut free = self.free.lock().unwrap();
@@ -122,6 +128,35 @@ mod tests {
             assert!(b.is_empty(), "recycled buffer must be cleared");
         }
         assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn grown_buffers_are_kept() {
+        let pool = BufferPool::new(64, 4);
+        {
+            let mut b = pool.take();
+            // grow well past buf_size: still poolable
+            b.resize(1024, 7);
+            assert!(b.capacity() >= 1024);
+        }
+        assert_eq!(pool.pooled(), 1, "a grown buffer must be recycled");
+        let b = pool.take();
+        assert!(b.is_empty());
+        assert!(b.capacity() >= 64, "recycled capacity never below buf_size");
+    }
+
+    #[test]
+    fn shrunk_buffers_are_dropped() {
+        let pool = BufferPool::new(64, 4);
+        {
+            let mut b = pool.take();
+            // swap in an under-sized allocation: must not be pooled
+            let small = Vec::with_capacity(8);
+            let _old = std::mem::replace(&mut *b, small);
+        }
+        assert_eq!(pool.pooled(), 0, "a shrunk buffer must not be pooled");
+        // the pool still hands out full-size buffers afterwards
+        assert!(pool.take().capacity() >= 64);
     }
 
     #[test]

@@ -11,14 +11,18 @@
 //! model charges network bandwidth for.
 
 use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
-use crate::storage::ObjectStore;
+use crate::storage::{clamped_len, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::SplitMix64;
+
+/// Uniquifies in-flight writer temp replicas.
+static HDFS_WRITER_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Counters (note `bytes_written_physical` ≈ 3× logical — the paper's
 /// write-amplification argument).
@@ -122,7 +126,230 @@ impl HdfsLike {
     }
 }
 
+/// Streaming reader over one replica: the replica is chosen at `open`
+/// (local preferred — one locality-accounting event per handle, not per
+/// `read_at`) and its file handle is shared behind a mutex for positioned
+/// reads.
+pub struct HdfsReader<'a> {
+    hdfs: &'a HdfsLike,
+    path: PathBuf,
+    file: Mutex<fs::File>,
+    size: u64,
+}
+
+impl ObjectReader for HdfsReader<'_> {
+    fn len(&self) -> u64 {
+        self.size
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        let take = clamped_len(offset, buf.len(), self.size);
+        if take == 0 {
+            return Ok(0);
+        }
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(offset))
+            .map_err(|e| Error::io(&self.path, e))?;
+        f.read_exact(&mut buf[..take])
+            .map_err(|e| Error::io(&self.path, e))?;
+        drop(f);
+        self.hdfs
+            .read_bytes
+            .fetch_add(take as u64, Ordering::Relaxed);
+        Ok(take)
+    }
+}
+
+/// Streaming replicated writer: every `append` is mirrored to all
+/// `replication` replicas as it arrives (Hadoop's synchronous per-packet
+/// pipeline, structurally), into `*.blk.tmp-<token>` files invisible to
+/// readers; `commit` renames each replica into place. `abort` (or
+/// dropping uncommitted) deletes the temp replicas.
+pub struct HdfsWriter<'a> {
+    hdfs: &'a HdfsLike,
+    key: String,
+    nodes: Vec<usize>,
+    files: Vec<fs::File>,
+    token: u64,
+    written: u64,
+    finished: bool,
+}
+
+impl HdfsWriter<'_> {
+    fn tmp_path(&self, node: usize) -> PathBuf {
+        self.hdfs.node_dirs[node].join(format!(
+            "{}.blk.tmp-{}",
+            HdfsLike::enc(&self.key),
+            self.token
+        ))
+    }
+
+    fn cleanup(&mut self) {
+        self.finished = true;
+        self.files.clear(); // close handles before unlinking
+        for &n in &self.nodes {
+            let _ = fs::remove_file(self.tmp_path(n));
+        }
+    }
+}
+
+impl Drop for HdfsWriter<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.cleanup();
+        }
+    }
+}
+
+impl ObjectWriter for HdfsWriter<'_> {
+    fn append(&mut self, chunk: &[u8]) -> Result<()> {
+        // below this, per-replica thread fan-out costs more than it overlaps
+        const PARALLEL_APPEND_MIN: usize = 128 << 10;
+
+        if self.files.len() > 1 && chunk.len() >= PARALLEL_APPEND_MIN {
+            // mirror the whole-object write: one leg per replica at once
+            let paths: Vec<PathBuf> = self.nodes.iter().map(|&n| self.tmp_path(n)).collect();
+            let results: Vec<Result<()>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .files
+                    .iter_mut()
+                    .zip(&paths)
+                    .map(|(f, path)| {
+                        scope.spawn(move || {
+                            f.write_all(chunk).map_err(|e| Error::io(path, e))
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("replica write leg panicked"))
+                    .collect()
+            });
+            for r in results {
+                r?;
+            }
+        } else {
+            for (i, f) in self.files.iter_mut().enumerate() {
+                f.write_all(chunk)
+                    .map_err(|e| Error::io(self.hdfs.node_dirs[self.nodes[i]].as_path(), e))?;
+            }
+        }
+        self.written += chunk.len() as u64;
+        Ok(())
+    }
+
+    fn written(&self) -> u64 {
+        self.written
+    }
+
+    fn commit(mut self: Box<Self>) -> Result<()> {
+        self.finished = true;
+        self.files.clear(); // close handles before renaming
+        let fresh = !self.hdfs.exists(&self.key);
+        let mut renamed = Vec::with_capacity(self.nodes.len());
+        let mut err = None;
+        for &n in &self.nodes {
+            let tmp = self.tmp_path(n);
+            let dst = self.hdfs.replica_path(&self.key, n);
+            match fs::rename(&tmp, &dst) {
+                Ok(()) => renamed.push(n),
+                Err(e) => {
+                    err = Some(Error::io(&dst, e));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = err {
+            // No temp replicas may leak. For a *fresh* key, un-publish the
+            // already-renamed replicas so a commit that returned Err is
+            // not partially visible. For an overwrite, the renamed
+            // replicas already displaced old copies — removing them would
+            // only shrink the key's surviving replica count further, so
+            // they stay (every replica is a whole object; readers see a
+            // complete old or new copy, the WORM overwrite caveat).
+            if fresh {
+                for &n in &renamed {
+                    let _ = fs::remove_file(self.hdfs.replica_path(&self.key, n));
+                }
+            }
+            for &n in &self.nodes {
+                let _ = fs::remove_file(self.tmp_path(n));
+            }
+            return Err(e);
+        }
+        self.hdfs
+            .logical
+            .fetch_add(self.written, Ordering::Relaxed);
+        self.hdfs.physical.fetch_add(
+            self.written * self.hdfs.replication as u64,
+            Ordering::Relaxed,
+        );
+        Ok(())
+    }
+
+    fn abort(mut self: Box<Self>) -> Result<()> {
+        self.cleanup();
+        Ok(())
+    }
+}
+
 impl ObjectStore for HdfsLike {
+    fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
+        let node = self
+            .find_replica(key)
+            .ok_or_else(|| Error::NotFound(key.to_string()))?;
+        if node == self.local_node {
+            self.local_reads.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.remote_reads.fetch_add(1, Ordering::Relaxed);
+        }
+        let path = self.replica_path(key, node);
+        let file = fs::File::open(&path).map_err(|e| Error::io(&path, e))?;
+        let size = file.metadata().map_err(|e| Error::io(&path, e))?.len();
+        Ok(Box::new(HdfsReader {
+            hdfs: self,
+            path,
+            file: Mutex::new(file),
+            size,
+        }))
+    }
+
+    fn create(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>> {
+        let nodes = self.replica_nodes(key);
+        let token = HDFS_WRITER_SEQ.fetch_add(1, Ordering::Relaxed);
+        let mut w = HdfsWriter {
+            hdfs: self,
+            key: key.to_string(),
+            nodes,
+            files: Vec::new(),
+            token,
+            written: 0,
+            finished: false,
+        };
+        for i in 0..w.nodes.len() {
+            let path = w.tmp_path(w.nodes[i]);
+            let f = fs::OpenOptions::new()
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&path)
+                .map_err(|e| Error::io(&path, e))?;
+            w.files.push(f);
+        }
+        Ok(Box::new(w))
+    }
+
+    fn stat(&self, key: &str) -> Result<ObjectMeta> {
+        let node = self
+            .find_replica(key)
+            .ok_or_else(|| Error::NotFound(key.to_string()))?;
+        let path = self.replica_path(key, node);
+        Ok(ObjectMeta {
+            key: key.to_string(),
+            size: fs::metadata(&path).map_err(|e| Error::io(&path, e))?.len(),
+        })
+    }
+
     fn write(&self, key: &str, data: &[u8]) -> Result<()> {
         let replicas = self.replica_nodes(key);
         let paths: Vec<PathBuf> = replicas
@@ -164,7 +391,6 @@ impl ObjectStore for HdfsLike {
     }
 
     fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
-        use std::io::{Read, Seek, SeekFrom};
         let node = self
             .find_replica(key)
             .ok_or_else(|| Error::NotFound(key.to_string()))?;
@@ -333,5 +559,60 @@ mod tests {
         let dir = TempDir::new("hdfs").unwrap();
         let h = HdfsLike::open(dir.path(), 2, 1).unwrap();
         assert!(matches!(h.read("ghost"), Err(Error::NotFound(_))));
+    }
+
+    // -- v2 handle surface ------------------------------------------------
+
+    #[test]
+    fn streaming_writer_replicates_every_chunk() {
+        let dir = TempDir::new("hdfs-w").unwrap();
+        let h = HdfsLike::open(dir.path(), 5, 3).unwrap();
+        let mut w = h.create("obj").unwrap();
+        w.append(b"chunk-one ").unwrap();
+        // invisible (and unreplicated) until commit
+        assert!(!h.exists("obj"));
+        w.append(b"chunk-two").unwrap();
+        w.commit().unwrap();
+        let copies = (0..5)
+            .filter(|&n| h.replica_path("obj", n).exists())
+            .count();
+        assert_eq!(copies, 3, "all replicas land on commit");
+        assert_eq!(h.read("obj").unwrap(), b"chunk-one chunk-two");
+        let s = h.stats();
+        assert_eq!(s.bytes_written_logical, 19);
+        assert_eq!(s.bytes_written_physical, 57);
+    }
+
+    #[test]
+    fn writer_abort_leaves_no_replicas_or_temps() {
+        let dir = TempDir::new("hdfs-a").unwrap();
+        let h = HdfsLike::open(dir.path(), 3, 2).unwrap();
+        let mut w = h.create("gone").unwrap();
+        w.append(b"data").unwrap();
+        w.abort().unwrap();
+        assert!(!h.exists("gone"));
+        for n in 0..3 {
+            let count = fs::read_dir(dir.path().join(format!("node{n}")))
+                .unwrap()
+                .count();
+            assert_eq!(count, 0, "node {n} must hold no files after abort");
+        }
+    }
+
+    #[test]
+    fn reader_read_at_clamps_and_counts_locality_once() {
+        let dir = TempDir::new("hdfs-r").unwrap();
+        let h = HdfsLike::open(dir.path(), 3, 2).unwrap();
+        h.write("r", b"0123456789").unwrap();
+        let r = h.open("r").unwrap();
+        assert_eq!(h.stats().local_reads, 1, "locality accounted at open");
+        assert_eq!(r.len(), 10);
+        let mut buf = [0u8; 4];
+        assert_eq!(r.read_at(3, &mut buf).unwrap(), 4);
+        assert_eq!(&buf, b"3456");
+        assert_eq!(r.read_at(8, &mut buf).unwrap(), 2, "EOF clamp");
+        assert_eq!(&buf[..2], b"89");
+        assert_eq!(r.read_at(10, &mut buf).unwrap(), 0);
+        assert_eq!(h.stats().local_reads, 1, "read_at adds no locality events");
     }
 }

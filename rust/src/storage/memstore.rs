@@ -38,6 +38,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::storage::eviction::{self, EvictionPolicy};
+use crate::storage::{copy_clamped, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter};
 
 /// Snapshot of the tier's counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -317,6 +318,122 @@ impl MemStore {
     }
 }
 
+/// Zero-copy reader over one memory-tier value: [`ObjectStore::open`]
+/// clones the `Arc<[u8]>` once (under the home shard lock), after which every
+/// `read_at` copies straight from the shared bytes — **no shard lock is
+/// held during `read_at`**, and the snapshot stays readable even if the
+/// key is concurrently overwritten, evicted, or removed.
+pub struct MemReader {
+    data: Arc<[u8]>,
+}
+
+impl MemReader {
+    /// The pinned value, for callers that can consume `Arc<[u8]>` directly
+    /// (the truly zero-copy path — no bytes move at all).
+    pub fn as_arc(&self) -> &Arc<[u8]> {
+        &self.data
+    }
+}
+
+impl ObjectReader for MemReader {
+    fn len(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        Ok(copy_clamped(&self.data, offset, buf))
+    }
+}
+
+/// Streaming writer into the memory tier: chunks accumulate in a private
+/// buffer and publish atomically as one `put` on commit (readers of the
+/// key see the old value or a miss until then, never a prefix).
+pub struct MemWriter<'a> {
+    store: &'a MemStore,
+    key: String,
+    buf: Vec<u8>,
+}
+
+impl ObjectWriter for MemWriter<'_> {
+    fn append(&mut self, chunk: &[u8]) -> Result<()> {
+        self.buf.extend_from_slice(chunk);
+        Ok(())
+    }
+
+    fn written(&self) -> u64 {
+        self.buf.len() as u64
+    }
+
+    fn commit(mut self: Box<Self>) -> Result<()> {
+        let data: Arc<[u8]> = std::mem::take(&mut self.buf).into();
+        // standalone MemStore drops eviction victims (no lower tier)
+        self.store.put(&self.key, data)?;
+        Ok(())
+    }
+
+    fn abort(self: Box<Self>) -> Result<()> {
+        Ok(()) // nothing was published; the buffer just drops
+    }
+}
+
+impl ObjectStore for MemStore {
+    fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
+        let data = self
+            .get(key)
+            .ok_or_else(|| Error::NotFound(key.to_string()))?;
+        Ok(Box::new(MemReader { data }))
+    }
+
+    fn create(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>> {
+        Ok(Box::new(MemWriter {
+            store: self,
+            key: key.to_string(),
+            buf: Vec::new(),
+        }))
+    }
+
+    fn stat(&self, key: &str) -> Result<ObjectMeta> {
+        // peek: stat must not skew the hit/miss counters or eviction order
+        let size = self
+            .peek(key)
+            .map(|b| b.len() as u64)
+            .ok_or_else(|| Error::NotFound(key.to_string()))?;
+        Ok(ObjectMeta {
+            key: key.to_string(),
+            size,
+        })
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.remove(key);
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        MemStore::list(self, prefix)
+    }
+
+    fn kind(&self) -> &'static str {
+        "mem"
+    }
+
+    // whole-object fast paths over the same Arc values
+    fn write(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.put(key, data.to_vec().into())?;
+        Ok(())
+    }
+
+    fn read(&self, key: &str) -> Result<Vec<u8>> {
+        self.get(key)
+            .map(|b| b.to_vec())
+            .ok_or_else(|| Error::NotFound(key.to_string()))
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.contains(key)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -535,6 +652,58 @@ mod tests {
         assert!(max_seen <= 10_000, "observed used {max_seen} > capacity");
         assert!(m.used() <= 10_000);
         assert!(m.stats().evictions > 0, "pressure must have evicted");
+    }
+
+    // -- v2 handle surface ------------------------------------------------
+
+    #[test]
+    fn reader_is_zero_copy_and_pins_its_snapshot() {
+        let m = MemStore::new(1024, "lru").unwrap();
+        ObjectStore::write(&m, "k", &[7u8; 64]).unwrap();
+        let hits_before = m.stats().hits;
+        let r = ObjectStore::open(&m, "k").unwrap();
+        assert_eq!(m.stats().hits, hits_before + 1, "open records one access");
+        assert_eq!(r.len(), 64);
+
+        // read_at touches no shard lock and no counters
+        let mut buf = [0u8; 16];
+        assert_eq!(r.read_at(0, &mut buf).unwrap(), 16);
+        assert_eq!(buf, [7u8; 16]);
+        assert_eq!(m.stats().hits, hits_before + 1);
+
+        // the snapshot survives removal and overwrite: the Arc is pinned
+        m.remove("k");
+        ObjectStore::write(&m, "k", &[9u8; 8]).unwrap();
+        assert_eq!(r.read_at(60, &mut buf).unwrap(), 4, "EOF clamp");
+        assert_eq!(&buf[..4], &[7u8; 4]);
+        assert_eq!(r.read_at(64, &mut buf).unwrap(), 0, "at EOF");
+    }
+
+    #[test]
+    fn writer_publishes_atomically_on_commit() {
+        let m = MemStore::new(4096, "lru").unwrap();
+        let mut w = ObjectStore::create(&m, "obj").unwrap();
+        w.append(b"hello ").unwrap();
+        assert!(!ObjectStore::exists(&m, "obj"), "invisible before commit");
+        w.append(b"world").unwrap();
+        assert_eq!(w.written(), 11);
+        w.commit().unwrap();
+        assert_eq!(ObjectStore::read(&m, "obj").unwrap(), b"hello world");
+        assert_eq!(ObjectStore::stat(&m, "obj").unwrap().size, 11);
+    }
+
+    #[test]
+    fn writer_abort_leaves_nothing() {
+        let m = MemStore::new(4096, "lru").unwrap();
+        let w = {
+            let mut w = ObjectStore::create(&m, "gone").unwrap();
+            w.append(&[1u8; 100]).unwrap();
+            w
+        };
+        w.abort().unwrap();
+        assert!(!ObjectStore::exists(&m, "gone"));
+        assert_eq!(m.used(), 0);
+        assert!(ObjectStore::stat(&m, "gone").is_err());
     }
 
     #[test]

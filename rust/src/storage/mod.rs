@@ -19,10 +19,18 @@
 //!
 //! All engines implement [`ObjectStore`], so MapReduce jobs and benches are
 //! generic over the backend — exactly how the paper swaps HDFS / OrangeFS /
-//! two-level under the same TeraSort workload. The concurrency knobs
-//! thread through [`crate::config::EngineConfig`] (`mem_shards`,
-//! `concurrent_writethrough`, `workers`) and the `TlsConfig` builder; see
-//! `docs/ARCHITECTURE.md` for the sharding and lock-order invariants.
+//! two-level under the same TeraSort workload. The v2 surface is
+//! **streaming**: [`ObjectStore::open`] returns an [`ObjectReader`] whose
+//! `read_at` copies into caller-owned buffers (zero intermediate copies on
+//! the memory tier), and [`ObjectStore::create`] returns an
+//! [`ObjectWriter`] whose chunked `append`s move data tier-ward as they
+//! arrive — the paper's §3.2 dual-buffer path, with atomic
+//! `commit`/`abort` so partially written objects are never visible. The
+//! whole-object v1 methods remain as default-method adapters. The
+//! concurrency knobs thread through [`crate::config::EngineConfig`]
+//! (`mem_shards`, `concurrent_writethrough`, `workers`) and the
+//! `TlsConfig` builder; see `docs/ARCHITECTURE.md` for the sharding,
+//! lock-order, and commit-visibility invariants.
 
 pub mod block;
 pub mod buffer;
@@ -33,7 +41,7 @@ pub mod memstore;
 pub mod pfs;
 pub mod tls;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 
 /// The paper's write modes (Figure 4 a–c).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -62,25 +70,98 @@ pub enum ReadMode {
     TwoLevel,
 }
 
+/// Metadata of one stored object, returned by [`ObjectStore::stat`].
+///
+/// `stat` subsumes the v1 `size`/`exists` pair: a successful `stat` means
+/// the object exists, and the metadata carries everything a caller needs
+/// to plan a streaming read (currently the byte size; the struct is
+/// `non_exhaustive` in spirit — new fields ride along as the backends
+/// learn to report more).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjectMeta {
+    /// The object's key.
+    pub key: String,
+    /// Object size in bytes.
+    pub size: u64,
+}
+
+/// Streaming read handle over one immutable object (the v2 read surface).
+///
+/// A reader is a *stateless* positioned view: `read_at` copies into a
+/// **caller-owned** buffer at any offset, holds no cursor, and is safe to
+/// share across threads (`&self`, `Send + Sync`). Backends pin whatever
+/// snapshot they need at [`ObjectStore::open`] time — the memory tier pins
+/// an `Arc<[u8]>` so `read_at` never touches a shard lock and copies
+/// nothing except the caller's own `memcpy`.
+pub trait ObjectReader: Send + Sync {
+    /// Total object size in bytes (fixed at `open`).
+    fn len(&self) -> u64;
+
+    /// Whether the object is zero bytes long.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy bytes starting at `offset` into `buf`, returning how many were
+    /// copied. Reads clamp at EOF: a short count means the object ended,
+    /// and `offset >= len()` yields `Ok(0)`. Implementations hold no lock
+    /// across calls; the memory tier takes none at all during `read_at`,
+    /// while file-backed backends may briefly serialize concurrent
+    /// `read_at`s on a shared descriptor.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize>;
+}
+
+/// Streaming write handle building one object chunk by chunk (the v2
+/// write surface).
+///
+/// `append` accepts arbitrarily sized chunks; nothing becomes visible to
+/// readers until [`ObjectWriter::commit`] publishes the object. A reader
+/// racing an *uncommitted* writer sees the old object (on overwrite) or
+/// `NotFound` (fresh key) — never a prefix — and a fresh key's commit is
+/// atomic. Racing reads against the commit of an *overwrite* carry the
+/// same caveat as the v1 whole-object `write`: the store contract is
+/// write-once-read-many, and mid-replacement readers of that one key may
+/// observe a verification error until the commit completes.
+/// [`ObjectWriter::abort`] (or dropping the writer uncommitted) discards
+/// every staged byte and leaves no orphan stripes, replicas, or
+/// memory-tier blocks behind.
+pub trait ObjectWriter: Send {
+    /// Append one chunk to the object being built.
+    fn append(&mut self, chunk: &[u8]) -> Result<()>;
+
+    /// Bytes appended so far (not yet visible to readers).
+    fn written(&self) -> u64;
+
+    /// Atomically publish the object under its key, replacing any previous
+    /// version. Consumes the writer.
+    fn commit(self: Box<Self>) -> Result<()>;
+
+    /// Discard the staged object without publishing. Consumes the writer.
+    fn abort(self: Box<Self>) -> Result<()>;
+}
+
 /// Minimal object-store interface every backend implements.
 ///
 /// Objects are immutable once written (the Hadoop write-once-read-many
-/// model the paper assumes); `write` to an existing key replaces it.
+/// model the paper assumes); committing a writer for an existing key
+/// replaces the object.
+///
+/// The v2 surface is handle-based: [`ObjectStore::open`] /
+/// [`ObjectStore::create`] / [`ObjectStore::stat`] are what backends
+/// implement natively, mapping the paper's §3.2 chunked buffer path onto
+/// per-chunk `read_at`/`append` calls. The v1 whole-object methods
+/// (`read`, `read_range`, `write`, `size`, `exists`) are default-method
+/// adapters over the handles so existing callers keep compiling; backends
+/// may still override them where a whole-object fast path exists.
 pub trait ObjectStore: Send + Sync {
-    /// Store `data` under `key`.
-    fn write(&self, key: &str, data: &[u8]) -> Result<()>;
+    /// Open a streaming reader over `key`.
+    fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>>;
 
-    /// Fetch the whole object.
-    fn read(&self, key: &str) -> Result<Vec<u8>>;
+    /// Start a streaming writer that will publish `key` on commit.
+    fn create(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>>;
 
-    /// Fetch `len` bytes starting at `offset` (reads clamp at EOF).
-    fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>>;
-
-    /// Object size in bytes.
-    fn size(&self, key: &str) -> Result<u64>;
-
-    /// Whether `key` exists.
-    fn exists(&self, key: &str) -> bool;
+    /// Object metadata; `Err(NotFound)` if the key does not exist.
+    fn stat(&self, key: &str) -> Result<ObjectMeta>;
 
     /// Remove an object (idempotent: missing keys are not an error).
     fn delete(&self, key: &str) -> Result<()>;
@@ -90,13 +171,211 @@ pub trait ObjectStore: Send + Sync {
 
     /// Human name for logs/benches.
     fn kind(&self) -> &'static str;
+
+    // ---- v1 compatibility adapters (default methods over the handles) ----
+
+    /// Store `data` under `key` (adapter: `create` → one `append` →
+    /// `commit`).
+    fn write(&self, key: &str, data: &[u8]) -> Result<()> {
+        let mut w = self.create(key)?;
+        w.append(data)?;
+        w.commit()
+    }
+
+    /// Fetch the whole object (adapter over [`ObjectStore::open`]).
+    fn read(&self, key: &str) -> Result<Vec<u8>> {
+        let r = self.open(key)?;
+        let mut out = vec![0u8; r.len() as usize];
+        read_full_at(r.as_ref(), 0, &mut out)?;
+        Ok(out)
+    }
+
+    /// Fetch `len` bytes starting at `offset` (reads clamp at EOF; adapter
+    /// over [`ObjectStore::open`]).
+    fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let r = self.open(key)?;
+        let take = clamped_len(offset, len, r.len());
+        let mut out = vec![0u8; take];
+        if take > 0 {
+            read_full_at(r.as_ref(), offset, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Object size in bytes (adapter over [`ObjectStore::stat`]).
+    fn size(&self, key: &str) -> Result<u64> {
+        Ok(self.stat(key)?.size)
+    }
+
+    /// Whether `key` exists (adapter over [`ObjectStore::stat`]).
+    fn exists(&self, key: &str) -> bool {
+        self.stat(key).is_ok()
+    }
 }
 
-/// Convenience: total bytes under a prefix.
+/// Fill `buf` completely from `offset`, looping [`ObjectReader::read_at`]
+/// until done. Errors if the object ends before `buf` is filled — use this
+/// when the caller already clamped the request to `len()`.
+pub fn read_full_at(reader: &dyn ObjectReader, offset: u64, buf: &mut [u8]) -> Result<()> {
+    let mut done = 0usize;
+    while done < buf.len() {
+        let n = reader.read_at(offset + done as u64, &mut buf[done..])?;
+        if n == 0 {
+            return Err(Error::NotFound(format!(
+                "object truncated at offset {} ({} bytes still expected)",
+                offset + done as u64,
+                buf.len() - done
+            )));
+        }
+        done += n;
+    }
+    Ok(())
+}
+
+/// Clamp an `(offset, len)` request against an object of `size` bytes,
+/// returning how many bytes are actually readable (0 when `offset` is at
+/// or past EOF). The shared EOF arithmetic behind every ranged adapter.
+pub fn clamped_len(offset: u64, len: usize, size: u64) -> usize {
+    let end = offset.saturating_add(len as u64).min(size);
+    end.saturating_sub(offset.min(end)) as usize
+}
+
+/// Copy `src[offset..]` into `buf`, clamped at EOF; returns bytes copied.
+/// The shared EOF-clamping kernel the in-memory readers use.
+pub(crate) fn copy_clamped(src: &[u8], offset: u64, buf: &mut [u8]) -> usize {
+    if offset >= src.len() as u64 {
+        return 0;
+    }
+    let start = offset as usize;
+    let n = (src.len() - start).min(buf.len());
+    buf[..n].copy_from_slice(&src[start..start + n]);
+    n
+}
+
+/// Convenience: total bytes under a prefix, via [`ObjectStore::stat`].
+///
+/// A key deleted between `list` and `stat` counts as 0 bytes instead of
+/// failing the whole sum (the v1 version surfaced the race as an error).
 pub fn prefix_bytes(store: &dyn ObjectStore, prefix: &str) -> Result<u64> {
     let mut total = 0;
     for key in store.list(prefix) {
-        total += store.size(&key)?;
+        match store.stat(&key) {
+            Ok(meta) => total += meta.size,
+            Err(Error::NotFound(_)) => {} // deleted between list and stat
+            Err(e) => return Err(e),
+        }
     }
     Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::memstore::MemStore;
+
+    /// Delegates only the v2 required methods, so every v1 call in these
+    /// tests exercises the trait's default-method adapters.
+    struct HandleOnly(MemStore);
+
+    impl ObjectStore for HandleOnly {
+        fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
+            self.0.open(key)
+        }
+        fn create(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>> {
+            self.0.create(key)
+        }
+        fn stat(&self, key: &str) -> Result<ObjectMeta> {
+            self.0.stat(key)
+        }
+        fn delete(&self, key: &str) -> Result<()> {
+            ObjectStore::delete(&self.0, key)
+        }
+        fn list(&self, prefix: &str) -> Vec<String> {
+            ObjectStore::list(&self.0, prefix)
+        }
+        fn kind(&self) -> &'static str {
+            "handle-only"
+        }
+    }
+
+    fn handle_store() -> HandleOnly {
+        HandleOnly(MemStore::new(u64::MAX, "lru").unwrap())
+    }
+
+    #[test]
+    fn default_adapters_cover_the_v1_surface() {
+        let s = handle_store();
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        s.write("p/a", &data).unwrap();
+        assert_eq!(s.read("p/a").unwrap(), data);
+        assert_eq!(s.read_range("p/a", 100, 50).unwrap(), &data[100..150]);
+        assert_eq!(s.read_range("p/a", 990, 100).unwrap(), &data[990..]);
+        assert_eq!(s.read_range("p/a", 1000, 5).unwrap(), Vec::<u8>::new());
+        assert_eq!(s.read_range("p/a", 5000, 5).unwrap(), Vec::<u8>::new());
+        assert_eq!(s.size("p/a").unwrap(), 1000);
+        assert!(s.exists("p/a"));
+        assert!(!s.exists("p/b"));
+        s.delete("p/a").unwrap();
+        assert!(!s.exists("p/a"));
+    }
+
+    #[test]
+    fn clamped_len_edges() {
+        assert_eq!(clamped_len(0, 10, 100), 10);
+        assert_eq!(clamped_len(95, 10, 100), 5);
+        assert_eq!(clamped_len(100, 10, 100), 0);
+        assert_eq!(clamped_len(500, 10, 100), 0);
+        assert_eq!(clamped_len(0, 0, 100), 0);
+        assert_eq!(clamped_len(u64::MAX, usize::MAX, u64::MAX), 0);
+        assert_eq!(clamped_len(0, 10, 0), 0);
+    }
+
+    #[test]
+    fn copy_clamped_edges() {
+        let src = [1u8, 2, 3, 4, 5];
+        let mut buf = [0u8; 3];
+        assert_eq!(copy_clamped(&src, 0, &mut buf), 3);
+        assert_eq!(buf, [1, 2, 3]);
+        assert_eq!(copy_clamped(&src, 3, &mut buf), 2);
+        assert_eq!(&buf[..2], &[4, 5]);
+        assert_eq!(copy_clamped(&src, 5, &mut buf), 0);
+        assert_eq!(copy_clamped(&src, 99, &mut buf), 0);
+        assert_eq!(copy_clamped(&src, 0, &mut []), 0);
+    }
+
+    /// `list` reports a key that no longer exists — the list/stat race
+    /// `prefix_bytes` must absorb as 0 bytes, not an error.
+    struct GhostList(MemStore);
+
+    impl ObjectStore for GhostList {
+        fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
+            self.0.open(key)
+        }
+        fn create(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>> {
+            self.0.create(key)
+        }
+        fn stat(&self, key: &str) -> Result<ObjectMeta> {
+            self.0.stat(key)
+        }
+        fn delete(&self, key: &str) -> Result<()> {
+            ObjectStore::delete(&self.0, key)
+        }
+        fn list(&self, prefix: &str) -> Vec<String> {
+            let mut keys = ObjectStore::list(&self.0, prefix);
+            keys.push(format!("{prefix}ghost-deleted-since-list"));
+            keys
+        }
+        fn kind(&self) -> &'static str {
+            "ghost"
+        }
+    }
+
+    #[test]
+    fn prefix_bytes_treats_vanished_keys_as_zero() {
+        let s = GhostList(MemStore::new(u64::MAX, "lru").unwrap());
+        ObjectStore::write(&s.0, "p/a", &[0u8; 100]).unwrap();
+        ObjectStore::write(&s.0, "p/b", &[0u8; 50]).unwrap();
+        assert_eq!(s.list("p/").len(), 3, "ghost key is listed");
+        assert_eq!(prefix_bytes(&s, "p/").unwrap(), 150);
+    }
 }

@@ -19,16 +19,20 @@
 //! two-level store's block reads ride).
 
 use std::fs;
-use std::io::{Read, Seek, SeekFrom};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::storage::block::{checksum, verify_checksum};
+use crate::storage::block::{checksum, verify_checksum, Crc32};
 use crate::storage::layout::{StripeLayout, StripeSegment};
-use crate::storage::ObjectStore;
+use crate::storage::{clamped_len, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter};
 use crate::util::pool::ThreadPool;
+
+/// Uniquifies in-flight writer temp files (several writers may stream the
+/// same key concurrently; last committed meta wins, as with `write`).
+static PFS_WRITER_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Per-write layout overrides (the plug-in "hints" of §3.1).
 #[derive(Debug, Clone, Copy, Default)]
@@ -138,7 +142,7 @@ impl Pfs {
 
     // -- metadata ----------------------------------------------------------
 
-    fn write_meta(&self, key: &str, meta: &ObjectMeta) -> Result<()> {
+    fn write_meta(&self, key: &str, meta: &FileMeta) -> Result<()> {
         let path = self.meta_path(key);
         let text = format!(
             "size = {}\nstripe = {}\nservers = {}\ncrc = {}\n",
@@ -151,13 +155,13 @@ impl Pfs {
         Ok(())
     }
 
-    fn read_meta(&self, key: &str) -> Result<ObjectMeta> {
+    fn read_meta(&self, key: &str) -> Result<FileMeta> {
         let path = self.meta_path(key);
         let text = fs::read_to_string(&path).map_err(|_| Error::NotFound(key.to_string()))?;
-        ObjectMeta::parse(&text).ok_or_else(|| Error::Artifact(format!("bad meta for {key}")))
+        FileMeta::parse(&text).ok_or_else(|| Error::Artifact(format!("bad meta for {key}")))
     }
 
-    fn layout_of(&self, meta: &ObjectMeta) -> Result<StripeLayout> {
+    fn layout_of(&self, meta: &FileMeta) -> Result<StripeLayout> {
         StripeLayout::new(meta.stripe, meta.servers)
     }
 
@@ -207,7 +211,7 @@ impl Pfs {
 
         self.write_meta(
             key,
-            &ObjectMeta {
+            &FileMeta {
                 size: data.len() as u64,
                 stripe,
                 servers: servers.max(1),
@@ -225,17 +229,394 @@ impl Pfs {
         let meta = self.read_meta(key)?;
         Ok((meta.size, self.layout_of(&meta)?))
     }
+
+    /// Start a streaming writer with explicit layout hints: each appended
+    /// chunk is striped round-robin across the servers *as it arrives*
+    /// (into per-server temp datafiles), and `commit` atomically publishes
+    /// datafiles + metadata. See [`PfsWriter`].
+    pub fn create_with_hints(&self, key: &str, hints: Hints) -> Result<PfsWriter<'_>> {
+        let stripe = hints.stripe_size.unwrap_or(self.default_stripe);
+        let servers = hints
+            .servers
+            .unwrap_or(self.server_dirs.len())
+            .min(self.server_dirs.len())
+            .max(1);
+        let layout = StripeLayout::new(stripe, servers)?;
+        let token = PFS_WRITER_SEQ.fetch_add(1, Ordering::Relaxed);
+        Ok(PfsWriter {
+            pfs: self,
+            key: key.to_string(),
+            layout,
+            files: (0..servers).map(|_| None).collect(),
+            token,
+            written: 0,
+            crc: Crc32::new(),
+            finished: false,
+        })
+    }
+
+    /// Read the byte range starting at `offset` into `buf` (whose length
+    /// the caller has already clamped to the object size): segments are
+    /// grouped per server, one pool task per involved server, single
+    /// server reads go straight into `buf`. Returns bytes read.
+    fn read_segments_into(
+        &self,
+        key: &str,
+        meta: &FileMeta,
+        layout: &StripeLayout,
+        offset: u64,
+        buf: &mut [u8],
+    ) -> Result<usize> {
+        let segs = layout.map_range(meta.size, offset, buf.len() as u64);
+        let total: u64 = segs.iter().map(|s| s.len).sum();
+        debug_assert!(total as usize <= buf.len());
+        let base = offset;
+
+        // Group segments per server: one task per involved server opens
+        // its datafile once and serves every segment it owns, so a range
+        // spanning many stripes engages all data nodes concurrently
+        // instead of seeking through them one stripe at a time.
+        let mut per_server: Vec<Vec<StripeSegment>> = vec![Vec::new(); self.server_dirs.len()];
+        for seg in &segs {
+            per_server[seg.server].push(*seg);
+        }
+        let jobs: Vec<(PathBuf, Vec<StripeSegment>)> = per_server
+            .into_iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(s, v)| (self.datafile(key, s), v))
+            .collect();
+
+        fn read_server(
+            path: &Path,
+            segs: &[StripeSegment],
+            base: u64,
+        ) -> Result<Vec<(usize, Vec<u8>)>> {
+            let mut f = fs::File::open(path).map_err(|e| Error::io(path, e))?;
+            let mut pieces = Vec::with_capacity(segs.len());
+            for seg in segs {
+                f.seek(SeekFrom::Start(seg.local_offset))
+                    .map_err(|e| Error::io(path, e))?;
+                let mut buf = vec![0u8; seg.len as usize];
+                f.read_exact(&mut buf).map_err(|e| Error::io(path, e))?;
+                pieces.push(((seg.object_offset - base) as usize, buf));
+            }
+            Ok(pieces)
+        }
+
+        if jobs.len() <= 1 {
+            // Single-server fast path (e.g. a range within one stripe —
+            // the common small two-level block read): no pool dispatch,
+            // no temp buffers; read straight into the output.
+            if let Some((path, segs)) = jobs.first() {
+                let mut f = fs::File::open(path).map_err(|e| Error::io(path, e))?;
+                for seg in segs {
+                    f.seek(SeekFrom::Start(seg.local_offset))
+                        .map_err(|e| Error::io(path, e))?;
+                    let dst = (seg.object_offset - base) as usize;
+                    f.read_exact(&mut buf[dst..dst + seg.len as usize])
+                        .map_err(|e| Error::io(path, e))?;
+                }
+            }
+        } else {
+            let jobs = Arc::new(jobs);
+            let j2 = Arc::clone(&jobs);
+            let results: Vec<Result<Vec<(usize, Vec<u8>)>>> = self
+                .pool
+                .map(jobs.len(), move |i| {
+                    let (path, segs) = &j2[i];
+                    read_server(path, segs, base)
+                })
+                .map_err(Error::Job)?;
+            for r in results {
+                for (dst_start, piece) in r? {
+                    buf[dst_start..dst_start + piece.len()].copy_from_slice(&piece);
+                }
+            }
+        }
+        self.bytes_read.fetch_add(total, Ordering::Relaxed);
+        Ok(total as usize)
+    }
+}
+
+/// Streaming reader over one striped object: geometry is snapshotted at
+/// `open`, each `read_at` maps the requested range onto per-server stripe
+/// segments and fans one task out per involved server (single-server
+/// ranges skip the pool and read straight into the caller's buffer).
+pub struct PfsReader<'a> {
+    pfs: &'a Pfs,
+    key: String,
+    meta: FileMeta,
+    layout: StripeLayout,
+}
+
+impl ObjectReader for PfsReader<'_> {
+    fn len(&self) -> u64 {
+        self.meta.size
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        let take = clamped_len(offset, buf.len(), self.meta.size);
+        if take == 0 {
+            return Ok(0);
+        }
+        self.pfs.reads.fetch_add(1, Ordering::Relaxed);
+        self.pfs
+            .read_segments_into(&self.key, &self.meta, &self.layout, offset, &mut buf[..take])
+    }
+}
+
+/// Streaming striped writer: `append` splits each chunk across the server
+/// datafiles round-robin as it arrives (OrangeFS layout: stripe `k` at
+/// offset `(k / N) * stripe` of datafile `k % N`), accumulating a
+/// streaming CRC. Chunks land in per-server `*.df.tmp-<token>` files that
+/// are invisible to readers; `commit` renames them into place and then
+/// publishes the metadata file (write-then-rename), so a concurrent
+/// reader of a fresh key sees `NotFound` until the commit completes —
+/// never a prefix. `abort` (or dropping uncommitted) deletes the temp
+/// datafiles, leaving no orphan stripes.
+pub struct PfsWriter<'a> {
+    pfs: &'a Pfs,
+    key: String,
+    layout: StripeLayout,
+    files: Vec<Option<fs::File>>,
+    token: u64,
+    written: u64,
+    crc: Crc32,
+    finished: bool,
+}
+
+impl PfsWriter<'_> {
+    fn tmp_path(&self, server: usize) -> PathBuf {
+        self.pfs.server_dirs[server].join(format!(
+            "{}.df.tmp-{}",
+            Pfs::enc(&self.key),
+            self.token
+        ))
+    }
+
+    /// Append one chunk (inherent form; [`ObjectWriter::append`] delegates
+    /// here so in-crate callers can hold the concrete writer).
+    ///
+    /// The chunk's byte range is mapped onto stripe segments and grouped
+    /// per server (each server's datafile receives ascending local
+    /// offsets, so these are positioned appends). Large chunks touching
+    /// several servers fan one scoped thread out per involved server —
+    /// the same aggregate-bandwidth shape as the whole-object
+    /// `write_with_hints`; small chunks skip the fan-out.
+    pub fn append_chunk(&mut self, chunk: &[u8]) -> Result<()> {
+        // below this, thread fan-out costs more than it overlaps
+        const PARALLEL_APPEND_MIN: usize = 128 << 10;
+
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        let end = self.written + chunk.len() as u64;
+        let base = self.written;
+        let segs = self.layout.map_range(end, base, chunk.len() as u64);
+        let mut per_server: Vec<Vec<StripeSegment>> = vec![Vec::new(); self.files.len()];
+        for seg in &segs {
+            per_server[seg.server].push(*seg);
+        }
+
+        // open any involved datafile that has no handle yet
+        let paths: Vec<PathBuf> = (0..self.files.len()).map(|s| self.tmp_path(s)).collect();
+        for s in 0..self.files.len() {
+            if !per_server[s].is_empty() && self.files[s].is_none() {
+                let f = fs::OpenOptions::new()
+                    .write(true)
+                    .create(true)
+                    .truncate(true)
+                    .open(&paths[s])
+                    .map_err(|e| Error::io(&paths[s], e))?;
+                self.files[s] = Some(f);
+            }
+        }
+
+        fn write_segments(
+            f: &mut fs::File,
+            segs: &[StripeSegment],
+            base: u64,
+            chunk: &[u8],
+            path: &Path,
+        ) -> Result<()> {
+            for seg in segs {
+                f.seek(SeekFrom::Start(seg.local_offset))
+                    .map_err(|e| Error::io(path, e))?;
+                let src = (seg.object_offset - base) as usize;
+                f.write_all(&chunk[src..src + seg.len as usize])
+                    .map_err(|e| Error::io(path, e))?;
+            }
+            Ok(())
+        }
+
+        let involved = per_server.iter().filter(|v| !v.is_empty()).count();
+        if involved > 1 && chunk.len() >= PARALLEL_APPEND_MIN {
+            let results: Vec<Result<()>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .files
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(s, _)| !per_server[*s].is_empty())
+                    .map(|(s, slot)| {
+                        let f = slot.as_mut().expect("opened above");
+                        let segs = &per_server[s];
+                        let path = &paths[s];
+                        scope.spawn(move || write_segments(f, segs, base, chunk, path))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("pfs append leg panicked"))
+                    .collect()
+            });
+            for r in results {
+                r?;
+            }
+        } else {
+            for s in 0..self.files.len() {
+                if per_server[s].is_empty() {
+                    continue;
+                }
+                let f = self.files[s].as_mut().expect("opened above");
+                write_segments(f, &per_server[s], base, chunk, &paths[s])?;
+            }
+        }
+        self.crc.update(chunk);
+        self.written = end;
+        Ok(())
+    }
+
+    /// Bytes appended so far.
+    pub fn bytes_written(&self) -> u64 {
+        self.written
+    }
+
+    /// Publish: rename temp datafiles into place, drop stale wider ones,
+    /// then write the metadata file (the visibility point — a fresh key
+    /// stays `NotFound` until the meta lands).
+    ///
+    /// Overwrite caveat: as with the whole-object `write`, datafiles of an
+    /// *existing* key are replaced before the new meta publishes, so a
+    /// reader racing an overwrite commit can hit a CRC-mismatch window.
+    /// The store contract is write-once-read-many; racing reads against
+    /// overwrites of the same key sit outside it.
+    pub fn finish(mut self) -> Result<()> {
+        self.finished = true;
+        let mut err: Option<Error> = None;
+        let mut touched_live = false; // any rename/unlink of live datafiles ran
+        for s in 0..self.files.len() {
+            let had_data = self.files[s].take().is_some(); // close before rename
+            if err.is_some() {
+                continue; // cleanup happens below
+            }
+            let tmp = self.tmp_path(s);
+            let dst = self.pfs.datafile(&self.key, s);
+            if had_data {
+                match fs::rename(&tmp, &dst) {
+                    Ok(()) => touched_live = true,
+                    Err(e) => err = Some(Error::io(&dst, e)),
+                }
+            } else {
+                // no stripes landed here (small object): drop any stale
+                // datafile a previous, larger version left behind
+                let _ = fs::remove_file(&dst);
+                touched_live = true;
+            }
+        }
+        if err.is_none() {
+            for s in self.files.len()..self.pfs.server_dirs.len() {
+                let _ = fs::remove_file(self.pfs.datafile(&self.key, s));
+            }
+            if let Err(e) = self.pfs.write_meta(
+                &self.key,
+                &FileMeta {
+                    size: self.written,
+                    stripe: self.layout.stripe_size,
+                    servers: self.layout.servers,
+                    crc: self.crc.finish(),
+                },
+            ) {
+                err = Some(e);
+            }
+        }
+        if let Some(e) = err {
+            // A commit that returns Err leaks no temp datafiles. For a
+            // fresh key (no meta ever published) the already-renamed
+            // datafiles are invisible garbage — drop them too. For an
+            // overwrite whose live datafiles were already partially
+            // replaced, the old meta now describes mixed-version bytes:
+            // drop the meta as well, so the key reads as a clean
+            // `NotFound` instead of serving corruption (the replaced
+            // version is unrecoverable either way — the WORM-contract
+            // overwrite caveat documented on this writer).
+            for s in 0..self.files.len() {
+                let _ = fs::remove_file(self.tmp_path(s));
+            }
+            let meta = self.pfs.meta_path(&self.key);
+            if !meta.exists() || touched_live {
+                let _ = fs::remove_file(&meta);
+                for s in 0..self.pfs.server_dirs.len() {
+                    let _ = fs::remove_file(self.pfs.datafile(&self.key, s));
+                }
+            }
+            return Err(e);
+        }
+        self.pfs.bytes_written.fetch_add(self.written, Ordering::Relaxed);
+        self.pfs.objects_written.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Discard the staged temp datafiles without publishing.
+    pub fn cancel(mut self) -> Result<()> {
+        self.cleanup();
+        Ok(())
+    }
+
+    fn cleanup(&mut self) {
+        self.finished = true;
+        for s in 0..self.files.len() {
+            self.files[s] = None;
+            let _ = fs::remove_file(self.tmp_path(s));
+        }
+    }
+}
+
+impl Drop for PfsWriter<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.cleanup();
+        }
+    }
+}
+
+impl ObjectWriter for PfsWriter<'_> {
+    fn append(&mut self, chunk: &[u8]) -> Result<()> {
+        self.append_chunk(chunk)
+    }
+
+    fn written(&self) -> u64 {
+        self.bytes_written()
+    }
+
+    fn commit(self: Box<Self>) -> Result<()> {
+        (*self).finish()
+    }
+
+    fn abort(self: Box<Self>) -> Result<()> {
+        (*self).cancel()
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
-struct ObjectMeta {
+struct FileMeta {
     size: u64,
     stripe: u64,
     servers: usize,
     crc: u32,
 }
 
-impl ObjectMeta {
+impl FileMeta {
     fn parse(text: &str) -> Option<Self> {
         let mut size = None;
         let mut stripe = None;
@@ -262,6 +643,28 @@ impl ObjectMeta {
 }
 
 impl ObjectStore for Pfs {
+    fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
+        let meta = self.read_meta(key)?;
+        let layout = self.layout_of(&meta)?;
+        Ok(Box::new(PfsReader {
+            pfs: self,
+            key: key.to_string(),
+            meta,
+            layout,
+        }))
+    }
+
+    fn create(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>> {
+        Ok(Box::new(self.create_with_hints(key, Hints::default())?))
+    }
+
+    fn stat(&self, key: &str) -> Result<ObjectMeta> {
+        Ok(ObjectMeta {
+            key: key.to_string(),
+            size: self.read_meta(key)?.size,
+        })
+    }
+
     fn write(&self, key: &str, data: &[u8]) -> Result<()> {
         self.write_with_hints(key, data, Hints::default())
     }
@@ -324,75 +727,8 @@ impl ObjectStore for Pfs {
         let meta = self.read_meta(key)?;
         let layout = self.layout_of(&meta)?;
         self.reads.fetch_add(1, Ordering::Relaxed);
-        let segs = layout.map_range(meta.size, offset, len as u64);
-        let total: u64 = segs.iter().map(|s| s.len).sum();
-        let mut out = vec![0u8; total as usize];
-        let base = offset;
-
-        // Group segments per server: one task per involved server opens
-        // its datafile once and serves every segment it owns, so a range
-        // spanning many stripes engages all data nodes concurrently
-        // instead of seeking through them one stripe at a time.
-        let mut per_server: Vec<Vec<StripeSegment>> =
-            vec![Vec::new(); self.server_dirs.len()];
-        for seg in &segs {
-            per_server[seg.server].push(*seg);
-        }
-        let jobs: Vec<(PathBuf, Vec<StripeSegment>)> = per_server
-            .into_iter()
-            .enumerate()
-            .filter(|(_, v)| !v.is_empty())
-            .map(|(s, v)| (self.datafile(key, s), v))
-            .collect();
-
-        fn read_server(
-            path: &Path,
-            segs: &[StripeSegment],
-            base: u64,
-        ) -> Result<Vec<(usize, Vec<u8>)>> {
-            let mut f = fs::File::open(path).map_err(|e| Error::io(path, e))?;
-            let mut pieces = Vec::with_capacity(segs.len());
-            for seg in segs {
-                f.seek(SeekFrom::Start(seg.local_offset))
-                    .map_err(|e| Error::io(path, e))?;
-                let mut buf = vec![0u8; seg.len as usize];
-                f.read_exact(&mut buf).map_err(|e| Error::io(path, e))?;
-                pieces.push(((seg.object_offset - base) as usize, buf));
-            }
-            Ok(pieces)
-        }
-
-        if jobs.len() <= 1 {
-            // Single-server fast path (e.g. a range within one stripe —
-            // the common small two-level block read): no pool dispatch,
-            // no temp buffers; read straight into the output.
-            if let Some((path, segs)) = jobs.first() {
-                let mut f = fs::File::open(path).map_err(|e| Error::io(path, e))?;
-                for seg in segs {
-                    f.seek(SeekFrom::Start(seg.local_offset))
-                        .map_err(|e| Error::io(path, e))?;
-                    let dst = (seg.object_offset - base) as usize;
-                    f.read_exact(&mut out[dst..dst + seg.len as usize])
-                        .map_err(|e| Error::io(path, e))?;
-                }
-            }
-        } else {
-            let jobs = Arc::new(jobs);
-            let j2 = Arc::clone(&jobs);
-            let results: Vec<Result<Vec<(usize, Vec<u8>)>>> = self
-                .pool
-                .map(jobs.len(), move |i| {
-                    let (path, segs) = &j2[i];
-                    read_server(path, segs, base)
-                })
-                .map_err(Error::Job)?;
-            for r in results {
-                for (dst_start, buf) in r? {
-                    out[dst_start..dst_start + buf.len()].copy_from_slice(&buf);
-                }
-            }
-        }
-        self.bytes_read.fetch_add(total, Ordering::Relaxed);
+        let mut out = vec![0u8; crate::storage::clamped_len(offset, len, meta.size)];
+        self.read_segments_into(key, &meta, &layout, offset, &mut out)?;
         Ok(out)
     }
 
@@ -623,5 +959,111 @@ mod tests {
         pfs.write("empty", b"").unwrap();
         assert_eq!(pfs.read("empty").unwrap(), Vec::<u8>::new());
         assert!(pfs.exists("empty"));
+    }
+
+    // -- v2 handle surface ------------------------------------------------
+
+    #[test]
+    fn streaming_writer_matches_whole_object_write() {
+        let dir = TempDir::new("pfs-w").unwrap();
+        let pfs = open(&dir, 3, 64);
+        for (i, n) in [0usize, 1, 63, 64, 65, 200, 1000, 10_000].iter().enumerate() {
+            let data = rand_data(*n, 40 + i as u64);
+            let key = format!("s{i}");
+            let mut w = pfs.create_with_hints(&key, Hints::default()).unwrap();
+            // append in awkward chunk sizes to cross stripe boundaries
+            for chunk in data.chunks(37) {
+                w.append_chunk(chunk).unwrap();
+            }
+            assert_eq!(w.bytes_written(), *n as u64);
+            w.finish().unwrap();
+            // whole-object read path CRC-verifies the streamed checksum
+            assert_eq!(pfs.read(&key).unwrap(), data, "size {n}");
+            assert_eq!(pfs.size(&key).unwrap(), *n as u64);
+        }
+    }
+
+    #[test]
+    fn streaming_writer_parallel_fanout_large_chunks() {
+        // chunks ≥ 128 KiB spanning several servers take the scoped-thread
+        // fan-out path; the bytes must still land exactly
+        let dir = TempDir::new("pfs-par").unwrap();
+        let pfs = open(&dir, 4, 32 << 10); // 32 KiB stripes over 4 servers
+        let data = rand_data(1 << 20, 55);
+        let mut w = pfs.create_with_hints("wide", Hints::default()).unwrap();
+        for chunk in data.chunks(256 << 10) {
+            w.append_chunk(chunk).unwrap();
+        }
+        w.finish().unwrap();
+        assert_eq!(pfs.read("wide").unwrap(), data);
+        assert_eq!(pfs.size("wide").unwrap(), 1 << 20);
+    }
+
+    #[test]
+    fn streaming_writer_invisible_until_commit_and_abort_cleans() {
+        let dir = TempDir::new("pfs-vis").unwrap();
+        let pfs = open(&dir, 2, 32);
+        let data = rand_data(300, 9);
+        {
+            let mut w = pfs.create_with_hints("x", Hints::default()).unwrap();
+            w.append_chunk(&data[..200]).unwrap();
+            assert!(!pfs.exists("x"), "no meta before commit");
+            assert!(matches!(pfs.read("x"), Err(Error::NotFound(_))));
+            w.cancel().unwrap();
+        }
+        assert!(!pfs.exists("x"));
+        // no orphan stripes: server dirs hold no files at all
+        for s in 0..2 {
+            let n = fs::read_dir(dir.path().join(format!("server{s}")))
+                .unwrap()
+                .count();
+            assert_eq!(n, 0, "server {s} must be empty after abort");
+        }
+        // dropping an uncommitted writer also cleans up
+        {
+            let mut w = pfs.create_with_hints("y", Hints::default()).unwrap();
+            w.append_chunk(&data).unwrap();
+        }
+        for s in 0..2 {
+            let n = fs::read_dir(dir.path().join(format!("server{s}")))
+                .unwrap()
+                .count();
+            assert_eq!(n, 0, "server {s} must be empty after drop");
+        }
+    }
+
+    #[test]
+    fn streaming_rewrite_shrinks_cleanly() {
+        let dir = TempDir::new("pfs-shrink").unwrap();
+        let pfs = open(&dir, 3, 16);
+        pfs.write("k", &rand_data(160, 1)).unwrap();
+        let small = rand_data(8, 2);
+        let mut w = pfs.create_with_hints("k", Hints::default()).unwrap();
+        w.append_chunk(&small).unwrap();
+        w.finish().unwrap();
+        assert_eq!(pfs.read("k").unwrap(), small);
+        // wider stale datafiles must be gone
+        assert!(!dir.path().join("server1").join("k.df").exists());
+        assert!(!dir.path().join("server2").join("k.df").exists());
+    }
+
+    #[test]
+    fn reader_read_at_matches_slices() {
+        let dir = TempDir::new("pfs-r").unwrap();
+        let pfs = open(&dir, 3, 50);
+        let data = rand_data(1000, 12);
+        pfs.write("r", &data).unwrap();
+        let r = pfs.open("r").unwrap();
+        assert_eq!(r.len(), 1000);
+        for (off, len) in [(0usize, 1000usize), (0, 10), (45, 10), (49, 2), (999, 1), (990, 100)] {
+            let mut buf = vec![0u8; len];
+            let n = r.read_at(off as u64, &mut buf).unwrap();
+            let end = (off + len).min(1000);
+            assert_eq!(n, end - off, "off={off} len={len}");
+            assert_eq!(&buf[..n], &data[off..end], "off={off} len={len}");
+        }
+        let mut buf = [0u8; 4];
+        assert_eq!(r.read_at(1000, &mut buf).unwrap(), 0, "at EOF");
+        assert_eq!(r.read_at(5000, &mut buf).unwrap(), 0, "past EOF");
     }
 }

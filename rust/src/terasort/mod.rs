@@ -24,8 +24,13 @@ use std::sync::Arc;
 use crate::error::{Error, Result};
 use crate::mapreduce::{Engine, InputSplit, JobSpec, JobStats, KV, MapContext, Mapper, MergeIter, Reducer};
 use crate::runtime::{u32_bytes, Artifact, Runtime};
-use crate::storage::ObjectStore;
+use crate::storage::{read_full_at, ObjectReader as _, ObjectStore, ObjectWriter as _};
 use crate::util::rng::Pcg32;
+
+/// Records per streamed generation/validation chunk (≈ 400 KB of 100-byte
+/// records): TeraGen appends and TeraValidate scans move through buffers
+/// of this many records instead of materializing whole partition objects.
+const STREAM_RECORDS: usize = 4096;
 
 pub use records::{key_prefix, RECORD_SIZE, KEY_SIZE};
 
@@ -55,16 +60,28 @@ pub fn teragen(
     let mut part = 0u64;
     let mut remaining = num_records;
     let mut row = 0u64;
+    let mut buf = Vec::with_capacity(STREAM_RECORDS * RECORD_SIZE);
     while remaining > 0 {
         let n = remaining.min(records_per_object);
-        let mut buf = Vec::with_capacity((n * RECORD_SIZE as u64) as usize);
+        // streaming partition emit: records flow to the backend through a
+        // writer handle in STREAM_RECORDS chunks, overlapping generation
+        // with tier I/O instead of materializing the whole object
+        let mut w = store.create(&format!("{prefix}part-m-{part:05}"))?;
         let mut rng = Pcg32::for_task(seed, part);
         for _ in 0..n {
             records::write_record(&mut buf, &mut rng, row);
             row += 1;
+            if buf.len() >= STREAM_RECORDS * RECORD_SIZE {
+                w.append(&buf)?;
+                buf.clear();
+            }
         }
-        store.write(&format!("{prefix}part-m-{part:05}"), &buf)?;
-        written += buf.len() as u64;
+        if !buf.is_empty() {
+            w.append(&buf)?;
+            buf.clear();
+        }
+        written += w.written();
+        w.commit()?;
         remaining -= n;
         part += 1;
     }
@@ -149,8 +166,11 @@ pub fn sample_partitioner(
     let keys_per_block = BLOCK_KEYS;
     let mut hist = [0i64; BUCKETS];
     for key in store.list(prefix).into_iter().take(sample_objects.max(1)) {
-        let sample_len = (keys_per_block * RECORD_SIZE).min(store.size(&key)? as usize);
-        let data = store.read_range(&key, 0, sample_len)?;
+        let reader = store.open(&key)?;
+        let sample_len = (keys_per_block * RECORD_SIZE).min(reader.len() as usize);
+        let mut data = vec![0u8; sample_len];
+        read_full_at(reader.as_ref(), 0, &mut data)?;
+        drop(reader);
         let mut prefixes: Vec<u32> = data
             .chunks_exact(RECORD_SIZE)
             .map(records::key_prefix)
@@ -402,27 +422,39 @@ pub struct ValidateReport {
 }
 
 /// Order-insensitive checksum + global order check over `{prefix}part-r-*`.
+///
+/// The scan *streams*: each partition is read through a handle into one
+/// reused `STREAM_RECORDS`-record buffer, so validation of an arbitrarily
+/// large output costs constant memory.
 pub fn teravalidate(store: &dyn ObjectStore, prefix: &str) -> Result<ValidateReport> {
     let mut records = 0u64;
     let mut checksum = 0u64;
     let mut sorted = true;
     let mut last_key: Option<[u8; KEY_SIZE]> = None;
+    let mut buf = vec![0u8; STREAM_RECORDS * RECORD_SIZE];
 
     for key in store.list(prefix) {
-        let data = store.read(&key)?;
-        if data.len() % RECORD_SIZE != 0 {
+        let reader = store.open(&key)?;
+        let len = reader.len();
+        if len % RECORD_SIZE as u64 != 0 {
             return Err(Error::Job(format!("{key}: not a record multiple")));
         }
-        for rec in data.chunks_exact(RECORD_SIZE) {
-            let k: [u8; KEY_SIZE] = rec[..KEY_SIZE].try_into().unwrap();
-            if let Some(prev) = last_key {
-                if k < prev {
-                    sorted = false;
+        let mut off = 0u64;
+        while off < len {
+            let take = ((len - off) as usize).min(buf.len());
+            read_full_at(reader.as_ref(), off, &mut buf[..take])?;
+            for rec in buf[..take].chunks_exact(RECORD_SIZE) {
+                let k: [u8; KEY_SIZE] = rec[..KEY_SIZE].try_into().unwrap();
+                if let Some(prev) = last_key {
+                    if k < prev {
+                        sorted = false;
+                    }
                 }
+                last_key = Some(k);
+                records += 1;
+                checksum = checksum.wrapping_add(records::record_checksum(rec));
             }
-            last_key = Some(k);
-            records += 1;
-            checksum = checksum.wrapping_add(records::record_checksum(rec));
+            off += take as u64;
         }
     }
     Ok(ValidateReport {
@@ -432,15 +464,24 @@ pub fn teravalidate(store: &dyn ObjectStore, prefix: &str) -> Result<ValidateRep
     })
 }
 
-/// Checksum of an *input* prefix (for input-vs-output comparison).
+/// Checksum of an *input* prefix (for input-vs-output comparison), with
+/// the same constant-memory streaming scan as [`teravalidate`].
 pub fn input_checksum(store: &dyn ObjectStore, prefix: &str) -> Result<(u64, u64)> {
     let mut records = 0u64;
     let mut checksum = 0u64;
+    let mut buf = vec![0u8; STREAM_RECORDS * RECORD_SIZE];
     for key in store.list(prefix) {
-        let data = store.read(&key)?;
-        for rec in data.chunks_exact(RECORD_SIZE) {
-            records += 1;
-            checksum = checksum.wrapping_add(records::record_checksum(rec));
+        let reader = store.open(&key)?;
+        let len = reader.len();
+        let mut off = 0u64;
+        while off < len {
+            let take = ((len - off) as usize).min(buf.len());
+            read_full_at(reader.as_ref(), off, &mut buf[..take])?;
+            for rec in buf[..take].chunks_exact(RECORD_SIZE) {
+                records += 1;
+                checksum = checksum.wrapping_add(records::record_checksum(rec));
+            }
+            off += take as u64;
         }
     }
     Ok((records, checksum))

@@ -1,0 +1,218 @@
+//! Backend-generic conformance suite for the v2 [`ObjectStore`] surface.
+//!
+//! Every backend (`MemStore`, `Pfs`, `HdfsLike`, `TwoLevelStore`) must
+//! pass [`check_conformance`] — run from `tests/conformance_storage.rs`
+//! against small stripe/block geometries so a ~1 KB object already
+//! crosses several stripe and block boundaries. The suite pins the
+//! contracts the redesign introduced:
+//!
+//! - **handle/whole-object equivalence**: `read_at` sweeps reassemble to
+//!   exactly what `read`/`read_range` return, at every boundary;
+//! - **commit atomicity**: a reader racing an uncommitted writer sees the
+//!   old object (overwrite) or `NotFound` (fresh key), never a prefix;
+//! - **abort hygiene**: an aborted or dropped writer leaves no orphan
+//!   state, and the key remains writable;
+//! - **EOF clamping**: `read_at`/`read_range` clamp, never over-read;
+//! - **`stat`** agrees with the handles and reports `NotFound` correctly.
+
+use crate::storage::{read_full_at, ObjectReader as _, ObjectStore, ObjectWriter as _};
+use crate::util::rng::Pcg32;
+
+/// Object sizes exercised by the suite; chosen to straddle the 64-byte
+/// stripe and 256-byte block geometry the runner configures.
+const SIZES: &[usize] = &[0, 1, 63, 64, 65, 255, 256, 257, 1000, 4099];
+
+fn rand_data(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg32::new(seed, 0xC0);
+    let mut v = vec![0u8; n];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// Run the whole suite against `store`. Panics (with the backend's
+/// `kind()` in the message) on any contract violation.
+pub fn check_conformance(store: &dyn ObjectStore) {
+    let kind = store.kind();
+    handle_reads_match_whole_object(store, kind);
+    eof_clamping(store, kind);
+    stat_matches_handles(store, kind);
+    streaming_write_roundtrip(store, kind);
+    commit_atomicity_fresh_key(store, kind);
+    commit_atomicity_overwrite(store, kind);
+    abort_leaves_no_orphans(store, kind);
+    empty_object_via_handles(store, kind);
+}
+
+fn handle_reads_match_whole_object(store: &dyn ObjectStore, kind: &str) {
+    for (i, &n) in SIZES.iter().enumerate() {
+        let key = format!("conf/eq-{n}");
+        let data = rand_data(n, i as u64);
+        store.write(&key, &data).unwrap();
+
+        // whole-object read
+        assert_eq!(store.read(&key).unwrap(), data, "{kind}: read size {n}");
+
+        // ranged reads at every interesting boundary
+        let probes: &[(usize, usize)] = &[
+            (0, n),
+            (0, 1),
+            (1, n),
+            (63, 2),
+            (64, 64),
+            (255, 2),
+            (256, 300),
+            (n.saturating_sub(1), 1),
+            (n / 2, n),
+            (n, 1),
+        ];
+        for &(off, len) in probes {
+            let got = store.read_range(&key, off as u64, len).unwrap();
+            let end = (off + len).min(n);
+            let expect = if off >= n { &[][..] } else { &data[off..end] };
+            assert_eq!(got, expect, "{kind}: read_range off={off} len={len} size={n}");
+        }
+
+        // read_at sweeps with several caller-buffer sizes must reassemble
+        // to the object exactly (handle/whole-object equivalence)
+        let reader = store.open(&key).unwrap();
+        assert_eq!(reader.len(), n as u64, "{kind}: len size {n}");
+        assert_eq!(reader.is_empty(), n == 0, "{kind}: is_empty size {n}");
+        for buf_len in [7usize, 64, 256, 300, n.max(1)] {
+            let mut assembled = Vec::with_capacity(n);
+            let mut buf = vec![0u8; buf_len];
+            let mut off = 0u64;
+            loop {
+                let got = reader.read_at(off, &mut buf).unwrap();
+                if got == 0 {
+                    break;
+                }
+                assembled.extend_from_slice(&buf[..got]);
+                off += got as u64;
+            }
+            assert_eq!(assembled, data, "{kind}: read_at sweep buf={buf_len} size={n}");
+        }
+    }
+}
+
+fn eof_clamping(store: &dyn ObjectStore, kind: &str) {
+    let data = rand_data(300, 77);
+    store.write("conf/eof", &data).unwrap();
+    let reader = store.open("conf/eof").unwrap();
+    let mut buf = vec![0u8; 100];
+    // straddling EOF: short count, correct bytes
+    let got = reader.read_at(250, &mut buf).unwrap();
+    assert_eq!(got, 50, "{kind}: EOF straddle");
+    assert_eq!(&buf[..50], &data[250..], "{kind}: EOF straddle bytes");
+    // at and past EOF: zero, not an error
+    assert_eq!(reader.read_at(300, &mut buf).unwrap(), 0, "{kind}: at EOF");
+    assert_eq!(reader.read_at(10_000, &mut buf).unwrap(), 0, "{kind}: past EOF");
+    // empty caller buffer
+    assert_eq!(reader.read_at(0, &mut []).unwrap(), 0, "{kind}: empty buf");
+    // read_range clamps the same way
+    assert_eq!(
+        store.read_range("conf/eof", 290, 100).unwrap(),
+        &data[290..],
+        "{kind}: read_range clamp"
+    );
+    assert!(
+        store.read_range("conf/eof", 400, 10).unwrap().is_empty(),
+        "{kind}: read_range past EOF"
+    );
+}
+
+fn stat_matches_handles(store: &dyn ObjectStore, kind: &str) {
+    let data = rand_data(123, 5);
+    store.write("conf/stat", &data).unwrap();
+    let meta = store.stat("conf/stat").unwrap();
+    assert_eq!(meta.key, "conf/stat", "{kind}");
+    assert_eq!(meta.size, 123, "{kind}");
+    assert_eq!(store.size("conf/stat").unwrap(), 123, "{kind}: size adapter");
+    assert!(store.exists("conf/stat"), "{kind}: exists adapter");
+    assert!(store.stat("conf/never-written").is_err(), "{kind}: stat miss");
+    assert!(!store.exists("conf/never-written"), "{kind}: exists miss");
+}
+
+fn streaming_write_roundtrip(store: &dyn ObjectStore, kind: &str) {
+    // many odd-sized appends, including empty ones, crossing every stripe
+    // and block boundary
+    let data = rand_data(3001, 11);
+    let mut w = store.create("conf/stream").unwrap();
+    let mut off = 0usize;
+    for (i, chunk) in [13usize, 0, 64, 1, 511, 256, 2156].iter().enumerate() {
+        let end = (off + chunk).min(data.len());
+        w.append(&data[off..end]).unwrap();
+        off = end;
+        assert_eq!(w.written(), off as u64, "{kind}: written() after append {i}");
+    }
+    assert_eq!(off, data.len(), "suite bug: chunks must cover the payload");
+    w.commit().unwrap();
+    assert_eq!(store.read("conf/stream").unwrap(), data, "{kind}: streamed bytes");
+    assert_eq!(store.stat("conf/stream").unwrap().size, 3001, "{kind}");
+}
+
+fn commit_atomicity_fresh_key(store: &dyn ObjectStore, kind: &str) {
+    let data = rand_data(900, 21);
+    let mut w = store.create("conf/fresh").unwrap();
+    w.append(&data[..500]).unwrap();
+    // mid-write: a fresh key must look absent in every v1 and v2 probe
+    assert!(store.stat("conf/fresh").is_err(), "{kind}: stat mid-write");
+    assert!(!store.exists("conf/fresh"), "{kind}: exists mid-write");
+    assert!(store.open("conf/fresh").is_err(), "{kind}: open mid-write");
+    assert!(store.read("conf/fresh").is_err(), "{kind}: read mid-write");
+    w.append(&data[500..]).unwrap();
+    w.commit().unwrap();
+    assert_eq!(store.read("conf/fresh").unwrap(), data, "{kind}: after commit");
+}
+
+fn commit_atomicity_overwrite(store: &dyn ObjectStore, kind: &str) {
+    let v1 = rand_data(700, 31);
+    let v2 = rand_data(450, 32);
+    store.write("conf/over", &v1).unwrap();
+    let mut w = store.create("conf/over").unwrap();
+    w.append(&v2[..200]).unwrap();
+    // mid-write: the old object is fully intact — size and bytes
+    assert_eq!(store.stat("conf/over").unwrap().size, 700, "{kind}: old size");
+    assert_eq!(store.read("conf/over").unwrap(), v1, "{kind}: old bytes mid-write");
+    let r = store.open("conf/over").unwrap();
+    assert_eq!(r.len(), 700, "{kind}: old len via handle");
+    drop(r);
+    w.append(&v2[200..]).unwrap();
+    w.commit().unwrap();
+    assert_eq!(store.read("conf/over").unwrap(), v2, "{kind}: new bytes");
+    assert_eq!(store.stat("conf/over").unwrap().size, 450, "{kind}: new size");
+}
+
+fn abort_leaves_no_orphans(store: &dyn ObjectStore, kind: &str) {
+    let before = store.list("conf/ab").len();
+    {
+        let mut w = store.create("conf/ab-explicit").unwrap();
+        w.append(&rand_data(600, 41)).unwrap();
+        w.abort().unwrap();
+    }
+    {
+        // dropping uncommitted must clean up too
+        let mut w = store.create("conf/ab-dropped").unwrap();
+        w.append(&rand_data(600, 42)).unwrap();
+    }
+    assert!(store.stat("conf/ab-explicit").is_err(), "{kind}: aborted key absent");
+    assert!(store.stat("conf/ab-dropped").is_err(), "{kind}: dropped key absent");
+    assert_eq!(store.list("conf/ab").len(), before, "{kind}: no orphan keys listed");
+    // the key stays fully usable after an abort
+    let data = rand_data(128, 43);
+    store.write("conf/ab-explicit", &data).unwrap();
+    assert_eq!(store.read("conf/ab-explicit").unwrap(), data, "{kind}: reusable");
+}
+
+fn empty_object_via_handles(store: &dyn ObjectStore, kind: &str) {
+    let w = store.create("conf/empty").unwrap();
+    w.commit().unwrap();
+    assert!(store.exists("conf/empty"), "{kind}: empty exists");
+    assert_eq!(store.stat("conf/empty").unwrap().size, 0, "{kind}");
+    let r = store.open("conf/empty").unwrap();
+    assert_eq!(r.len(), 0, "{kind}");
+    let mut buf = [0u8; 4];
+    assert_eq!(r.read_at(0, &mut buf).unwrap(), 0, "{kind}: empty read_at");
+    assert_eq!(store.read("conf/empty").unwrap(), Vec::<u8>::new(), "{kind}");
+    // a full read through read_full_at of zero bytes is a no-op
+    read_full_at(r.as_ref(), 0, &mut []).unwrap();
+}

@@ -1,10 +1,13 @@
-//! Test support: a miniature property-testing harness and a self-cleaning
-//! temporary directory.
+//! Test support: a miniature property-testing harness, a self-cleaning
+//! temporary directory, and the backend-generic storage conformance suite
+//! ([`conformance`]).
 //!
 //! `proptest` is not in the offline crate set, so [`proprun`] provides the
 //! subset the suite needs: seeded random generation, many cases per
 //! property, and on failure a greedy shrink over the generator's size
 //! parameter with the failing seed printed for reproduction.
+
+pub mod conformance;
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
