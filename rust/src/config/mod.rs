@@ -75,6 +75,15 @@ pub struct EngineConfig {
     pub concurrent_writethrough: bool,
     /// Directory holding AOT artifacts (HLO text + manifest).
     pub artifacts_dir: PathBuf,
+    /// Optional fault-injection plan (crash drills / robustness tests):
+    /// a [`crate::storage::fault::FaultPlan`] spec string, validated at
+    /// config load. Not applied automatically — whoever builds a store
+    /// from this config decides whether to wrap it: call
+    /// [`EngineConfig::parsed_fault_plan`] and hand the plan to
+    /// [`crate::storage::fault::FaultStore::new`], exactly as the CLI
+    /// does for its `--fault-plan` flag. `None` (the default) means no
+    /// injection; production configs leave this unset.
+    pub fault_plan: Option<String>,
 }
 
 impl Default for EngineConfig {
@@ -95,6 +104,7 @@ impl Default for EngineConfig {
             mem_shards: presets::tuning::default_mem_shards(),
             concurrent_writethrough: true,
             artifacts_dir: PathBuf::from("artifacts"),
+            fault_plan: None,
         }
     }
 }
@@ -166,8 +176,21 @@ impl EngineConfig {
         if let Some(v) = get_str("artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(v);
         }
+        if let Some(v) = get_str("fault_plan") {
+            cfg.fault_plan = Some(v);
+        }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The parsed [`fault_plan`](EngineConfig::fault_plan), if set. Wrap
+    /// the store built from this config in a
+    /// [`crate::storage::fault::FaultStore`] with it to run the drill.
+    pub fn parsed_fault_plan(&self) -> Result<Option<crate::storage::fault::FaultPlan>> {
+        self.fault_plan
+            .as_deref()
+            .map(crate::storage::fault::FaultPlan::parse)
+            .transpose()
     }
 
     /// Sanity-check invariants the engines rely on.
@@ -195,6 +218,11 @@ impl EngineConfig {
                 "eviction must be lru|lfu, got `{}`",
                 self.eviction
             )));
+        }
+        if let Some(spec) = &self.fault_plan {
+            // a malformed plan should fail at config load, not mid-drill
+            crate::storage::fault::FaultPlan::parse(spec)
+                .map_err(|e| Error::Config(format!("bad fault_plan: {e}")))?;
         }
         Ok(())
     }
@@ -270,6 +298,22 @@ eviction = "lfu"
         let cfg = EngineConfig::from_toml_str("").unwrap();
         assert!(cfg.mem_shards >= 1);
         assert!(cfg.concurrent_writethrough);
+    }
+
+    #[test]
+    fn fault_plan_parses_and_rejects_garbage() {
+        let cfg = EngineConfig::from_toml_str(
+            "[engine]\nfault_plan = \"op=commit,kind=crash,after=2\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fault_plan.as_deref(), Some("op=commit,kind=crash,after=2"));
+        let plan = cfg.parsed_fault_plan().unwrap().expect("plan set");
+        assert_eq!(plan.triggers.len(), 1);
+        assert_eq!(plan.triggers[0].after, 2);
+        assert!(EngineConfig::from_toml_str("[engine]\nfault_plan = \"kind=bogus\"\n").is_err());
+        let unset = EngineConfig::from_toml_str("").unwrap();
+        assert!(unset.fault_plan.is_none());
+        assert!(unset.parsed_fault_plan().unwrap().is_none());
     }
 
     #[test]

@@ -7,6 +7,7 @@ use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::storage::tls::TwoLevelStore;
+use crate::storage::RecoveryReport;
 
 /// Daemon configuration.
 #[derive(Debug, Clone)]
@@ -98,6 +99,28 @@ impl Checkpointer {
             handle: Some(handle),
             cfg,
         }
+    }
+
+    /// Recovery-aware restart: run [`TwoLevelStore::recover`] over the
+    /// (possibly crash-survived) store first, start the daemon, then
+    /// re-enqueue every still-unpersisted object — the checkpoint work a
+    /// previous incarnation accepted but never finished. Returns the
+    /// daemon together with what recovery found; callers decide whether a
+    /// non-clean [`RecoveryReport`] is log-worthy or fatal.
+    pub fn start_recovered(
+        store: Arc<TwoLevelStore>,
+        cfg: CheckpointerConfig,
+    ) -> Result<(Self, RecoveryReport)> {
+        let report = store.recover()?;
+        if !report.is_clean() {
+            crate::log_warn!("checkpointer restart recovery: {report}");
+        }
+        let backlog = store.unpersisted();
+        let ck = Self::start(store, cfg);
+        for key in backlog {
+            ck.enqueue(&key);
+        }
+        Ok((ck, report))
     }
 
     /// Queue `key` for persistence. Blocks while the backlog is at
@@ -233,6 +256,32 @@ mod tests {
         // error is cleared after surfacing once
         ck.flush().unwrap();
         assert_eq!(ck.stats().failed, 1);
+        ck.stop().unwrap();
+    }
+
+    #[test]
+    fn start_recovered_cleans_debris_and_drains_backlog() {
+        let dir = TempDir::new("ckpt-rec").unwrap();
+        {
+            // previous incarnation: left writer temps on the PFS
+            let s = store(&dir);
+            std::fs::write(
+                dir.path().join("pfs").join("server0").join("k.df.tmp-3"),
+                b"junk",
+            )
+            .unwrap();
+            drop(s);
+        }
+        let s = store(&dir);
+        // this incarnation has fresh mode-(a) data awaiting persistence
+        s.write("fresh", &[3u8; 4000], WriteMode::MemOnly).unwrap();
+        let (ck, report) =
+            Checkpointer::start_recovered(Arc::clone(&s), CheckpointerConfig::default()).unwrap();
+        assert_eq!(report.temps_removed, 1, "{report}");
+        ck.flush().unwrap();
+        assert_eq!(ck.stats().completed, 1, "backlog re-enqueued and drained");
+        assert_eq!(s.read("fresh", ReadMode::Bypass).unwrap(), vec![3u8; 4000]);
+        assert!(s.unpersisted().is_empty());
         ck.stop().unwrap();
     }
 

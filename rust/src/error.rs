@@ -48,6 +48,18 @@ pub enum Error {
     Sim(String),
 
     InvalidArg(String),
+
+    /// A deliberately injected fault (see [`crate::storage::fault`]): the
+    /// operation did not run against real state, it was failed (or the
+    /// simulated process "crashed") by an active `FaultPlan`.
+    Injected(String),
+
+    /// A failure path could not clean up after itself (e.g. the rollback
+    /// of a half-landed write-through could not remove the PFS orphan).
+    /// The store is still self-consistent for readers, but on-disk state
+    /// no longer matches the object table: the caller should run the
+    /// backend's `recover()` before trusting a restart.
+    RecoveryNeeded(String),
 }
 
 impl fmt::Display for Error {
@@ -77,6 +89,8 @@ impl fmt::Display for Error {
             Error::Job(msg) => write!(f, "job failed: {msg}"),
             Error::Sim(msg) => write!(f, "simulation error: {msg}"),
             Error::InvalidArg(msg) => write!(f, "invalid argument: {msg}"),
+            Error::Injected(msg) => write!(f, "injected fault: {msg}"),
+            Error::RecoveryNeeded(msg) => write!(f, "recovery needed: {msg}"),
         }
     }
 }
@@ -128,6 +142,12 @@ mod tests {
         };
         assert!(e.to_string().contains("0x00000001"));
         assert!(Error::NotFound("k".into()).to_string().contains("k"));
+        assert!(Error::Injected("boom".into())
+            .to_string()
+            .starts_with("injected fault:"));
+        assert!(Error::RecoveryNeeded("orphan".into())
+            .to_string()
+            .starts_with("recovery needed:"));
     }
 
     #[test]

@@ -24,32 +24,35 @@ use tlstore::mapreduce::Engine;
 use tlstore::model::CaseStudyParams;
 use tlstore::runtime::Runtime;
 use tlstore::sim::{simulate_terasort, BackendKind, SimConstants};
+use tlstore::storage::fault::{FaultPlan, FaultStore};
 use tlstore::storage::hdfs::HdfsLike;
 use tlstore::storage::pfs::Pfs;
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
-use tlstore::storage::ObjectStore;
+use tlstore::storage::{ObjectStore, Recover, RecoveryReport};
 use tlstore::terasort;
+
+fn open_tls(args: &Args, root: &std::path::Path, servers: usize) -> Result<TwoLevelStore> {
+    let cfg = TlsConfig::builder(root)
+        .mem_capacity(args.get_bytes("mem-capacity", 256 << 20)?)
+        .block_size(args.get_bytes("block-size", 4 << 20)?)
+        .stripe_size(args.get_bytes("stripe-size", 1 << 20)?)
+        .pfs_servers(servers)
+        .eviction(&args.get("eviction", "lru"))
+        .mem_shards(args.get_parse(
+            "mem-shards",
+            presets::tuning::default_mem_shards(),
+        )?)
+        .concurrent_writethrough(!args.has("sequential-writethrough"))
+        .build()?;
+    TwoLevelStore::open(cfg)
+}
 
 fn open_store(args: &Args) -> Result<Arc<dyn ObjectStore>> {
     let backend = Backend::parse(&args.get("backend", "tls"))?;
     let root = PathBuf::from(args.get("root", "/tmp/tlstore"));
     let servers = args.get_parse("pfs-servers", 4usize)?;
-    Ok(match backend {
-        Backend::TwoLevel => {
-            let cfg = TlsConfig::builder(&root)
-                .mem_capacity(args.get_bytes("mem-capacity", 256 << 20)?)
-                .block_size(args.get_bytes("block-size", 4 << 20)?)
-                .stripe_size(args.get_bytes("stripe-size", 1 << 20)?)
-                .pfs_servers(servers)
-                .eviction(&args.get("eviction", "lru"))
-                .mem_shards(args.get_parse(
-                    "mem-shards",
-                    presets::tuning::default_mem_shards(),
-                )?)
-                .concurrent_writethrough(!args.has("sequential-writethrough"))
-                .build()?;
-            Arc::new(TwoLevelStore::open(cfg)?)
-        }
+    let store: Arc<dyn ObjectStore> = match backend {
+        Backend::TwoLevel => Arc::new(open_tls(args, &root, servers)?),
         Backend::Pfs => Arc::new(Pfs::open(
             &root,
             servers,
@@ -60,6 +63,14 @@ fn open_store(args: &Args) -> Result<Arc<dyn ObjectStore>> {
             args.get_parse("nodes", 4usize)?,
             args.get_parse("replication", 3usize)?,
         )?),
+    };
+    // fault-injection harness: wrap the store so the plan's triggers fire
+    // on the real API surface (crash-recovery drills, robustness demos)
+    let spec = args.get("fault-plan", "");
+    Ok(if spec.is_empty() {
+        store
+    } else {
+        Arc::new(FaultStore::new(store, FaultPlan::parse(&spec)?))
     })
 }
 
@@ -99,12 +110,14 @@ fn cmd_teragen(args: &Args) -> Result<()> {
     let seed = args.get_parse("seed", 42u64)?;
     let prefix = args.get("prefix", "in/");
     args.finish()?;
-    let (_, dt) = tlstore::bench::run_named(
+    let (result, _dt) = tlstore::bench::run_named(
         &format!("teragen {records} records → {} ({})", prefix, store.kind()),
         Some(records * terasort::RECORD_SIZE as u64),
         || terasort::teragen(store.as_ref(), &prefix, records, per_object, seed),
     );
-    let _ = dt;
+    // surface generation failures (previously swallowed: an injected
+    // fault or full disk exited 0 with no data written)
+    result?;
     Ok(())
 }
 
@@ -258,6 +271,41 @@ fn cmd_analytics(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_recover(args: &Args) -> Result<()> {
+    let backend = Backend::parse(&args.get("backend", "tls"))?;
+    let root = PathBuf::from(args.get("root", "/tmp/tlstore"));
+    let servers = args.get_parse("pfs-servers", 4usize)?;
+    let report: RecoveryReport = match backend {
+        Backend::TwoLevel => {
+            let store = open_tls(args, &root, servers)?;
+            args.finish()?;
+            store.recover()?
+        }
+        Backend::Pfs => {
+            let store = Pfs::open(&root, servers, args.get_bytes("stripe-size", 1 << 20)?)?;
+            args.finish()?;
+            Recover::recover(&store)?
+        }
+        Backend::Hdfs => {
+            let store = HdfsLike::open(
+                &root,
+                args.get_parse("nodes", 4usize)?,
+                args.get_parse("replication", 3usize)?,
+            )?;
+            args.finish()?;
+            Recover::recover(&store)?
+        }
+    };
+    println!("recover {} at {}: {report}", backend.name(), root.display());
+    for key in &report.quarantined {
+        println!("quarantined: {key}");
+    }
+    for key in &report.repaired {
+        println!("repaired: {key}");
+    }
+    Ok(())
+}
+
 fn cmd_mountain(args: &Args) -> Result<()> {
     args.finish()?;
     let params = tlstore::sim::mountain::MountainParams::default();
@@ -287,7 +335,9 @@ fn cmd_mountain(args: &Args) -> Result<()> {
 }
 
 fn usage() -> String {
-    "usage: tlstore <info|teragen|terasort|validate|analytics|model|sim|mountain> [flags]\n\
+    "usage: tlstore <info|teragen|terasort|validate|analytics|recover|model|sim|mountain> [flags]\n\
+     storage commands accept --fault-plan \"op=commit,kind=crash,...\" (fault drills)\n\
+     and `tlstore recover --root DIR --backend tls|pfs|hdfs` repairs a crashed root;\n\
      see `tlstore <cmd> --help` equivalents in README.md"
         .to_string()
 }
@@ -307,6 +357,7 @@ fn main() {
         Some("terasort") => cmd_terasort(&args),
         Some("validate") => cmd_validate(&args),
         Some("analytics") => cmd_analytics(&args),
+        Some("recover") => cmd_recover(&args),
         Some("model") => cmd_model(&args),
         Some("sim") => cmd_sim(&args),
         Some("mountain") => cmd_mountain(&args),

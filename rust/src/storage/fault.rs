@@ -1,0 +1,801 @@
+//! Deterministic fault injection for the storage layer.
+//!
+//! The paper's two-level design is only sound if the durable tier survives
+//! the memory tier (and the process around it) dying at any instant. This
+//! module turns that from an assertion into something testable: a
+//! [`FaultPlan`] describes *exactly* which operation of a run should fail
+//! and how, and [`FaultStore`] wraps any [`ObjectStore`] so the plan fires
+//! on the real API surface — `open`/`create`/`stat`/`delete` at the store,
+//! `read_at` on readers, `append`/`commit`/`abort` on writers.
+//!
+//! Faults are deterministic: a trigger names an operation kind, fires on
+//! the N-th matching call (optionally restricted to keys containing a
+//! substring, or to reads/appends at or past a byte offset), and fires
+//! exactly once. Plans can be built explicitly ([`FaultPlan::crash_at`],
+//! [`FaultPlan::fail_at`]), parsed from a spec string (the CLI's
+//! `--fault-plan`, see [`FaultPlan::parse`]), or derived from a seed via
+//! [`crate::util::rng`] ([`FaultPlan::seeded`]) for randomized
+//! crash-recovery property tests.
+//!
+//! ## Fault kinds
+//!
+//! - [`FaultKind::Error`] — the operation returns [`Error::Injected`]
+//!   without touching the inner store. Writers stay abortable, so a
+//!   failed operation leaves no partial visibility.
+//! - [`FaultKind::ShortRead`] — `read_at` serves fewer bytes than the
+//!   caller asked for (still ≥ 1 before EOF). Exercises every caller's
+//!   retry loop; [`crate::storage::read_full_at`] must reassemble exactly.
+//! - [`FaultKind::CorruptRead`] — `read_at` succeeds but the first byte of
+//!   the served range is flipped, simulating bit rot under a CRC.
+//! - [`FaultKind::Crash`] — the simulated process dies: the in-flight
+//!   handle is *abandoned* (its destructor never runs, exactly like a
+//!   `kill -9`, so temp datafiles / staging stay on disk), and every
+//!   subsequent operation through this wrapper returns
+//!   [`Error::Injected`]. The surviving directory tree is what a
+//!   restart's `recover()` (see [`crate::storage::Recover`]) must repair.
+//!
+//! A read-only fault kind attached to a non-read operation degrades to
+//! [`FaultKind::Error`] — seeded plans may produce such pairs.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::storage::{ObjectMeta, ObjectReader, ObjectStore, ObjectWriter};
+use crate::util::rng::Pcg32;
+
+/// What an injected fault does; see the module docs for semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail the operation with [`Error::Injected`].
+    Error,
+    /// Serve fewer bytes than requested (reads only).
+    ShortRead,
+    /// Flip a byte in the served range (reads only).
+    CorruptRead,
+    /// Abandon the in-flight handle and refuse all further operations.
+    Crash,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "error" => Some(FaultKind::Error),
+            "short-read" | "short" => Some(FaultKind::ShortRead),
+            "corrupt" | "corrupt-read" => Some(FaultKind::CorruptRead),
+            "crash" => Some(FaultKind::Crash),
+            _ => None,
+        }
+    }
+
+    /// Spec-string name (inverse of the parser).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Error => "error",
+            FaultKind::ShortRead => "short-read",
+            FaultKind::CorruptRead => "corrupt",
+            FaultKind::Crash => "crash",
+        }
+    }
+}
+
+/// The operation a trigger watches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Open,
+    Create,
+    Stat,
+    Delete,
+    ReadAt,
+    Append,
+    Commit,
+    Abort,
+}
+
+impl OpKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "open" => Some(OpKind::Open),
+            "create" => Some(OpKind::Create),
+            "stat" => Some(OpKind::Stat),
+            "delete" => Some(OpKind::Delete),
+            "read" | "read-at" => Some(OpKind::ReadAt),
+            "append" => Some(OpKind::Append),
+            "commit" => Some(OpKind::Commit),
+            "abort" => Some(OpKind::Abort),
+            _ => None,
+        }
+    }
+
+    /// Spec-string name (inverse of the parser).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Open => "open",
+            OpKind::Create => "create",
+            OpKind::Stat => "stat",
+            OpKind::Delete => "delete",
+            OpKind::ReadAt => "read",
+            OpKind::Append => "append",
+            OpKind::Commit => "commit",
+            OpKind::Abort => "abort",
+        }
+    }
+}
+
+/// One armed fault: fires once, on the `after`-indexed matching operation.
+#[derive(Debug, Clone)]
+pub struct Trigger {
+    /// Operation kind this trigger watches.
+    pub op: OpKind,
+    /// Fire on the (`after`+1)-th matching operation (0 = the first).
+    pub after: u64,
+    /// Only operations whose key contains this substring match.
+    pub key_pattern: Option<String>,
+    /// Only reads/appends at or past this object byte offset match
+    /// (ignored for operations that carry no offset).
+    pub min_offset: Option<u64>,
+    /// What happens when the trigger fires.
+    pub kind: FaultKind,
+}
+
+/// A deterministic set of [`Trigger`]s. Cloning a plan re-arms it (the
+/// per-trigger match counters live in the [`FaultStore`], not the plan).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// The armed triggers; each fires at most once.
+    pub triggers: Vec<Trigger>,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a trigger (builder style).
+    pub fn with(mut self, t: Trigger) -> Self {
+        self.triggers.push(t);
+        self
+    }
+
+    /// Crash on the (`after`+1)-th `op`.
+    pub fn crash_at(op: OpKind, after: u64) -> Self {
+        Self::new().with(Trigger {
+            op,
+            after,
+            key_pattern: None,
+            min_offset: None,
+            kind: FaultKind::Crash,
+        })
+    }
+
+    /// Fail (with [`Error::Injected`]) the (`after`+1)-th `op`.
+    pub fn fail_at(op: OpKind, after: u64) -> Self {
+        Self::new().with(Trigger {
+            op,
+            after,
+            key_pattern: None,
+            min_offset: None,
+            kind: FaultKind::Error,
+        })
+    }
+
+    /// Derive a single-trigger plan deterministically from `seed`
+    /// (workhorse of the randomized crash-recovery property tests; the
+    /// same seed always yields the same plan). Triggers are biased toward
+    /// the write path, where crash consistency lives.
+    pub fn seeded(seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0xFA_17);
+        let op = [
+            OpKind::Append,
+            OpKind::Commit,
+            OpKind::Append,
+            OpKind::Commit,
+            OpKind::Create,
+            OpKind::Delete,
+        ][rng.gen_range(6) as usize];
+        let kind = [
+            FaultKind::Crash,
+            FaultKind::Crash,
+            FaultKind::Error,
+            FaultKind::Crash,
+        ][rng.gen_range(4) as usize];
+        Self::new().with(Trigger {
+            op,
+            after: rng.gen_range(12) as u64,
+            key_pattern: None,
+            min_offset: None,
+            kind,
+        })
+    }
+
+    /// Parse a spec string: `;`-separated triggers, each a `,`-separated
+    /// list of `key=value` fields. Fields: `op` (required —
+    /// `open|create|stat|delete|read|append|commit|abort`), `kind`
+    /// (`error|short-read|corrupt|crash`, default `error`), `after`
+    /// (default 0), `key` (substring filter), `offset` (minimum byte
+    /// offset).
+    ///
+    /// Example: `--fault-plan "op=commit,kind=crash,after=2,key=part"`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::new();
+        for trigger_spec in spec.split(';') {
+            let trigger_spec = trigger_spec.trim();
+            if trigger_spec.is_empty() {
+                continue;
+            }
+            let mut op = None;
+            let mut kind = FaultKind::Error;
+            let mut after = 0u64;
+            let mut key_pattern = None;
+            let mut min_offset = None;
+            for field in trigger_spec.split(',') {
+                let (k, v) = field
+                    .trim()
+                    .split_once('=')
+                    .ok_or_else(|| Error::InvalidArg(format!("fault-plan field `{field}` is not key=value")))?;
+                match k.trim() {
+                    "op" => {
+                        op = Some(OpKind::parse(v.trim()).ok_or_else(|| {
+                            Error::InvalidArg(format!("unknown fault-plan op `{v}`"))
+                        })?)
+                    }
+                    "kind" => {
+                        kind = FaultKind::parse(v.trim()).ok_or_else(|| {
+                            Error::InvalidArg(format!("unknown fault-plan kind `{v}`"))
+                        })?
+                    }
+                    "after" => {
+                        after = v.trim().parse().map_err(|_| {
+                            Error::InvalidArg(format!("bad fault-plan after `{v}`"))
+                        })?
+                    }
+                    "key" => key_pattern = Some(v.trim().to_string()),
+                    "offset" => {
+                        min_offset = Some(v.trim().parse().map_err(|_| {
+                            Error::InvalidArg(format!("bad fault-plan offset `{v}`"))
+                        })?)
+                    }
+                    other => {
+                        return Err(Error::InvalidArg(format!(
+                            "unknown fault-plan field `{other}`"
+                        )))
+                    }
+                }
+            }
+            let op = op
+                .ok_or_else(|| Error::InvalidArg("fault-plan trigger needs an `op=` field".into()))?;
+            plan.triggers.push(Trigger {
+                op,
+                after,
+                key_pattern,
+                min_offset,
+                kind,
+            });
+        }
+        if plan.triggers.is_empty() {
+            return Err(Error::InvalidArg("empty fault plan".into()));
+        }
+        Ok(plan)
+    }
+}
+
+/// Counters of faults that actually fired.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub injected_errors: u64,
+    pub short_reads: u64,
+    pub corruptions: u64,
+    pub crashes: u64,
+}
+
+/// Trigger state + crash flag, shared between the store and its handles.
+struct Shared {
+    /// Each trigger paired with how many matching operations it has seen.
+    triggers: Mutex<Vec<(Trigger, u64)>>,
+    crashed: AtomicBool,
+    injected_errors: AtomicU64,
+    short_reads: AtomicU64,
+    corruptions: AtomicU64,
+    crashes: AtomicU64,
+}
+
+impl Shared {
+    /// Account one operation: `Err` if the store already crashed, else the
+    /// fault kind to apply now (if any trigger fires).
+    fn observe(&self, op: OpKind, key: &str, offset: Option<u64>) -> Result<Option<FaultKind>> {
+        if self.crashed.load(Ordering::SeqCst) {
+            return Err(Error::Injected(format!(
+                "store is down (simulated crash): {} on `{key}` refused",
+                op.name()
+            )));
+        }
+        let mut fired = None;
+        let mut g = self.triggers.lock().unwrap();
+        for (t, seen) in g.iter_mut() {
+            if t.op != op {
+                continue;
+            }
+            if let Some(p) = &t.key_pattern {
+                if !key.contains(p.as_str()) {
+                    continue;
+                }
+            }
+            if let Some(min) = t.min_offset {
+                match offset {
+                    Some(o) if o >= min => {}
+                    _ => continue,
+                }
+            }
+            let n = *seen;
+            *seen += 1;
+            if n == t.after && fired.is_none() {
+                fired = Some(t.kind);
+            }
+        }
+        Ok(fired)
+    }
+
+    /// Fire a non-read fault: record it and build the error to return.
+    /// `Crash` also poisons the wrapper; the caller abandons its handle.
+    fn trip(&self, kind: FaultKind, op: OpKind, key: &str) -> Error {
+        match kind {
+            FaultKind::Crash => {
+                self.crashed.store(true, Ordering::SeqCst);
+                self.crashes.fetch_add(1, Ordering::Relaxed);
+                Error::Injected(format!(
+                    "simulated crash during {} on `{key}`",
+                    op.name()
+                ))
+            }
+            // ShortRead / CorruptRead degrade to Error off the read path
+            _ => {
+                self.injected_errors.fetch_add(1, Ordering::Relaxed);
+                Error::Injected(format!("injected {} failure on `{key}`", op.name()))
+            }
+        }
+    }
+}
+
+/// An [`ObjectStore`] wrapper that injects the faults of a [`FaultPlan`]
+/// into the wrapped backend's operations. See the module docs for the
+/// fault semantics; [`FaultStore::stats`] reports what actually fired and
+/// [`FaultStore::crashed`] whether the simulated process is down.
+///
+/// `S` is any `ObjectStore` — owned (`FaultStore<Pfs>`), borrowed
+/// (`FaultStore<&Pfs>`), or dynamic (`FaultStore<Arc<dyn ObjectStore>>`),
+/// thanks to the forwarding impls on `&T`/`Box<T>`/`Arc<T>` in
+/// [`crate::storage`].
+pub struct FaultStore<S> {
+    inner: S,
+    shared: Arc<Shared>,
+}
+
+impl<S: ObjectStore> FaultStore<S> {
+    /// Wrap `inner`, arming `plan`'s triggers.
+    pub fn new(inner: S, plan: FaultPlan) -> Self {
+        Self {
+            inner,
+            shared: Arc::new(Shared {
+                triggers: Mutex::new(plan.triggers.into_iter().map(|t| (t, 0)).collect()),
+                crashed: AtomicBool::new(false),
+                injected_errors: AtomicU64::new(0),
+                short_reads: AtomicU64::new(0),
+                corruptions: AtomicU64::new(0),
+                crashes: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    /// Whether a [`FaultKind::Crash`] has fired (every further operation
+    /// returns [`Error::Injected`]).
+    pub fn crashed(&self) -> bool {
+        self.shared.crashed.load(Ordering::SeqCst)
+    }
+
+    /// Counters of faults that fired so far.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            injected_errors: self.shared.injected_errors.load(Ordering::Relaxed),
+            short_reads: self.shared.short_reads.load(Ordering::Relaxed),
+            corruptions: self.shared.corruptions.load(Ordering::Relaxed),
+            crashes: self.shared.crashes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Observe a store-level op; `Err` when a fault fires (or the store
+    /// is already down).
+    fn gate(&self, op: OpKind, key: &str) -> Result<()> {
+        match self.shared.observe(op, key, None)? {
+            None => Ok(()),
+            Some(kind) => Err(self.shared.trip(kind, op, key)),
+        }
+    }
+}
+
+impl<S: ObjectStore> ObjectStore for FaultStore<S> {
+    fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
+        self.gate(OpKind::Open, key)?;
+        Ok(Box::new(FaultReader {
+            inner: self.inner.open(key)?,
+            shared: Arc::clone(&self.shared),
+            key: key.to_string(),
+        }))
+    }
+
+    fn create(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>> {
+        self.gate(OpKind::Create, key)?;
+        Ok(Box::new(FaultWriter {
+            inner: Some(self.inner.create(key)?),
+            shared: Arc::clone(&self.shared),
+            key: key.to_string(),
+            written: 0,
+        }))
+    }
+
+    fn stat(&self, key: &str) -> Result<ObjectMeta> {
+        self.gate(OpKind::Stat, key)?;
+        self.inner.stat(key)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.gate(OpKind::Delete, key)?;
+        self.inner.delete(key)
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        if self.shared.crashed.load(Ordering::SeqCst) {
+            return Vec::new(); // a dead store lists nothing
+        }
+        self.inner.list(prefix)
+    }
+
+    fn kind(&self) -> &'static str {
+        "fault"
+    }
+
+    // v1 adapters are *not* overridden: every whole-object call funnels
+    // through the faulty handles, so one plan covers both API surfaces.
+}
+
+/// Reader wrapper applying read-path faults; see [`FaultStore`].
+pub struct FaultReader<'a> {
+    inner: Box<dyn ObjectReader + 'a>,
+    shared: Arc<Shared>,
+    key: String,
+}
+
+impl ObjectReader for FaultReader<'_> {
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        match self.shared.observe(OpKind::ReadAt, &self.key, Some(offset))? {
+            None => self.inner.read_at(offset, buf),
+            Some(FaultKind::ShortRead) => {
+                self.shared.short_reads.fetch_add(1, Ordering::Relaxed);
+                // serve at most half the request, but ≥ 1 byte so callers
+                // looping on read_at still make progress toward EOF
+                let short = if buf.len() <= 1 { buf.len() } else { buf.len() / 2 };
+                self.inner.read_at(offset, &mut buf[..short])
+            }
+            Some(FaultKind::CorruptRead) => {
+                let n = self.inner.read_at(offset, buf)?;
+                if n > 0 {
+                    buf[0] ^= 0xFF;
+                    self.shared.corruptions.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(n)
+            }
+            Some(kind) => Err(self.shared.trip(kind, OpKind::ReadAt, &self.key)),
+        }
+    }
+}
+
+/// Writer wrapper applying write-path faults; see [`FaultStore`]. On a
+/// [`FaultKind::Crash`] the wrapped writer is abandoned via
+/// [`std::mem::forget`] — its destructor (which would clean temp files)
+/// deliberately never runs, leaving the on-disk debris a killed process
+/// would leave.
+pub struct FaultWriter<'a> {
+    inner: Option<Box<dyn ObjectWriter + 'a>>,
+    shared: Arc<Shared>,
+    key: String,
+    written: u64,
+}
+
+impl FaultWriter<'_> {
+    /// Abandon the inner writer without running its destructor (the
+    /// simulated `kill -9`).
+    fn abandon(&mut self) {
+        if let Some(w) = self.inner.take() {
+            std::mem::forget(w);
+        }
+    }
+}
+
+impl ObjectWriter for FaultWriter<'_> {
+    fn append(&mut self, chunk: &[u8]) -> Result<()> {
+        match self
+            .shared
+            .observe(OpKind::Append, &self.key, Some(self.written))?
+        {
+            None => {
+                let w = self.inner.as_mut().ok_or_else(|| {
+                    Error::Injected(format!("writer for `{}` already abandoned", self.key))
+                })?;
+                w.append(chunk)?;
+                self.written += chunk.len() as u64;
+                Ok(())
+            }
+            Some(FaultKind::Crash) => {
+                let err = self.shared.trip(FaultKind::Crash, OpKind::Append, &self.key);
+                self.abandon();
+                Err(err)
+            }
+            Some(kind) => Err(self.shared.trip(kind, OpKind::Append, &self.key)),
+        }
+    }
+
+    fn written(&self) -> u64 {
+        self.written
+    }
+
+    fn commit(mut self: Box<Self>) -> Result<()> {
+        match self.shared.observe(OpKind::Commit, &self.key, None)? {
+            None => match self.inner.take() {
+                Some(w) => w.commit(),
+                None => Err(Error::Injected(format!(
+                    "writer for `{}` already abandoned",
+                    self.key
+                ))),
+            },
+            Some(FaultKind::Crash) => {
+                let err = self.shared.trip(FaultKind::Crash, OpKind::Commit, &self.key);
+                self.abandon();
+                Err(err)
+            }
+            Some(kind) => {
+                // an injected (non-crash) commit failure publishes nothing
+                // and must leave no orphans: drop the staging cleanly
+                let err = self.shared.trip(kind, OpKind::Commit, &self.key);
+                if let Some(w) = self.inner.take() {
+                    let _ = w.abort();
+                }
+                Err(err)
+            }
+        }
+    }
+
+    fn abort(mut self: Box<Self>) -> Result<()> {
+        match self.shared.observe(OpKind::Abort, &self.key, None)? {
+            None => match self.inner.take() {
+                Some(w) => w.abort(),
+                None => Ok(()),
+            },
+            Some(FaultKind::Crash) => {
+                let err = self.shared.trip(FaultKind::Crash, OpKind::Abort, &self.key);
+                self.abandon();
+                Err(err)
+            }
+            Some(kind) => {
+                let err = self.shared.trip(kind, OpKind::Abort, &self.key);
+                if let Some(w) = self.inner.take() {
+                    let _ = w.abort(); // still clean up: abort is best-effort
+                }
+                Err(err)
+            }
+        }
+    }
+}
+
+impl Drop for FaultWriter<'_> {
+    fn drop(&mut self) {
+        // dropping an un-crashed faulty writer behaves like dropping the
+        // inner one (cleanup runs); after a crash `inner` is already gone
+        self.inner = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::memstore::MemStore;
+
+    fn mem() -> MemStore {
+        MemStore::new(u64::MAX, "lru").unwrap()
+    }
+
+    #[test]
+    fn empty_plan_is_transparent() {
+        let m = mem();
+        let f = FaultStore::new(&m, FaultPlan::new());
+        f.write("k", b"hello").unwrap();
+        assert_eq!(f.read("k").unwrap(), b"hello");
+        assert_eq!(f.stat("k").unwrap().size, 5);
+        assert_eq!(f.stats(), FaultStats::default());
+        assert!(!f.crashed());
+    }
+
+    #[test]
+    fn fail_at_fires_once_on_the_nth_op() {
+        let m = mem();
+        let f = FaultStore::new(&m, FaultPlan::fail_at(OpKind::Create, 1));
+        f.write("a", b"1").unwrap(); // create #0: passes
+        let err = f.write("b", b"2").unwrap_err(); // create #1: fires
+        assert!(matches!(err, Error::Injected(_)), "{err}");
+        f.write("c", b"3").unwrap(); // trigger spent
+        assert_eq!(f.stats().injected_errors, 1);
+        assert!(!m.contains("b"), "failed create published nothing");
+    }
+
+    #[test]
+    fn key_pattern_filter_only_hits_matching_keys() {
+        let m = mem();
+        let plan = FaultPlan::new().with(Trigger {
+            op: OpKind::Create,
+            after: 0,
+            key_pattern: Some("hot".into()),
+            min_offset: None,
+            kind: FaultKind::Error,
+        });
+        let f = FaultStore::new(&m, plan);
+        f.write("cold", &[0u8; 64]).unwrap(); // key filter: no match
+        f.write("lukewarm", &[0u8; 8]).unwrap();
+        let err = f.write("hot/x", &[1u8; 8]).unwrap_err();
+        assert!(matches!(err, Error::Injected(_)), "{err}");
+        f.write("hot/x", &[1u8; 8]).unwrap(); // trigger spent
+    }
+
+    #[test]
+    fn offset_trigger_fires_at_threshold() {
+        let m = mem();
+        let plan = FaultPlan::new().with(Trigger {
+            op: OpKind::Append,
+            after: 0,
+            key_pattern: None,
+            min_offset: Some(10),
+            kind: FaultKind::Error,
+        });
+        let f = FaultStore::new(&m, plan);
+        let mut w = f.create("k").unwrap();
+        w.append(&[1u8; 8]).unwrap(); // offset 0
+        w.append(&[1u8; 8]).unwrap(); // offset 8
+        let err = w.append(&[1u8; 8]).unwrap_err(); // offset 16 ≥ 10: fires
+        assert!(matches!(err, Error::Injected(_)));
+        w.abort().unwrap();
+        assert!(!m.contains("k"));
+    }
+
+    #[test]
+    fn short_reads_still_reassemble() {
+        let m = mem();
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        m.write("k", &data).unwrap();
+        let plan = FaultPlan::new()
+            .with(Trigger {
+                op: OpKind::ReadAt,
+                after: 0,
+                key_pattern: None,
+                min_offset: None,
+                kind: FaultKind::ShortRead,
+            })
+            .with(Trigger {
+                op: OpKind::ReadAt,
+                after: 1,
+                key_pattern: None,
+                min_offset: None,
+                kind: FaultKind::ShortRead,
+            });
+        let f = FaultStore::new(&m, plan);
+        // the default `read` adapter loops read_at until done
+        assert_eq!(f.read("k").unwrap(), data);
+        assert_eq!(f.stats().short_reads, 2);
+    }
+
+    #[test]
+    fn corrupt_read_flips_served_bytes() {
+        let m = mem();
+        m.write("k", &[7u8; 100]).unwrap();
+        let f = FaultStore::new(&m, FaultPlan::new().with(Trigger {
+            op: OpKind::ReadAt,
+            after: 0,
+            key_pattern: None,
+            min_offset: None,
+            kind: FaultKind::CorruptRead,
+        }));
+        let got = f.read("k").unwrap();
+        assert_ne!(got, vec![7u8; 100], "corruption must be visible");
+        assert_eq!(got[0], 7 ^ 0xFF);
+        assert_eq!(&got[1..], &[7u8; 99][..]);
+        assert_eq!(f.stats().corruptions, 1);
+    }
+
+    #[test]
+    fn crash_poisons_every_subsequent_op() {
+        let m = mem();
+        m.write("old", b"survivor").unwrap();
+        let f = FaultStore::new(&m, FaultPlan::crash_at(OpKind::Commit, 0));
+        let mut w = f.create("new").unwrap();
+        w.append(b"doomed").unwrap();
+        let err = w.commit().unwrap_err();
+        assert!(matches!(err, Error::Injected(_)), "{err}");
+        assert!(f.crashed());
+        assert_eq!(f.stats().crashes, 1);
+        // everything after the crash is refused
+        assert!(matches!(f.stat("old"), Err(Error::Injected(_))));
+        assert!(matches!(f.open("old"), Err(Error::Injected(_))));
+        assert!(matches!(f.create("x"), Err(Error::Injected(_))));
+        assert!(matches!(f.delete("old"), Err(Error::Injected(_))));
+        assert!(f.list("").is_empty(), "a dead store lists nothing");
+        // the real store is untouched by the wrapper's death
+        assert_eq!(m.read("old").unwrap(), b"survivor");
+        assert!(!m.contains("new"));
+    }
+
+    #[test]
+    fn injected_commit_error_leaves_no_partial_state() {
+        let m = mem();
+        let f = FaultStore::new(&m, FaultPlan::fail_at(OpKind::Commit, 0));
+        let mut w = f.create("k").unwrap();
+        w.append(b"data").unwrap();
+        assert!(matches!(w.commit(), Err(Error::Injected(_))));
+        assert!(!m.contains("k"), "failed commit published nothing");
+        // and the store stays fully usable
+        f.write("k", b"retry").unwrap();
+        assert_eq!(f.read("k").unwrap(), b"retry");
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        for seed in 0..32u64 {
+            let a = FaultPlan::seeded(seed);
+            let b = FaultPlan::seeded(seed);
+            assert_eq!(a.triggers.len(), 1);
+            assert_eq!(a.triggers[0].op, b.triggers[0].op);
+            assert_eq!(a.triggers[0].kind, b.triggers[0].kind);
+            assert_eq!(a.triggers[0].after, b.triggers[0].after);
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_the_grammar() {
+        let p = FaultPlan::parse("op=commit,kind=crash,after=2,key=part,offset=4096").unwrap();
+        assert_eq!(p.triggers.len(), 1);
+        let t = &p.triggers[0];
+        assert_eq!(t.op, OpKind::Commit);
+        assert_eq!(t.kind, FaultKind::Crash);
+        assert_eq!(t.after, 2);
+        assert_eq!(t.key_pattern.as_deref(), Some("part"));
+        assert_eq!(t.min_offset, Some(4096));
+
+        let p = FaultPlan::parse("op=read,kind=short; op=append").unwrap();
+        assert_eq!(p.triggers.len(), 2);
+        assert_eq!(p.triggers[0].kind, FaultKind::ShortRead);
+        assert_eq!(p.triggers[1].kind, FaultKind::Error);
+
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("kind=crash").is_err(), "op is required");
+        assert!(FaultPlan::parse("op=frobnicate").is_err());
+        assert!(FaultPlan::parse("op=read,nope=1").is_err());
+    }
+
+    #[test]
+    fn dropping_uncrashed_faulty_writer_cleans_up() {
+        let m = mem();
+        {
+            let f = FaultStore::new(&m, FaultPlan::new());
+            let mut w = f.create("gone").unwrap();
+            w.append(&[1u8; 50]).unwrap();
+            // dropped uncommitted: inner cleanup must run
+        }
+        assert!(!m.contains("gone"));
+        assert_eq!(m.used(), 0);
+    }
+}

@@ -17,7 +17,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
-use crate::storage::{clamped_len, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter};
+use crate::storage::block::checksum;
+use crate::storage::pfs::remove_existing;
+use crate::storage::{
+    clamped_len, is_writer_temp, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter, Recover,
+    RecoveryReport,
+};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::SplitMix64;
 
@@ -123,6 +128,91 @@ impl HdfsLike {
             return Some(self.local_node);
         }
         (0..self.node_dirs.len()).find(|&n| self.replica_path(key, n).exists())
+    }
+
+    // -- crash recovery ----------------------------------------------------
+
+    /// Crash recovery for the replicated baseline; see [`Recover`] for the
+    /// contract.
+    ///
+    /// 1. **Writer temp replicas** — `*.blk.tmp-<token>` staging of
+    ///    abandoned [`HdfsWriter`]s is removed (commit renames temps into
+    ///    place; a surviving temp belongs to a commit that never ran).
+    /// 2. **Replica healing** — every replica of an object is a *complete*
+    ///    copy, so a crashed overwrite commit can leave a mixed set (some
+    ///    nodes new, some old) or an under-replicated one (a commit that
+    ///    died between renames, or a lost disk). Recovery elects the
+    ///    replica on the lowest-numbered surviving node, rewrites any
+    ///    replica whose checksum diverges from it, and re-mirrors it to
+    ///    the key's placement nodes that lost their copy — restoring
+    ///    "every reader sees one consistent version at full replication".
+    ///
+    /// Healing is itself crash-safe: repaired replicas are staged as
+    /// `*.blk.tmp-0` temps and renamed into place, so a crash mid-heal
+    /// can never tear a replica that the *next* recovery would elect as
+    /// its source — the surviving temp is simply reaped by that run's
+    /// pass 1.
+    pub fn recover_hdfs(&self) -> Result<RecoveryReport> {
+        let mut report = RecoveryReport::default();
+
+        // pass 1: writer temps
+        for dir in &self.node_dirs {
+            let entries = fs::read_dir(dir).map_err(|e| Error::io(dir, e))?;
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if is_writer_temp(&name) && remove_existing(&entry.path())? {
+                    report.temps_removed += 1;
+                }
+            }
+        }
+
+        // atomic replica install: stage + rename, never a torn target
+        let install = |node: usize, key: &str, bytes: &[u8]| -> Result<()> {
+            let dst = self.replica_path(key, node);
+            let tmp = self.node_dirs[node].join(format!("{}.blk.tmp-0", Self::enc(key)));
+            fs::write(&tmp, bytes).map_err(|e| Error::io(&tmp, e))?;
+            fs::rename(&tmp, &dst).map_err(|e| Error::io(&dst, e))
+        };
+
+        // pass 2: replica healing
+        for key in self.list("") {
+            let present: Vec<usize> = (0..self.node_dirs.len())
+                .filter(|&n| self.replica_path(&key, n).exists())
+                .collect();
+            let Some(&src_node) = present.first() else {
+                continue; // raced a delete
+            };
+            let src_path = self.replica_path(&key, src_node);
+            let src = fs::read(&src_path).map_err(|e| Error::io(&src_path, e))?;
+            let src_crc = checksum(&src);
+            let mut healed = false;
+            // heal divergent survivors to the elected copy
+            for &n in present.iter().skip(1) {
+                let path = self.replica_path(&key, n);
+                let bytes = fs::read(&path).map_err(|e| Error::io(&path, e))?;
+                if bytes.len() != src.len() || checksum(&bytes) != src_crc {
+                    install(n, &key, &src)?;
+                    healed = true;
+                }
+            }
+            // restore full replication on the key's placement nodes
+            for n in self.replica_nodes(&key) {
+                if !self.replica_path(&key, n).exists() {
+                    install(n, &key, &src)?;
+                    healed = true;
+                }
+            }
+            if healed {
+                report.repaired.push(key);
+            }
+        }
+        Ok(report)
+    }
+}
+
+impl Recover for HdfsLike {
+    fn recover(&self) -> Result<RecoveryReport> {
+        self.recover_hdfs()
     }
 }
 
@@ -614,5 +704,68 @@ mod tests {
         assert_eq!(&buf[..2], b"89");
         assert_eq!(r.read_at(10, &mut buf).unwrap(), 0);
         assert_eq!(h.stats().local_reads, 1, "read_at adds no locality events");
+    }
+
+    // -- crash recovery ----------------------------------------------------
+
+    #[test]
+    fn recover_on_clean_store_is_clean() {
+        let dir = TempDir::new("hdfs-rec0").unwrap();
+        let h = HdfsLike::open(dir.path(), 4, 3).unwrap();
+        h.write("a", b"payload").unwrap();
+        let report = h.recover_hdfs().unwrap();
+        assert!(report.is_clean(), "{report}");
+    }
+
+    #[test]
+    fn recover_removes_temp_replicas() {
+        let dir = TempDir::new("hdfs-rec1").unwrap();
+        let h = HdfsLike::open(dir.path(), 3, 2).unwrap();
+        h.write("live", b"data").unwrap();
+        fs::write(dir.path().join("node0").join("k.blk.tmp-9"), b"junk").unwrap();
+        fs::write(dir.path().join("node2").join("k.blk.tmp-9"), b"junk").unwrap();
+        let report = h.recover_hdfs().unwrap();
+        assert_eq!(report.temps_removed, 2, "{report}");
+        assert!(!h.exists("k"));
+        assert_eq!(h.read("live").unwrap(), b"data");
+    }
+
+    #[test]
+    fn recover_restores_lost_replicas() {
+        let dir = TempDir::new("hdfs-rec2").unwrap();
+        let h = HdfsLike::open(dir.path(), 5, 3).unwrap();
+        h.write("obj", b"replicate me").unwrap();
+        // lose one replica (disk death)
+        let nodes = h.replica_nodes("obj");
+        fs::remove_file(h.replica_path("obj", nodes[1])).unwrap();
+        let report = h.recover_hdfs().unwrap();
+        assert_eq!(report.repaired, vec!["obj".to_string()], "{report}");
+        let copies = (0..5)
+            .filter(|&n| h.replica_path("obj", n).exists())
+            .count();
+        assert_eq!(copies, 3, "full replication restored");
+        assert_eq!(h.read("obj").unwrap(), b"replicate me");
+    }
+
+    #[test]
+    fn recover_heals_divergent_replicas_to_one_version() {
+        let dir = TempDir::new("hdfs-rec3").unwrap();
+        let h = HdfsLike::open(dir.path(), 4, 3).unwrap();
+        h.write("obj", b"version-one").unwrap();
+        // a crashed overwrite commit left one replica on the new version
+        let nodes = h.replica_nodes("obj");
+        let mut sorted = nodes.clone();
+        sorted.sort_unstable();
+        // diverge a replica that is NOT the lowest-numbered one (the
+        // elected source), so healing rewrites it back
+        fs::write(h.replica_path("obj", sorted[1]), b"version-TWO").unwrap();
+        let report = h.recover_hdfs().unwrap();
+        assert_eq!(report.repaired, vec!["obj".to_string()]);
+        // every replica now serves the elected version
+        for &n in &nodes {
+            assert_eq!(fs::read(h.replica_path("obj", n)).unwrap(), b"version-one");
+        }
+        // second pass is clean
+        assert!(h.recover_hdfs().unwrap().is_clean());
     }
 }

@@ -376,6 +376,15 @@ impl ObjectWriter for MemWriter<'_> {
     }
 }
 
+impl crate::storage::Recover for MemStore {
+    /// The memory tier is volatile by contract (the paper's Tachyon): a
+    /// restarted store begins empty, so there is never debris to repair —
+    /// recovery is a no-op that always reports clean.
+    fn recover(&self) -> Result<crate::storage::RecoveryReport> {
+        Ok(crate::storage::RecoveryReport::default())
+    }
+}
+
 impl ObjectStore for MemStore {
     fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
         let data = self

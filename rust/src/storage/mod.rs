@@ -16,6 +16,13 @@
 //!   read modes (Figure 4), dual I/O buffers (§3.2) with write-through
 //!   driving both tier legs concurrently, and block↔stripe layout mapping
 //!   (Figure 3, [`layout`]).
+//! - [`fault`] — deterministic fault injection ([`fault::FaultPlan`] /
+//!   [`fault::FaultStore`]): fail, short-read, corrupt, or *crash* any
+//!   operation, so the crash suites can prove the durability story
+//!   instead of assuming it. Every backend implements [`Recover`], whose
+//!   `recover()` repairs or quarantines what a killed process left
+//!   behind and reports it as a [`RecoveryReport`] (see
+//!   `docs/FAULT_MODEL.md`).
 //!
 //! All engines implement [`ObjectStore`], so MapReduce jobs and benches are
 //! generic over the backend — exactly how the paper swaps HDFS / OrangeFS /
@@ -35,11 +42,14 @@
 pub mod block;
 pub mod buffer;
 pub mod eviction;
+pub mod fault;
 pub mod hdfs;
 pub mod layout;
 pub mod memstore;
 pub mod pfs;
 pub mod tls;
+
+use std::fmt;
 
 use crate::error::{Error, Result};
 
@@ -213,6 +223,164 @@ pub trait ObjectStore: Send + Sync {
     }
 }
 
+/// What one [`Recover::recover`] pass found and did. All counters are 0
+/// and all lists empty on a clean store ([`RecoveryReport::is_clean`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Writer temp files removed (`*.df.tmp-*`, `*.blk.tmp-*`,
+    /// `*.meta.tmp`) plus abandoned in-memory `.wip/` staging blocks.
+    pub temps_removed: u64,
+    /// Published-namespace files with no owning metadata (e.g. datafiles a
+    /// crashed commit renamed before its meta landed) that were removed.
+    pub orphans_removed: u64,
+    /// Stale `.dirty/` spill objects of already-checkpointed objects that
+    /// were dropped.
+    pub spills_dropped: u64,
+    /// Keys whose on-disk state was inconsistent (truncated datafiles,
+    /// checksum mismatch, undecodable metadata, spills of an uncommitted
+    /// memory-only object) — moved aside under the quarantine namespace so
+    /// they read as `NotFound` instead of serving corrupt or resurrected
+    /// bytes. The files are preserved for forensics.
+    pub quarantined: Vec<String>,
+    /// Keys restored to full health (e.g. re-replicated or healed to a
+    /// consistent replica set).
+    pub repaired: Vec<String>,
+}
+
+impl RecoveryReport {
+    /// Whether recovery found nothing to do.
+    pub fn is_clean(&self) -> bool {
+        self.temps_removed == 0
+            && self.orphans_removed == 0
+            && self.spills_dropped == 0
+            && self.quarantined.is_empty()
+            && self.repaired.is_empty()
+    }
+
+    /// Fold another report (e.g. an inner tier's) into this one.
+    pub fn absorb(&mut self, other: RecoveryReport) {
+        self.temps_removed += other.temps_removed;
+        self.orphans_removed += other.orphans_removed;
+        self.spills_dropped += other.spills_dropped;
+        self.quarantined.extend(other.quarantined);
+        self.repaired.extend(other.repaired);
+    }
+}
+
+impl fmt::Display for RecoveryReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_clean() {
+            return write!(f, "clean (nothing to recover)");
+        }
+        write!(
+            f,
+            "temps_removed={} orphans_removed={} spills_dropped={} quarantined={:?} repaired={:?}",
+            self.temps_removed,
+            self.orphans_removed,
+            self.spills_dropped,
+            self.quarantined,
+            self.repaired
+        )
+    }
+}
+
+/// Crash recovery: scan the backend's surviving state for debris a killed
+/// process left behind (writer temp files, half-committed objects, orphan
+/// spills), then repair or quarantine it.
+///
+/// The contract `recover()` restores is the crash-consistency invariant
+/// the conformance/crash suites assert: after a crash + reopen +
+/// `recover()`, **every key reads as fully the old version, fully the new
+/// version, or `NotFound` — never a prefix, and an uncommitted or
+/// volatile write is never resurrected** — and no writer temp files
+/// remain on disk. Run it once after reopening a store over a directory
+/// tree whose previous owner may have died (see `docs/FAULT_MODEL.md`),
+/// and **before** starting writers: recovery reaps writer staging, so an
+/// in-flight writer's temps look exactly like a dead one's.
+pub trait Recover {
+    /// Scan and repair; returns what was found. Errors only when the
+    /// repair itself cannot proceed (e.g. the filesystem refuses the
+    /// cleanup) — an unrecoverable *object* is quarantined, not an error.
+    fn recover(&self) -> Result<RecoveryReport>;
+}
+
+/// Whether `name` is a *writer temp* file name: `*.df.tmp-<digits>` (PFS
+/// datafile staging), `*.blk.tmp-<digits>` (HDFS replica staging), or
+/// `*.meta.tmp` (torn PFS metadata). Anchored at the end of the name —
+/// keys that merely *contain* these substrings (e.g. an object named
+/// `backup/app.df.tmp-old`, whose datafile is `…app.df.tmp-old.df`) are
+/// **not** temps and must survive recovery.
+pub fn is_writer_temp(name: &str) -> bool {
+    if name.ends_with(".meta.tmp") {
+        return true;
+    }
+    for infix in [".df.tmp-", ".blk.tmp-"] {
+        if let Some(i) = name.rfind(infix) {
+            let token = &name[i + infix.len()..];
+            if !token.is_empty() && token.bytes().all(|b| b.is_ascii_digit()) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+// ---- forwarding impls -----------------------------------------------------
+// `&T`, `Box<T>`, and `Arc<T>` store views behave exactly like `T`: every
+// method (including the v1 adapters, which backends may override with fast
+// paths) forwards to the underlying store. These make wrappers like
+// `FaultStore` usable over borrowed and shared stores.
+
+macro_rules! forward_object_store {
+    () => {
+        fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
+            (**self).open(key)
+        }
+        fn create(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>> {
+            (**self).create(key)
+        }
+        fn stat(&self, key: &str) -> Result<ObjectMeta> {
+            (**self).stat(key)
+        }
+        fn delete(&self, key: &str) -> Result<()> {
+            (**self).delete(key)
+        }
+        fn list(&self, prefix: &str) -> Vec<String> {
+            (**self).list(prefix)
+        }
+        fn kind(&self) -> &'static str {
+            (**self).kind()
+        }
+        fn write(&self, key: &str, data: &[u8]) -> Result<()> {
+            (**self).write(key, data)
+        }
+        fn read(&self, key: &str) -> Result<Vec<u8>> {
+            (**self).read(key)
+        }
+        fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+            (**self).read_range(key, offset, len)
+        }
+        fn size(&self, key: &str) -> Result<u64> {
+            (**self).size(key)
+        }
+        fn exists(&self, key: &str) -> bool {
+            (**self).exists(key)
+        }
+    };
+}
+
+impl<T: ObjectStore + ?Sized> ObjectStore for &T {
+    forward_object_store!();
+}
+
+impl<T: ObjectStore + ?Sized> ObjectStore for Box<T> {
+    forward_object_store!();
+}
+
+impl<T: ObjectStore + ?Sized> ObjectStore for std::sync::Arc<T> {
+    forward_object_store!();
+}
+
 /// Fill `buf` completely from `offset`, looping [`ObjectReader::read_at`]
 /// until done. Errors if the object ends before `buf` is filled — use this
 /// when the caller already clamped the request to `len()`.
@@ -317,6 +485,24 @@ mod tests {
         assert!(!s.exists("p/b"));
         s.delete("p/a").unwrap();
         assert!(!s.exists("p/a"));
+    }
+
+    #[test]
+    fn writer_temp_matcher_is_anchored() {
+        // real writer temps
+        assert!(is_writer_temp("k.df.tmp-0"));
+        assert!(is_writer_temp("in%2Fpart-3.df.tmp-1234"));
+        assert!(is_writer_temp("obj.blk.tmp-7"));
+        assert!(is_writer_temp("k.meta.tmp"));
+        // a key *containing* the pattern is not a temp once published
+        assert!(!is_writer_temp("backup%2Fapp.df.tmp-old.df"));
+        assert!(!is_writer_temp("evil.df.tmp-5.df"));
+        assert!(!is_writer_temp("evil.blk.tmp-5.blk"));
+        // but that key's own writer temp still is one
+        assert!(is_writer_temp("evil.df.tmp-5.df.tmp-99"));
+        assert!(!is_writer_temp("k.df"));
+        assert!(!is_writer_temp("k.meta"));
+        assert!(!is_writer_temp("k.df.tmp-"));
     }
 
     #[test]

@@ -27,12 +27,32 @@ use std::sync::Arc;
 use crate::error::{Error, Result};
 use crate::storage::block::{checksum, verify_checksum, Crc32};
 use crate::storage::layout::{StripeLayout, StripeSegment};
-use crate::storage::{clamped_len, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter};
+use crate::storage::{
+    clamped_len, is_writer_temp, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter, Recover,
+    RecoveryReport,
+};
 use crate::util::pool::ThreadPool;
 
 /// Uniquifies in-flight writer temp files (several writers may stream the
 /// same key concurrently; last committed meta wins, as with `write`).
 static PFS_WRITER_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Key prefix under which [`Pfs::recover_pfs`] parks objects whose on-disk
+/// state is inconsistent (truncated / mixed-version datafiles, undecodable
+/// metadata). Quarantined objects read as `NotFound` under their original
+/// key; the bytes are preserved for forensics.
+pub const QUARANTINE_NS: &str = ".quarantine/";
+
+/// Remove `path` if it exists; `Ok(true)` when a file was removed,
+/// `Ok(false)` when there was nothing to remove, `Err` on a real
+/// filesystem failure (the case rollback paths must not swallow).
+pub(crate) fn remove_existing(path: &Path) -> Result<bool> {
+    match fs::remove_file(path) {
+        Ok(()) => Ok(true),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+        Err(e) => Err(Error::io(path, e)),
+    }
+}
 
 /// Per-write layout overrides (the plug-in "hints" of §3.1).
 #[derive(Debug, Clone, Copy, Default)]
@@ -336,6 +356,149 @@ impl Pfs {
         }
         self.bytes_read.fetch_add(total, Ordering::Relaxed);
         Ok(total as usize)
+    }
+
+    // -- crash recovery ----------------------------------------------------
+
+    /// Atomically re-key an object: the metadata moves first (so `from`
+    /// reads as `NotFound` from that point on), then each datafile.
+    pub fn rename_object(&self, from: &str, to: &str) -> Result<()> {
+        let src_meta = self.meta_path(from);
+        let dst_meta = self.meta_path(to);
+        fs::rename(&src_meta, &dst_meta).map_err(|e| Error::io(&src_meta, e))?;
+        for s in 0..self.server_dirs.len() {
+            let src = self.datafile(from, s);
+            if src.exists() {
+                let dst = self.datafile(to, s);
+                fs::rename(&src, &dst).map_err(|e| Error::io(&src, e))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Park `key` under [`QUARANTINE_NS`]; it then reads as `NotFound`.
+    pub fn quarantine(&self, key: &str) -> Result<()> {
+        self.rename_object(key, &format!("{QUARANTINE_NS}{key}"))
+    }
+
+    /// Whether `key`'s stored bytes are fully intact: every datafile the
+    /// geometry expects is present with the right length and the object's
+    /// CRC matches (checked even when [`Pfs::verify_reads`] is off). The
+    /// caller has already checked `meta.servers` fits this store.
+    fn object_intact(&self, key: &str, meta: &FileMeta) -> bool {
+        match self.read(key) {
+            Ok(data) => {
+                if self.verify_reads {
+                    true // read() already verified the CRC
+                } else {
+                    verify_checksum(key, &data, meta.crc).is_ok()
+                }
+            }
+            Err(Error::NotFound(_)) => true, // raced a delete: nothing to judge
+            Err(_) => false,
+        }
+    }
+
+    /// Crash recovery for the PFS tier; see [`Recover`] for the contract.
+    ///
+    /// Four passes over the directory tree:
+    ///
+    /// 1. **Torn metadata temps** — `*.meta.tmp` files a crash interrupted
+    ///    between write and rename are removed (the rename was the
+    ///    visibility point; an unrenamed temp was never live).
+    /// 2. **Writer temp datafiles** — `*.df.tmp-<token>` staging left by
+    ///    abandoned [`PfsWriter`]s is removed; commits rename temps before
+    ///    publishing metadata, so surviving temps belong to commits that
+    ///    never happened.
+    /// 3. **Object integrity** — every published object is re-read and
+    ///    CRC-verified; objects with missing/truncated/mixed-version
+    ///    datafiles or undecodable metadata are moved under
+    ///    [`QUARANTINE_NS`] (never served, never silently deleted).
+    /// 4. **Orphan datafiles** — `*.df` files with no owning metadata
+    ///    (a crashed commit renamed them into place but died before the
+    ///    meta landed) are removed; without metadata they were never
+    ///    visible.
+    ///
+    /// Cost: pass 3 reads every object once — recovery is a cold path and
+    /// this is the only way to catch a mixed-version commit.
+    pub fn recover_pfs(&self) -> Result<RecoveryReport> {
+        let mut report = RecoveryReport::default();
+
+        // pass 1+2: writer temps (anchored matcher: object keys merely
+        // containing a temp-looking substring are not temps)
+        let mut scan_temps = |dir: &Path| -> Result<()> {
+            let entries = match fs::read_dir(dir) {
+                Ok(e) => e,
+                Err(e) => return Err(Error::io(dir, e)),
+            };
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if is_writer_temp(&name) && remove_existing(&entry.path())? {
+                    report.temps_removed += 1;
+                }
+            }
+            Ok(())
+        };
+        scan_temps(&self.meta_dir)?;
+        for dir in &self.server_dirs {
+            scan_temps(dir)?;
+        }
+
+        // pass 3: object integrity
+        for key in self.list("") {
+            if key.starts_with(QUARANTINE_NS) {
+                continue; // already parked by a previous recovery
+            }
+            let meta = match self.read_meta(&key) {
+                Ok(m) => m,
+                Err(Error::NotFound(_)) => continue, // raced a delete
+                Err(_) => {
+                    // undecodable metadata: park it
+                    self.quarantine(&key)?;
+                    report.quarantined.push(key);
+                    continue;
+                }
+            };
+            if meta.servers > self.server_dirs.len() {
+                // Not corruption — the store was reopened with fewer
+                // servers than the object was written across. Quarantining
+                // here would destroy healthy data (and strand the wider
+                // datafiles this store cannot even address); refuse and
+                // tell the operator to reopen with the original geometry.
+                return Err(Error::Config(format!(
+                    "`{key}` is striped across {} servers but this store has {}; \
+                     reopen with the original --pfs-servers before recovering",
+                    meta.servers,
+                    self.server_dirs.len()
+                )));
+            }
+            if !self.object_intact(&key, &meta) {
+                self.quarantine(&key)?;
+                report.quarantined.push(key);
+            }
+        }
+
+        // pass 4: orphan datafiles without metadata
+        for dir in &self.server_dirs {
+            let entries = fs::read_dir(dir).map_err(|e| Error::io(dir, e))?;
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                let Some(enc) = name.strip_suffix(".df") else {
+                    continue;
+                };
+                let key = enc.replace("%2F", "/").replace("%25", "%");
+                if !self.meta_path(&key).exists() && remove_existing(&entry.path())? {
+                    report.orphans_removed += 1;
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+impl Recover for Pfs {
+    fn recover(&self) -> Result<RecoveryReport> {
+        self.recover_pfs()
     }
 }
 
@@ -741,9 +904,12 @@ impl ObjectStore for Pfs {
     }
 
     fn delete(&self, key: &str) -> Result<()> {
-        let _ = fs::remove_file(self.meta_path(key));
+        // idempotent for missing keys, but a file the filesystem refuses
+        // to remove is a real error: rollback paths depend on delete
+        // actually deleting (see `Error::RecoveryNeeded`)
+        remove_existing(&self.meta_path(key))?;
         for s in 0..self.server_dirs.len() {
-            let _ = fs::remove_file(self.datafile(key, s));
+            remove_existing(&self.datafile(key, s))?;
         }
         Ok(())
     }
@@ -1065,5 +1231,131 @@ mod tests {
         let mut buf = [0u8; 4];
         assert_eq!(r.read_at(1000, &mut buf).unwrap(), 0, "at EOF");
         assert_eq!(r.read_at(5000, &mut buf).unwrap(), 0, "past EOF");
+    }
+
+    // -- crash recovery ----------------------------------------------------
+
+    #[test]
+    fn recover_on_clean_store_is_clean() {
+        let dir = TempDir::new("pfs-rec0").unwrap();
+        let pfs = open(&dir, 3, 64);
+        pfs.write("a", &rand_data(500, 60)).unwrap();
+        pfs.write("b/c", &rand_data(100, 61)).unwrap();
+        let report = pfs.recover_pfs().unwrap();
+        assert!(report.is_clean(), "{report}");
+        assert_eq!(pfs.read("a").unwrap(), rand_data(500, 60));
+    }
+
+    #[test]
+    fn recover_removes_writer_temps_and_meta_temps() {
+        let dir = TempDir::new("pfs-rec1").unwrap();
+        let pfs = open(&dir, 2, 32);
+        pfs.write("live", &rand_data(100, 62)).unwrap();
+        // debris a killed process would leave
+        fs::write(dir.path().join("server0").join("k.df.tmp-7"), b"junk").unwrap();
+        fs::write(dir.path().join("server1").join("k.df.tmp-7"), b"junk").unwrap();
+        fs::write(dir.path().join("meta").join("k.meta.tmp"), b"size = 4\n").unwrap();
+        let report = pfs.recover_pfs().unwrap();
+        assert_eq!(report.temps_removed, 3, "{report}");
+        assert!(report.quarantined.is_empty());
+        assert!(!dir.path().join("server0").join("k.df.tmp-7").exists());
+        assert!(!dir.path().join("meta").join("k.meta.tmp").exists());
+        assert_eq!(pfs.read("live").unwrap(), rand_data(100, 62), "live object untouched");
+    }
+
+    #[test]
+    fn recover_quarantines_truncated_object() {
+        let dir = TempDir::new("pfs-rec2").unwrap();
+        let pfs = open(&dir, 2, 32);
+        let data = rand_data(200, 63);
+        pfs.write("bad", &data).unwrap();
+        pfs.write("good", &data).unwrap();
+        // truncate one datafile: the object can no longer serve fully
+        let df = dir.path().join("server1").join("bad.df");
+        let bytes = fs::read(&df).unwrap();
+        fs::write(&df, &bytes[..bytes.len() / 2]).unwrap();
+        let report = pfs.recover_pfs().unwrap();
+        assert_eq!(report.quarantined, vec!["bad".to_string()], "{report}");
+        assert!(matches!(pfs.read("bad"), Err(Error::NotFound(_))), "quarantined → NotFound");
+        assert!(!pfs.exists("bad"));
+        assert_eq!(pfs.read("good").unwrap(), data, "healthy neighbour untouched");
+        // quarantined bytes are preserved, and a second pass is clean
+        assert_eq!(pfs.list(QUARANTINE_NS), vec![format!("{QUARANTINE_NS}bad")]);
+        assert!(pfs.recover_pfs().unwrap().is_clean());
+    }
+
+    #[test]
+    fn recover_quarantines_corrupt_object() {
+        let dir = TempDir::new("pfs-rec3").unwrap();
+        let pfs = open(&dir, 2, 32);
+        pfs.write("c", &rand_data(100, 64)).unwrap();
+        let df = dir.path().join("server0").join("c.df");
+        let mut bytes = fs::read(&df).unwrap();
+        bytes[0] ^= 0xFF;
+        fs::write(&df, bytes).unwrap();
+        let report = pfs.recover_pfs().unwrap();
+        assert_eq!(report.quarantined, vec!["c".to_string()]);
+        assert!(matches!(pfs.read("c"), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn recover_removes_orphan_datafiles_without_meta() {
+        let dir = TempDir::new("pfs-rec4").unwrap();
+        let pfs = open(&dir, 2, 32);
+        // a crashed commit renamed datafiles into place but never wrote meta
+        fs::write(dir.path().join("server0").join("ghost.df"), b"abc").unwrap();
+        fs::write(dir.path().join("server1").join("ghost.df"), b"def").unwrap();
+        let report = pfs.recover_pfs().unwrap();
+        assert_eq!(report.orphans_removed, 2, "{report}");
+        assert!(!dir.path().join("server0").join("ghost.df").exists());
+        assert!(!pfs.exists("ghost"));
+    }
+
+    #[test]
+    fn recover_quarantines_undecodable_meta() {
+        let dir = TempDir::new("pfs-rec5").unwrap();
+        let pfs = open(&dir, 2, 32);
+        fs::write(dir.path().join("meta").join("junk.meta"), b"not = a\nmeta").unwrap();
+        let report = pfs.recover_pfs().unwrap();
+        assert_eq!(report.quarantined, vec!["junk".to_string()]);
+        assert!(!pfs.exists("junk"));
+    }
+
+    #[test]
+    fn recover_refuses_a_narrower_server_count() {
+        let dir = TempDir::new("pfs-rec6").unwrap();
+        let data = rand_data(300, 65);
+        {
+            let pfs = open(&dir, 4, 32);
+            pfs.write("wide", &data).unwrap();
+        }
+        // reopened with fewer servers: recover must refuse, not quarantine
+        let pfs = open(&dir, 2, 32);
+        let err = pfs.recover_pfs().unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // nothing was touched: the original geometry still reads cleanly
+        let pfs = open(&dir, 4, 32);
+        assert!(pfs.recover_pfs().unwrap().is_clean());
+        assert_eq!(pfs.read("wide").unwrap(), data);
+    }
+
+    #[test]
+    fn recover_spares_keys_that_merely_look_like_temps() {
+        let dir = TempDir::new("pfs-rec7").unwrap();
+        let pfs = open(&dir, 2, 32);
+        let data = rand_data(150, 66);
+        // a published object whose *name* contains the temp infix
+        pfs.write("backup/app.df.tmp-old", &data).unwrap();
+        let report = pfs.recover_pfs().unwrap();
+        assert!(report.is_clean(), "{report}");
+        assert_eq!(pfs.read("backup/app.df.tmp-old").unwrap(), data);
+    }
+
+    #[test]
+    fn delete_surfaces_real_filesystem_errors() {
+        // deleting a missing key stays Ok (idempotence contract)
+        let dir = TempDir::new("pfs-del").unwrap();
+        let pfs = open(&dir, 2, 32);
+        pfs.delete("never-written").unwrap();
     }
 }

@@ -44,7 +44,8 @@ use crate::storage::buffer::{BufferPool, PooledBuf};
 use crate::storage::memstore::{MemStats, MemStore};
 use crate::storage::pfs::{Hints, Pfs, PfsStats, PfsWriter};
 use crate::storage::{
-    read_full_at, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter, ReadMode, WriteMode,
+    read_full_at, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter, ReadMode, Recover,
+    RecoveryReport, WriteMode,
 };
 use crate::util::pool::ThreadPool;
 
@@ -246,19 +247,17 @@ impl TwoLevelStore {
         Self::check_geometry_marker(&cfg)?;
         let mem = MemStore::with_shards(cfg.mem_capacity, &cfg.eviction, cfg.mem_shards)?;
 
-        // Recover the object table from PFS contents.
+        // Recover the object table from PFS contents. Only consolidated
+        // checkpoints resurrect an entry: mode-(a) data is volatile until
+        // checkpointed (exactly Tachyon's restart semantics), so `.dirty/`
+        // spill blocks of a previous incarnation never rebuild an object —
+        // a partial spill set would serve a prefix, and even a complete one
+        // belongs to a write whose commit this process cannot vouch for.
+        // [`TwoLevelStore::recover`] quarantines those spills; quarantined
+        // objects stay invisible too.
         let mut objects = HashMap::new();
         for key in pfs.list("") {
-            if key.starts_with(DIRTY_NS) {
-                // spilled block of an unpersisted object
-                if let Some((obj, _idx)) = key[DIRTY_NS.len()..].rsplit_once('#') {
-                    objects
-                        .entry(obj.to_string())
-                        .or_insert(ObjEntry {
-                            size: 0,
-                            persisted: false,
-                        });
-                }
+            if key.starts_with(DIRTY_NS) || key.starts_with(crate::storage::pfs::QUARANTINE_NS) {
                 continue;
             }
             let size = pfs.size(&key)?;
@@ -554,7 +553,24 @@ impl TwoLevelStore {
                             );
                         }
                         _ => {
-                            let _ = self.pfs.delete(key);
+                            // The rollback itself is load-bearing: a
+                            // fresh-key orphan left on the PFS would be
+                            // resurrected by restart recovery even though
+                            // this write returns Err. If the cleanup
+                            // fails, say so distinctly — recover() owns
+                            // the leftover from here.
+                            if let Err(cleanup) = self.pfs.delete(key) {
+                                let mem_err = mem_res
+                                    .as_ref()
+                                    .err()
+                                    .map(ToString::to_string)
+                                    .unwrap_or_default();
+                                return Err(Error::RecoveryNeeded(format!(
+                                    "write-through of fresh key `{key}`: mem leg failed \
+                                     ({mem_err}) and the PFS rollback also failed \
+                                     ({cleanup}); run recover() before trusting a restart"
+                                )));
+                            }
                         }
                     }
                 }
@@ -803,6 +819,82 @@ impl TwoLevelStore {
             self.mem.remove(&BlockId::new(key, i).storage_key());
         }
         Ok(())
+    }
+
+    /// Crash recovery for the two-level store; see
+    /// [`crate::storage::Recover`] for the contract and
+    /// `docs/FAULT_MODEL.md` for the failure taxonomy. This is the
+    /// paper's "Tachyon restart over OrangeFS" scenario made explicit:
+    /// the memory tier restarts empty, the PFS tier is the durable source
+    /// of truth, and everything in between must be repaired or refused.
+    ///
+    /// 1. The PFS tier recovers itself ([`Pfs::recover_pfs`]): writer
+    ///    temp datafiles and torn metadata go, inconsistent objects are
+    ///    quarantined, orphan datafiles are removed.
+    /// 2. Abandoned `.wip/` staging blocks (a writer whose process died
+    ///    mid-stream *in this incarnation*) are dropped from the memory
+    ///    tier — they were never visible and never will be.
+    /// 3. Object-table entries whose consolidated checkpoint the PFS pass
+    ///    quarantined are dropped (cached blocks and dirty flags purged),
+    ///    so the key reads `NotFound` instead of failing block faults.
+    /// 4. `.dirty/` spill objects are reconciled: spills of a
+    ///    *checkpointed* object are stale (the checkpoint supersedes
+    ///    them) and dropped; spills of an object this process knows as
+    ///    live-but-unpersisted are its backing store and kept; spills of
+    ///    an *unknown* object belong to a previous incarnation's
+    ///    uncommitted mode-(a) data — they are quarantined, never
+    ///    resurrected (a partial spill set would be a prefix).
+    pub fn recover(&self) -> Result<RecoveryReport> {
+        let mut report = self.pfs.recover_pfs()?;
+
+        // pass 2: abandoned in-memory write staging
+        for key in self.mem.list(WIP_NS) {
+            self.mem.remove(&key);
+            report.temps_removed += 1;
+        }
+
+        // pass 3: drop table entries whose PFS backing was quarantined
+        let stale: Vec<(String, u64)> = {
+            let objects = self.objects.lock().unwrap();
+            objects
+                .iter()
+                .filter(|(k, e)| e.persisted && !self.pfs.exists(k.as_str()))
+                .map(|(k, e)| (k.clone(), e.size))
+                .collect()
+        };
+        for (key, size) in &stale {
+            let blocks = self.geometry(*size).num_blocks();
+            self.purge_stale_blocks(key, 0, blocks);
+            self.objects.lock().unwrap().remove(key);
+        }
+
+        // pass 4: reconcile dirty-spill objects
+        for skey in self.pfs.list(DIRTY_NS) {
+            let owner = skey[DIRTY_NS.len()..]
+                .rsplit_once('#')
+                .map(|(obj, _)| obj.to_string());
+            let entry = owner
+                .as_deref()
+                .and_then(|obj| self.objects.lock().unwrap().get(obj).cloned());
+            match (owner, entry) {
+                (Some(_), Some(e)) if e.persisted => {
+                    // checkpoint supersedes the spill
+                    self.pfs.delete(&skey)?;
+                    report.spills_dropped += 1;
+                }
+                (Some(_), Some(_)) => {
+                    // live unpersisted object of *this* process: the spill
+                    // is its backing store — keep it
+                }
+                _ => {
+                    // unknown owner (previous incarnation's uncommitted
+                    // mode-(a) data) or malformed name: never resurrect
+                    self.pfs.quarantine(&skey)?;
+                    report.quarantined.push(skey);
+                }
+            }
+        }
+        Ok(report)
     }
 
     /// Open a streaming reader under an explicit read mode (Figure 4 d–f).
@@ -1208,7 +1300,18 @@ impl TlsWriter<'_> {
                             );
                         }
                         _ => {
-                            let _ = self.store.pfs.delete(&self.key);
+                            // as in the whole-object path: a failed
+                            // fresh-key rollback leaves a resurrectable
+                            // orphan — surface it as RecoveryNeeded
+                            if let Err(cleanup) = self.store.pfs.delete(&self.key) {
+                                return Err(Error::RecoveryNeeded(format!(
+                                    "streaming write-through commit of fresh key `{}`: \
+                                     victim spill failed ({e}) and the PFS rollback also \
+                                     failed ({cleanup}); run recover() before trusting a \
+                                     restart",
+                                    self.key
+                                )));
+                            }
                         }
                     }
                     return Err(e);
@@ -1256,10 +1359,21 @@ impl TlsWriter<'_> {
                         drop(dirty);
                         for j in 0..=i {
                             if j as u64 >= keep_spills_below {
-                                let _ = self
+                                // a stray spill would let restart
+                                // recovery fabricate a ghost entry for a
+                                // commit that returned Err
+                                if let Err(cleanup) = self
                                     .store
                                     .pfs
-                                    .delete(&TwoLevelStore::dirty_key(&self.key, j as u64));
+                                    .delete(&TwoLevelStore::dirty_key(&self.key, j as u64))
+                                {
+                                    return Err(Error::RecoveryNeeded(format!(
+                                        "mem-only commit of `{}` failed ({e}) and spill \
+                                         block {j} could not be dropped ({cleanup}); run \
+                                         recover() before trusting a restart",
+                                        self.key
+                                    )));
+                                }
                             }
                         }
                         return Err(e);
@@ -1320,6 +1434,12 @@ impl ObjectWriter for TlsWriter<'_> {
     fn abort(mut self: Box<Self>) -> Result<()> {
         self.abort_inner();
         Ok(())
+    }
+}
+
+impl Recover for TwoLevelStore {
+    fn recover(&self) -> Result<RecoveryReport> {
+        TwoLevelStore::recover(self)
     }
 }
 
@@ -1861,6 +1981,102 @@ mod tests {
         assert_eq!(meta.key, "a");
         assert_eq!(meta.size, 321);
         assert!(matches!(ObjectStore::stat(&s, "nope"), Err(Error::NotFound(_))));
+    }
+
+    // -- crash recovery ----------------------------------------------------
+
+    #[test]
+    fn recover_on_clean_store_is_clean() {
+        let dir = TempDir::new("tls-rec0").unwrap();
+        let s = store(&dir, 4096, 256);
+        s.write("a", &rand_data(700, 50), WriteMode::WriteThrough).unwrap();
+        s.write("b", &rand_data(100, 51), WriteMode::MemOnly).unwrap();
+        let report = s.recover().unwrap();
+        assert!(report.is_clean(), "{report}");
+        // live unpersisted object untouched by recovery
+        assert_eq!(s.read("b", ReadMode::TwoLevel).unwrap(), rand_data(100, 51));
+    }
+
+    #[test]
+    fn uncheckpointed_memonly_object_is_not_resurrected_after_reboot() {
+        let dir = TempDir::new("tls-rec1").unwrap();
+        let a = rand_data(512, 52);
+        {
+            // memory fits 2 blocks: writing `b` evicts and spills both of
+            // `a`'s dirty blocks to the PFS `.dirty/` namespace
+            let s = store(&dir, 512, 256);
+            s.write("a", &a, WriteMode::MemOnly).unwrap();
+            s.write("b", &rand_data(512, 53), WriteMode::MemOnly).unwrap();
+            assert!(s.stats().dirty_spills >= 2);
+            assert_eq!(s.read("a", ReadMode::TwoLevel).unwrap(), a, "alive pre-crash");
+        } // crash: the process dies; the memory tier evaporates
+        let s = store(&dir, 512, 256);
+        // mode-(a) data was never checkpointed: it must NOT come back —
+        // not as a prefix, not even though every spill block survived
+        assert!(!s.exists("a"), "volatile object resurrected");
+        assert!(!s.exists("b"));
+        let report = s.recover().unwrap();
+        assert!(report.quarantined.len() >= 2, "{report}");
+        assert!(s.pfs().list(DIRTY_NS).is_empty(), "spills quarantined");
+        assert!(matches!(s.read("a", ReadMode::TwoLevel), Err(Error::NotFound(_))));
+        // second pass is clean
+        assert!(s.recover().unwrap().is_clean());
+    }
+
+    #[test]
+    fn checkpointed_object_survives_reboot_and_stale_spills_drop() {
+        let dir = TempDir::new("tls-rec2").unwrap();
+        let a = rand_data(512, 54);
+        {
+            let s = store(&dir, 4096, 256);
+            s.write("a", &a, WriteMode::MemOnly).unwrap();
+            s.checkpoint("a").unwrap();
+            // craft a stale spill a crash could have left behind (the
+            // checkpoint normally deletes these; simulate dying between
+            // the checkpoint commit and the spill cleanup)
+            s.pfs().write(&TwoLevelStore::dirty_key("a", 0), &a[..256]).unwrap();
+        }
+        let s = store(&dir, 4096, 256);
+        assert!(s.exists("a"), "checkpointed object survives");
+        let report = s.recover().unwrap();
+        assert_eq!(report.spills_dropped, 1, "{report}");
+        assert!(report.quarantined.is_empty());
+        assert_eq!(s.read("a", ReadMode::TwoLevel).unwrap(), a);
+        assert!(s.pfs().list(DIRTY_NS).is_empty());
+    }
+
+    #[test]
+    fn recover_drops_abandoned_wip_staging() {
+        let dir = TempDir::new("tls-rec3").unwrap();
+        let s = store(&dir, 4096, 256);
+        // a leaked writer's staging block (its process died mid-stream)
+        s.mem().put(&format!("{WIP_NS}99#0"), vec![1u8; 64].into()).unwrap();
+        let used = s.mem().used();
+        let report = s.recover().unwrap();
+        assert_eq!(report.temps_removed, 1, "{report}");
+        assert!(s.mem().list(WIP_NS).is_empty());
+        assert_eq!(s.mem().used(), used - 64);
+    }
+
+    #[test]
+    fn quarantined_checkpoint_drops_the_object_entry() {
+        let dir = TempDir::new("tls-rec4").unwrap();
+        let s = store(&dir, 4096, 256);
+        let data = rand_data(1000, 55);
+        s.write("k", &data, WriteMode::WriteThrough).unwrap();
+        assert!(s.mem().contains("k#0"));
+        // bit-rot in one PFS datafile: the checkpoint is inconsistent
+        let df = dir.path().join("pfs").join("server0").join("k.df");
+        let mut bytes = std::fs::read(&df).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&df, bytes).unwrap();
+        let report = s.recover().unwrap();
+        assert_eq!(report.quarantined, vec!["k".to_string()], "{report}");
+        // the key reads NotFound everywhere — never corrupt bytes, and no
+        // stale cached blocks survive the quarantine
+        assert!(!s.exists("k"));
+        assert!(!s.mem().contains("k#0"), "cached blocks purged");
+        assert!(matches!(s.read("k", ReadMode::TwoLevel), Err(Error::NotFound(_))));
     }
 
     #[test]

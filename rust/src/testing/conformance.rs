@@ -15,6 +15,8 @@
 //! - **EOF clamping**: `read_at`/`read_range` clamp, never over-read;
 //! - **`stat`** agrees with the handles and reports `NotFound` correctly.
 
+use crate::error::Error;
+use crate::storage::fault::{FaultKind, FaultPlan, FaultStore, OpKind, Trigger};
 use crate::storage::{read_full_at, ObjectReader as _, ObjectStore, ObjectWriter as _};
 use crate::util::rng::Pcg32;
 
@@ -201,6 +203,128 @@ fn abort_leaves_no_orphans(store: &dyn ObjectStore, kind: &str) {
     let data = rand_data(128, 43);
     store.write("conf/ab-explicit", &data).unwrap();
     assert_eq!(store.read("conf/ab-explicit").unwrap(), data, "{kind}: reusable");
+}
+
+/// Fault-conformance section: wrap `store` in [`FaultStore`]s with
+/// targeted plans and pin down how injected failures must surface.
+///
+/// Contracts (per backend):
+///
+/// - every injected fault surfaces as a proper [`Error`] value — by
+///   construction nothing here panics, and the assertions pin the
+///   *variant* ([`Error::Injected`]);
+/// - **no partial visibility**: a failed create/append/commit leaves the
+///   key exactly as it was (absent, or the old version — never a prefix,
+///   never orphan staging);
+/// - the store stays fully usable after any injected failure;
+/// - short reads reassemble through the standard retry loop; injected
+///   corruption is visible in the served bytes (the CRC-carrying
+///   backends' whole-object paths are what catches it in production);
+/// - a crash poisons every subsequent operation on the wrapper while the
+///   underlying store (the "disk") keeps its pre-crash contents.
+pub fn check_fault_conformance(store: &dyn ObjectStore) {
+    let kind = store.kind();
+    let base = rand_data(1000, 90);
+    store.write("fault/base", &base).unwrap();
+
+    // -- injected create failure ------------------------------------------
+    let f = FaultStore::new(store, FaultPlan::fail_at(OpKind::Create, 0));
+    let err = f.create("fault/c").unwrap_err();
+    assert!(matches!(err, Error::Injected(_)), "{kind}: {err}");
+    assert!(store.stat("fault/c").is_err(), "{kind}: failed create left a key");
+    f.write("fault/c", &base).unwrap(); // trigger spent: store usable
+    assert_eq!(store.read("fault/c").unwrap(), base, "{kind}");
+
+    // -- injected append failure ------------------------------------------
+    let f = FaultStore::new(store, FaultPlan::fail_at(OpKind::Append, 1));
+    let before = store.list("fault/").len();
+    {
+        let mut w = f.create("fault/a").unwrap();
+        w.append(&base[..300]).unwrap();
+        let err = w.append(&base[300..]).unwrap_err();
+        assert!(matches!(err, Error::Injected(_)), "{kind}: {err}");
+        w.abort().unwrap();
+    }
+    assert!(store.stat("fault/a").is_err(), "{kind}: failed append left a key");
+    assert_eq!(store.list("fault/").len(), before, "{kind}: no orphan keys");
+
+    // -- injected commit failure: no partial visibility --------------------
+    let f = FaultStore::new(store, FaultPlan::fail_at(OpKind::Commit, 0));
+    {
+        let mut w = f.create("fault/base").unwrap(); // overwrite attempt
+        w.append(&rand_data(500, 91)).unwrap();
+        let err = w.commit().unwrap_err();
+        assert!(matches!(err, Error::Injected(_)), "{kind}: {err}");
+    }
+    assert_eq!(
+        store.read("fault/base").unwrap(),
+        base,
+        "{kind}: failed overwrite commit must leave the old version intact"
+    );
+
+    // -- injected open / read_at / stat / delete failures ------------------
+    let f = FaultStore::new(store, FaultPlan::fail_at(OpKind::Open, 0));
+    assert!(matches!(f.open("fault/base"), Err(Error::Injected(_))), "{kind}");
+    let f = FaultStore::new(store, FaultPlan::fail_at(OpKind::ReadAt, 0));
+    let r = f.open("fault/base").unwrap();
+    let mut buf = [0u8; 16];
+    assert!(matches!(r.read_at(0, &mut buf), Err(Error::Injected(_))), "{kind}");
+    assert_eq!(r.read_at(0, &mut buf).unwrap(), 16, "{kind}: reader survives");
+    drop(r);
+    let f = FaultStore::new(store, FaultPlan::fail_at(OpKind::Stat, 0));
+    assert!(matches!(f.stat("fault/base"), Err(Error::Injected(_))), "{kind}");
+    let f = FaultStore::new(store, FaultPlan::fail_at(OpKind::Delete, 0));
+    assert!(matches!(f.delete("fault/base"), Err(Error::Injected(_))), "{kind}");
+    assert_eq!(store.read("fault/base").unwrap(), base, "{kind}: delete did not run");
+
+    // -- short reads reassemble -------------------------------------------
+    let plan = FaultPlan::new()
+        .with(Trigger {
+            op: OpKind::ReadAt,
+            after: 0,
+            key_pattern: None,
+            min_offset: None,
+            kind: FaultKind::ShortRead,
+        })
+        .with(Trigger {
+            op: OpKind::ReadAt,
+            after: 1,
+            key_pattern: None,
+            min_offset: None,
+            kind: FaultKind::ShortRead,
+        });
+    let f = FaultStore::new(store, plan);
+    assert_eq!(f.read("fault/base").unwrap(), base, "{kind}: short reads reassemble");
+    assert_eq!(f.stats().short_reads, 2, "{kind}");
+
+    // -- corruption is visible in the served bytes -------------------------
+    let f = FaultStore::new(store, FaultPlan::new().with(Trigger {
+        op: OpKind::ReadAt,
+        after: 0,
+        key_pattern: None,
+        min_offset: None,
+        kind: FaultKind::CorruptRead,
+    }));
+    let got = f.read("fault/base").unwrap();
+    assert_ne!(got, base, "{kind}: corruption must not vanish silently");
+    assert_eq!(f.stats().corruptions, 1, "{kind}");
+
+    // -- crash poisons the wrapper, not the disk ---------------------------
+    let f = FaultStore::new(store, FaultPlan::crash_at(OpKind::Commit, 0));
+    {
+        let mut w = f.create("fault/crash").unwrap();
+        w.append(&base[..200]).unwrap();
+        let err = w.commit().unwrap_err();
+        assert!(matches!(err, Error::Injected(_)), "{kind}: {err}");
+    }
+    assert!(f.crashed(), "{kind}");
+    assert!(matches!(f.stat("fault/base"), Err(Error::Injected(_))), "{kind}: dead store");
+    assert!(matches!(f.create("fault/x"), Err(Error::Injected(_))), "{kind}: dead store");
+    assert_eq!(store.read("fault/base").unwrap(), base, "{kind}: disk survives the crash");
+    assert!(
+        store.stat("fault/crash").is_err(),
+        "{kind}: crashed commit must not be visible"
+    );
 }
 
 fn empty_object_via_handles(store: &dyn ObjectStore, kind: &str) {

@@ -1,0 +1,422 @@
+//! Crash-consistency test harness.
+//!
+//! Runs a scripted [`Workload`] against a store wrapped in a
+//! [`FaultStore`] whose plan crashes the simulated process at a chosen
+//! append/commit boundary, then "reboots": the surviving directory tree
+//! is reopened with a fresh store, [`Recover::recover`] runs, and
+//! [`verify_after_recovery`] asserts the crash-consistency invariant:
+//!
+//! > every key reads as **fully the old version, fully the new version,
+//! > or `NotFound`** — never a prefix, and an uncommitted (or volatile)
+//! > write is never resurrected.
+//!
+//! [`crash_sweep`] automates the full grid: one run per append/commit
+//! boundary of the workload, so a backend is exercised with a crash at
+//! *every* point of its write path. [`assert_no_residue`] additionally
+//! walks the directory tree and fails on surviving writer temp files
+//! (`*.tmp-*`, `*.meta.tmp`) — recovery must leave a clean tree.
+//!
+//! The harness drives stores through the plain [`ObjectStore`] surface
+//! (`create`/`append`/`commit`/`delete`), so it works unchanged against
+//! all four backends; per-backend durability is declared by the caller
+//! (`durable: false` for the volatile memory tier, whose committed keys
+//! legitimately vanish on reboot).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::storage::fault::{FaultPlan, FaultStore, OpKind};
+use crate::storage::{ObjectStore, Recover};
+use crate::testing::TempDir;
+use crate::util::rng::Pcg32;
+
+/// One scripted operation of a [`Workload`].
+#[derive(Debug, Clone)]
+pub enum Step {
+    /// Stream `size` deterministic bytes (of `version`) under `key`, in
+    /// `chunk`-byte appends, then commit.
+    Put {
+        key: String,
+        version: u64,
+        size: usize,
+        chunk: usize,
+    },
+    /// Delete `key`.
+    Delete { key: String },
+}
+
+/// The deterministic payload of (`key`, `version`, `size`) — reproducible
+/// on both sides of a crash without storing the bytes.
+pub fn payload(key: &str, version: u64, size: usize) -> Vec<u8> {
+    let seed = crate::util::bytes::fnv1a(key.as_bytes()) ^ version.rotate_left(17);
+    let mut rng = Pcg32::new(seed, 0x5EED);
+    let mut v = vec![0u8; size];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// A scripted sequence of [`Step`]s (builder style).
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub steps: Vec<Step>,
+}
+
+impl Workload {
+    /// Append a [`Step::Put`]. `chunk` must be ≥ 1.
+    pub fn put(mut self, key: &str, version: u64, size: usize, chunk: usize) -> Self {
+        assert!(chunk >= 1, "chunk must be >= 1");
+        self.steps.push(Step::Put {
+            key: key.to_string(),
+            version,
+            size,
+            chunk,
+        });
+        self
+    }
+
+    /// Append a [`Step::Delete`].
+    pub fn delete(mut self, key: &str) -> Self {
+        self.steps.push(Step::Delete {
+            key: key.to_string(),
+        });
+        self
+    }
+
+    /// Number of append/commit boundaries a crash can be injected at:
+    /// each `Put` contributes `ceil(size / chunk)` appends plus one
+    /// commit.
+    pub fn boundaries(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                Step::Put { size, chunk, .. } => size.div_ceil(*chunk) as u64 + 1,
+                Step::Delete { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// Map a global boundary index onto the `(op, after)` pair that arms
+    /// [`FaultPlan::crash_at`] for exactly that boundary (append and
+    /// commit triggers keep independent match counters).
+    pub fn boundary_trigger(&self, boundary: u64) -> Option<(OpKind, u64)> {
+        let (mut b, mut appends, mut commits) = (0u64, 0u64, 0u64);
+        for s in &self.steps {
+            if let Step::Put { size, chunk, .. } = s {
+                for _ in 0..size.div_ceil(*chunk) as u64 {
+                    if b == boundary {
+                        return Some((OpKind::Append, appends));
+                    }
+                    b += 1;
+                    appends += 1;
+                }
+                if b == boundary {
+                    return Some((OpKind::Commit, commits));
+                }
+                b += 1;
+                commits += 1;
+            }
+        }
+        None
+    }
+}
+
+/// What was in flight when the run stopped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InFlight {
+    /// The run completed every step.
+    None,
+    /// A `Put` of `key` errored mid-stream: its new version must never
+    /// become visible, and (on a durable backend) the committed version
+    /// must survive untouched.
+    Put(String),
+    /// A `Delete` of `key` errored: the key may read as the committed
+    /// version or as absent — both are consistent.
+    Delete(String),
+}
+
+/// The ground truth a crashed run leaves behind.
+#[derive(Debug, Clone)]
+pub struct CrashOutcome {
+    /// Whether a fault stopped the run before the last step.
+    pub crashed: bool,
+    /// Per key: the bytes of the last *committed* version (`None` =
+    /// deleted, or touched but never successfully committed).
+    pub committed: HashMap<String, Option<Vec<u8>>>,
+    /// The operation the run died inside, if any.
+    pub in_flight: InFlight,
+}
+
+/// Run `workload` against `store` (normally a [`FaultStore`]) until it
+/// completes or the first operation fails; the error — injected fault or
+/// simulated crash — ends the run exactly like the process dying there.
+pub fn run_to_crash(store: &dyn ObjectStore, workload: &Workload) -> CrashOutcome {
+    let mut committed: HashMap<String, Option<Vec<u8>>> = HashMap::new();
+    for step in &workload.steps {
+        match step {
+            Step::Put {
+                key,
+                version,
+                size,
+                chunk,
+            } => {
+                let data = payload(key, *version, *size);
+                let result = (|| -> Result<()> {
+                    let mut w = store.create(key)?;
+                    for c in data.chunks(*chunk) {
+                        w.append(c)?;
+                    }
+                    w.commit()
+                })();
+                match result {
+                    Ok(()) => {
+                        committed.insert(key.clone(), Some(data));
+                    }
+                    Err(_) => {
+                        committed.entry(key.clone()).or_insert(None);
+                        return CrashOutcome {
+                            crashed: true,
+                            committed,
+                            in_flight: InFlight::Put(key.clone()),
+                        };
+                    }
+                }
+            }
+            Step::Delete { key } => match store.delete(key) {
+                Ok(()) => {
+                    committed.insert(key.clone(), None);
+                }
+                Err(_) => {
+                    committed.entry(key.clone()).or_insert(None);
+                    return CrashOutcome {
+                        crashed: true,
+                        committed,
+                        in_flight: InFlight::Delete(key.clone()),
+                    };
+                }
+            },
+        }
+    }
+    CrashOutcome {
+        crashed: false,
+        committed,
+        in_flight: InFlight::None,
+    }
+}
+
+/// Assert the crash-consistency invariant against a rebooted, recovered
+/// store. `durable` declares whether the backend promises committed data
+/// across a reboot (`false` for the volatile memory tier, where any key
+/// may legitimately read `NotFound` after restart).
+///
+/// Per key, the allowed observations are:
+///
+/// - committed keys on a durable backend: exactly the committed bytes
+///   (an in-flight `Delete` additionally allows `NotFound`);
+/// - keys whose `Put` was in flight: the *previous* committed version
+///   (or `NotFound` if there was none) — never the uncommitted one;
+/// - on a volatile backend, `NotFound` is always additionally allowed.
+///
+/// Anything else — a byte-level mismatch, a prefix, a resurrected
+/// uncommitted write — panics with `ctx` in the message.
+pub fn verify_after_recovery(
+    store: &dyn ObjectStore,
+    outcome: &CrashOutcome,
+    durable: bool,
+    ctx: &str,
+) {
+    for (key, expect) in &outcome.committed {
+        let actual = match store.read(key) {
+            Ok(d) => Some(d),
+            Err(Error::NotFound(_)) => None,
+            Err(e) => panic!("{ctx}: key `{key}` unreadable after recovery: {e}"),
+        };
+        let absent_ok = !durable
+            || expect.is_none()
+            || outcome.in_flight == InFlight::Delete(key.clone());
+        let matches_committed = actual.as_deref() == expect.as_deref();
+        let is_absent = actual.is_none();
+        if matches_committed || (is_absent && absent_ok) {
+            continue;
+        }
+        // diagnose the violation precisely
+        let describe = |v: &Option<Vec<u8>>| match v {
+            None => "NotFound".to_string(),
+            Some(d) => format!("{} bytes", d.len()),
+        };
+        let prefix_note = match (&actual, expect) {
+            (Some(a), Some(e)) if a.len() < e.len() && e.starts_with(a) => " (a PREFIX!)",
+            _ => "",
+        };
+        panic!(
+            "{ctx}: key `{key}` after crash+recovery reads {}{} but the only \
+             consistent states are {} or NotFound (in_flight={:?}, durable={durable})",
+            describe(&actual),
+            prefix_note,
+            describe(expect),
+            outcome.in_flight
+        );
+    }
+}
+
+/// Walk `root` and fail on any surviving writer temp file — after
+/// `recover()`, no `*.df.tmp-<n>` / `*.blk.tmp-<n>` staging or
+/// `*.meta.tmp` torn metadata may remain anywhere in the tree (the same
+/// anchored matcher recovery uses, [`crate::storage::is_writer_temp`]).
+pub fn assert_no_residue(root: &Path, ctx: &str) {
+    fn walk(dir: &Path, ctx: &str) {
+        let Ok(entries) = std::fs::read_dir(dir) else {
+            return;
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.is_dir() {
+                walk(&path, ctx);
+            } else {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                assert!(
+                    !crate::storage::is_writer_temp(&name),
+                    "{ctx}: writer temp survived recovery: {}",
+                    path.display()
+                );
+            }
+        }
+    }
+    walk(root, ctx);
+}
+
+/// The full grid: for every append/commit boundary of `workload`, run it
+/// on a fresh store (from `open`, rooted in its own temp dir) with a
+/// crash injected at that boundary, reboot over the surviving tree,
+/// [`Recover::recover`], then assert [`verify_after_recovery`] and
+/// [`assert_no_residue`].
+///
+/// `open` is called twice per boundary — pre-crash and post-reboot — with
+/// the same directory; `durable` as in [`verify_after_recovery`].
+pub fn crash_sweep<S, F>(tag: &str, durable: bool, open: F, workload: &Workload)
+where
+    S: ObjectStore + Recover,
+    F: Fn(&Path) -> S,
+{
+    let total = workload.boundaries();
+    assert!(total > 0, "{tag}: workload has no crash boundaries");
+    for boundary in 0..total {
+        let ctx = format!("{tag}: crash at boundary {boundary}/{total}");
+        let dir = TempDir::new(&format!("crash-{tag}-{boundary}")).unwrap();
+        let (op, after) = workload
+            .boundary_trigger(boundary)
+            .expect("boundary within range");
+        let outcome = {
+            let faulty = FaultStore::new(open(dir.path()), FaultPlan::crash_at(op, after));
+            let outcome = run_to_crash(&faulty, workload);
+            assert!(outcome.crashed, "{ctx}: the armed crash must fire");
+            assert!(faulty.crashed(), "{ctx}: wrapper must report the crash");
+            outcome
+            // `faulty` (and the dead store inside) drop here; the
+            // in-flight handle was already abandoned by the crash, so its
+            // temp files survive on disk exactly like after `kill -9`
+        };
+        // reboot over the surviving directory tree
+        let store = open(dir.path());
+        let report = store
+            .recover()
+            .unwrap_or_else(|e| panic!("{ctx}: recover() failed: {e}"));
+        verify_after_recovery(&store, &outcome, durable, &ctx);
+        assert_no_residue(dir.path(), &ctx);
+        let _ = report; // reports vary by boundary; the invariants above are the contract
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::memstore::MemStore;
+
+    fn w() -> Workload {
+        Workload::default()
+            .put("a", 1, 700, 256)
+            .put("b", 1, 300, 128)
+            .delete("b")
+            .put("a", 2, 500, 200)
+            .put("empty", 1, 0, 64)
+    }
+
+    #[test]
+    fn payloads_are_deterministic_and_distinct() {
+        assert_eq!(payload("k", 1, 100), payload("k", 1, 100));
+        assert_ne!(payload("k", 1, 100), payload("k", 2, 100));
+        assert_ne!(payload("k", 1, 100), payload("j", 1, 100));
+        assert_eq!(payload("k", 1, 0), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn boundary_arithmetic_covers_every_put() {
+        let w = w();
+        // ceil(700/256)=3 +1, ceil(300/128)=3 +1, delete 0, ceil(500/200)=3 +1, 0 +1
+        assert_eq!(w.boundaries(), 13);
+        assert_eq!(w.boundary_trigger(0), Some((OpKind::Append, 0)));
+        assert_eq!(w.boundary_trigger(3), Some((OpKind::Commit, 0)));
+        assert_eq!(w.boundary_trigger(4), Some((OpKind::Append, 3)));
+        assert_eq!(w.boundary_trigger(7), Some((OpKind::Commit, 1)));
+        assert_eq!(w.boundary_trigger(12), Some((OpKind::Commit, 3)));
+        assert_eq!(w.boundary_trigger(13), None);
+    }
+
+    #[test]
+    fn run_without_faults_commits_everything() {
+        let m = MemStore::new(u64::MAX, "lru").unwrap();
+        let outcome = run_to_crash(&m, &w());
+        assert!(!outcome.crashed);
+        assert_eq!(outcome.in_flight, InFlight::None);
+        assert_eq!(
+            outcome.committed.get("a").unwrap().as_deref(),
+            Some(payload("a", 2, 500).as_slice())
+        );
+        assert_eq!(outcome.committed.get("b").unwrap(), &None);
+        // live (un-rebooted) volatile store still holds the data
+        verify_after_recovery(&m, &outcome, false, "memstore-live");
+    }
+
+    #[test]
+    #[should_panic(expected = "PREFIX")]
+    fn verifier_catches_a_prefix() {
+        let m = MemStore::new(u64::MAX, "lru").unwrap();
+        let data = payload("k", 1, 100);
+        m.write("k", &data[..50]).unwrap(); // a torn write
+        let mut committed = HashMap::new();
+        committed.insert("k".to_string(), Some(data));
+        let outcome = CrashOutcome {
+            crashed: true,
+            committed,
+            in_flight: InFlight::None,
+        };
+        verify_after_recovery(&m, &outcome, true, "prefix-check");
+    }
+
+    #[test]
+    #[should_panic(expected = "consistent states")]
+    fn verifier_catches_resurrection() {
+        // a key whose Put was in flight must not read as the new version
+        let m = MemStore::new(u64::MAX, "lru").unwrap();
+        m.write("k", &payload("k", 2, 64)).unwrap(); // uncommitted v2 leaked
+        let mut committed = HashMap::new();
+        committed.insert("k".to_string(), Some(payload("k", 1, 64)));
+        let outcome = CrashOutcome {
+            crashed: true,
+            committed,
+            in_flight: InFlight::Put("k".to_string()),
+        };
+        verify_after_recovery(&m, &outcome, true, "resurrection-check");
+    }
+
+    #[test]
+    fn residue_walker_spots_temp_files() {
+        let dir = TempDir::new("residue").unwrap();
+        std::fs::create_dir_all(dir.join("sub")).unwrap();
+        std::fs::write(dir.join("sub").join("ok.df"), b"x").unwrap();
+        assert_no_residue(dir.path(), "clean");
+        std::fs::write(dir.join("sub").join("k.df.tmp-3"), b"x").unwrap();
+        let caught = std::panic::catch_unwind(|| assert_no_residue(dir.path(), "dirty"));
+        assert!(caught.is_err(), "temp file must be flagged");
+    }
+}

@@ -1,6 +1,9 @@
 //! Test support: a miniature property-testing harness, a self-cleaning
-//! temporary directory, and the backend-generic storage conformance suite
-//! ([`conformance`]).
+//! temporary directory, the backend-generic storage conformance suite
+//! ([`conformance`]), and the crash-consistency harness ([`crash`]):
+//! scripted workloads run to an injected crash point, rebooted over the
+//! surviving directory tree, recovered, and checked against the
+//! old-or-new-or-absent invariant.
 //!
 //! `proptest` is not in the offline crate set, so [`proprun`] provides the
 //! subset the suite needs: seeded random generation, many cases per
@@ -8,6 +11,7 @@
 //! parameter with the failing seed printed for reproduction.
 
 pub mod conformance;
+pub mod crash;
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -9,12 +9,15 @@
 //! a prefix), aborts leave no orphan stripes/replicas/blocks, and
 //! `read_at`/`read_range` clamp at EOF.
 
+use std::path::Path;
+
 use tlstore::storage::hdfs::HdfsLike;
 use tlstore::storage::memstore::MemStore;
 use tlstore::storage::pfs::Pfs;
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
 use tlstore::storage::{ObjectReader as _, ObjectWriter as _, ReadMode, WriteMode};
-use tlstore::testing::conformance::check_conformance;
+use tlstore::testing::conformance::{check_conformance, check_fault_conformance};
+use tlstore::testing::crash::{crash_sweep, Workload};
 use tlstore::testing::TempDir;
 
 #[test]
@@ -124,4 +127,137 @@ fn two_level_mode_handles_roundtrip() {
     assert_eq!(store.unpersisted(), vec!["m/hot"]);
     store.checkpoint("m/hot").unwrap();
     assert!(store.unpersisted().is_empty());
+}
+
+// ---- fault conformance ----------------------------------------------------
+// Every backend wrapped in a `FaultStore` must surface injected faults as
+// proper `Error` variants with no partial visibility; see
+// `testing::conformance::check_fault_conformance` for the contracts.
+
+#[test]
+fn memstore_fault_conformance() {
+    let store = MemStore::with_shards(64 << 20, "lru", 4).unwrap();
+    check_fault_conformance(&store);
+}
+
+#[test]
+fn pfs_fault_conformance() {
+    let dir = TempDir::new("fault-pfs").unwrap();
+    let store = Pfs::open(dir.path(), 3, 64).unwrap();
+    check_fault_conformance(&store);
+}
+
+#[test]
+fn hdfs_fault_conformance() {
+    let dir = TempDir::new("fault-hdfs").unwrap();
+    let store = HdfsLike::open(dir.path(), 4, 2).unwrap();
+    check_fault_conformance(&store);
+}
+
+#[test]
+fn two_level_fault_conformance() {
+    let dir = TempDir::new("fault-tls").unwrap();
+    let cfg = TlsConfig::builder(dir.path())
+        .mem_capacity(1 << 20)
+        .block_size(256)
+        .pfs_servers(3)
+        .stripe_size(64)
+        .pfs_buffer(128)
+        .build()
+        .unwrap();
+    let store = TwoLevelStore::open(cfg).unwrap();
+    check_fault_conformance(&store);
+}
+
+// ---- crash-at-every-boundary sweeps ---------------------------------------
+// For each backend: run the scripted workload with a crash injected at
+// every append/commit boundary in turn, reboot over the surviving
+// directory tree, `recover()`, then assert the old-or-new-or-absent
+// invariant and that no writer temps survive (`testing::crash`).
+
+/// Fresh keys, an overwrite, a delete, and an empty object — the shapes
+/// whose crash behaviour differs; chunk sizes force multi-append streams
+/// crossing stripe (64 B) and block (256 B) boundaries.
+fn sweep_workload() -> Workload {
+    Workload::default()
+        .put("s/a", 1, 700, 256)
+        .put("s/b", 1, 300, 128)
+        .delete("s/b")
+        .put("s/a", 2, 500, 200)
+        .put("s/empty", 1, 0, 64)
+}
+
+#[test]
+fn memstore_crash_sweep() {
+    // the memory tier is volatile: committed keys may vanish on reboot
+    // (durable = false), but must never read as a prefix or resurrect
+    crash_sweep(
+        "mem",
+        false,
+        |_root: &Path| MemStore::with_shards(64 << 20, "lru", 4).unwrap(),
+        &sweep_workload(),
+    );
+}
+
+#[test]
+fn pfs_crash_sweep() {
+    crash_sweep(
+        "pfs",
+        true,
+        |root: &Path| Pfs::open(root, 3, 64).unwrap(),
+        &sweep_workload(),
+    );
+}
+
+#[test]
+fn hdfs_crash_sweep() {
+    crash_sweep(
+        "hdfs",
+        true,
+        |root: &Path| HdfsLike::open(root, 4, 2).unwrap(),
+        &sweep_workload(),
+    );
+}
+
+#[test]
+fn two_level_crash_sweep() {
+    crash_sweep(
+        "tls",
+        true,
+        |root: &Path| {
+            let cfg = TlsConfig::builder(root)
+                .mem_capacity(1 << 20)
+                .block_size(256)
+                .pfs_servers(3)
+                .stripe_size(64)
+                .pfs_buffer(128)
+                .build()
+                .unwrap();
+            TwoLevelStore::open(cfg).unwrap()
+        },
+        &sweep_workload(),
+    );
+}
+
+#[test]
+fn two_level_crash_sweep_under_eviction_pressure() {
+    // a memory tier of only 4 blocks: write-through staging constantly
+    // evicts and the committed objects mostly live on the PFS — the
+    // invariant must hold regardless of residency
+    crash_sweep(
+        "tls-ev",
+        true,
+        |root: &Path| {
+            let cfg = TlsConfig::builder(root)
+                .mem_capacity(1024)
+                .block_size(256)
+                .pfs_servers(3)
+                .stripe_size(64)
+                .pfs_buffer(128)
+                .build()
+                .unwrap();
+            TwoLevelStore::open(cfg).unwrap()
+        },
+        &sweep_workload(),
+    );
 }

@@ -1,0 +1,205 @@
+//! Crash-recovery integration suite: the paper's "Tachyon restart over
+//! OrangeFS" scenario (memory tier dies, PFS survives, `recover()` makes
+//! the union trustworthy again), plus randomized workload × seeded
+//! `FaultPlan` runs.
+//!
+//! Seeds: three are fixed; CI adds one derived from `$GITHUB_RUN_ID` via
+//! the `TLSTORE_CRASH_SEED` env var. Every run prints its seed so a CI
+//! failure reproduces locally with
+//! `TLSTORE_CRASH_SEED=<seed> cargo test --test crash_storage`.
+
+use std::path::Path;
+
+use tlstore::storage::fault::{FaultPlan, FaultStore, OpKind};
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::{ObjectStore, ReadMode, WriteMode};
+use tlstore::testing::crash::{
+    assert_no_residue, payload, run_to_crash, verify_after_recovery, Workload,
+};
+use tlstore::testing::TempDir;
+use tlstore::util::rng::Pcg32;
+
+fn tls(root: &Path) -> TwoLevelStore {
+    let cfg = TlsConfig::builder(root)
+        .mem_capacity(64 << 10)
+        .block_size(1024)
+        .pfs_servers(3)
+        .stripe_size(300) // non-power-of-two: stripes straddle blocks
+        .pfs_buffer(512)
+        .build()
+        .unwrap();
+    TwoLevelStore::open(cfg).unwrap()
+}
+
+/// Three fixed seeds plus the CI-provided one (if any).
+fn seeds() -> Vec<u64> {
+    let mut v = vec![0xC0FFEE, 42, 20150831];
+    if let Ok(s) = std::env::var("TLSTORE_CRASH_SEED") {
+        match s.parse() {
+            Ok(n) => v.push(n),
+            Err(_) => panic!("TLSTORE_CRASH_SEED must be a u64, got `{s}`"),
+        }
+    }
+    v
+}
+
+#[test]
+fn tachyon_restart_over_orangefs_scenario() {
+    // the paper's restart story, end to end: write-through and
+    // checkpointed mode-(a) data survive the memory tier's death;
+    // uncheckpointed mode-(a) data is volatile and must NOT resurrect
+    let dir = TempDir::new("crash-restart").unwrap();
+    let durable = payload("jobs/out", 1, 5000);
+    let ckpt = payload("jobs/ckpt", 1, 3000);
+    let volatile = payload("jobs/tmp", 1, 2000);
+    {
+        let s = tls(dir.path());
+        s.write("jobs/out", &durable, WriteMode::WriteThrough).unwrap();
+        s.write("jobs/ckpt", &ckpt, WriteMode::MemOnly).unwrap();
+        s.checkpoint("jobs/ckpt").unwrap();
+        s.write("jobs/tmp", &volatile, WriteMode::MemOnly).unwrap();
+    } // restart: the memory tier evaporates
+    let s = tls(dir.path());
+    let report = s.recover().unwrap();
+    assert_eq!(s.read("jobs/out", ReadMode::TwoLevel).unwrap(), durable);
+    assert_eq!(s.read("jobs/ckpt", ReadMode::TwoLevel).unwrap(), ckpt);
+    assert!(
+        matches!(s.read("jobs/tmp", ReadMode::TwoLevel), Err(tlstore::Error::NotFound(_))),
+        "uncheckpointed mode-(a) data is volatile by contract"
+    );
+    let _ = report; // may or may not have spill debris depending on eviction
+    assert_no_residue(dir.path(), "restart scenario");
+}
+
+#[test]
+fn recovery_is_idempotent() {
+    let dir = TempDir::new("crash-idem").unwrap();
+    let w = Workload::default().put("k", 1, 2000, 300).put("k", 2, 1500, 256);
+    let outcome = {
+        let faulty = FaultStore::new(tls(dir.path()), FaultPlan::crash_at(OpKind::Append, 9));
+        run_to_crash(&faulty, &w)
+    };
+    assert!(outcome.crashed);
+    let s = tls(dir.path());
+    s.recover().unwrap();
+    // a second pass finds nothing left to do
+    assert!(s.recover().unwrap().is_clean(), "recover must be idempotent");
+    verify_after_recovery(&s, &outcome, true, "idempotence");
+    assert_no_residue(dir.path(), "idempotence");
+}
+
+#[test]
+fn crash_during_overwrite_preserves_committed_version_exactly() {
+    // pin the strictest case: v1 fully committed, v2 crashes at its
+    // commit boundary — after recovery v1 must be byte-identical, v2
+    // must be nowhere (not in the PFS, not in the cache)
+    let dir = TempDir::new("crash-ow").unwrap();
+    let w = Workload::default().put("k", 1, 4000, 512).put("k", 2, 4000, 512);
+    let outcome = {
+        // ceil(4000/512) = 8 appends per put; commit #1 is v2's
+        let faulty = FaultStore::new(tls(dir.path()), FaultPlan::crash_at(OpKind::Commit, 1));
+        run_to_crash(&faulty, &w)
+    };
+    assert!(outcome.crashed);
+    let s = tls(dir.path());
+    s.recover().unwrap();
+    assert_eq!(
+        s.read("k", ReadMode::TwoLevel).unwrap(),
+        payload("k", 1, 4000),
+        "old version must survive an overwrite crash byte-for-byte"
+    );
+    assert_eq!(s.read("k", ReadMode::Bypass).unwrap(), payload("k", 1, 4000));
+    assert_no_residue(dir.path(), "overwrite crash");
+}
+
+#[test]
+fn randomized_workloads_with_seeded_faults_recover_consistently() {
+    for seed in seeds() {
+        eprintln!("crash-recovery property: TLSTORE_CRASH_SEED={seed}");
+        for round in 0..8u64 {
+            let case_seed = seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let ctx = format!("seed {seed} round {round} (case {case_seed:#x})");
+            // random workload over a small key set: puts of random
+            // size/chunk, occasional deletes, repeated overwrites
+            let mut rng = Pcg32::new(case_seed, 0xC4A5);
+            let keys = ["w/a", "w/b", "w/c", "w/d"];
+            let mut versions = [0u64; 4];
+            let mut w = Workload::default();
+            for _ in 0..(3 + rng.gen_range(6)) {
+                let ki = rng.gen_range(4) as usize;
+                if rng.gen_range(5) == 0 {
+                    w = w.delete(keys[ki]);
+                } else {
+                    versions[ki] += 1;
+                    let size = rng.gen_range(3000) as usize;
+                    let chunk = 64 + rng.gen_range(512) as usize;
+                    w = w.put(keys[ki], versions[ki], size, chunk);
+                }
+            }
+            let dir = TempDir::new(&format!("crash-rand-{seed}-{round}")).unwrap();
+            let outcome = {
+                let faulty = FaultStore::new(tls(dir.path()), FaultPlan::seeded(case_seed));
+                run_to_crash(&faulty, &w)
+            };
+            // reboot + recover + invariant
+            let s = tls(dir.path());
+            s.recover().unwrap_or_else(|e| panic!("{ctx}: recover failed: {e}"));
+            verify_after_recovery(&s, &outcome, true, &ctx);
+            assert_no_residue(dir.path(), &ctx);
+            // the capacity accountant invariant holds after recovery and
+            // the verification reads (which re-warm the cache)
+            assert!(
+                s.mem().used() <= s.mem().capacity(),
+                "{ctx}: used {} > capacity {}",
+                s.mem().used(),
+                s.mem().capacity()
+            );
+        }
+    }
+}
+
+#[test]
+fn midcommit_rename_crash_leaves_recoverable_tree() {
+    // hand-crafted worst case for the PFS: a fresh-key commit died
+    // *between* datafile renames and the meta write — published-looking
+    // datafiles with no owning metadata, plus staging of a second writer
+    let dir = TempDir::new("crash-midcommit").unwrap();
+    {
+        let s = tls(dir.path());
+        s.write("live", &payload("live", 1, 2500), WriteMode::WriteThrough)
+            .unwrap();
+        let pfs_root = dir.path().join("pfs");
+        for server in 0..2 {
+            std::fs::write(
+                pfs_root.join(format!("server{server}")).join("ghost.df"),
+                b"renamed-before-meta",
+            )
+            .unwrap();
+        }
+        std::fs::write(pfs_root.join("server2").join("part.df.tmp-17"), b"staging").unwrap();
+        std::fs::write(pfs_root.join("meta").join("torn.meta.tmp"), b"size = 1\n").unwrap();
+    }
+    let s = tls(dir.path());
+    assert!(!s.exists("ghost"), "meta never landed → never visible");
+    let report = s.recover().unwrap();
+    assert_eq!(report.orphans_removed, 2, "{report}");
+    assert_eq!(report.temps_removed, 2, "{report}");
+    assert!(report.quarantined.is_empty(), "{report}");
+    assert_eq!(
+        s.read("live", ReadMode::TwoLevel).unwrap(),
+        payload("live", 1, 2500)
+    );
+    assert_no_residue(dir.path(), "midcommit");
+}
+
+#[test]
+fn fault_plan_cli_grammar_smoke() {
+    // the spec strings documented for --fault-plan parse to working plans
+    let dir = TempDir::new("crash-cli-plan").unwrap();
+    let plan = FaultPlan::parse("op=commit,kind=crash,after=0").unwrap();
+    let faulty = FaultStore::new(tls(dir.path()), plan);
+    let w = Workload::default().put("x", 1, 1000, 256);
+    let outcome = run_to_crash(&faulty, &w);
+    assert!(outcome.crashed);
+    assert!(faulty.crashed());
+}

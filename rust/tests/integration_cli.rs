@@ -63,6 +63,54 @@ fn unknown_command_and_flags_fail_loudly() {
 }
 
 #[test]
+fn recover_command_reports_and_repairs() {
+    let dir = TempDir::new("cli-rec").unwrap();
+    let root = dir.path().to_str().unwrap();
+    // teragen against the PFS backend does not need artifacts
+    let (ok, text) = run(&[
+        "teragen", "--root", root, "--backend", "pfs", "--records", "2000",
+    ]);
+    assert!(ok, "teragen: {text}");
+    // clean root: recover reports clean
+    let (ok, text) = run(&["recover", "--root", root, "--backend", "pfs"]);
+    assert!(ok, "recover: {text}");
+    assert!(text.contains("clean"), "{text}");
+    // plant writer debris, recover again
+    std::fs::write(dir.path().join("server0").join("k.df.tmp-9"), b"junk").unwrap();
+    let (ok, text) = run(&["recover", "--root", root, "--backend", "pfs"]);
+    assert!(ok, "recover: {text}");
+    assert!(text.contains("temps_removed=1"), "{text}");
+    assert!(!dir.path().join("server0").join("k.df.tmp-9").exists());
+}
+
+#[test]
+fn fault_plan_flag_injects_deterministically() {
+    let dir = TempDir::new("cli-fault").unwrap();
+    let root = dir.path().to_str().unwrap();
+    // crash the very first create: teragen must fail with the injected
+    // fault, not succeed silently
+    let (ok, text) = run(&[
+        "teragen",
+        "--root",
+        root,
+        "--backend",
+        "pfs",
+        "--records",
+        "2000",
+        "--fault-plan",
+        "op=create,kind=crash,after=0",
+    ]);
+    assert!(!ok, "teragen under a crash plan must fail: {text}");
+    assert!(text.contains("injected fault"), "{text}");
+    // a malformed plan is rejected up front
+    let (ok, text) = run(&[
+        "teragen", "--root", root, "--backend", "pfs", "--fault-plan", "kind=bogus",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("fault"), "{text}");
+}
+
+#[test]
 fn teragen_terasort_validate_pipeline_via_cli() {
     if !std::path::Path::new("artifacts/manifest.toml").exists() {
         eprintln!("artifacts/ not built — skipping CLI terasort");

@@ -7,11 +7,16 @@
 //! - layout mapping: segments tile the range exactly, round-robin balance
 //! - memstore: used ≤ capacity always; eviction victims carry exact bytes
 //! - two-level: mem_bytes + pfs_bytes read == bytes returned
+//! - crash consistency: randomized workload × randomized `FaultPlan` seed
+//!   → after crash + reboot + `recover()`, every key is fully-old,
+//!   fully-new, or absent, and `used ≤ capacity` still holds
 
+use tlstore::storage::fault::{FaultPlan, FaultStore};
 use tlstore::storage::layout::StripeLayout;
 use tlstore::storage::memstore::MemStore;
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
 use tlstore::storage::{ObjectStore, ReadMode, WriteMode};
+use tlstore::testing::crash::{assert_no_residue, run_to_crash, verify_after_recovery, Workload};
 use tlstore::testing::{proprun, PropConfig, TempDir};
 use tlstore::util::rng::Pcg32;
 
@@ -188,6 +193,81 @@ fn prop_memstore_capacity_never_exceeded() {
                 if m.used() > *cap {
                     return Err(format!("used {} > cap {cap}", m.used()));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Randomized workload + randomized `FaultPlan` seed: whatever the fault
+/// (injected error or simulated crash) and wherever it lands, after a
+/// reboot over the surviving tree plus `recover()`:
+///
+/// - every key reads fully-old, fully-new, or NotFound — never a prefix,
+///   never a resurrected uncommitted write (checked byte-for-byte);
+/// - no writer temp files survive anywhere under the store root;
+/// - the memory tier's global capacity accountant still holds
+///   (`used ≤ capacity`), including after the verification reads re-warm
+///   the cache through eviction pressure.
+#[test]
+fn prop_crash_plus_recovery_leaves_old_new_or_absent() {
+    let counter = std::sync::atomic::AtomicU64::new(0);
+    proprun(
+        "crash-recovery",
+        cfg(24, 16),
+        |rng, size| {
+            // a workload of 2..=2+size steps over 3 keys, and a fault seed
+            let steps = 2 + rng.gen_range(size as u32 + 1);
+            let mut versions = [0u64; 3];
+            let mut w = Workload::default();
+            for _ in 0..steps {
+                let ki = rng.gen_range(3) as usize;
+                let key = format!("p/{ki}");
+                if rng.gen_range(6) == 0 {
+                    w = w.delete(&key);
+                } else {
+                    versions[ki] += 1;
+                    let size = rng.gen_range(2500) as usize;
+                    let chunk = 32 + rng.gen_range(400) as usize;
+                    w = w.put(&key, versions[ki], size, chunk);
+                }
+            }
+            (w, rng.next_u64())
+        },
+        |(workload, fault_seed)| {
+            let case = counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let dir = TempDir::new(&format!("prop-crash-{case}"))
+                .map_err(|e| format!("tempdir: {e}"))?;
+            // a deliberately tight memory tier: staging and verification
+            // reads run under constant eviction pressure
+            let open = |root: &std::path::Path| {
+                TwoLevelStore::open(
+                    TlsConfig::builder(root)
+                        .mem_capacity(4 << 10)
+                        .block_size(512)
+                        .pfs_servers(3)
+                        .stripe_size(200)
+                        .pfs_buffer(256)
+                        .build()
+                        .unwrap(),
+                )
+                .unwrap()
+            };
+            let outcome = {
+                let faulty = FaultStore::new(open(dir.path()), FaultPlan::seeded(*fault_seed));
+                run_to_crash(&faulty, workload)
+            };
+            let store = open(dir.path());
+            store.recover().map_err(|e| format!("recover: {e}"))?;
+            let ctx = format!("prop case {case} fault_seed {fault_seed:#x}");
+            verify_after_recovery(&store, &outcome, true, &ctx);
+            assert_no_residue(dir.path(), &ctx);
+            if store.mem().used() > store.mem().capacity() {
+                return Err(format!(
+                    "capacity accountant violated: used {} > capacity {}",
+                    store.mem().used(),
+                    store.mem().capacity()
+                ));
             }
             Ok(())
         },

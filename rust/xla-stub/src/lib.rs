@@ -1,0 +1,136 @@
+//! API stub of the offline `xla` (xla_extension) bindings.
+//!
+//! Mirrors exactly the surface `tlstore`'s `pjrt` feature uses — enough
+//! for `cargo test --features pjrt` to compile and run anywhere. Every
+//! runtime entry point returns [`Error`] ("stub build"), so artifact
+//! loading fails gracefully and artifact-gated tests skip exactly as they
+//! do in a no-`pjrt` build. Swap this for the real crate via the path
+//! dependency in `rust/Cargo.toml` to execute AOT artifacts.
+
+use std::fmt;
+
+/// Error type standing in for the real crate's; carries only a message.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Self {
+        Error(format!(
+            "{what}: this is the xla API *stub* (compile-check build); point the \
+             `xla` path dependency at the offline xla_extension crate to execute"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes `tlstore` maps its manifest dtypes onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    U32,
+    S32,
+    F32,
+}
+
+/// Stub of the PJRT client; construction always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+/// Stub of a parsed HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub of an XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stub of a loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub of a device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub of a host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Self> {
+        Err(Error::stub("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_gracefully() {
+        let err = PjRtClient::cpu().err().expect("stub must refuse");
+        assert!(err.to_string().contains("stub"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0; 8]).is_err());
+    }
+}
