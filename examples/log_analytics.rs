@@ -1,30 +1,38 @@
-//! Log analytics on the two-level store: a MapReduce job whose reducers
-//! aggregate wide numeric event tables with the AOT-compiled Pallas
-//! column-stats kernel via PJRT — the second workload class the paper's
-//! introduction motivates (analytics over data staged in the memory tier).
+//! Log analytics on the two-level store, driven through the Job API v2:
+//! a [`tlstore::mapreduce::JobServer`] runs **two jobs concurrently**
+//! against one store —
 //!
-//! Pipeline: generate event tables → store (write-through) → MapReduce
-//! ([`tlstore::analytics`]) → verify the kernel-computed means against the
-//! generator's ground truth.
+//! 1. the two-round **log-sessionization pipeline**
+//!    ([`tlstore::workloads::sessions`]): interleaved event logs →
+//!    per-user sessions → session-length histogram, verified against the
+//!    generator's ground truth; and
+//! 2. (when `artifacts/` is built) the **kernel analytics job**: wide
+//!    numeric event tables aggregated by the AOT-compiled Pallas
+//!    column-stats kernel via PJRT, expressed as a single-round
+//!    [`tlstore::mapreduce::PipelineSpec`] over the same server.
+//!
+//! Every intermediate byte of both jobs spills through `.shuffle/`
+//! objects on the two-level store (the default spill threshold), so this
+//! example is also a live demonstration of the shuffle riding the
+//! paper's write-through and priority-read paths.
 //!
 //! Run: `cargo run --release --example log_analytics`
-//! Requires `make artifacts`.
+//! (`make artifacts` enables the kernel job; without it the example runs
+//! the sessionization pipeline alone.)
 
 use std::path::Path;
 use std::sync::Arc;
 
-use tlstore::analytics::{generate_tables, parse_report_line, run_analytics};
-use tlstore::mapreduce::Engine;
+use tlstore::analytics::{generate_tables, parse_report_line, AggReducer, RowMapper};
+use tlstore::mapreduce::{JobServerConfig, PipelineSpec};
 use tlstore::runtime::Runtime;
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
-use tlstore::storage::ObjectStore;
+use tlstore::storage::{ObjectStore, SHUFFLE_NS};
 use tlstore::testing::TempDir;
+use tlstore::workloads::sessions;
 
 fn main() -> tlstore::Result<()> {
     tlstore::util::logger::init();
-    let runtime = Arc::new(Runtime::load_dir(Path::new("artifacts"))?);
-    println!("PJRT: {}", runtime.platform());
-
     let dir = TempDir::new("log-analytics").unwrap();
     let cfg = TlsConfig::builder(dir.path())
         .mem_capacity(128 << 20)
@@ -33,44 +41,83 @@ fn main() -> tlstore::Result<()> {
         .stripe_size(256 << 10)
         .build()?;
     let store: Arc<dyn ObjectStore> = Arc::new(TwoLevelStore::open(cfg)?);
-
-    let tables = 12u32;
-    let rows = 6000usize;
-    let expected = generate_tables(store.as_ref(), "events/", tables, rows, 7)?;
-    println!("wrote {tables} tables × {rows} rows × 8 cols into the two-level store");
-
-    let engine = Engine::local();
-    let stats = run_analytics(
-        &engine,
+    let server = tlstore::mapreduce::JobServer::new(
         Arc::clone(&store),
-        Arc::clone(&runtime),
-        "events/",
-        "stats/",
-        4,
-    )?;
-    println!("{}", stats.report());
+        JobServerConfig {
+            max_concurrent_jobs: 2,
+            ..JobServerConfig::default()
+        },
+    );
 
-    // verify every table's c0 mean against the generator's ground truth
-    let mut verified = 0;
-    for key in store.list("stats/") {
-        let text = String::from_utf8(store.read(&key)?).expect("utf8 report");
-        print!("{text}");
-        for line in text.lines() {
-            let st = parse_report_line(line).expect("parseable report line");
-            let want = expected[st.table_id as usize][0];
-            assert!(
-                (st.mean[0] - want).abs() < 0.05,
-                "table {} c0: kernel {} vs generator {}",
-                st.table_id,
-                st.mean[0],
-                want
-            );
-            assert_eq!(st.rows as usize, rows);
-            verified += 1;
+    // ---- job 1: log sessionization (two rounds, no kernel needed) ------
+    let users = 24u32;
+    let bytes = sessions::generate_logs(store.as_ref(), "logs/in/", users, 60, 7)?;
+    println!("wrote {bytes} bytes of interleaved event logs for {users} users");
+    let session_job = server.submit(sessions::pipeline("logs/in/", "logs/out/", 4)?)?;
+    println!("submitted {} as {}", session_job.name(), session_job.id());
+
+    // ---- job 2: kernel analytics over event tables (needs artifacts) ---
+    let kernel_job = match Runtime::load_dir(Path::new("artifacts")) {
+        Ok(rt) => {
+            let runtime = Arc::new(rt);
+            println!("PJRT: {}", runtime.platform());
+            let tables = 12u32;
+            let rows = 6000usize;
+            let expected = generate_tables(store.as_ref(), "events/", tables, rows, 7)?;
+            let spec = PipelineSpec::builder("log-analytics")
+                .input("events/")
+                .output("stats/")
+                .split_size(u64::MAX) // rows must stay whole per table
+                .map(Arc::new(RowMapper))
+                .reduce(Arc::new(AggReducer { runtime }), 4)
+                .build()?;
+            let handle = server.submit(spec)?;
+            println!("submitted {} as {}", handle.name(), handle.id());
+            Some((handle, expected, tables, rows))
         }
+        Err(e) => {
+            println!("artifacts not loaded ({e}) — running sessionization only");
+            None
+        }
+    };
+
+    // ---- join + verify --------------------------------------------------
+    let stats = session_job.join()?;
+    println!("{}", stats.report());
+    assert!(stats.spilled_runs() > 0, "shuffle must ride the store");
+    let summary = sessions::verify_histogram(store.as_ref(), "logs/in/", "logs/out/")?;
+    for key in store.list("logs/out/") {
+        print!("{}", String::from_utf8_lossy(&store.read(&key)?));
     }
-    assert_eq!(verified, tables);
-    println!("\nall {verified} table means match the generator through the PJRT kernel");
+    println!("sessionization {summary}");
+
+    if let Some((handle, expected, tables, rows)) = kernel_job {
+        let stats = handle.join()?;
+        println!("{}", stats.report());
+        let mut verified = 0;
+        for key in store.list("stats/") {
+            let text = String::from_utf8(store.read(&key)?).expect("utf8 report");
+            print!("{text}");
+            for line in text.lines() {
+                let st = parse_report_line(line).expect("parseable report line");
+                let want = expected[st.table_id as usize][0];
+                assert!(
+                    (st.mean[0] - want).abs() < 0.05,
+                    "table {} c0: kernel {} vs generator {}",
+                    st.table_id,
+                    st.mean[0],
+                    want
+                );
+                assert_eq!(st.rows as usize, rows);
+                verified += 1;
+            }
+        }
+        assert_eq!(verified, tables);
+        println!("all {verified} table means match the generator through the PJRT kernel");
+    }
+
+    server.shutdown()?;
+    assert!(store.list(SHUFFLE_NS).is_empty(), "shuffle namespace clean");
     println!("log_analytics OK");
     Ok(())
 }

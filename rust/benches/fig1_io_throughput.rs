@@ -22,6 +22,7 @@ use std::time::Instant;
 
 use tlstore::bench::{header, Bencher};
 use tlstore::config::presets::{self, fig1_ratios, PAPER_CONSTANTS};
+use tlstore::mapreduce::{JobServer, JobServerConfig};
 use tlstore::storage::hdfs::HdfsLike;
 use tlstore::storage::memstore::MemStore;
 use tlstore::storage::pfs::Pfs;
@@ -29,6 +30,7 @@ use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
 use tlstore::storage::{ObjectStore, ReadMode, WriteMode};
 use tlstore::testing::TempDir;
 use tlstore::util::rng::Pcg32;
+use tlstore::workloads::wordcount;
 
 const SIZE: usize = 16 << 20; // per-op payload
 
@@ -100,6 +102,42 @@ fn sweep_tls(concurrent: bool, shards: usize, clients: usize, obj: usize, ops: u
     });
     let dt = t0.elapsed().as_secs_f64();
     (clients * ops * obj * 2) as f64 / 1e6 / dt
+}
+
+/// Run the wordcount→top-k pipeline with the shuffle either resident in
+/// coordinator heap (`spill = false`, threshold `u64::MAX`) or spilled
+/// through `.shuffle/` two-level objects (`spill = true`, threshold 0).
+/// Returns (wall seconds, shuffle records, bytes spilled).
+fn sweep_shuffle(spill: bool, docs: u32, words: usize) -> (f64, u64, u64) {
+    let dir = TempDir::new(&format!("fig1-shuffle-{spill}")).unwrap();
+    let cfg = TlsConfig::builder(dir.path())
+        .mem_capacity(64 << 20)
+        .block_size(256 << 10)
+        .pfs_servers(4)
+        .stripe_size(64 << 10)
+        .build()
+        .unwrap();
+    let store: Arc<dyn ObjectStore> = Arc::new(TwoLevelStore::open(cfg).unwrap());
+    wordcount::generate_text(store.as_ref(), "in/", docs, words, 3).unwrap();
+    let server = JobServer::new(
+        Arc::clone(&store),
+        JobServerConfig {
+            workers: 4,
+            containers_per_node: 4,
+            max_concurrent_jobs: 1,
+            shuffle_spill_threshold: if spill { 0 } else { u64::MAX },
+            ..JobServerConfig::default()
+        },
+    );
+    let t0 = Instant::now();
+    let stats = server
+        .submit(wordcount::pipeline("in/", "out/", 4, 10).unwrap())
+        .unwrap()
+        .join()
+        .unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    server.shutdown().unwrap();
+    (secs, stats.shuffle_records(), stats.spilled_bytes())
 }
 
 fn main() {
@@ -256,5 +294,37 @@ fn main() {
         new4.1,
         base4.1,
         if new4.1 > base4.1 { "OK" } else { "VIOLATION" }
+    );
+
+    // -- shuffle path: coordinator heap vs spilled through the tiers ------
+    let (docs, words) = if fast { (4u32, 1500usize) } else { (16, 4000) };
+    println!(
+        "\n== shuffle path (wordcount→top-k, {docs} docs × {words} words): heap vs .shuffle/ spill =="
+    );
+    println!(
+        "{:>16} {:>10} {:>14} {:>14}",
+        "shuffle", "wall s", "records", "spilled bytes"
+    );
+    let (heap_s, heap_rec, heap_spill) = sweep_shuffle(false, docs, words);
+    println!("{:>16} {heap_s:>10.3} {heap_rec:>14} {heap_spill:>14}", "heap");
+    let (sp_s, sp_rec, sp_spill) = sweep_shuffle(true, docs, words);
+    println!("{:>16} {sp_s:>10.3} {sp_rec:>14} {sp_spill:>14}", "spilled (tls)");
+    println!("\nshape check (shuffle routing):");
+    println!(
+        "  heap path spills nothing: {}",
+        if heap_spill == 0 { "OK" } else { "VIOLATION" }
+    );
+    println!(
+        "  spilled path routes the shuffle through .shuffle/ ({} B > 0): {}",
+        sp_spill,
+        if sp_spill > 0 { "OK" } else { "VIOLATION" }
+    );
+    println!(
+        "  identical records either way ({heap_rec} vs {sp_rec}): {}",
+        if heap_rec == sp_rec { "OK" } else { "VIOLATION" }
+    );
+    println!(
+        "  spill overhead: ×{:.2} wall time for storage-resident intermediates",
+        sp_s / heap_s.max(1e-9)
     );
 }

@@ -160,7 +160,7 @@ impl AggReducer {
 }
 
 impl Reducer for AggReducer {
-    fn reduce(&self, _p: u32, records: MergeIter, out: &mut Vec<u8>) -> Result<()> {
+    fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
         let mut current: Option<(Vec<u8>, Vec<f32>)> = None;
         for kv in records {
             let key = kv.key().to_vec();

@@ -73,6 +73,19 @@ pub struct EngineConfig {
     pub mem_shards: usize,
     /// Issue write-through's memory and PFS legs concurrently.
     pub concurrent_writethrough: bool,
+    /// Pipelines the [`crate::mapreduce::JobServer`] executes
+    /// concurrently; later submissions queue. `0` (the default) sizes
+    /// admission off the memory tier's capacity
+    /// ([`presets::tuning::default_max_concurrent_jobs`]).
+    pub max_concurrent_jobs: usize,
+    /// Spill a map task's shuffle output to `.shuffle/` objects once it
+    /// exceeds this many bytes. `0` (the default) spills everything —
+    /// all intermediate data rides the storage tiers; `u64::MAX`
+    /// reproduces the old coordinator-heap shuffle.
+    pub shuffle_spill_threshold: u64,
+    /// Window size (bytes) for shuffle spill writes and reducer merge
+    /// reads; must be > 0.
+    pub shuffle_chunk: u64,
     /// Directory holding AOT artifacts (HLO text + manifest).
     pub artifacts_dir: PathBuf,
     /// Optional fault-injection plan (crash drills / robustness tests):
@@ -103,6 +116,9 @@ impl Default for EngineConfig {
                 .unwrap_or(2),
             mem_shards: presets::tuning::default_mem_shards(),
             concurrent_writethrough: true,
+            max_concurrent_jobs: 0, // auto: sized off mem_capacity
+            shuffle_spill_threshold: 0, // spill everything through the tiers
+            shuffle_chunk: 1 << 20,
             artifacts_dir: PathBuf::from("artifacts"),
             fault_plan: None,
         }
@@ -173,6 +189,20 @@ impl EngineConfig {
         if let Some(v) = engine.get("concurrent_writethrough").and_then(Value::as_bool) {
             cfg.concurrent_writethrough = v;
         }
+        if let Some(v) = engine.get("max_concurrent_jobs").and_then(Value::as_int) {
+            if v < 0 {
+                return Err(Error::Config(format!(
+                    "max_concurrent_jobs must be >= 0 (0 = auto), got {v}"
+                )));
+            }
+            cfg.max_concurrent_jobs = v as usize;
+        }
+        if let Some(v) = get_bytes("shuffle_spill_threshold")? {
+            cfg.shuffle_spill_threshold = v;
+        }
+        if let Some(v) = get_bytes("shuffle_chunk")? {
+            cfg.shuffle_chunk = v;
+        }
         if let Some(v) = get_str("artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(v);
         }
@@ -212,6 +242,9 @@ impl EngineConfig {
         }
         if self.mem_shards == 0 {
             return Err(Error::Config("mem_shards must be > 0".into()));
+        }
+        if self.shuffle_chunk == 0 {
+            return Err(Error::Config("shuffle_chunk must be > 0".into()));
         }
         if self.eviction != "lru" && self.eviction != "lfu" {
             return Err(Error::Config(format!(
@@ -298,6 +331,27 @@ eviction = "lfu"
         let cfg = EngineConfig::from_toml_str("").unwrap();
         assert!(cfg.mem_shards >= 1);
         assert!(cfg.concurrent_writethrough);
+    }
+
+    #[test]
+    fn job_knobs_parse_and_validate() {
+        let cfg = EngineConfig::from_toml_str(
+            "[engine]\nmax_concurrent_jobs = 3\nshuffle_spill_threshold = \"8M\"\nshuffle_chunk = \"512k\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.max_concurrent_jobs, 3);
+        assert_eq!(cfg.shuffle_spill_threshold, 8 << 20);
+        assert_eq!(cfg.shuffle_chunk, 512 << 10);
+        // defaults: auto admission, spill-everything, 1 MiB windows
+        let cfg = EngineConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.max_concurrent_jobs, 0);
+        assert_eq!(cfg.shuffle_spill_threshold, 0);
+        assert_eq!(cfg.shuffle_chunk, 1 << 20);
+        // invalid values
+        assert!(EngineConfig::from_toml_str("[engine]\nshuffle_chunk = 0\n").is_err());
+        assert!(EngineConfig::from_toml_str("[engine]\nmax_concurrent_jobs = -1\n").is_err());
+        // 0 threshold is legal (it is the default)
+        EngineConfig::from_toml_str("[engine]\nshuffle_spill_threshold = 0\n").unwrap();
     }
 
     #[test]

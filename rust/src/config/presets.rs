@@ -117,6 +117,24 @@ pub mod tuning {
             .unwrap_or(4)
             .clamp(1, MAX_DEFAULT_MEM_SHARDS)
     }
+
+    /// Memory-tier bytes one admitted job is budgeted for: its in-flight
+    /// shuffle spill working set (write-through staging plus merge
+    /// read-back windows). Deliberately coarse — admission is a
+    /// throttle, not a reservation.
+    pub const MEM_PER_JOB: u64 = 64 << 20;
+
+    /// Upper bound on auto-sized concurrent jobs.
+    pub const MAX_DEFAULT_CONCURRENT_JOBS: usize = 8;
+
+    /// Default job-server admission width, sized off the memory tier:
+    /// one slot per [`MEM_PER_JOB`] of capacity, clamped to
+    /// `[1, MAX_DEFAULT_CONCURRENT_JOBS]`. Every running job streams its
+    /// shuffle through the tiers, so this is what keeps the aggregate
+    /// spill working set inside the Tachyon allocation.
+    pub fn default_max_concurrent_jobs(mem_capacity: u64) -> usize {
+        ((mem_capacity / MEM_PER_JOB) as usize).clamp(1, MAX_DEFAULT_CONCURRENT_JOBS)
+    }
 }
 
 /// Figure 1 ratios quoted in §2.2 (used as cross-checks in tests/benches):
@@ -155,6 +173,17 @@ mod tests {
     fn tuning_defaults_in_range() {
         let n = tuning::default_mem_shards();
         assert!(n >= 1 && n <= tuning::MAX_DEFAULT_MEM_SHARDS, "{n}");
+    }
+
+    #[test]
+    fn concurrent_jobs_scale_with_memory() {
+        assert_eq!(tuning::default_max_concurrent_jobs(0), 1);
+        assert_eq!(tuning::default_max_concurrent_jobs(64 << 20), 1);
+        assert_eq!(tuning::default_max_concurrent_jobs(256 << 20), 4);
+        assert_eq!(
+            tuning::default_max_concurrent_jobs(u64::MAX),
+            tuning::MAX_DEFAULT_CONCURRENT_JOBS
+        );
     }
 
     #[test]

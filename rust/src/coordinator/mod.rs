@@ -24,8 +24,9 @@ pub use router::{Router, RouterStats};
 use std::sync::Arc;
 
 use crate::error::Result;
+use crate::mapreduce::{JobServer, JobServerConfig};
 use crate::storage::tls::TwoLevelStore;
-use crate::storage::WriteMode;
+use crate::storage::{ObjectStore, WriteMode};
 
 /// Facade tying a [`TwoLevelStore`] to its background services.
 pub struct Coordinator {
@@ -81,6 +82,21 @@ impl Coordinator {
         &self.checkpointer
     }
 
+    /// The compute plane over this store: a [`JobServer`] whose admission
+    /// is sized off the memory tier's capacity (every running job streams
+    /// its shuffle through the tiers — see
+    /// [`crate::config::presets::tuning::default_max_concurrent_jobs`]).
+    pub fn job_server(&self) -> JobServer {
+        self.job_server_with(
+            JobServerConfig::default().sized_for_memory(self.store.config().mem_capacity),
+        )
+    }
+
+    /// The compute plane with explicit sizing/spill knobs.
+    pub fn job_server_with(&self, cfg: JobServerConfig) -> JobServer {
+        JobServer::new(Arc::clone(&self.store) as Arc<dyn ObjectStore>, cfg)
+    }
+
     /// Stop the background daemon (flushes first).
     pub fn shutdown(self) -> Result<()> {
         self.checkpointer.stop()
@@ -133,6 +149,50 @@ mod tests {
         assert_eq!(c.read("s").unwrap(), b"hello coordinator");
         let rs = c.router().stats();
         assert!(rs.mem_reads >= 1, "write-through data must be mem-resident");
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn coordinator_exposes_a_working_job_server() {
+        use crate::mapreduce::{
+            InputSplit, MapContext, Mapper, MergeIter, PipelineSpec, Reducer, KV,
+        };
+
+        struct IdMap;
+        impl Mapper for IdMap {
+            fn map(&self, _s: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+                for w in data.split(|b| *b == b' ').filter(|w| !w.is_empty()) {
+                    ctx.emit(0, KV::new(w, b""));
+                }
+                Ok(())
+            }
+        }
+        struct CatRed;
+        impl Reducer for CatRed {
+            fn reduce(&self, _p: u32, r: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
+                for kv in r {
+                    out.extend_from_slice(kv.key());
+                }
+                Ok(())
+            }
+        }
+
+        let dir = TempDir::new("coord-jobs").unwrap();
+        let c = mk(&dir);
+        c.write_sync("txt/a", b"c a b").unwrap();
+        let server = c.job_server();
+        assert!(server.config().max_concurrent_jobs >= 1);
+        let spec = PipelineSpec::builder("sorted")
+            .input("txt/")
+            .output("sorted/")
+            .map(Arc::new(IdMap))
+            .reduce(Arc::new(CatRed), 1)
+            .build()
+            .unwrap();
+        let stats = server.submit(spec).unwrap().join().unwrap();
+        assert!(stats.spilled_runs() > 0, "shuffle must ride the store");
+        assert_eq!(c.read("sorted/part-r-00000").unwrap(), b"abc");
+        server.shutdown().unwrap();
         c.shutdown().unwrap();
     }
 

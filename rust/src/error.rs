@@ -49,6 +49,13 @@ pub enum Error {
 
     InvalidArg(String),
 
+    /// The job was canceled — by [`crate::mapreduce::JobHandle::cancel`],
+    /// or by [`crate::mapreduce::JobServer::shutdown`] sweeping running
+    /// jobs. Carries the job name. Not a failure of the work itself: the
+    /// engine stops dispatching tasks, aborts in-flight output, and
+    /// deletes the job's shuffle namespace.
+    Canceled(String),
+
     /// A deliberately injected fault (see [`crate::storage::fault`]): the
     /// operation did not run against real state, it was failed (or the
     /// simulated process "crashed") by an active `FaultPlan`.
@@ -89,6 +96,7 @@ impl fmt::Display for Error {
             Error::Job(msg) => write!(f, "job failed: {msg}"),
             Error::Sim(msg) => write!(f, "simulation error: {msg}"),
             Error::InvalidArg(msg) => write!(f, "invalid argument: {msg}"),
+            Error::Canceled(job) => write!(f, "job canceled: {job}"),
             Error::Injected(msg) => write!(f, "injected fault: {msg}"),
             Error::RecoveryNeeded(msg) => write!(f, "recovery needed: {msg}"),
         }

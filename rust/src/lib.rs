@@ -20,7 +20,7 @@
 //! | Layer | Module | Role |
 //! |---|---|---|
 //! | L3 | [`storage`] | lock-striped memory tier + parallel striped PFS tier + two-level store |
-//! | L3 | [`coordinator`], [`mapreduce`], [`terasort`] | checkpointing/prefetch, engine, workload |
+//! | L3 | [`coordinator`], [`mapreduce`], [`terasort`], [`workloads`] | checkpointing/prefetch, job server + pipelines, workloads |
 //! | L3 | [`model`], [`sim`] | §4 analytic models + cluster simulator |
 //! | L3 | [`runtime`] | PJRT: load + execute AOT artifacts (stubbed without the `pjrt` feature) |
 //! | L2/L1 | `python/compile/` | JAX graph + Pallas kernels (build time) |
@@ -38,6 +38,16 @@
 //! The knobs thread through [`config::EngineConfig`] / the
 //! [`storage::tls::TlsConfig`] builder; `docs/ARCHITECTURE.md` documents
 //! the data path and invariants.
+//!
+//! The compute plane rides the same streams: [`mapreduce::JobServer`]
+//! accepts multi-stage [`mapreduce::PipelineSpec`] jobs
+//! (`map → reduce → map → reduce…`), runs several concurrently with
+//! admission sized off the memory tier, and **spills every shuffle
+//! through `.shuffle/` objects** on the two-level store — intermediate
+//! job data takes the paper's write-through path in and the priority
+//! read path out, instead of living in coordinator heap. `tlstore job
+//! submit --workload wordcount-topk|log-sessions` drives the built-in
+//! scenario pipelines ([`workloads`]).
 //!
 //! ## Quickstart
 //!
@@ -87,5 +97,6 @@ pub mod storage;
 pub mod terasort;
 pub mod testing;
 pub mod util;
+pub mod workloads;
 
 pub use error::{Error, Result};

@@ -5,13 +5,18 @@
 //! tlstore teragen   --root DIR --backend tls|pfs|hdfs --records N
 //! tlstore terasort  --root DIR --backend tls|pfs|hdfs --reducers R
 //! tlstore validate  --root DIR --backend tls|pfs|hdfs
+//! tlstore job submit    --workload wordcount-topk|log-sessions [--jobs N]
+//! tlstore job status    --root DIR       (shuffle residue of a crashed root)
+//! tlstore job workloads                  (list built-in pipelines)
 //! tlstore model     [--pfs-aggregate MB/s] [--f 0.2]      (Figure 5)
 //! tlstore sim       [--backend ...] [--nodes N] [--data-nodes M] (Figure 7)
 //! tlstore mountain                                        (Figure 6, sim)
 //! ```
 //!
 //! Storage roots persist between invocations: `teragen`, `terasort`, and
-//! `validate` compose into the paper's §5.3 pipeline.
+//! `validate` compose into the paper's §5.3 pipeline. `job submit` drives
+//! named multi-stage pipelines through the [`tlstore::mapreduce::JobServer`],
+//! spilling every shuffle through the store's `.shuffle/` namespace.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -20,7 +25,7 @@ use tlstore::cli::Args;
 use tlstore::config::presets;
 use tlstore::config::Backend;
 use tlstore::error::{Error, Result};
-use tlstore::mapreduce::Engine;
+use tlstore::mapreduce::{Engine, JobServer, JobServerConfig};
 use tlstore::model::CaseStudyParams;
 use tlstore::runtime::Runtime;
 use tlstore::sim::{simulate_terasort, BackendKind, SimConstants};
@@ -271,6 +276,154 @@ fn cmd_analytics(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `tlstore job <submit|status|workloads>` — the Job API v2 surface.
+fn cmd_job(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("submit") => cmd_job_submit(args),
+        Some("status") => cmd_job_status(args),
+        Some("workloads") | None => {
+            args.finish()?;
+            println!("built-in workloads (tlstore job submit --workload NAME):");
+            for w in tlstore::workloads::NamedWorkload::all() {
+                println!("  {:<16} {}", w.name(), w.description());
+            }
+            Ok(())
+        }
+        Some(other) => Err(Error::InvalidArg(format!(
+            "unknown job subcommand `{other}` (submit|status|workloads)"
+        ))),
+    }
+}
+
+/// Generate, submit, watch, and verify one or more named pipelines.
+///
+/// Two sizing paths: `--config engine.toml` loads an
+/// [`tlstore::config::EngineConfig`] and derives both the two-level
+/// store and the server knobs from it (`max_concurrent_jobs`,
+/// `shuffle_spill_threshold`, `shuffle_chunk` flow from `[engine]`);
+/// otherwise the storage/server flags apply individually.
+fn cmd_job_submit(args: &Args) -> Result<()> {
+    let workload = tlstore::workloads::NamedWorkload::parse(&args.get("workload", "wordcount-topk"))?;
+    let jobs = args.get_parse("jobs", 1usize)?.max(1);
+    let scale = args.get_parse("scale", 8u64)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let reducers = args.get_parse("reducers", 4u32)?;
+    let config_path = args.get("config", "");
+    let (store, cfg): (Arc<dyn ObjectStore>, JobServerConfig) = if config_path.is_empty() {
+        let store = open_store(args)?;
+        let workers = match args.get_parse("workers", 0usize)? {
+            0 => JobServerConfig::default().workers,
+            n => n,
+        };
+        let cfg = JobServerConfig {
+            workers,
+            containers_per_node: workers,
+            max_concurrent_jobs: args.get_parse(
+                "max-jobs",
+                presets::tuning::default_max_concurrent_jobs(
+                    args.get_bytes("mem-capacity", 256 << 20)?,
+                ),
+            )?,
+            shuffle_spill_threshold: args.get_bytes("spill-threshold", 0)?,
+            shuffle_chunk: args.get_bytes("shuffle-chunk", 1 << 20)? as usize,
+            ..JobServerConfig::default()
+        };
+        (store, cfg)
+    } else {
+        let engine_cfg = tlstore::config::EngineConfig::from_file(std::path::Path::new(&config_path))?;
+        let store: Arc<dyn ObjectStore> = Arc::new(TwoLevelStore::open(
+            tlstore::storage::tls::TlsConfig::from_engine(&engine_cfg),
+        )?);
+        (store, JobServerConfig::from_engine(&engine_cfg))
+    };
+    args.finish()?;
+
+    let server = JobServer::new(Arc::clone(&store), cfg);
+    let mut handles = Vec::new();
+    for j in 0..jobs {
+        // one namespace per submission so concurrent jobs stay isolated
+        let root = format!("jobs/{}-{j}/", workload.name());
+        let bytes = workload.generate(store.as_ref(), &root, scale, seed ^ j as u64)?;
+        println!("generated {bytes} input bytes under {root}in/");
+        let handle = server.submit(workload.pipeline(&root, reducers)?)?;
+        println!("submitted {} as {}", handle.name(), handle.id());
+        handles.push((root, handle));
+    }
+    // watch until every job is terminal
+    loop {
+        let mut all_done = true;
+        for (_, h) in &handles {
+            let status = h.status();
+            if !status.is_terminal() {
+                all_done = false;
+            }
+            let p = h.progress();
+            println!(
+                "  {}: {:?} stage {}/{} tasks {}/{}",
+                h.id(),
+                status,
+                p.stage.min(p.stages),
+                p.stages,
+                p.tasks_done,
+                p.tasks_total
+            );
+        }
+        if all_done {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    let mut failed = 0;
+    for (root, h) in &handles {
+        match h.join() {
+            Ok(stats) => {
+                println!("{}", stats.report());
+                println!("verify: {}", workload.verify(store.as_ref(), root)?);
+            }
+            Err(e) => {
+                failed += 1;
+                eprintln!("{}: {e}", h.id());
+            }
+        }
+    }
+    server.shutdown()?;
+    if failed > 0 {
+        return Err(Error::Job(format!("{failed} job(s) failed")));
+    }
+    println!(
+        "shuffle namespace clean: {}",
+        store.list(tlstore::storage::SHUFFLE_NS).is_empty()
+    );
+    Ok(())
+}
+
+/// Inspect `.shuffle/` residue of a (possibly crashed) root.
+fn cmd_job_status(args: &Args) -> Result<()> {
+    let store = open_store(args)?;
+    args.finish()?;
+    let residue = store.list(tlstore::storage::SHUFFLE_NS);
+    if residue.is_empty() {
+        println!("no shuffle residue: no job is mid-flight in this root");
+        return Ok(());
+    }
+    let mut per_job: std::collections::BTreeMap<&str, (usize, u64)> = Default::default();
+    for key in &residue {
+        let job = key[tlstore::storage::SHUFFLE_NS.len()..]
+            .split('/')
+            .next()
+            .unwrap_or("?");
+        let e = per_job.entry(job).or_default();
+        e.0 += 1;
+        e.1 += store.size(key).unwrap_or(0);
+    }
+    println!("shuffle residue ({} objects) — a job crashed mid-flight:", residue.len());
+    for (job, (objects, bytes)) in per_job {
+        println!("  {job}: {objects} objects, {bytes} bytes");
+    }
+    println!("run `tlstore recover` on this root to reap it");
+    Ok(())
+}
+
 fn cmd_recover(args: &Args) -> Result<()> {
     let backend = Backend::parse(&args.get("backend", "tls"))?;
     let root = PathBuf::from(args.get("root", "/tmp/tlstore"));
@@ -335,7 +488,9 @@ fn cmd_mountain(args: &Args) -> Result<()> {
 }
 
 fn usage() -> String {
-    "usage: tlstore <info|teragen|terasort|validate|analytics|recover|model|sim|mountain> [flags]\n\
+    "usage: tlstore <info|teragen|terasort|validate|analytics|job|recover|model|sim|mountain> [flags]\n\
+     `tlstore job submit --workload wordcount-topk|log-sessions [--jobs N]` runs named\n\
+     multi-stage pipelines through the JobServer (shuffle spilled via .shuffle/);\n\
      storage commands accept --fault-plan \"op=commit,kind=crash,...\" (fault drills)\n\
      and `tlstore recover --root DIR --backend tls|pfs|hdfs` repairs a crashed root;\n\
      see `tlstore <cmd> --help` equivalents in README.md"
@@ -357,6 +512,7 @@ fn main() {
         Some("terasort") => cmd_terasort(&args),
         Some("validate") => cmd_validate(&args),
         Some("analytics") => cmd_analytics(&args),
+        Some("job") => cmd_job(&args),
         Some("recover") => cmd_recover(&args),
         Some("model") => cmd_model(&args),
         Some("sim") => cmd_sim(&args),

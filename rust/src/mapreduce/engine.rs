@@ -1,22 +1,28 @@
-//! The MapReduce engine: drives map → shuffle → reduce over an
-//! [`ObjectStore`] with a worker pool, locality accounting, and per-phase
-//! timings (the quantities behind Figure 7(f–g)).
+//! The one-shot engine: the v1 `run(store, spec, mapper, reducer)` entry
+//! point, now a **thin adapter** over the Job API v2.
+//!
+//! [`Engine::run`] builds a single-round [`PipelineSpec`] from the v1
+//! [`JobSpec`], submits it to a transient [`JobServer`] sharing the
+//! engine's worker pool, joins, and collapses the [`PipelineStats`] back
+//! into the v1 [`JobStats`] shape. Everything the v2 path guarantees
+//! applies here too: map tasks read splits through pooled buffers, sorted
+//! runs spill through `.shuffle/` objects (mode-(c) write-through on the
+//! two-level backend), reducers merge them back through windowed reader
+//! handles, and the locality plan drives dispatch order. Long-lived
+//! multi-job callers should hold a [`JobServer`] directly.
 
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
-use super::scheduler::LocalityScheduler;
-use super::shuffle::{MergeIter, Run};
-use super::{close_context, plan_splits, InputSplit, JobSpec, MapContext, Mapper, Reducer};
-use crate::error::{Error, Result};
-use crate::storage::{read_full_at, ObjectReader as _, ObjectStore, ObjectWriter as _};
+use super::pipeline::PipelineSpec;
+use super::server::{JobServer, JobServerConfig};
+use super::{JobSpec, Mapper, Reducer};
+use crate::error::Result;
+use crate::storage::ObjectStore;
 use crate::util::pool::ThreadPool;
 
-/// Chunk size for streaming reducer output through an
-/// [`crate::storage::ObjectWriter`] (the paper's §3.2 app-side buffer).
-const OUTPUT_CHUNK: usize = 1 << 20;
-
-/// Per-job result metrics.
+/// Per-job result metrics (the v1 shape; produced by collapsing
+/// [`PipelineStats`](super::PipelineStats)).
 #[derive(Debug, Clone)]
 pub struct JobStats {
     pub job: String,
@@ -27,6 +33,8 @@ pub struct JobStats {
     pub input_bytes: u64,
     pub output_bytes: u64,
     pub shuffle_records: u64,
+    /// Splits that *executed* on their preferred node (counted from the
+    /// dispatch the scheduler actually drove, not a discarded plan).
     pub locality_hits: usize,
 }
 
@@ -58,21 +66,26 @@ impl JobStats {
     }
 }
 
-/// Engine configuration: worker pool size models the paper's containers.
+/// One-shot job runner: a worker pool plus the logical cluster geometry
+/// the locality scheduler models (single-host runs still model the
+/// paper's 16-node placement).
 pub struct Engine {
-    pool: ThreadPool,
-    /// Logical node count for the locality scheduler (single-host runs
-    /// still model the paper's 16-node placement).
+    pool: Arc<ThreadPool>,
     pub nodes: usize,
     pub containers_per_node: usize,
+    /// Spill threshold forwarded to the pipeline executor (`0`, the
+    /// default, routes every map task's runs through `.shuffle/`
+    /// objects; `u64::MAX` reproduces the coordinator-heap shuffle).
+    spill_threshold: u64,
 }
 
 impl Engine {
     pub fn new(workers: usize, nodes: usize, containers_per_node: usize) -> Self {
         Self {
-            pool: ThreadPool::new(workers),
+            pool: Arc::new(ThreadPool::new(workers)),
             nodes,
             containers_per_node,
+            spill_threshold: 0,
         }
     }
 
@@ -85,8 +98,17 @@ impl Engine {
         Self::new(n, 1, n)
     }
 
-    /// Run a job: plan splits, map with locality scheduling, shuffle,
-    /// reduce, write `part-r-*` outputs.
+    /// Override the shuffle spill threshold (bytes of map-task output
+    /// kept resident before spilling; the A/B knob the fig1 bench
+    /// sweeps).
+    pub fn spill_threshold(mut self, bytes: u64) -> Self {
+        self.spill_threshold = bytes;
+        self
+    }
+
+    /// Run a v1 job: adapt it into a single-round pipeline, execute it
+    /// through a transient [`JobServer`] over this engine's pool, and
+    /// collapse the stats.
     pub fn run(
         &self,
         store: Arc<dyn ObjectStore>,
@@ -94,116 +116,42 @@ impl Engine {
         mapper: Arc<dyn Mapper>,
         reducer: Arc<dyn Reducer>,
     ) -> Result<JobStats> {
-        let splits = plan_splits(store.as_ref(), spec.input_prefix, spec.split_size, self.nodes)?;
-        if splits.is_empty() {
-            return Err(Error::Job(format!(
-                "{}: no input under `{}`",
-                spec.name, spec.input_prefix
-            )));
-        }
-        let scheduler = LocalityScheduler::new(self.nodes, self.containers_per_node);
-        let (_assignments, locality_hits) = scheduler.assign(&splits);
-
-        // ---- map phase ----------------------------------------------------
-        let t_map = Instant::now();
-        let num_parts = spec.num_reducers.max(1);
-        let splits_arc: Arc<Vec<InputSplit>> = Arc::new(splits);
-        let splits_for_map = Arc::clone(&splits_arc);
-        let store_for_map = Arc::clone(&store);
-        let mapper = Arc::clone(&mapper);
-
-        // each map task returns (input_bytes, per-partition runs)
-        let map_outputs: Vec<Result<(u64, Vec<Vec<Run>>)>> = self
-            .pool
-            .map(splits_arc.len(), move |i| {
-                let split = &splits_for_map[i];
-                // handle read: one open per split, then a single read_at
-                // pass into a caller-owned buffer sized to the split
-                // (zero-copy off the memory tier's Arc blocks)
-                let reader = store_for_map.open(&split.object)?;
-                let end = (split.offset + split.len).min(reader.len());
-                let take = end.saturating_sub(split.offset) as usize;
-                let mut data = vec![0u8; take];
-                read_full_at(reader.as_ref(), split.offset, &mut data)?;
-                drop(reader);
-                let mut ctx = MapContext::new(num_parts);
-                mapper.map(split, &data, &mut ctx)?;
-                Ok((data.len() as u64, close_context(ctx)))
-            })
-            .map_err(Error::Job)?;
-
-        let mut input_bytes = 0u64;
-        let mut shuffle: Vec<Vec<Run>> = (0..num_parts).map(|_| Vec::new()).collect();
-        let mut shuffle_records = 0u64;
-        for out in map_outputs {
-            let (bytes, runs) = out?;
-            input_bytes += bytes;
-            for (p, prt) in runs.into_iter().enumerate() {
-                for run in prt {
-                    shuffle_records += run.len() as u64;
-                    shuffle[p].push(run);
-                }
-            }
-        }
-        let map_time = t_map.elapsed();
-
-        // ---- reduce phase --------------------------------------------------
-        let t_reduce = Instant::now();
-        let shuffle = Arc::new(Mutex::new(
-            shuffle.into_iter().map(Some).collect::<Vec<Option<Vec<Run>>>>(),
-        ));
-        let store_for_reduce = Arc::clone(&store);
-        let reducer = Arc::clone(&reducer);
-        let out_prefix = spec.output_prefix.to_string();
-
-        let reduce_outputs: Vec<Result<u64>> = self
-            .pool
-            .map(num_parts as usize, move |p| {
-                let runs = shuffle.lock().unwrap()[p]
-                    .take()
-                    .expect("partition taken once");
-                let merged = MergeIter::new(runs);
-                let mut out = Vec::new();
-                reducer.reduce(p as u32, merged, &mut out)?;
-                // stream the partition out through a writer handle: the
-                // two-level backend drives both §3.2 legs per chunk, and a
-                // reducer that fails mid-write publishes nothing (commit
-                // is atomic)
-                let key = format!("{}part-r-{:05}", out_prefix, p);
-                let mut w = store_for_reduce.create(&key)?;
-                for chunk in out.chunks(OUTPUT_CHUNK) {
-                    w.append(chunk)?;
-                }
-                w.commit()?;
-                Ok(out.len() as u64)
-            })
-            .map_err(Error::Job)?;
-
-        let mut output_bytes = 0;
-        for r in reduce_outputs {
-            output_bytes += r?;
-        }
-        let reduce_time = t_reduce.elapsed();
-
-        Ok(JobStats {
-            job: spec.name.to_string(),
-            splits: splits_arc.len(),
-            reducers: num_parts,
-            map_time,
-            reduce_time,
-            input_bytes,
-            output_bytes,
-            shuffle_records,
-            locality_hits,
-        })
+        let pipeline = PipelineSpec::builder(spec.name)
+            .input(spec.input_prefix)
+            .output(spec.output_prefix)
+            .split_size(spec.split_size)
+            .map(mapper)
+            // v1 clamped a zero reducer count to 1; keep that contract
+            .reduce(reducer, spec.num_reducers.max(1))
+            .build()?;
+        let server = JobServer::with_pool(
+            store,
+            Arc::clone(&self.pool),
+            JobServerConfig {
+                workers: self.pool.size(),
+                nodes: self.nodes.max(1),
+                containers_per_node: self.containers_per_node.max(1),
+                max_concurrent_jobs: 1,
+                shuffle_spill_threshold: self.spill_threshold,
+                ..JobServerConfig::default()
+            },
+        );
+        let handle = server.submit(pipeline)?;
+        let joined = handle.join();
+        let shutdown = server.shutdown();
+        let stats = joined?;
+        shutdown?;
+        Ok(stats.to_job_stats())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
     use crate::mapreduce::tests::test_store;
-    use crate::mapreduce::KV;
+    use crate::mapreduce::{InputSplit, MapContext, MergeIter, KV};
+    use crate::storage::SHUFFLE_NS;
 
     /// word-count-ish job: input objects hold whitespace-separated words;
     /// mapper emits (word, 1); reducer sums counts per word.
@@ -223,7 +171,7 @@ mod tests {
 
     struct WcReducer;
     impl Reducer for WcReducer {
-        fn reduce(&self, _p: u32, records: MergeIter, out: &mut Vec<u8>) -> Result<()> {
+        fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
             let mut cur: Option<(Vec<u8>, u64)> = None;
             for kv in records {
                 match &mut cur {
@@ -277,6 +225,36 @@ mod tests {
         assert!(all.contains("apple 3"), "{all}");
         assert!(all.contains("banana 3"), "{all}");
         assert!(all.contains("cherry 1"), "{all}");
+        // the adapter runs on the v2 path: shuffle namespace was used and
+        // is clean again
+        assert!(store.list(SHUFFLE_NS).is_empty());
+    }
+
+    #[test]
+    fn heap_shuffle_threshold_matches_spilled_results() {
+        // u64::MAX threshold = the old coordinator-heap shuffle; outputs
+        // must be byte-identical to the spilled path
+        let spilled = Arc::new(test_store());
+        spilled.write("in/a", b"e d c b a e").unwrap();
+        let heap = Arc::new(test_store());
+        heap.write("in/a", b"e d c b a e").unwrap();
+        let spec = |_n| JobSpec {
+            name: "ab",
+            input_prefix: "in/",
+            output_prefix: "out/",
+            num_reducers: 2,
+            split_size: 1 << 20,
+        };
+        Engine::new(2, 1, 2)
+            .run(spilled.clone() as Arc<dyn ObjectStore>, &spec(0), Arc::new(WcMapper), Arc::new(WcReducer))
+            .unwrap();
+        Engine::new(2, 1, 2)
+            .spill_threshold(u64::MAX)
+            .run(heap.clone() as Arc<dyn ObjectStore>, &spec(1), Arc::new(WcMapper), Arc::new(WcReducer))
+            .unwrap();
+        for key in spilled.list("out/") {
+            assert_eq!(spilled.read(&key).unwrap(), heap.read(&key).unwrap(), "{key}");
+        }
     }
 
     #[test]

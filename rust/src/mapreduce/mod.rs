@@ -1,10 +1,28 @@
-//! A miniature MapReduce engine — the "Hadoop" the paper deploys over its
-//! storage backends.
+//! The compute plane: a multi-job MapReduce/dataflow engine — the
+//! "Hadoop" the paper deploys over its storage backends, grown into a
+//! **Job API v2**.
 //!
-//! Scope matches what the paper's evaluation needs: input splits, a
-//! locality-aware scheduler ([`scheduler`]), mapper containers running on
-//! a worker pool, a sorted shuffle ([`shuffle`]), reducer containers, and
-//! per-phase metrics (the running-time bars of Figure 7(f–g)).
+//! Two entry points share one executor:
+//!
+//! - [`JobServer`] (v2): build a [`PipelineSpec`] — a chain of
+//!   `map → reduce → map → reduce…` stages — and [`JobServer::submit`]
+//!   it. Multiple jobs run concurrently over one store and one worker
+//!   pool, throttled by admission control sized off the memory tier and
+//!   by per-job [`ContainerLedger`] shares; the returned [`JobHandle`]
+//!   exposes `status`/`progress`/`stats`/`cancel`/`join`.
+//! - [`Engine::run`] (v1): the original one-shot
+//!   `run(store, spec, mapper, reducer)`, now a thin adapter that wraps
+//!   the v1 [`JobSpec`] in a single-round pipeline and drives it through
+//!   a transient server.
+//!
+//! On both paths the shuffle **rides the storage hierarchy**: map tasks
+//! spill their sorted runs into `.shuffle/<job>/<stage>/` objects through
+//! v2 writer handles ([`spill`]) and reducers k-way-merge them back
+//! through windowed reader handles ([`shuffle`]) — intermediate job data
+//! takes the same two-level path (write-through in, priority reads out)
+//! the paper routes job input and output through. Split placement comes
+//! from the locality scheduler ([`scheduler`]), whose assignments drive
+//! the actual dispatch order.
 //!
 //! Mappers may emit unsorted records (the framework run-sorts them at
 //! shuffle time) **or** pre-sorted runs — the TeraSort mapper uses the
@@ -12,12 +30,20 @@
 //! through PJRT ([`crate::terasort`]).
 
 pub mod engine;
+pub mod pipeline;
 pub mod scheduler;
+pub mod server;
 pub mod shuffle;
+pub mod spill;
 
 pub use engine::{Engine, JobStats};
-pub use scheduler::{Assignment, LocalityScheduler};
-pub use shuffle::{merge_runs, MergeIter, Run};
+pub use pipeline::{
+    JobProgress, PipelineBuilder, PipelineSpec, PipelineStats, StageKind, StageStats,
+};
+pub use scheduler::{Assignment, ContainerLedger, LocalityScheduler};
+pub use server::{JobHandle, JobServer, JobServerConfig, JobStatus};
+pub use shuffle::{merge_runs, MergeError, MergeIter, Run, RunSource};
+pub use spill::{spill_run, SpillCursor, SpillMeta};
 
 use crate::error::{Error, Result};
 use crate::storage::ObjectStore;
@@ -132,11 +158,18 @@ pub trait Mapper: Send + Sync {
 
 /// Reduce task: consume the merged, key-ordered record stream of one
 /// partition and produce the partition's output object.
+///
+/// The stream may be backed by heap-resident runs, by `.shuffle/` spill
+/// objects streamed through windowed reads, or a mix — reducers cannot
+/// tell. (Spill read errors end the iterator early; the engine checks the
+/// merge's error slot after `reduce` returns and fails the task before
+/// committing its output.)
 pub trait Reducer: Send + Sync {
-    fn reduce(&self, partition: u32, records: MergeIter, out: &mut Vec<u8>) -> Result<()>;
+    fn reduce(&self, partition: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()>;
 }
 
-/// Job description handed to [`Engine::run`].
+/// Job description handed to [`Engine::run`] (the v1 shape; the v2
+/// equivalent is [`PipelineSpec`]).
 pub struct JobSpec<'a> {
     pub name: &'a str,
     /// Input objects: every object with this prefix becomes input.

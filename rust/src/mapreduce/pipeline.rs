@@ -1,0 +1,1115 @@
+//! Job API v2: multi-stage dataflow pipelines whose shuffle rides the
+//! storage hierarchy.
+//!
+//! A [`PipelineSpec`] describes a chain of `map → reduce → map → reduce…`
+//! stages over one [`ObjectStore`]: stage 0 maps the job's input prefix,
+//! each reduce writes `part-r-*` objects that feed the next map, and the
+//! final reduce lands under the job's output prefix. Between a map and
+//! its reduce, intermediate data is **spilled through the store**: map
+//! tasks serialize their sorted runs into `.shuffle/<job>/s<round>/`
+//! objects via v2 writer handles ([`super::spill`]) — on the two-level
+//! backend that is the paper's mode-(c) write-through path, honoring
+//! `concurrent_writethrough` — and reducers k-way-merge them back through
+//! windowed reader handles. The coordinator heap never holds the shuffle
+//! (unless a task's output fits under `shuffle_spill_threshold`).
+//!
+//! Execution is deterministic per spec: splits are planned, placed by the
+//! [`LocalityScheduler`], and dispatched in the scheduler's wave order
+//! (locality drives execution, not just accounting). The executor is
+//! driven either synchronously by the [`Engine`](super::Engine) adapter
+//! or concurrently — many jobs over one worker pool — by the
+//! [`JobServer`](super::JobServer).
+//!
+//! Cleanup contract: whatever the outcome (success, failure, cancel), the
+//! executor deletes `.shuffle/<job>/` before returning; a *crash* instead
+//! leaves residue for [`crate::storage::Recover::recover`] to reap.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::storage::buffer::BufferPool;
+use crate::storage::{read_full_at, ObjectStore, SHUFFLE_NS};
+use crate::util::pool::ThreadPool;
+
+use super::scheduler::{ContainerLedger, LocalityScheduler};
+use super::shuffle::{MergeIter, RunSource};
+use super::spill::{spill_run, SpillCursor, SpillMeta};
+use super::{close_context, plan_splits, JobStats, MapContext, Mapper, Reducer, Run};
+
+/// Chunk size for streaming reducer output through an
+/// [`crate::storage::ObjectWriter`] (the paper's §3.2 app-side buffer).
+pub(crate) const OUTPUT_CHUNK: usize = 1 << 20;
+
+/// What a pipeline stage does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Split + map + spill sorted runs to the shuffle namespace.
+    Map,
+    /// Merge the preceding map's runs and write `part-r-*` outputs.
+    Reduce,
+}
+
+/// One stage of a pipeline (mapper or reducer plus its knobs).
+pub(crate) enum Stage {
+    Map {
+        mapper: Arc<dyn Mapper>,
+        /// Stage-local split size; `None` = the spec default for stage 0,
+        /// unsplit objects for later stages (their inputs are `part-r-*`
+        /// objects whose record framing a byte split would tear).
+        split_size: Option<u64>,
+    },
+    Reduce {
+        reducer: Arc<dyn Reducer>,
+        partitions: u32,
+    },
+}
+
+/// Job description v2: a named multi-stage pipeline. Build with
+/// [`PipelineSpec::builder`]; run via
+/// [`JobServer::submit`](super::JobServer::submit) or the one-shot
+/// [`Engine::run`](super::Engine::run) adapter.
+pub struct PipelineSpec {
+    pub(crate) name: String,
+    pub(crate) input_prefix: String,
+    pub(crate) output_prefix: String,
+    pub(crate) split_size: u64,
+    pub(crate) stages: Vec<Stage>,
+}
+
+impl PipelineSpec {
+    /// Start building a pipeline named `name`.
+    pub fn builder(name: &str) -> PipelineBuilder {
+        PipelineBuilder {
+            name: name.to_string(),
+            input_prefix: String::new(),
+            output_prefix: String::new(),
+            split_size: 8 << 20,
+            stages: Vec::new(),
+        }
+    }
+
+    /// Job name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of stages (maps + reduces).
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Map→reduce rounds (`num_stages / 2`).
+    pub fn rounds(&self) -> usize {
+        self.stages.len() / 2
+    }
+}
+
+/// Fluent builder for [`PipelineSpec`]. Stages must alternate
+/// `map`, `reduce`, `map`, `reduce`, … starting with a map and ending
+/// with a reduce; [`PipelineBuilder::build`] enforces the shape.
+pub struct PipelineBuilder {
+    name: String,
+    input_prefix: String,
+    output_prefix: String,
+    split_size: u64,
+    stages: Vec<Stage>,
+}
+
+impl PipelineBuilder {
+    /// Input prefix: every object under it is stage-0 input.
+    pub fn input(mut self, prefix: &str) -> Self {
+        self.input_prefix = prefix.to_string();
+        self
+    }
+
+    /// Output prefix: the final reduce writes `{prefix}part-r-*`.
+    pub fn output(mut self, prefix: &str) -> Self {
+        self.output_prefix = prefix.to_string();
+        self
+    }
+
+    /// Maximum bytes per stage-0 input split (default 8 MiB).
+    pub fn split_size(mut self, bytes: u64) -> Self {
+        self.split_size = bytes;
+        self
+    }
+
+    /// Append a map stage (stage-0 splits by [`Self::split_size`]; later
+    /// map stages read one split per input object).
+    pub fn map(mut self, mapper: Arc<dyn Mapper>) -> Self {
+        self.stages.push(Stage::Map {
+            mapper,
+            split_size: None,
+        });
+        self
+    }
+
+    /// Append a map stage with an explicit split size (for inputs whose
+    /// record framing tolerates byte splits).
+    pub fn map_with_split(mut self, mapper: Arc<dyn Mapper>, split_size: u64) -> Self {
+        self.stages.push(Stage::Map {
+            mapper,
+            split_size: Some(split_size),
+        });
+        self
+    }
+
+    /// Append a reduce stage with `partitions` reducers.
+    pub fn reduce(mut self, reducer: Arc<dyn Reducer>, partitions: u32) -> Self {
+        self.stages.push(Stage::Reduce {
+            reducer,
+            partitions,
+        });
+        self
+    }
+
+    /// Validate and finish the spec.
+    pub fn build(self) -> Result<PipelineSpec> {
+        let bad = |msg: String| Err(Error::InvalidArg(format!("pipeline `{}`: {msg}", self.name)));
+        if self.name.is_empty() {
+            return Err(Error::InvalidArg("pipeline needs a name".into()));
+        }
+        if self.input_prefix.is_empty() {
+            return bad("no input prefix".into());
+        }
+        if self.output_prefix.is_empty() {
+            return bad("no output prefix".into());
+        }
+        if self.output_prefix.starts_with('.') {
+            return bad(format!(
+                "output prefix `{}` is reserved (dot namespaces belong to the store)",
+                self.output_prefix
+            ));
+        }
+        if self.split_size == 0 {
+            return bad("split_size must be > 0".into());
+        }
+        if self.stages.is_empty() {
+            return bad("no stages".into());
+        }
+        if self.stages.len() % 2 != 0 {
+            return bad("stages must pair up (map → reduce)".into());
+        }
+        for (i, stage) in self.stages.iter().enumerate() {
+            match (i % 2, stage) {
+                (0, Stage::Map { split_size, .. }) => {
+                    if split_size == &Some(0) {
+                        return bad(format!("stage {i}: split_size must be > 0"));
+                    }
+                }
+                (1, Stage::Reduce { partitions, .. }) => {
+                    if *partitions == 0 {
+                        return bad(format!("stage {i}: partitions must be > 0"));
+                    }
+                }
+                (0, _) => return bad(format!("stage {i} must be a map")),
+                _ => return bad(format!("stage {i} must be a reduce")),
+            }
+        }
+        Ok(PipelineSpec {
+            name: self.name,
+            input_prefix: self.input_prefix,
+            output_prefix: self.output_prefix,
+            split_size: self.split_size,
+            stages: self.stages,
+        })
+    }
+}
+
+/// Per-stage execution metrics.
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    pub kind: StageKind,
+    /// Map: splits executed; reduce: partitions written.
+    pub tasks: usize,
+    pub time: Duration,
+    /// Map: split bytes read; reduce: shuffle bytes merged.
+    pub bytes_in: u64,
+    /// Map: spill bytes written to the shuffle namespace; reduce: output
+    /// bytes committed.
+    pub bytes_out: u64,
+    /// Records through the stage (map: emitted into the shuffle; reduce:
+    /// merged out of it).
+    pub records: u64,
+    /// Map only: splits that *ran* under their preferred placement (from
+    /// the executed dispatch order, not a hypothetical plan).
+    pub locality_hits: usize,
+    /// Map only: sorted runs spilled to `.shuffle/` objects.
+    pub spilled_runs: u64,
+    /// Map only: bytes of those spill objects (header + payload).
+    pub spilled_bytes: u64,
+}
+
+/// Whole-pipeline execution metrics, one [`StageStats`] per stage.
+#[derive(Debug, Clone)]
+pub struct PipelineStats {
+    /// Job name (from the spec).
+    pub job: String,
+    /// Server-assigned job id (`.shuffle/<job_id>/` held the spills).
+    pub job_id: String,
+    pub stages: Vec<StageStats>,
+    /// Containers the ledger granted this job.
+    pub containers: usize,
+    pub elapsed: Duration,
+}
+
+impl PipelineStats {
+    /// Stage-0 input bytes.
+    pub fn input_bytes(&self) -> u64 {
+        self.stages.first().map_or(0, |s| s.bytes_in)
+    }
+
+    /// Final-stage output bytes.
+    pub fn output_bytes(&self) -> u64 {
+        self.stages.last().map_or(0, |s| s.bytes_out)
+    }
+
+    /// Records through the stage-0 shuffle.
+    pub fn shuffle_records(&self) -> u64 {
+        self.stages.first().map_or(0, |s| s.records)
+    }
+
+    /// Total bytes spilled through the `.shuffle/` namespace across all
+    /// rounds — the conformance quantity: > 0 proves the shuffle rode the
+    /// store.
+    pub fn spilled_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.spilled_bytes).sum()
+    }
+
+    /// Total spill objects written.
+    pub fn spilled_runs(&self) -> u64 {
+        self.stages.iter().map(|s| s.spilled_runs).sum()
+    }
+
+    /// Collapse to the v1 [`JobStats`] (the `Engine::run` adapter's return
+    /// shape): stage-0 map + final reduce, with multi-round pipelines
+    /// folding intermediate stage times into the two phase buckets.
+    pub fn to_job_stats(&self) -> JobStats {
+        let (mut map_time, mut reduce_time) = (Duration::ZERO, Duration::ZERO);
+        for s in &self.stages {
+            match s.kind {
+                StageKind::Map => map_time += s.time,
+                StageKind::Reduce => reduce_time += s.time,
+            }
+        }
+        JobStats {
+            job: self.job.clone(),
+            splits: self.stages.first().map_or(0, |s| s.tasks),
+            reducers: self.stages.get(1).map_or(0, |s| s.tasks) as u32,
+            map_time,
+            reduce_time,
+            input_bytes: self.input_bytes(),
+            output_bytes: self.output_bytes(),
+            shuffle_records: self.shuffle_records(),
+            locality_hits: self.stages.first().map_or(0, |s| s.locality_hits),
+        }
+    }
+
+    /// One-line human report.
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "job={} id={} rounds={} containers={} elapsed={:.3}s spilled={} runs / {} B",
+            self.job,
+            self.job_id,
+            self.stages.len() / 2,
+            self.containers,
+            self.elapsed.as_secs_f64(),
+            self.spilled_runs(),
+            self.spilled_bytes(),
+        );
+        for (i, st) in self.stages.iter().enumerate() {
+            s.push_str(&format!(
+                " | s{i}:{} tasks={} {:.3}s in={}B out={}B rec={}",
+                match st.kind {
+                    StageKind::Map => "map",
+                    StageKind::Reduce => "red",
+                },
+                st.tasks,
+                st.time.as_secs_f64(),
+                st.bytes_in,
+                st.bytes_out,
+                st.records
+            ));
+        }
+        s
+    }
+}
+
+/// Live progress counters, readable through
+/// [`JobHandle::progress`](super::JobHandle::progress).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct JobProgress {
+    /// Current stage index (0-based; equals `stages` when done).
+    pub stage: usize,
+    /// Total stages in the pipeline.
+    pub stages: usize,
+    /// Tasks finished in the current stage.
+    pub tasks_done: u64,
+    /// Tasks planned for the current stage.
+    pub tasks_total: u64,
+}
+
+/// Shared mutable progress state (executor writes, handle reads).
+#[derive(Debug, Default)]
+pub(crate) struct ProgressState {
+    stage: AtomicUsize,
+    stages: AtomicUsize,
+    done: AtomicU64,
+    total: AtomicU64,
+}
+
+impl ProgressState {
+    pub(crate) fn begin_job(&self, stages: usize) {
+        self.stages.store(stages, Ordering::Relaxed);
+    }
+
+    fn begin_phase(&self, stage: usize, total: u64) {
+        self.stage.store(stage, Ordering::Relaxed);
+        self.done.store(0, Ordering::Relaxed);
+        self.total.store(total, Ordering::Relaxed);
+    }
+
+    fn task_done(&self) {
+        self.done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn finish(&self) {
+        self.stage
+            .store(self.stages.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    pub(crate) fn snapshot(&self) -> JobProgress {
+        JobProgress {
+            stage: self.stage.load(Ordering::Relaxed),
+            stages: self.stages.load(Ordering::Relaxed),
+            tasks_done: self.done.load(Ordering::Relaxed),
+            tasks_total: self.total.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Everything a pipeline execution needs from its server: the store, the
+/// shared worker pool, the recycled split buffers, placement geometry,
+/// and the spill knobs.
+pub(crate) struct ExecCtx {
+    pub store: Arc<dyn ObjectStore>,
+    pub pool: Arc<ThreadPool>,
+    pub buffers: Arc<BufferPool>,
+    /// Cluster-wide container ledger shared with every concurrent job:
+    /// each dispatch wave re-acquires this job's fair share, so a lone
+    /// job runs at full width while concurrent jobs converge to an even
+    /// split within one wave.
+    pub ledger: Arc<ContainerLedger>,
+    pub nodes: usize,
+    pub containers_per_node: usize,
+    /// Spill a map task's runs to `.shuffle/` when their payload exceeds
+    /// this many bytes (`0` = always spill — the paper's all-data-through-
+    /// the-tiers default; `u64::MAX` = never, the old heap shuffle).
+    pub spill_threshold: u64,
+    /// Window size for spill writes and reducer merge reads.
+    pub shuffle_chunk: usize,
+    pub cancel: Arc<AtomicBool>,
+    pub progress: Arc<ProgressState>,
+}
+
+/// One map task's contribution to a round's shuffle.
+struct MapTaskOut {
+    bytes_in: u64,
+    records: u64,
+    local: bool,
+    spilled_runs: u64,
+    spilled_bytes: u64,
+    parts: Vec<Vec<RunRef>>,
+}
+
+/// A run either kept resident (below the spill threshold) or parked in
+/// the shuffle namespace.
+enum RunRef {
+    Mem(Run),
+    Spilled(SpillMeta),
+}
+
+fn check_cancel(cancel: &AtomicBool, job: &str) -> Result<()> {
+    if cancel.load(Ordering::Relaxed) {
+        Err(Error::Canceled(job.to_string()))
+    } else {
+        Ok(())
+    }
+}
+
+/// Run `task(0..total)` on the shared pool in **waves**: each wave
+/// re-acquires the job's fair container share from the ledger and
+/// dispatches at most that many tasks, so a lone job runs at full
+/// cluster width while concurrent jobs converge to an even split — the
+/// grant is a real in-flight bound, not bookkeeping. A wave containing
+/// an error stops dispatch (fail fast); results collected so far are
+/// returned for the caller to aggregate or roll back.
+fn dispatch_waves<T: Send + 'static>(
+    ctx: &ExecCtx,
+    job_id: &str,
+    total: usize,
+    task: Arc<dyn Fn(usize) -> Result<T> + Send + Sync>,
+) -> Result<Vec<Result<T>>> {
+    let mut outs = Vec::with_capacity(total);
+    let mut start = 0usize;
+    while start < total {
+        let wave = ctx.ledger.fair_acquire(job_id).max(1);
+        let n = wave.min(total - start);
+        let task = Arc::clone(&task);
+        let batch = ctx
+            .pool
+            .map(n, move |i| task(start + i))
+            .map_err(Error::Job)?;
+        let failed = batch.iter().any(|r| r.is_err());
+        outs.extend(batch);
+        if failed {
+            break;
+        }
+        start += n;
+    }
+    Ok(outs)
+}
+
+/// Execute `spec` to completion (or first failure / cancellation),
+/// deleting `.shuffle/<job_id>/` on the way out.
+pub(crate) fn run_pipeline(
+    ctx: &ExecCtx,
+    spec: &PipelineSpec,
+    job_id: &str,
+) -> Result<PipelineStats> {
+    let t0 = Instant::now();
+    ctx.progress.begin_job(spec.stages.len());
+    let result = run_stages(ctx, spec, job_id);
+
+    // cleanup is unconditional and best-effort: on the error path the
+    // store itself may be refusing operations (e.g. a crash drill), and
+    // recover() reaps whatever this pass cannot
+    let ns = format!("{SHUFFLE_NS}{job_id}/");
+    let _ = crate::storage::reap_prefix(ctx.store.as_ref(), &ns);
+
+    let mut stats = result?;
+    ctx.progress.finish();
+    stats.elapsed = t0.elapsed();
+    Ok(stats)
+}
+
+fn run_stages(ctx: &ExecCtx, spec: &PipelineSpec, job_id: &str) -> Result<PipelineStats> {
+    let rounds = spec.rounds();
+    let mut stages = Vec::with_capacity(spec.stages.len());
+    let mut input = spec.input_prefix.clone();
+    for round in 0..rounds {
+        let Stage::Map { mapper, split_size } = &spec.stages[2 * round] else {
+            unreachable!("validated by the builder");
+        };
+        let Stage::Reduce {
+            reducer,
+            partitions,
+        } = &spec.stages[2 * round + 1]
+        else {
+            unreachable!("validated by the builder");
+        };
+        let out_prefix = if round + 1 == rounds {
+            spec.output_prefix.clone()
+        } else {
+            // intermediate round outputs live inside the job's shuffle
+            // namespace: transient, reaped with everything else
+            format!("{SHUFFLE_NS}{job_id}/inter-{}/", round + 1)
+        };
+        let split = split_size.unwrap_or(if round == 0 { spec.split_size } else { u64::MAX });
+
+        let (map_stats, shuffle) = run_map_phase(
+            ctx,
+            spec,
+            job_id,
+            round,
+            &input,
+            split,
+            Arc::clone(mapper),
+            *partitions,
+        )?;
+        stages.push(map_stats);
+
+        let reduce_stats = run_reduce_phase(
+            ctx,
+            spec,
+            job_id,
+            round,
+            &out_prefix,
+            Arc::clone(reducer),
+            *partitions,
+            shuffle,
+        )?;
+        stages.push(reduce_stats);
+
+        // this round's spills are consumed: drop them eagerly so a long
+        // pipeline's shuffle footprint is one round, not the whole job
+        let spill_prefix = format!("{SHUFFLE_NS}{job_id}/s{round}/");
+        let _ = crate::storage::reap_prefix(ctx.store.as_ref(), &spill_prefix);
+        input = out_prefix;
+    }
+    Ok(PipelineStats {
+        job: spec.name.clone(),
+        job_id: job_id.to_string(),
+        stages,
+        containers: ctx.nodes * ctx.containers_per_node,
+        elapsed: Duration::ZERO, // stamped by run_pipeline
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_map_phase(
+    ctx: &ExecCtx,
+    spec: &PipelineSpec,
+    job_id: &str,
+    round: usize,
+    input: &str,
+    split_size: u64,
+    mapper: Arc<dyn Mapper>,
+    partitions: u32,
+) -> Result<(StageStats, Vec<Vec<RunRef>>)> {
+    check_cancel(&ctx.cancel, &spec.name)?;
+    let splits = plan_splits(ctx.store.as_ref(), input, split_size, ctx.nodes)?;
+    if splits.is_empty() && round == 0 {
+        return Err(Error::Job(format!(
+            "{}: no input under `{}`",
+            spec.name, input
+        )));
+    }
+    let scheduler = LocalityScheduler::new(ctx.nodes, ctx.containers_per_node);
+    let (assignments, _planned_hits) = scheduler.assign(&splits);
+    let order = scheduler.execution_order(&assignments);
+    ctx.progress.begin_phase(2 * round, order.len() as u64);
+
+    let t = Instant::now();
+    let splits = Arc::new(splits);
+    let assignments = Arc::new(assignments);
+    let order = Arc::new(order);
+    let shuffle_prefix = Arc::new(format!("{SHUFFLE_NS}{job_id}/s{round}/"));
+
+    // One task closure over global indices; dispatch_waves re-slices it
+    // into ledger-sized waves following the scheduler's order.
+    let map_task: Arc<dyn Fn(usize) -> Result<MapTaskOut> + Send + Sync> = {
+        let store = Arc::clone(&ctx.store);
+        let buffers = Arc::clone(&ctx.buffers);
+        let cancel = Arc::clone(&ctx.cancel);
+        let progress = Arc::clone(&ctx.progress);
+        let splits = Arc::clone(&splits);
+        let assignments = Arc::clone(&assignments);
+        let order = Arc::clone(&order);
+        let shuffle_prefix = Arc::clone(&shuffle_prefix);
+        let job = spec.name.clone();
+        let threshold = ctx.spill_threshold;
+        let chunk = ctx.shuffle_chunk;
+        Arc::new(move |k: usize| -> Result<MapTaskOut> {
+            check_cancel(&cancel, &job)?;
+            let task = order[k];
+            let split = &splits[task];
+            // one open per split, one read pass into a pooled buffer
+            // (recycled across tasks: steady-state jobs stop churning
+            // the allocator)
+            let reader = store.open(&split.object)?;
+            let end = (split.offset + split.len).min(reader.len());
+            let take = end.saturating_sub(split.offset) as usize;
+            let mut data = buffers.take();
+            data.resize(take, 0);
+            read_full_at(reader.as_ref(), split.offset, &mut data)?;
+            drop(reader);
+            let mut mctx = MapContext::new(partitions);
+            mapper.map(split, &data, &mut mctx)?;
+            drop(data); // back to the pool before the spill I/O
+            let runs = close_context(mctx);
+
+            let mut records = 0u64;
+            let mut payload = 0u64;
+            for part in &runs {
+                for run in part {
+                    records += run.len() as u64;
+                    payload += run.iter().map(|kv| kv.bytes.len() as u64).sum::<u64>();
+                }
+            }
+            let mut out = MapTaskOut {
+                bytes_in: take as u64,
+                records,
+                local: assignments[task].local,
+                spilled_runs: 0,
+                spilled_bytes: 0,
+                parts: (0..partitions).map(|_| Vec::new()).collect(),
+            };
+            let spill = payload > threshold || threshold == 0;
+            for (p, part) in runs.into_iter().enumerate() {
+                for (j, run) in part.into_iter().enumerate() {
+                    if run.is_empty() {
+                        continue;
+                    }
+                    if spill {
+                        let key = format!("{shuffle_prefix}m{task:05}-p{p:05}-r{j}");
+                        let meta = spill_run(store.as_ref(), &key, &run, chunk)?;
+                        out.spilled_runs += 1;
+                        out.spilled_bytes += meta.bytes;
+                        out.parts[p].push(RunRef::Spilled(meta));
+                    } else {
+                        out.parts[p].push(RunRef::Mem(run));
+                    }
+                }
+            }
+            progress.task_done();
+            Ok(out)
+        })
+    };
+    let outs = dispatch_waves(ctx, job_id, order.len(), map_task)?;
+
+    let mut stats = StageStats {
+        kind: StageKind::Map,
+        tasks: splits.len(),
+        time: Duration::ZERO,
+        bytes_in: 0,
+        bytes_out: 0,
+        records: 0,
+        locality_hits: 0,
+        spilled_runs: 0,
+        spilled_bytes: 0,
+    };
+    let mut shuffle: Vec<Vec<RunRef>> = (0..partitions).map(|_| Vec::new()).collect();
+    for out in outs {
+        let out = out?;
+        stats.bytes_in += out.bytes_in;
+        stats.records += out.records;
+        stats.locality_hits += out.local as usize;
+        stats.spilled_runs += out.spilled_runs;
+        stats.spilled_bytes += out.spilled_bytes;
+        for (p, refs) in out.parts.into_iter().enumerate() {
+            shuffle[p].extend(refs);
+        }
+    }
+    stats.bytes_out = stats.spilled_bytes;
+    stats.time = t.elapsed();
+    Ok((stats, shuffle))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_reduce_phase(
+    ctx: &ExecCtx,
+    spec: &PipelineSpec,
+    job_id: &str,
+    round: usize,
+    out_prefix: &str,
+    reducer: Arc<dyn Reducer>,
+    partitions: u32,
+    shuffle: Vec<Vec<RunRef>>,
+) -> Result<StageStats> {
+    check_cancel(&ctx.cancel, &spec.name)?;
+    ctx.progress.begin_phase(2 * round + 1, partitions as u64);
+    let t = Instant::now();
+    let shuffle_bytes: u64 = shuffle
+        .iter()
+        .flatten()
+        .map(|r| match r {
+            RunRef::Mem(run) => run.iter().map(|kv| kv.bytes.len() as u64).sum(),
+            RunRef::Spilled(m) => m.bytes,
+        })
+        .sum();
+    let shuffle = Arc::new(Mutex::new(
+        shuffle.into_iter().map(Some).collect::<Vec<Option<Vec<RunRef>>>>(),
+    ));
+
+    // same wave bound as the map phase: the current fair container
+    // grant caps this job's in-flight reduce tasks on the shared pool
+    let reduce_task: Arc<dyn Fn(usize) -> Result<(u64, u64, String)> + Send + Sync> = {
+        let store = Arc::clone(&ctx.store);
+        let cancel = Arc::clone(&ctx.cancel);
+        let progress = Arc::clone(&ctx.progress);
+        let shuffle = Arc::clone(&shuffle);
+        let job = spec.name.clone();
+        let out_prefix = out_prefix.to_string();
+        let chunk = ctx.shuffle_chunk;
+        Arc::new(move |p: usize| -> Result<(u64, u64, String)> {
+            check_cancel(&cancel, &job)?;
+            let refs = shuffle.lock().unwrap()[p]
+                .take()
+                .expect("partition taken once");
+            let mut sources = Vec::with_capacity(refs.len());
+            for r in refs {
+                sources.push(match r {
+                    RunRef::Mem(run) => RunSource::from_run(run),
+                    RunRef::Spilled(meta) => {
+                        // windowed read-back through a v2 reader: the
+                        // run never materializes whole in the reducer
+                        RunSource::Spill(SpillCursor::open(store.as_ref(), &meta.key, chunk)?)
+                    }
+                });
+            }
+            let (merged, merge_err) = MergeIter::from_sources(sources);
+            let records = merged.remaining() as u64;
+            let mut out = Vec::new();
+            reducer.reduce(p as u32, merged, &mut out)?;
+            if let Some(e) = merge_err.take() {
+                return Err(e); // a spill tore mid-merge: fail the task
+            }
+            check_cancel(&cancel, &job)?;
+            // stream the partition out through a writer handle; a
+            // reducer that fails mid-write publishes nothing
+            let key = format!("{out_prefix}part-r-{p:05}");
+            let mut w = store.create(&key)?;
+            for piece in out.chunks(OUTPUT_CHUNK) {
+                w.append(piece)?;
+            }
+            w.commit()?;
+            progress.task_done();
+            Ok((out.len() as u64, records, key))
+        })
+    };
+    let outs = dispatch_waves(ctx, job_id, partitions as usize, reduce_task)?;
+
+    let mut stats = StageStats {
+        kind: StageKind::Reduce,
+        tasks: partitions as usize,
+        time: Duration::ZERO,
+        bytes_in: shuffle_bytes,
+        bytes_out: 0,
+        records: 0,
+        locality_hits: 0,
+        spilled_runs: 0,
+        spilled_bytes: 0,
+    };
+    if outs.iter().any(|r| r.is_err()) {
+        // a failed (or canceled) stage publishes *nothing*: un-publish
+        // the partitions that did commit, so consumers never mistake a
+        // partial part-r-* set for a complete result. (If this job was
+        // overwriting a previous result, those partitions are gone
+        // either way — the store contract is write-once-read-many.)
+        for out in &outs {
+            if let Ok((_, _, key)) = out {
+                let _ = ctx.store.delete(key);
+            }
+        }
+        return Err(outs
+            .into_iter()
+            .find_map(|r| r.err())
+            .expect("an Err was just observed"));
+    }
+    for out in outs {
+        let (bytes, records, _key) = out.expect("all Ok");
+        stats.bytes_out += bytes;
+        stats.records += records;
+    }
+    stats.time = t.elapsed();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::tests::test_store;
+    use crate::mapreduce::{InputSplit, KV};
+
+    struct NullMapper;
+    impl Mapper for NullMapper {
+        fn map(&self, _s: &InputSplit, _d: &[u8], _c: &mut MapContext) -> Result<()> {
+            Ok(())
+        }
+    }
+    struct NullReducer;
+    impl Reducer for NullReducer {
+        fn reduce(&self, _p: u32, _r: MergeIter<'_>, _o: &mut Vec<u8>) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    fn null_map() -> Arc<dyn Mapper> {
+        Arc::new(NullMapper)
+    }
+    fn null_red() -> Arc<dyn Reducer> {
+        Arc::new(NullReducer)
+    }
+
+    #[test]
+    fn builder_validates_shape() {
+        // well-formed two-round pipeline
+        let spec = PipelineSpec::builder("ok")
+            .input("in/")
+            .output("out/")
+            .split_size(1 << 20)
+            .map(null_map())
+            .reduce(null_red(), 4)
+            .map(null_map())
+            .reduce(null_red(), 1)
+            .build()
+            .unwrap();
+        assert_eq!(spec.num_stages(), 4);
+        assert_eq!(spec.rounds(), 2);
+        assert_eq!(spec.name(), "ok");
+
+        // shape violations
+        let b = || PipelineSpec::builder("bad").input("in/").output("out/");
+        assert!(b().build().is_err(), "no stages");
+        assert!(b().map(null_map()).build().is_err(), "dangling map");
+        assert!(
+            b().map(null_map()).reduce(null_red(), 0).build().is_err(),
+            "zero partitions"
+        );
+        assert!(
+            b().map(null_map())
+                .reduce(null_red(), 1)
+                .map(null_map())
+                .build()
+                .is_err(),
+            "odd stage count"
+        );
+        assert!(
+            PipelineSpec::builder("bad").output("out/").map(null_map()).reduce(null_red(), 1)
+                .build()
+                .is_err(),
+            "missing input"
+        );
+        assert!(
+            PipelineSpec::builder("bad")
+                .input("in/")
+                .output(".shuffle/steal/")
+                .map(null_map())
+                .reduce(null_red(), 1)
+                .build()
+                .is_err(),
+            "reserved output"
+        );
+        assert!(
+            PipelineSpec::builder("bad")
+                .input("in/")
+                .output("out/")
+                .split_size(0)
+                .map(null_map())
+                .reduce(null_red(), 1)
+                .build()
+                .is_err(),
+            "zero split size"
+        );
+    }
+
+    #[test]
+    fn progress_snapshots_advance() {
+        let p = ProgressState::default();
+        p.begin_job(2);
+        p.begin_phase(0, 3);
+        assert_eq!(
+            p.snapshot(),
+            JobProgress {
+                stage: 0,
+                stages: 2,
+                tasks_done: 0,
+                tasks_total: 3
+            }
+        );
+        p.task_done();
+        p.task_done();
+        assert_eq!(p.snapshot().tasks_done, 2);
+        p.begin_phase(1, 1);
+        assert_eq!(p.snapshot().stage, 1);
+        assert_eq!(p.snapshot().tasks_done, 0);
+        p.finish();
+        assert_eq!(p.snapshot().stage, 2);
+    }
+
+    #[test]
+    fn stats_collapse_to_job_stats() {
+        let stage = |kind, tasks, bytes_in, bytes_out, records, hits| StageStats {
+            kind,
+            tasks,
+            time: Duration::from_millis(10),
+            bytes_in,
+            bytes_out,
+            records,
+            locality_hits: hits,
+            spilled_runs: 1,
+            spilled_bytes: 100,
+        };
+        let ps = PipelineStats {
+            job: "j".into(),
+            job_id: "job-0001-j".into(),
+            stages: vec![
+                stage(StageKind::Map, 8, 1000, 900, 50, 6),
+                stage(StageKind::Reduce, 4, 900, 800, 50, 0),
+                stage(StageKind::Map, 4, 800, 700, 20, 4),
+                stage(StageKind::Reduce, 1, 700, 600, 20, 0),
+            ],
+            containers: 8,
+            elapsed: Duration::from_millis(40),
+        };
+        let js = ps.to_job_stats();
+        assert_eq!(js.splits, 8);
+        assert_eq!(js.reducers, 4);
+        assert_eq!(js.input_bytes, 1000);
+        assert_eq!(js.output_bytes, 600);
+        assert_eq!(js.shuffle_records, 50);
+        assert_eq!(js.locality_hits, 6);
+        assert_eq!(js.map_time, Duration::from_millis(20));
+        assert_eq!(js.reduce_time, Duration::from_millis(20));
+        assert_eq!(ps.spilled_bytes(), 400);
+        assert_eq!(ps.spilled_runs(), 4);
+        assert!(ps.report().contains("rounds=2"));
+    }
+
+    /// Word-count through the raw executor (no server): proves the
+    /// spill-merge data path and the shuffle-namespace cleanup without
+    /// threading.
+    #[test]
+    fn executor_runs_a_round_and_cleans_shuffle() {
+        struct Wc;
+        impl Mapper for Wc {
+            fn map(&self, _s: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+                for w in data.split(|b| b.is_ascii_whitespace()).filter(|w| !w.is_empty()) {
+                    let p = (w[0] as u32) % ctx.num_partitions();
+                    ctx.emit(p, KV::new(w, b"1"));
+                }
+                Ok(())
+            }
+        }
+        struct Count;
+        impl Reducer for Count {
+            fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
+                let mut cur: Option<(Vec<u8>, u64)> = None;
+                for kv in records {
+                    match &mut cur {
+                        Some((k, n)) if k.as_slice() == kv.key() => *n += 1,
+                        _ => {
+                            if let Some((k, n)) = cur.take() {
+                                out.extend_from_slice(format!("{} {n}\n", String::from_utf8_lossy(&k)).as_bytes());
+                            }
+                            cur = Some((kv.key().to_vec(), 1));
+                        }
+                    }
+                }
+                if let Some((k, n)) = cur {
+                    out.extend_from_slice(format!("{} {n}\n", String::from_utf8_lossy(&k)).as_bytes());
+                }
+                Ok(())
+            }
+        }
+
+        let store: Arc<dyn ObjectStore> = Arc::new(test_store());
+        store.write("in/a", b"apple banana apple").unwrap();
+        store.write("in/b", b"banana cherry banana").unwrap();
+        let ctx = ExecCtx {
+            store: Arc::clone(&store),
+            pool: Arc::new(ThreadPool::new(4)),
+            buffers: Arc::new(BufferPool::new(1 << 16, 4)),
+            ledger: Arc::new(ContainerLedger::new(4)),
+            nodes: 2,
+            containers_per_node: 2,
+            spill_threshold: 0, // everything through .shuffle/
+            shuffle_chunk: 64,  // tiny windows: exercise reassembly
+            cancel: Arc::new(AtomicBool::new(false)),
+            progress: Arc::new(ProgressState::default()),
+        };
+        let spec = PipelineSpec::builder("wc")
+            .input("in/")
+            .output("out/")
+            .split_size(1 << 20)
+            .map(Arc::new(Wc))
+            .reduce(Arc::new(Count), 3)
+            .build()
+            .unwrap();
+        let stats = run_pipeline(&ctx, &spec, "job-test-wc").unwrap();
+        assert_eq!(stats.stages.len(), 2);
+        assert_eq!(stats.shuffle_records(), 6);
+        assert!(stats.spilled_runs() > 0, "threshold 0 must spill");
+        assert!(stats.spilled_bytes() > 0);
+        let mut all = String::new();
+        for key in store.list("out/") {
+            all.push_str(std::str::from_utf8(&store.read(&key).unwrap()).unwrap());
+        }
+        assert!(all.contains("apple 2"), "{all}");
+        assert!(all.contains("banana 3"), "{all}");
+        assert!(all.contains("cherry 1"), "{all}");
+        assert!(
+            store.list(SHUFFLE_NS).is_empty(),
+            "shuffle namespace must be clean after the job"
+        );
+        // locality reflects executed placement over 2 nodes
+        assert_eq!(stats.stages[0].locality_hits, 2);
+    }
+
+    #[test]
+    fn failed_partition_unpublishes_the_whole_stage() {
+        // partition 0 commits, partition 1 fails: the committed part-r
+        // object must be un-published so a partial set never looks done
+        struct SplitMapper;
+        impl Mapper for SplitMapper {
+            fn map(&self, _s: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+                for w in data.split(|b| b.is_ascii_whitespace()).filter(|w| !w.is_empty()) {
+                    ctx.emit((w[0] % 2) as u32, KV::new(w, b""));
+                }
+                Ok(())
+            }
+        }
+        struct FailP1;
+        impl Reducer for FailP1 {
+            fn reduce(&self, p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
+                if p == 1 {
+                    return Err(Error::Job("reducer boom".into()));
+                }
+                out.extend((records.count() as u64).to_le_bytes());
+                Ok(())
+            }
+        }
+        let store: Arc<dyn ObjectStore> = Arc::new(test_store());
+        store.write("in/a", b"b c d e").unwrap(); // both parities present
+        let ctx = ExecCtx {
+            store: Arc::clone(&store),
+            pool: Arc::new(ThreadPool::new(2)),
+            buffers: Arc::new(BufferPool::new(1 << 16, 2)),
+            ledger: Arc::new(ContainerLedger::new(2)),
+            nodes: 1,
+            containers_per_node: 2, // one wave holds both partitions
+            spill_threshold: 0,
+            shuffle_chunk: 64,
+            cancel: Arc::new(AtomicBool::new(false)),
+            progress: Arc::new(ProgressState::default()),
+        };
+        let spec = PipelineSpec::builder("partial")
+            .input("in/")
+            .output("out/")
+            .map(Arc::new(SplitMapper))
+            .reduce(Arc::new(FailP1), 2)
+            .build()
+            .unwrap();
+        let err = run_pipeline(&ctx, &spec, "job-test-partial").unwrap_err();
+        assert!(format!("{err}").contains("reducer boom"), "{err}");
+        assert!(
+            store.list("out/").is_empty(),
+            "failed stage left partial outputs: {:?}",
+            store.list("out/")
+        );
+        assert!(store.list(SHUFFLE_NS).is_empty());
+    }
+
+    #[test]
+    fn executor_cancellation_cleans_up() {
+        let store: Arc<dyn ObjectStore> = Arc::new(test_store());
+        store.write("in/a", b"x y z").unwrap();
+        let cancel = Arc::new(AtomicBool::new(true)); // canceled before start
+        let ctx = ExecCtx {
+            store: Arc::clone(&store),
+            pool: Arc::new(ThreadPool::new(2)),
+            buffers: Arc::new(BufferPool::new(1 << 16, 2)),
+            ledger: Arc::new(ContainerLedger::new(2)),
+            nodes: 1,
+            containers_per_node: 2,
+            spill_threshold: 0,
+            shuffle_chunk: 1 << 10,
+            cancel,
+            progress: Arc::new(ProgressState::default()),
+        };
+        let spec = PipelineSpec::builder("dead")
+            .input("in/")
+            .output("out/")
+            .map(null_map())
+            .reduce(null_red(), 2)
+            .build()
+            .unwrap();
+        let err = run_pipeline(&ctx, &spec, "job-test-dead").unwrap_err();
+        assert!(matches!(err, Error::Canceled(_)), "{err}");
+        assert!(store.list(SHUFFLE_NS).is_empty());
+        assert!(store.list("out/").is_empty(), "no partial outputs");
+    }
+}

@@ -1,4 +1,4 @@
-//! Locality-aware split scheduling.
+//! Locality-aware split scheduling and per-job container accounting.
 //!
 //! Hadoop schedules a map task onto the node holding its block whenever a
 //! container is free there — that is the mechanism that makes HDFS reads
@@ -6,6 +6,17 @@
 //! §3.2. The same greedy policy is implemented here: fill each node's
 //! containers with its local splits first, then steal the remainder
 //! round-robin.
+//!
+//! The placements are not advisory: [`LocalityScheduler::execution_order`]
+//! turns an assignment set into the actual dispatch order — waves of up to
+//! `containers_per_node` tasks per node, interleaved across nodes, exactly
+//! how a YARN-style scheduler drains its per-node container queues. The
+//! [`crate::mapreduce::JobServer`] additionally splits the cluster's
+//! container budget *between* concurrent jobs through a
+//! [`ContainerLedger`], so one job's map wave cannot starve another's.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
 
 use super::InputSplit;
 
@@ -73,6 +84,126 @@ impl LocalityScheduler {
         }
         (out.into_iter().map(Option::unwrap).collect(), hits)
     }
+
+    /// Turn `assignments` into the split **dispatch order**: waves of up
+    /// to `containers_per_node` splits per node, round-robining across
+    /// nodes — the order a cluster actually executes the placement in
+    /// (every node's containers run wave `w` before any node starts wave
+    /// `w+1`). The engine feeds this order to its worker pool, so the
+    /// locality plan drives execution instead of being computed and
+    /// discarded, and per-split locality can be accounted from what
+    /// *ran*, not what was hypothesized.
+    ///
+    /// The result is a permutation of `0..assignments.len()` (split
+    /// indices).
+    pub fn execution_order(&self, assignments: &[Assignment]) -> Vec<usize> {
+        let mut per_node: Vec<Vec<usize>> = vec![Vec::new(); self.nodes];
+        for a in assignments {
+            per_node[a.node % self.nodes].push(a.split);
+        }
+        let mut order = Vec::with_capacity(assignments.len());
+        let mut offset = vec![0usize; self.nodes];
+        while order.len() < assignments.len() {
+            for n in 0..self.nodes {
+                let end = (offset[n] + self.containers_per_node).min(per_node[n].len());
+                order.extend_from_slice(&per_node[n][offset[n]..end]);
+                offset[n] = end;
+            }
+        }
+        order
+    }
+}
+
+/// Cluster-wide container accounting across concurrent jobs.
+///
+/// The cluster owns `nodes × containers_per_node` container slots. The
+/// executor calls [`ContainerLedger::fair_acquire`] at **every dispatch
+/// wave**, and the grant bounds how many of that job's tasks may occupy
+/// the shared worker pool at once — so a lone job runs at full cluster
+/// width while concurrent jobs converge to an even split within one
+/// wave of each other. Grants never block (every admitted job receives
+/// at least one container, deliberately oversubscribing a saturated
+/// cluster rather than deadlocking admission), while hard admission
+/// lives in [`crate::mapreduce::JobServerConfig::max_concurrent_jobs`].
+#[derive(Debug)]
+pub struct ContainerLedger {
+    capacity: usize,
+    grants: Mutex<HashMap<String, usize>>,
+}
+
+impl ContainerLedger {
+    /// Ledger over `capacity` total container slots (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            grants: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Total container slots.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Containers currently granted across all jobs.
+    pub fn in_use(&self) -> usize {
+        self.grants.lock().unwrap().values().sum()
+    }
+
+    /// Grant `job` up to `want` containers from the free share, always at
+    /// least 1. Re-acquiring for the same job replaces its grant.
+    pub fn acquire(&self, job: &str, want: usize) -> usize {
+        let mut grants = self.grants.lock().unwrap();
+        let others: usize = grants
+            .iter()
+            .filter(|(j, _)| j.as_str() != job)
+            .map(|(_, n)| n)
+            .sum();
+        let free = self.capacity.saturating_sub(others);
+        let grant = want.clamp(1, free.max(1));
+        grants.insert(job.to_string(), grant);
+        grant
+    }
+
+    /// Grant `job` its **fair share**: `capacity / active_jobs` (counting
+    /// this job), clamped to what is actually free, always at least 1.
+    /// The executor re-acquires at every dispatch wave, so the share
+    /// adapts as jobs come and go — a lone job converges to the full
+    /// cluster width within one wave of the last competitor leaving,
+    /// and a newly admitted job pulls incumbents back toward the even
+    /// split as their next waves re-acquire.
+    pub fn fair_acquire(&self, job: &str) -> usize {
+        let mut grants = self.grants.lock().unwrap();
+        let active = grants.len() + usize::from(!grants.contains_key(job));
+        let want = self.capacity.div_ceil(active.max(1));
+        let others: usize = grants
+            .iter()
+            .filter(|(j, _)| j.as_str() != job)
+            .map(|(_, n)| n)
+            .sum();
+        let free = self.capacity.saturating_sub(others);
+        let grant = want.clamp(1, free.max(1));
+        grants.insert(job.to_string(), grant);
+        grant
+    }
+
+    /// Release `job`'s grant, returning how many containers were freed.
+    pub fn release(&self, job: &str) -> usize {
+        self.grants.lock().unwrap().remove(job).unwrap_or(0)
+    }
+
+    /// Snapshot of per-job grants (for status displays and tests).
+    pub fn snapshot(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = self
+            .grants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, n)| (k.clone(), *n))
+            .collect();
+        v.sort();
+        v
+    }
 }
 
 #[cfg(test)]
@@ -137,5 +268,93 @@ mod tests {
         let (assigns, hits) = sched.assign(&[]);
         assert!(assigns.is_empty());
         assert_eq!(hits, 0);
+        assert!(sched.execution_order(&assigns).is_empty());
+    }
+
+    #[test]
+    fn execution_order_is_a_wave_interleaved_permutation() {
+        // 2 nodes × 2 containers; 6 splits preferring node 0,0,0,0,1,1
+        let sched = LocalityScheduler::new(2, 2);
+        let splits: Vec<InputSplit> =
+            [0, 0, 0, 0, 1, 1].iter().map(|&n| split(Some(n))).collect();
+        let (assigns, _) = sched.assign(&splits);
+        let order = sched.execution_order(&assigns);
+        // permutation of all splits
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<_>>());
+        // wave 1 holds at most containers_per_node tasks per node
+        let node_of: Vec<usize> = assigns.iter().map(|a| a.node).collect();
+        let wave1 = &order[..4];
+        for n in 0..2 {
+            assert!(
+                wave1.iter().filter(|&&s| node_of[s] == n).count() <= 2,
+                "wave 1 overfills node {n}: {order:?}"
+            );
+        }
+        // within a node, its splits run in assignment order
+        for n in 0..2 {
+            let seq: Vec<usize> = order.iter().copied().filter(|&s| node_of[s] == n).collect();
+            let mut expected: Vec<usize> =
+                assigns.iter().filter(|a| a.node == n).map(|a| a.split).collect();
+            expected.sort_unstable();
+            assert_eq!(seq, expected, "node {n} order");
+        }
+    }
+
+    #[test]
+    fn execution_order_single_node_is_identity() {
+        let sched = LocalityScheduler::new(1, 4);
+        let splits: Vec<InputSplit> = (0..5).map(|_| split(None)).collect();
+        let (assigns, _) = sched.assign(&splits);
+        assert_eq!(sched.execution_order(&assigns), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn container_ledger_shares_and_releases() {
+        let ledger = ContainerLedger::new(8);
+        assert_eq!(ledger.capacity(), 8);
+        assert_eq!(ledger.acquire("job-a", 6), 6);
+        // job-b gets what's left, never zero
+        assert_eq!(ledger.acquire("job-b", 6), 2);
+        assert_eq!(ledger.in_use(), 8);
+        // saturated cluster still grants 1 (oversubscribe, don't deadlock)
+        assert_eq!(ledger.acquire("job-c", 4), 1);
+        assert_eq!(ledger.release("job-a"), 6);
+        assert_eq!(ledger.acquire("job-d", 100), 5);
+        assert_eq!(ledger.release("missing"), 0);
+        assert_eq!(
+            ledger.snapshot(),
+            vec![
+                ("job-b".to_string(), 2),
+                ("job-c".to_string(), 1),
+                ("job-d".to_string(), 5)
+            ]
+        );
+    }
+
+    #[test]
+    fn container_ledger_reacquire_replaces() {
+        let ledger = ContainerLedger::new(4);
+        assert_eq!(ledger.acquire("j", 2), 2);
+        assert_eq!(ledger.acquire("j", 4), 4, "re-acquire sizes against others only");
+        assert_eq!(ledger.in_use(), 4);
+    }
+
+    #[test]
+    fn fair_acquire_adapts_to_active_jobs() {
+        let ledger = ContainerLedger::new(8);
+        // a lone job gets the whole cluster
+        assert_eq!(ledger.fair_acquire("a"), 8);
+        // a newcomer can only take what's free right now…
+        assert_eq!(ledger.fair_acquire("b"), 1);
+        // …but the incumbent's next wave shrinks to the even split,
+        // and the split converges
+        assert_eq!(ledger.fair_acquire("a"), 4);
+        assert_eq!(ledger.fair_acquire("b"), 4);
+        assert_eq!(ledger.in_use(), 8);
+        // the survivor reclaims the full width after a release
+        ledger.release("a");
+        assert_eq!(ledger.fair_acquire("b"), 8);
     }
 }

@@ -1,14 +1,29 @@
 //! Shuffle: per-partition sorted runs and the streaming k-way merge the
 //! reducers consume.
 //!
-//! Runs are `Vec<KV>`; the merge keeps a binary heap of `(run, index)`
+//! A run is either resident (`Vec<KV>`) or **spilled** — serialized into a
+//! `.shuffle/` object by its map task and streamed back through a
+//! [`SpillCursor`] window (see [`super::spill`]); [`RunSource`] unifies
+//! the two so [`MergeIter`] merges heap-resident and store-resident runs
+//! interchangeably. The merge keeps a binary heap of `(run, index)`
 //! cursors and compares key slices in place — no per-comparison key
 //! allocation, records move exactly once (on yield). Ties break by run
 //! index, so pre-sorted mapper runs merge stably.
+//!
+//! Spill reads can fail mid-merge, but `Iterator::next` cannot return a
+//! `Result` without breaking every reducer; instead the iterator stops and
+//! parks the error in the [`MergeError`] slot handed out by
+//! [`MergeIter::from_sources`], which the engine checks after the reducer
+//! returns (and before committing its output).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::{Arc, Mutex};
 
+use crate::error::Error;
+use crate::error::Result;
+
+use super::spill::SpillCursor;
 use super::KV;
 
 /// One ascending-sorted run of records.
@@ -62,11 +77,65 @@ impl Ord for SmallKey {
     }
 }
 
-/// Streaming merge iterator over sorted runs.
-pub struct MergeIter {
-    runs: Vec<std::vec::IntoIter<KV>>,
+/// One sorted run feeding the merge: resident records or a streaming
+/// spill cursor.
+pub enum RunSource<'a> {
+    /// Heap-resident run (below the spill threshold, or tests).
+    Mem(std::vec::IntoIter<KV>),
+    /// Run spilled to a `.shuffle/` object, streamed back in windows.
+    Spill(SpillCursor<'a>),
+}
+
+impl RunSource<'_> {
+    /// Wrap a resident run.
+    pub fn from_run(run: Run) -> RunSource<'static> {
+        RunSource::Mem(run.into_iter())
+    }
+
+    fn next_kv(&mut self) -> Result<Option<KV>> {
+        match self {
+            RunSource::Mem(it) => Ok(it.next()),
+            RunSource::Spill(c) => c.next_kv(),
+        }
+    }
+
+    fn remaining(&self) -> usize {
+        match self {
+            RunSource::Mem(it) => it.len(),
+            RunSource::Spill(c) => c.remaining() as usize,
+        }
+    }
+}
+
+/// Deferred-error slot for a [`MergeIter`] over fallible (spilled)
+/// sources: if a spill read fails mid-merge the iterator ends early and
+/// the error lands here. Check it after the reducer consumed the
+/// iterator; [`MergeError::take`] yields the first error, if any.
+#[derive(Clone)]
+pub struct MergeError(Arc<Mutex<Option<Error>>>);
+
+impl MergeError {
+    /// Take the parked error (subsequent calls return `None`).
+    pub fn take(&self) -> Option<Error> {
+        self.0.lock().unwrap().take()
+    }
+
+    /// Whether an error is parked (without consuming it).
+    pub fn is_set(&self) -> bool {
+        self.0.lock().unwrap().is_some()
+    }
+}
+
+/// Streaming merge iterator over sorted runs (resident and/or spilled).
+pub struct MergeIter<'a> {
+    runs: Vec<RunSource<'a>>,
     staged: Vec<Option<KV>>,
     heap: BinaryHeap<Cursor>,
+    /// Fast-path halt flag; the mutex in `error` is only touched when a
+    /// source actually fails (the merge is consumed single-threaded, so
+    /// `next` needs no lock per record).
+    dead: bool,
+    error: Arc<Mutex<Option<Error>>>,
 }
 
 struct Cursor {
@@ -96,56 +165,91 @@ impl Ord for Cursor {
     }
 }
 
-impl MergeIter {
-    pub fn new(runs: Vec<Run>) -> Self {
-        let mut iters: Vec<std::vec::IntoIter<KV>> =
-            runs.into_iter().map(|r| r.into_iter()).collect();
-        let mut heap = BinaryHeap::with_capacity(iters.len());
-        let mut staged = Vec::with_capacity(iters.len());
-        for (i, it) in iters.iter_mut().enumerate() {
-            match it.next() {
-                Some(kv) => {
+impl MergeIter<'static> {
+    /// Merge resident runs (the classic in-memory shuffle). Infallible
+    /// sources — the error slot exists but can never fill.
+    pub fn new(runs: Vec<Run>) -> MergeIter<'static> {
+        Self::from_sources(runs.into_iter().map(RunSource::from_run).collect()).0
+    }
+}
+
+impl<'a> MergeIter<'a> {
+    /// Merge heterogeneous sources; the returned [`MergeError`] must be
+    /// checked after consumption when any source can fail (spills).
+    pub fn from_sources(mut sources: Vec<RunSource<'a>>) -> (MergeIter<'a>, MergeError) {
+        let error = Arc::new(Mutex::new(None));
+        let mut dead = false;
+        let mut heap = BinaryHeap::with_capacity(sources.len());
+        let mut staged = Vec::with_capacity(sources.len());
+        for (i, src) in sources.iter_mut().enumerate() {
+            match src.next_kv() {
+                Ok(Some(kv)) => {
                     heap.push(Cursor {
                         key: SmallKey::new(kv.key()),
                         run: i,
                     });
                     staged.push(Some(kv));
                 }
-                None => staged.push(None),
+                Ok(None) => staged.push(None),
+                Err(e) => {
+                    staged.push(None);
+                    error.lock().unwrap().get_or_insert(e);
+                    dead = true;
+                }
             }
         }
-        Self {
-            runs: iters,
-            staged,
-            heap,
-        }
+        let slot = MergeError(Arc::clone(&error));
+        (
+            MergeIter {
+                runs: sources,
+                staged,
+                heap,
+                dead,
+                error,
+            },
+            slot,
+        )
     }
 
-    /// Remaining record count (exact).
+    /// Remaining record count (exact while no source has errored).
     pub fn remaining(&self) -> usize {
         self.staged.iter().filter(|s| s.is_some()).count()
-            + self.runs.iter().map(|r| r.len()).sum::<usize>()
+            + self.runs.iter().map(|r| r.remaining()).sum::<usize>()
     }
 }
 
-impl Iterator for MergeIter {
+impl Iterator for MergeIter<'_> {
     type Item = KV;
 
     fn next(&mut self) -> Option<KV> {
+        if self.dead {
+            return None; // a source died: stop rather than merge a subset
+        }
         let cur = self.heap.pop()?;
         let kv = self.staged[cur.run].take().expect("staged record");
-        if let Some(next) = self.runs[cur.run].next() {
-            debug_assert!(next.key() >= kv.key(), "run {} not sorted", cur.run);
-            self.heap.push(Cursor {
-                key: SmallKey::new(next.key()),
-                run: cur.run,
-            });
-            self.staged[cur.run] = Some(next);
+        match self.runs[cur.run].next_kv() {
+            Ok(Some(next)) => {
+                debug_assert!(next.key() >= kv.key(), "run {} not sorted", cur.run);
+                self.heap.push(Cursor {
+                    key: SmallKey::new(next.key()),
+                    run: cur.run,
+                });
+                self.staged[cur.run] = Some(next);
+            }
+            Ok(None) => {}
+            Err(e) => {
+                self.error.lock().unwrap().get_or_insert(e);
+                self.dead = true;
+                return None; // don't yield past a torn source
+            }
         }
         Some(kv)
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {
+        if self.dead {
+            return (0, Some(0));
+        }
         let n = self.remaining();
         (n, Some(n))
     }
@@ -210,6 +314,93 @@ mod tests {
         let out = merge_runs(runs);
         let keys: Vec<&[u8]> = out.iter().map(|kv| kv.key()).collect();
         assert_eq!(keys, vec![b"a" as &[u8], b"ab", b"abc"]);
+    }
+
+    // -- spilled-source merging (the storage-routed shuffle path) ---------
+
+    use crate::mapreduce::spill::{spill_run, SpillCursor, SPILL_HEADER};
+    use crate::storage::memstore::MemStore;
+
+    fn spill_store() -> MemStore {
+        MemStore::new(u64::MAX, "lru").unwrap()
+    }
+
+    fn spill_source<'a>(store: &'a MemStore, key: &str, run: &[KV]) -> RunSource<'a> {
+        spill_run(store, key, run, 32).unwrap();
+        RunSource::Spill(SpillCursor::open(store, key, 32).unwrap())
+    }
+
+    #[test]
+    fn mixed_mem_and_spill_sources_merge_identically() {
+        let store = spill_store();
+        let mem_run = vec![kv("b", "2"), kv("d", "4")];
+        let spilled = vec![kv("a", "1"), kv("c", "3"), kv("e", "5")];
+        let sources = vec![
+            RunSource::from_run(mem_run.clone()),
+            spill_source(&store, "s/0", &spilled),
+        ];
+        let (it, err) = MergeIter::from_sources(sources);
+        assert_eq!(it.remaining(), 5);
+        let merged: Vec<KV> = it.collect();
+        assert!(err.take().is_none());
+        assert_eq!(merged, merge_runs(vec![mem_run, spilled]));
+    }
+
+    #[test]
+    fn duplicate_keys_across_spilled_runs_stay_run_ordered() {
+        let store = spill_store();
+        let r0 = vec![kv("k", "spill0-a"), kv("k", "spill0-b")];
+        let r1 = vec![kv("k", "spill1-a")];
+        let sources = vec![
+            spill_source(&store, "s/0", &r0),
+            spill_source(&store, "s/1", &r1),
+        ];
+        let (it, err) = MergeIter::from_sources(sources);
+        let vals: Vec<Vec<u8>> = it.map(|kv| kv.value().to_vec()).collect();
+        assert!(err.take().is_none());
+        assert_eq!(vals, vec![b"spill0-a".to_vec(), b"spill0-b".to_vec(), b"spill1-a".to_vec()]);
+    }
+
+    #[test]
+    fn empty_and_single_spill_sources() {
+        let store = spill_store();
+        // empty spilled run: contributes nothing
+        let (it, err) =
+            MergeIter::from_sources(vec![spill_source(&store, "s/empty", &[])]);
+        assert_eq!(it.remaining(), 0);
+        assert_eq!(it.count(), 0);
+        assert!(err.take().is_none());
+        // single spilled run: pure passthrough
+        let run = vec![kv("x", "1"), kv("y", "2"), kv("z", "3")];
+        let (it, err) = MergeIter::from_sources(vec![spill_source(&store, "s/one", &run)]);
+        let out: Vec<KV> = it.collect();
+        assert!(err.take().is_none());
+        assert_eq!(out, run);
+    }
+
+    #[test]
+    fn torn_spill_parks_an_error_instead_of_merging_a_subset() {
+        let store = spill_store();
+        let run: Vec<KV> = (0..40).map(|i| kv(&format!("k{i:03}"), "vvvv")).collect();
+        spill_run(&store, "s/torn", &run, 32).unwrap();
+        // forge a torn spill: drop the tail, then patch the header's
+        // payload length so open() succeeds while the record *count*
+        // still promises 40 — the tear surfaces mid-stream, not at open
+        let bytes = store.read("s/torn").unwrap();
+        let mut torn = bytes[..bytes.len() - 5].to_vec();
+        let payload = (torn.len() - SPILL_HEADER) as u64;
+        torn[16..24].copy_from_slice(&payload.to_le_bytes());
+        store.write("s/torn", &torn).unwrap();
+        let cursor = SpillCursor::open(&store, "s/torn", 32).unwrap();
+        let (it, err) = MergeIter::from_sources(vec![
+            RunSource::Spill(cursor),
+            RunSource::from_run(vec![kv("zzz", "mem")]),
+        ]);
+        let yielded = it.count();
+        assert!(yielded < 41, "iterator must stop at the tear, got {yielded}");
+        assert!(err.is_set(), "the tear must land in the error slot");
+        assert!(err.take().is_some());
+        assert!(err.take().is_none(), "take() consumes");
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Shuffle spill objects: the on-store run format the compute plane uses
+//! to route intermediate job data through the storage hierarchy.
+//!
+//! A *spill* is one ascending-sorted run of [`KV`] records serialized into
+//! a single object under `.shuffle/<job>/<stage>/` (see
+//! [`crate::storage::SHUFFLE_NS`]). Map tasks write spills through v2
+//! [`crate::storage::ObjectWriter`] handles — on the two-level store that
+//! is the paper's mode-(c) write-through path, chunked appends driving
+//! both tier legs, with the atomic commit guaranteeing a reducer never
+//! sees a half-written run. Reducers stream spills back through
+//! [`SpillCursor`]s: windowed [`crate::storage::ObjectReader::read_at`]
+//! calls into a recycled buffer, so a reduce task's memory is bounded by
+//! `runs × shuffle_chunk` instead of the whole partition.
+//!
+//! ## Format
+//!
+//! ```text
+//! header  : magic  b"TLSH" | version u32 LE | records u64 LE | payload u64 LE
+//! records : (key_len u32 LE | val_len u32 LE | key bytes | val bytes)*
+//! ```
+//!
+//! The header pins the exact record count (so
+//! [`MergeIter::remaining`](crate::mapreduce::MergeIter::remaining) stays
+//! exact over spilled runs) and the payload byte length (so truncation is
+//! detected at open, not mid-merge).
+
+use crate::error::{Error, Result};
+use crate::storage::{ObjectReader, ObjectStore};
+
+use super::KV;
+
+/// Spill header magic (`b"TLSH"` — TLStore SHuffle).
+pub const SPILL_MAGIC: [u8; 4] = *b"TLSH";
+/// Spill format version.
+pub const SPILL_VERSION: u32 = 1;
+/// Serialized header size in bytes.
+pub const SPILL_HEADER: usize = 24;
+/// Per-record framing overhead (two u32 length fields).
+const RECORD_OVERHEAD: usize = 8;
+
+/// What [`spill_run`] wrote: enough for a reducer to open and merge the
+/// run without re-statting the store.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpillMeta {
+    /// Object key under [`crate::storage::SHUFFLE_NS`].
+    pub key: String,
+    /// Records in the run.
+    pub records: u64,
+    /// Total object size (header + payload), bytes.
+    pub bytes: u64,
+}
+
+/// Serialize `run` (ascending-sorted) into the object `key`, streaming
+/// `chunk`-byte appends through a v2 writer handle and committing
+/// atomically. Returns the run's [`SpillMeta`].
+///
+/// The caller owns key placement (the executor uses
+/// `.shuffle/<job>/s<stage>/m<task>-p<part>-r<run>`); nothing here is
+/// namespace-specific, which is what the unit tests exploit.
+pub fn spill_run(
+    store: &dyn ObjectStore,
+    key: &str,
+    run: &[KV],
+    chunk: usize,
+) -> Result<SpillMeta> {
+    let chunk = chunk.max(1);
+    let payload: u64 = run
+        .iter()
+        .map(|kv| (kv.bytes.len() + RECORD_OVERHEAD) as u64)
+        .sum();
+    let mut w = store.create(key)?;
+    let mut buf = Vec::with_capacity(chunk.min(SPILL_HEADER + payload as usize));
+    buf.extend_from_slice(&SPILL_MAGIC);
+    buf.extend_from_slice(&SPILL_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(run.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&payload.to_le_bytes());
+    for kv in run {
+        buf.extend_from_slice(&kv.key_len.to_le_bytes());
+        buf.extend_from_slice(&((kv.bytes.len() as u32 - kv.key_len).to_le_bytes()));
+        buf.extend_from_slice(&kv.bytes);
+        if buf.len() >= chunk {
+            w.append(&buf)?;
+            buf.clear();
+        }
+    }
+    if !buf.is_empty() {
+        w.append(&buf)?;
+    }
+    let bytes = w.written();
+    w.commit()?;
+    debug_assert_eq!(bytes, SPILL_HEADER as u64 + payload);
+    Ok(SpillMeta {
+        key: key.to_string(),
+        records: run.len() as u64,
+        bytes,
+    })
+}
+
+/// Streaming cursor over one spill object: decodes records out of
+/// `chunk`-byte [`ObjectReader::read_at`] windows. The cursor borrows the
+/// store only through the reader handle it opened, so it lives inside one
+/// reduce task's scope.
+pub struct SpillCursor<'a> {
+    key: String,
+    reader: Box<dyn ObjectReader + 'a>,
+    /// Next unread object offset.
+    offset: u64,
+    /// Object end (from the reader, cross-checked against the header).
+    end: u64,
+    /// Decode window; `pos` indexes the first unconsumed byte.
+    buf: Vec<u8>,
+    pos: usize,
+    remaining: u64,
+    chunk: usize,
+}
+
+impl<'a> SpillCursor<'a> {
+    /// Open `key` and validate its spill header.
+    pub fn open(store: &'a dyn ObjectStore, key: &str, chunk: usize) -> Result<SpillCursor<'a>> {
+        let reader = store.open(key)?;
+        let len = reader.len();
+        if len < SPILL_HEADER as u64 {
+            return Err(corrupt(key, "shorter than the header"));
+        }
+        let mut header = [0u8; SPILL_HEADER];
+        crate::storage::read_full_at(reader.as_ref(), 0, &mut header)?;
+        if header[..4] != SPILL_MAGIC {
+            return Err(corrupt(key, "bad magic"));
+        }
+        let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        if version != SPILL_VERSION {
+            return Err(corrupt(key, &format!("unsupported version {version}")));
+        }
+        let records = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        let payload = u64::from_le_bytes(header[16..24].try_into().unwrap());
+        if SPILL_HEADER as u64 + payload != len {
+            return Err(corrupt(
+                key,
+                &format!("payload length {payload} vs object size {len}"),
+            ));
+        }
+        Ok(SpillCursor {
+            key: key.to_string(),
+            reader,
+            offset: SPILL_HEADER as u64,
+            end: len,
+            buf: Vec::new(),
+            pos: 0,
+            remaining: records,
+            chunk: chunk.max(RECORD_OVERHEAD),
+        })
+    }
+
+    /// Records not yet yielded (exact, from the header).
+    pub fn remaining(&self) -> u64 {
+        self.remaining
+    }
+
+    /// Ensure at least `need` unconsumed bytes are buffered, reading
+    /// forward in `chunk` windows. Errors if the object ends first.
+    fn ensure(&mut self, need: usize) -> Result<()> {
+        if self.buf.len() - self.pos >= need {
+            return Ok(());
+        }
+        // compact the consumed prefix before growing the window
+        self.buf.drain(..self.pos);
+        self.pos = 0;
+        while self.buf.len() < need {
+            let window = (self.end - self.offset).min(self.chunk.max(need - self.buf.len()) as u64)
+                as usize;
+            if window == 0 {
+                return Err(corrupt(&self.key, "truncated mid-record"));
+            }
+            let start = self.buf.len();
+            self.buf.resize(start + window, 0);
+            crate::storage::read_full_at(
+                self.reader.as_ref(),
+                self.offset,
+                &mut self.buf[start..],
+            )?;
+            self.offset += window as u64;
+        }
+        Ok(())
+    }
+
+    /// Decode the next record, or `Ok(None)` at end of run.
+    pub fn next_kv(&mut self) -> Result<Option<KV>> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        self.ensure(RECORD_OVERHEAD)?;
+        let klen = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        let vlen = u32::from_le_bytes(self.buf[self.pos + 4..self.pos + 8].try_into().unwrap());
+        let total = klen as usize + vlen as usize;
+        // a record longer than what the object can still hold is framing
+        // corruption, not a short buffer
+        if total as u64 > (self.end - self.offset) + (self.buf.len() - self.pos) as u64 {
+            return Err(corrupt(&self.key, "record length exceeds object"));
+        }
+        self.ensure(RECORD_OVERHEAD + total)?;
+        let start = self.pos + RECORD_OVERHEAD;
+        let bytes = self.buf[start..start + total].to_vec();
+        self.pos += RECORD_OVERHEAD + total;
+        self.remaining -= 1;
+        Ok(Some(KV::from_record(bytes, klen)))
+    }
+}
+
+fn corrupt(key: &str, what: &str) -> Error {
+    Error::Job(format!("shuffle spill `{key}` corrupt: {what}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::memstore::MemStore;
+
+    fn store() -> MemStore {
+        MemStore::new(u64::MAX, "lru").unwrap()
+    }
+
+    fn kv(k: &str, v: &str) -> KV {
+        KV::new(k.as_bytes(), v.as_bytes())
+    }
+
+    fn drain(mut c: SpillCursor<'_>) -> Vec<KV> {
+        let mut out = Vec::new();
+        while let Some(kv) = c.next_kv().unwrap() {
+            out.push(kv);
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_preserves_records() {
+        let s = store();
+        let run = vec![kv("a", "1"), kv("bb", ""), kv("ccc", "333")];
+        let meta = spill_run(&s, "sp/r0", &run, 1 << 20).unwrap();
+        assert_eq!(meta.records, 3);
+        assert_eq!(s.stat("sp/r0").unwrap().size, meta.bytes);
+        let c = SpillCursor::open(&s, "sp/r0", 1 << 20).unwrap();
+        assert_eq!(c.remaining(), 3);
+        assert_eq!(drain(c), run);
+    }
+
+    #[test]
+    fn tiny_windows_reassemble_records() {
+        // window smaller than a record: ensure() must grow past chunk
+        let s = store();
+        let run: Vec<KV> = (0..50)
+            .map(|i| KV::new(format!("key-{i:04}").as_bytes(), &vec![i as u8; 100]))
+            .collect();
+        spill_run(&s, "sp/tiny", &run, 16).unwrap();
+        let c = SpillCursor::open(&s, "sp/tiny", 16).unwrap();
+        assert_eq!(drain(c), run);
+    }
+
+    #[test]
+    fn empty_run_roundtrips() {
+        let s = store();
+        let meta = spill_run(&s, "sp/empty", &[], 64).unwrap();
+        assert_eq!(meta.records, 0);
+        assert_eq!(meta.bytes, SPILL_HEADER as u64);
+        let mut c = SpillCursor::open(&s, "sp/empty", 64).unwrap();
+        assert_eq!(c.remaining(), 0);
+        assert!(c.next_kv().unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_magic_rejected_at_open() {
+        let s = store();
+        s.write("sp/junk", b"not a spill object at all").unwrap();
+        assert!(SpillCursor::open(&s, "sp/junk", 64).is_err());
+        s.write("sp/short", b"TL").unwrap();
+        assert!(SpillCursor::open(&s, "sp/short", 64).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected_at_open() {
+        let s = store();
+        let run = vec![kv("k", "vvvv")];
+        spill_run(&s, "sp/full", &run, 64).unwrap();
+        let full = s.read("sp/full").unwrap();
+        s.write("sp/cut", &full[..full.len() - 2]).unwrap();
+        // header says more payload than the object holds
+        assert!(SpillCursor::open(&s, "sp/cut", 64).is_err());
+    }
+
+    #[test]
+    fn lying_record_length_is_an_error_not_a_hang() {
+        let s = store();
+        let run = vec![kv("k", "v")];
+        spill_run(&s, "sp/lie", &run, 64).unwrap();
+        let mut bytes = s.read("sp/lie").unwrap();
+        // inflate the value length field beyond the object
+        bytes[SPILL_HEADER + 4..SPILL_HEADER + 8].copy_from_slice(&u32::MAX.to_le_bytes());
+        s.write("sp/lie", &bytes).unwrap();
+        let mut c = SpillCursor::open(&s, "sp/lie", 64).unwrap();
+        assert!(c.next_kv().is_err());
+    }
+}

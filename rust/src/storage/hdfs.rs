@@ -20,8 +20,8 @@ use crate::error::{Error, Result};
 use crate::storage::block::checksum;
 use crate::storage::pfs::remove_existing;
 use crate::storage::{
-    clamped_len, is_writer_temp, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter, Recover,
-    RecoveryReport,
+    clamped_len, is_writer_temp, reap_shuffle, ObjectMeta, ObjectReader, ObjectStore,
+    ObjectWriter, Recover, RecoveryReport, SHUFFLE_NS,
 };
 use crate::util::pool::ThreadPool;
 use crate::util::rng::SplitMix64;
@@ -176,6 +176,9 @@ impl HdfsLike {
 
         // pass 2: replica healing
         for key in self.list("") {
+            if key.starts_with(SHUFFLE_NS) {
+                continue; // transient — pass 3 deletes it, don't heal it
+            }
             let present: Vec<usize> = (0..self.node_dirs.len())
                 .filter(|&n| self.replica_path(&key, n).exists())
                 .collect();
@@ -206,6 +209,12 @@ impl HdfsLike {
                 report.repaired.push(key);
             }
         }
+
+        // pass 3: reap shuffle spill residue — transient job data that a
+        // crashed run left behind (healing above may first have restored
+        // a spill's replica set; deleting it afterwards is still correct,
+        // the data is recomputable by contract)
+        report.shuffle_reaped += reap_shuffle(self)?;
         Ok(report)
     }
 }

@@ -53,6 +53,19 @@ use std::fmt;
 
 use crate::error::{Error, Result};
 
+/// Namespace prefix for MapReduce shuffle spill objects
+/// (`.shuffle/<job>/<stage>/...`). The compute plane
+/// ([`crate::mapreduce::JobServer`]) streams every map task's sorted runs
+/// through writer handles under this prefix so intermediate job data rides
+/// the same two-level data path as job input and output (the paper's
+/// thesis applied to the shuffle). Objects here are **transient by
+/// contract**: a finished stage deletes its spill set, a finished job
+/// deletes its whole `.shuffle/<job>/` subtree, and [`Recover::recover`]
+/// reaps anything that survives a crash — shuffle data is recomputable,
+/// so recovery *deletes* it (it is never quarantined and never
+/// resurrected; see `docs/FAULT_MODEL.md`).
+pub const SHUFFLE_NS: &str = ".shuffle/";
+
 /// The paper's write modes (Figure 4 a–c).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum WriteMode {
@@ -245,6 +258,12 @@ pub struct RecoveryReport {
     /// Keys restored to full health (e.g. re-replicated or healed to a
     /// consistent replica set).
     pub repaired: Vec<String>,
+    /// Transient shuffle spill objects (under [`SHUFFLE_NS`]) deleted by
+    /// recovery. Shuffle data is recomputable intermediate state: a crash
+    /// mid-job may leave spills behind, and recovery drops them outright
+    /// (deleted, not quarantined — resurrecting a partial spill set would
+    /// feed a reducer a prefix).
+    pub shuffle_reaped: u64,
 }
 
 impl RecoveryReport {
@@ -255,6 +274,7 @@ impl RecoveryReport {
             && self.spills_dropped == 0
             && self.quarantined.is_empty()
             && self.repaired.is_empty()
+            && self.shuffle_reaped == 0
     }
 
     /// Fold another report (e.g. an inner tier's) into this one.
@@ -264,6 +284,7 @@ impl RecoveryReport {
         self.spills_dropped += other.spills_dropped;
         self.quarantined.extend(other.quarantined);
         self.repaired.extend(other.repaired);
+        self.shuffle_reaped += other.shuffle_reaped;
     }
 }
 
@@ -274,10 +295,11 @@ impl fmt::Display for RecoveryReport {
         }
         write!(
             f,
-            "temps_removed={} orphans_removed={} spills_dropped={} quarantined={:?} repaired={:?}",
+            "temps_removed={} orphans_removed={} spills_dropped={} shuffle_reaped={} quarantined={:?} repaired={:?}",
             self.temps_removed,
             self.orphans_removed,
             self.spills_dropped,
+            self.shuffle_reaped,
             self.quarantined,
             self.repaired
         )
@@ -420,6 +442,35 @@ pub(crate) fn copy_clamped(src: &[u8], offset: u64, buf: &mut [u8]) -> usize {
     n
 }
 
+/// Delete every object under `prefix` through the store's own API,
+/// returning how many were removed. A key that vanishes mid-reap (e.g. a
+/// concurrent delete) is not an error; any other delete failure aborts
+/// the sweep. The one shared cleanup kernel behind shuffle reaping — the
+/// executor's per-job/per-round sweeps, [`JobServer::shutdown`]'s
+/// per-id sweep, and the recovery passes all route through it.
+///
+/// [`JobServer::shutdown`]: crate::mapreduce::JobServer::shutdown
+pub fn reap_prefix(store: &dyn ObjectStore, prefix: &str) -> Result<u64> {
+    let mut reaped = 0;
+    for key in store.list(prefix) {
+        match store.delete(&key) {
+            Ok(()) | Err(Error::NotFound(_)) => reaped += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(reaped)
+}
+
+/// Delete every object under [`SHUFFLE_NS`]: shuffle spills are
+/// transient job state, and the backends' [`Recover::recover`] passes
+/// reap them with this helper so a crashed job cannot leave
+/// intermediate data behind. Do **not** call this while a
+/// [`crate::mapreduce::JobServer`] may be running jobs against the
+/// store — live jobs own their `.shuffle/<id>/` subtrees.
+pub fn reap_shuffle(store: &dyn ObjectStore) -> Result<u64> {
+    reap_prefix(store, SHUFFLE_NS)
+}
+
 /// Convenience: total bytes under a prefix, via [`ObjectStore::stat`].
 ///
 /// A key deleted between `list` and `stat` counts as 0 bytes instead of
@@ -554,6 +605,30 @@ mod tests {
         fn kind(&self) -> &'static str {
             "ghost"
         }
+    }
+
+    #[test]
+    fn reap_shuffle_removes_only_the_namespace() {
+        let s = handle_store();
+        s.write(".shuffle/job-1/s0/m00000-p00000-r0", b"run").unwrap();
+        s.write(".shuffle/job-2/inter-1/part-r-00000", b"inter").unwrap();
+        s.write("user/data", b"keep").unwrap();
+        assert_eq!(reap_shuffle(&s).unwrap(), 2);
+        assert!(s.list(SHUFFLE_NS).is_empty());
+        assert!(s.exists("user/data"));
+        assert_eq!(reap_shuffle(&s).unwrap(), 0, "idempotent");
+    }
+
+    #[test]
+    fn recovery_report_counts_shuffle_reaping() {
+        let mut r = RecoveryReport::default();
+        assert!(r.is_clean());
+        r.shuffle_reaped = 3;
+        assert!(!r.is_clean());
+        assert!(r.to_string().contains("shuffle_reaped=3"));
+        let mut total = RecoveryReport::default();
+        total.absorb(r);
+        assert_eq!(total.shuffle_reaped, 3);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::storage::block::{checksum, verify_checksum, Crc32};
 use crate::storage::layout::{StripeLayout, StripeSegment};
 use crate::storage::{
     clamped_len, is_writer_temp, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter, Recover,
-    RecoveryReport,
+    RecoveryReport, SHUFFLE_NS,
 };
 use crate::util::pool::ThreadPool;
 
@@ -418,6 +418,12 @@ impl Pfs {
     ///    (a crashed commit renamed them into place but died before the
     ///    meta landed) are removed; without metadata they were never
     ///    visible.
+    /// 5. **Shuffle residue** — objects under [`SHUFFLE_NS`] are deleted,
+    ///    never quarantined and never CRC-read (pass 3 drops them on
+    ///    sight, intact or torn, before spending the verification read;
+    ///    this pass sweeps any stragglers): shuffle spills are
+    ///    recomputable intermediate job data, and a recovered store must
+    ///    not hand a rebooted job server another job's stale runs.
     ///
     /// Cost: pass 3 reads every object once — recovery is a cold path and
     /// this is the only way to catch a mixed-version commit.
@@ -452,6 +458,12 @@ impl Pfs {
             let meta = match self.read_meta(&key) {
                 Ok(m) => m,
                 Err(Error::NotFound(_)) => continue, // raced a delete
+                Err(_) if key.starts_with(SHUFFLE_NS) => {
+                    // torn shuffle spill: transient data, drop it outright
+                    self.delete(&key)?;
+                    report.shuffle_reaped += 1;
+                    continue;
+                }
                 Err(_) => {
                     // undecodable metadata: park it
                     self.quarantine(&key)?;
@@ -459,6 +471,13 @@ impl Pfs {
                     continue;
                 }
             };
+            if key.starts_with(SHUFFLE_NS) {
+                // transient spill: reaped regardless of integrity, so
+                // skip the CRC read pass 3 would otherwise spend on it
+                self.delete(&key)?;
+                report.shuffle_reaped += 1;
+                continue;
+            }
             if meta.servers > self.server_dirs.len() {
                 // Not corruption — the store was reopened with fewer
                 // servers than the object was written across. Quarantining
@@ -492,6 +511,11 @@ impl Pfs {
                 }
             }
         }
+
+        // pass 5: reap surviving (intact) shuffle spills — transient by
+        // contract, a rebooted job server recomputes them (the shared
+        // helper tolerates keys vanishing mid-reap)
+        report.shuffle_reaped += crate::storage::reap_shuffle(self)?;
         Ok(report)
     }
 }

@@ -421,9 +421,20 @@ impl TwoLevelStore {
         Ok(())
     }
 
+    /// Whether `key` is a dot-prefixed key callers may not write:
+    /// everything under `.` is reserved for store internals (`.dirty/`,
+    /// `.wip/`, `.quarantine/`, the geometry marker) **except** the
+    /// [`SHUFFLE_NS`](crate::storage::SHUFFLE_NS) shuffle namespace,
+    /// which the compute plane deliberately routes through the store so
+    /// intermediate job data rides the two-level tiers (and recovery can
+    /// reap it).
+    fn is_reserved_key(key: &str) -> bool {
+        key.starts_with('.') && !key.starts_with(crate::storage::SHUFFLE_NS)
+    }
+
     /// Write under an explicit mode (Figure 4 a–c).
     pub fn write(&self, key: &str, data: &[u8], mode: WriteMode) -> Result<()> {
-        if key.starts_with('.') {
+        if Self::is_reserved_key(key) {
             return Err(Error::InvalidArg(
                 "keys starting with '.' are reserved".into(),
             ));
@@ -844,6 +855,10 @@ impl TwoLevelStore {
     ///    an *unknown* object belong to a previous incarnation's
     ///    uncommitted mode-(a) data — they are quarantined, never
     ///    resurrected (a partial spill set would be a prefix).
+    /// 5. [`SHUFFLE_NS`](crate::storage::SHUFFLE_NS) shuffle spills are
+    ///    reaped across both tiers: a job that died mid-shuffle leaves
+    ///    only recomputable intermediate data, which recovery deletes
+    ///    outright (never quarantines — see `docs/FAULT_MODEL.md`).
     pub fn recover(&self) -> Result<RecoveryReport> {
         let mut report = self.pfs.recover_pfs()?;
 
@@ -894,6 +909,14 @@ impl TwoLevelStore {
                 }
             }
         }
+
+        // pass 5: reap shuffle residue left in *this* store's table. The
+        // PFS pass already deleted (and counted) the on-disk spill
+        // objects, and pass 3 dropped their table entries; this catches
+        // anything that never reached the PFS (e.g. an in-process recover
+        // over a live store holding unpersisted shuffle entries). The
+        // shared helper tolerates keys vanishing mid-reap.
+        report.shuffle_reaped += crate::storage::reap_shuffle(self)?;
         Ok(report)
     }
 
@@ -957,7 +980,7 @@ impl TwoLevelStore {
     /// fresh key) until `commit`; `abort` or dropping the writer
     /// uncommitted leaves no trace in either tier.
     pub fn create_with(&self, key: &str, mode: WriteMode) -> Result<Box<dyn ObjectWriter + '_>> {
-        if key.starts_with('.') {
+        if Self::is_reserved_key(key) {
             return Err(Error::InvalidArg(
                 "keys starting with '.' are reserved".into(),
             ));
@@ -1673,6 +1696,42 @@ mod tests {
         let dir = TempDir::new("tls").unwrap();
         let s = store(&dir, 4096, 256);
         assert!(s.write(".dirty/evil", b"x", WriteMode::Bypass).is_err());
+        assert!(s.create_with(".wip/evil", WriteMode::WriteThrough).is_err());
+        assert!(s.write(".quarantine/evil", b"x", WriteMode::WriteThrough).is_err());
+    }
+
+    #[test]
+    fn shuffle_namespace_is_writable_and_reaped_by_recover() {
+        // the compute plane's carve-out: `.shuffle/` keys flow through
+        // the normal two-level write path (both tiers), and recover()
+        // deletes whatever a dead job left there
+        let dir = TempDir::new("tls").unwrap();
+        let s = store(&dir, 64 << 10, 256);
+        let data = rand_data(700, 21);
+        s.write(".shuffle/job-1/s0/m00000-p00000-r0", &data, WriteMode::WriteThrough)
+            .unwrap();
+        assert_eq!(
+            s.read(".shuffle/job-1/s0/m00000-p00000-r0", ReadMode::TwoLevel).unwrap(),
+            data
+        );
+        s.write("user/keep", &rand_data(100, 22), WriteMode::WriteThrough).unwrap();
+        let report = s.recover().unwrap();
+        assert!(report.shuffle_reaped >= 1, "{report}");
+        assert!(report.quarantined.is_empty(), "shuffle is dropped, not parked: {report}");
+        assert!(s.list(crate::storage::SHUFFLE_NS).is_empty());
+        assert!(s.exists("user/keep"));
+
+        // a crashed incarnation's spills are reaped on reboot too
+        s.write(".shuffle/job-2/s0/m00001-p00000-r0", &data, WriteMode::WriteThrough)
+            .unwrap();
+        drop(s);
+        let s = store(&dir, 64 << 10, 256);
+        assert!(s.exists(".shuffle/job-2/s0/m00001-p00000-r0"), "reopen sees the spill");
+        let report = s.recover().unwrap();
+        assert!(report.shuffle_reaped >= 1, "{report}");
+        assert!(s.list(crate::storage::SHUFFLE_NS).is_empty());
+        assert!(s.exists("user/keep"));
+        assert!(s.recover().unwrap().is_clean(), "second pass is clean");
     }
 
     #[test]

@@ -368,7 +368,7 @@ impl Mapper for SortMapper {
 pub struct SortReducer;
 
 impl Reducer for SortReducer {
-    fn reduce(&self, _p: u32, records: MergeIter, out: &mut Vec<u8>) -> Result<()> {
+    fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
         out.reserve(records.remaining() * RECORD_SIZE);
         for kv in records {
             out.extend_from_slice(&kv.bytes);

@@ -20,8 +20,15 @@ enum Msg {
 }
 
 /// A fixed pool of worker threads.
+///
+/// The pool is `Sync` and safe to share behind an `Arc`: the
+/// [`crate::mapreduce::JobServer`] runs many concurrent jobs over one
+/// pool, each driver thread calling [`ThreadPool::map`] independently, so
+/// their tasks interleave at queue granularity. (The sender sits behind a
+/// a mutex rather than relying on `mpsc::Sender: Sync`, which only newer
+/// toolchains provide; submission is not a hot path.)
 pub struct ThreadPool {
-    tx: Sender<Msg>,
+    tx: Mutex<Sender<Msg>>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
     panics: Arc<AtomicUsize>,
@@ -45,7 +52,7 @@ impl ThreadPool {
             })
             .collect();
         Self {
-            tx,
+            tx: Mutex::new(tx),
             workers,
             size,
             panics,
@@ -73,6 +80,8 @@ impl ThreadPool {
     /// Fire-and-forget execution.
     pub fn execute(&self, task: impl FnOnce() + Send + 'static) {
         self.tx
+            .lock()
+            .unwrap()
             .send(Msg::Run(Box::new(task)))
             .expect("pool is alive");
     }
@@ -87,10 +96,12 @@ impl ThreadPool {
     {
         let f = Arc::new(f);
         let (rtx, rrx): (Sender<(usize, ResultSlot<T>)>, Receiver<_>) = channel();
+        // clone the task sender once: n sends without re-taking the lock
+        let task_tx = self.tx.lock().unwrap().clone();
         for i in 0..n {
             let f = Arc::clone(&f);
             let rtx = rtx.clone();
-            self.execute(move || {
+            let task: Task = Box::new(move || {
                 let out = std::panic::catch_unwind(AssertUnwindSafe(|| f(i)));
                 let slot = match out {
                     Ok(v) => ResultSlot::Ok(v),
@@ -101,6 +112,7 @@ impl ThreadPool {
                 };
                 let _ = rtx.send((i, slot));
             });
+            task_tx.send(Msg::Run(task)).expect("pool is alive");
         }
         drop(rtx);
         let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -155,9 +167,11 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, panics: Arc<AtomicUsize>) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
+        let tx = self.tx.lock().unwrap();
         for _ in &self.workers {
-            let _ = self.tx.send(Msg::Shutdown);
+            let _ = tx.send(Msg::Shutdown);
         }
+        drop(tx);
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -217,5 +231,26 @@ mod tests {
     #[test]
     fn size_clamped_to_one() {
         assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+
+    #[test]
+    fn pool_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ThreadPool>();
+    }
+
+    #[test]
+    fn concurrent_map_calls_interleave_safely() {
+        // two "driver" threads sharing one pool, the JobServer shape
+        let pool = Arc::new(ThreadPool::new(4));
+        std::thread::scope(|s| {
+            for t in 0..2u64 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    let out = pool.map(50, move |i| t * 1000 + i as u64).unwrap();
+                    assert_eq!(out, (0..50).map(|i| t * 1000 + i).collect::<Vec<_>>());
+                });
+            }
+        });
     }
 }

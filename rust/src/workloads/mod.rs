@@ -1,0 +1,135 @@
+//! Named built-in workloads for the Job API v2 — the "many scenarios"
+//! the ROADMAP asks the compute plane to prove.
+//!
+//! Each workload is a **multi-stage pipeline** (not a single map→reduce
+//! call) with a deterministic generator and an independent verifier, so
+//! the CLI (`tlstore job submit --workload …`), the e2e tests, and CI can
+//! all drive the same scenarios from a seed and check the results without
+//! trusting the pipeline:
+//!
+//! - [`wordcount`] — word frequency (map→reduce) feeding a global top-k
+//!   selection (map→reduce): the classic two-round chain whose round-1
+//!   output is round-2 input.
+//! - [`sessions`] — log sessionization: group interleaved event logs by
+//!   user, split per-user timelines into sessions at an inactivity gap
+//!   (reduce 1), then histogram session lengths (reduce 2). The workload
+//!   class `examples/log_analytics.rs` runs against a live store.
+//!
+//! Both pipelines shuffle every intermediate byte through the
+//! `.shuffle/` storage namespace under the default spill threshold,
+//! which is exactly what makes them useful as conformance scenarios.
+
+pub mod sessions;
+pub mod wordcount;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::PipelineSpec;
+use crate::storage::ObjectStore;
+
+/// A workload the CLI can name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NamedWorkload {
+    /// Two-round wordcount → global top-k.
+    WordCountTopK,
+    /// Two-round log sessionization → session-length histogram.
+    LogSessions,
+}
+
+impl NamedWorkload {
+    /// All built-ins, in CLI listing order.
+    pub fn all() -> &'static [NamedWorkload] {
+        &[NamedWorkload::WordCountTopK, NamedWorkload::LogSessions]
+    }
+
+    /// CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            NamedWorkload::WordCountTopK => "wordcount-topk",
+            NamedWorkload::LogSessions => "log-sessions",
+        }
+    }
+
+    /// One-line description for `tlstore job workloads`.
+    pub fn description(&self) -> &'static str {
+        match self {
+            NamedWorkload::WordCountTopK => {
+                "word frequency over generated text, then a global top-k (2 rounds)"
+            }
+            NamedWorkload::LogSessions => {
+                "sessionize interleaved event logs per user, histogram session lengths (2 rounds)"
+            }
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "wordcount-topk" | "wordcount" | "topk" => Ok(NamedWorkload::WordCountTopK),
+            "log-sessions" | "sessions" | "sessionize" => Ok(NamedWorkload::LogSessions),
+            other => Err(Error::InvalidArg(format!(
+                "unknown workload `{other}` (try: {})",
+                NamedWorkload::all()
+                    .iter()
+                    .map(|w| w.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))),
+        }
+    }
+
+    /// Generate this workload's input under `{root}in/` (deterministic in
+    /// `seed`; `scale` is workload-specific: documents for wordcount,
+    /// users for sessions). Returns bytes written.
+    pub fn generate(&self, store: &dyn ObjectStore, root: &str, scale: u64, seed: u64) -> Result<u64> {
+        match self {
+            NamedWorkload::WordCountTopK => {
+                wordcount::generate_text(store, &format!("{root}in/"), scale.max(1) as u32, 2000, seed)
+            }
+            NamedWorkload::LogSessions => {
+                sessions::generate_logs(store, &format!("{root}in/"), scale.max(1) as u32, 40, seed)
+            }
+        }
+    }
+
+    /// Build this workload's pipeline: `{root}in/` → `{root}out/`.
+    pub fn pipeline(&self, root: &str, reducers: u32) -> Result<PipelineSpec> {
+        match self {
+            NamedWorkload::WordCountTopK => wordcount::pipeline(
+                &format!("{root}in/"),
+                &format!("{root}out/"),
+                reducers,
+                wordcount::DEFAULT_TOP_K,
+            ),
+            NamedWorkload::LogSessions => {
+                sessions::pipeline(&format!("{root}in/"), &format!("{root}out/"), reducers)
+            }
+        }
+    }
+
+    /// Verify `{root}out/` against ground truth recomputed from
+    /// `{root}in/`; returns a human summary, errors on any mismatch.
+    pub fn verify(&self, store: &dyn ObjectStore, root: &str) -> Result<String> {
+        match self {
+            NamedWorkload::WordCountTopK => {
+                wordcount::verify_topk(store, &format!("{root}in/"), &format!("{root}out/"))
+            }
+            NamedWorkload::LogSessions => {
+                sessions::verify_histogram(store, &format!("{root}in/"), &format!("{root}out/"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for w in NamedWorkload::all() {
+            assert_eq!(&NamedWorkload::parse(w.name()).unwrap(), w);
+            assert!(!w.description().is_empty());
+        }
+        assert!(NamedWorkload::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,401 @@
+//! Log sessionization: group interleaved event logs per user, split each
+//! user's timeline into sessions at an inactivity gap, then histogram the
+//! session lengths — the log-analytics workload class run as a two-round
+//! pipeline.
+//!
+//! Input objects hold text lines `ts user action` with users interleaved
+//! across objects (the generator round-robins), so sessionization
+//! genuinely needs the shuffle: round 1 re-keys events by user and the
+//! reducer rebuilds each user's timeline; round 2 re-keys the emitted
+//! `user events duration` session lines by event-count bucket and
+//! histograms them.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::{
+    InputSplit, MapContext, Mapper, MergeIter, PipelineSpec, Reducer, KV,
+};
+use crate::storage::{ObjectStore, ObjectWriter as _};
+use crate::util::rng::Pcg32;
+
+/// Inactivity gap (seconds) that closes a session.
+pub const SESSION_GAP: u64 = 1800;
+/// Histogram buckets: session lengths `1..=MAX_BUCKET`, longer sessions
+/// collapse into `MAX_BUCKET`.
+pub const MAX_BUCKET: u32 = 10;
+/// Synthetic action names (flavor only; sessionization keys on time).
+const ACTIONS: &[&str] = &["open", "read", "write", "query", "close"];
+
+/// Generate `users × events_per_user` events as interleaved log lines
+/// under `{prefix}log-{i:04}` (one object per ~512 events),
+/// deterministically from `seed`. Per-user gaps mix short activity with
+/// past-[`SESSION_GAP`] idle stretches so every run produces a spread of
+/// session lengths. Returns bytes written.
+pub fn generate_logs(
+    store: &dyn ObjectStore,
+    prefix: &str,
+    users: u32,
+    events_per_user: usize,
+    seed: u64,
+) -> Result<u64> {
+    let users = users.max(1);
+    // per-user timelines
+    let mut timelines: Vec<Vec<u64>> = Vec::with_capacity(users as usize);
+    for u in 0..users {
+        let mut rng = Pcg32::for_task(seed, u as u64);
+        let mut ts = 1_700_000_000 + rng.gen_range(1000) as u64;
+        let mut line = Vec::with_capacity(events_per_user);
+        for _ in 0..events_per_user {
+            line.push(ts);
+            // ~1/4 of gaps cross the session threshold
+            let gap = if rng.gen_range(4) == 0 {
+                SESSION_GAP + 1 + rng.gen_range(7200) as u64
+            } else {
+                1 + rng.gen_range(SESSION_GAP as u32 / 2) as u64
+            };
+            ts += gap;
+        }
+        timelines.push(line);
+    }
+    // interleave: event i of every user, round-robin — one user's session
+    // is smeared across many objects
+    let mut written = 0u64;
+    let mut part = 0u32;
+    let mut w = store.create(&format!("{prefix}log-{part:04}"))?;
+    let mut buf = Vec::new();
+    let mut lines_in_part = 0usize;
+    let mut action_rng = Pcg32::new(seed, 0xAC);
+    for i in 0..events_per_user {
+        for (u, line) in timelines.iter().enumerate() {
+            let action = ACTIONS[action_rng.gen_range(ACTIONS.len() as u32) as usize];
+            buf.extend_from_slice(format!("{} {u} {action}\n", line[i]).as_bytes());
+            lines_in_part += 1;
+            if buf.len() >= 1 << 16 {
+                w.append(&buf)?;
+                buf.clear();
+            }
+            if lines_in_part >= 512 {
+                if !buf.is_empty() {
+                    w.append(&buf)?;
+                    buf.clear();
+                }
+                written += w.written();
+                w.commit()?;
+                part += 1;
+                w = store.create(&format!("{prefix}log-{part:04}"))?;
+                lines_in_part = 0;
+            }
+        }
+    }
+    if !buf.is_empty() {
+        w.append(&buf)?;
+    }
+    written += w.written();
+    w.commit()?;
+    Ok(written)
+}
+
+fn parse_log_line(line: &[u8]) -> Option<(u64, u32)> {
+    let text = std::str::from_utf8(line).ok()?;
+    let mut fields = text.split(' ');
+    let ts = fields.next()?.parse().ok()?;
+    let user = fields.next()?.parse().ok()?;
+    Some((ts, user))
+}
+
+/// Round-1 mapper: `(ts, user, action)` line → key `user` (BE), value
+/// `ts` (LE), partitioned by user.
+pub struct SessionizeMapper;
+
+impl Mapper for SessionizeMapper {
+    fn map(&self, split: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+        for line in data.split(|b| *b == b'\n') {
+            if line.is_empty() {
+                continue;
+            }
+            let (ts, user) = parse_log_line(line)
+                .ok_or_else(|| Error::Job(format!("{}: bad log line", split.object)))?;
+            let p = user % ctx.num_partitions();
+            ctx.emit(p, KV::new(&user.to_be_bytes(), &ts.to_le_bytes()));
+        }
+        Ok(())
+    }
+}
+
+/// Split one user's ascending timestamps into sessions at
+/// [`SESSION_GAP`]; yields `(events, duration)` per session.
+fn sessionize(times: &[u64]) -> Vec<(u32, u64)> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    for i in 1..=times.len() {
+        if i == times.len() || times[i] - times[i - 1] > SESSION_GAP {
+            out.push(((i - start) as u32, times[i - 1] - times[start]));
+            start = i;
+        }
+    }
+    out
+}
+
+/// Round-1 reducer: rebuild each user's timeline from the merged stream,
+/// sort it, and emit one `user events duration` line per session.
+pub struct SessionReducer;
+
+impl Reducer for SessionReducer {
+    fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
+        let flush = |out: &mut Vec<u8>, user: &[u8], times: &mut Vec<u64>| {
+            times.sort_unstable();
+            let uid = u32::from_be_bytes(user.try_into().expect("u32 user key"));
+            for (events, duration) in sessionize(times) {
+                out.extend_from_slice(format!("{uid} {events} {duration}\n").as_bytes());
+            }
+            times.clear();
+        };
+        let mut cur: Option<(Vec<u8>, Vec<u64>)> = None;
+        for kv in records {
+            let ts = u64::from_le_bytes(
+                kv.value()
+                    .try_into()
+                    .map_err(|_| Error::Job("bad session value".into()))?,
+            );
+            match &mut cur {
+                Some((user, times)) if user.as_slice() == kv.key() => times.push(ts),
+                _ => {
+                    if let Some((user, mut times)) = cur.take() {
+                        flush(out, &user, &mut times);
+                    }
+                    cur = Some((kv.key().to_vec(), vec![ts]));
+                }
+            }
+        }
+        if let Some((user, mut times)) = cur.take() {
+            flush(out, &user, &mut times);
+        }
+        Ok(())
+    }
+}
+
+/// Round-2 mapper: `user events duration` line → key = length bucket
+/// (BE), value = duration; single partition for the global histogram.
+pub struct BucketMapper;
+
+impl Mapper for BucketMapper {
+    fn map(&self, split: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+        for line in data.split(|b| *b == b'\n') {
+            if line.is_empty() {
+                continue;
+            }
+            let text = std::str::from_utf8(line)
+                .map_err(|_| Error::Job(format!("{}: non-utf8 session line", split.object)))?;
+            let mut f = text.split(' ');
+            let (_user, events, duration): (u32, u32, u64) = (
+                f.next().and_then(|s| s.parse().ok()).ok_or_else(|| bad(split))?,
+                f.next().and_then(|s| s.parse().ok()).ok_or_else(|| bad(split))?,
+                f.next().and_then(|s| s.parse().ok()).ok_or_else(|| bad(split))?,
+            );
+            let bucket = events.min(MAX_BUCKET);
+            ctx.emit(0, KV::new(&bucket.to_be_bytes(), &duration.to_le_bytes()));
+        }
+        Ok(())
+    }
+}
+
+fn bad(split: &InputSplit) -> Error {
+    Error::Job(format!("{}: bad session line", split.object))
+}
+
+/// Round-2 reducer: per bucket, session count and mean duration →
+/// `len=<bucket> sessions=<n> avg_duration=<secs>` lines (ascending
+/// bucket, because the merge is keyed by bucket).
+pub struct HistogramReducer;
+
+impl Reducer for HistogramReducer {
+    fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
+        let flush = |out: &mut Vec<u8>, bucket: &[u8], n: u64, dur: u64| {
+            let b = u32::from_be_bytes(bucket.try_into().expect("u32 bucket"));
+            out.extend_from_slice(
+                format!("len={b} sessions={n} avg_duration={:.1}\n", dur as f64 / n as f64)
+                    .as_bytes(),
+            );
+        };
+        let mut cur: Option<(Vec<u8>, u64, u64)> = None;
+        for kv in records {
+            let dur = u64::from_le_bytes(
+                kv.value()
+                    .try_into()
+                    .map_err(|_| Error::Job("bad histogram value".into()))?,
+            );
+            match &mut cur {
+                Some((b, n, total)) if b.as_slice() == kv.key() => {
+                    *n += 1;
+                    *total += dur;
+                }
+                _ => {
+                    if let Some((b, n, total)) = cur.take() {
+                        flush(out, &b, n, total);
+                    }
+                    cur = Some((kv.key().to_vec(), 1, dur));
+                }
+            }
+        }
+        if let Some((b, n, total)) = cur.take() {
+            flush(out, &b, n, total);
+        }
+        Ok(())
+    }
+}
+
+/// The two-round spec: `input` logs → sessions → histogram under
+/// `output`.
+pub fn pipeline(input: &str, output: &str, session_partitions: u32) -> Result<PipelineSpec> {
+    PipelineSpec::builder("log-sessions")
+        .input(input)
+        .output(output)
+        .split_size(u64::MAX) // log lines must stay whole per object
+        .map(std::sync::Arc::new(SessionizeMapper))
+        .reduce(std::sync::Arc::new(SessionReducer), session_partitions.max(1))
+        .map(std::sync::Arc::new(BucketMapper))
+        .reduce(std::sync::Arc::new(HistogramReducer), 1)
+        .build()
+}
+
+/// Ground truth: `(bucket → (sessions, total_duration))` recomputed
+/// sequentially from the raw logs.
+pub fn expected_histogram(
+    store: &dyn ObjectStore,
+    prefix: &str,
+) -> Result<BTreeMap<u32, (u64, u64)>> {
+    let mut per_user: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+    for key in store.list(prefix) {
+        for line in store.read(&key)?.split(|b| *b == b'\n') {
+            if line.is_empty() {
+                continue;
+            }
+            let (ts, user) =
+                parse_log_line(line).ok_or_else(|| Error::Job("bad log line".into()))?;
+            per_user.entry(user).or_default().push(ts);
+        }
+    }
+    let mut hist: BTreeMap<u32, (u64, u64)> = BTreeMap::new();
+    for times in per_user.values_mut() {
+        times.sort_unstable();
+        for (events, duration) in sessionize(times) {
+            let e = hist.entry(events.min(MAX_BUCKET)).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += duration;
+        }
+    }
+    Ok(hist)
+}
+
+/// Parse the histogram output back into `(bucket → (sessions, avg))`.
+pub fn parse_histogram(text: &str) -> Result<BTreeMap<u32, (u64, f64)>> {
+    let mut out = BTreeMap::new();
+    for line in text.lines().filter(|l| !l.is_empty()) {
+        let parse = || -> Option<(u32, u64, f64)> {
+            let mut f = line.split(' ');
+            let b = f.next()?.strip_prefix("len=")?.parse().ok()?;
+            let n = f.next()?.strip_prefix("sessions=")?.parse().ok()?;
+            let avg = f.next()?.strip_prefix("avg_duration=")?.parse().ok()?;
+            Some((b, n, avg))
+        };
+        let (b, n, avg) =
+            parse().ok_or_else(|| Error::Job(format!("bad histogram line `{line}`")))?;
+        out.insert(b, (n, avg));
+    }
+    Ok(out)
+}
+
+/// Check the histogram under `out_prefix` against ground truth from
+/// `in_prefix`; returns a summary line.
+pub fn verify_histogram(
+    store: &dyn ObjectStore,
+    in_prefix: &str,
+    out_prefix: &str,
+) -> Result<String> {
+    let truth = expected_histogram(store, in_prefix)?;
+    let keys = store.list(out_prefix);
+    if keys.len() != 1 {
+        return Err(Error::Job(format!(
+            "histogram must write exactly one partition, found {}",
+            keys.len()
+        )));
+    }
+    let text = String::from_utf8(store.read(&keys[0])?)
+        .map_err(|_| Error::Job("non-utf8 histogram".into()))?;
+    let got = parse_histogram(&text)?;
+    if got.len() != truth.len() {
+        return Err(Error::Job(format!(
+            "histogram buckets: got {:?}, want {:?}",
+            got.keys().collect::<Vec<_>>(),
+            truth.keys().collect::<Vec<_>>()
+        )));
+    }
+    let mut sessions = 0u64;
+    for (bucket, (n, total)) in &truth {
+        let Some((got_n, got_avg)) = got.get(bucket) else {
+            return Err(Error::Job(format!("bucket {bucket} missing")));
+        };
+        let want_avg = *total as f64 / *n as f64;
+        if got_n != n || (got_avg - want_avg).abs() > 0.06 {
+            return Err(Error::Job(format!(
+                "bucket {bucket}: got {got_n}×{got_avg:.1}, want {n}×{want_avg:.1}"
+            )));
+        }
+        sessions += n;
+    }
+    Ok(format!(
+        "histogram ok: {sessions} sessions across {} length buckets",
+        truth.len()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::memstore::MemStore;
+
+    #[test]
+    fn sessionize_splits_on_gap() {
+        // 3 events tight, idle, 2 events tight
+        let times = [100, 200, 300, 300 + SESSION_GAP + 1, 300 + SESSION_GAP + 50];
+        assert_eq!(sessionize(&times), vec![(3, 200), (2, 49)]);
+        assert_eq!(sessionize(&[42]), vec![(1, 0)]);
+        assert!(sessionize(&[]).is_empty());
+    }
+
+    #[test]
+    fn generator_interleaves_and_is_deterministic() {
+        let s = MemStore::new(u64::MAX, "lru").unwrap();
+        let a = generate_logs(&s, "a/", 5, 20, 9).unwrap();
+        let b = generate_logs(&s, "b/", 5, 20, 9).unwrap();
+        assert_eq!(a, b);
+        // first object mixes several users
+        let first = s.read(&s.list("a/")[0]).unwrap();
+        let users: std::collections::HashSet<u32> = first
+            .split(|b| *b == b'\n')
+            .filter(|l| !l.is_empty())
+            .map(|l| parse_log_line(l).unwrap().1)
+            .collect();
+        assert!(users.len() >= 5, "interleaving: {users:?}");
+        let hist = expected_histogram(&s, "a/").unwrap();
+        assert!(!hist.is_empty());
+        let total: u64 = hist.values().map(|(n, _)| n).sum();
+        assert!(total >= 5, "at least one session per user");
+    }
+
+    #[test]
+    fn histogram_lines_roundtrip() {
+        let parsed = parse_histogram("len=1 sessions=4 avg_duration=0.0\nlen=3 sessions=2 avg_duration=512.5\n").unwrap();
+        assert_eq!(parsed.get(&1), Some(&(4, 0.0)));
+        assert_eq!(parsed.get(&3), Some(&(2, 512.5)));
+        assert!(parse_histogram("garbage").is_err());
+    }
+
+    #[test]
+    fn pipeline_shape() {
+        let spec = pipeline("in/", "out/", 3).unwrap();
+        assert_eq!(spec.rounds(), 2);
+        assert_eq!(spec.name(), "log-sessions");
+    }
+}

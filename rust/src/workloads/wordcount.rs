@@ -1,0 +1,276 @@
+//! Wordcount → top-k: the canonical two-round pipeline.
+//!
+//! Round 1 (`tokenize` → `sum`): mappers split documents into words and
+//! emit `(word, 1)`; reducers sum per word and print `word count` lines.
+//! Round 2 (`rank` → `top-k`): mappers re-key each count line by the
+//! *descending* count (an inverted big-endian u64, word appended for a
+//! deterministic tie order) into a single partition; the lone reducer
+//! takes the first `k` merged records — a global top-k selection that
+//! never holds the full frequency table in one task's memory, because
+//! the merge streams it out of `.shuffle/` spill objects.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::{
+    InputSplit, MapContext, Mapper, MergeIter, PipelineSpec, Reducer, KV,
+};
+use crate::storage::{ObjectStore, ObjectWriter as _};
+use crate::util::bytes::fnv1a;
+use crate::util::rng::Pcg32;
+
+/// Default `k` for the final selection.
+pub const DEFAULT_TOP_K: usize = 10;
+
+/// Generator vocabulary: the skewed pick below makes early words common
+/// (so a top-k is non-trivial) while the tail keeps reducers busy.
+pub const VOCAB: &[&str] = &[
+    "the", "data", "storage", "memory", "tier", "node", "block", "stripe", "shuffle", "job",
+    "map", "reduce", "merge", "sort", "read", "write", "commit", "buffer", "cache", "evict",
+    "stream", "split", "record", "key", "value", "run", "spill", "server", "pool", "worker",
+    "paper", "figure", "model", "cluster", "locality", "container", "pipeline", "stage",
+    "terasort", "hadoop", "tachyon", "orangefs", "throughput", "latency", "bandwidth",
+    "checkpoint", "recover", "quarantine",
+];
+
+/// Write `objects` documents of `words_per_object` whitespace-separated
+/// words under `{prefix}doc-{i:04}`, deterministically from `seed`, with
+/// a quadratically skewed word distribution. Returns bytes written.
+pub fn generate_text(
+    store: &dyn ObjectStore,
+    prefix: &str,
+    objects: u32,
+    words_per_object: usize,
+    seed: u64,
+) -> Result<u64> {
+    let mut written = 0u64;
+    for doc in 0..objects {
+        let mut rng = Pcg32::for_task(seed, doc as u64);
+        let mut w = store.create(&format!("{prefix}doc-{doc:04}"))?;
+        let mut buf = Vec::with_capacity(words_per_object * 8);
+        for i in 0..words_per_object {
+            // quadratic skew: r² biases toward index 0 ("the"-like words)
+            let r = rng.gen_f64();
+            let idx = ((r * r) * VOCAB.len() as f64) as usize;
+            buf.extend_from_slice(VOCAB[idx.min(VOCAB.len() - 1)].as_bytes());
+            buf.push(if i % 16 == 15 { b'\n' } else { b' ' });
+            if buf.len() >= 1 << 16 {
+                w.append(&buf)?;
+                buf.clear();
+            }
+        }
+        if !buf.is_empty() {
+            w.append(&buf)?;
+        }
+        written += w.written();
+        w.commit()?;
+    }
+    Ok(written)
+}
+
+/// Round-1 mapper: whitespace-tokenize, emit `(word, [])` partitioned by
+/// the word's FNV hash (all copies of one word meet in one reducer).
+pub struct TokenizeMapper;
+
+impl Mapper for TokenizeMapper {
+    fn map(&self, _s: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+        for word in data.split(|b| b.is_ascii_whitespace()) {
+            if word.is_empty() {
+                continue;
+            }
+            let p = (fnv1a(word) % ctx.num_partitions() as u64) as u32;
+            ctx.emit(p, KV::new(word, b""));
+        }
+        Ok(())
+    }
+}
+
+/// Round-1 reducer: run-length the merged word stream into
+/// `word count\n` lines.
+pub struct SumReducer;
+
+impl Reducer for SumReducer {
+    fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
+        let mut cur: Option<(Vec<u8>, u64)> = None;
+        let flush = |out: &mut Vec<u8>, word: &[u8], n: u64| {
+            out.extend_from_slice(word);
+            out.extend_from_slice(format!(" {n}\n").as_bytes());
+        };
+        for kv in records {
+            match &mut cur {
+                Some((w, n)) if w.as_slice() == kv.key() => *n += 1,
+                _ => {
+                    if let Some((w, n)) = cur.take() {
+                        flush(out, &w, n);
+                    }
+                    cur = Some((kv.key().to_vec(), 1));
+                }
+            }
+        }
+        if let Some((w, n)) = cur {
+            flush(out, &w, n);
+        }
+        Ok(())
+    }
+}
+
+/// Round-2 mapper: parse `word count` lines and re-key by inverted count
+/// (big-endian, so the merge yields descending counts) with the word as
+/// tiebreak; everything lands in partition 0 for the global selection.
+pub struct RankMapper;
+
+impl Mapper for RankMapper {
+    fn map(&self, split: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+        for line in data.split(|b| *b == b'\n') {
+            if line.is_empty() {
+                continue;
+            }
+            let (word, count) = parse_count_line(line)
+                .ok_or_else(|| Error::Job(format!("{}: bad count line", split.object)))?;
+            let mut key = (u64::MAX - count).to_be_bytes().to_vec();
+            key.extend_from_slice(word);
+            ctx.emit(0, KV::new(&key, line));
+        }
+        Ok(())
+    }
+}
+
+/// Round-2 reducer: keep the first `k` merged (descending-count) lines.
+pub struct TopKReducer {
+    pub k: usize,
+}
+
+impl Reducer for TopKReducer {
+    fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
+        for kv in records.take(self.k) {
+            out.extend_from_slice(kv.value());
+            out.push(b'\n');
+        }
+        Ok(())
+    }
+}
+
+/// The two-round spec: `input` → counts → top-`k` under `output`.
+pub fn pipeline(input: &str, output: &str, sum_partitions: u32, k: usize) -> Result<PipelineSpec> {
+    PipelineSpec::builder("wordcount-topk")
+        .input(input)
+        .output(output)
+        // one split per document: a byte split could cut a word in half
+        // and count the fragments (the generator writes many small docs,
+        // so map parallelism comes from the document count)
+        .split_size(u64::MAX)
+        .map(std::sync::Arc::new(TokenizeMapper))
+        .reduce(std::sync::Arc::new(SumReducer), sum_partitions.max(1))
+        .map(std::sync::Arc::new(RankMapper))
+        .reduce(std::sync::Arc::new(TopKReducer { k: k.max(1) }), 1)
+        .build()
+}
+
+fn parse_count_line(line: &[u8]) -> Option<(&[u8], u64)> {
+    let sp = line.iter().rposition(|b| *b == b' ')?;
+    let count = std::str::from_utf8(&line[sp + 1..]).ok()?.parse().ok()?;
+    Some((&line[..sp], count))
+}
+
+/// Ground truth: word frequencies recomputed sequentially from the input.
+pub fn count_words(store: &dyn ObjectStore, prefix: &str) -> Result<HashMap<Vec<u8>, u64>> {
+    let mut counts = HashMap::new();
+    for key in store.list(prefix) {
+        for word in store.read(&key)?.split(|b| b.is_ascii_whitespace()) {
+            if !word.is_empty() {
+                *counts.entry(word.to_vec()).or_insert(0u64) += 1;
+            }
+        }
+    }
+    Ok(counts)
+}
+
+/// Check the top-k output under `out_prefix` against ground truth from
+/// `in_prefix`: descending counts, each line's count correct, and no
+/// absent word outranking a reported one. Returns a summary line.
+pub fn verify_topk(store: &dyn ObjectStore, in_prefix: &str, out_prefix: &str) -> Result<String> {
+    let truth = count_words(store, in_prefix)?;
+    let keys = store.list(out_prefix);
+    if keys.len() != 1 {
+        return Err(Error::Job(format!(
+            "top-k must write exactly one partition, found {}",
+            keys.len()
+        )));
+    }
+    let text = store.read(&keys[0])?;
+    let mut reported = Vec::new();
+    for line in text.split(|b| *b == b'\n').filter(|l| !l.is_empty()) {
+        let (word, count) = parse_count_line(line)
+            .ok_or_else(|| Error::Job("unparseable top-k line".into()))?;
+        let want = *truth.get(word).unwrap_or(&0);
+        if want != count {
+            return Err(Error::Job(format!(
+                "top-k count for {:?}: got {count}, truth {want}",
+                String::from_utf8_lossy(word)
+            )));
+        }
+        reported.push((word.to_vec(), count));
+    }
+    if reported.is_empty() {
+        return Err(Error::Job("empty top-k output".into()));
+    }
+    for pair in reported.windows(2) {
+        if pair[0].1 < pair[1].1 {
+            return Err(Error::Job("top-k not in descending order".into()));
+        }
+    }
+    // completeness: no unreported word may beat the weakest reported one
+    let floor = reported.last().unwrap().1;
+    let reported_words: std::collections::HashSet<&[u8]> =
+        reported.iter().map(|(w, _)| w.as_slice()).collect();
+    for (word, n) in &truth {
+        if *n > floor && !reported_words.contains(word.as_slice()) {
+            return Err(Error::Job(format!(
+                "word {:?} (count {n}) missing from top-k (floor {floor})",
+                String::from_utf8_lossy(word)
+            )));
+        }
+    }
+    Ok(format!(
+        "top-{} ok: best `{}` ×{}, floor {}",
+        reported.len(),
+        String::from_utf8_lossy(&reported[0].0),
+        reported[0].1,
+        floor
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::memstore::MemStore;
+
+    #[test]
+    fn generator_is_deterministic_and_skewed() {
+        let s = MemStore::new(u64::MAX, "lru").unwrap();
+        let a = generate_text(&s, "a/", 3, 500, 7).unwrap();
+        let b = generate_text(&s, "b/", 3, 500, 7).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(s.read("a/doc-0000").unwrap(), s.read("b/doc-0000").unwrap());
+        let counts = count_words(&s, "a/").unwrap();
+        let the = *counts.get(b"the".as_slice()).unwrap_or(&0);
+        let rare = *counts.get(b"quarantine".as_slice()).unwrap_or(&0);
+        assert!(the > rare, "skew: `the` {the} vs `quarantine` {rare}");
+        assert_eq!(counts.values().sum::<u64>(), 1500);
+    }
+
+    #[test]
+    fn count_line_parses() {
+        assert_eq!(parse_count_line(b"word 42"), Some((b"word".as_slice(), 42)));
+        assert_eq!(parse_count_line(b"two words 7"), Some((b"two words".as_slice(), 7)));
+        assert_eq!(parse_count_line(b"nospace"), None);
+        assert_eq!(parse_count_line(b"word x"), None);
+    }
+
+    #[test]
+    fn pipeline_shape() {
+        let spec = pipeline("in/", "out/", 4, 5).unwrap();
+        assert_eq!(spec.rounds(), 2);
+        assert_eq!(spec.name(), "wordcount-topk");
+    }
+}

@@ -192,6 +192,79 @@ fn midcommit_rename_crash_leaves_recoverable_tree() {
     assert_no_residue(dir.path(), "midcommit");
 }
 
+/// Crash a job at a `.shuffle/` boundary, reboot, recover: the shuffle
+/// namespace must come back empty (spills are recomputable — deleted,
+/// never quarantined), no writer temps may survive anywhere, and the
+/// job's input must still be intact. Covers both shapes of shuffle
+/// write: a *map task* streaming a spill run, and a *round-1 reducer*
+/// streaming intermediate output into `.shuffle/<job>/inter-1/`.
+#[test]
+fn crash_at_shuffle_boundaries_leaves_no_residue_after_recover() {
+    use tlstore::mapreduce::{JobServer, JobServerConfig};
+    use tlstore::storage::{ObjectStore, SHUFFLE_NS};
+    use tlstore::workloads::wordcount;
+
+    // one crash per shuffle-write shape: mapper spill append, mapper
+    // spill commit, reducer intermediate-output append
+    let plans = [
+        ("map spill append", "op=append,kind=crash,key=/s0/,after=1"),
+        ("map spill commit", "op=commit,kind=crash,key=/s0/,after=0"),
+        ("reducer inter append", "op=append,kind=crash,key=/inter-1/,after=0"),
+    ];
+    for (i, (tag, plan)) in plans.into_iter().enumerate() {
+        let dir = TempDir::new(&format!("crash-shuffle-{i}")).unwrap();
+        {
+            let faulty = std::sync::Arc::new(FaultStore::new(
+                tls(dir.path()),
+                FaultPlan::parse(plan).unwrap(),
+            ));
+            // generation is untouched: the triggers key-filter on the
+            // shuffle namespace
+            wordcount::generate_text(faulty.as_ref(), "wc/in/", 3, 400, 17).unwrap();
+            let server = JobServer::new(
+                std::sync::Arc::clone(&faulty) as std::sync::Arc<dyn ObjectStore>,
+                JobServerConfig {
+                    workers: 2,
+                    max_concurrent_jobs: 1,
+                    shuffle_spill_threshold: 0,
+                    shuffle_chunk: 1 << 10,
+                    ..JobServerConfig::default()
+                },
+            );
+            let handle = server
+                .submit(wordcount::pipeline("wc/in/", "wc/out/", 2, 5).unwrap())
+                .unwrap();
+            let err = handle.join().unwrap_err();
+            assert!(
+                matches!(err, tlstore::Error::Injected(_)),
+                "{tag}: expected the armed crash, got {err}"
+            );
+            assert!(faulty.crashed(), "{tag}: wrapper must report the crash");
+            // the dead store refuses cleanup: residue survives on disk,
+            // exactly like kill -9 mid-job
+            let _ = server.shutdown();
+        }
+        // reboot over the surviving tree
+        let s = tls(dir.path());
+        let report = s.recover().unwrap_or_else(|e| panic!("{tag}: recover failed: {e}"));
+        assert!(
+            ObjectStore::list(&s, SHUFFLE_NS).is_empty(),
+            "{tag}: shuffle residue after recover: {report}"
+        );
+        assert!(
+            report.quarantined.iter().all(|k| !k.contains(".shuffle/")),
+            "{tag}: shuffle data must be dropped, not quarantined: {report}"
+        );
+        assert_no_residue(dir.path(), tag);
+        // the job's input is untouched; its output never published
+        assert_eq!(ObjectStore::list(&s, "wc/in/").len(), 3, "{tag}");
+        wordcount::count_words(&s, "wc/in/").unwrap_or_else(|e| panic!("{tag}: input torn: {e}"));
+        assert!(ObjectStore::list(&s, "wc/out/").is_empty(), "{tag}: partial output");
+        // recovery is idempotent here too
+        assert!(s.recover().unwrap().is_clean(), "{tag}: second pass dirty");
+    }
+}
+
 #[test]
 fn fault_plan_cli_grammar_smoke() {
     // the spec strings documented for --fault-plan parse to working plans

@@ -111,6 +111,78 @@ fn fault_plan_flag_injects_deterministically() {
 }
 
 #[test]
+fn job_workloads_lists_builtins() {
+    let (ok, text) = run(&["job", "workloads"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("wordcount-topk"), "{text}");
+    assert!(text.contains("log-sessions"), "{text}");
+    // unknown subcommand fails loudly
+    let (ok, text) = run(&["job", "frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown job subcommand"), "{text}");
+}
+
+#[test]
+fn job_submit_runs_a_named_pipeline_end_to_end() {
+    let dir = TempDir::new("cli-job").unwrap();
+    let root = dir.path().to_str().unwrap();
+    // needs no artifacts on any backend; tls exercises the full path
+    let (ok, text) = run(&[
+        "job", "submit", "--workload", "wordcount-topk", "--root", root, "--scale", "3",
+        "--seed", "7", "--reducers", "2",
+    ]);
+    assert!(ok, "job submit: {text}");
+    assert!(text.contains("verify: top-"), "{text}");
+    assert!(text.contains("shuffle namespace clean: true"), "{text}");
+    // clean root: status reports nothing mid-flight
+    let (ok, text) = run(&["job", "status", "--root", root]);
+    assert!(ok, "job status: {text}");
+    assert!(text.contains("no shuffle residue"), "{text}");
+}
+
+#[test]
+fn job_submit_honors_engine_toml() {
+    // the [engine] job knobs flow from TOML into the server and store
+    let dir = TempDir::new("cli-job-toml").unwrap();
+    let toml = dir.path().join("engine.toml");
+    std::fs::write(
+        &toml,
+        format!(
+            "[engine]\nroot = \"{}\"\nmem_capacity = \"32M\"\nblock_size = \"256k\"\n\
+             max_concurrent_jobs = 2\nshuffle_spill_threshold = 0\nshuffle_chunk = \"64k\"\n",
+            dir.path().join("store").display()
+        ),
+    )
+    .unwrap();
+    let (ok, text) = run(&[
+        "job", "submit", "--workload", "wordcount-topk",
+        "--config", toml.to_str().unwrap(), "--scale", "3", "--seed", "9",
+    ]);
+    assert!(ok, "job submit --config: {text}");
+    assert!(text.contains("verify: top-"), "{text}");
+    assert!(text.contains("shuffle namespace clean: true"), "{text}");
+    // a bad config fails up front
+    std::fs::write(&toml, "[engine]\nshuffle_chunk = 0\n").unwrap();
+    let (ok, text) = run(&[
+        "job", "submit", "--workload", "wordcount-topk", "--config", toml.to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(text.contains("shuffle_chunk"), "{text}");
+}
+
+#[test]
+fn job_submit_concurrent_sessions() {
+    let dir = TempDir::new("cli-job-sessions").unwrap();
+    let root = dir.path().to_str().unwrap();
+    let (ok, text) = run(&[
+        "job", "submit", "--workload", "log-sessions", "--root", root, "--scale", "6",
+        "--seed", "11", "--jobs", "2", "--max-jobs", "2",
+    ]);
+    assert!(ok, "job submit: {text}");
+    assert!(text.contains("histogram ok"), "{text}");
+}
+
+#[test]
 fn teragen_terasort_validate_pipeline_via_cli() {
     if !std::path::Path::new("artifacts/manifest.toml").exists() {
         eprintln!("artifacts/ not built — skipping CLI terasort");

@@ -1,0 +1,437 @@
+//! End-to-end Job API v2 suite: the two built-in multi-stage workloads
+//! through a [`JobServer`] over a real two-level store, plus the
+//! concurrency contracts — shuffle demonstrably flowing through
+//! `.shuffle/` objects (asserted via a probing store wrapper, not logs),
+//! concurrent jobs isolated from each other, admission queueing, and
+//! cancellation leaving zero shuffle residue.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use tlstore::error::Result;
+use tlstore::mapreduce::{
+    InputSplit, JobServer, JobServerConfig, JobStatus, MapContext, Mapper, MergeIter,
+    PipelineSpec, Reducer, KV,
+};
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::{ObjectMeta, ObjectReader, ObjectStore, ObjectWriter, SHUFFLE_NS};
+use tlstore::testing::TempDir;
+use tlstore::workloads::{sessions, wordcount, NamedWorkload};
+
+fn tls(dir: &TempDir) -> Arc<TwoLevelStore> {
+    let cfg = TlsConfig::builder(dir.path())
+        .mem_capacity(8 << 20) // small: shuffle traffic exercises eviction
+        .block_size(64 << 10)
+        .pfs_servers(3)
+        .stripe_size(16 << 10)
+        .build()
+        .unwrap();
+    Arc::new(TwoLevelStore::open(cfg).unwrap())
+}
+
+fn server(store: Arc<dyn ObjectStore>, max_jobs: usize) -> JobServer {
+    JobServer::new(
+        store,
+        JobServerConfig {
+            workers: 4,
+            nodes: 2,
+            containers_per_node: 2,
+            max_concurrent_jobs: max_jobs,
+            shuffle_spill_threshold: 0,
+            shuffle_chunk: 4 << 10, // small windows: many read_at refills
+            split_buffer: 1 << 16,
+        },
+    )
+}
+
+/// Store wrapper recording every created key — the conformance probe
+/// proving shuffle data flowed through `.shuffle/` objects.
+struct Probe<S> {
+    inner: S,
+    created: Mutex<Vec<String>>,
+}
+
+impl<S> Probe<S> {
+    fn new(inner: S) -> Self {
+        Self {
+            inner,
+            created: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn created_under(&self, prefix: &str) -> usize {
+        self.created
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|k| k.starts_with(prefix))
+            .count()
+    }
+}
+
+impl<S: ObjectStore> ObjectStore for Probe<S> {
+    fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
+        self.inner.open(key)
+    }
+    fn create(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>> {
+        self.created.lock().unwrap().push(key.to_string());
+        self.inner.create(key)
+    }
+    fn stat(&self, key: &str) -> Result<ObjectMeta> {
+        self.inner.stat(key)
+    }
+    fn delete(&self, key: &str) -> Result<()> {
+        self.inner.delete(key)
+    }
+    fn list(&self, prefix: &str) -> Vec<String> {
+        self.inner.list(prefix)
+    }
+    fn kind(&self) -> &'static str {
+        "probe"
+    }
+}
+
+#[test]
+fn wordcount_topk_end_to_end_with_shuffle_conformance() {
+    let dir = TempDir::new("jobv2-wc").unwrap();
+    let probe = Arc::new(Probe::new(tls(&dir)));
+    let store: Arc<dyn ObjectStore> = Arc::clone(&probe) as Arc<dyn ObjectStore>;
+
+    wordcount::generate_text(store.as_ref(), "wc/in/", 4, 800, 11).unwrap();
+    let srv = server(Arc::clone(&store), 2);
+    let spec = wordcount::pipeline("wc/in/", "wc/out/", 3, 8).unwrap();
+    let handle = srv.submit(spec).unwrap();
+    let stats = handle.join().unwrap();
+
+    // conformance: the shuffle *provably* rode the store — spill objects
+    // were created under this job's .shuffle/ namespace (both rounds plus
+    // the intermediate round-1 output), and the stats agree
+    let job_ns = format!("{SHUFFLE_NS}{}/", handle.id());
+    assert!(
+        probe.created_under(&job_ns) > 0,
+        "no objects created under {job_ns}"
+    );
+    assert!(probe.created_under(&format!("{job_ns}s0/")) > 0, "round-0 spills");
+    assert!(probe.created_under(&format!("{job_ns}s1/")) > 0, "round-1 spills");
+    assert!(probe.created_under(&format!("{job_ns}inter-1/")) > 0, "intermediate outputs");
+    assert!(stats.spilled_runs() > 0);
+    assert!(stats.spilled_bytes() > 0);
+    assert_eq!(stats.stages.len(), 4, "two full rounds");
+
+    // ...and was cleaned up afterwards
+    assert!(store.list(SHUFFLE_NS).is_empty(), "shuffle residue after success");
+
+    // results verified against ground truth recomputed from the input
+    let summary = wordcount::verify_topk(store.as_ref(), "wc/in/", "wc/out/").unwrap();
+    assert!(summary.contains("ok"), "{summary}");
+    srv.shutdown().unwrap();
+}
+
+#[test]
+fn log_sessions_end_to_end() {
+    let dir = TempDir::new("jobv2-sessions").unwrap();
+    let store: Arc<dyn ObjectStore> = tls(&dir);
+    sessions::generate_logs(store.as_ref(), "sess/in/", 12, 48, 23).unwrap();
+    let srv = server(Arc::clone(&store), 2);
+    let handle = srv.submit(sessions::pipeline("sess/in/", "sess/out/", 3).unwrap()).unwrap();
+    let stats = handle.join().unwrap();
+    assert!(stats.spilled_runs() > 0);
+    let summary = sessions::verify_histogram(store.as_ref(), "sess/in/", "sess/out/").unwrap();
+    assert!(summary.contains("histogram ok"), "{summary}");
+    assert!(store.list(SHUFFLE_NS).is_empty());
+    srv.shutdown().unwrap();
+}
+
+#[test]
+fn named_workload_registry_runs_both() {
+    // the CLI path: generate → pipeline → verify, by name
+    for w in NamedWorkload::all() {
+        let dir = TempDir::new(&format!("jobv2-named-{}", w.name())).unwrap();
+        let store: Arc<dyn ObjectStore> = tls(&dir);
+        let root = format!("{}/", w.name());
+        w.generate(store.as_ref(), &root, 4, 5).unwrap();
+        let srv = server(Arc::clone(&store), 1);
+        let stats = srv.submit(w.pipeline(&root, 2).unwrap()).unwrap().join().unwrap();
+        assert!(stats.spilled_runs() > 0, "{}", w.name());
+        w.verify(store.as_ref(), &root).unwrap();
+        srv.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn concurrent_jobs_do_not_crosstalk() {
+    // two different pipelines, one server, overlapping execution: each
+    // job's outputs must verify against its own input, and nothing may
+    // leak across namespaces
+    let dir = TempDir::new("jobv2-concurrent").unwrap();
+    let store: Arc<dyn ObjectStore> = tls(&dir);
+    wordcount::generate_text(store.as_ref(), "a/in/", 4, 600, 31).unwrap();
+    sessions::generate_logs(store.as_ref(), "b/in/", 10, 40, 37).unwrap();
+
+    let srv = server(Arc::clone(&store), 2);
+    let wc = srv.submit(wordcount::pipeline("a/in/", "a/out/", 3, 6).unwrap()).unwrap();
+    let se = srv.submit(sessions::pipeline("b/in/", "b/out/", 2).unwrap()).unwrap();
+    assert_ne!(wc.id(), se.id(), "distinct job namespaces");
+
+    let wc_stats = wc.join().unwrap();
+    let se_stats = se.join().unwrap();
+    assert!(wc_stats.spilled_runs() > 0);
+    assert!(se_stats.spilled_runs() > 0);
+    wordcount::verify_topk(store.as_ref(), "a/in/", "a/out/").unwrap();
+    sessions::verify_histogram(store.as_ref(), "b/in/", "b/out/").unwrap();
+    // isolation: each output namespace holds exactly its own partitions
+    assert_eq!(store.list("a/out/").len(), 1);
+    assert_eq!(store.list("b/out/").len(), 1);
+    assert!(store.list(SHUFFLE_NS).is_empty());
+    srv.shutdown().unwrap();
+}
+
+// ---- gated jobs: deterministic queueing/cancel tests -------------------
+
+/// A mapper that parks until its gate opens (so tests control exactly
+/// when a job can make progress).
+#[derive(Clone)]
+struct Gate(Arc<(Mutex<bool>, Condvar)>);
+
+impl Gate {
+    fn new() -> Self {
+        Gate(Arc::new((Mutex::new(false), Condvar::new())))
+    }
+    fn open(&self) {
+        let (lock, cond) = &*self.0;
+        *lock.lock().unwrap() = true;
+        cond.notify_all();
+    }
+    fn wait_open(&self) {
+        let (lock, cond) = &*self.0;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cond.wait(open).unwrap();
+        }
+    }
+}
+
+struct GatedMapper {
+    gate: Gate,
+    entered: Arc<AtomicUsize>,
+}
+
+impl Mapper for GatedMapper {
+    fn map(&self, _s: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        self.gate.wait_open();
+        ctx.emit(0, KV::new(b"k", data));
+        Ok(())
+    }
+}
+
+struct NullReducer;
+impl Reducer for NullReducer {
+    fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
+        out.extend_from_slice(&(records.count() as u64).to_le_bytes());
+        Ok(())
+    }
+}
+
+fn gated_spec(name: &str, input: &str, output: &str, gate: &Gate, entered: &Arc<AtomicUsize>) -> PipelineSpec {
+    PipelineSpec::builder(name)
+        .input(input)
+        .output(output)
+        .map(Arc::new(GatedMapper {
+            gate: gate.clone(),
+            entered: Arc::clone(entered),
+        }))
+        .reduce(Arc::new(NullReducer), 1)
+        .build()
+        .unwrap()
+}
+
+fn wait_for<F: Fn() -> bool>(what: &str, f: F) {
+    for _ in 0..500 {
+        if f() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+#[test]
+fn admission_queues_beyond_max_concurrent_jobs() {
+    let dir = TempDir::new("jobv2-admission").unwrap();
+    let store: Arc<dyn ObjectStore> = tls(&dir);
+    store.write("g/in/x", b"payload").unwrap();
+
+    let srv = server(Arc::clone(&store), 1);
+    let gate_a = Gate::new();
+    let entered_a = Arc::new(AtomicUsize::new(0));
+    let a = srv.submit(gated_spec("job-a", "g/in/", "g/a/", &gate_a, &entered_a)).unwrap();
+    // A is admitted and parked inside its map task
+    wait_for("job A to start mapping", || entered_a.load(Ordering::SeqCst) > 0);
+    assert_eq!(a.status(), JobStatus::Running);
+    assert_eq!(srv.running(), 1);
+    let (used, capacity) = srv.container_usage();
+    assert!(used >= 1 && used <= capacity, "{used}/{capacity}");
+
+    // B must queue behind max_concurrent_jobs = 1
+    let gate_b = Gate::new();
+    let entered_b = Arc::new(AtomicUsize::new(0));
+    let b = srv.submit(gated_spec("job-b", "g/in/", "g/b/", &gate_b, &entered_b)).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(b.status(), JobStatus::Queued, "B admitted past the limit");
+    assert_eq!(entered_b.load(Ordering::SeqCst), 0);
+
+    // release A → B is admitted and completes
+    gate_b.open(); // so B can run once admitted
+    gate_a.open();
+    a.join().unwrap();
+    b.join().unwrap();
+    assert!(store.exists("g/a/part-r-00000"));
+    assert!(store.exists("g/b/part-r-00000"));
+    assert!(store.list(SHUFFLE_NS).is_empty());
+    srv.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_running_job_leaves_no_shuffle_residue() {
+    let dir = TempDir::new("jobv2-cancel").unwrap();
+    let store: Arc<dyn ObjectStore> = tls(&dir);
+    // several input objects → several map tasks; the first ones park
+    for i in 0..4 {
+        store.write(&format!("c/in/{i}"), b"data data data").unwrap();
+    }
+    let srv = server(Arc::clone(&store), 1);
+    let gate = Gate::new();
+    let entered = Arc::new(AtomicUsize::new(0));
+    let h = srv.submit(gated_spec("doomed", "c/in/", "c/out/", &gate, &entered)).unwrap();
+    wait_for("job to start mapping", || entered.load(Ordering::SeqCst) > 0);
+
+    h.cancel();
+    gate.open(); // unblock the parked tasks; later tasks see the flag
+    let err = h.join().unwrap_err();
+    assert!(matches!(err, tlstore::Error::Canceled(_)), "{err}");
+    assert_eq!(h.status(), JobStatus::Canceled);
+    assert!(h.stats().is_none());
+    assert!(store.list(SHUFFLE_NS).is_empty(), "canceled job left shuffle residue");
+    assert!(store.list("c/out/").is_empty(), "canceled job published output");
+    srv.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_queued_job_never_runs() {
+    let dir = TempDir::new("jobv2-cancel-queued").unwrap();
+    let store: Arc<dyn ObjectStore> = tls(&dir);
+    store.write("q/in/x", b"payload").unwrap();
+    let srv = server(Arc::clone(&store), 1);
+    let gate_a = Gate::new();
+    let entered_a = Arc::new(AtomicUsize::new(0));
+    let a = srv.submit(gated_spec("holder", "q/in/", "q/a/", &gate_a, &entered_a)).unwrap();
+    wait_for("holder to start", || entered_a.load(Ordering::SeqCst) > 0);
+
+    let gate_b = Gate::new();
+    let entered_b = Arc::new(AtomicUsize::new(0));
+    let b = srv.submit(gated_spec("victim", "q/in/", "q/b/", &gate_b, &entered_b)).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    b.cancel();
+    let err = b.join().unwrap_err();
+    assert!(matches!(err, tlstore::Error::Canceled(_)), "{err}");
+    assert_eq!(entered_b.load(Ordering::SeqCst), 0, "queued victim must never map");
+
+    gate_a.open();
+    a.join().unwrap();
+    assert!(store.list("q/b/").is_empty());
+    srv.shutdown().unwrap();
+}
+
+/// A mapper that emits every word, so the job actually spills.
+struct EmitMapper;
+impl Mapper for EmitMapper {
+    fn map(&self, _s: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+        for w in data.split(|b| b.is_ascii_whitespace()).filter(|w| !w.is_empty()) {
+            ctx.emit(0, KV::new(w, b""));
+        }
+        Ok(())
+    }
+}
+
+/// A reducer that parks on its gate *after* the map phase spilled, so a
+/// test can hold a job mid-flight with live `.shuffle/` objects.
+struct GatedReducer {
+    gate: Gate,
+    entered: Arc<AtomicUsize>,
+}
+impl Reducer for GatedReducer {
+    fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        self.gate.wait_open();
+        out.extend((records.count() as u64).to_le_bytes());
+        Ok(())
+    }
+}
+
+#[test]
+fn shutdown_reaps_only_its_own_jobs() {
+    // two servers over ONE store (the Engine adapter spawns a transient
+    // server per run, so this shape is normal): shutting server A down
+    // must not delete server B's live in-flight spills
+    let dir = TempDir::new("jobv2-two-servers").unwrap();
+    let store: Arc<dyn ObjectStore> = tls(&dir);
+    store.write("b/in/x", b"alpha beta gamma").unwrap();
+    wordcount::generate_text(store.as_ref(), "a/in/", 2, 200, 41).unwrap();
+
+    // B: parked in its reduce phase, spills alive on the store
+    let srv_b = server(Arc::clone(&store), 1);
+    let gate = Gate::new();
+    let entered = Arc::new(AtomicUsize::new(0));
+    let spec_b = PipelineSpec::builder("parked")
+        .input("b/in/")
+        .output("b/out/")
+        .map(Arc::new(EmitMapper))
+        .reduce(
+            Arc::new(GatedReducer {
+                gate: gate.clone(),
+                entered: Arc::clone(&entered),
+            }),
+            1,
+        )
+        .build()
+        .unwrap();
+    let b = srv_b.submit(spec_b).unwrap();
+    wait_for("B to reach its reducer", || entered.load(Ordering::SeqCst) > 0);
+    let b_ns = format!("{SHUFFLE_NS}{}/", b.id());
+    assert!(!store.list(&b_ns).is_empty(), "B must have live spills");
+
+    // A: run a full job on its own server, then shut that server down
+    let srv_a = server(Arc::clone(&store), 1);
+    let a = srv_a.submit(wordcount::pipeline("a/in/", "a/out/", 2, 4).unwrap()).unwrap();
+    a.join().unwrap();
+    srv_a.shutdown().unwrap();
+
+    // B's spills survived A's shutdown; B completes normally
+    assert!(
+        !store.list(&b_ns).is_empty(),
+        "server A's shutdown reaped server B's live shuffle"
+    );
+    gate.open();
+    b.join().unwrap();
+    assert!(store.exists("b/out/part-r-00000"));
+    assert!(store.list(SHUFFLE_NS).is_empty(), "B cleaned up after itself");
+    srv_b.shutdown().unwrap();
+}
+
+#[test]
+fn server_shutdown_cancels_stragglers_and_reaps() {
+    let dir = TempDir::new("jobv2-shutdown").unwrap();
+    let store: Arc<dyn ObjectStore> = tls(&dir);
+    store.write("s/in/x", b"payload").unwrap();
+    let srv = server(Arc::clone(&store), 2);
+    let gate = Gate::new();
+    let entered = Arc::new(AtomicUsize::new(0));
+    let h = srv.submit(gated_spec("straggler", "s/in/", "s/out/", &gate, &entered)).unwrap();
+    wait_for("straggler to start", || entered.load(Ordering::SeqCst) > 0);
+    gate.open(); // shutdown cancels; the parked task must be released
+    srv.shutdown().unwrap();
+    assert!(h.is_finished());
+    assert!(store.list(SHUFFLE_NS).is_empty());
+}
