@@ -1,24 +1,26 @@
 //! End-to-end driver (DESIGN.md headline): TeraGen → TeraSort →
-//! TeraValidate on real data through the real storage engines, with the
-//! AOT-compiled Pallas sort kernel on the mapper hot path via PJRT — run
-//! against all three backends the paper compares (HDFS-like, PFS-only,
-//! two-level), reporting per-phase wall clock and throughput.
+//! TeraValidate on real data through the Job API (JobServer + spilled
+//! shuffle) over the real storage engines — run against all three
+//! backends the paper compares (HDFS-like, PFS-only, two-level),
+//! reporting per-phase wall clock and throughput. The mapper uses the
+//! AOT-compiled Pallas sort kernel via PJRT when `make artifacts` has
+//! run, and the portable CPU sort otherwise.
 //!
 //! Run: `cargo run --release --example terasort_e2e [-- --records N]`
-//! Requires `make artifacts` first.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use tlstore::cli::Args;
 use tlstore::config::Backend;
-use tlstore::mapreduce::Engine;
-use tlstore::runtime::Runtime;
+use tlstore::mapreduce::{JobServer, JobServerConfig};
 use tlstore::storage::hdfs::HdfsLike;
 use tlstore::storage::pfs::Pfs;
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
 use tlstore::storage::{prefix_bytes, ObjectReader as _, ObjectStore};
-use tlstore::terasort::{input_checksum, run_terasort, teragen, teravalidate, RECORD_SIZE};
+use tlstore::terasort::{
+    input_checksum, run_terasort, teragen, teravalidate, SortKernel, RECORD_SIZE,
+};
 use tlstore::testing::TempDir;
 
 fn store_for(backend: Backend, dir: &TempDir) -> tlstore::Result<Arc<dyn ObjectStore>> {
@@ -44,8 +46,8 @@ fn main() -> tlstore::Result<()> {
     let reducers = args.get_parse("reducers", 8u32)?;
     args.finish()?;
 
-    let runtime = Arc::new(Runtime::load_dir(Path::new("artifacts"))?);
-    println!("PJRT: {}", runtime.platform());
+    let kernel = SortKernel::auto(Path::new("artifacts"));
+    println!("sort kernel: {}", kernel.name());
     println!(
         "workload: {} records ({} MB), {} reducers\n",
         records,
@@ -81,28 +83,31 @@ fn main() -> tlstore::Result<()> {
         }
         let (in_count, in_sum) = input_checksum(store.as_ref(), "in/")?;
 
-        let engine = Engine::local();
+        // the Job API path: a one-job server over this backend; the
+        // shuffle spills through `.shuffle/` on the store under test
+        let server = JobServer::new(Arc::clone(&store), JobServerConfig::default());
         let stats = run_terasort(
-            &engine,
-            Arc::clone(&store),
-            Arc::clone(&runtime),
+            &server,
+            Arc::clone(&kernel),
             "in/",
             "out/",
             reducers,
             4 << 20,
             true,
         )?;
+        server.shutdown()?;
 
         let report = teravalidate(store.as_ref(), "out/")?;
         let ok = report.sorted && report.records == in_count && report.checksum == in_sum;
+        let js = stats.to_job_stats();
         println!(
             "{:<8} {:>10.2} {:>12.2} {:>12.1} {:>12.2} {:>12.1}  {}",
             backend.name(),
             gen_s,
-            stats.map_time.as_secs_f64(),
-            stats.map_read_mbs(),
-            stats.reduce_time.as_secs_f64(),
-            stats.reduce_write_mbs(),
+            js.map_time.as_secs_f64(),
+            js.map_read_mbs(),
+            js.reduce_time.as_secs_f64(),
+            js.reduce_write_mbs(),
             if ok { "OK" } else { "FAILED" }
         );
         if !ok {
@@ -111,7 +116,7 @@ fn main() -> tlstore::Result<()> {
                 backend.name()
             )));
         }
-        map_times.insert(backend.name(), stats.map_time.as_secs_f64());
+        map_times.insert(backend.name(), js.map_time.as_secs_f64());
     }
 
     // the paper's Figure 7(f) shape: the TLS mapper phase should beat the

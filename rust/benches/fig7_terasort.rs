@@ -5,23 +5,26 @@
 //!    16×16 containers, 2 data nodes, panels a–e as utilization means,
 //!    panel f as phase times, panel g as the data-node sweep).
 //! 2. **Host scale (measured)** — real TeraGen/TeraSort/TeraValidate
-//!    through the real engines with the PJRT sort kernel, all three
-//!    backends.
+//!    through the Job API (JobServer + spilled shuffle) on all four
+//!    backends; the PJRT sort kernel when artifacts are built, the CPU
+//!    sort otherwise. Wall-clock *and* I/O-busy-time throughput are
+//!    reported — the latter is what `tlstore bench parity` gates
+//!    against the §4 models.
 //!
-//! Run: `cargo bench --bench fig7_terasort` (artifacts required for part 2)
+//! Run: `cargo bench --bench fig7_terasort`
 
 use std::path::Path;
 use std::sync::Arc;
 
 use tlstore::config::presets::PALMETTO;
-use tlstore::mapreduce::Engine;
-use tlstore::runtime::Runtime;
+use tlstore::mapreduce::{JobServer, JobServerConfig};
 use tlstore::sim::{simulate_terasort, BackendKind, SimConstants};
 use tlstore::storage::hdfs::HdfsLike;
+use tlstore::storage::memstore::MemStore;
 use tlstore::storage::pfs::Pfs;
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
 use tlstore::storage::ObjectStore;
-use tlstore::terasort::{input_checksum, run_terasort, teragen, teravalidate};
+use tlstore::terasort::{input_checksum, run_terasort, teragen, teravalidate, SortKernel};
 use tlstore::testing::TempDir;
 
 fn paper_scale() {
@@ -70,23 +73,23 @@ fn paper_scale() {
 }
 
 fn host_scale() {
-    if !Path::new("artifacts/manifest.toml").exists() {
-        println!("\n(artifacts/ not built — skipping measured host-scale part)");
-        return;
-    }
-    let runtime = Arc::new(Runtime::load_dir(Path::new("artifacts")).unwrap());
+    let kernel = SortKernel::auto(Path::new("artifacts"));
     let records: u64 = std::env::var("TLSTORE_BENCH_RECORDS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(100_000);
-    println!("\n== host scale (measured, {records} records, PJRT kernel on map path) ==");
     println!(
-        "{:<8} {:>10} {:>12} {:>10} {:>12}  {}",
-        "backend", "map s", "map MB/s", "reduce s", "red MB/s", "valid"
+        "\n== host scale (measured, {records} records, {} kernel on map path, Job API) ==",
+        kernel.name()
     );
-    for name in ["hdfs", "pfs", "tls"] {
+    println!(
+        "{:<8} {:>10} {:>12} {:>10} {:>12} {:>10} {:>10}  {}",
+        "backend", "map s", "map MB/s", "reduce s", "red MB/s", "io rd", "io wr", "valid"
+    );
+    for name in ["mem", "hdfs", "pfs", "tls"] {
         let dir = TempDir::new(&format!("fig7-{name}")).unwrap();
         let store: Arc<dyn ObjectStore> = match name {
+            "mem" => Arc::new(MemStore::new(u64::MAX, "lru").unwrap()),
             "tls" => {
                 let cfg = TlsConfig::builder(dir.path())
                     .mem_capacity(256 << 20)
@@ -102,11 +105,10 @@ fn host_scale() {
         };
         teragen(store.as_ref(), "in/", records, records / 8 + 1, 42).unwrap();
         let (cnt, sum) = input_checksum(store.as_ref(), "in/").unwrap();
-        let engine = Engine::local();
+        let server = JobServer::new(Arc::clone(&store), JobServerConfig::default());
         let stats = run_terasort(
-            &engine,
-            Arc::clone(&store),
-            Arc::clone(&runtime),
+            &server,
+            Arc::clone(&kernel),
             "in/",
             "out/",
             8,
@@ -114,15 +116,19 @@ fn host_scale() {
             true,
         )
         .unwrap();
+        server.shutdown().unwrap();
         let rep = teravalidate(store.as_ref(), "out/").unwrap();
         let ok = rep.sorted && rep.records == cnt && rep.checksum == sum;
+        let js = stats.to_job_stats();
         println!(
-            "{:<8} {:>10.2} {:>12.1} {:>10.2} {:>12.1}  {}",
+            "{:<8} {:>10.2} {:>12.1} {:>10.2} {:>12.1} {:>10.1} {:>10.1}  {}",
             name,
-            stats.map_time.as_secs_f64(),
-            stats.map_read_mbs(),
-            stats.reduce_time.as_secs_f64(),
-            stats.reduce_write_mbs(),
+            js.map_time.as_secs_f64(),
+            js.map_read_mbs(),
+            js.reduce_time.as_secs_f64(),
+            js.reduce_write_mbs(),
+            js.measured_read_mbs(),
+            js.measured_write_mbs(),
             if ok { "OK" } else { "FAILED" }
         );
     }

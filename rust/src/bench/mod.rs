@@ -4,6 +4,13 @@
 //! [`run_named`]; the harness does warmup, adaptively sizes batches to hit
 //! a target measurement time, and reports mean / p50 / p95 plus derived
 //! throughput when a byte count is attached.
+//!
+//! [`parity`] is the model-parity runner behind `tlstore bench parity`:
+//! it drives the [`crate::testing::parity`] harness and emits the
+//! machine-readable `BENCH_fig7.json` / `BENCH_fig5.json` trajectory
+//! files.
+
+pub mod parity;
 
 use std::time::{Duration, Instant};
 

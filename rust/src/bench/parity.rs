@@ -1,0 +1,346 @@
+//! The `tlstore bench parity` runner: drive the model-parity harness
+//! ([`crate::testing::parity`]) and emit the machine-readable trajectory
+//! files the repo's perf history is built from.
+//!
+//! Two artifacts land in `--out-dir` (default `.`):
+//!
+//! - **`BENCH_fig7.json`** — the measured side (the paper's Figure 7
+//!   experiment, host-scale): TeraSort plus the two PR-4 workloads
+//!   through the [`JobServer`](crate::mapreduce::JobServer) on all four
+//!   backends, per-phase measured-vs-predicted throughput with the
+//!   tolerance verdicts.
+//! - **`BENCH_fig5.json`** — the analytic side (the paper's Figure 5):
+//!   the §4.5 crossover points against the paper's published numbers,
+//!   the asymptotic TLS gains, the aggregate curves at both PFS
+//!   configurations, and a simulator-vs-model consistency block (the
+//!   same [`crate::model::ClusterParams`] evaluated by the simulator
+//!   and by the closed-form equations must agree).
+//!
+//! The runner exits with an error when any gated phase lands outside the
+//! tolerance band or any workload fails verification — the perf claim is
+//! a test, not a printout.
+
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+use crate::model::CaseStudyParams;
+use crate::testing::parity::{run_parity, sim_model_cases, ParityConfig, ParityReport, SimModelCase};
+
+/// Options for one runner invocation.
+#[derive(Debug, Clone)]
+pub struct ParityRunOptions {
+    /// Harness configuration (smoke or full).
+    pub cfg: ParityConfig,
+    /// Where `BENCH_fig7.json` / `BENCH_fig5.json` land.
+    pub out_dir: PathBuf,
+}
+
+impl Default for ParityRunOptions {
+    fn default() -> Self {
+        Self {
+            cfg: ParityConfig::default(),
+            out_dir: PathBuf::from("."),
+        }
+    }
+}
+
+/// JSON number: finite floats at millis precision, `null` otherwise.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render the measured report as the `BENCH_fig7.json` document. All
+/// string values are harness-controlled short names — no escaping needed.
+pub fn fig7_json(report: &ParityReport) -> String {
+    let mut cases = Vec::new();
+    for c in &report.cases {
+        let phases: Vec<String> = c
+            .phases
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"phase\":\"{}\",\"bytes\":{},\"measured_mbs\":{},\"predicted_mbs\":{},\"ratio\":{},\"gated\":{},\"within_tolerance\":{}}}",
+                    p.phase,
+                    p.bytes,
+                    jnum(p.measured_mbs),
+                    jnum(p.predicted_mbs),
+                    jnum(p.ratio),
+                    p.gated,
+                    p.within
+                )
+            })
+            .collect();
+        cases.push(format!(
+            "{{\"workload\":\"{}\",\"backend\":\"{}\",\"verified\":{},\"elapsed_s\":{},\"phases\":[{}]}}",
+            c.workload,
+            c.backend,
+            c.verified,
+            jnum(c.elapsed),
+            phases.join(",")
+        ));
+    }
+    format!(
+        "{{\n\
+         \"figure\":\"fig7\",\n\
+         \"description\":\"measured vs predicted per-backend throughput (JobServer runs vs eqs. 1-7 on measured device constants)\",\n\
+         \"seed\":{},\n\
+         \"tolerance\":{},\n\
+         \"device_constants_mbs\":{{\"ram\":{},\"disk_read\":{},\"disk_write\":{}}},\n\
+         \"cases\":[\n{}\n],\n\
+         \"passed\":{}\n\
+         }}\n",
+        report.seed,
+        jnum(report.tolerance),
+        jnum(report.device.ram_mbs),
+        jnum(report.device.disk_read_mbs),
+        jnum(report.device.disk_write_mbs),
+        cases.join(",\n"),
+        report.passed()
+    )
+}
+
+/// Render the analytic `BENCH_fig5.json` document from already-evaluated
+/// simulator-vs-model cases: crossovers vs the paper, asymptotic gains,
+/// aggregate curves, consistency rows.
+fn fig5_json_from(sim_cases: &[SimModelCase]) -> String {
+    let m10 = CaseStudyParams::new(10_000.0);
+    let m50 = CaseStudyParams::new(50_000.0);
+    let crossovers = [
+        ("read_vs_pfs_10gbs", m10.crossover_read_vs_pfs(), 43u32),
+        ("read_vs_tls_f0.2_10gbs", m10.crossover_read_vs_tls(0.2), 53),
+        ("read_vs_tls_f0.5_10gbs", m10.crossover_read_vs_tls(0.5), 83),
+        ("read_vs_pfs_50gbs", m50.crossover_read_vs_pfs(), 211),
+        ("read_vs_tls_f0.2_50gbs", m50.crossover_read_vs_tls(0.2), 262),
+        ("read_vs_tls_f0.5_50gbs", m50.crossover_read_vs_tls(0.5), 414),
+        ("write_10gbs", m10.crossover_write(), 259),
+        ("write_50gbs", m50.crossover_write(), 1294),
+    ];
+    let crossover_rows: Vec<String> = crossovers
+        .iter()
+        .map(|(name, ours, paper)| {
+            format!(
+                "{{\"name\":\"{name}\",\"ours\":{ours},\"paper\":{paper},\"exact\":{}}}",
+                ours == paper
+            )
+        })
+        .collect();
+
+    let gain_rows: Vec<String> = [(0.2f64, 25.0f64), (0.5, 95.0)]
+        .iter()
+        .map(|(f, paper_pct)| {
+            let ours_pct = (m10.tls_asymptotic_gain(*f, 2000) - 1.0) * 100.0;
+            format!(
+                "{{\"f\":{},\"ours_pct\":{},\"paper_pct\":{}}}",
+                jnum(*f),
+                jnum(ours_pct),
+                jnum(*paper_pct)
+            )
+        })
+        .collect();
+
+    let mut curve_blocks = Vec::new();
+    for m in [&m10, &m50] {
+        let points: Vec<String> = [
+            1u32, 8, 16, 32, 43, 53, 64, 83, 128, 211, 259, 262, 414, 512, 1024, 1294, 2048,
+        ]
+        .iter()
+        .map(|&n| {
+            format!(
+                "{{\"n\":{n},\"hdfs_read\":{},\"pfs_read\":{},\"tls_read_f0.2\":{},\"tls_read_f0.5\":{},\"hdfs_write\":{},\"pfs_tls_write\":{}}}",
+                jnum(m.hdfs_read_aggregate(n)),
+                jnum(m.pfs_aggregate_throughput(n)),
+                jnum(m.tls_read_aggregate(n, 0.2)),
+                jnum(m.tls_read_aggregate(n, 0.5)),
+                jnum(m.hdfs_write_aggregate(n)),
+                jnum(m.tls_write_aggregate(n))
+            )
+        })
+        .collect();
+        curve_blocks.push(format!(
+            "{{\"pfs_aggregate_mbs\":{},\"points\":[{}]}}",
+            jnum(m.pfs_aggregate),
+            points.join(",")
+        ));
+    }
+
+    let sim_rows: Vec<String> = sim_cases
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"case\":\"{}\",\"sim_mbs\":{},\"model_mbs\":{},\"rel_err\":{},\"tolerance\":{},\"within\":{}}}",
+                r.name,
+                jnum(r.sim_mbs),
+                jnum(r.model_mbs),
+                jnum(r.rel_err()),
+                jnum(r.tolerance),
+                r.within()
+            )
+        })
+        .collect();
+
+    format!(
+        "{{\n\
+         \"figure\":\"fig5\",\n\
+         \"description\":\"analytic crossovers/gains vs the paper, aggregate curves, simulator-vs-model consistency\",\n\
+         \"crossovers\":[\n{}\n],\n\
+         \"tls_gains\":[{}],\n\
+         \"curves\":[\n{}\n],\n\
+         \"sim_vs_model\":{{\"rows\":[\n{}\n]}}\n\
+         }}\n",
+        crossover_rows.join(",\n"),
+        gain_rows.join(","),
+        curve_blocks.join(",\n"),
+        sim_rows.join(",\n")
+    )
+}
+
+/// The analytic `BENCH_fig5.json` document (evaluates the shared
+/// simulator-vs-model case table; [`run`] reuses one evaluation for both
+/// the document and its gate).
+pub fn fig5_json() -> Result<String> {
+    Ok(fig5_json_from(&sim_model_cases()?))
+}
+
+/// Run the harness, write both `BENCH_*.json` files, print the table,
+/// and fail if any gated phase is outside the band, any workload fails
+/// verification, or the simulator diverges from the model.
+pub fn run(opts: &ParityRunOptions) -> Result<ParityReport> {
+    println!(
+        "model parity: {} workload(s) × {} backend(s), tolerance {:.2}, seed {}",
+        opts.cfg.workloads.len(),
+        opts.cfg.backends.len(),
+        opts.cfg.tolerance,
+        opts.cfg.seed
+    );
+    let report = run_parity(&opts.cfg)?;
+    print!("{}", report.render());
+
+    // one evaluation of the deterministic sim-vs-model table feeds both
+    // the fig5 document and the failure gate
+    let sim_cases = sim_model_cases()?;
+    std::fs::create_dir_all(&opts.out_dir).map_err(|e| Error::io(&opts.out_dir, e))?;
+    let fig7_path = opts.out_dir.join("BENCH_fig7.json");
+    std::fs::write(&fig7_path, fig7_json(&report)).map_err(|e| Error::io(&fig7_path, e))?;
+    let fig5_path = opts.out_dir.join("BENCH_fig5.json");
+    std::fs::write(&fig5_path, fig5_json_from(&sim_cases)).map_err(|e| Error::io(&fig5_path, e))?;
+    println!(
+        "wrote {} and {}",
+        fig7_path.display(),
+        fig5_path.display()
+    );
+
+    let mut failures = report.failures();
+    for case in &sim_cases {
+        if !case.within() {
+            failures.push(format!(
+                "sim-vs-model {}: sim {:.1} MB/s vs model {:.1} MB/s (rel err {:.2} > {:.2})",
+                case.name,
+                case.sim_mbs,
+                case.model_mbs,
+                case.rel_err(),
+                case.tolerance
+            ));
+        }
+    }
+    if failures.is_empty() {
+        println!("model parity: OK (all gated phases within tolerance, all outputs verified)");
+        Ok(report)
+    } else {
+        Err(Error::Job(format!(
+            "model parity failed:\n  {}",
+            failures.join("\n  ")
+        )))
+    }
+}
+
+/// Lightweight structural check used by tests: a JSON document's braces
+/// and brackets balance (the emitter is hand-rolled; this guards edits).
+#[cfg(test)]
+fn balanced(json: &str) -> bool {
+    let mut depth = 0i64;
+    let mut brackets = 0i64;
+    let mut in_str = false;
+    for c in json.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '{' if !in_str => depth += 1,
+            '}' if !in_str => depth -= 1,
+            '[' if !in_str => brackets += 1,
+            ']' if !in_str => brackets -= 1,
+            _ => {}
+        }
+        if depth < 0 || brackets < 0 {
+            return false;
+        }
+    }
+    depth == 0 && brackets == 0 && !in_str
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::parity::{
+        CaseReport, DeviceConstants, ParityBackend, ParityWorkload, PhaseParity,
+    };
+
+    #[test]
+    fn fig5_document_is_deterministic_and_exact() {
+        let a = fig5_json().unwrap();
+        let b = fig5_json().unwrap();
+        assert_eq!(a, b, "fig5 must be reproducible");
+        assert!(balanced(&a), "unbalanced JSON:\n{a}");
+        // every crossover matches the paper exactly
+        assert!(!a.contains("\"exact\":false"), "{a}");
+        // the simulator agrees with the model on every row
+        assert!(!a.contains("\"within\":false"), "{a}");
+        assert!(a.contains("\"ours\":43"));
+        assert!(a.contains("\"paper\":1294"));
+    }
+
+    #[test]
+    fn fig7_document_carries_cases_and_verdicts() {
+        let report = ParityReport {
+            tolerance: 3.0,
+            seed: 42,
+            device: DeviceConstants {
+                ram_mbs: 8000.0,
+                disk_read_mbs: 1000.0,
+                disk_write_mbs: 600.0,
+            },
+            cases: vec![CaseReport {
+                workload: ParityWorkload::TeraSort.name(),
+                backend: ParityBackend::Tls.name(),
+                phases: vec![PhaseParity {
+                    phase: "read",
+                    bytes: 2_000_000,
+                    measured_mbs: 900.0,
+                    predicted_mbs: 1000.0,
+                    gated: true,
+                    ratio: 0.9,
+                    within: true,
+                }],
+                verified: true,
+                verify_summary: "ok".into(),
+                elapsed: 0.5,
+            }],
+        };
+        let json = fig7_json(&report);
+        assert!(balanced(&json), "unbalanced JSON:\n{json}");
+        assert!(json.contains("\"workload\":\"terasort\""));
+        assert!(json.contains("\"backend\":\"tls\""));
+        assert!(json.contains("\"within_tolerance\":true"));
+        assert!(json.contains("\"passed\":true"));
+        assert!(json.contains("\"measured_mbs\":900.000"));
+    }
+
+    #[test]
+    fn nonfinite_numbers_become_null() {
+        assert_eq!(jnum(f64::INFINITY), "null");
+        assert_eq!(jnum(f64::NAN), "null");
+        assert_eq!(jnum(1.5), "1.500");
+    }
+}

@@ -86,6 +86,15 @@ pub struct EngineConfig {
     /// Window size (bytes) for shuffle spill writes and reducer merge
     /// reads; must be > 0.
     pub shuffle_chunk: u64,
+    /// Fractional tolerance band of the model-parity harness
+    /// (`tlstore bench parity`): a measured phase passes when
+    /// `max(measured/predicted, predicted/measured) ≤ 1 + parity_tolerance`.
+    /// Must be > 0. The default (2.5, within 3.5×) leaves room for the
+    /// page-cache effect on `HdfsLike`'s parallel replica writes (~3×
+    /// above the synchronous eq.-(2) prediction); tighten on raw-disk
+    /// hosts. Ignored by the CLI's `--smoke` mode, which uses its own
+    /// wider band.
+    pub parity_tolerance: f64,
     /// Directory holding AOT artifacts (HLO text + manifest).
     pub artifacts_dir: PathBuf,
     /// Optional fault-injection plan (crash drills / robustness tests):
@@ -119,6 +128,8 @@ impl Default for EngineConfig {
             max_concurrent_jobs: 0, // auto: sized off mem_capacity
             shuffle_spill_threshold: 0, // spill everything through the tiers
             shuffle_chunk: 1 << 20,
+            parity_tolerance: 2.5, // within 3.5× (see the field docs)
+
             artifacts_dir: PathBuf::from("artifacts"),
             fault_plan: None,
         }
@@ -203,6 +214,14 @@ impl EngineConfig {
         if let Some(v) = get_bytes("shuffle_chunk")? {
             cfg.shuffle_chunk = v;
         }
+        match engine.get("parity_tolerance") {
+            None => {}
+            Some(v) => {
+                cfg.parity_tolerance = v.as_float().ok_or_else(|| {
+                    Error::Config(format!("bad value for `parity_tolerance`: {v:?}"))
+                })?;
+            }
+        }
         if let Some(v) = get_str("artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(v);
         }
@@ -245,6 +264,12 @@ impl EngineConfig {
         }
         if self.shuffle_chunk == 0 {
             return Err(Error::Config("shuffle_chunk must be > 0".into()));
+        }
+        if !self.parity_tolerance.is_finite() || self.parity_tolerance <= 0.0 {
+            return Err(Error::Config(format!(
+                "parity_tolerance must be a positive number, got {}",
+                self.parity_tolerance
+            )));
         }
         if self.eviction != "lru" && self.eviction != "lfu" {
             return Err(Error::Config(format!(
@@ -352,6 +377,25 @@ eviction = "lfu"
         assert!(EngineConfig::from_toml_str("[engine]\nmax_concurrent_jobs = -1\n").is_err());
         // 0 threshold is legal (it is the default)
         EngineConfig::from_toml_str("[engine]\nshuffle_spill_threshold = 0\n").unwrap();
+    }
+
+    #[test]
+    fn parity_tolerance_parses_and_validates() {
+        let cfg =
+            EngineConfig::from_toml_str("[engine]\nparity_tolerance = 2.5\n").unwrap();
+        assert_eq!(cfg.parity_tolerance, 2.5);
+        // integers coerce
+        let cfg = EngineConfig::from_toml_str("[engine]\nparity_tolerance = 3\n").unwrap();
+        assert_eq!(cfg.parity_tolerance, 3.0);
+        // default
+        let cfg = EngineConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.parity_tolerance, 2.5);
+        // invalid values
+        assert!(EngineConfig::from_toml_str("[engine]\nparity_tolerance = 0\n").is_err());
+        assert!(EngineConfig::from_toml_str("[engine]\nparity_tolerance = -1.5\n").is_err());
+        assert!(
+            EngineConfig::from_toml_str("[engine]\nparity_tolerance = \"wide\"\n").is_err()
+        );
     }
 
     #[test]

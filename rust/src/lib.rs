@@ -47,7 +47,17 @@
 //! job data takes the paper's write-through path in and the priority
 //! read path out, instead of living in coordinator heap. `tlstore job
 //! submit --workload wordcount-topk|log-sessions` drives the built-in
-//! scenario pipelines ([`workloads`]).
+//! scenario pipelines ([`workloads`]); TeraSort itself is such a
+//! pipeline ([`terasort::terasort_spec`], with a CPU sort fallback when
+//! PJRT artifacts are absent).
+//!
+//! The measurement plane closes the paper's predict-then-measure loop:
+//! the pipeline times every split read and partition write
+//! ([`metrics::IoStat`] busy-time throughput), [`testing::parity`]
+//! compares those measurements against eqs. (1)–(7) evaluated on
+//! microbenched host constants ([`model::ClusterParams::single_node`]),
+//! and `tlstore bench parity` ([`bench::parity`]) emits the
+//! `BENCH_fig7.json` / `BENCH_fig5.json` trajectory files CI archives.
 //!
 //! ## Quickstart
 //!

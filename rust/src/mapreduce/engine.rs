@@ -18,6 +18,7 @@ use super::pipeline::PipelineSpec;
 use super::server::{JobServer, JobServerConfig};
 use super::{JobSpec, Mapper, Reducer};
 use crate::error::Result;
+use crate::metrics::timeline::{IoStat, TimelineSet};
 use crate::storage::ObjectStore;
 use crate::util::pool::ThreadPool;
 
@@ -36,6 +37,15 @@ pub struct JobStats {
     /// Splits that *executed* on their preferred node (counted from the
     /// dispatch the scheduler actually drove, not a discarded plan).
     pub locality_hits: usize,
+    /// Measured stage-0 split-read I/O: bytes plus storage-call busy
+    /// seconds, so `read_io.mbs()` is the per-stream read throughput the
+    /// §4 models predict (wall-clock `map_time` includes CPU work).
+    pub read_io: IoStat,
+    /// Measured final-stage output-write I/O (see `read_io`).
+    pub write_io: IoStat,
+    /// Per-phase read/write throughput timelines, normalized to each
+    /// series' peak sample (Figure-7-style; series `s<i>.<map|red>.<dir>`).
+    pub timelines: TimelineSet,
 }
 
 impl JobStats {
@@ -47,6 +57,16 @@ impl JobStats {
     /// Aggregate reduce-phase write throughput, MB/s.
     pub fn reduce_write_mbs(&self) -> f64 {
         self.output_bytes as f64 / 1e6 / self.reduce_time.as_secs_f64().max(1e-9)
+    }
+
+    /// Measured per-stream map read throughput (I/O busy time), MB/s.
+    pub fn measured_read_mbs(&self) -> f64 {
+        self.read_io.mbs()
+    }
+
+    /// Measured per-stream reduce write throughput (I/O busy time), MB/s.
+    pub fn measured_write_mbs(&self) -> f64 {
+        self.write_io.mbs()
     }
 
     pub fn report(&self) -> String {

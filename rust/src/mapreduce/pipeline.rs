@@ -29,6 +29,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::metrics::timeline::{IoStat, TimelineSet};
 use crate::storage::buffer::BufferPool;
 use crate::storage::{read_full_at, ObjectStore, SHUFFLE_NS};
 use crate::util::pool::ThreadPool;
@@ -240,6 +241,14 @@ pub struct StageStats {
     pub spilled_runs: u64,
     /// Map only: bytes of those spill objects (header + payload).
     pub spilled_bytes: u64,
+    /// Measured input-read I/O (map stages: split reads through the
+    /// storage handles — bytes plus busy seconds, per task). Empty for
+    /// reduce stages.
+    pub read_io: IoStat,
+    /// Measured output-write I/O (reduce stages: partition streaming
+    /// through writer handles, append through commit). Empty for map
+    /// stages.
+    pub write_io: IoStat,
 }
 
 /// Whole-pipeline execution metrics, one [`StageStats`] per stage.
@@ -283,6 +292,37 @@ impl PipelineStats {
         self.stages.iter().map(|s| s.spilled_runs).sum()
     }
 
+    /// Measured stage-0 input-read I/O (bytes + busy seconds): the
+    /// quantity eq. (1)/(3)/(7) predict for the map phase.
+    pub fn map_read_io(&self) -> IoStat {
+        self.stages.first().map(|s| s.read_io.clone()).unwrap_or_default()
+    }
+
+    /// Measured final-stage output-write I/O: the quantity
+    /// eq. (2)/(3)/(6) predict for the reduce phase.
+    pub fn reduce_write_io(&self) -> IoStat {
+        self.stages.last().map(|s| s.write_io.clone()).unwrap_or_default()
+    }
+
+    /// Per-stage read/write throughput timelines (normalized to each
+    /// series' peak sample), Figure-7 style: one series per stage and
+    /// direction that recorded I/O, named `s<i>.<map|red>.<read|write>`.
+    pub fn io_timelines(&self) -> TimelineSet {
+        let mut set = TimelineSet::default();
+        for (i, st) in self.stages.iter().enumerate() {
+            let kind = match st.kind {
+                StageKind::Map => "map",
+                StageKind::Reduce => "red",
+            };
+            for (dir, io) in [("read", &st.read_io), ("write", &st.write_io)] {
+                if !io.is_empty() {
+                    set.series.push(io.to_timeline(&format!("s{i}.{kind}.{dir}")));
+                }
+            }
+        }
+        set
+    }
+
     /// Collapse to the v1 [`JobStats`] (the `Engine::run` adapter's return
     /// shape): stage-0 map + final reduce, with multi-round pipelines
     /// folding intermediate stage times into the two phase buckets.
@@ -304,6 +344,9 @@ impl PipelineStats {
             output_bytes: self.output_bytes(),
             shuffle_records: self.shuffle_records(),
             locality_hits: self.stages.first().map_or(0, |s| s.locality_hits),
+            read_io: self.map_read_io(),
+            write_io: self.reduce_write_io(),
+            timelines: self.io_timelines(),
         }
     }
 
@@ -421,7 +464,17 @@ struct MapTaskOut {
     local: bool,
     spilled_runs: u64,
     spilled_bytes: u64,
+    /// Measured split-read I/O (open + read busy time).
+    read_io: IoStat,
     parts: Vec<Vec<RunRef>>,
+}
+
+/// One reduce task's result: committed output plus its measured write I/O.
+struct ReduceTaskOut {
+    bytes: u64,
+    records: u64,
+    key: String,
+    write_io: IoStat,
 }
 
 /// A run either kept resident (below the spill threshold) or parked in
@@ -608,14 +661,23 @@ fn run_map_phase(
             let split = &splits[task];
             // one open per split, one read pass into a pooled buffer
             // (recycled across tasks: steady-state jobs stop churning
-            // the allocator)
+            // the allocator). The buffer is sized *before* the timed
+            // span — growing it memsets at memory bandwidth, which would
+            // dilute the measurement — so only open + read_at count as
+            // this task's input-read busy time (the measured side of
+            // eqs. (1)/(3)/(7)).
+            let mut data = buffers.take();
+            data.resize(split.len as usize, 0);
+            let io_t = Instant::now();
             let reader = store.open(&split.object)?;
             let end = (split.offset + split.len).min(reader.len());
             let take = end.saturating_sub(split.offset) as usize;
-            let mut data = buffers.take();
-            data.resize(take, 0);
+            data.truncate(take); // object shrank since planning: clamp
             read_full_at(reader.as_ref(), split.offset, &mut data)?;
             drop(reader);
+            let read_secs = io_t.elapsed().as_secs_f64();
+            let mut read_io = IoStat::default();
+            read_io.record(t.elapsed().as_secs_f64(), take as u64, read_secs);
             let mut mctx = MapContext::new(partitions);
             mapper.map(split, &data, &mut mctx)?;
             drop(data); // back to the pool before the spill I/O
@@ -635,6 +697,7 @@ fn run_map_phase(
                 local: assignments[task].local,
                 spilled_runs: 0,
                 spilled_bytes: 0,
+                read_io,
                 parts: (0..partitions).map(|_| Vec::new()).collect(),
             };
             let spill = payload > threshold || threshold == 0;
@@ -670,6 +733,8 @@ fn run_map_phase(
         locality_hits: 0,
         spilled_runs: 0,
         spilled_bytes: 0,
+        read_io: IoStat::default(),
+        write_io: IoStat::default(),
     };
     let mut shuffle: Vec<Vec<RunRef>> = (0..partitions).map(|_| Vec::new()).collect();
     for out in outs {
@@ -679,6 +744,7 @@ fn run_map_phase(
         stats.locality_hits += out.local as usize;
         stats.spilled_runs += out.spilled_runs;
         stats.spilled_bytes += out.spilled_bytes;
+        stats.read_io.merge(&out.read_io);
         for (p, refs) in out.parts.into_iter().enumerate() {
             shuffle[p].extend(refs);
         }
@@ -716,7 +782,7 @@ fn run_reduce_phase(
 
     // same wave bound as the map phase: the current fair container
     // grant caps this job's in-flight reduce tasks on the shared pool
-    let reduce_task: Arc<dyn Fn(usize) -> Result<(u64, u64, String)> + Send + Sync> = {
+    let reduce_task: Arc<dyn Fn(usize) -> Result<ReduceTaskOut> + Send + Sync> = {
         let store = Arc::clone(&ctx.store);
         let cancel = Arc::clone(&ctx.cancel);
         let progress = Arc::clone(&ctx.progress);
@@ -724,7 +790,7 @@ fn run_reduce_phase(
         let job = spec.name.clone();
         let out_prefix = out_prefix.to_string();
         let chunk = ctx.shuffle_chunk;
-        Arc::new(move |p: usize| -> Result<(u64, u64, String)> {
+        Arc::new(move |p: usize| -> Result<ReduceTaskOut> {
             check_cancel(&cancel, &job)?;
             let refs = shuffle.lock().unwrap()[p]
                 .take()
@@ -749,15 +815,26 @@ fn run_reduce_phase(
             }
             check_cancel(&cancel, &job)?;
             // stream the partition out through a writer handle; a
-            // reducer that fails mid-write publishes nothing
+            // reducer that fails mid-write publishes nothing. The
+            // create→append→commit span is this task's output-write busy
+            // time (the measured side of eqs. (2)/(3)/(6))
             let key = format!("{out_prefix}part-r-{p:05}");
+            let io_t = Instant::now();
             let mut w = store.create(&key)?;
             for piece in out.chunks(OUTPUT_CHUNK) {
                 w.append(piece)?;
             }
             w.commit()?;
+            let write_secs = io_t.elapsed().as_secs_f64();
+            let mut write_io = IoStat::default();
+            write_io.record(t.elapsed().as_secs_f64(), out.len() as u64, write_secs);
             progress.task_done();
-            Ok((out.len() as u64, records, key))
+            Ok(ReduceTaskOut {
+                bytes: out.len() as u64,
+                records,
+                key,
+                write_io,
+            })
         })
     };
     let outs = dispatch_waves(ctx, job_id, partitions as usize, reduce_task)?;
@@ -772,6 +849,8 @@ fn run_reduce_phase(
         locality_hits: 0,
         spilled_runs: 0,
         spilled_bytes: 0,
+        read_io: IoStat::default(),
+        write_io: IoStat::default(),
     };
     if outs.iter().any(|r| r.is_err()) {
         // a failed (or canceled) stage publishes *nothing*: un-publish
@@ -780,8 +859,8 @@ fn run_reduce_phase(
         // overwriting a previous result, those partitions are gone
         // either way — the store contract is write-once-read-many.)
         for out in &outs {
-            if let Ok((_, _, key)) = out {
-                let _ = ctx.store.delete(key);
+            if let Ok(r) = out {
+                let _ = ctx.store.delete(&r.key);
             }
         }
         return Err(outs
@@ -790,9 +869,10 @@ fn run_reduce_phase(
             .expect("an Err was just observed"));
     }
     for out in outs {
-        let (bytes, records, _key) = out.expect("all Ok");
-        stats.bytes_out += bytes;
-        stats.records += records;
+        let out = out.expect("all Ok");
+        stats.bytes_out += out.bytes;
+        stats.records += out.records;
+        stats.write_io.merge(&out.write_io);
     }
     stats.time = t.elapsed();
     Ok(stats)
@@ -922,6 +1002,8 @@ mod tests {
             locality_hits: hits,
             spilled_runs: 1,
             spilled_bytes: 100,
+            read_io: IoStat::default(),
+            write_io: IoStat::default(),
         };
         let ps = PipelineStats {
             job: "j".into(),
@@ -1027,6 +1109,23 @@ mod tests {
         );
         // locality reflects executed placement over 2 nodes
         assert_eq!(stats.stages[0].locality_hits, 2);
+
+        // measured I/O: every split read and every partition write was
+        // timed, and the stats/timeline plumbing carries it through
+        let read = stats.map_read_io();
+        assert_eq!(read.bytes, stats.input_bytes());
+        assert_eq!(read.samples.len(), stats.stages[0].tasks);
+        assert!(read.mbs() > 0.0);
+        let write = stats.reduce_write_io();
+        assert_eq!(write.bytes, stats.output_bytes());
+        assert!(write.mbs() > 0.0);
+        let timelines = stats.io_timelines();
+        assert!(timelines.get("s0.map.read").is_some());
+        assert!(timelines.get("s1.red.write").is_some());
+        let js = stats.to_job_stats();
+        assert_eq!(js.read_io.bytes, read.bytes);
+        assert_eq!(js.write_io.bytes, write.bytes);
+        assert!(js.timelines.get("s0.map.read").is_some());
     }
 
     #[test]

@@ -329,6 +329,13 @@ impl JobServer {
         &self.cfg
     }
 
+    /// The store this server runs jobs against (workload builders — e.g.
+    /// [`crate::terasort::run_terasort`]'s sampling pass — read inputs
+    /// through the same store the pipeline will).
+    pub fn store(&self) -> &Arc<dyn ObjectStore> {
+        &self.store
+    }
+
     /// Submit a pipeline; returns immediately with its handle. The job
     /// queues if `max_concurrent_jobs` pipelines are already running.
     pub fn submit(&self, spec: PipelineSpec) -> Result<JobHandle> {

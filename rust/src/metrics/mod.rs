@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 pub use hist::Histogram;
-pub use timeline::{Timeline, UtilSample};
+pub use timeline::{IoSample, IoStat, Timeline, TimelineSet, UtilSample};
 
 /// Monotonic counter.
 #[derive(Debug, Default)]

@@ -1,9 +1,18 @@
 //! Utilization timelines — the data behind the paper's Figure 7 (a–e):
 //! per-node CPU / disk / network utilization sampled over a job's life.
 //!
-//! Real runs sample via [`Timeline::sample`]; the simulator pushes exact
-//! per-interval utilizations via [`Timeline::push`]. Either way the result
-//! renders as an ASCII sparkline table or CSV for plotting.
+//! Real runs and the simulator both append samples via
+//! [`Timeline::push`]; the result renders as an ASCII sparkline table or
+//! CSV for plotting.
+//!
+//! [`IoStat`] is the *measured* counterpart the compute plane fills in:
+//! each map/reduce task records how many bytes it moved through the
+//! storage handles and how long it spent inside those calls, so a job's
+//! per-phase read/write throughput (the quantity the §4 models predict)
+//! is `bytes / busy-seconds` instead of `bytes / wall-clock` — CPU time
+//! spent sorting or merging does not dilute the I/O measurement. The
+//! per-task samples convert into a normalized [`Timeline`] for the
+//! Figure-7-style rendering.
 
 /// One utilization sample in `[0, 1]` at a timestamp (seconds).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -115,8 +124,90 @@ impl Timeline {
     }
 }
 
+/// One task's I/O contribution: `bytes` moved in `secs` seconds of
+/// storage-call busy time, finishing `t` seconds into the phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IoSample {
+    /// Seconds since the phase started when this task's I/O completed.
+    pub t: f64,
+    /// Bytes moved through the storage handles.
+    pub bytes: u64,
+    /// Seconds spent inside the storage calls (busy time, not wall clock).
+    pub secs: f64,
+}
+
+impl IoSample {
+    /// This sample's throughput in MB/s.
+    pub fn mbs(&self) -> f64 {
+        self.bytes as f64 / 1e6 / self.secs.max(1e-9)
+    }
+}
+
+/// Accumulated I/O busy time of one job phase and direction (map-input
+/// reads or reduce-output writes): totals plus the per-task samples.
+///
+/// The headline number is [`IoStat::mbs`] — total bytes over total busy
+/// seconds, i.e. the *per-stream* throughput a single client observed
+/// against the backend. With one worker this is directly comparable to
+/// the per-node `q` of the §4 models ([`crate::model::ClusterParams`]);
+/// the parity harness ([`crate::testing::parity`]) is built on exactly
+/// that comparison.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct IoStat {
+    /// Total bytes moved.
+    pub bytes: u64,
+    /// Total seconds of storage-call busy time across tasks.
+    pub secs: f64,
+    /// Per-task samples, in completion order.
+    pub samples: Vec<IoSample>,
+}
+
+impl IoStat {
+    /// Record one task's I/O.
+    pub fn record(&mut self, t: f64, bytes: u64, secs: f64) {
+        self.bytes += bytes;
+        self.secs += secs;
+        self.samples.push(IoSample { t, bytes, secs });
+    }
+
+    /// Fold another stat (e.g. a task's) into this one.
+    pub fn merge(&mut self, other: &IoStat) {
+        self.bytes += other.bytes;
+        self.secs += other.secs;
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    /// Measured throughput, MB/s: total bytes over total busy seconds
+    /// (0.0 when nothing was recorded).
+    pub fn mbs(&self) -> f64 {
+        if self.bytes == 0 {
+            return 0.0;
+        }
+        self.bytes as f64 / 1e6 / self.secs.max(1e-9)
+    }
+
+    /// Whether anything was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Convert the samples into a [`Timeline`] named `name`, with each
+    /// sample's throughput normalized to the peak sample ([0, 1] —
+    /// `Timeline` semantics). Samples are sorted by completion time.
+    pub fn to_timeline(&self, name: &str) -> Timeline {
+        let mut samples = self.samples.clone();
+        samples.sort_by(|a, b| a.t.total_cmp(&b.t));
+        let peak = samples.iter().map(IoSample::mbs).fold(0.0, f64::max);
+        let mut tl = Timeline::new(name);
+        for s in &samples {
+            tl.push(s.t, if peak > 0.0 { s.mbs() / peak } else { 0.0 });
+        }
+        tl
+    }
+}
+
 /// Group of timelines for one experiment run (one per node×resource).
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct TimelineSet {
     pub series: Vec<Timeline>,
 }
@@ -212,6 +303,37 @@ mod tests {
         let csv = tl.to_csv();
         assert!(csv.starts_with("t_seconds,utilization\n"));
         assert!(csv.contains("0.5000,0.2500"));
+    }
+
+    #[test]
+    fn iostat_accumulates_and_reports_mbs() {
+        let mut io = IoStat::default();
+        assert!(io.is_empty());
+        assert_eq!(io.mbs(), 0.0);
+        io.record(0.5, 10_000_000, 1.0); // 10 MB/s
+        io.record(1.0, 10_000_000, 3.0); // slower task
+        assert_eq!(io.bytes, 20_000_000);
+        assert!((io.secs - 4.0).abs() < 1e-12);
+        assert!((io.mbs() - 5.0).abs() < 1e-9, "{}", io.mbs());
+        let mut total = IoStat::default();
+        total.merge(&io);
+        total.merge(&io);
+        assert_eq!(total.bytes, 40_000_000);
+        assert_eq!(total.samples.len(), 4);
+    }
+
+    #[test]
+    fn iostat_timeline_normalizes_to_peak() {
+        let mut io = IoStat::default();
+        io.record(2.0, 5_000_000, 1.0); // 5 MB/s, out of order
+        io.record(1.0, 10_000_000, 1.0); // 10 MB/s = peak
+        let tl = io.to_timeline("map.read");
+        assert_eq!(tl.name, "map.read");
+        assert_eq!(tl.samples.len(), 2);
+        // sorted by t, normalized to the 10 MB/s peak
+        assert!((tl.samples[0].t - 1.0).abs() < 1e-12);
+        assert!((tl.samples[0].util - 1.0).abs() < 1e-9);
+        assert!((tl.samples[1].util - 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -130,6 +130,39 @@ impl ClusterParams {
     pub fn with_n(&self, n: u32) -> Self {
         Self { n, ..*self }
     }
+
+    /// Single-host parameterization for the parity harness
+    /// ([`crate::testing::parity`]): all "nodes" are directories on one
+    /// machine, so the network terms vanish (ρ, Φ → ∞) and the compute
+    /// disk and the data-node "RAID" are the same physical device. With
+    /// `N = M = 1` the equations collapse to exactly the local branches
+    /// the paper's §4.5 case study uses:
+    ///
+    /// - eq. (1): HDFS read  = μ_read (one replica, local)
+    /// - eq. (2): HDFS write = μ_write / 3 (three synchronous copies on
+    ///   the same device)
+    /// - eq. (3): OFS read/write = μ′ (striping across directories does
+    ///   not multiply one disk)
+    /// - eqs. (4)/(5): memory tier = ν
+    /// - eq. (6): two-level write = min(ν, μ′_write)
+    /// - eq. (7): two-level read = 1 / (f/ν + (1−f)/μ′_read)
+    ///
+    /// Feed it *measured* device constants (the harness microbenches the
+    /// host, as the paper's Figure 1 does for Palmetto) and the same
+    /// equations predict what the job-level data path should achieve.
+    pub fn single_node(disk_read_mbs: f64, disk_write_mbs: f64, ram_mbs: f64) -> Self {
+        Self {
+            n: 1,
+            m: 1,
+            phi: f64::INFINITY,
+            rho: f64::INFINITY,
+            mu_read: disk_read_mbs,
+            mu_write: disk_write_mbs,
+            mu_p_read: disk_read_mbs,
+            mu_p_write: disk_write_mbs,
+            nu: ram_mbs,
+        }
+    }
 }
 
 // -------------------------------------------------------- §4.5 case study
@@ -304,6 +337,22 @@ mod tests {
         // out-of-range f clamps
         assert_eq!(p.tls_read(2.0), p.tls_read(1.0));
         assert_eq!(p.tls_read(-1.0), p.tls_read(0.0));
+    }
+
+    #[test]
+    fn single_node_collapses_to_local_branches() {
+        let p = ClusterParams::single_node(1000.0, 800.0, 8000.0);
+        assert_eq!(p.hdfs_read_local(), 1000.0);
+        assert_eq!(p.hdfs_read_remote(), 1000.0); // network terms infinite
+        assert!((p.hdfs_write() - 800.0 / 3.0).abs() < 1e-9);
+        assert_eq!(p.ofs_read(), 1000.0);
+        assert_eq!(p.ofs_write(), 800.0);
+        assert_eq!(p.tachyon_write(), 8000.0);
+        assert_eq!(p.tls_write(), 800.0); // min(ν, μ′_w)
+        assert!((p.tls_read(1.0) - 8000.0).abs() < 1e-6);
+        assert!((p.tls_read(0.0) - 1000.0).abs() < 1e-9);
+        let expect = 1.0 / (0.5 / 8000.0 + 0.5 / 1000.0);
+        assert!((p.tls_read(0.5) - expect).abs() < 1e-9);
     }
 
     #[test]

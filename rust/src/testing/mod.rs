@@ -12,11 +12,31 @@
 
 pub mod conformance;
 pub mod crash;
+pub mod parity;
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::rng::Pcg32;
+
+/// Default master seed for every randomized test and harness in the
+/// repo. Override with `TLSTORE_SEED` (see [`master_seed`]).
+pub const DEFAULT_SEED: u64 = 0x5EED_CAFE;
+
+/// The one master seed behind the repo's randomized tests: the parity
+/// harness, the property suites, and the crash scenarios all derive from
+/// it (mirroring `TLSTORE_CRASH_SEED`, which still takes precedence for
+/// the crash suite so CI's per-run seeds keep working). Set
+/// `TLSTORE_SEED=<u64>` to reproduce a failure — every harness prints
+/// the seed it ran with.
+pub fn master_seed() -> u64 {
+    match std::env::var("TLSTORE_SEED") {
+        Ok(s) => s
+            .parse()
+            .unwrap_or_else(|_| panic!("TLSTORE_SEED must be a u64, got `{s}`")),
+        Err(_) => DEFAULT_SEED,
+    }
+}
 
 /// A self-cleaning temp dir (like `tempfile::TempDir`).
 pub struct TempDir {
@@ -83,11 +103,13 @@ impl Default for PropConfig {
     }
 }
 
+/// Property-suite seed: `TLSTORE_PROP_SEED` (suite-specific override)
+/// beats the repo-wide [`master_seed`].
 fn xt_seed() -> u64 {
     std::env::var("TLSTORE_PROP_SEED")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(0x5EED_CAFE)
+        .unwrap_or_else(master_seed)
 }
 
 /// Run `prop` against `cases` generated inputs. On failure, retry with
@@ -115,8 +137,8 @@ pub fn proprun<T: std::fmt::Debug>(
                 }
             }
             panic!(
-                "property '{name}' failed (case {case}, seed {case_seed:#x}, size {}):\n  {}\n  input: {}\n  rerun with TLSTORE_PROP_SEED={}",
-                best.0, best.1, best.2, cfg.seed
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, size {}):\n  {}\n  input: {}\n  rerun with TLSTORE_SEED={} (or TLSTORE_PROP_SEED={})",
+                best.0, best.1, best.2, cfg.seed, cfg.seed
             );
         }
     }
@@ -136,6 +158,17 @@ mod tests {
             assert!(p.exists());
         }
         assert!(!p.exists());
+    }
+
+    #[test]
+    fn master_seed_honors_env_or_defaults() {
+        // can't mutate the environment safely under parallel tests, so
+        // assert consistency with whatever the harness was launched with
+        match std::env::var("TLSTORE_SEED") {
+            Err(_) => assert_eq!(master_seed(), DEFAULT_SEED),
+            // compare parsed values: "007" is a valid spelling of 7
+            Ok(s) => assert_eq!(master_seed(), s.parse::<u64>().unwrap()),
+        }
     }
 
     #[test]

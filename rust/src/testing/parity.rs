@@ -1,0 +1,785 @@
+//! Model-parity harness: the paper's §4 equations as executable
+//! assertions.
+//!
+//! The paper's argument runs: measure the device constants (Figure 1),
+//! plug them into the §4 throughput models (eqs. 1–7), and the models
+//! predict what each storage backend delivers to a job — which §5's
+//! TeraSort runs then confirm. This module reproduces that loop against
+//! the real engines in this repo:
+//!
+//! 1. **Microbench** the host ([`measure_device_constants`]): streaming
+//!    write/read throughput of the memory tier (ν) and of the file-backed
+//!    PFS tier (μ/μ′), the local analogue of the paper's Figure 1.
+//! 2. **Predict** with [`ClusterParams::single_node`]: the same eqs.
+//!    (1)–(7), collapsed to one host (network terms drop out), give a
+//!    per-backend read/write throughput prediction.
+//! 3. **Measure** by driving TeraSort and the two PR-4 workloads through
+//!    a [`JobServer`] over each backend (MemStore, Pfs, HdfsLike,
+//!    TwoLevelStore) with a single worker, reading the per-phase I/O
+//!    busy-time stats ([`crate::metrics::IoStat`]) the pipeline records —
+//!    bytes over storage-call seconds, so CPU time spent sorting does not
+//!    dilute the I/O measurement and the number is comparable to the
+//!    models' per-node `q`.
+//! 4. **Compare** within a configurable tolerance band
+//!    (`parity_tolerance` in the engine TOML / `--tolerance` on the CLI):
+//!    a phase passes when `max(measured/predicted, predicted/measured) ≤
+//!    1 + tolerance`. Phases that moved fewer than
+//!    [`ParityConfig::min_phase_bytes`] are reported but not gated — at
+//!    that size the measurement is per-operation overhead, not
+//!    throughput.
+//!
+//! Every workload run is also **verified** (TeraValidate / the workload
+//! verifiers), so a backend cannot "win" the throughput comparison by
+//! corrupting data. The `tlstore bench parity` runner
+//! ([`crate::bench::parity`]) drives this harness and emits the
+//! `BENCH_fig7.json` / `BENCH_fig5.json` trajectory files.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::{JobServer, JobServerConfig, PipelineStats};
+use crate::model::ClusterParams;
+use crate::sim::{BackendKind, ClusterSim, FlowSpec, SimConstants, Simulator, Stage, Task};
+use crate::storage::hdfs::HdfsLike;
+use crate::storage::memstore::MemStore;
+use crate::storage::pfs::Pfs;
+use crate::storage::tls::{TlsConfig, TwoLevelStore};
+use crate::storage::ObjectStore;
+use crate::terasort::{self, SortKernel};
+use crate::testing::{master_seed, TempDir};
+use crate::workloads::NamedWorkload;
+
+/// The four storage backends the harness compares (the paper's three
+/// contenders plus the bare memory tier as the ν reference point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParityBackend {
+    /// Bare memory tier (Tachyon alone): reads/writes at ν.
+    Mem,
+    /// File-backed striped PFS (OrangeFS alone): eq. (3).
+    Pfs,
+    /// HDFS-like replicated baseline: eqs. (1)–(2).
+    Hdfs,
+    /// The two-level store: eqs. (6)–(7).
+    Tls,
+}
+
+impl ParityBackend {
+    /// All four, in reporting order.
+    pub fn all() -> &'static [ParityBackend] {
+        &[
+            ParityBackend::Mem,
+            ParityBackend::Pfs,
+            ParityBackend::Hdfs,
+            ParityBackend::Tls,
+        ]
+    }
+
+    /// Short name used in reports and JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ParityBackend::Mem => "mem",
+            ParityBackend::Pfs => "pfs",
+            ParityBackend::Hdfs => "hdfs",
+            ParityBackend::Tls => "tls",
+        }
+    }
+
+    /// Build this backend rooted at `dir` (file-backed tiers live in the
+    /// caller's temp dir; the memory tier is unbounded so capacity
+    /// eviction cannot drop inputs mid-run).
+    pub fn build(&self, dir: &Path, cfg: &ParityConfig) -> Result<Arc<dyn ObjectStore>> {
+        Ok(match self {
+            ParityBackend::Mem => Arc::new(MemStore::new(u64::MAX, "lru")?),
+            ParityBackend::Pfs => {
+                Arc::new(Pfs::open(dir, cfg.pfs_servers, cfg.stripe_size)?)
+            }
+            ParityBackend::Hdfs => Arc::new(HdfsLike::open(dir, 4, REPLICATION)?),
+            ParityBackend::Tls => {
+                let tls = TlsConfig::builder(dir)
+                    .mem_capacity(cfg.mem_capacity)
+                    .block_size(cfg.block_size)
+                    .pfs_servers(cfg.pfs_servers)
+                    .stripe_size(cfg.stripe_size)
+                    .build()?;
+                Arc::new(TwoLevelStore::open(tls)?)
+            }
+        })
+    }
+}
+
+/// HDFS-baseline replication: eq. (2) models exactly three synchronous
+/// copies (one local, two remote), so the harness pins it.
+pub const REPLICATION: usize = 3;
+
+/// Workloads the harness drives (TeraSort is the paper's §5 benchmark;
+/// the other two are the PR-4 multi-round pipelines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParityWorkload {
+    TeraSort,
+    WordCountTopK,
+    LogSessions,
+}
+
+impl ParityWorkload {
+    /// All three, TeraSort first.
+    pub fn all() -> &'static [ParityWorkload] {
+        &[
+            ParityWorkload::TeraSort,
+            ParityWorkload::WordCountTopK,
+            ParityWorkload::LogSessions,
+        ]
+    }
+
+    /// Short name used in reports and JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ParityWorkload::TeraSort => "terasort",
+            ParityWorkload::WordCountTopK => "wordcount-topk",
+            ParityWorkload::LogSessions => "log-sessions",
+        }
+    }
+}
+
+/// Harness configuration. `smoke()` is the CI shape (tiny data, wide
+/// tolerance); `Default` is the fuller local run.
+#[derive(Debug, Clone)]
+pub struct ParityConfig {
+    /// TeraSort records per backend (100 bytes each).
+    pub records: u64,
+    /// Reduce partitions for every workload.
+    pub reducers: u32,
+    /// Stage-0 split size (TeraSort rounds it to a record multiple).
+    pub split_size: u64,
+    /// Scale knob for the PR-4 workloads (documents / users).
+    pub scale: u64,
+    /// Fractional tolerance band: a gated phase passes when
+    /// `max(measured/predicted, predicted/measured) ≤ 1 + tolerance`.
+    pub tolerance: f64,
+    /// Master seed for generators (default [`master_seed`], i.e. the
+    /// `TLSTORE_SEED` override).
+    pub seed: u64,
+    /// Memory-tier capacity of the two-level backend.
+    pub mem_capacity: u64,
+    /// Block size of the two-level backend.
+    pub block_size: u64,
+    /// PFS server directories.
+    pub pfs_servers: usize,
+    /// PFS stripe size.
+    pub stripe_size: u64,
+    /// Memory-residency ratio `f` assumed for the eq.-(7) TLS read
+    /// prediction (inputs written through a warm, amply sized memory
+    /// tier are fully resident: 1.0).
+    pub tls_residency: f64,
+    /// Bytes per microbench probe object.
+    pub probe_bytes: usize,
+    /// Microbench probe objects per device.
+    pub probe_objects: usize,
+    /// Phases that moved fewer bytes than this are reported but not
+    /// gated on the tolerance band (per-op overhead, not throughput).
+    pub min_phase_bytes: u64,
+    /// Backends to run (default: all four).
+    pub backends: Vec<ParityBackend>,
+    /// Workloads to run (default: all three).
+    pub workloads: Vec<ParityWorkload>,
+}
+
+impl Default for ParityConfig {
+    fn default() -> Self {
+        Self {
+            records: 200_000, // 20 MB per backend
+            reducers: 4,
+            split_size: 1 << 20,
+            scale: 16,
+            // Within 3.5×. The band cannot be tighter than the known
+            // page-cache effect: `HdfsLike` writes its replicas on
+            // parallel threads, so on a buffered filesystem its measured
+            // write legitimately runs ~3× above the synchronous eq.-(2)
+            // μ_w/3 prediction. On raw-disk hosts `--tolerance` can be
+            // narrowed (the other phases track their predictions much
+            // more closely).
+            tolerance: 2.5,
+            seed: master_seed(),
+            mem_capacity: 256 << 20,
+            block_size: 4 << 20,
+            pfs_servers: 4,
+            stripe_size: 1 << 20,
+            tls_residency: 1.0,
+            probe_bytes: 1 << 20,
+            probe_objects: 8,
+            min_phase_bytes: 1 << 20,
+            backends: ParityBackend::all().to_vec(),
+            workloads: ParityWorkload::all().to_vec(),
+        }
+    }
+}
+
+impl ParityConfig {
+    /// The deterministic smoke shape CI runs: tiny data, wide tolerance.
+    /// The band is wide (5×) because small-host effects legitimately
+    /// stretch some ratios — e.g. `HdfsLike` writes its replicas on
+    /// parallel threads over one page-cached device, so its measured
+    /// write can run up to ~3× above the synchronous eq.-(2) prediction
+    /// — while still catching order-of-magnitude regressions (a read
+    /// path that stops using the memory tier, a write path that copies
+    /// every chunk twice).
+    pub fn smoke() -> Self {
+        Self {
+            records: 20_000, // 2 MB per backend
+            scale: 4,
+            split_size: 512 << 10,
+            tolerance: 4.0,
+            ..Self::default()
+        }
+    }
+}
+
+/// Locally measured device constants — the host's Figure 1.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceConstants {
+    /// ν — memory-tier streaming throughput, MB/s (geometric mean of the
+    /// write and read probes; the models carry one RAM constant).
+    pub ram_mbs: f64,
+    /// μ/μ′ read — file-backed tier streaming read, MB/s.
+    pub disk_read_mbs: f64,
+    /// μ/μ′ write — file-backed tier streaming write, MB/s.
+    pub disk_write_mbs: f64,
+}
+
+impl DeviceConstants {
+    /// The §4 model over these constants, collapsed to one host.
+    pub fn model(&self) -> ClusterParams {
+        ClusterParams::single_node(self.disk_read_mbs, self.disk_write_mbs, self.ram_mbs)
+    }
+}
+
+/// Deterministic probe payload (compressible like real table data, cheap
+/// to generate).
+fn probe_payload(bytes: usize, salt: u8) -> Vec<u8> {
+    (0..bytes).map(|i| (i as u8).wrapping_add(salt)).collect()
+}
+
+/// Time `objects` streaming writes then reads of `bytes` each through
+/// `store`; returns (write MB/s, read MB/s).
+fn probe_store(store: &dyn ObjectStore, bytes: usize, objects: usize) -> Result<(f64, f64)> {
+    let payload = probe_payload(bytes, 7);
+    let total = (bytes * objects) as f64 / 1e6;
+    let t = Instant::now();
+    for i in 0..objects {
+        store.write(&format!("probe/{i:04}"), &payload)?;
+    }
+    let write_mbs = total / t.elapsed().as_secs_f64().max(1e-9);
+    let t = Instant::now();
+    for i in 0..objects {
+        let data = store.read(&format!("probe/{i:04}"))?;
+        if data.len() != bytes {
+            return Err(Error::Job(format!(
+                "probe object {i} read {} bytes, wrote {bytes}",
+                data.len()
+            )));
+        }
+    }
+    let read_mbs = total / t.elapsed().as_secs_f64().max(1e-9);
+    Ok((write_mbs, read_mbs))
+}
+
+/// Microbench the host: streaming throughput of the bare memory tier (ν)
+/// and of the file-backed PFS tier (μ/μ′), with the same geometry the
+/// parity runs use. This is the measured input the §4 equations take —
+/// the local stand-in for the paper's Figure 1 campaign.
+pub fn measure_device_constants(cfg: &ParityConfig) -> Result<DeviceConstants> {
+    let mem = MemStore::new(u64::MAX, "lru")?;
+    let (ram_w, ram_r) = probe_store(&mem, cfg.probe_bytes, cfg.probe_objects)?;
+    let dir = TempDir::new("parity-probe").map_err(|e| Error::io(Path::new("tmp"), e))?;
+    let pfs = Pfs::open(dir.path(), cfg.pfs_servers, cfg.stripe_size)?;
+    let (disk_w, disk_r) = probe_store(&pfs, cfg.probe_bytes, cfg.probe_objects)?;
+    Ok(DeviceConstants {
+        ram_mbs: (ram_w * ram_r).sqrt(),
+        disk_read_mbs: disk_r,
+        disk_write_mbs: disk_w,
+    })
+}
+
+/// Predicted (read, write) MB/s for `backend` under the single-host
+/// model — the eqs. (1)–(7) dispatch table.
+pub fn predict(backend: ParityBackend, model: &ClusterParams, residency: f64) -> (f64, f64) {
+    match backend {
+        ParityBackend::Mem => (model.tachyon_read_local(), model.tachyon_write()),
+        ParityBackend::Pfs => (model.ofs_read(), model.ofs_write()),
+        ParityBackend::Hdfs => (model.hdfs_read_local(), model.hdfs_write()),
+        ParityBackend::Tls => (model.tls_read(residency), model.tls_write()),
+    }
+}
+
+/// One measured-vs-predicted phase comparison.
+#[derive(Debug, Clone)]
+pub struct PhaseParity {
+    /// "read" (stage-0 map input) or "write" (final reduce output).
+    pub phase: &'static str,
+    /// Bytes the phase moved through storage handles.
+    pub bytes: u64,
+    /// Measured per-stream throughput (I/O busy time), MB/s.
+    pub measured_mbs: f64,
+    /// Model prediction, MB/s.
+    pub predicted_mbs: f64,
+    /// Whether the phase moved enough bytes to gate on the band.
+    pub gated: bool,
+    /// `measured / predicted` (1.0 = perfect parity).
+    pub ratio: f64,
+    /// Within the tolerance band (vacuously true when not gated).
+    pub within: bool,
+}
+
+fn phase_parity(
+    phase: &'static str,
+    bytes: u64,
+    measured_mbs: f64,
+    predicted_mbs: f64,
+    cfg: &ParityConfig,
+) -> PhaseParity {
+    let ratio = if predicted_mbs > 0.0 {
+        measured_mbs / predicted_mbs
+    } else {
+        0.0
+    };
+    let gated = bytes >= cfg.min_phase_bytes;
+    let within = !gated
+        || (measured_mbs > 0.0 && ratio.max(1.0 / ratio.max(1e-12)) <= 1.0 + cfg.tolerance);
+    PhaseParity {
+        phase,
+        bytes,
+        measured_mbs,
+        predicted_mbs,
+        gated,
+        ratio,
+        within,
+    }
+}
+
+/// One workload × backend run.
+#[derive(Debug, Clone)]
+pub struct CaseReport {
+    pub workload: &'static str,
+    pub backend: &'static str,
+    /// Read then write phase comparisons.
+    pub phases: Vec<PhaseParity>,
+    /// Output verification (TeraValidate / workload verifier) passed.
+    pub verified: bool,
+    /// Human summary from the verifier.
+    pub verify_summary: String,
+    /// Wall-clock seconds for the whole case.
+    pub elapsed: f64,
+}
+
+impl CaseReport {
+    /// Every gated phase within the band and the output verified.
+    pub fn passed(&self) -> bool {
+        self.verified && self.phases.iter().all(|p| p.within)
+    }
+}
+
+/// The harness' full result.
+#[derive(Debug, Clone)]
+pub struct ParityReport {
+    pub tolerance: f64,
+    pub seed: u64,
+    pub device: DeviceConstants,
+    pub cases: Vec<CaseReport>,
+}
+
+impl ParityReport {
+    /// Every case verified and every gated phase within the band.
+    pub fn passed(&self) -> bool {
+        self.cases.iter().all(CaseReport::passed)
+    }
+
+    /// The cases that failed (for error messages).
+    pub fn failures(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for c in &self.cases {
+            if !c.verified {
+                out.push(format!(
+                    "{}/{}: verification failed ({})",
+                    c.workload, c.backend, c.verify_summary
+                ));
+            }
+            for p in &c.phases {
+                if !p.within {
+                    out.push(format!(
+                        "{}/{} {}: measured {:.1} MB/s vs predicted {:.1} MB/s (ratio {:.2}, tolerance {:.2})",
+                        c.workload, c.backend, p.phase, p.measured_mbs, p.predicted_mbs, p.ratio, self.tolerance
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Human table.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "device constants (measured): ν={:.0} MB/s  μ_r={:.0} MB/s  μ_w={:.0} MB/s  (seed {}, tolerance {:.2})\n",
+            self.device.ram_mbs,
+            self.device.disk_read_mbs,
+            self.device.disk_write_mbs,
+            self.seed,
+            self.tolerance
+        );
+        s.push_str(&format!(
+            "{:<16} {:<6} {:<6} {:>12} {:>12} {:>8}  {}\n",
+            "workload", "store", "phase", "measured", "predicted", "ratio", "status"
+        ));
+        for c in &self.cases {
+            for p in &c.phases {
+                s.push_str(&format!(
+                    "{:<16} {:<6} {:<6} {:>12.1} {:>12.1} {:>8.2}  {}\n",
+                    c.workload,
+                    c.backend,
+                    p.phase,
+                    p.measured_mbs,
+                    p.predicted_mbs,
+                    p.ratio,
+                    if !p.gated {
+                        "ungated (too few bytes)"
+                    } else if p.within {
+                        "OK"
+                    } else {
+                        "OUTSIDE TOLERANCE"
+                    }
+                ));
+            }
+            if !c.verified {
+                s.push_str(&format!(
+                    "{:<16} {:<6} VERIFY FAILED: {}\n",
+                    c.workload, c.backend, c.verify_summary
+                ));
+            }
+        }
+        s
+    }
+}
+
+/// Single-worker server: one stream per phase, so the measured per-stream
+/// throughput is directly comparable to the models' per-node `q` and the
+/// run order is deterministic.
+fn parity_server(store: Arc<dyn ObjectStore>) -> JobServer {
+    JobServer::new(
+        store,
+        JobServerConfig {
+            workers: 1,
+            nodes: 1,
+            containers_per_node: 1,
+            max_concurrent_jobs: 1,
+            shuffle_spill_threshold: 0, // everything through the tiers
+            shuffle_chunk: 1 << 20,
+            split_buffer: 4 << 20,
+        },
+    )
+}
+
+/// Run one workload over one backend; returns the case report.
+fn run_case(
+    workload: ParityWorkload,
+    backend: ParityBackend,
+    cfg: &ParityConfig,
+    model: &ClusterParams,
+) -> Result<CaseReport> {
+    let t0 = Instant::now();
+    let dir = TempDir::new(&format!("parity-{}-{}", workload.name(), backend.name()))
+        .map_err(|e| Error::io(Path::new("tmp"), e))?;
+    let store = backend.build(dir.path(), cfg)?;
+    let (stats, verified, summary): (PipelineStats, bool, String) = match workload {
+        ParityWorkload::TeraSort => {
+            terasort::teragen(
+                store.as_ref(),
+                "in/",
+                cfg.records,
+                cfg.records / 8 + 1,
+                cfg.seed,
+            )?;
+            let (in_count, in_sum) = terasort::input_checksum(store.as_ref(), "in/")?;
+            let server = parity_server(Arc::clone(&store));
+            let stats = terasort::run_terasort(
+                &server,
+                Arc::new(SortKernel::Cpu),
+                "in/",
+                "out/",
+                cfg.reducers,
+                cfg.split_size,
+                true,
+            )?;
+            server.shutdown()?;
+            let rep = terasort::teravalidate(store.as_ref(), "out/")?;
+            let ok = rep.sorted && rep.records == in_count && rep.checksum == in_sum;
+            let summary = format!(
+                "records={} sorted={} checksum_match={}",
+                rep.records,
+                rep.sorted,
+                rep.records == in_count && rep.checksum == in_sum
+            );
+            (stats, ok, summary)
+        }
+        ParityWorkload::WordCountTopK | ParityWorkload::LogSessions => {
+            let named = match workload {
+                ParityWorkload::WordCountTopK => NamedWorkload::WordCountTopK,
+                _ => NamedWorkload::LogSessions,
+            };
+            named.generate(store.as_ref(), "p/", cfg.scale, cfg.seed)?;
+            let server = parity_server(Arc::clone(&store));
+            let handle = server.submit(named.pipeline("p/", cfg.reducers)?)?;
+            let stats = handle.join()?;
+            server.shutdown()?;
+            match named.verify(store.as_ref(), "p/") {
+                Ok(summary) => (stats, true, summary),
+                Err(e) => (stats, false, e.to_string()),
+            }
+        }
+    };
+
+    let (pred_read, pred_write) = predict(backend, model, cfg.tls_residency);
+    let read = stats.map_read_io();
+    let write = stats.reduce_write_io();
+    Ok(CaseReport {
+        workload: workload.name(),
+        backend: backend.name(),
+        phases: vec![
+            phase_parity("read", read.bytes, read.mbs(), pred_read, cfg),
+            phase_parity("write", write.bytes, write.mbs(), pred_write, cfg),
+        ],
+        verified,
+        verify_summary: summary,
+        elapsed: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Drive the configured workloads over the configured backends and
+/// compare measured against predicted throughput. Errors only on
+/// harness-level failures (a job refusing to run); tolerance or
+/// verification misses are reported in the returned [`ParityReport`] —
+/// callers decide whether they are fatal ([`crate::bench::parity`] does).
+pub fn run_parity(cfg: &ParityConfig) -> Result<ParityReport> {
+    let device = measure_device_constants(cfg)?;
+    let model = device.model();
+    let mut cases = Vec::new();
+    for &workload in &cfg.workloads {
+        for &backend in &cfg.backends {
+            cases.push(run_case(workload, backend, cfg, &model)?);
+        }
+    }
+    Ok(ParityReport {
+        tolerance: cfg.tolerance,
+        seed: cfg.seed,
+        device,
+        cases,
+    })
+}
+
+// ------------------------------------------------- simulator vs model
+
+/// One simulator-vs-model consistency case: the same
+/// [`ClusterParams::palmetto`] constants evaluated by the discrete-event
+/// simulator and by the closed-form equation, with a per-case tolerance
+/// (flows that fan in across nodes — HDFS's replicated write —
+/// accumulate more discretization error than the clean striped paths).
+#[derive(Debug, Clone)]
+pub struct SimModelCase {
+    pub name: &'static str,
+    /// Per-node throughput the simulator produced, MB/s.
+    pub sim_mbs: f64,
+    /// The closed-form `q`, MB/s.
+    pub model_mbs: f64,
+    /// Maximum relative error this case is allowed.
+    pub tolerance: f64,
+}
+
+impl SimModelCase {
+    /// Relative error of the simulator against the closed form.
+    pub fn rel_err(&self) -> f64 {
+        (self.sim_mbs - self.model_mbs).abs() / self.model_mbs.max(1e-9)
+    }
+
+    /// Whether this case agrees within its tolerance.
+    pub fn within(&self) -> bool {
+        self.rel_err() <= self.tolerance
+    }
+}
+
+/// Per-node MB/s of 16 single-container nodes each pushing 100 MB
+/// through `build`'s flows on the simulated §5.1 testbed (N=16, M=2) —
+/// the simulator's answer to the question the closed-form `q` equations
+/// answer analytically.
+pub fn sim_per_node_mbs(
+    constants: SimConstants,
+    build: impl Fn(&ClusterSim, usize, f64) -> Vec<FlowSpec>,
+) -> Result<f64> {
+    let c = ClusterSim::new(16, 2, 1, constants);
+    let d = 100.0;
+    let tasks: Vec<Task> = (0..16)
+        .map(|i| Task {
+            node: i,
+            stages: vec![Stage {
+                flows: build(&c, i, d),
+            }],
+        })
+        .collect();
+    let sim = Simulator::new(c.resources.clone(), vec![1; 16]);
+    let out = sim.run(tasks)?;
+    Ok(d / out.makespan)
+}
+
+/// Evaluate the one shared simulator-vs-model case table — consumed by
+/// `tests/model_sim_parity.rs` (asserts every case) *and* by
+/// [`crate::bench::parity`] (renders the cases into `BENCH_fig5.json`
+/// and gates on them), so the two gates cannot diverge.
+pub fn sim_model_cases() -> Result<Vec<SimModelCase>> {
+    let p = ClusterParams::palmetto();
+    let dflt = SimConstants::default();
+    let mut cases = vec![
+        SimModelCase {
+            name: "ofs_read",
+            sim_mbs: sim_per_node_mbs(dflt, |c, i, d| c.read_flows(BackendKind::Ofs, i, d))?,
+            model_mbs: p.ofs_read(),
+            tolerance: 0.05,
+        },
+        SimModelCase {
+            name: "ofs_write",
+            sim_mbs: sim_per_node_mbs(dflt, |c, i, d| c.write_flows(BackendKind::Ofs, i, d))?,
+            model_mbs: p.ofs_write(),
+            tolerance: 0.05,
+        },
+        SimModelCase {
+            name: "tls_read_f0.5",
+            sim_mbs: sim_per_node_mbs(dflt, |c, i, d| {
+                c.read_flows(BackendKind::Tls { f_pct: 50 }, i, d)
+            })?,
+            model_mbs: p.tls_read(0.5),
+            tolerance: 0.10,
+        },
+        SimModelCase {
+            name: "tls_write",
+            sim_mbs: sim_per_node_mbs(dflt, |c, i, d| {
+                c.write_flows(BackendKind::Tls { f_pct: 100 }, i, d)
+            })?,
+            model_mbs: p.tls_write(),
+            tolerance: 0.05,
+        },
+        SimModelCase {
+            name: "hdfs_read_local",
+            sim_mbs: sim_per_node_mbs(dflt, |c, i, d| c.read_flows(BackendKind::Hdfs, i, d))?,
+            model_mbs: p.hdfs_read_local(),
+            tolerance: 0.05,
+        },
+    ];
+    // eq. (2) models synchronous durable writes: page cache off, and the
+    // remote-copy fan-in makes this the loosest agreement
+    let durable = SimConstants {
+        hdfs_page_cache: false,
+        ..SimConstants::default()
+    };
+    cases.push(SimModelCase {
+        name: "hdfs_write_durable",
+        sim_mbs: sim_per_node_mbs(durable, |c, i, d| c.write_flows(BackendKind::Hdfs, i, d))?,
+        model_mbs: p.hdfs_write(),
+        tolerance: 0.25,
+    });
+    Ok(cases)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predictions_follow_the_paper_shape() {
+        // synthetic constants: RAM ≫ disk, like every real host
+        let model = ClusterParams::single_node(1000.0, 600.0, 8000.0);
+        let (mem_r, mem_w) = predict(ParityBackend::Mem, &model, 1.0);
+        let (pfs_r, pfs_w) = predict(ParityBackend::Pfs, &model, 1.0);
+        let (hdfs_r, hdfs_w) = predict(ParityBackend::Hdfs, &model, 1.0);
+        let (tls_r, tls_w) = predict(ParityBackend::Tls, &model, 1.0);
+        // reads: mem = tls(f=1) = ν > pfs = hdfs = disk
+        assert_eq!(mem_r, 8000.0);
+        assert_eq!(tls_r, mem_r);
+        assert_eq!(pfs_r, 1000.0);
+        assert_eq!(hdfs_r, 1000.0);
+        // writes: ν > pfs = tls (eq. 6) > hdfs (eq. 2: 3 copies)
+        assert_eq!(mem_w, 8000.0);
+        assert_eq!(pfs_w, 600.0);
+        assert_eq!(tls_w, 600.0);
+        assert!((hdfs_w - 200.0).abs() < 1e-9);
+        // partial residency interpolates between disk and RAM
+        let (tls_half, _) = predict(ParityBackend::Tls, &model, 0.5);
+        assert!(tls_half > pfs_r && tls_half < mem_r, "{tls_half}");
+    }
+
+    #[test]
+    fn phase_gating_and_band() {
+        let cfg = ParityConfig {
+            tolerance: 1.0, // within 2×
+            min_phase_bytes: 1000,
+            ..ParityConfig::smoke()
+        };
+        // measured 2× predicted: on the edge, passes
+        let p = phase_parity("read", 5000, 200.0, 100.0, &cfg);
+        assert!(p.gated && p.within, "{p:?}");
+        // measured 3× predicted: outside
+        let p = phase_parity("read", 5000, 300.0, 100.0, &cfg);
+        assert!(p.gated && !p.within, "{p:?}");
+        // 3× too *slow* is equally outside (the band is symmetric)
+        let p = phase_parity("write", 5000, 100.0, 300.0, &cfg);
+        assert!(!p.within, "{p:?}");
+        // too few bytes: reported, not gated
+        let p = phase_parity("write", 10, 1.0, 1000.0, &cfg);
+        assert!(!p.gated && p.within, "{p:?}");
+        // zero measurement on a gated phase can never pass
+        let p = phase_parity("read", 5000, 0.0, 100.0, &cfg);
+        assert!(!p.within, "{p:?}");
+    }
+
+    #[test]
+    fn device_probe_returns_positive_constants() {
+        let cfg = ParityConfig {
+            probe_bytes: 64 << 10,
+            probe_objects: 2,
+            ..ParityConfig::smoke()
+        };
+        let dev = measure_device_constants(&cfg).unwrap();
+        assert!(dev.ram_mbs > 0.0);
+        assert!(dev.disk_read_mbs > 0.0);
+        assert!(dev.disk_write_mbs > 0.0);
+    }
+
+    /// A miniature end-to-end parity pass: two backends, one workload,
+    /// effectively unbounded tolerance — proves the plumbing (measured
+    /// values present and non-zero, verification runs) without asserting
+    /// host-dependent throughput ratios in a unit test.
+    #[test]
+    fn mini_parity_measures_and_verifies() {
+        let cfg = ParityConfig {
+            records: 5_000,
+            reducers: 2,
+            split_size: 128 << 10,
+            tolerance: 1e9,
+            min_phase_bytes: 1,
+            probe_bytes: 64 << 10,
+            probe_objects: 2,
+            backends: vec![ParityBackend::Mem, ParityBackend::Tls],
+            workloads: vec![ParityWorkload::TeraSort],
+            ..ParityConfig::smoke()
+        };
+        let report = run_parity(&cfg).unwrap();
+        assert_eq!(report.cases.len(), 2);
+        assert!(report.passed(), "{:?}", report.failures());
+        for case in &report.cases {
+            assert!(case.verified, "{}: {}", case.backend, case.verify_summary);
+            let read = &case.phases[0];
+            let write = &case.phases[1];
+            assert_eq!(read.bytes, 5_000 * 100);
+            assert_eq!(write.bytes, 5_000 * 100);
+            assert!(read.measured_mbs > 0.0, "{case:?}");
+            assert!(write.measured_mbs > 0.0, "{case:?}");
+        }
+        assert!(report.render().contains("terasort"));
+    }
+}

@@ -31,7 +31,9 @@ fn tls(root: &Path) -> TwoLevelStore {
     TwoLevelStore::open(cfg).unwrap()
 }
 
-/// Three fixed seeds plus the CI-provided one (if any).
+/// Three fixed seeds plus an environment-provided one (if any):
+/// `TLSTORE_CRASH_SEED` (the crash-suite-specific override CI drives)
+/// takes precedence over the repo-wide `TLSTORE_SEED` master.
 fn seeds() -> Vec<u64> {
     let mut v = vec![0xC0FFEE, 42, 20150831];
     if let Ok(s) = std::env::var("TLSTORE_CRASH_SEED") {
@@ -39,6 +41,8 @@ fn seeds() -> Vec<u64> {
             Ok(n) => v.push(n),
             Err(_) => panic!("TLSTORE_CRASH_SEED must be a u64, got `{s}`"),
         }
+    } else if std::env::var("TLSTORE_SEED").is_ok() {
+        v.push(tlstore::testing::master_seed());
     }
     v
 }

@@ -1,32 +1,31 @@
-//! Integration: TeraGen → TeraSort → TeraValidate through the real
-//! MapReduce engine, the real storage backends, and the PJRT sort kernel.
+//! Integration: TeraGen → TeraSort → TeraValidate through the Job API
+//! (JobServer + spilled shuffle), the real storage backends, and the
+//! block-sort kernel.
 //!
-//! Skipped cleanly when artifacts/ is absent.
+//! The sort kernel is chosen per environment: the PJRT artifact when
+//! `artifacts/` is built, the portable CPU sort otherwise — so this
+//! suite runs everywhere instead of skipping (`SortKernel::auto`).
 
 use std::path::Path;
 use std::sync::{Arc, OnceLock};
 
 use tlstore::config::Backend;
-use tlstore::mapreduce::Engine;
-use tlstore::runtime::Runtime;
+use tlstore::mapreduce::{JobServer, JobServerConfig};
 use tlstore::storage::hdfs::HdfsLike;
 use tlstore::storage::pfs::Pfs;
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
 use tlstore::storage::ObjectStore;
 use tlstore::terasort::{
-    input_checksum, run_terasort, teragen, teravalidate, Partitioner, RECORD_SIZE,
+    input_checksum, run_terasort, teragen, teravalidate, Partitioner, SortKernel, RECORD_SIZE,
 };
 use tlstore::testing::TempDir;
 
-fn runtime() -> Option<Arc<Runtime>> {
-    static RT: OnceLock<Option<Arc<Runtime>>> = OnceLock::new();
-    RT.get_or_init(|| {
-        let dir = Path::new("artifacts");
-        if !dir.join("manifest.toml").exists() {
-            eprintln!("artifacts/ not built — skipping");
-            return None;
-        }
-        Some(Arc::new(Runtime::load_dir(dir).expect("load artifacts")))
+fn kernel() -> Arc<SortKernel> {
+    static K: OnceLock<Arc<SortKernel>> = OnceLock::new();
+    K.get_or_init(|| {
+        let k = SortKernel::auto(Path::new("artifacts"));
+        eprintln!("terasort integration: sort kernel = {}", k.name());
+        k
     })
     .clone()
 }
@@ -50,8 +49,20 @@ fn backend_store(backend: Backend, dir: &TempDir) -> Arc<dyn ObjectStore> {
     }
 }
 
+fn server(store: Arc<dyn ObjectStore>) -> JobServer {
+    JobServer::new(
+        store,
+        JobServerConfig {
+            workers: 4,
+            nodes: 4,
+            containers_per_node: 4,
+            max_concurrent_jobs: 1,
+            ..JobServerConfig::default()
+        },
+    )
+}
+
 fn terasort_roundtrip(backend: Backend, records: u64, reducers: u32) {
-    let Some(rt) = runtime() else { return };
     let dir = TempDir::new(&format!("ts-{}", backend.name())).unwrap();
     let store = backend_store(backend, &dir);
 
@@ -60,21 +71,24 @@ fn terasort_roundtrip(backend: Backend, records: u64, reducers: u32) {
     let (in_count, in_sum) = input_checksum(store.as_ref(), "in/").unwrap();
     assert_eq!(in_count, records);
 
-    let engine = Engine::new(4, 4, 4);
-    let stats = run_terasort(
-        &engine,
-        Arc::clone(&store),
-        rt,
-        "in/",
-        "out/",
-        reducers,
-        64 << 10,
-        true,
-    )
-    .unwrap();
-    assert_eq!(stats.shuffle_records, records);
-    assert_eq!(stats.input_bytes, written);
-    assert_eq!(stats.output_bytes, written);
+    let srv = server(Arc::clone(&store));
+    let stats = run_terasort(&srv, kernel(), "in/", "out/", reducers, 64 << 10, true).unwrap();
+    srv.shutdown().unwrap();
+    assert_eq!(stats.shuffle_records(), records);
+    assert_eq!(stats.input_bytes(), written);
+    assert_eq!(stats.output_bytes(), written);
+    // TeraSort rides the spilled-shuffle dataflow plane now: runs went
+    // through `.shuffle/` objects and were cleaned up afterwards
+    assert!(stats.spilled_runs() > 0, "{backend:?}: shuffle must spill");
+    assert!(
+        store.list(tlstore::storage::SHUFFLE_NS).is_empty(),
+        "{backend:?}: shuffle namespace must be clean"
+    );
+    // measured I/O instrumentation is present and consistent
+    let read = stats.map_read_io();
+    assert_eq!(read.bytes, written, "{backend:?}: read bytes");
+    assert!(read.mbs() > 0.0);
+    assert_eq!(stats.reduce_write_io().bytes, written, "{backend:?}: write bytes");
 
     let report = teravalidate(store.as_ref(), "out/").unwrap();
     assert!(report.sorted, "{backend:?}: output must be globally sorted");
@@ -109,11 +123,11 @@ fn terasort_more_reducers_than_buckets_with_data() {
 
 #[test]
 fn sampled_partitioner_is_monotone_on_real_data() {
-    let Some(rt) = runtime() else { return };
     let dir = TempDir::new("ts-part").unwrap();
     let store = tls_store(&dir);
     teragen(store.as_ref(), "in/", 5_000, 2_000, 7).unwrap();
-    let p = tlstore::terasort::sample_partitioner(store.as_ref(), "in/", &rt, 8, 4).unwrap();
+    let p =
+        tlstore::terasort::sample_partitioner(store.as_ref(), "in/", &kernel(), 8, 4).unwrap();
     assert!(p.is_monotone());
     // uniform data → partitions should all receive some buckets
     let hits: std::collections::HashSet<u32> =

@@ -1,0 +1,142 @@
+//! Golden pins for the §4 models: eqs. (1)–(7) on the paper's published
+//! Palmetto constants, the §4.5 Figure-5 crossover points, and sampled
+//! points of the aggregate curves — all as *literal* expected values, so
+//! a refactor of `model/mod.rs` cannot silently drift the curves the
+//! parity harness and the benches compare against.
+//!
+//! Values come straight from the paper (§4.5, §5.1, Figure 5) or are
+//! hand-computed once from its constants (ν = 6267, ρ = 1170, μ_r = 237,
+//! μ_w = 116, Palmetto: μ = 60, μ′ = 400/200, N = 16, M = 2).
+
+use tlstore::model::{CaseStudyParams, ClusterParams};
+
+fn close(got: f64, want: f64, rel: f64, what: &str) {
+    assert!(
+        (got - want).abs() <= want.abs() * rel,
+        "{what}: got {got}, golden {want} (rel tol {rel})"
+    );
+}
+
+// ---- eqs. (1)–(7) on the Palmetto §5.1 testbed --------------------------
+
+#[test]
+fn golden_eq1_hdfs_read() {
+    let p = ClusterParams::palmetto();
+    // local branch: the compute node's SATA disk
+    assert_eq!(p.hdfs_read_local(), 60.0);
+    // remote branch still binds on the disk, not the 1170 MB/s NIC
+    assert_eq!(p.hdfs_read_remote(), 60.0);
+}
+
+#[test]
+fn golden_eq2_hdfs_write() {
+    // three synchronous copies: μ/3 = 20 MB/s binds
+    assert_eq!(ClusterParams::palmetto().hdfs_write(), 20.0);
+}
+
+#[test]
+fn golden_eq3_ofs_read_write() {
+    let p = ClusterParams::palmetto();
+    // (M/N)·μ′_r = 2·400/16 = 50; (M/N)·μ′_w = 2·200/16 = 25
+    close(p.ofs_read(), 50.0, 1e-12, "ofs_read");
+    close(p.ofs_write(), 25.0, 1e-12, "ofs_write");
+    // and the N-scaling shape: doubling N halves the per-node share
+    close(p.with_n(32).ofs_read(), 25.0, 1e-12, "ofs_read @N=32");
+}
+
+#[test]
+fn golden_eq4_eq5_tachyon() {
+    let p = ClusterParams::palmetto();
+    assert_eq!(p.tachyon_read_local(), 6267.0);
+    assert_eq!(p.tachyon_read_remote(), 1170.0); // NIC binds remotely
+    assert_eq!(p.tachyon_write(), 6267.0);
+}
+
+#[test]
+fn golden_eq6_tls_write() {
+    // min(ν, q_w_OFS) = 25 MB/s: the synchronous PFS leg bounds it
+    assert_eq!(ClusterParams::palmetto().tls_write(), 25.0);
+}
+
+#[test]
+fn golden_eq7_tls_read_curve() {
+    let p = ClusterParams::palmetto();
+    // hand-computed harmonic means at ν = 6267, q_r_OFS = 50:
+    //   f=0.2 → 1/(0.2/6267 + 0.8/50) = 62.376
+    //   f=0.5 → 1/(0.5/6267 + 0.5/50) = 99.208
+    //   f=0.8 → 1/(0.8/6267 + 0.2/50) = 242.268
+    close(p.tls_read(0.0), 50.0, 1e-12, "tls_read f=0");
+    close(p.tls_read(0.2), 62.376, 1e-4, "tls_read f=0.2");
+    close(p.tls_read(0.5), 99.208, 1e-4, "tls_read f=0.5");
+    close(p.tls_read(0.8), 242.268, 1e-4, "tls_read f=0.8");
+    close(p.tls_read(1.0), 6267.0, 1e-12, "tls_read f=1");
+}
+
+// ---- §4.5 Figure-5 crossover points, exactly the paper's ----------------
+
+#[test]
+fn golden_fig5_crossovers_at_10gbs() {
+    let m = CaseStudyParams::new(10_000.0);
+    assert_eq!(m.crossover_read_vs_pfs(), 43);
+    assert_eq!(m.crossover_read_vs_tls(0.2), 53);
+    assert_eq!(m.crossover_read_vs_tls(0.5), 83);
+    assert_eq!(m.crossover_write(), 259);
+}
+
+#[test]
+fn golden_fig5_crossovers_at_50gbs() {
+    let m = CaseStudyParams::new(50_000.0);
+    assert_eq!(m.crossover_read_vs_pfs(), 211);
+    assert_eq!(m.crossover_read_vs_tls(0.2), 262);
+    assert_eq!(m.crossover_read_vs_tls(0.5), 414);
+    assert_eq!(m.crossover_write(), 1294);
+}
+
+#[test]
+fn golden_fig5_asymptotic_gains() {
+    // paper: +25% at f=0.2 (10 → 12.5 GB/s), ~+95% at f=0.5 (10 → 19.6).
+    // Our exact curve values, pinned tightly: 1.24975 and 1.99840.
+    let m = CaseStudyParams::new(10_000.0);
+    close(m.tls_asymptotic_gain(0.2, 2000), 1.24975, 1e-4, "gain f=0.2");
+    close(m.tls_asymptotic_gain(0.5, 2000), 1.99840, 1e-4, "gain f=0.5");
+}
+
+// ---- sampled aggregate-curve points (the series Figure 5 plots) ---------
+
+#[test]
+fn golden_fig5_curve_samples_at_10gbs() {
+    let m = CaseStudyParams::new(10_000.0);
+    // HDFS aggregate read is linear in N at μ_r = 237
+    close(m.hdfs_read_aggregate(1), 237.0, 1e-12, "hdfs_read N=1");
+    close(m.hdfs_read_aggregate(43), 10_191.0, 1e-12, "hdfs_read N=43");
+    // PFS aggregate saturates at B once N·ρ exceeds it: 10000/1170 ≈ 8.5
+    close(m.pfs_aggregate_throughput(8), 9_360.0, 1e-12, "pfs N=8");
+    close(m.pfs_aggregate_throughput(16), 10_000.0, 1e-12, "pfs N=16");
+    close(m.pfs_aggregate_throughput(2000), 10_000.0, 1e-12, "pfs N=2000");
+    // HDFS aggregate write: N·min(μ_w/3, ρ/2) = N·38.667
+    close(m.hdfs_write_aggregate(3), 116.0, 1e-9, "hdfs_write N=3");
+    close(m.hdfs_write_aggregate(259), 10_014.67, 1e-4, "hdfs_write N=259");
+    // TLS aggregate read at the saturated end approaches B/(1−f)
+    close(m.tls_read_aggregate(2000, 0.2), 12_497.5, 1e-3, "tls f=0.2 N=2000");
+    close(m.tls_read_aggregate(2000, 0.5), 19_984.0, 1e-3, "tls f=0.5 N=2000");
+    // and the write curve is the PFS curve (eq. 6)
+    close(m.tls_write_aggregate(16), 10_000.0, 1e-12, "tls_write N=16");
+}
+
+#[test]
+fn golden_single_node_mapping() {
+    // the parity harness' single-host collapse: pinned so the measured
+    // comparisons can't silently change meaning
+    let p = ClusterParams::single_node(500.0, 300.0, 5000.0);
+    assert_eq!(p.hdfs_read_local(), 500.0);
+    close(p.hdfs_write(), 100.0, 1e-12, "hdfs_write = μ_w/3");
+    assert_eq!(p.ofs_read(), 500.0);
+    assert_eq!(p.ofs_write(), 300.0);
+    assert_eq!(p.tls_write(), 300.0);
+    close(
+        p.tls_read(0.5),
+        1.0 / (0.5 / 5000.0 + 0.5 / 500.0),
+        1e-12,
+        "tls_read f=0.5",
+    );
+}

@@ -1,0 +1,81 @@
+//! Consistency: the discrete-event simulator (`sim`) and the analytic
+//! models (`model`) evaluated on the *same* cluster constants must agree
+//! — otherwise one of them can drift unnoticed and Figure-5/Figure-7
+//! claims stop meaning anything.
+//!
+//! The case table lives in `testing::parity::sim_model_cases` and is the
+//! **same** table `tlstore bench parity` renders into `BENCH_fig5.json`
+//! and gates on, so this suite and the CLI gate cannot diverge. Each
+//! case drives an I/O-only task set through the simulator on the §5.1
+//! testbed geometry (N=16, M=2, the Palmetto constants both modules
+//! share) and compares the per-node throughput against the closed-form
+//! `q`, with per-case tolerances (flows that fan in across nodes —
+//! HDFS's replicated write — accumulate more discretization error than
+//! the clean striped paths).
+
+use tlstore::model::ClusterParams;
+use tlstore::sim::{BackendKind, SimConstants};
+use tlstore::testing::parity::{sim_model_cases, sim_per_node_mbs};
+
+#[test]
+fn every_shared_case_agrees_within_its_tolerance() {
+    let cases = sim_model_cases().unwrap();
+    // the table covers every equation family: reads and writes for OFS,
+    // TLS, and HDFS
+    let names: Vec<&str> = cases.iter().map(|c| c.name).collect();
+    for expect in [
+        "ofs_read",
+        "ofs_write",
+        "tls_read_f0.5",
+        "tls_write",
+        "hdfs_read_local",
+        "hdfs_write_durable",
+    ] {
+        assert!(names.contains(&expect), "case table lost `{expect}`: {names:?}");
+    }
+    for c in &cases {
+        assert!(
+            c.within(),
+            "{}: sim {:.2} MB/s vs model {:.2} MB/s (rel err {:.3} > {})",
+            c.name,
+            c.sim_mbs,
+            c.model_mbs,
+            c.rel_err(),
+            c.tolerance
+        );
+        assert!(c.sim_mbs > 0.0 && c.model_mbs > 0.0, "{}: degenerate case", c.name);
+    }
+}
+
+#[test]
+fn sim_matches_eq7_across_more_residencies() {
+    // beyond the shared table's f=0.5 point: the harmonic-mean curve
+    // holds across the residency range
+    let p = ClusterParams::palmetto();
+    for (f_pct, f) in [(25u8, 0.25f64), (80, 0.8)] {
+        let sim = sim_per_node_mbs(SimConstants::default(), |c, i, d| {
+            c.read_flows(BackendKind::Tls { f_pct }, i, d)
+        })
+        .unwrap();
+        let model = p.tls_read(f);
+        let err = (sim - model).abs() / model;
+        assert!(
+            err <= 0.10,
+            "tls read f={f}: sim {sim:.2} MB/s vs model {model:.2} MB/s (rel err {err:.3})"
+        );
+    }
+}
+
+#[test]
+fn sim_and_model_share_their_constants() {
+    // the agreement above is only meaningful if both sides really run on
+    // the same numbers — pin the linkage
+    let p = ClusterParams::palmetto();
+    let c = SimConstants::default();
+    assert_eq!(p.nu, c.ram_mbs);
+    assert_eq!(p.rho, c.nic_mbs);
+    assert_eq!(p.mu_read, c.disk_mbs);
+    assert_eq!(p.mu_p_read, c.raid_read_mbs);
+    assert_eq!(p.mu_p_write, c.raid_write_mbs);
+    assert_eq!(p.phi, c.backplane_mbs);
+}

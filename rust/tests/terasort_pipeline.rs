@@ -1,0 +1,125 @@
+//! Property: seeded TeraGen → JobServer TeraSort → TeraValidate
+//! round-trips on **all four backends** at small scale — sorted order,
+//! record count, and the order-insensitive checksum are preserved, the
+//! shuffle really spills through `.shuffle/`, and the namespace is clean
+//! afterwards. Includes a tight-memory TwoLevelStore configuration whose
+//! memory tier cannot hold the job, so shuffle spills force eviction and
+//! dirty-spill traffic mid-sort.
+//!
+//! Seeds derive from `testing::master_seed()` — reproduce any failure
+//! with `TLSTORE_SEED=<seed> cargo test --test terasort_pipeline` (every
+//! assertion message carries the case context).
+
+use std::sync::Arc;
+
+use tlstore::mapreduce::{JobServer, JobServerConfig};
+use tlstore::storage::hdfs::HdfsLike;
+use tlstore::storage::memstore::MemStore;
+use tlstore::storage::pfs::Pfs;
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::{ObjectStore, SHUFFLE_NS};
+use tlstore::terasort::{
+    input_checksum, run_terasort, teragen, teravalidate, SortKernel, RECORD_SIZE,
+};
+use tlstore::testing::{master_seed, TempDir};
+use tlstore::util::rng::Pcg32;
+
+const BACKENDS: [&str; 4] = ["mem", "pfs", "hdfs", "tls"];
+
+fn build(backend: &str, dir: &TempDir, tight_mem: bool) -> Arc<dyn ObjectStore> {
+    match backend {
+        "mem" => Arc::new(MemStore::new(u64::MAX, "lru").unwrap()),
+        "pfs" => Arc::new(Pfs::open(dir.path(), 3, 64 << 10).unwrap()),
+        "hdfs" => Arc::new(HdfsLike::open(dir.path(), 4, 3).unwrap()),
+        "tls" => {
+            let cfg = TlsConfig::builder(dir.path())
+                // tight: the memory tier holds ~1/4 of even a small job,
+                // so write-through staging + shuffle spills keep evicting
+                .mem_capacity(if tight_mem { 48 << 10 } else { 32 << 20 })
+                .block_size(if tight_mem { 4 << 10 } else { 1 << 20 })
+                .pfs_servers(3)
+                .stripe_size(if tight_mem { 3 << 10 } else { 64 << 10 })
+                .build()
+                .unwrap();
+            Arc::new(TwoLevelStore::open(cfg).unwrap())
+        }
+        other => panic!("unknown backend {other}"),
+    }
+}
+
+/// One seeded round-trip on one backend; panics with `ctx` on violation.
+fn roundtrip(backend: &str, records: u64, reducers: u32, seed: u64, tight_mem: bool, ctx: &str) {
+    let dir = TempDir::new(&format!("ts-prop-{backend}")).unwrap();
+    let store = build(backend, &dir, tight_mem);
+
+    let written =
+        teragen(store.as_ref(), "in/", records, records / 3 + 1, seed).unwrap();
+    assert_eq!(written, records * RECORD_SIZE as u64, "{ctx}: teragen bytes");
+    let (in_count, in_sum) = input_checksum(store.as_ref(), "in/").unwrap();
+
+    let server = JobServer::new(
+        Arc::clone(&store),
+        JobServerConfig {
+            workers: 2,
+            nodes: 2,
+            containers_per_node: 2,
+            max_concurrent_jobs: 1,
+            shuffle_spill_threshold: 0, // every run through .shuffle/
+            shuffle_chunk: 4 << 10,     // small windows: exercise reassembly
+            ..JobServerConfig::default()
+        },
+    );
+    let stats = run_terasort(
+        &server,
+        Arc::new(SortKernel::Cpu),
+        "in/",
+        "out/",
+        reducers,
+        8 << 10, // many small splits
+        true,
+    )
+    .unwrap_or_else(|e| panic!("{ctx}: terasort failed: {e}"));
+    server.shutdown().unwrap();
+
+    assert!(stats.spilled_runs() > 0, "{ctx}: shuffle must spill");
+    assert!(
+        store.list(SHUFFLE_NS).is_empty(),
+        "{ctx}: shuffle residue left behind"
+    );
+
+    let report = teravalidate(store.as_ref(), "out/").unwrap();
+    assert!(report.sorted, "{ctx}: output not globally sorted");
+    assert_eq!(report.records, in_count, "{ctx}: records lost or duplicated");
+    assert_eq!(report.checksum, in_sum, "{ctx}: checksum drifted");
+}
+
+#[test]
+fn seeded_roundtrips_across_all_backends() {
+    let master = master_seed();
+    eprintln!("terasort round-trip property: TLSTORE_SEED={master}");
+    for case in 0..3u64 {
+        let case_seed = master ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg32::new(case_seed, 0x7E5A);
+        // 120..~1400 records, 1..6 reducers — small but irregular, so
+        // object boundaries, split edges, and partition skew all move
+        let records = 120 + rng.gen_range(1280) as u64;
+        let reducers = 1 + rng.gen_range(5);
+        for backend in BACKENDS {
+            let ctx = format!(
+                "TLSTORE_SEED={master} case {case} ({backend}, records={records}, reducers={reducers})"
+            );
+            roundtrip(backend, records, reducers, case_seed, false, &ctx);
+        }
+    }
+}
+
+#[test]
+fn tight_memory_two_level_spills_and_still_sorts() {
+    let master = master_seed();
+    eprintln!("tight-memory terasort: TLSTORE_SEED={master}");
+    // 2000 records = 200 KB through a 48 KB memory tier: the shuffle
+    // working set alone exceeds the tier, so spills must evict and the
+    // PFS leg carries the job — correctness must not depend on residency
+    let ctx = format!("TLSTORE_SEED={master} tight-memory tls");
+    roundtrip("tls", 2_000, 4, master, true, &ctx);
+}
