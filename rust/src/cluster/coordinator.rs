@@ -1,0 +1,995 @@
+//! Cluster coordinator: the control-plane process for distributed
+//! TeraSort.
+//!
+//! The coordinator owns a [`Listener`] (TCP or loopback), registers
+//! workers as they connect, plans input splits with the same
+//! [`LocalityScheduler`] the single-process engine uses, and drives a
+//! map → reduce pipeline by handing [`TaskSpec`]s to workers that pull
+//! via `ReqTask`. Worker loss — a dropped connection, or missed
+//! heartbeats reported by a [`Ticker`] — requeues the worker's in-flight
+//! tasks for re-execution on the survivors; if the *last* worker dies
+//! with work outstanding, the job fails with a diagnosable status
+//! instead of hanging.
+//!
+//! # Dispatch policy (determinism contract)
+//!
+//! [`TaskBoard::next_for`] is deliberately strict, in two tiers:
+//!
+//! 1. a worker is first offered queued tasks that *prefer its own node*;
+//! 2. otherwise it may take tasks with no preference, or whose preferred
+//!    node has **no live worker**.
+//!
+//! A live node's map tasks can never be stolen by another worker. This
+//! is what makes the chaos tests scheduling-independent: a worker
+//! configured to die on its first assignment is *guaranteed* to receive
+//! one of its own node's tasks first, so "exactly one task re-executed"
+//! is an invariant, not a race. There is no livelock: every queued
+//! task's preferring node either has a live worker that will eventually
+//! `ReqTask` again, or is dead — in which case tier 2 applies and
+//! [`Coordinator`]'s worker-loss path wakes every parked dispatcher.
+//!
+//! # Failure accounting
+//!
+//! Tasks carry an attempt number. A task that *fails* (worker reports
+//! `TaskFail`) is retried up to [`MAX_TASK_ATTEMPTS`] times before the
+//! job is declared failed; tasks lost to a *dead worker* are requeued
+//! without that penalty (the worker, not the task, was at fault). The
+//! first `TaskDone` for a task id wins — late duplicates from a worker
+//! declared dead but still executing are ignored, so re-execution is
+//! effectively exactly-once at the board.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::cluster::heartbeat::{Clock, SystemClock, WorkerRegistry};
+use crate::cluster::transport::{Conn, Listener};
+use crate::cluster::wire::{Message, Role, TaskKind, TaskSpec, WIRE_VERSION};
+use crate::error::{Error, Result};
+use crate::mapreduce::server::namespaced_job_id;
+use crate::mapreduce::{plan_splits, LocalityScheduler};
+use crate::metrics::timeline::{IoStat, TimelineSet};
+use crate::storage::{reap_prefix, ObjectStore, SHUFFLE_NS};
+use crate::terasort::{sample_partitioner, Partitioner, SortKernel, RECORD_SIZE};
+
+/// A task that *fails* (as opposed to being stranded on a dead worker)
+/// is dispatched at most this many times before the job is declared
+/// failed.
+pub const MAX_TASK_ATTEMPTS: u32 = 2;
+
+/// Static configuration for a [`Coordinator`].
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Number of workers that must register before the job starts; also
+    /// the node count fed to the locality scheduler.
+    pub expected_workers: usize,
+    /// Cluster epoch threaded into job ids (see
+    /// [`namespaced_job_id`]) so two coordinator incarnations never
+    /// collide in the shuffle namespace.
+    pub epoch: u64,
+    /// Heartbeat grace window in milliseconds: a worker whose last sign
+    /// of life is older than this is declared dead by [`Ticker::tick`].
+    /// Must exceed the longest single task's runtime on TCP
+    /// deployments; irrelevant on loopback tests, which detect loss via
+    /// connection drop instead of running a ticker.
+    pub grace_ms: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            expected_workers: 1,
+            epoch: 0,
+            grace_ms: 10_000,
+        }
+    }
+}
+
+/// One TeraSort job submitted to [`Coordinator::run`].
+#[derive(Debug, Clone)]
+pub struct ClusterJob {
+    /// Human-readable name threaded into the job id.
+    pub name: String,
+    /// Input prefix holding `RECORD_SIZE`-aligned TeraGen objects.
+    pub input_prefix: String,
+    /// Output prefix; reducer `p` writes `{output_prefix}part-r-{p:05}`.
+    pub output_prefix: String,
+    /// Number of reduce partitions.
+    pub reducers: u32,
+    /// Target map split size in bytes (rounded down to a whole number
+    /// of records, minimum one record).
+    pub split_size: u64,
+    /// Input objects to sample for the range partitioner; `0` selects
+    /// the uniform partitioner (deterministic, no sampling read).
+    pub sample_objects: usize,
+}
+
+// --------------------------------------------------------------- board
+
+/// Pure task-scheduling state: which tasks are queued, in flight,
+/// completed; attempt counts; locality accounting. No I/O, no locks —
+/// fully unit-testable.
+#[derive(Debug, Default)]
+pub struct TaskBoard {
+    queued: VecDeque<TaskSpec>,
+    /// task id → (worker id, spec) for dispatched, unfinished tasks.
+    inflight: HashMap<u64, (u64, TaskSpec)>,
+    /// task id → number of times dispatched.
+    attempts: HashMap<u64, u32>,
+    /// Task ids dispatched more than once (the re-execution evidence the
+    /// chaos tests assert on).
+    reexecuted: BTreeSet<u64>,
+    completed: BTreeSet<u64>,
+    locality_hits: usize,
+    locality_total: usize,
+}
+
+impl TaskBoard {
+    /// Queue a batch of tasks (map wave or reduce wave).
+    pub fn push(&mut self, specs: Vec<TaskSpec>) {
+        self.queued.extend(specs);
+    }
+
+    /// Tasks not yet completed (queued or running).
+    pub fn outstanding(&self) -> usize {
+        self.queued.len() + self.inflight.len()
+    }
+
+    /// Two-tier strict dispatch for the worker on `node` (see module
+    /// docs): own-preferred tasks first, then tasks preferring no node
+    /// or a node absent from `live`. Returns the spec with its attempt
+    /// number bumped, and moves it to the in-flight set under `worker`.
+    pub fn next_for(
+        &mut self,
+        worker: u64,
+        node: u32,
+        live: &BTreeSet<u32>,
+    ) -> Option<TaskSpec> {
+        let own = self
+            .queued
+            .iter()
+            .position(|t| t.preferred_node == Some(node));
+        let idx = own.or_else(|| {
+            self.queued.iter().position(|t| match t.preferred_node {
+                None => true,
+                Some(p) => !live.contains(&p),
+            })
+        })?;
+        let mut spec = self.queued.remove(idx).unwrap();
+        let attempts = self.attempts.entry(spec.task_id).or_insert(0);
+        *attempts += 1;
+        if *attempts > 1 {
+            self.reexecuted.insert(spec.task_id);
+        }
+        spec.attempt = *attempts - 1;
+        if let TaskKind::Map { .. } = spec.kind {
+            self.locality_total += 1;
+            if spec.preferred_node == Some(node) {
+                self.locality_hits += 1;
+            }
+        }
+        self.inflight.insert(spec.task_id, (worker, spec.clone()));
+        Some(spec)
+    }
+
+    /// Record completion; the first report wins. Returns `true` if this
+    /// call transitioned the task to completed (callers only account
+    /// spills and I/O for the winning attempt).
+    pub fn complete(&mut self, task_id: u64) -> bool {
+        if self.completed.contains(&task_id) {
+            return false;
+        }
+        self.inflight.remove(&task_id);
+        self.queued.retain(|t| t.task_id != task_id);
+        self.completed.insert(task_id)
+    }
+
+    /// Requeue every in-flight task held by a dead worker, front of the
+    /// queue (stranded work beats fresh work). Returns the requeued
+    /// task ids, sorted.
+    pub fn fail_worker(&mut self, worker: u64) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, (w, _))| *w == worker)
+            .map(|(id, _)| *id)
+            .collect();
+        ids.sort_unstable();
+        for id in ids.iter().rev() {
+            let (_, spec) = self.inflight.remove(id).unwrap();
+            self.queued.push_front(spec);
+        }
+        ids
+    }
+
+    /// Requeue one task its worker reported as failed. Returns the
+    /// attempt count so the caller can enforce [`MAX_TASK_ATTEMPTS`].
+    pub fn fail_task(&mut self, task_id: u64) -> u32 {
+        if let Some((_, spec)) = self.inflight.remove(&task_id) {
+            self.queued.push_front(spec);
+        }
+        self.attempts.get(&task_id).copied().unwrap_or(0)
+    }
+}
+
+// --------------------------------------------------------------- state
+
+/// Per-worker I/O rollup, fed from `TaskDone` reports.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerIo {
+    /// Bytes read from the store, task-grained.
+    pub read: IoStat,
+    /// Bytes written to the store, task-grained.
+    pub write: IoStat,
+    /// Tasks this worker completed (winning attempts only).
+    pub tasks: usize,
+}
+
+struct CoordState {
+    board: TaskBoard,
+    registry: WorkerRegistry,
+    /// worker id → scheduler node index, assigned round-robin in
+    /// registration order.
+    node_of: HashMap<u64, u32>,
+    next_node: u32,
+    registered: usize,
+    alive: usize,
+    /// Workers currently blocked inside `wait_for_task`; the ticker
+    /// treats them as live (they are parked on our condvar, not hung).
+    parked: HashSet<u64>,
+    job_done: bool,
+    failed: Option<String>,
+    /// partition → spill keys from winning map attempts.
+    spills: BTreeMap<u32, Vec<String>>,
+    io: BTreeMap<u64, WorkerIo>,
+    workers_lost: usize,
+    /// Connection shutdown hooks, fired on worker death / shutdown to
+    /// unblock handler threads stuck in `recv`.
+    shutdowns: HashMap<u64, Arc<dyn Fn() + Send + Sync>>,
+    started: Instant,
+}
+
+struct CoordInner {
+    store: Arc<dyn ObjectStore>,
+    kernel: Arc<SortKernel>,
+    cfg: CoordinatorConfig,
+    clock: Arc<dyn Clock>,
+    state: Mutex<CoordState>,
+    cv: Condvar,
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// What [`Coordinator::run`] returns on success: enough evidence to
+/// audit scheduling (locality, re-execution) and to render per-worker
+/// I/O timelines next to the model's predictions.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Namespaced job id (carries the cluster epoch).
+    pub job_id: String,
+    /// Epoch the job ran under.
+    pub epoch: u64,
+    /// Map / reduce task counts.
+    pub map_tasks: usize,
+    /// Reduce task count.
+    pub reduce_tasks: usize,
+    /// Task ids dispatched more than once, sorted.
+    pub reexecuted: Vec<u64>,
+    /// task id → dispatch count.
+    pub attempts: HashMap<u64, u32>,
+    /// Map tasks dispatched to their preferred node.
+    pub locality_hits: usize,
+    /// Map tasks dispatched in total.
+    pub locality_total: usize,
+    /// Workers that ever registered.
+    pub workers_seen: usize,
+    /// Workers lost during the job.
+    pub workers_lost: usize,
+    /// Per-worker I/O, sorted by worker id.
+    pub per_worker: Vec<(u64, WorkerIo)>,
+}
+
+impl ClusterReport {
+    /// Render per-worker read/write throughput as a [`TimelineSet`]
+    /// (`w{id}.read` / `w{id}.write`), Figure-7 style.
+    pub fn timelines(&self) -> TimelineSet {
+        let mut set = TimelineSet::default();
+        for (id, io) in &self.per_worker {
+            if !io.read.is_empty() {
+                set.series.push(io.read.to_timeline(&format!("w{id}.read")));
+            }
+            if !io.write.is_empty() {
+                set.series
+                    .push(io.write.to_timeline(&format!("w{id}.write")));
+            }
+        }
+        set
+    }
+}
+
+// ---------------------------------------------------------- coordinator
+
+/// The coordinator process: accepts worker connections on its listener
+/// and drives one [`ClusterJob`] at a time through [`Coordinator::run`].
+pub struct Coordinator {
+    inner: Arc<CoordInner>,
+    listener: Arc<dyn Listener>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+/// Heartbeat monitor handle for TCP deployments: call [`Ticker::tick`]
+/// periodically from a timer loop to expire silent workers. Loopback
+/// tests never need one — worker loss is detected by connection drop.
+pub struct Ticker {
+    inner: Arc<CoordInner>,
+}
+
+impl Ticker {
+    /// Expire workers whose last heartbeat is older than the grace
+    /// window. Workers parked in dispatch are virtually beaten first —
+    /// they are blocked on the coordinator's own condvar, which is
+    /// liveness, not death. Returns the ids declared dead.
+    pub fn tick(&self) -> Vec<u64> {
+        let now = self.inner.clock.now_ms();
+        let expired = {
+            let mut st = self.inner.state.lock().unwrap();
+            let parked: Vec<u64> = st.parked.iter().copied().collect();
+            for id in parked {
+                st.registry.beat(id, now);
+            }
+            st.registry.expired(now)
+        };
+        for id in &expired {
+            worker_lost(&self.inner, *id);
+        }
+        expired
+    }
+}
+
+impl Coordinator {
+    /// Bind the coordinator to an already-listening endpoint and start
+    /// accepting workers. Uses the wall clock for heartbeats; tests
+    /// inject a [`ManualClock`](crate::cluster::heartbeat::ManualClock)
+    /// via [`Coordinator::with_clock`].
+    pub fn new(
+        listener: Box<dyn Listener>,
+        store: Arc<dyn ObjectStore>,
+        kernel: Arc<SortKernel>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        Self::with_clock(listener, store, kernel, cfg, Arc::new(SystemClock::new()))
+    }
+
+    /// [`Coordinator::new`] with an injectable clock.
+    pub fn with_clock(
+        listener: Box<dyn Listener>,
+        store: Arc<dyn ObjectStore>,
+        kernel: Arc<SortKernel>,
+        cfg: CoordinatorConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Coordinator {
+        let grace = cfg.grace_ms;
+        let inner = Arc::new(CoordInner {
+            store,
+            kernel,
+            cfg,
+            clock,
+            state: Mutex::new(CoordState {
+                board: TaskBoard::default(),
+                registry: WorkerRegistry::new(grace),
+                node_of: HashMap::new(),
+                next_node: 0,
+                registered: 0,
+                alive: 0,
+                parked: HashSet::new(),
+                job_done: false,
+                failed: None,
+                spills: BTreeMap::new(),
+                io: BTreeMap::new(),
+                workers_lost: 0,
+                shutdowns: HashMap::new(),
+                started: Instant::now(),
+            }),
+            cv: Condvar::new(),
+            handlers: Mutex::new(Vec::new()),
+        });
+        let listener: Arc<dyn Listener> = Arc::from(listener);
+        let accept = {
+            let inner = Arc::clone(&inner);
+            let listener = Arc::clone(&listener);
+            std::thread::spawn(move || {
+                while let Ok(conn) = listener.accept() {
+                    let inner2 = Arc::clone(&inner);
+                    let h = std::thread::spawn(move || handle_conn(inner2, conn));
+                    inner.handlers.lock().unwrap().push(h);
+                }
+            })
+        };
+        Coordinator {
+            inner,
+            listener,
+            accept_thread: Some(accept),
+        }
+    }
+
+    /// Address the listener is bound to (useful with ephemeral ports).
+    pub fn local_addr(&self) -> String {
+        self.listener.local_addr()
+    }
+
+    /// Heartbeat monitor handle for TCP deployments.
+    pub fn ticker(&self) -> Ticker {
+        Ticker {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+
+    /// Run one TeraSort job to completion: wait for
+    /// `expected_workers` registrations, plan splits with locality,
+    /// dispatch the map wave, then the reduce wave, then reap the
+    /// job's shuffle namespace. On failure the shuffle residue is left
+    /// in place — [`Recover`](crate::storage::Recover) is the
+    /// authority that cleans it, and the chaos tests assert exactly
+    /// that division of labor.
+    pub fn run(&self, job: &ClusterJob) -> Result<ClusterReport> {
+        let inner = &self.inner;
+        // Phase 0: quorum.
+        {
+            let mut st = inner.state.lock().unwrap();
+            while st.registered < inner.cfg.expected_workers {
+                if let Some(msg) = &st.failed {
+                    return Err(Error::Job(msg.clone()));
+                }
+                st = inner.cv.wait(st).unwrap();
+            }
+        }
+
+        let job_id = namespaced_job_id(inner.cfg.epoch, &job.name);
+        let shuffle_prefix = format!("{SHUFFLE_NS}{job_id}/");
+
+        // Phase 1: plan.
+        let partitioner = if job.sample_objects > 0 {
+            sample_partitioner(
+                inner.store.as_ref(),
+                &job.input_prefix,
+                &inner.kernel,
+                job.reducers,
+                job.sample_objects,
+            )?
+        } else {
+            Partitioner::uniform(job.reducers)
+        };
+        let split = (job.split_size.max(RECORD_SIZE as u64) / RECORD_SIZE as u64)
+            * RECORD_SIZE as u64;
+        let splits = plan_splits(
+            inner.store.as_ref(),
+            &job.input_prefix,
+            split,
+            inner.cfg.expected_workers,
+        )?;
+        if splits.is_empty() {
+            let msg = format!("no input under {:?}", job.input_prefix);
+            self.fail(&msg);
+            return Err(Error::Job(msg));
+        }
+        let sched = LocalityScheduler::new(inner.cfg.expected_workers, 1);
+        let (assignments, _) = sched.assign(&splits);
+        let order = sched.execution_order(&assignments);
+
+        let map_specs: Vec<TaskSpec> = order
+            .iter()
+            .enumerate()
+            .map(|(pos, &split_idx)| {
+                let s = &splits[split_idx];
+                TaskSpec {
+                    task_id: pos as u64 + 1,
+                    job_id: job_id.clone(),
+                    attempt: 0,
+                    preferred_node: Some(assignments[split_idx].node as u32),
+                    kind: TaskKind::Map {
+                        object: s.object.clone(),
+                        offset: s.offset,
+                        len: s.len,
+                        task_index: split_idx as u32,
+                        partitions: job.reducers,
+                        bucket_map: partitioner.bucket_map().to_vec(),
+                        shuffle_prefix: shuffle_prefix.clone(),
+                    },
+                }
+            })
+            .collect();
+        let map_tasks = map_specs.len();
+
+        // Phase 2: map wave.
+        {
+            let mut st = inner.state.lock().unwrap();
+            st.board.push(map_specs);
+            inner.cv.notify_all();
+        }
+        self.wait_phase()?;
+
+        // Phase 3: reduce wave. Every partition gets a task — an empty
+        // spill list still commits an empty output object so validation
+        // sees the full part set.
+        let reduce_specs: Vec<TaskSpec> = {
+            let mut st = inner.state.lock().unwrap();
+            (0..job.reducers)
+                .map(|p| {
+                    let mut keys = st.spills.remove(&p).unwrap_or_default();
+                    keys.sort_unstable();
+                    TaskSpec {
+                        task_id: map_tasks as u64 + p as u64 + 1,
+                        job_id: job_id.clone(),
+                        attempt: 0,
+                        preferred_node: None,
+                        kind: TaskKind::Reduce {
+                            partition: p,
+                            spill_keys: keys,
+                            out_key: format!("{}part-r-{p:05}", job.output_prefix),
+                        },
+                    }
+                })
+                .collect()
+        };
+        {
+            let mut st = inner.state.lock().unwrap();
+            st.board.push(reduce_specs);
+            inner.cv.notify_all();
+        }
+        self.wait_phase()?;
+
+        // Phase 4: drain workers, reap shuffle (success path only).
+        let report = {
+            let mut st = inner.state.lock().unwrap();
+            st.job_done = true;
+            inner.cv.notify_all();
+            ClusterReport {
+                job_id: job_id.clone(),
+                epoch: inner.cfg.epoch,
+                map_tasks,
+                reduce_tasks: job.reducers as usize,
+                reexecuted: st.board.reexecuted.iter().copied().collect(),
+                attempts: st.board.attempts.clone(),
+                locality_hits: st.board.locality_hits,
+                locality_total: st.board.locality_total,
+                workers_seen: st.registered,
+                workers_lost: st.workers_lost,
+                per_worker: st.io.iter().map(|(k, v)| (*k, v.clone())).collect(),
+            }
+        };
+        reap_prefix(inner.store.as_ref(), &shuffle_prefix)?;
+        Ok(report)
+    }
+
+    /// Block until the current wave drains or the job fails.
+    fn wait_phase(&self) -> Result<()> {
+        let inner = &self.inner;
+        let mut st = inner.state.lock().unwrap();
+        loop {
+            if let Some(msg) = &st.failed {
+                return Err(Error::Job(msg.clone()));
+            }
+            if st.board.outstanding() == 0 {
+                return Ok(());
+            }
+            st = inner.cv.wait(st).unwrap();
+        }
+    }
+
+    fn fail(&self, msg: &str) {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.failed.is_none() {
+            st.failed = Some(msg.to_string());
+        }
+        self.inner.cv.notify_all();
+    }
+
+    /// Tear the coordinator down: stop accepting, unblock and join every
+    /// connection handler. Idempotent with respect to already-dead
+    /// workers.
+    pub fn shutdown(mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.failed.is_none() && !st.job_done {
+                st.job_done = true;
+            }
+            self.inner.cv.notify_all();
+        }
+        self.listener.close();
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        let hooks: Vec<Arc<dyn Fn() + Send + Sync>> = {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdowns.drain().map(|(_, h)| h).collect()
+        };
+        for hook in hooks {
+            hook();
+        }
+        let handlers: Vec<JoinHandle<()>> =
+            self.inner.handlers.lock().unwrap().drain(..).collect();
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Mark a worker dead: unregister it, requeue its in-flight tasks, and
+/// fail the job if no workers remain with work outstanding. Idempotent —
+/// the connection handler and the ticker may both report the same loss.
+fn worker_lost(inner: &Arc<CoordInner>, id: u64) {
+    let hook = {
+        let mut st = inner.state.lock().unwrap();
+        if st.node_of.remove(&id).is_none() {
+            return; // already processed
+        }
+        st.registry.remove(id);
+        st.parked.remove(&id);
+        st.alive -= 1;
+        let hook = st.shutdowns.remove(&id);
+        if !st.job_done && st.failed.is_none() {
+            st.workers_lost += 1;
+            let requeued = st.board.fail_worker(id);
+            if st.alive == 0 && st.board.outstanding() > 0 {
+                st.failed = Some(format!(
+                    "all workers lost; {} task(s) stranded (worker {} was last, {} requeued)",
+                    st.board.outstanding(),
+                    id,
+                    requeued.len(),
+                ));
+            }
+        } else {
+            st.board.fail_worker(id);
+        }
+        inner.cv.notify_all();
+        hook
+    };
+    if let Some(hook) = hook {
+        hook();
+    }
+}
+
+/// Serve one worker connection: handshake, then a message loop. Every
+/// received message counts as a heartbeat. Connection errors and EOF
+/// are treated as worker loss.
+fn handle_conn(inner: Arc<CoordInner>, mut conn: Box<dyn Conn>) {
+    let hello = match conn.recv() {
+        Ok(Message::Hello {
+            version,
+            role,
+            epoch,
+        }) => (version, role, epoch),
+        _ => return, // garbage before handshake: drop silently
+    };
+    if hello.0 != WIRE_VERSION || hello.1 != Role::Worker {
+        let _ = conn.send(&Message::ErrReply {
+            code: 1,
+            msg: format!(
+                "expected worker hello v{WIRE_VERSION}, got v{} role {:?}",
+                hello.0, hello.1
+            ),
+        });
+        conn.close();
+        return;
+    }
+    let id = {
+        let mut st = inner.state.lock().unwrap();
+        let now = inner.clock.now_ms();
+        let id = st.registry.register(now);
+        let node = st.next_node % inner.cfg.expected_workers.max(1) as u32;
+        st.next_node += 1;
+        st.node_of.insert(id, node);
+        st.shutdowns.insert(id, conn.shutdown_handle());
+        st.registered += 1;
+        st.alive += 1;
+        inner.cv.notify_all();
+        id
+    };
+    if conn
+        .send(&Message::HelloAck {
+            version: WIRE_VERSION,
+            epoch: inner.cfg.epoch,
+            worker_id: id,
+        })
+        .is_err()
+    {
+        worker_lost(&inner, id);
+        return;
+    }
+
+    loop {
+        let msg = match conn.recv() {
+            Ok(m) => m,
+            Err(_) => {
+                worker_lost(&inner, id);
+                return;
+            }
+        };
+        let now = inner.clock.now_ms();
+        let reply = match msg {
+            Message::Heartbeat { worker_id } => {
+                let mut st = inner.state.lock().unwrap();
+                st.registry.beat(worker_id, now);
+                Some(Message::HeartbeatAck)
+            }
+            Message::ReqTask { worker_id } => {
+                {
+                    let mut st = inner.state.lock().unwrap();
+                    st.registry.beat(worker_id, now);
+                }
+                Some(wait_for_task(&inner, id))
+            }
+            Message::TaskDone {
+                worker_id,
+                task_id,
+                spills,
+                bytes_read,
+                bytes_written,
+                micros,
+            } => {
+                let mut st = inner.state.lock().unwrap();
+                st.registry.beat(worker_id, now);
+                if st.board.complete(task_id) {
+                    for (p, key) in spills {
+                        st.spills.entry(p).or_default().push(key);
+                    }
+                    let t = st.started.elapsed().as_secs_f64();
+                    let secs = micros as f64 / 1e6;
+                    // Whole-task time is charged to both directions; a
+                    // coarse split, but consistent across workers so the
+                    // relative timelines stay meaningful.
+                    let io = st.io.entry(id).or_default();
+                    io.tasks += 1;
+                    if bytes_read > 0 {
+                        io.read.record(t, bytes_read, secs.max(1e-9));
+                    }
+                    if bytes_written > 0 {
+                        io.write.record(t, bytes_written, secs.max(1e-9));
+                    }
+                }
+                inner.cv.notify_all();
+                None
+            }
+            Message::TaskFail {
+                worker_id,
+                task_id,
+                error,
+            } => {
+                let mut st = inner.state.lock().unwrap();
+                st.registry.beat(worker_id, now);
+                let attempts = st.board.fail_task(task_id);
+                if attempts >= MAX_TASK_ATTEMPTS && st.failed.is_none() {
+                    st.failed = Some(format!(
+                        "task {task_id} failed after {attempts} attempt(s): {error}"
+                    ));
+                }
+                inner.cv.notify_all();
+                None
+            }
+            other => Some(Message::ErrReply {
+                code: 2,
+                msg: format!("unexpected message from worker: tag for {other:?}"),
+            }),
+        };
+        if let Some(reply) = reply {
+            let done = matches!(reply, Message::NoTask { .. });
+            if conn.send(&reply).is_err() {
+                worker_lost(&inner, id);
+                return;
+            }
+            if done {
+                // Normal end of job for this worker: deregister without
+                // the loss bookkeeping. If the ticker already declared
+                // this worker dead while it was parked, the removal
+                // happened there — don't double-decrement.
+                let mut st = inner.state.lock().unwrap();
+                if st.node_of.remove(&id).is_some() {
+                    st.alive -= 1;
+                }
+                st.registry.remove(id);
+                st.parked.remove(&id);
+                st.shutdowns.remove(&id);
+                inner.cv.notify_all();
+                conn.close();
+                return;
+            }
+        }
+    }
+}
+
+/// Block until a task is available for `worker`, the job finishes, or
+/// the job fails. Parks the worker (ticker exempts parked workers from
+/// expiry) for the duration.
+fn wait_for_task(inner: &Arc<CoordInner>, worker: u64) -> Message {
+    let mut st = inner.state.lock().unwrap();
+    st.parked.insert(worker);
+    let reply = loop {
+        if let Some(msg) = &st.failed {
+            break Message::NoTask {
+                failed: true,
+                msg: msg.clone(),
+            };
+        }
+        if st.job_done {
+            break Message::NoTask {
+                failed: false,
+                msg: String::new(),
+            };
+        }
+        let Some(&node) = st.node_of.get(&worker) else {
+            // We were declared dead (ticker) while parked.
+            break Message::NoTask {
+                failed: true,
+                msg: "worker expired".into(),
+            };
+        };
+        let live: BTreeSet<u32> = st.node_of.values().copied().collect();
+        if let Some(spec) = st.board.next_for(worker, node, &live) {
+            break Message::TaskAssign(spec);
+        }
+        st = inner.cv.wait(st).unwrap();
+    };
+    st.parked.remove(&worker);
+    reply
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map_spec(task_id: u64, pref: Option<u32>) -> TaskSpec {
+        TaskSpec {
+            task_id,
+            job_id: "job-t".into(),
+            attempt: 0,
+            preferred_node: pref,
+            kind: TaskKind::Map {
+                object: format!("in/part-{task_id}"),
+                offset: 0,
+                len: 100,
+                task_index: task_id as u32,
+                partitions: 2,
+                bucket_map: vec![0; 128].into_iter().chain(vec![1; 128]).collect(),
+                shuffle_prefix: ".shuffle/job-t/".into(),
+            },
+        }
+    }
+
+    fn live(nodes: &[u32]) -> BTreeSet<u32> {
+        nodes.iter().copied().collect()
+    }
+
+    #[test]
+    fn next_for_prefers_own_node() {
+        let mut b = TaskBoard::default();
+        b.push(vec![map_spec(1, Some(0)), map_spec(2, Some(1))]);
+        let l = live(&[0, 1]);
+        let got = b.next_for(11, 1, &l).unwrap();
+        assert_eq!(got.task_id, 2, "node 1 must get its own task first");
+        assert_eq!(got.attempt, 0);
+    }
+
+    #[test]
+    fn next_for_never_steals_from_live_nodes() {
+        let mut b = TaskBoard::default();
+        b.push(vec![map_spec(1, Some(0))]);
+        let l = live(&[0, 1]);
+        assert!(
+            b.next_for(12, 1, &l).is_none(),
+            "node 0 is live; its task must not be stolen"
+        );
+        // Node 0 dies: now anyone may take it.
+        let l = live(&[1]);
+        let got = b.next_for(12, 1, &l).unwrap();
+        assert_eq!(got.task_id, 1);
+    }
+
+    #[test]
+    fn next_for_hands_out_unpreferred_tasks() {
+        let mut b = TaskBoard::default();
+        b.push(vec![map_spec(1, None)]);
+        let got = b.next_for(11, 0, &live(&[0, 1])).unwrap();
+        assert_eq!(got.task_id, 1);
+    }
+
+    #[test]
+    fn redispatch_bumps_attempt_and_marks_reexecuted() {
+        let mut b = TaskBoard::default();
+        b.push(vec![map_spec(1, Some(0))]);
+        let first = b.next_for(11, 0, &live(&[0])).unwrap();
+        assert_eq!(first.attempt, 0);
+        assert!(b.reexecuted.is_empty());
+        let requeued = b.fail_worker(11);
+        assert_eq!(requeued, vec![1]);
+        let second = b.next_for(12, 0, &live(&[0])).unwrap();
+        assert_eq!(second.attempt, 1);
+        assert_eq!(
+            b.reexecuted.iter().copied().collect::<Vec<_>>(),
+            vec![1]
+        );
+        assert_eq!(b.attempts[&1], 2);
+    }
+
+    #[test]
+    fn complete_is_first_wins() {
+        let mut b = TaskBoard::default();
+        b.push(vec![map_spec(1, Some(0))]);
+        b.next_for(11, 0, &live(&[0])).unwrap();
+        assert!(b.complete(1));
+        assert!(!b.complete(1), "duplicate completion must be ignored");
+        assert_eq!(b.outstanding(), 0);
+    }
+
+    #[test]
+    fn complete_drops_requeued_duplicates() {
+        // A worker declared dead may still finish its task; the requeued
+        // copy must vanish when the late TaskDone wins.
+        let mut b = TaskBoard::default();
+        b.push(vec![map_spec(1, Some(0))]);
+        b.next_for(11, 0, &live(&[0])).unwrap();
+        b.fail_worker(11); // task 1 back in queue
+        assert_eq!(b.outstanding(), 1);
+        assert!(b.complete(1));
+        assert_eq!(b.outstanding(), 0, "queued duplicate must be removed");
+    }
+
+    #[test]
+    fn fail_worker_requeues_in_task_order() {
+        let mut b = TaskBoard::default();
+        b.push(vec![
+            map_spec(1, Some(0)),
+            map_spec(2, Some(0)),
+            map_spec(3, Some(1)),
+        ]);
+        let l = live(&[0, 1]);
+        b.next_for(11, 0, &l).unwrap(); // task 1
+        b.next_for(11, 0, &l).unwrap(); // task 2
+        let requeued = b.fail_worker(11);
+        assert_eq!(requeued, vec![1, 2]);
+        // Requeued at the front, original order preserved.
+        let ids: Vec<u64> = b.queued.iter().map(|t| t.task_id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn locality_counted_at_dispatch() {
+        let mut b = TaskBoard::default();
+        b.push(vec![map_spec(1, Some(0)), map_spec(2, Some(1))]);
+        b.next_for(11, 0, &live(&[0])).unwrap(); // own: hit
+        b.next_for(11, 0, &live(&[0])).unwrap(); // stolen from dead node 1: miss
+        assert_eq!(b.locality_hits, 1);
+        assert_eq!(b.locality_total, 2);
+    }
+
+    #[test]
+    fn fail_task_reports_attempts() {
+        let mut b = TaskBoard::default();
+        b.push(vec![map_spec(1, Some(0))]);
+        b.next_for(11, 0, &live(&[0])).unwrap();
+        assert_eq!(b.fail_task(1), 1);
+        b.next_for(11, 0, &live(&[0])).unwrap();
+        assert_eq!(b.fail_task(1), 2, "second failure hits the attempt cap");
+    }
+
+    #[test]
+    fn report_timelines_use_worker_names() {
+        let mut io = WorkerIo::default();
+        io.read.record(1.0, 1_000_000, 0.5);
+        let report = ClusterReport {
+            job_id: "job-x".into(),
+            epoch: 0,
+            map_tasks: 1,
+            reduce_tasks: 1,
+            reexecuted: vec![],
+            attempts: HashMap::new(),
+            locality_hits: 1,
+            locality_total: 1,
+            workers_seen: 1,
+            workers_lost: 0,
+            per_worker: vec![(3, io)],
+        };
+        let set = report.timelines();
+        assert!(set.get("w3.read").is_some());
+        assert!(set.get("w3.write").is_none(), "empty stat renders nothing");
+    }
+}

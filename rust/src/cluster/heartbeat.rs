@@ -1,0 +1,253 @@
+//! Worker liveness tracking with an injectable clock.
+//!
+//! The coordinator owns a [`WorkerRegistry`]: workers register, beat
+//! periodically, and expire deterministically once a beat is more than
+//! `grace_ms` old. Nothing in this module sleeps or reads wall-clock
+//! time — callers pass `now` explicitly, sourced from a [`Clock`].
+//! Production uses [`SystemClock`]; tests use [`ManualClock`] and
+//! advance time by hand, so every timeout scenario (late-but-in-grace,
+//! just-missed, re-registration after expiry) is a pure function of the
+//! numbers, not of scheduler timing.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Milliseconds-since-start time source.
+pub trait Clock: Send + Sync {
+    /// Monotonic milliseconds since some fixed origin.
+    fn now_ms(&self) -> u64;
+}
+
+/// Real time: monotonic milliseconds since the clock was built.
+pub struct SystemClock {
+    origin: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> Self {
+        Self {
+            origin: Instant::now(),
+        }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_ms(&self) -> u64 {
+        self.origin.elapsed().as_millis() as u64
+    }
+}
+
+/// Hand-cranked time for tests: starts at 0, moves only on
+/// [`ManualClock::advance`] / [`ManualClock::set`].
+#[derive(Default)]
+pub struct ManualClock {
+    now: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Move time forward by `ms`.
+    pub fn advance(&self, ms: u64) {
+        self.now.fetch_add(ms, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute time (must not move backwards in tests that
+    /// care about monotonicity).
+    pub fn set(&self, ms: u64) {
+        self.now.store(ms, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ms(&self) -> u64 {
+        self.now.load(Ordering::SeqCst)
+    }
+}
+
+/// Liveness book-keeping for registered workers.
+///
+/// A worker is *alive* while its last beat is at most `grace_ms` old at
+/// the moment [`WorkerRegistry::expired`] runs. Ids are never reused: a
+/// worker that expires and reconnects registers again and gets a fresh
+/// id, so stale messages from its previous life are rejected by
+/// [`WorkerRegistry::beat`] returning `false`.
+pub struct WorkerRegistry {
+    grace_ms: u64,
+    next_id: u64,
+    last_beat: HashMap<u64, u64>,
+}
+
+impl WorkerRegistry {
+    /// `grace_ms` is the longest tolerated silence; a beat exactly
+    /// `grace_ms` old still counts as alive.
+    pub fn new(grace_ms: u64) -> Self {
+        Self {
+            grace_ms,
+            next_id: 1,
+            last_beat: HashMap::new(),
+        }
+    }
+
+    /// Register a new worker at time `now`; returns its fresh id.
+    pub fn register(&mut self, now: u64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.last_beat.insert(id, now);
+        id
+    }
+
+    /// Record a heartbeat. Returns `false` for ids that were never
+    /// registered or have already been expired (the peer should
+    /// re-register).
+    pub fn beat(&mut self, id: u64, now: u64) -> bool {
+        match self.last_beat.get_mut(&id) {
+            Some(t) => {
+                *t = (*t).max(now);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Remove and return every worker whose last beat is strictly older
+    /// than `grace_ms` at `now`. Deterministic: the same beat history
+    /// and the same `now` always expire the same set, sorted by id.
+    pub fn expired(&mut self, now: u64) -> Vec<u64> {
+        let mut dead: Vec<u64> = self
+            .last_beat
+            .iter()
+            .filter(|(_, &t)| now > t && now - t > self.grace_ms)
+            .map(|(&id, _)| id)
+            .collect();
+        dead.sort_unstable();
+        for id in &dead {
+            self.last_beat.remove(id);
+        }
+        dead
+    }
+
+    /// Drop a worker explicitly (connection closed). Idempotent.
+    pub fn remove(&mut self, id: u64) {
+        self.last_beat.remove(&id);
+    }
+
+    /// Number of currently-registered (unexpired) workers.
+    pub fn len(&self) -> usize {
+        self.last_beat.len()
+    }
+
+    /// Whether no workers are registered.
+    pub fn is_empty(&self) -> bool {
+        self.last_beat.is_empty()
+    }
+
+    /// Whether `id` is currently registered.
+    pub fn contains(&self, id: u64) -> bool {
+        self.last_beat.contains_key(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn late_beat_within_grace_keeps_worker() {
+        let clock = ManualClock::new();
+        let mut reg = WorkerRegistry::new(100);
+        let id = reg.register(clock.now_ms());
+        // the beat arrives late, but exactly at the grace boundary
+        clock.advance(100);
+        assert!(reg.beat(id, clock.now_ms()));
+        assert!(reg.expired(clock.now_ms()).is_empty());
+        // still alive a full grace later (boundary is inclusive)
+        clock.advance(100);
+        assert!(reg.expired(clock.now_ms()).is_empty());
+        assert!(reg.contains(id));
+    }
+
+    #[test]
+    fn missed_beat_expires_deterministically() {
+        let clock = ManualClock::new();
+        let mut reg = WorkerRegistry::new(100);
+        let id = reg.register(clock.now_ms());
+        clock.advance(101); // one ms past grace
+        assert_eq!(reg.expired(clock.now_ms()), vec![id]);
+        // expired worker's beats are rejected
+        assert!(!reg.beat(id, clock.now_ms()));
+        assert!(!reg.contains(id));
+        // and expiry is not reported twice
+        assert!(reg.expired(clock.now_ms()).is_empty());
+    }
+
+    #[test]
+    fn reregistration_after_expiry_gets_fresh_id() {
+        let clock = ManualClock::new();
+        let mut reg = WorkerRegistry::new(50);
+        let first = reg.register(clock.now_ms());
+        clock.advance(51);
+        assert_eq!(reg.expired(clock.now_ms()), vec![first]);
+        let second = reg.register(clock.now_ms());
+        assert_ne!(first, second, "ids are never reused");
+        assert!(reg.beat(second, clock.now_ms()));
+        assert!(!reg.beat(first, clock.now_ms()));
+    }
+
+    #[test]
+    fn beats_keep_multiple_workers_independently() {
+        let clock = ManualClock::new();
+        let mut reg = WorkerRegistry::new(100);
+        let a = reg.register(clock.now_ms());
+        let b = reg.register(clock.now_ms());
+        // only `a` keeps beating
+        for _ in 0..5 {
+            clock.advance(60);
+            assert!(reg.beat(a, clock.now_ms()));
+        }
+        // b's last beat is 300ms old; a's is fresh
+        assert_eq!(reg.expired(clock.now_ms()), vec![b]);
+        assert!(reg.contains(a));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn beat_never_moves_time_backwards() {
+        let mut reg = WorkerRegistry::new(100);
+        let id = reg.register(500);
+        // a delayed beat stamped earlier than the registration must not
+        // regress the liveness time
+        assert!(reg.beat(id, 100));
+        assert!(reg.expired(550).is_empty());
+    }
+
+    #[test]
+    fn explicit_remove_is_idempotent() {
+        let mut reg = WorkerRegistry::new(10);
+        let id = reg.register(0);
+        reg.remove(id);
+        reg.remove(id);
+        assert!(reg.is_empty());
+        assert!(!reg.beat(id, 1));
+    }
+
+    #[test]
+    fn manual_clock_is_exact() {
+        let c = ManualClock::new();
+        assert_eq!(c.now_ms(), 0);
+        c.advance(7);
+        c.advance(3);
+        assert_eq!(c.now_ms(), 10);
+        c.set(100);
+        assert_eq!(c.now_ms(), 100);
+    }
+}

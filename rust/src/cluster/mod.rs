@@ -1,0 +1,45 @@
+//! The cluster plane: multi-process TeraSort over a hand-rolled,
+//! std-only TCP protocol.
+//!
+//! Everything the single-process engine does in one address space —
+//! store, scheduler, map/reduce execution — splits here into three
+//! process roles connected by length-prefixed, CRC-trailered frames
+//! ([`wire`]):
+//!
+//! - **PFS stripe servers** ([`remote::serve`]) expose a local
+//!   [`ObjectStore`](crate::storage::ObjectStore) over the wire; the
+//!   [`remote::RemotePfs`] client stripes every object round-robin
+//!   across them, mirroring the in-process
+//!   [`Pfs`](crate::storage::pfs::Pfs) layout.
+//! - The **coordinator** ([`coordinator::Coordinator`]) plans splits
+//!   with the same locality scheduler as the job server, dispatches
+//!   [`wire::TaskSpec`]s to pulling workers, tracks heartbeats
+//!   ([`heartbeat`]), and re-executes tasks stranded on dead workers.
+//! - **Workers** ([`worker::Worker`]) pull tasks, sort splits with the
+//!   shared [`SortKernel`](crate::terasort::SortKernel), spill through
+//!   the shared store's `.shuffle/` namespace, and k-way merge reduce
+//!   output.
+//!
+//! All roles are wired to [`transport::Transport`], which has a real
+//! TCP implementation and a deterministic in-process loopback with
+//! scriptable faults — the chaos tests run the full cluster, kills
+//! included, inside one `cargo test` process with no sockets and no
+//! sleeps. `tlstore cluster {coordinator,worker,pfs-server}` runs the
+//! same code as real OS processes.
+
+pub mod coordinator;
+pub mod heartbeat;
+pub mod remote;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{
+    ClusterJob, ClusterReport, Coordinator, CoordinatorConfig, TaskBoard, Ticker, WorkerIo,
+    MAX_TASK_ATTEMPTS,
+};
+pub use heartbeat::{Clock, ManualClock, SystemClock, WorkerRegistry};
+pub use remote::{serve, RemotePfs, DEFAULT_STRIPE_SIZE, MAX_STRIPE_SIZE};
+pub use transport::{Conn, FaultScript, Listener, LoopbackNet, TcpTransport, Transport};
+pub use wire::{Message, Role, TaskKind, TaskSpec, WIRE_VERSION};
+pub use worker::{Worker, WorkerSummary};

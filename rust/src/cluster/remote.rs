@@ -1,0 +1,726 @@
+//! Remote PFS: stripe servers and the striping [`ObjectStore`] client.
+//!
+//! The paper's PFS is a set of storage servers an object is striped
+//! across (§2: "files are striped across multiple storage servers").
+//! [`serve`] turns any local [`ObjectStore`] into one such stripe
+//! server speaking the [`wire`](crate::cluster::wire) protocol;
+//! [`RemotePfs`] is the client that makes N of them look like a single
+//! [`ObjectStore`]:
+//!
+//! - an object `k` has a *home server* `fnv1a(k) % n`;
+//! - its bytes are cut into fixed-size stripes, stripe `i` stored as
+//!   object `k#s<i>` on server `(home + i) % n` — round-robin
+//!   placement, so large objects spread I/O across every server;
+//! - a small metadata object `k#meta` (size, stripe size, stripe
+//!   count, server count) lives on the home server and is written
+//!   **last** by [`ObjectWriter::commit`], so a fresh key is invisible
+//!   until fully striped (atomic publish by meta-presence). Racing a
+//!   reader against the *overwrite* of an existing key carries the
+//!   same caveat as every other backend: the store contract is
+//!   write-once-read-many.
+//!
+//! Keys containing the reserved `#meta` / `#s<i>` suffixes are the
+//! client's private namespace on the servers; `list` filters on the
+//! `#meta` suffix so callers only ever see logical keys.
+
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::transport::{Conn, Listener, Transport};
+use crate::cluster::wire::{Message, Role, WIRE_VERSION};
+use crate::error::{Error, Result, WireKind};
+use crate::storage::{clamped_len, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter};
+
+/// Default stripe size (4 MiB): small enough that one stripe `Put`
+/// frame stays well under the wire's `MAX_FRAME`, large enough to
+/// amortize per-request overhead.
+pub const DEFAULT_STRIPE_SIZE: u64 = 4 << 20;
+
+/// Largest permitted stripe (16 MiB) — a whole stripe must fit one
+/// frame with headroom.
+pub const MAX_STRIPE_SIZE: u64 = 16 << 20;
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+fn meta_key(key: &str) -> String {
+    format!("{key}#meta")
+}
+
+fn stripe_key(key: &str, stripe: u64) -> String {
+    format!("{key}#s{stripe}")
+}
+
+/// On-server metadata record for one logical object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct RemoteMeta {
+    size: u64,
+    stripe_size: u64,
+    nstripes: u32,
+    nservers: u32,
+}
+
+impl RemoteMeta {
+    fn encode(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(24);
+        v.extend_from_slice(&self.size.to_le_bytes());
+        v.extend_from_slice(&self.stripe_size.to_le_bytes());
+        v.extend_from_slice(&self.nstripes.to_le_bytes());
+        v.extend_from_slice(&self.nservers.to_le_bytes());
+        v
+    }
+
+    fn decode(key: &str, raw: &[u8]) -> Result<Self> {
+        if raw.len() != 24 {
+            return Err(Error::wire(
+                WireKind::Malformed,
+                format!("bad remote meta for {key}: {} bytes", raw.len()),
+            ));
+        }
+        Ok(Self {
+            size: u64::from_le_bytes(raw[0..8].try_into().unwrap()),
+            stripe_size: u64::from_le_bytes(raw[8..16].try_into().unwrap()),
+            nstripes: u32::from_le_bytes(raw[16..20].try_into().unwrap()),
+            nservers: u32::from_le_bytes(raw[20..24].try_into().unwrap()),
+        })
+    }
+}
+
+/// [`ObjectStore`] client striping objects across remote PFS servers.
+///
+/// One connection per server, used in strict request/response lockstep
+/// behind a mutex, so the client is `Sync` and shareable across worker
+/// threads.
+pub struct RemotePfs {
+    conns: Vec<Mutex<Box<dyn Conn>>>,
+    stripe_size: u64,
+}
+
+impl RemotePfs {
+    /// Connect to every server in `addrs` (order defines stripe
+    /// placement — all clients of one cluster must use the same order)
+    /// and handshake as [`Role::PfsClient`].
+    pub fn connect(
+        transport: &dyn Transport,
+        addrs: &[String],
+        stripe_size: u64,
+    ) -> Result<Self> {
+        if addrs.is_empty() {
+            return Err(Error::InvalidArg("remote pfs needs >= 1 server".into()));
+        }
+        if stripe_size == 0 || stripe_size > MAX_STRIPE_SIZE {
+            return Err(Error::InvalidArg(format!(
+                "stripe_size must be in 1..={MAX_STRIPE_SIZE}, got {stripe_size}"
+            )));
+        }
+        let mut conns = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let mut conn = transport.connect(addr)?;
+            conn.send(&Message::Hello {
+                version: WIRE_VERSION,
+                role: Role::PfsClient,
+                epoch: 0,
+            })?;
+            match conn.recv()? {
+                Message::HelloAck { version, .. } if version == WIRE_VERSION => {}
+                Message::HelloAck { version, .. } => {
+                    return Err(Error::wire(
+                        WireKind::Version,
+                        format!("server {addr} speaks v{version}, client v{WIRE_VERSION}"),
+                    ));
+                }
+                other => {
+                    return Err(Error::wire(
+                        WireKind::Malformed,
+                        format!("expected HelloAck from {addr}, got {other:?}"),
+                    ));
+                }
+            }
+            conns.push(Mutex::new(conn));
+        }
+        Ok(Self { conns, stripe_size })
+    }
+
+    fn nservers(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn home_of(&self, key: &str) -> usize {
+        (fnv1a(key) % self.nservers() as u64) as usize
+    }
+
+    fn server_for(&self, home: usize, stripe: u64) -> usize {
+        (home + stripe as usize) % self.nservers()
+    }
+
+    /// One lockstep request/response exchange with server `idx`.
+    /// Remote failures come back typed: not-found as
+    /// [`Error::NotFound`], everything else as [`WireKind::Remote`].
+    fn call(&self, idx: usize, req: Message) -> Result<Message> {
+        let mut conn = self.conns[idx].lock().unwrap();
+        conn.send(&req)?;
+        match conn.recv()? {
+            Message::ErrReply { code: 1, msg } => Err(Error::NotFound(msg)),
+            Message::ErrReply { code, msg } => Err(Error::wire(
+                WireKind::Remote,
+                format!("server {idx} error {code}: {msg}"),
+            )),
+            reply => Ok(reply),
+        }
+    }
+
+    fn fetch_meta(&self, key: &str) -> Result<RemoteMeta> {
+        let home = self.home_of(key);
+        let reply = self
+            .call(home, Message::Get { key: meta_key(key) })
+            .map_err(|e| match e {
+                Error::NotFound(_) => Error::NotFound(key.to_string()),
+                other => other,
+            })?;
+        match reply {
+            Message::OkBytes { data } => RemoteMeta::decode(key, &data),
+            other => Err(Error::wire(
+                WireKind::Malformed,
+                format!("expected OkBytes for meta of {key}, got {other:?}"),
+            )),
+        }
+    }
+
+    fn expect_unit(&self, reply: Message) -> Result<()> {
+        match reply {
+            Message::OkUnit => Ok(()),
+            other => Err(Error::wire(
+                WireKind::Malformed,
+                format!("expected OkUnit, got {other:?}"),
+            )),
+        }
+    }
+}
+
+impl ObjectStore for RemotePfs {
+    fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
+        let meta = self.fetch_meta(key)?;
+        Ok(Box::new(RemoteReader {
+            pfs: self,
+            key: key.to_string(),
+            home: self.home_of(key),
+            meta,
+        }))
+    }
+
+    fn create(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>> {
+        // Remember the old stripe count so a shrinking overwrite can
+        // reap surplus stripes after the new meta lands.
+        let old_nstripes = match self.fetch_meta(key) {
+            Ok(m) => Some(m.nstripes),
+            Err(Error::NotFound(_)) => None,
+            Err(e) => return Err(e),
+        };
+        Ok(Box::new(RemoteWriter {
+            pfs: self,
+            key: key.to_string(),
+            home: self.home_of(key),
+            buf: Vec::new(),
+            stripes_put: 0,
+            written: 0,
+            old_nstripes,
+            finished: false,
+        }))
+    }
+
+    fn stat(&self, key: &str) -> Result<ObjectMeta> {
+        let meta = self.fetch_meta(key)?;
+        Ok(ObjectMeta {
+            key: key.to_string(),
+            size: meta.size,
+        })
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let meta = match self.fetch_meta(key) {
+            Ok(m) => m,
+            Err(Error::NotFound(_)) => return Ok(()), // idempotent
+            Err(e) => return Err(e),
+        };
+        let home = self.home_of(key);
+        // Meta goes first: once it is gone the key reads NotFound, and
+        // a crash mid-delete leaves only unreachable stripes (which a
+        // re-delete or overwrite reaps).
+        let r = self.call(home, Message::Delete { key: meta_key(key) })?;
+        self.expect_unit(r)?;
+        for i in 0..meta.nstripes as u64 {
+            let r = self.call(
+                self.server_for(home, i),
+                Message::Delete {
+                    key: stripe_key(key, i),
+                },
+            )?;
+            self.expect_unit(r)?;
+        }
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        let mut keys = std::collections::BTreeSet::new();
+        for idx in 0..self.nservers() {
+            let reply = self.call(
+                idx,
+                Message::List {
+                    prefix: prefix.to_string(),
+                },
+            );
+            if let Ok(Message::OkKeys { keys: server_keys }) = reply {
+                for k in server_keys {
+                    if let Some(logical) = k.strip_suffix("#meta") {
+                        keys.insert(logical.to_string());
+                    }
+                }
+            }
+        }
+        keys.into_iter().collect()
+    }
+
+    fn kind(&self) -> &'static str {
+        "remote-pfs"
+    }
+}
+
+struct RemoteReader<'a> {
+    pfs: &'a RemotePfs,
+    key: String,
+    home: usize,
+    meta: RemoteMeta,
+}
+
+impl ObjectReader for RemoteReader<'_> {
+    fn len(&self) -> u64 {
+        self.meta.size
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        let take = clamped_len(offset, buf.len(), self.meta.size);
+        let ss = self.meta.stripe_size;
+        let mut done = 0usize;
+        while done < take {
+            let pos = offset + done as u64;
+            let stripe = pos / ss;
+            let in_off = pos % ss;
+            let stripe_len = (self.meta.size - stripe * ss).min(ss);
+            let want = ((take - done) as u64).min(stripe_len - in_off) as usize;
+            let reply = self.pfs.call(
+                self.pfs.server_for(self.home, stripe),
+                Message::GetRange {
+                    key: stripe_key(&self.key, stripe),
+                    offset: in_off,
+                    len: want as u32,
+                },
+            )?;
+            match reply {
+                Message::OkBytes { data } if data.len() == want => {
+                    buf[done..done + want].copy_from_slice(&data);
+                    done += want;
+                }
+                Message::OkBytes { data } => {
+                    return Err(Error::wire(
+                        WireKind::Remote,
+                        format!(
+                            "short stripe read on {}: wanted {want}, got {}",
+                            self.key,
+                            data.len()
+                        ),
+                    ));
+                }
+                other => {
+                    return Err(Error::wire(
+                        WireKind::Malformed,
+                        format!("expected OkBytes, got {other:?}"),
+                    ));
+                }
+            }
+        }
+        Ok(take)
+    }
+}
+
+struct RemoteWriter<'a> {
+    pfs: &'a RemotePfs,
+    key: String,
+    home: usize,
+    buf: Vec<u8>,
+    stripes_put: u64,
+    written: u64,
+    old_nstripes: Option<u32>,
+    finished: bool,
+}
+
+impl RemoteWriter<'_> {
+    fn put_stripe(&mut self, data: Vec<u8>) -> Result<()> {
+        let idx = self.pfs.server_for(self.home, self.stripes_put);
+        let reply = self.pfs.call(
+            idx,
+            Message::Put {
+                key: stripe_key(&self.key, self.stripes_put),
+                data,
+            },
+        )?;
+        self.pfs.expect_unit(reply)?;
+        self.stripes_put += 1;
+        Ok(())
+    }
+
+    fn delete_staged(&mut self) {
+        for i in 0..self.stripes_put {
+            let _ = self.pfs.call(
+                self.pfs.server_for(self.home, i),
+                Message::Delete {
+                    key: stripe_key(&self.key, i),
+                },
+            );
+        }
+    }
+}
+
+impl ObjectWriter for RemoteWriter<'_> {
+    fn append(&mut self, chunk: &[u8]) -> Result<()> {
+        self.written += chunk.len() as u64;
+        self.buf.extend_from_slice(chunk);
+        let ss = self.pfs.stripe_size as usize;
+        while self.buf.len() >= ss {
+            let rest = self.buf.split_off(ss);
+            let full = std::mem::replace(&mut self.buf, rest);
+            self.put_stripe(full)?;
+        }
+        Ok(())
+    }
+
+    fn written(&self) -> u64 {
+        self.written
+    }
+
+    fn commit(mut self: Box<Self>) -> Result<()> {
+        if !self.buf.is_empty() {
+            let tail = std::mem::take(&mut self.buf);
+            self.put_stripe(tail)?;
+        }
+        let meta = RemoteMeta {
+            size: self.written,
+            stripe_size: self.pfs.stripe_size,
+            nstripes: self.stripes_put as u32,
+            nservers: self.pfs.nservers() as u32,
+        };
+        // meta lands last: the publish point
+        let reply = self.pfs.call(
+            self.home,
+            Message::Put {
+                key: meta_key(&self.key),
+                data: meta.encode(),
+            },
+        )?;
+        self.pfs.expect_unit(reply)?;
+        // shrinkage: reap old stripes past the new count
+        if let Some(old_n) = self.old_nstripes {
+            for i in self.stripes_put..old_n as u64 {
+                let _ = self.pfs.call(
+                    self.pfs.server_for(self.home, i),
+                    Message::Delete {
+                        key: stripe_key(&self.key, i),
+                    },
+                );
+            }
+        }
+        self.finished = true;
+        Ok(())
+    }
+
+    fn abort(mut self: Box<Self>) -> Result<()> {
+        self.delete_staged();
+        self.finished = true;
+        Ok(())
+    }
+}
+
+impl Drop for RemoteWriter<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.delete_staged();
+        }
+    }
+}
+
+// ------------------------------------------------------------ server --
+
+fn err_reply(e: &Error) -> Message {
+    match e {
+        Error::NotFound(k) => Message::ErrReply {
+            code: 1,
+            msg: k.clone(),
+        },
+        other => Message::ErrReply {
+            code: 2,
+            msg: other.to_string(),
+        },
+    }
+}
+
+fn pfs_conn_loop(mut conn: Box<dyn Conn>, store: Arc<dyn ObjectStore>) {
+    // versioned handshake first
+    match conn.recv() {
+        Ok(Message::Hello { version, role, .. }) => {
+            if version != WIRE_VERSION || role != Role::PfsClient {
+                let _ = conn.send(&err_reply(&Error::wire(
+                    WireKind::Version,
+                    format!("pfs server is v{WIRE_VERSION}, peer sent v{version} as {role:?}"),
+                )));
+                return;
+            }
+            if conn
+                .send(&Message::HelloAck {
+                    version: WIRE_VERSION,
+                    epoch: 0,
+                    worker_id: 0,
+                })
+                .is_err()
+            {
+                return;
+            }
+        }
+        _ => return,
+    }
+    loop {
+        let req = match conn.recv() {
+            Ok(m) => m,
+            Err(_) => return, // closed (cleanly or not) — done
+        };
+        let reply = match req {
+            Message::Put { key, data } => match store.write(&key, &data) {
+                Ok(()) => Message::OkUnit,
+                Err(e) => err_reply(&e),
+            },
+            Message::Get { key } => match store.read(&key) {
+                Ok(data) => Message::OkBytes { data },
+                Err(e) => err_reply(&e),
+            },
+            Message::GetRange { key, offset, len } => {
+                match store.read_range(&key, offset, len as usize) {
+                    Ok(data) => Message::OkBytes { data },
+                    Err(e) => err_reply(&e),
+                }
+            }
+            Message::Stat { key } => match store.stat(&key) {
+                Ok(meta) => Message::OkMeta { size: meta.size },
+                Err(e) => err_reply(&e),
+            },
+            Message::Delete { key } => match store.delete(&key) {
+                Ok(()) => Message::OkUnit,
+                Err(e) => err_reply(&e),
+            },
+            Message::List { prefix } => Message::OkKeys {
+                keys: store.list(&prefix),
+            },
+            Message::Heartbeat { .. } => Message::HeartbeatAck,
+            other => err_reply(&Error::wire(
+                WireKind::Malformed,
+                format!("pfs server cannot handle {other:?}"),
+            )),
+        };
+        if conn.send(&reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Serve `store` as one PFS stripe server on `listener` until the
+/// listener is closed. Each connection gets its own thread; the call
+/// returns once the listener closes and every connection has drained.
+pub fn serve(listener: Arc<dyn Listener>, store: Arc<dyn ObjectStore>) -> Result<()> {
+    let mut handles = Vec::new();
+    loop {
+        match listener.accept() {
+            Ok(conn) => {
+                let store = Arc::clone(&store);
+                handles.push(std::thread::spawn(move || pfs_conn_loop(conn, store)));
+            }
+            Err(_) => break, // listener closed
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::LoopbackNet;
+    use crate::storage::memstore::MemStore;
+
+    struct TestCluster {
+        pfs: RemotePfs,
+        stores: Vec<Arc<dyn ObjectStore>>,
+        threads: Vec<std::thread::JoinHandle<()>>,
+        listeners: Vec<Arc<dyn Listener>>,
+    }
+
+    /// Spin up `n` loopback stripe servers and a connected client.
+    fn cluster(net: &LoopbackNet, n: usize, stripe_size: u64) -> TestCluster {
+        let mut addrs = Vec::new();
+        let mut threads = Vec::new();
+        let mut listeners = Vec::new();
+        let mut stores: Vec<Arc<dyn ObjectStore>> = Vec::new();
+        for i in 0..n {
+            let addr = format!("pfs{i}");
+            let listener: Arc<dyn Listener> = Arc::from(net.listen(&addr).unwrap());
+            let store: Arc<dyn ObjectStore> =
+                Arc::new(MemStore::new(u64::MAX, "lru").unwrap());
+            let l2 = Arc::clone(&listener);
+            let s2 = Arc::clone(&store);
+            threads.push(std::thread::spawn(move || {
+                serve(l2, s2).unwrap();
+            }));
+            addrs.push(addr);
+            listeners.push(listener);
+            stores.push(store);
+        }
+        let pfs = RemotePfs::connect(net, &addrs, stripe_size).unwrap();
+        TestCluster {
+            pfs,
+            stores,
+            threads,
+            listeners,
+        }
+    }
+
+    impl TestCluster {
+        /// Every raw key (meta + stripes) across all servers.
+        fn raw_keys(&self) -> Vec<String> {
+            let mut all = Vec::new();
+            for s in &self.stores {
+                all.extend(s.list(""));
+            }
+            all.sort();
+            all
+        }
+
+        fn shutdown(self) {
+            drop(self.pfs); // closes client conns → server threads exit
+            for l in &self.listeners {
+                l.close();
+            }
+            for t in self.threads {
+                t.join().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn round_trips_across_stripes_and_servers() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 3, 64);
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        c.pfs.write("dir/obj", &data).unwrap();
+        assert_eq!(c.pfs.read("dir/obj").unwrap(), data);
+        assert_eq!(c.pfs.size("dir/obj").unwrap(), 1000);
+        // ranged reads crossing stripe boundaries
+        assert_eq!(c.pfs.read_range("dir/obj", 60, 10).unwrap(), data[60..70]);
+        assert_eq!(c.pfs.read_range("dir/obj", 990, 100).unwrap(), data[990..]);
+        // 1000 bytes / 64-byte stripes = 16 stripes, spread over servers
+        let raw = c.raw_keys();
+        assert_eq!(raw.len(), 17); // 16 stripes + 1 meta
+        assert!(c.stores.iter().all(|s| !s.list("").is_empty()));
+        c.shutdown();
+    }
+
+    #[test]
+    fn list_sees_only_committed_logical_keys() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 32);
+        c.pfs.write("a/1", b"x").unwrap();
+        c.pfs.write("a/2", &vec![7u8; 100]).unwrap();
+        c.pfs.write("b/1", b"y").unwrap();
+        // an uncommitted writer stays invisible
+        let mut w = c.pfs.create("a/3").unwrap();
+        w.append(&vec![1u8; 80]).unwrap(); // > stripe, so stripes staged
+        assert_eq!(c.pfs.list("a/"), vec!["a/1".to_string(), "a/2".to_string()]);
+        assert!(!c.pfs.exists("a/3"));
+        w.commit().unwrap();
+        assert!(c.pfs.exists("a/3"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn delete_is_idempotent_and_full() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 16);
+        c.pfs.write("k", &vec![3u8; 100]).unwrap();
+        c.pfs.delete("k").unwrap();
+        assert!(!c.pfs.exists("k"));
+        assert!(c.raw_keys().is_empty(), "no meta or stripe debris");
+        c.pfs.delete("k").unwrap(); // second delete is a no-op
+        c.shutdown();
+    }
+
+    #[test]
+    fn shrinking_overwrite_leaves_no_surplus_stripes() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 16);
+        c.pfs.write("k", &vec![1u8; 100]).unwrap(); // 7 stripes
+        c.pfs.write("k", &vec![2u8; 20]).unwrap(); // 2 stripes
+        assert_eq!(c.pfs.read("k").unwrap(), vec![2u8; 20]);
+        // exactly the new stripes + meta survive — old stripes reaped
+        assert_eq!(c.raw_keys(), vec!["k#meta", "k#s0", "k#s1"]);
+        c.shutdown();
+    }
+
+    #[test]
+    fn abort_discards_staged_stripes() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 8);
+        let mut w = c.pfs.create("k").unwrap();
+        w.append(&vec![9u8; 50]).unwrap();
+        w.abort().unwrap();
+        assert!(!c.pfs.exists("k"));
+        assert!(c.raw_keys().is_empty());
+        c.shutdown();
+    }
+
+    #[test]
+    fn dropped_writer_discards_staged_stripes() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 8);
+        {
+            let mut w = c.pfs.create("k").unwrap();
+            w.append(&vec![9u8; 50]).unwrap();
+            // dropped uncommitted
+        }
+        assert!(c.raw_keys().is_empty());
+        c.shutdown();
+    }
+
+    #[test]
+    fn empty_object_round_trips() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 8);
+        c.pfs.write("empty", b"").unwrap();
+        assert!(c.pfs.exists("empty"));
+        assert_eq!(c.pfs.size("empty").unwrap(), 0);
+        assert_eq!(c.pfs.read("empty").unwrap(), Vec::<u8>::new());
+        c.shutdown();
+    }
+
+    #[test]
+    fn not_found_maps_to_logical_key() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 8);
+        match c.pfs.stat("ghost") {
+            Err(Error::NotFound(k)) => assert_eq!(k, "ghost"),
+            other => panic!("expected NotFound, got {other:?}"),
+        }
+        c.shutdown();
+    }
+}

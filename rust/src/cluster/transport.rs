@@ -1,0 +1,659 @@
+//! Message transports: real TCP and a deterministic in-process loopback.
+//!
+//! Everything above this layer — coordinator, workers, the remote PFS
+//! client — speaks [`Message`]s through the [`Transport`] / [`Listener`]
+//! / [`Conn`] traits and never touches a socket type. That indirection
+//! is what makes the cluster plane testable: [`TcpTransport`] carries
+//! frames over `std::net` for real multi-process runs, while
+//! [`LoopbackNet`] carries the *same encoded frames* through in-process
+//! queues with scriptable connect failures, delayed deliveries, and
+//! mid-stream closes — no real sockets, no timing, no flakes.
+//! Loopback `send` round-trips every message through
+//! [`wire::frame_bytes`] → [`wire::read_message`], so the full codec is
+//! exercised even when no socket exists.
+//!
+//! All connections are used in strict request/response lockstep (one
+//! side sends, then receives); nothing here multiplexes a connection
+//! across threads. Where a peer needs to unblock another thread's
+//! blocking `recv`, it uses [`Conn::shutdown_handle`].
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::cluster::wire::{self, Message};
+use crate::error::{Error, Result, WireKind};
+
+/// One bidirectional message connection.
+pub trait Conn: Send {
+    /// Send one message. [`WireKind::Closed`] once the connection is
+    /// down.
+    fn send(&mut self, msg: &Message) -> Result<()>;
+
+    /// Block for the next message. [`WireKind::Closed`] when the peer
+    /// closed (cleanly or not).
+    fn recv(&mut self) -> Result<Message>;
+
+    /// Close both directions; subsequent sends/recvs (ours and the
+    /// peer's) fail with [`WireKind::Closed`].
+    fn close(&mut self);
+
+    /// A handle another thread can call to force this connection closed
+    /// and unblock a blocking [`Conn::recv`].
+    fn shutdown_handle(&self) -> Arc<dyn Fn() + Send + Sync>;
+}
+
+/// Accepting side of a transport endpoint. `Sync` so an accept loop on
+/// one thread and a `close()` from another can share it behind an
+/// `Arc`.
+pub trait Listener: Send + Sync {
+    /// Block for the next inbound connection. [`WireKind::Closed`] once
+    /// the listener is closed.
+    fn accept(&self) -> Result<Box<dyn Conn>>;
+
+    /// The address peers should [`Transport::connect`] to (for TCP with
+    /// port 0, the resolved ephemeral address).
+    fn local_addr(&self) -> String;
+
+    /// Stop accepting; unblocks a blocked [`Listener::accept`].
+    fn close(&self);
+}
+
+/// A way to open and accept [`Conn`]s, keyed by string addresses.
+pub trait Transport: Send + Sync {
+    /// Bind a listener on `addr`.
+    fn listen(&self, addr: &str) -> Result<Box<dyn Listener>>;
+
+    /// Connect to a listener at `addr`.
+    fn connect(&self, addr: &str) -> Result<Box<dyn Conn>>;
+}
+
+// ---------------------------------------------------------------- TCP --
+
+/// [`Transport`] over real `std::net` TCP sockets.
+pub struct TcpTransport;
+
+struct TcpConn {
+    stream: TcpStream,
+}
+
+impl TcpConn {
+    fn new(stream: TcpStream) -> Self {
+        let _ = stream.set_nodelay(true);
+        Self { stream }
+    }
+}
+
+impl Conn for TcpConn {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        wire::write_message(&mut self.stream, msg)
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        match wire::read_message(&mut self.stream)? {
+            Some(m) => Ok(m),
+            None => Err(Error::wire(WireKind::Closed, "peer closed")),
+        }
+    }
+
+    fn close(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    fn shutdown_handle(&self) -> Arc<dyn Fn() + Send + Sync> {
+        match self.stream.try_clone() {
+            Ok(dup) => Arc::new(move || {
+                let _ = dup.shutdown(Shutdown::Both);
+            }),
+            // If the fd can't be duplicated the handle is a no-op; the
+            // owner's own close() still works.
+            Err(_) => Arc::new(|| {}),
+        }
+    }
+}
+
+struct TcpListenerWrap {
+    inner: TcpListener,
+    closed: Arc<AtomicBool>,
+}
+
+impl Listener for TcpListenerWrap {
+    fn accept(&self) -> Result<Box<dyn Conn>> {
+        loop {
+            if self.closed.load(Ordering::SeqCst) {
+                return Err(Error::wire(WireKind::Closed, "listener closed"));
+            }
+            match self.inner.accept() {
+                Ok((stream, _)) => {
+                    if self.closed.load(Ordering::SeqCst) {
+                        // the wake-up dummy connection from close()
+                        return Err(Error::wire(WireKind::Closed, "listener closed"));
+                    }
+                    return Ok(Box::new(TcpConn::new(stream)));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(Error::wire(WireKind::Closed, e.to_string())),
+            }
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        self.inner
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_default()
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        // std has no non-blocking close for a blocked accept(); a
+        // self-connection wakes it so it can observe the flag.
+        if let Ok(addr) = self.inner.local_addr() {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn listen(&self, addr: &str) -> Result<Box<dyn Listener>> {
+        let inner = TcpListener::bind(addr)
+            .map_err(|e| Error::wire(WireKind::Refused, format!("bind {addr}: {e}")))?;
+        Ok(Box::new(TcpListenerWrap {
+            inner,
+            closed: Arc::new(AtomicBool::new(false)),
+        }))
+    }
+
+    fn connect(&self, addr: &str) -> Result<Box<dyn Conn>> {
+        let sockaddr = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::wire(WireKind::Refused, format!("resolve {addr}: {e}")))?
+            .next()
+            .ok_or_else(|| Error::wire(WireKind::Refused, format!("no address for {addr}")))?;
+        let stream = TcpStream::connect(sockaddr)
+            .map_err(|e| Error::wire(WireKind::Refused, format!("connect {addr}: {e}")))?;
+        Ok(Box::new(TcpConn::new(stream)))
+    }
+}
+
+// ----------------------------------------------------------- loopback --
+
+/// Deterministic fault script for one loopback address (applied to the
+/// *connecting* side of each new connection to that address).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultScript {
+    /// Fail this many `connect()` calls with [`WireKind::Refused`]
+    /// before letting one through.
+    pub fail_connects: u32,
+    /// After this many successful sends, close the connection (the Nth
+    /// message is delivered, then both directions drop). 0 = never.
+    pub close_after_sends: u64,
+    /// Hold back the first N sends; they are delivered, in order, just
+    /// before send N+1 (or on close). Models delivery delay without
+    /// real time. 0 = no delay.
+    pub delay_sends: u64,
+}
+
+/// One direction of a loopback connection: a condvar-guarded message
+/// queue.
+struct Pipe {
+    state: Mutex<PipeState>,
+    cv: Condvar,
+}
+
+struct PipeState {
+    q: VecDeque<Message>,
+    closed: bool,
+}
+
+impl Pipe {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(PipeState {
+                q: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn push(&self, msg: Message) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(Error::wire(WireKind::Closed, "loopback pipe closed"));
+        }
+        st.q.push_back(msg);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn pop(&self) -> Result<Message> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(m) = st.q.pop_front() {
+                return Ok(m);
+            }
+            if st.closed {
+                return Err(Error::wire(WireKind::Closed, "loopback pipe closed"));
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// In-process [`Conn`]: each side holds its outbound (`tx`) and inbound
+/// (`rx`) [`Pipe`]. Dropping either side closes both pipes, so a
+/// "killed" peer deterministically unblocks anyone blocked in `recv`.
+struct LoopConn {
+    tx: Arc<Pipe>,
+    rx: Arc<Pipe>,
+    script: FaultScript,
+    sends: u64,
+    delayed: Vec<Message>,
+    script_closed: bool,
+}
+
+impl LoopConn {
+    fn pair(script: FaultScript) -> (LoopConn, LoopConn) {
+        let a = Pipe::new();
+        let b = Pipe::new();
+        let client = LoopConn {
+            tx: Arc::clone(&a),
+            rx: Arc::clone(&b),
+            script,
+            sends: 0,
+            delayed: Vec::new(),
+            script_closed: false,
+        };
+        let server = LoopConn {
+            tx: b,
+            rx: a,
+            script: FaultScript::default(),
+            sends: 0,
+            delayed: Vec::new(),
+            script_closed: false,
+        };
+        (client, server)
+    }
+
+    fn close_both(&self) {
+        self.tx.close();
+        self.rx.close();
+    }
+
+    fn flush_delayed(&mut self) -> Result<()> {
+        for m in std::mem::take(&mut self.delayed) {
+            self.tx.push(m)?;
+        }
+        Ok(())
+    }
+}
+
+impl Conn for LoopConn {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        if self.script_closed {
+            return Err(Error::wire(WireKind::Closed, "closed by fault script"));
+        }
+        // Round-trip through the real frame codec so loopback runs
+        // exercise exactly the bytes TCP would carry.
+        let bytes = wire::frame_bytes(msg);
+        let decoded = wire::read_message(&mut std::io::Cursor::new(bytes))?
+            .expect("frame_bytes always yields one frame");
+        debug_assert_eq!(&decoded, msg);
+
+        self.sends += 1;
+        if self.sends <= self.script.delay_sends {
+            self.delayed.push(decoded);
+        } else {
+            self.flush_delayed()?;
+            self.tx.push(decoded)?;
+        }
+        if self.script.close_after_sends != 0 && self.sends >= self.script.close_after_sends {
+            // deliver what was held back, then drop the link
+            let _ = self.flush_delayed();
+            self.close_both();
+            self.script_closed = true;
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        self.rx.pop()
+    }
+
+    fn close(&mut self) {
+        let _ = self.flush_delayed();
+        self.close_both();
+    }
+
+    fn shutdown_handle(&self) -> Arc<dyn Fn() + Send + Sync> {
+        let tx = Arc::clone(&self.tx);
+        let rx = Arc::clone(&self.rx);
+        Arc::new(move || {
+            tx.close();
+            rx.close();
+        })
+    }
+}
+
+impl Drop for LoopConn {
+    fn drop(&mut self) {
+        let _ = self.flush_delayed();
+        self.close_both();
+    }
+}
+
+/// Pending-connection queue behind one loopback listener.
+struct AcceptQueue {
+    state: Mutex<AcceptState>,
+    cv: Condvar,
+}
+
+struct AcceptState {
+    pending: VecDeque<LoopConn>,
+    closed: bool,
+}
+
+impl AcceptQueue {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(AcceptState {
+                pending: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+}
+
+struct LoopListener {
+    addr: String,
+    queue: Arc<AcceptQueue>,
+    net: Arc<Mutex<LoopNetState>>,
+}
+
+impl Listener for LoopListener {
+    fn accept(&self) -> Result<Box<dyn Conn>> {
+        let mut st = self.queue.state.lock().unwrap();
+        loop {
+            if let Some(conn) = st.pending.pop_front() {
+                return Ok(Box::new(conn));
+            }
+            if st.closed {
+                return Err(Error::wire(WireKind::Closed, "listener closed"));
+            }
+            st = self.queue.cv.wait(st).unwrap();
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        self.addr.clone()
+    }
+
+    fn close(&self) {
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            st.closed = true;
+            self.queue.cv.notify_all();
+        }
+        self.net.lock().unwrap().listeners.remove(&self.addr);
+    }
+}
+
+#[derive(Default)]
+struct LoopNetState {
+    listeners: HashMap<String, Arc<AcceptQueue>>,
+    scripts: HashMap<String, FaultScript>,
+}
+
+/// A private in-process network: string addresses, condvar-queue
+/// connections, [`FaultScript`]-driven failures. Each test builds its
+/// own [`LoopbackNet`], so nothing leaks between tests and nothing
+/// depends on wall-clock time.
+#[derive(Clone, Default)]
+pub struct LoopbackNet {
+    state: Arc<Mutex<LoopNetState>>,
+}
+
+impl LoopbackNet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install a fault script for future connections to `addr`
+    /// (replacing any previous script for that address).
+    pub fn script(&self, addr: &str, script: FaultScript) {
+        self.state
+            .lock()
+            .unwrap()
+            .scripts
+            .insert(addr.to_string(), script);
+    }
+}
+
+impl Transport for LoopbackNet {
+    fn listen(&self, addr: &str) -> Result<Box<dyn Listener>> {
+        let mut st = self.state.lock().unwrap();
+        if st.listeners.contains_key(addr) {
+            return Err(Error::wire(
+                WireKind::Refused,
+                format!("loopback address {addr} already bound"),
+            ));
+        }
+        let queue = AcceptQueue::new();
+        st.listeners.insert(addr.to_string(), Arc::clone(&queue));
+        Ok(Box::new(LoopListener {
+            addr: addr.to_string(),
+            queue,
+            net: Arc::clone(&self.state),
+        }))
+    }
+
+    fn connect(&self, addr: &str) -> Result<Box<dyn Conn>> {
+        let (client, server, queue) = {
+            let mut st = self.state.lock().unwrap();
+            let mut script = st.scripts.get(addr).copied().unwrap_or_default();
+            if script.fail_connects > 0 {
+                script.fail_connects -= 1;
+                st.scripts.insert(addr.to_string(), script);
+                return Err(Error::wire(
+                    WireKind::Refused,
+                    format!("scripted connect failure to {addr}"),
+                ));
+            }
+            let queue = st.listeners.get(addr).cloned().ok_or_else(|| {
+                Error::wire(WireKind::Refused, format!("nothing listening on {addr}"))
+            })?;
+            let (client, server) = LoopConn::pair(script);
+            (client, server, queue)
+        };
+        let mut qst = queue.state.lock().unwrap();
+        if qst.closed {
+            return Err(Error::wire(
+                WireKind::Refused,
+                format!("listener on {addr} closed"),
+            ));
+        }
+        qst.pending.push_back(server);
+        queue.cv.notify_all();
+        drop(qst);
+        Ok(Box::new(client))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn beat(id: u64) -> Message {
+        Message::Heartbeat { worker_id: id }
+    }
+
+    #[test]
+    fn loopback_round_trip() {
+        let net = LoopbackNet::new();
+        let lst = net.listen("a").unwrap();
+        let mut client = net.connect("a").unwrap();
+        let mut server = lst.accept().unwrap();
+        client.send(&beat(1)).unwrap();
+        assert_eq!(server.recv().unwrap(), beat(1));
+        server.send(&Message::HeartbeatAck).unwrap();
+        assert_eq!(client.recv().unwrap(), Message::HeartbeatAck);
+    }
+
+    #[test]
+    fn loopback_connect_without_listener_is_refused() {
+        let net = LoopbackNet::new();
+        let err = net.connect("ghost").unwrap_err();
+        assert!(matches!(
+            err,
+            Error::Wire {
+                kind: WireKind::Refused,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn loopback_double_bind_is_refused() {
+        let net = LoopbackNet::new();
+        let _l = net.listen("a").unwrap();
+        assert!(net.listen("a").is_err());
+    }
+
+    #[test]
+    fn dropping_a_conn_unblocks_the_peer_recv() {
+        let net = LoopbackNet::new();
+        let lst = net.listen("a").unwrap();
+        let client = net.connect("a").unwrap();
+        let mut server = lst.accept().unwrap();
+        drop(client);
+        let err = server.recv().unwrap_err();
+        assert!(matches!(
+            err,
+            Error::Wire {
+                kind: WireKind::Closed,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn script_fail_connects_then_succeeds() {
+        let net = LoopbackNet::new();
+        let _l = net.listen("a").unwrap();
+        net.script(
+            "a",
+            FaultScript {
+                fail_connects: 2,
+                ..Default::default()
+            },
+        );
+        assert!(net.connect("a").is_err());
+        assert!(net.connect("a").is_err());
+        assert!(net.connect("a").is_ok());
+    }
+
+    #[test]
+    fn script_close_after_sends_drops_the_link() {
+        let net = LoopbackNet::new();
+        let lst = net.listen("a").unwrap();
+        net.script(
+            "a",
+            FaultScript {
+                close_after_sends: 2,
+                ..Default::default()
+            },
+        );
+        let mut client = net.connect("a").unwrap();
+        let mut server = lst.accept().unwrap();
+        client.send(&beat(1)).unwrap();
+        client.send(&beat(2)).unwrap(); // delivered, then the link drops
+        assert_eq!(server.recv().unwrap(), beat(1));
+        assert_eq!(server.recv().unwrap(), beat(2));
+        assert!(matches!(
+            server.recv().unwrap_err(),
+            Error::Wire {
+                kind: WireKind::Closed,
+                ..
+            }
+        ));
+        assert!(client.send(&beat(3)).is_err());
+    }
+
+    #[test]
+    fn script_delay_sends_reorders_nothing() {
+        let net = LoopbackNet::new();
+        let lst = net.listen("a").unwrap();
+        net.script(
+            "a",
+            FaultScript {
+                delay_sends: 2,
+                ..Default::default()
+            },
+        );
+        let mut client = net.connect("a").unwrap();
+        let mut server = lst.accept().unwrap();
+        client.send(&beat(1)).unwrap(); // held
+        client.send(&beat(2)).unwrap(); // held
+        client.send(&beat(3)).unwrap(); // flushes 1, 2, then 3
+        for id in 1..=3 {
+            assert_eq!(server.recv().unwrap(), beat(id));
+        }
+    }
+
+    #[test]
+    fn listener_close_unblocks_accept() {
+        let net = LoopbackNet::new();
+        let lst = Arc::new(net.listen("a").unwrap());
+        let l2 = Arc::clone(&lst);
+        // this thread blocks in accept() until close() wakes it
+        let th = std::thread::spawn(move || l2.accept().map(|_| ()));
+        lst.close();
+        assert!(th.join().unwrap().is_err());
+        // address is free again after close
+        assert!(net.listen("a").is_ok());
+    }
+
+    #[test]
+    fn tcp_round_trip_on_ephemeral_port() {
+        let t = TcpTransport;
+        let lst = t.listen("127.0.0.1:0").unwrap();
+        let addr = lst.local_addr();
+        let th = std::thread::spawn(move || {
+            let mut server = lst.accept().unwrap();
+            let m = server.recv().unwrap();
+            server.send(&m).unwrap();
+            // peer closes; next recv reports Closed
+            assert!(matches!(
+                server.recv().unwrap_err(),
+                Error::Wire {
+                    kind: WireKind::Closed,
+                    ..
+                }
+            ));
+        });
+        let mut client = t.connect(&addr).unwrap();
+        client.send(&beat(9)).unwrap();
+        assert_eq!(client.recv().unwrap(), beat(9));
+        client.close();
+        th.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_listener_close_unblocks_accept() {
+        let t = TcpTransport;
+        let lst = Arc::new(t.listen("127.0.0.1:0").unwrap());
+        let l2 = Arc::clone(&lst);
+        let th = std::thread::spawn(move || l2.accept().map(|_| ()));
+        lst.close();
+        assert!(th.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,1038 @@
+//! Length-prefixed frame protocol for the cluster plane.
+//!
+//! Every message between cluster processes travels as one frame:
+//!
+//! ```text
+//! +----------------+-----+------------------+----------------------+
+//! | body_len (u32) | tag | body (body_len)  | crc32(tag ‖ body)    |
+//! | little-endian  | u8  | message payload  | u32 little-endian    |
+//! +----------------+-----+------------------+----------------------+
+//! ```
+//!
+//! The CRC trailer reuses the storage tier's [`Crc32`]
+//! (IEEE, the same polynomial the PFS block path verifies with) and
+//! covers the tag byte *and* the body, so a bit-flip anywhere past the
+//! length prefix surfaces as [`WireKind::Crc`]. Corruption of the length
+//! prefix itself surfaces as [`WireKind::Oversized`] (length beyond
+//! [`MAX_FRAME`]), [`WireKind::Truncated`] (stream ends early), or —
+//! if the mangled length still lands on readable bytes — a CRC failure.
+//! A clean EOF *between* frames is not an error: [`read_frame`] returns
+//! `Ok(None)` so callers can distinguish an orderly close from a cut.
+//!
+//! Connections open with a versioned [`Message::Hello`]; a peer speaking
+//! a different [`WIRE_VERSION`] is rejected with [`WireKind::Version`]
+//! before any other traffic.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result, WireKind};
+use crate::storage::block::Crc32;
+
+/// Protocol version carried in every [`Message::Hello`]. Bump on any
+/// incompatible frame- or message-layout change.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Maximum frame body size (32 MiB). A length prefix beyond this is
+/// rejected as [`WireKind::Oversized`] *before* allocating, so a
+/// corrupt or hostile length field cannot balloon memory.
+pub const MAX_FRAME: u32 = 32 << 20;
+
+/// Which side of the protocol a connecting peer is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// A task-executing worker connecting to the coordinator.
+    Worker,
+    /// An [`ObjectStore`](crate::storage::ObjectStore) client connecting
+    /// to a PFS stripe server.
+    PfsClient,
+}
+
+impl Role {
+    fn to_u8(self) -> u8 {
+        match self {
+            Role::Worker => 1,
+            Role::PfsClient => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            1 => Ok(Role::Worker),
+            2 => Ok(Role::PfsClient),
+            _ => Err(Error::wire(
+                WireKind::Malformed,
+                format!("unknown role byte {v:#04x}"),
+            )),
+        }
+    }
+}
+
+/// What a dispatched task does. Travels inside [`TaskSpec`] over the
+/// wire; workers execute it against the shared store.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Read one input split, sort it, partition it, and write one sorted
+    /// spill object per non-empty partition.
+    Map {
+        /// Input object holding the split.
+        object: String,
+        /// Byte offset of the split within the object.
+        offset: u64,
+        /// Split length in bytes.
+        len: u64,
+        /// Map-task index (names the spill objects).
+        task_index: u32,
+        /// Number of reduce partitions.
+        partitions: u32,
+        /// 256-entry first-key-byte → partition table (the sampled
+        /// [`Partitioner`](crate::terasort::Partitioner) serialized).
+        bucket_map: Vec<u32>,
+        /// Key prefix the task writes spills under
+        /// (`.shuffle/<job>/`).
+        shuffle_prefix: String,
+    },
+    /// Merge the sorted spills of one partition into one output object.
+    Reduce {
+        /// Partition index this reducer owns.
+        partition: u32,
+        /// Sorted spill objects to k-way merge.
+        spill_keys: Vec<String>,
+        /// Output object key (`part-r-NNNNN`).
+        out_key: String,
+    },
+}
+
+/// One unit of dispatched work: identity, attempt counter, placement
+/// hint, and the [`TaskKind`] payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskSpec {
+    /// Coordinator-assigned id, unique within the job.
+    pub task_id: u64,
+    /// Epoch-namespaced job id the task belongs to.
+    pub job_id: String,
+    /// 0-based execution attempt (bumped on re-dispatch after worker
+    /// loss, so retried spill keys never collide with a dead attempt's).
+    pub attempt: u32,
+    /// Scheduler placement hint: the node index whose worker should run
+    /// this task for a locality hit, if any.
+    pub preferred_node: Option<u32>,
+    /// The work itself.
+    pub kind: TaskKind,
+}
+
+/// Every message the cluster protocol defines. Tag bytes are grouped:
+/// `0x0x` handshake, `0x1x` PFS requests, `0x2x` PFS replies, `0x3x`
+/// coordinator/worker control.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Message {
+    /// First frame on every connection: protocol version, peer role,
+    /// and the cluster epoch the peer believes it is joining (0 from
+    /// peers that take the epoch from the coordinator's ack).
+    Hello {
+        version: u32,
+        role: Role,
+        epoch: u64,
+    },
+    /// Handshake reply: server's version, the authoritative cluster
+    /// epoch, and (for workers) the assigned worker id.
+    HelloAck {
+        version: u32,
+        epoch: u64,
+        worker_id: u64,
+    },
+
+    /// Store a whole object under `key` (PFS request).
+    Put { key: String, data: Vec<u8> },
+    /// Read `len` bytes of `key` starting at `offset`, clamped at EOF.
+    GetRange { key: String, offset: u64, len: u32 },
+    /// Object metadata for `key`.
+    Stat { key: String },
+    /// Delete `key` (idempotent).
+    Delete { key: String },
+    /// Sorted keys under `prefix`.
+    List { prefix: String },
+    /// Read the whole object under `key`.
+    Get { key: String },
+
+    /// PFS reply: success, no payload.
+    OkUnit,
+    /// PFS reply: byte payload (Get / GetRange).
+    OkBytes { data: Vec<u8> },
+    /// PFS reply: object size (Stat).
+    OkMeta { size: u64 },
+    /// PFS reply: key list (List).
+    OkKeys { keys: Vec<String> },
+    /// PFS reply: the remote operation failed. `code` 1 means
+    /// not-found (mapped back to [`Error::NotFound`] client-side);
+    /// anything else becomes [`WireKind::Remote`].
+    ErrReply { code: u8, msg: String },
+
+    /// Worker liveness beat.
+    Heartbeat { worker_id: u64 },
+    /// Coordinator's beat acknowledgement.
+    HeartbeatAck,
+    /// Worker asks for its next task (blocks until the coordinator has
+    /// one, the job finishes, or the job fails).
+    ReqTask { worker_id: u64 },
+    /// Coordinator dispatches a task.
+    TaskAssign(TaskSpec),
+    /// Coordinator has no more work: the job finished (`failed=false`)
+    /// or failed (`failed=true`, with the diagnosis in `msg`).
+    NoTask { failed: bool, msg: String },
+    /// Worker finished a task; carries the spill objects it produced
+    /// (partition → key) and its I/O accounting for the per-worker
+    /// timelines.
+    TaskDone {
+        worker_id: u64,
+        task_id: u64,
+        spills: Vec<(u32, String)>,
+        bytes_read: u64,
+        bytes_written: u64,
+        micros: u64,
+    },
+    /// Worker failed a task but is still alive.
+    TaskFail {
+        worker_id: u64,
+        task_id: u64,
+        error: String,
+    },
+}
+
+// Tag bytes (must stay stable across releases of the same WIRE_VERSION).
+const TAG_HELLO: u8 = 0x01;
+const TAG_HELLO_ACK: u8 = 0x02;
+const TAG_PUT: u8 = 0x10;
+const TAG_GET_RANGE: u8 = 0x11;
+const TAG_STAT: u8 = 0x12;
+const TAG_DELETE: u8 = 0x13;
+const TAG_LIST: u8 = 0x14;
+const TAG_GET: u8 = 0x15;
+const TAG_OK_UNIT: u8 = 0x20;
+const TAG_OK_BYTES: u8 = 0x21;
+const TAG_OK_META: u8 = 0x22;
+const TAG_OK_KEYS: u8 = 0x23;
+const TAG_ERR_REPLY: u8 = 0x2F;
+const TAG_HEARTBEAT: u8 = 0x30;
+const TAG_HEARTBEAT_ACK: u8 = 0x31;
+const TAG_REQ_TASK: u8 = 0x32;
+const TAG_TASK_ASSIGN: u8 = 0x33;
+const TAG_NO_TASK: u8 = 0x34;
+const TAG_TASK_DONE: u8 = 0x35;
+const TAG_TASK_FAIL: u8 = 0x36;
+
+const KIND_MAP: u8 = 1;
+const KIND_REDUCE: u8 = 2;
+
+/// Message-body encoder: little-endian scalars, length-prefixed strings
+/// and lists.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn boolean(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    fn str_list(&mut self, v: &[String]) {
+        self.u32(v.len() as u32);
+        for s in v {
+            self.str(s);
+        }
+    }
+
+    fn u32_list(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    fn opt_u32(&mut self, v: Option<u32>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u32(x);
+            }
+            None => self.u8(0),
+        }
+    }
+}
+
+/// Message-body decoder; every short read or ill-formed field is a
+/// typed [`WireKind::Malformed`], never a panic.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn malformed(what: &str) -> Error {
+        Error::wire(WireKind::Malformed, format!("short read decoding {what}"))
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(Self::malformed(what));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn boolean(&mut self, what: &str) -> Result<bool> {
+        match self.u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(Error::wire(
+                WireKind::Malformed,
+                format!("bad bool byte {v:#04x} decoding {what}"),
+            )),
+        }
+    }
+
+    fn bytes(&mut self, what: &str) -> Result<Vec<u8>> {
+        let n = self.u32(what)? as usize;
+        Ok(self.take(n, what)?.to_vec())
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let raw = self.bytes(what)?;
+        String::from_utf8(raw)
+            .map_err(|_| Error::wire(WireKind::Malformed, format!("bad utf-8 decoding {what}")))
+    }
+
+    fn str_list(&mut self, what: &str) -> Result<Vec<String>> {
+        let n = self.u32(what)? as usize;
+        // Each entry costs ≥4 bytes; reject absurd counts before
+        // reserving.
+        if n > self.buf.len() - self.pos {
+            return Err(Self::malformed(what));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.str(what)?);
+        }
+        Ok(out)
+    }
+
+    fn u32_list(&mut self, what: &str) -> Result<Vec<u32>> {
+        let n = self.u32(what)? as usize;
+        if n > self.buf.len() - self.pos {
+            return Err(Self::malformed(what));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32(what)?);
+        }
+        Ok(out)
+    }
+
+    fn opt_u32(&mut self, what: &str) -> Result<Option<u32>> {
+        if self.boolean(what)? {
+            Ok(Some(self.u32(what)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn finish(self, what: &str) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::wire(
+                WireKind::Malformed,
+                format!(
+                    "{} trailing bytes after {what}",
+                    self.buf.len() - self.pos
+                ),
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn enc_spec(e: &mut Enc, spec: &TaskSpec) {
+    e.u64(spec.task_id);
+    e.str(&spec.job_id);
+    e.u32(spec.attempt);
+    e.opt_u32(spec.preferred_node);
+    match &spec.kind {
+        TaskKind::Map {
+            object,
+            offset,
+            len,
+            task_index,
+            partitions,
+            bucket_map,
+            shuffle_prefix,
+        } => {
+            e.u8(KIND_MAP);
+            e.str(object);
+            e.u64(*offset);
+            e.u64(*len);
+            e.u32(*task_index);
+            e.u32(*partitions);
+            e.u32_list(bucket_map);
+            e.str(shuffle_prefix);
+        }
+        TaskKind::Reduce {
+            partition,
+            spill_keys,
+            out_key,
+        } => {
+            e.u8(KIND_REDUCE);
+            e.u32(*partition);
+            e.str_list(spill_keys);
+            e.str(out_key);
+        }
+    }
+}
+
+fn dec_spec(d: &mut Dec<'_>) -> Result<TaskSpec> {
+    let task_id = d.u64("task.id")?;
+    let job_id = d.str("task.job_id")?;
+    let attempt = d.u32("task.attempt")?;
+    let preferred_node = d.opt_u32("task.preferred_node")?;
+    let kind = match d.u8("task.kind")? {
+        KIND_MAP => TaskKind::Map {
+            object: d.str("map.object")?,
+            offset: d.u64("map.offset")?,
+            len: d.u64("map.len")?,
+            task_index: d.u32("map.task_index")?,
+            partitions: d.u32("map.partitions")?,
+            bucket_map: d.u32_list("map.bucket_map")?,
+            shuffle_prefix: d.str("map.shuffle_prefix")?,
+        },
+        KIND_REDUCE => TaskKind::Reduce {
+            partition: d.u32("reduce.partition")?,
+            spill_keys: d.str_list("reduce.spill_keys")?,
+            out_key: d.str("reduce.out_key")?,
+        },
+        v => {
+            return Err(Error::wire(
+                WireKind::Malformed,
+                format!("unknown task kind byte {v:#04x}"),
+            ))
+        }
+    };
+    Ok(TaskSpec {
+        task_id,
+        job_id,
+        attempt,
+        preferred_node,
+        kind,
+    })
+}
+
+impl Message {
+    /// Serialize to `(tag, body)` — the two CRC-covered frame fields.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut e = Enc::new();
+        let tag = match self {
+            Message::Hello {
+                version,
+                role,
+                epoch,
+            } => {
+                e.u32(*version);
+                e.u8(role.to_u8());
+                e.u64(*epoch);
+                TAG_HELLO
+            }
+            Message::HelloAck {
+                version,
+                epoch,
+                worker_id,
+            } => {
+                e.u32(*version);
+                e.u64(*epoch);
+                e.u64(*worker_id);
+                TAG_HELLO_ACK
+            }
+            Message::Put { key, data } => {
+                e.str(key);
+                e.bytes(data);
+                TAG_PUT
+            }
+            Message::GetRange { key, offset, len } => {
+                e.str(key);
+                e.u64(*offset);
+                e.u32(*len);
+                TAG_GET_RANGE
+            }
+            Message::Stat { key } => {
+                e.str(key);
+                TAG_STAT
+            }
+            Message::Delete { key } => {
+                e.str(key);
+                TAG_DELETE
+            }
+            Message::List { prefix } => {
+                e.str(prefix);
+                TAG_LIST
+            }
+            Message::Get { key } => {
+                e.str(key);
+                TAG_GET
+            }
+            Message::OkUnit => TAG_OK_UNIT,
+            Message::OkBytes { data } => {
+                e.bytes(data);
+                TAG_OK_BYTES
+            }
+            Message::OkMeta { size } => {
+                e.u64(*size);
+                TAG_OK_META
+            }
+            Message::OkKeys { keys } => {
+                e.str_list(keys);
+                TAG_OK_KEYS
+            }
+            Message::ErrReply { code, msg } => {
+                e.u8(*code);
+                e.str(msg);
+                TAG_ERR_REPLY
+            }
+            Message::Heartbeat { worker_id } => {
+                e.u64(*worker_id);
+                TAG_HEARTBEAT
+            }
+            Message::HeartbeatAck => TAG_HEARTBEAT_ACK,
+            Message::ReqTask { worker_id } => {
+                e.u64(*worker_id);
+                TAG_REQ_TASK
+            }
+            Message::TaskAssign(spec) => {
+                enc_spec(&mut e, spec);
+                TAG_TASK_ASSIGN
+            }
+            Message::NoTask { failed, msg } => {
+                e.boolean(*failed);
+                e.str(msg);
+                TAG_NO_TASK
+            }
+            Message::TaskDone {
+                worker_id,
+                task_id,
+                spills,
+                bytes_read,
+                bytes_written,
+                micros,
+            } => {
+                e.u64(*worker_id);
+                e.u64(*task_id);
+                e.u32(spills.len() as u32);
+                for (p, key) in spills {
+                    e.u32(*p);
+                    e.str(key);
+                }
+                e.u64(*bytes_read);
+                e.u64(*bytes_written);
+                e.u64(*micros);
+                TAG_TASK_DONE
+            }
+            Message::TaskFail {
+                worker_id,
+                task_id,
+                error,
+            } => {
+                e.u64(*worker_id);
+                e.u64(*task_id);
+                e.str(error);
+                TAG_TASK_FAIL
+            }
+        };
+        (tag, e.buf)
+    }
+
+    /// Parse a CRC-verified `(tag, body)` pair back into a message.
+    /// Unknown tags are [`WireKind::UnknownTag`]; any structural flaw in
+    /// the body is [`WireKind::Malformed`].
+    pub fn decode(tag: u8, body: &[u8]) -> Result<Message> {
+        let mut d = Dec::new(body);
+        let msg = match tag {
+            TAG_HELLO => Message::Hello {
+                version: d.u32("hello.version")?,
+                role: Role::from_u8(d.u8("hello.role")?)?,
+                epoch: d.u64("hello.epoch")?,
+            },
+            TAG_HELLO_ACK => Message::HelloAck {
+                version: d.u32("ack.version")?,
+                epoch: d.u64("ack.epoch")?,
+                worker_id: d.u64("ack.worker_id")?,
+            },
+            TAG_PUT => Message::Put {
+                key: d.str("put.key")?,
+                data: d.bytes("put.data")?,
+            },
+            TAG_GET_RANGE => Message::GetRange {
+                key: d.str("get_range.key")?,
+                offset: d.u64("get_range.offset")?,
+                len: d.u32("get_range.len")?,
+            },
+            TAG_STAT => Message::Stat {
+                key: d.str("stat.key")?,
+            },
+            TAG_DELETE => Message::Delete {
+                key: d.str("delete.key")?,
+            },
+            TAG_LIST => Message::List {
+                prefix: d.str("list.prefix")?,
+            },
+            TAG_GET => Message::Get {
+                key: d.str("get.key")?,
+            },
+            TAG_OK_UNIT => Message::OkUnit,
+            TAG_OK_BYTES => Message::OkBytes {
+                data: d.bytes("ok.data")?,
+            },
+            TAG_OK_META => Message::OkMeta {
+                size: d.u64("ok.size")?,
+            },
+            TAG_OK_KEYS => Message::OkKeys {
+                keys: d.str_list("ok.keys")?,
+            },
+            TAG_ERR_REPLY => Message::ErrReply {
+                code: d.u8("err.code")?,
+                msg: d.str("err.msg")?,
+            },
+            TAG_HEARTBEAT => Message::Heartbeat {
+                worker_id: d.u64("beat.worker_id")?,
+            },
+            TAG_HEARTBEAT_ACK => Message::HeartbeatAck,
+            TAG_REQ_TASK => Message::ReqTask {
+                worker_id: d.u64("req.worker_id")?,
+            },
+            TAG_TASK_ASSIGN => Message::TaskAssign(dec_spec(&mut d)?),
+            TAG_NO_TASK => Message::NoTask {
+                failed: d.boolean("no_task.failed")?,
+                msg: d.str("no_task.msg")?,
+            },
+            TAG_TASK_DONE => {
+                let worker_id = d.u64("done.worker_id")?;
+                let task_id = d.u64("done.task_id")?;
+                let n = d.u32("done.spills")? as usize;
+                if n > body.len() {
+                    return Err(Dec::malformed("done.spills"));
+                }
+                let mut spills = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let p = d.u32("done.spill.partition")?;
+                    let key = d.str("done.spill.key")?;
+                    spills.push((p, key));
+                }
+                Message::TaskDone {
+                    worker_id,
+                    task_id,
+                    spills,
+                    bytes_read: d.u64("done.bytes_read")?,
+                    bytes_written: d.u64("done.bytes_written")?,
+                    micros: d.u64("done.micros")?,
+                }
+            }
+            TAG_TASK_FAIL => Message::TaskFail {
+                worker_id: d.u64("fail.worker_id")?,
+                task_id: d.u64("fail.task_id")?,
+                error: d.str("fail.error")?,
+            },
+            other => {
+                return Err(Error::wire(
+                    WireKind::UnknownTag,
+                    format!("tag {other:#04x}"),
+                ))
+            }
+        };
+        d.finish("message body")?;
+        Ok(msg)
+    }
+}
+
+fn crc_of(tag: u8, body: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(&[tag]);
+    c.update(body);
+    c.finish()
+}
+
+fn io_wire(kind: WireKind, e: std::io::Error) -> Error {
+    Error::wire(kind, e.to_string())
+}
+
+/// Write one raw frame (`tag` + `body` + CRC trailer) to `w`.
+pub fn write_frame(w: &mut dyn Write, tag: u8, body: &[u8]) -> Result<()> {
+    if body.len() as u64 > MAX_FRAME as u64 {
+        return Err(Error::wire(
+            WireKind::Oversized,
+            format!("refusing to send {} byte body (max {MAX_FRAME})", body.len()),
+        ));
+    }
+    let mut header = [0u8; 5];
+    header[..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    header[4] = tag;
+    w.write_all(&header)
+        .and_then(|_| w.write_all(body))
+        .and_then(|_| w.write_all(&crc_of(tag, body).to_le_bytes()))
+        .and_then(|_| w.flush())
+        .map_err(|e| io_wire(WireKind::Closed, e))
+}
+
+/// Read exactly `buf.len()` bytes; `Ok(false)` on clean EOF before the
+/// first byte, [`WireKind::Truncated`] on EOF mid-buffer.
+fn read_exact_or_eof(r: &mut dyn Read, buf: &mut [u8], what: &str) -> Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(false);
+                }
+                return Err(Error::wire(
+                    WireKind::Truncated,
+                    format!("eof after {got} bytes of {what}"),
+                ));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(io_wire(WireKind::Truncated, e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one raw frame. `Ok(None)` means the stream closed cleanly at a
+/// frame boundary; every other shortfall is a typed [`Error::Wire`].
+pub fn read_frame(r: &mut dyn Read) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut header = [0u8; 5];
+    if !read_exact_or_eof(r, &mut header, "frame header")? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+    if len > MAX_FRAME {
+        return Err(Error::wire(
+            WireKind::Oversized,
+            format!("length prefix {len} exceeds max {MAX_FRAME}"),
+        ));
+    }
+    let tag = header[4];
+    let mut body = vec![0u8; len as usize];
+    if !body.is_empty() && !read_exact_or_eof(r, &mut body, "frame body")? {
+        return Err(Error::wire(WireKind::Truncated, "eof before frame body"));
+    }
+    let mut trailer = [0u8; 4];
+    if !read_exact_or_eof(r, &mut trailer, "frame crc")? {
+        return Err(Error::wire(WireKind::Truncated, "eof before frame crc"));
+    }
+    let stored = u32::from_le_bytes(trailer);
+    let computed = crc_of(tag, &body);
+    if stored != computed {
+        return Err(Error::wire(
+            WireKind::Crc,
+            format!("stored {stored:#010x}, computed {computed:#010x}"),
+        ));
+    }
+    Ok(Some((tag, body)))
+}
+
+/// Encode and frame one [`Message`] onto `w`.
+pub fn write_message(w: &mut dyn Write, msg: &Message) -> Result<()> {
+    let (tag, body) = msg.encode();
+    write_frame(w, tag, &body)
+}
+
+/// Read and decode one [`Message`]; `Ok(None)` on clean EOF between
+/// frames.
+pub fn read_message(r: &mut dyn Read) -> Result<Option<Message>> {
+    match read_frame(r)? {
+        None => Ok(None),
+        Some((tag, body)) => Message::decode(tag, &body).map(Some),
+    }
+}
+
+/// Serialize a message to its full on-wire frame bytes (tests and the
+/// loopback transport's byte-exactness checks).
+pub fn frame_bytes(msg: &Message) -> Vec<u8> {
+    let (tag, body) = msg.encode();
+    let mut out = Vec::with_capacity(9 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.push(tag);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&crc_of(tag, &body).to_le_bytes());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<Message> {
+        vec![
+            Message::Hello {
+                version: WIRE_VERSION,
+                role: Role::Worker,
+                epoch: 7,
+            },
+            Message::HelloAck {
+                version: WIRE_VERSION,
+                epoch: 7,
+                worker_id: 3,
+            },
+            Message::Put {
+                key: "a/b".into(),
+                data: vec![1, 2, 3],
+            },
+            Message::GetRange {
+                key: "k".into(),
+                offset: 100,
+                len: 64,
+            },
+            Message::Stat { key: "k".into() },
+            Message::Delete { key: "k".into() },
+            Message::List { prefix: "p/".into() },
+            Message::Get { key: "k".into() },
+            Message::OkUnit,
+            Message::OkBytes { data: vec![9; 10] },
+            Message::OkMeta { size: 42 },
+            Message::OkKeys {
+                keys: vec!["a".into(), "b".into()],
+            },
+            Message::ErrReply {
+                code: 1,
+                msg: "missing".into(),
+            },
+            Message::Heartbeat { worker_id: 2 },
+            Message::HeartbeatAck,
+            Message::ReqTask { worker_id: 2 },
+            Message::TaskAssign(TaskSpec {
+                task_id: 11,
+                job_id: "job-e1-x".into(),
+                attempt: 2,
+                preferred_node: Some(1),
+                kind: TaskKind::Map {
+                    object: "in/part-m-00000".into(),
+                    offset: 0,
+                    len: 1000,
+                    task_index: 0,
+                    partitions: 4,
+                    bucket_map: (0..256).map(|b| b / 64).collect(),
+                    shuffle_prefix: ".shuffle/job-e1-x/".into(),
+                },
+            }),
+            Message::TaskAssign(TaskSpec {
+                task_id: 12,
+                job_id: "j".into(),
+                attempt: 1,
+                preferred_node: None,
+                kind: TaskKind::Reduce {
+                    partition: 3,
+                    spill_keys: vec!["s1".into(), "s2".into()],
+                    out_key: "out/part-r-00003".into(),
+                },
+            }),
+            Message::NoTask {
+                failed: true,
+                msg: "all workers lost".into(),
+            },
+            Message::TaskDone {
+                worker_id: 1,
+                task_id: 11,
+                spills: vec![(0, "sa".into()), (3, "sb".into())],
+                bytes_read: 1000,
+                bytes_written: 900,
+                micros: 1234,
+            },
+            Message::TaskFail {
+                worker_id: 1,
+                task_id: 11,
+                error: "injected fault: boom".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        for msg in samples() {
+            let bytes = frame_bytes(&msg);
+            let mut cur = std::io::Cursor::new(bytes);
+            let back = read_message(&mut cur).unwrap().unwrap();
+            assert_eq!(back, msg);
+            // and the stream is now cleanly at EOF
+            assert!(read_message(&mut cur).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn frame_layout_is_len_tag_body_crc() {
+        let msg = Message::OkMeta { size: 0x0102_0304 };
+        let bytes = frame_bytes(&msg);
+        // body = 8-byte LE size
+        assert_eq!(bytes.len(), 4 + 1 + 8 + 4);
+        assert_eq!(&bytes[..4], &8u32.to_le_bytes());
+        assert_eq!(bytes[4], TAG_OK_META);
+        assert_eq!(&bytes[5..13], &0x0102_0304u64.to_le_bytes());
+        let crc = u32::from_le_bytes(bytes[13..17].try_into().unwrap());
+        assert_eq!(crc, crc_of(TAG_OK_META, &bytes[5..13]));
+    }
+
+    #[test]
+    fn truncated_stream_is_typed() {
+        let bytes = frame_bytes(&Message::Heartbeat { worker_id: 5 });
+        for cut in 1..bytes.len() {
+            let mut cur = std::io::Cursor::new(bytes[..cut].to_vec());
+            let err = read_message(&mut cur).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    Error::Wire {
+                        kind: WireKind::Truncated,
+                        ..
+                    }
+                ),
+                "cut={cut} gave {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn crc_flip_is_typed() {
+        let mut bytes = frame_bytes(&Message::OkBytes {
+            data: vec![7; 100],
+        });
+        // flip one bit in the body
+        bytes[20] ^= 0x10;
+        let err = read_message(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(matches!(
+            err,
+            Error::Wire {
+                kind: WireKind::Crc,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn tag_is_crc_covered() {
+        let mut bytes = frame_bytes(&Message::OkUnit);
+        bytes[4] = TAG_HEARTBEAT_ACK; // valid other tag, same (empty) body
+        let err = read_message(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(matches!(
+            err,
+            Error::Wire {
+                kind: WireKind::Crc,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn oversized_length_is_typed_and_does_not_allocate() {
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.push(TAG_OK_UNIT);
+        let err = read_message(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(matches!(
+            err,
+            Error::Wire {
+                kind: WireKind::Oversized,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn unknown_tag_with_valid_crc_is_typed() {
+        let tag = 0xEE;
+        let body = b"whatever";
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        bytes.push(tag);
+        bytes.extend_from_slice(body);
+        bytes.extend_from_slice(&crc_of(tag, body).to_le_bytes());
+        let err = read_message(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(matches!(
+            err,
+            Error::Wire {
+                kind: WireKind::UnknownTag,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_in_body_are_malformed() {
+        let tag = TAG_OK_META;
+        let mut body = 9u64.to_le_bytes().to_vec();
+        body.push(0xFF); // one byte too many
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        bytes.push(tag);
+        bytes.extend_from_slice(&body);
+        bytes.extend_from_slice(&crc_of(tag, &body).to_le_bytes());
+        let err = read_message(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(matches!(
+            err,
+            Error::Wire {
+                kind: WireKind::Malformed,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn back_to_back_frames_stream() {
+        let msgs = samples();
+        let mut stream = vec![];
+        for m in &msgs {
+            stream.extend_from_slice(&frame_bytes(m));
+        }
+        let mut cur = std::io::Cursor::new(stream);
+        for m in &msgs {
+            assert_eq!(&read_message(&mut cur).unwrap().unwrap(), m);
+        }
+        assert!(read_message(&mut cur).unwrap().is_none());
+    }
+}

@@ -1,0 +1,443 @@
+//! Cluster worker: executes map and reduce tasks pulled from a
+//! [`Coordinator`](crate::cluster::coordinator::Coordinator) against a
+//! shared [`ObjectStore`] (locally backed, or a
+//! [`RemotePfs`](crate::cluster::remote::RemotePfs) client talking to
+//! stripe servers).
+//!
+//! The worker is a pull loop: heartbeat, request a task, execute it,
+//! report `TaskDone`/`TaskFail`, repeat until the coordinator answers
+//! `NoTask`. Map tasks sort one input split with the shared
+//! [`SortKernel`] and write one spill object per non-empty partition
+//! under the job's shuffle namespace; spill keys carry the *attempt*
+//! number (`m{task:05}-a{attempt}-p{part:05}`) so a re-executed task
+//! never collides with a dead attempt's half-written spills. Reduce
+//! tasks k-way merge their partition's sorted spills on the full
+//! 10-byte key and stream one `part-r-NNNNN` output object.
+//!
+//! # Fault injection
+//!
+//! [`Worker::die_after_assignments`] makes the worker drop its
+//! connection the moment it *receives* its Nth task assignment —
+//! executing nothing for it. Dying on receipt (not after partial work)
+//! gives the chaos tests a sharp invariant: the coordinator holds
+//! exactly the assigned tasks in flight for the dead worker, so the
+//! re-executed set is exact.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::transport::Conn;
+use crate::cluster::wire::{Message, Role, TaskKind, TaskSpec, WIRE_VERSION};
+use crate::error::{Error, Result, WireKind};
+use crate::storage::{read_full_at, ObjectStore};
+use crate::terasort::records::full_key;
+use crate::terasort::{key_prefix, Partitioner, SortKernel, KEY_SIZE, RECORD_SIZE};
+
+/// Chunk size for streaming reduce output through the writer.
+const REDUCE_CHUNK: usize = 1 << 20;
+
+/// What one worker did over its connection's lifetime.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerSummary {
+    /// Coordinator-assigned id from the `HelloAck`.
+    pub worker_id: u64,
+    /// Tasks executed to completion (map + reduce).
+    pub tasks_done: usize,
+    /// True when the fault injector dropped the connection.
+    pub died: bool,
+    /// Set when the coordinator reported the job failed
+    /// (`NoTask { failed: true }`).
+    pub job_failed: Option<String>,
+}
+
+/// A task-executing cluster worker. Construct, optionally arm the fault
+/// injector, then [`Worker::run`] it over a connection to the
+/// coordinator.
+pub struct Worker {
+    store: Arc<dyn ObjectStore>,
+    kernel: Arc<SortKernel>,
+    die_after_assignments: Option<u64>,
+}
+
+impl Worker {
+    /// A worker executing against `store` with `kernel` as its sorter.
+    pub fn new(store: Arc<dyn ObjectStore>, kernel: Arc<SortKernel>) -> Worker {
+        Worker {
+            store,
+            kernel,
+            die_after_assignments: None,
+        }
+    }
+
+    /// Arm the fault injector: drop the connection upon *receiving* the
+    /// `n`th task assignment, executing nothing for it.
+    pub fn die_after_assignments(mut self, n: u64) -> Worker {
+        self.die_after_assignments = Some(n);
+        self
+    }
+
+    /// Drive the pull loop over `conn` until the coordinator dismisses
+    /// this worker, the job fails, or the fault injector fires.
+    pub fn run(&self, mut conn: Box<dyn Conn>) -> Result<WorkerSummary> {
+        conn.send(&Message::Hello {
+            version: WIRE_VERSION,
+            role: Role::Worker,
+            epoch: 0,
+        })?;
+        let worker_id = match conn.recv()? {
+            Message::HelloAck {
+                version, worker_id, ..
+            } => {
+                if version != WIRE_VERSION {
+                    return Err(Error::wire(
+                        WireKind::Version,
+                        format!("coordinator speaks v{version}, we speak v{WIRE_VERSION}"),
+                    ));
+                }
+                worker_id
+            }
+            Message::ErrReply { msg, .. } => {
+                return Err(Error::wire(WireKind::Remote, msg))
+            }
+            other => {
+                return Err(Error::wire(
+                    WireKind::Malformed,
+                    format!("expected HelloAck, got {other:?}"),
+                ))
+            }
+        };
+
+        let mut summary = WorkerSummary {
+            worker_id,
+            tasks_done: 0,
+            died: false,
+            job_failed: None,
+        };
+        let mut assignments = 0u64;
+        loop {
+            conn.send(&Message::Heartbeat { worker_id })?;
+            match conn.recv()? {
+                Message::HeartbeatAck => {}
+                other => {
+                    return Err(Error::wire(
+                        WireKind::Malformed,
+                        format!("expected HeartbeatAck, got {other:?}"),
+                    ))
+                }
+            }
+            conn.send(&Message::ReqTask { worker_id })?;
+            match conn.recv()? {
+                Message::TaskAssign(spec) => {
+                    assignments += 1;
+                    if let Some(n) = self.die_after_assignments {
+                        if assignments >= n {
+                            conn.close();
+                            summary.died = true;
+                            return Ok(summary);
+                        }
+                    }
+                    let started = Instant::now();
+                    let task_id = spec.task_id;
+                    match self.execute(&spec) {
+                        Ok(out) => {
+                            summary.tasks_done += 1;
+                            conn.send(&Message::TaskDone {
+                                worker_id,
+                                task_id,
+                                spills: out.spills,
+                                bytes_read: out.bytes_read,
+                                bytes_written: out.bytes_written,
+                                micros: started.elapsed().as_micros() as u64,
+                            })?;
+                        }
+                        Err(e) => {
+                            conn.send(&Message::TaskFail {
+                                worker_id,
+                                task_id,
+                                error: e.to_string(),
+                            })?;
+                        }
+                    }
+                }
+                Message::NoTask { failed: false, .. } => {
+                    conn.close();
+                    return Ok(summary);
+                }
+                Message::NoTask { failed: true, msg } => {
+                    conn.close();
+                    summary.job_failed = Some(msg);
+                    return Ok(summary);
+                }
+                other => {
+                    return Err(Error::wire(
+                        WireKind::Malformed,
+                        format!("expected a task reply, got {other:?}"),
+                    ))
+                }
+            }
+        }
+    }
+
+    fn execute(&self, spec: &TaskSpec) -> Result<TaskOutput> {
+        match &spec.kind {
+            TaskKind::Map {
+                object,
+                offset,
+                len,
+                task_index,
+                partitions,
+                bucket_map,
+                shuffle_prefix,
+            } => self.run_map(
+                object,
+                *offset,
+                *len,
+                *task_index,
+                spec.attempt,
+                *partitions,
+                bucket_map,
+                shuffle_prefix,
+            ),
+            TaskKind::Reduce {
+                spill_keys,
+                out_key,
+                ..
+            } => self.run_reduce(spill_keys, out_key),
+        }
+    }
+
+    /// Read the split, sort it, slice the sorted stream into partition
+    /// runs, and commit one spill object per non-empty partition.
+    #[allow(clippy::too_many_arguments)]
+    fn run_map(
+        &self,
+        object: &str,
+        offset: u64,
+        len: u64,
+        task_index: u32,
+        attempt: u32,
+        partitions: u32,
+        bucket_map: &[u32],
+        shuffle_prefix: &str,
+    ) -> Result<TaskOutput> {
+        if len % RECORD_SIZE as u64 != 0 {
+            return Err(Error::InvalidArg(format!(
+                "map split of {len} bytes is not record-aligned"
+            )));
+        }
+        let partitioner = Partitioner::from_bucket_map(bucket_map.to_vec(), partitions)?;
+        let reader = self.store.open(object)?;
+        let mut data = vec![0u8; len as usize];
+        read_full_at(reader.as_ref(), offset, &mut data)?;
+        drop(reader);
+
+        let order = self.kernel.sort_indices(&data)?;
+        // The partitioner is monotone in the key, so walking records in
+        // sorted order visits partitions in non-decreasing order: each
+        // partition's run is a contiguous stretch of the walk.
+        let mut runs: Vec<Vec<u8>> = vec![Vec::new(); partitions as usize];
+        for &idx in &order {
+            let rec = &data[idx as usize * RECORD_SIZE..(idx as usize + 1) * RECORD_SIZE];
+            let p = partitioner.partition_of(key_prefix(rec)) as usize;
+            runs[p].extend_from_slice(rec);
+        }
+
+        let mut out = TaskOutput {
+            bytes_read: len,
+            ..TaskOutput::default()
+        };
+        for (p, run) in runs.into_iter().enumerate() {
+            if run.is_empty() {
+                continue;
+            }
+            let key = format!("{shuffle_prefix}m{task_index:05}-a{attempt}-p{p:05}");
+            let mut w = self.store.create(&key)?;
+            w.append(&run)?;
+            out.bytes_written += w.written();
+            w.commit()?;
+            out.spills.push((p as u32, key));
+        }
+        Ok(out)
+    }
+
+    /// K-way merge the partition's sorted spills on the full 10-byte
+    /// key and stream the result into one committed output object. An
+    /// empty spill list still commits an empty object, so the output
+    /// part set is always complete.
+    fn run_reduce(&self, spill_keys: &[String], out_key: &str) -> Result<TaskOutput> {
+        let mut out = TaskOutput::default();
+        let mut runs: Vec<Vec<u8>> = Vec::with_capacity(spill_keys.len());
+        for key in spill_keys {
+            let reader = self.store.open(key)?;
+            let len = reader.len();
+            if len % RECORD_SIZE as u64 != 0 {
+                return Err(Error::InvalidArg(format!(
+                    "spill {key:?} of {len} bytes is not record-aligned"
+                )));
+            }
+            let mut buf = vec![0u8; len as usize];
+            read_full_at(reader.as_ref(), 0, &mut buf)?;
+            out.bytes_read += len;
+            runs.push(buf);
+        }
+
+        let mut w = self.store.create(out_key)?;
+        let mut cursors = vec![0usize; runs.len()];
+        let mut chunk = Vec::with_capacity(REDUCE_CHUNK);
+        loop {
+            let mut best: Option<(usize, [u8; KEY_SIZE])> = None;
+            for (r, run) in runs.iter().enumerate() {
+                if cursors[r] * RECORD_SIZE >= run.len() {
+                    continue;
+                }
+                let key = full_key(run, cursors[r]);
+                match &best {
+                    Some((_, k)) if *k <= key => {}
+                    _ => best = Some((r, key)),
+                }
+            }
+            let Some((r, _)) = best else { break };
+            let off = cursors[r] * RECORD_SIZE;
+            chunk.extend_from_slice(&runs[r][off..off + RECORD_SIZE]);
+            cursors[r] += 1;
+            if chunk.len() >= REDUCE_CHUNK {
+                w.append(&chunk)?;
+                chunk.clear();
+            }
+        }
+        if !chunk.is_empty() {
+            w.append(&chunk)?;
+        }
+        out.bytes_written = w.written();
+        w.commit()?;
+        Ok(out)
+    }
+}
+
+#[derive(Debug, Default)]
+struct TaskOutput {
+    spills: Vec<(u32, String)>,
+    bytes_read: u64,
+    bytes_written: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::memstore::MemStore;
+    use crate::terasort::records;
+    use crate::util::rng::Pcg32;
+
+    fn store() -> Arc<dyn ObjectStore> {
+        Arc::new(MemStore::new(u64::MAX, "lru").unwrap())
+    }
+
+    fn worker(store: &Arc<dyn ObjectStore>) -> Worker {
+        Worker::new(Arc::clone(store), Arc::new(SortKernel::Cpu))
+    }
+
+    fn gen_records(n: u64, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg32::new(seed, 7);
+        let mut buf = Vec::with_capacity(n as usize * RECORD_SIZE);
+        for row in 0..n {
+            records::write_record(&mut buf, &mut rng, row);
+        }
+        buf
+    }
+
+    #[test]
+    fn map_task_spills_sorted_partition_runs() {
+        let st = store();
+        let data = gen_records(50, 0xA);
+        st.write("in/part-m-00000", &data).unwrap();
+        let w = worker(&st);
+        let out = w
+            .run_map("in/part-m-00000", 0, data.len() as u64, 3, 1, 4,
+                Partitioner::uniform(4).bucket_map(), ".shuffle/job-t/")
+            .unwrap();
+        assert_eq!(out.bytes_read, data.len() as u64);
+        assert_eq!(out.bytes_written, data.len() as u64, "every record spilled");
+        let mut total = 0u64;
+        for (p, key) in &out.spills {
+            assert!(key.contains("m00003-a1-"), "attempt must be in {key}");
+            let spill = st.read(key).unwrap();
+            total += spill.len() as u64;
+            // Sorted within the spill, and all records in partition p.
+            let part = Partitioner::uniform(4);
+            let mut prev: Option<[u8; KEY_SIZE]> = None;
+            for i in 0..spill.len() / RECORD_SIZE {
+                let rec = &spill[i * RECORD_SIZE..(i + 1) * RECORD_SIZE];
+                assert_eq!(part.partition_of(key_prefix(rec)), *p);
+                let k = full_key(&spill, i);
+                if let Some(pk) = prev {
+                    assert!(pk <= k, "spill must be key-sorted");
+                }
+                prev = Some(k);
+            }
+        }
+        assert_eq!(total, data.len() as u64);
+    }
+
+    #[test]
+    fn map_task_rejects_misaligned_split() {
+        let st = store();
+        st.write("in/x", &[0u8; 150]).unwrap();
+        let w = worker(&st);
+        let err = w
+            .run_map("in/x", 0, 150, 0, 0, 2, Partitioner::uniform(2).bucket_map(),
+                ".shuffle/j/")
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidArg(_)), "{err}");
+    }
+
+    #[test]
+    fn reduce_task_merges_runs_into_sorted_output() {
+        let st = store();
+        // Two sorted runs built by map tasks over disjoint data.
+        let w = worker(&st);
+        let a = gen_records(30, 0xB);
+        let b = gen_records(30, 0xC);
+        st.write("in/a", &a).unwrap();
+        st.write("in/b", &b).unwrap();
+        let uni = Partitioner::uniform(1);
+        w.run_map("in/a", 0, a.len() as u64, 0, 0, 1, uni.bucket_map(), ".shuffle/j/")
+            .unwrap();
+        w.run_map("in/b", 0, b.len() as u64, 1, 0, 1, uni.bucket_map(), ".shuffle/j/")
+            .unwrap();
+        let spills: Vec<String> = st.list(".shuffle/j/");
+        assert_eq!(spills.len(), 2);
+        let out = w.run_reduce(&spills, "out/part-r-00000").unwrap();
+        assert_eq!(out.bytes_written, (a.len() + b.len()) as u64);
+        let merged = st.read("out/part-r-00000").unwrap();
+        assert_eq!(merged.len(), a.len() + b.len());
+        let mut prev: Option<[u8; KEY_SIZE]> = None;
+        let mut sum = 0u64;
+        for i in 0..merged.len() / RECORD_SIZE {
+            let k = full_key(&merged, i);
+            if let Some(pk) = prev {
+                assert!(pk <= k, "merge output must be globally sorted");
+            }
+            prev = Some(k);
+            sum = sum.wrapping_add(records::record_checksum(
+                &merged[i * RECORD_SIZE..(i + 1) * RECORD_SIZE],
+            ));
+        }
+        // Checksum-preserving: same records in, same records out.
+        let mut expect = 0u64;
+        for src in [&a, &b] {
+            for rec in src.chunks_exact(RECORD_SIZE) {
+                expect = expect.wrapping_add(records::record_checksum(rec));
+            }
+        }
+        assert_eq!(sum, expect);
+    }
+
+    #[test]
+    fn reduce_with_no_spills_commits_empty_object() {
+        let st = store();
+        let w = worker(&st);
+        let out = w.run_reduce(&[], "out/part-r-00007").unwrap();
+        assert_eq!(out.bytes_written, 0);
+        assert_eq!(st.read("out/part-r-00007").unwrap().len(), 0);
+    }
+}

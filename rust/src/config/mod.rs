@@ -286,6 +286,135 @@ impl EngineConfig {
     }
 }
 
+/// Topology of a multi-process cluster deployment
+/// ([`crate::cluster`]): where the coordinator listens, how many
+/// workers it waits for, and which PFS stripe servers hold the data.
+/// Loads from a `[cluster]` TOML table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterTopology {
+    /// Coordinator listen address (`host:port`; port `0` = ephemeral).
+    pub coordinator: String,
+    /// Workers the coordinator waits for before starting a job; also
+    /// the node count fed to the locality scheduler.
+    pub workers: usize,
+    /// PFS stripe-server addresses, in stripe order. Empty means the
+    /// deployment uses a locally attached store instead of
+    /// [`crate::cluster::RemotePfs`].
+    pub pfs: Vec<String>,
+    /// Worker heartbeat period in milliseconds.
+    pub heartbeat_ms: u64,
+    /// Grace window before a silent worker is declared dead; must
+    /// exceed `heartbeat_ms` (and, in deployments, the longest single
+    /// task).
+    pub grace_ms: u64,
+    /// Cluster epoch namespacing job ids across coordinator
+    /// incarnations; `0` lets the CLI derive one from boot time.
+    pub epoch: u64,
+    /// Stripe size of the remote PFS client, bytes.
+    pub stripe_size: u64,
+}
+
+impl Default for ClusterTopology {
+    fn default() -> Self {
+        Self {
+            coordinator: "127.0.0.1:0".into(),
+            workers: 1,
+            pfs: Vec::new(),
+            heartbeat_ms: 1_000,
+            grace_ms: 10_000,
+            epoch: 0,
+            stripe_size: crate::cluster::DEFAULT_STRIPE_SIZE,
+        }
+    }
+}
+
+impl ClusterTopology {
+    /// Load from a TOML file; missing keys fall back to defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML text. Recognized keys live under `[cluster]`.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = toml::parse(text)?;
+        let mut cfg = Self::default();
+        let Some(cluster) = doc.get("cluster") else {
+            return Ok(cfg);
+        };
+        if let Some(v) = cluster.get("coordinator").and_then(Value::as_str) {
+            cfg.coordinator = v.to_string();
+        }
+        if let Some(v) = cluster.get("workers").and_then(Value::as_int) {
+            cfg.workers = v as usize;
+        }
+        if let Some(v) = cluster.get("pfs") {
+            let items = v.as_array().ok_or_else(|| {
+                Error::Config(format!("`pfs` must be an array of addresses, got {v:?}"))
+            })?;
+            cfg.pfs = items
+                .iter()
+                .map(|it| {
+                    it.as_str().map(str::to_string).ok_or_else(|| {
+                        Error::Config(format!("`pfs` entries must be strings, got {it:?}"))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = cluster.get("heartbeat_ms").and_then(Value::as_int) {
+            cfg.heartbeat_ms = v as u64;
+        }
+        if let Some(v) = cluster.get("grace_ms").and_then(Value::as_int) {
+            cfg.grace_ms = v as u64;
+        }
+        if let Some(v) = cluster.get("epoch").and_then(Value::as_int) {
+            cfg.epoch = v as u64;
+        }
+        if let Some(v) = cluster.get("stripe_size") {
+            cfg.stripe_size = match v {
+                Value::Integer(i) if *i > 0 => *i as u64,
+                Value::String(s) => parse_bytes(s).ok_or_else(|| {
+                    Error::Config(format!("bad byte size for `stripe_size`: {s}"))
+                })?,
+                other => {
+                    return Err(Error::Config(format!(
+                        "bad value for `stripe_size`: {other:?}"
+                    )))
+                }
+            };
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check invariants the cluster roles rely on.
+    pub fn validate(&self) -> Result<()> {
+        if self.coordinator.is_empty() {
+            return Err(Error::Config("coordinator address must be set".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be > 0".into()));
+        }
+        if self.heartbeat_ms == 0 {
+            return Err(Error::Config("heartbeat_ms must be > 0".into()));
+        }
+        if self.grace_ms <= self.heartbeat_ms {
+            return Err(Error::Config(format!(
+                "grace_ms ({}) must exceed heartbeat_ms ({}) or every worker expires",
+                self.grace_ms, self.heartbeat_ms
+            )));
+        }
+        if self.stripe_size == 0 || self.stripe_size > crate::cluster::MAX_STRIPE_SIZE {
+            return Err(Error::Config(format!(
+                "stripe_size must be in (0, {}], got {}",
+                crate::cluster::MAX_STRIPE_SIZE,
+                self.stripe_size
+            )));
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,6 +422,48 @@ mod tests {
     #[test]
     fn default_is_valid() {
         EngineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cluster_topology_parses_arrays_and_defaults() {
+        let cfg = ClusterTopology::from_toml_str(
+            r#"
+[cluster]
+coordinator = "10.0.0.1:7000"
+workers = 4
+pfs = ["10.0.0.2:7100", "10.0.0.3:7100"]
+grace_ms = 30000
+epoch = 7
+stripe_size = "2M"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.coordinator, "10.0.0.1:7000");
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.pfs, vec!["10.0.0.2:7100", "10.0.0.3:7100"]);
+        assert_eq!(cfg.grace_ms, 30_000);
+        assert_eq!(cfg.epoch, 7);
+        assert_eq!(cfg.stripe_size, 2 << 20);
+        // untouched keys keep defaults
+        assert_eq!(cfg.heartbeat_ms, 1_000);
+        // absent table is all defaults
+        let d = ClusterTopology::from_toml_str("").unwrap();
+        assert_eq!(d, ClusterTopology::default());
+    }
+
+    #[test]
+    fn cluster_topology_rejects_bad_values() {
+        assert!(ClusterTopology::from_toml_str("[cluster]\nworkers = 0\n").is_err());
+        assert!(
+            ClusterTopology::from_toml_str("[cluster]\npfs = \"not-an-array\"\n").is_err()
+        );
+        assert!(ClusterTopology::from_toml_str("[cluster]\npfs = [1, 2]\n").is_err());
+        // grace must exceed heartbeat
+        assert!(ClusterTopology::from_toml_str(
+            "[cluster]\nheartbeat_ms = 5000\ngrace_ms = 5000\n"
+        )
+        .is_err());
+        assert!(ClusterTopology::from_toml_str("[cluster]\nstripe_size = 0\n").is_err());
     }
 
     #[test]

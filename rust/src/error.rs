@@ -67,6 +67,58 @@ pub enum Error {
     /// no longer matches the object table: the caller should run the
     /// backend's `recover()` before trusting a restart.
     RecoveryNeeded(String),
+
+    /// A cluster wire-protocol failure (see [`crate::cluster::wire`]):
+    /// corrupt, truncated, or malformed frames, a closed or refused
+    /// connection, or an error relayed from the remote peer. The
+    /// [`WireKind`] discriminant tells transports and tests *which*
+    /// failure mode fired without parsing the message text.
+    Wire { kind: WireKind, msg: String },
+}
+
+/// Failure modes of the cluster frame protocol, carried by
+/// [`Error::Wire`]. Each corrupt-frame class the property suite injects
+/// (`tests/prop_cluster.rs`) maps to exactly one kind, so tests can
+/// assert the typed failure rather than string-match.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireKind {
+    /// The stream ended mid-frame (a clean close *between* frames is not
+    /// an error; this is a frame cut short).
+    Truncated,
+    /// The frame's CRC32 trailer did not match its tag + body.
+    Crc,
+    /// The length prefix exceeds the protocol's maximum frame size.
+    Oversized,
+    /// The message tag byte is not one the protocol defines.
+    UnknownTag,
+    /// The frame decoded structurally but its body was ill-formed
+    /// (short field, bad UTF-8, trailing bytes).
+    Malformed,
+    /// Peer spoke an incompatible protocol version in its hello.
+    Version,
+    /// The connection closed where the caller required another message.
+    Closed,
+    /// The connection could not be established.
+    Refused,
+    /// The remote peer reported a failure executing the request.
+    Remote,
+}
+
+impl fmt::Display for WireKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            WireKind::Truncated => "truncated frame",
+            WireKind::Crc => "frame crc mismatch",
+            WireKind::Oversized => "oversized frame",
+            WireKind::UnknownTag => "unknown message tag",
+            WireKind::Malformed => "malformed message body",
+            WireKind::Version => "protocol version mismatch",
+            WireKind::Closed => "connection closed",
+            WireKind::Refused => "connection refused",
+            WireKind::Remote => "remote error",
+        };
+        f.write_str(s)
+    }
 }
 
 impl fmt::Display for Error {
@@ -99,6 +151,7 @@ impl fmt::Display for Error {
             Error::Canceled(job) => write!(f, "job canceled: {job}"),
             Error::Injected(msg) => write!(f, "injected fault: {msg}"),
             Error::RecoveryNeeded(msg) => write!(f, "recovery needed: {msg}"),
+            Error::Wire { kind, msg } => write!(f, "wire error ({kind}): {msg}"),
         }
     }
 }
@@ -118,6 +171,14 @@ impl Error {
         Error::Io {
             path: path.into(),
             source,
+        }
+    }
+
+    /// Build an [`Error::Wire`] of the given kind.
+    pub fn wire(kind: WireKind, msg: impl Into<String>) -> Self {
+        Error::Wire {
+            kind,
+            msg: msg.into(),
         }
     }
 }
@@ -156,6 +217,15 @@ mod tests {
         assert!(Error::RecoveryNeeded("orphan".into())
             .to_string()
             .starts_with("recovery needed:"));
+        let e = Error::wire(WireKind::Crc, "frame 3");
+        assert_eq!(e.to_string(), "wire error (frame crc mismatch): frame 3");
+        assert!(matches!(
+            e,
+            Error::Wire {
+                kind: WireKind::Crc,
+                ..
+            }
+        ));
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! |---|---|---|
 //! | L3 | [`storage`] | lock-striped memory tier + parallel striped PFS tier + two-level store |
 //! | L3 | [`coordinator`], [`mapreduce`], [`terasort`], [`workloads`] | checkpointing/prefetch, job server + pipelines, workloads |
+//! | L3 | [`cluster`] | multi-process roles over a length-prefixed TCP wire protocol |
 //! | L3 | [`model`], [`sim`] | §4 analytic models + cluster simulator |
 //! | L3 | [`runtime`] | PJRT: load + execute AOT artifacts (stubbed without the `pjrt` feature) |
 //! | L2/L1 | `python/compile/` | JAX graph + Pallas kernels (build time) |
@@ -95,6 +96,7 @@
 pub mod analytics;
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod error;

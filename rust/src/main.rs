@@ -8,6 +8,9 @@
 //! tlstore job submit    --workload wordcount-topk|log-sessions [--jobs N]
 //! tlstore job status    --root DIR       (shuffle residue of a crashed root)
 //! tlstore job workloads                  (list built-in pipelines)
+//! tlstore cluster pfs-server  --listen ADDR --root DIR
+//! tlstore cluster coordinator --listen ADDR --workers N [--pfs a,b] [--config cluster.toml]
+//! tlstore cluster worker      --coordinator ADDR [--pfs a,b] [--die-after-tasks N]
 //! tlstore bench parity  [--smoke] [--tolerance X] [--out-dir DIR]
 //! tlstore model     [--pfs-aggregate MB/s] [--f 0.2]      (Figure 5)
 //! tlstore sim       [--backend ...] [--nodes N] [--data-nodes M] (Figure 7)
@@ -24,6 +27,10 @@ use std::sync::Arc;
 
 use tlstore::bench::parity::ParityRunOptions;
 use tlstore::cli::Args;
+use tlstore::cluster::{
+    serve, ClusterJob, Conn, Coordinator, CoordinatorConfig, Listener, RemotePfs, TcpTransport,
+    Transport, Worker,
+};
 use tlstore::config::presets;
 use tlstore::config::Backend;
 use tlstore::error::{Error, Result};
@@ -495,6 +502,235 @@ fn cmd_job_status(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `tlstore cluster <coordinator|worker|pfs-server>` — the multi-process
+/// cluster plane ([`tlstore::cluster`]): PFS stripe servers export a
+/// store over TCP, workers pull map/reduce tasks, the coordinator
+/// schedules with locality and re-executes tasks stranded on dead
+/// workers.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("coordinator") => cmd_cluster_coordinator(args),
+        Some("worker") => cmd_cluster_worker(args),
+        Some("pfs-server") => cmd_cluster_pfs_server(args),
+        other => Err(Error::InvalidArg(format!(
+            "unknown cluster subcommand {other:?} (coordinator|worker|pfs-server)"
+        ))),
+    }
+}
+
+/// Parse a comma-separated `--pfs a:1,b:2` address list.
+fn pfs_addrs(args: &Args) -> Vec<String> {
+    args.get("pfs", "")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// The shared store a cluster role executes against: a [`RemotePfs`]
+/// client when `--pfs` names stripe servers, otherwise a locally
+/// attached backend (`--backend`/`--root`, shared via the filesystem).
+fn cluster_store(args: &Args, stripe: u64) -> Result<Arc<dyn ObjectStore>> {
+    let addrs = pfs_addrs(args);
+    if addrs.is_empty() {
+        open_store(args)
+    } else {
+        Ok(Arc::new(RemotePfs::connect(&TcpTransport, &addrs, stripe)?))
+    }
+}
+
+/// Dial the coordinator, retrying while it boots.
+fn connect_retry(addr: &str, attempts: u32) -> Result<Box<dyn Conn>> {
+    let mut last = None;
+    for i in 0..attempts.max(1) {
+        match TcpTransport.connect(addr) {
+            Ok(c) => return Ok(c),
+            Err(e) => last = Some(e),
+        }
+        if i + 1 < attempts {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+        }
+    }
+    Err(last.unwrap())
+}
+
+/// Serve a local store's objects to [`RemotePfs`] clients until killed.
+fn cmd_cluster_pfs_server(args: &Args) -> Result<()> {
+    let listen = args.get("listen", "127.0.0.1:0");
+    let root = PathBuf::from(args.get("root", "/tmp/tlstore-pfs"));
+    let dirs = args.get_parse("pfs-servers", 1usize)?;
+    let stripe = args.get_bytes("stripe-size", 1 << 20)?;
+    args.finish()?;
+    let store: Arc<dyn ObjectStore> = Arc::new(Pfs::open(&root, dirs, stripe)?);
+    let listener: Arc<dyn Listener> = Arc::from(TcpTransport.listen(&listen)?);
+    // the harness parses this line for the ephemeral port — keep it first
+    println!("pfs-server listening on {}", listener.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    serve(listener, store)
+}
+
+/// Pull and execute tasks until the coordinator dismisses this worker.
+fn cmd_cluster_worker(args: &Args) -> Result<()> {
+    let coord = args.get("coordinator", "127.0.0.1:7000");
+    let stripe = args.get_bytes("stripe-size", tlstore::cluster::DEFAULT_STRIPE_SIZE)?;
+    let die_after = args.get_parse("die-after-tasks", 0u64)?;
+    let artifacts = args.get("artifacts", "artifacts");
+    let store = cluster_store(args, stripe)?;
+    args.finish()?;
+    let kernel = SortKernel::auto(std::path::Path::new(&artifacts));
+    let mut worker = Worker::new(store, kernel);
+    if die_after > 0 {
+        worker = worker.die_after_assignments(die_after);
+    }
+    let conn = connect_retry(&coord, 50)?;
+    let summary = worker.run(conn)?;
+    println!(
+        "worker {}: {} task(s) done{}",
+        summary.worker_id,
+        summary.tasks_done,
+        if summary.died { ", died (injected)" } else { "" }
+    );
+    if let Some(msg) = summary.job_failed {
+        println!("job failed: {msg}");
+    }
+    Ok(())
+}
+
+/// Generate input (unless `--records 0`), wait for the workers, run one
+/// distributed TeraSort, validate the output, and report re-execution
+/// and per-worker I/O evidence.
+fn cmd_cluster_coordinator(args: &Args) -> Result<()> {
+    let mut topo = {
+        let path = args.get("config", "");
+        if path.is_empty() {
+            tlstore::config::ClusterTopology::default()
+        } else {
+            tlstore::config::ClusterTopology::from_file(std::path::Path::new(&path))?
+        }
+    };
+    let listen = args.get("listen", &topo.coordinator);
+    topo.workers = args.get_parse("workers", topo.workers)?;
+    topo.grace_ms = args.get_parse("grace-ms", topo.grace_ms)?;
+    topo.heartbeat_ms = args.get_parse("heartbeat-ms", topo.heartbeat_ms)?;
+    let flag_pfs = pfs_addrs(args);
+    if !flag_pfs.is_empty() {
+        topo.pfs = flag_pfs;
+    }
+    let stripe = args.get_bytes("stripe-size", topo.stripe_size)?;
+    let epoch = match args.get_parse("epoch", topo.epoch)? {
+        // 0 = derive a fresh epoch so successive incarnations never
+        // collide in the shuffle namespace
+        0 => {
+            let nanos = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(1);
+            nanos ^ u64::from(std::process::id())
+        }
+        e => e,
+    };
+    let records = args.get_parse("records", 100_000u64)?;
+    let per_object = args.get_parse("records-per-object", 25_000u64)?;
+    let reducers = args.get_parse("reducers", 4u32)?;
+    let split_size = args.get_bytes("split-size", 1 << 20)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let sample_objects = args.get_parse("sample-objects", 2usize)?;
+    let in_prefix = args.get("prefix", "in/");
+    let out_prefix = args.get("out", "out/");
+    let artifacts = args.get("artifacts", "artifacts");
+    let store = if topo.pfs.is_empty() {
+        open_store(args)?
+    } else {
+        Arc::new(RemotePfs::connect(&TcpTransport, &topo.pfs, stripe)?) as Arc<dyn ObjectStore>
+    };
+    args.finish()?;
+    topo.validate()?;
+
+    let kernel = SortKernel::auto(std::path::Path::new(&artifacts));
+    let listener = TcpTransport.listen(&listen)?;
+    // the harness parses this line for the ephemeral port — keep it first
+    println!("coordinator listening on {}", listener.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+
+    if records > 0 {
+        let written =
+            terasort::teragen(store.as_ref(), &in_prefix, records, per_object, seed)?;
+        println!("teragen: {records} records, {written} bytes under {in_prefix}");
+        std::io::stdout().flush().ok();
+    }
+
+    let coord = Coordinator::new(
+        listener,
+        Arc::clone(&store),
+        kernel,
+        CoordinatorConfig {
+            expected_workers: topo.workers,
+            epoch,
+            grace_ms: topo.grace_ms,
+        },
+    );
+    let ticker = coord.ticker();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let tick_thread = {
+        let stop = Arc::clone(&stop);
+        let period = std::time::Duration::from_millis(topo.heartbeat_ms.max(1));
+        std::thread::spawn(move || {
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                ticker.tick();
+                std::thread::sleep(period);
+            }
+        })
+    };
+    let result = coord.run(&ClusterJob {
+        name: "terasort".into(),
+        input_prefix: in_prefix.clone(),
+        output_prefix: out_prefix.clone(),
+        reducers,
+        split_size,
+        sample_objects,
+    });
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = tick_thread.join();
+    let report = match result {
+        Ok(r) => r,
+        Err(e) => {
+            coord.shutdown();
+            return Err(e);
+        }
+    };
+    coord.shutdown();
+    println!(
+        "job {} done: {} map + {} reduce tasks, workers seen {} lost {}, locality {}/{}",
+        report.job_id,
+        report.map_tasks,
+        report.reduce_tasks,
+        report.workers_seen,
+        report.workers_lost,
+        report.locality_hits,
+        report.locality_total,
+    );
+    // the TCP smoke test greps this line for the re-execution evidence
+    println!("re-executed tasks: {:?}", report.reexecuted);
+    let timelines = report.timelines();
+    if !timelines.series.is_empty() {
+        print!("{}", timelines.render(40));
+    }
+    let v = terasort::teravalidate(store.as_ref(), &out_prefix)?;
+    println!(
+        "validate: {} records, sorted={}, checksum={:#018x}",
+        v.records, v.sorted, v.checksum
+    );
+    if !v.sorted || v.records == 0 {
+        return Err(Error::Job(format!(
+            "terasort output failed validation ({} records, sorted={})",
+            v.records, v.sorted
+        )));
+    }
+    Ok(())
+}
+
 fn cmd_recover(args: &Args) -> Result<()> {
     let backend = Backend::parse(&args.get("backend", "tls"))?;
     let root = PathBuf::from(args.get("root", "/tmp/tlstore"));
@@ -559,9 +795,12 @@ fn cmd_mountain(args: &Args) -> Result<()> {
 }
 
 fn usage() -> String {
-    "usage: tlstore <info|teragen|terasort|validate|analytics|job|bench|recover|model|sim|mountain> [flags]\n\
+    "usage: tlstore <info|teragen|terasort|validate|analytics|job|cluster|bench|recover|model|sim|mountain> [flags]\n\
      `tlstore job submit --workload wordcount-topk|log-sessions [--jobs N]` runs named\n\
      multi-stage pipelines through the JobServer (shuffle spilled via .shuffle/);\n\
+     `tlstore cluster coordinator|worker|pfs-server` runs the multi-process cluster\n\
+     plane (coordinator schedules + re-executes, workers pull tasks over TCP,\n\
+     pfs-server exports a striped store; see docs/ARCHITECTURE.md \"cluster plane\");\n\
      `tlstore bench parity [--smoke]` measures TeraSort + both workloads on all four\n\
      backends against the paper's \u{a7}4 models and writes BENCH_fig7.json/BENCH_fig5.json;\n\
      storage commands accept --fault-plan \"op=commit,kind=crash,...\" (fault drills)\n\
@@ -586,6 +825,7 @@ fn main() {
         Some("validate") => cmd_validate(&args),
         Some("analytics") => cmd_analytics(&args),
         Some("job") => cmd_job(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("bench") => cmd_bench(&args),
         Some("recover") => cmd_recover(&args),
         Some("model") => cmd_model(&args),

@@ -51,14 +51,31 @@ use super::scheduler::ContainerLedger;
 /// `.shuffle/<id>/` namespace and reap each other's live spills.
 static JOB_SEQ: AtomicU64 = AtomicU64::new(0);
 
-/// Build a store-key-safe, cross-process-unique job id.
-fn job_id(name: &str) -> String {
-    format!(
-        "job-p{:x}-{:04}-{}",
+/// Build a store-key-safe job id unique across processes *and* hosts.
+///
+/// `epoch == 0` (the single-host default) keeps the historical
+/// `job-p<pid>-<seq>-<name>` shape. With a non-zero coordinator-assigned
+/// cluster epoch the id becomes `job-e<epoch>-p<pid>-<seq>-<name>`:
+/// pid + sequence alone isolates processes on *one* host, but two
+/// [`RemotePfs`](crate::cluster::RemotePfs) clients on different hosts
+/// can share a pid and reap each other's live `.shuffle/<id>/`
+/// namespaces — the epoch is the cross-host disambiguator
+/// ([`JobServerConfig::cluster_epoch`] threads it in).
+pub fn namespaced_job_id(epoch: u64, name: &str) -> String {
+    job_id_parts(
+        epoch,
         std::process::id(),
         JOB_SEQ.fetch_add(1, Ordering::Relaxed),
-        sanitize(name)
+        name,
     )
+}
+
+fn job_id_parts(epoch: u64, pid: u32, seq: u64, name: &str) -> String {
+    if epoch == 0 {
+        format!("job-p{pid:x}-{seq:04}-{}", sanitize(name))
+    } else {
+        format!("job-e{epoch:08x}-p{pid:x}-{seq:04}-{}", sanitize(name))
+    }
 }
 
 /// Sizing and spill knobs for a [`JobServer`].
@@ -84,6 +101,12 @@ pub struct JobServerConfig {
     /// Size of the recycled map-split buffers (grown buffers are kept, so
     /// this is a floor, not a ceiling).
     pub split_buffer: usize,
+    /// Coordinator-assigned cluster epoch woven into every job id (and
+    /// therefore every `.shuffle/<id>/` namespace). `0` — the default for
+    /// single-host servers — keeps the historical pid-only namespacing;
+    /// cluster coordinators set a shared non-zero epoch so job ids from
+    /// different hosts can never collide on a shared store.
+    pub cluster_epoch: u64,
 }
 
 impl Default for JobServerConfig {
@@ -99,6 +122,7 @@ impl Default for JobServerConfig {
             shuffle_spill_threshold: 0,
             shuffle_chunk: 1 << 20,
             split_buffer: 4 << 20,
+            cluster_epoch: 0,
         }
     }
 }
@@ -121,6 +145,7 @@ impl JobServerConfig {
             shuffle_spill_threshold: cfg.shuffle_spill_threshold,
             shuffle_chunk: cfg.shuffle_chunk.max(1) as usize,
             split_buffer: 4 << 20,
+            cluster_epoch: 0,
         }
     }
 
@@ -345,7 +370,7 @@ impl JobServer {
                 spec.name
             )));
         }
-        let id = job_id(&spec.name);
+        let id = namespaced_job_id(self.cfg.cluster_epoch, &spec.name);
         let state = Arc::new(JobState {
             name: spec.name.clone(),
             id: id.clone(),
@@ -575,6 +600,7 @@ mod tests {
                 shuffle_spill_threshold: 0,
                 shuffle_chunk: 256,
                 split_buffer: 1 << 16,
+                cluster_epoch: 0,
             },
         )
     }
@@ -630,5 +656,46 @@ mod tests {
         assert_eq!(sanitize("word count/top-k"), "word-count-top-k");
         assert_eq!(sanitize("ok_name-1"), "ok_name-1");
         assert_eq!(sanitize(&"x".repeat(64)).len(), 32);
+    }
+
+    /// Regression (cluster epoch): two hosts can share a pid *and* a job
+    /// sequence number, so pid+seq namespacing alone lets one host's
+    /// `shutdown` reap the other's live shuffle spills. The epoch must
+    /// disambiguate ids that are identical in every other component.
+    #[test]
+    fn cluster_epoch_disambiguates_identical_pid_and_seq() {
+        let a = job_id_parts(0x1111, 4242, 7, "sort");
+        let b = job_id_parts(0x2222, 4242, 7, "sort");
+        assert_ne!(a, b, "same pid+seq on two hosts must not collide");
+        // both epochs keep the documented id shape
+        assert!(a.starts_with("job-"));
+        assert!(b.starts_with("job-"));
+        // the epoch-0 (single-host) shape is unchanged for compatibility
+        assert_eq!(job_id_parts(0, 4242, 7, "sort"), "job-p1092-0007-sort");
+        // distinct shuffle namespaces means shutdown reaps only its own
+        let ns_a = format!("{SHUFFLE_NS}{a}/");
+        let ns_b = format!("{SHUFFLE_NS}{b}/");
+        assert!(!ns_a.starts_with(&ns_b) && !ns_b.starts_with(&ns_a));
+    }
+
+    #[test]
+    fn submit_threads_cluster_epoch_into_job_ids() {
+        let store: Arc<dyn ObjectStore> = Arc::new(test_store());
+        store.write("in/a", b"x y").unwrap();
+        let srv = JobServer::new(
+            Arc::clone(&store),
+            JobServerConfig {
+                cluster_epoch: 0xBEEF,
+                ..JobServerConfig::default()
+            },
+        );
+        let h = srv.submit(wc_spec("in/", "out/")).unwrap();
+        assert!(
+            h.id().starts_with("job-e0000beef-p"),
+            "id {} must carry the epoch",
+            h.id()
+        );
+        h.join().unwrap();
+        srv.shutdown().unwrap();
     }
 }

@@ -163,6 +163,28 @@ impl ClusterParams {
             nu: ram_mbs,
         }
     }
+
+    /// Parameterization for a [`crate::config::ClusterTopology`]: `N` =
+    /// the topology's worker count, `M` = its PFS stripe-server count.
+    /// The parity harness runs every process on one host, so — exactly
+    /// as in [`ClusterParams::single_node`] — the network terms stay
+    /// out of the picture (ρ, Φ → ∞; loopback TCP is not the paper's
+    /// interconnect) and the measured device constants apply to every
+    /// "node". A 1-worker/1-server topology therefore collapses to
+    /// `single_node` verbatim; larger topologies scale the equations'
+    /// N/M contention terms while the per-device constants stay fixed.
+    pub fn from_topology(
+        topo: &crate::config::ClusterTopology,
+        disk_read_mbs: f64,
+        disk_write_mbs: f64,
+        ram_mbs: f64,
+    ) -> Self {
+        Self {
+            n: topo.workers.max(1) as u32,
+            m: topo.pfs.len().max(1) as u32,
+            ..Self::single_node(disk_read_mbs, disk_write_mbs, ram_mbs)
+        }
+    }
 }
 
 // -------------------------------------------------------- §4.5 case study
@@ -286,6 +308,44 @@ mod tests {
     }
 
     // ---- eq-level sanity on the general parameterization ----------------
+
+    #[test]
+    fn trivial_topology_collapses_to_single_node() {
+        let topo = crate::config::ClusterTopology {
+            workers: 1,
+            pfs: vec!["127.0.0.1:7100".into()],
+            ..Default::default()
+        };
+        let t = ClusterParams::from_topology(&topo, 100.0, 80.0, 4000.0);
+        let s = ClusterParams::single_node(100.0, 80.0, 4000.0);
+        assert_eq!(t.n, s.n);
+        assert_eq!(t.m, s.m);
+        assert_eq!(t.ofs_read(), s.ofs_read());
+        assert_eq!(t.ofs_write(), s.ofs_write());
+        assert_eq!(t.tls_read(0.5), s.tls_read(0.5));
+        assert_eq!(t.tls_write(), s.tls_write());
+        assert_eq!(t.hdfs_write(), s.hdfs_write());
+    }
+
+    #[test]
+    fn topology_scales_contention_terms() {
+        let topo = crate::config::ClusterTopology {
+            workers: 4,
+            pfs: vec!["a:1".into(), "b:1".into()],
+            ..Default::default()
+        };
+        let p = ClusterParams::from_topology(&topo, 100.0, 80.0, 4000.0);
+        assert_eq!(p.n, 4);
+        assert_eq!(p.m, 2);
+        // eq. (3): m·μ′/n = 2·100/4 binds (ρ, Φ infinite on one host)
+        assert_eq!(p.ofs_read(), 50.0);
+        // empty pfs list clamps to m = 1 instead of dividing by zero
+        let local = crate::config::ClusterTopology {
+            workers: 2,
+            ..Default::default()
+        };
+        assert_eq!(ClusterParams::from_topology(&local, 100.0, 80.0, 4000.0).m, 1);
+    }
 
     #[test]
     fn eq1_eq2_hdfs() {

@@ -161,6 +161,32 @@ impl Partitioner {
         self.bucket_to_part[(prefix >> 24) as usize]
     }
 
+    /// The raw 256-entry bucket→partition map. Cluster map tasks carry
+    /// this over the wire ([`crate::cluster::wire::TaskKind::Map`]) so a
+    /// remote worker partitions exactly as the coordinator sampled.
+    pub fn bucket_map(&self) -> &[u32] {
+        &self.bucket_to_part
+    }
+
+    /// Rebuild a partitioner from a wire-carried [`Self::bucket_map`].
+    /// Rejects maps that are not 256 entries or not monotone.
+    pub fn from_bucket_map(map: Vec<u32>, num_partitions: u32) -> Result<Self> {
+        if map.len() != BUCKETS {
+            return Err(Error::InvalidArg(format!(
+                "bucket map has {} entries, need {BUCKETS}",
+                map.len()
+            )));
+        }
+        let p = Self {
+            bucket_to_part: map,
+            num_partitions: num_partitions.max(1),
+        };
+        if !p.is_monotone() {
+            return Err(Error::InvalidArg("bucket map not monotone".into()));
+        }
+        Ok(p)
+    }
+
     /// Monotonicity invariant (property-tested).
     pub fn is_monotone(&self) -> bool {
         self.bucket_to_part.windows(2).all(|w| w[0] <= w[1])
@@ -278,8 +304,10 @@ impl SortKernel {
     }
 
     /// Sort `data` (a multiple of [`RECORD_SIZE`] bytes) by full 10-byte
-    /// key; returns record indices in sorted order.
-    fn sort_indices(&self, data: &[u8]) -> Result<Vec<u32>> {
+    /// key; returns record indices in sorted order. Public so cluster
+    /// workers ([`crate::cluster::worker`]) can run the same block sort
+    /// the in-process [`SortMapper`] uses.
+    pub fn sort_indices(&self, data: &[u8]) -> Result<Vec<u32>> {
         match self {
             SortKernel::Cpu => {
                 let n = data.len() / RECORD_SIZE;

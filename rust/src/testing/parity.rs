@@ -183,6 +183,12 @@ pub struct ParityConfig {
     pub backends: Vec<ParityBackend>,
     /// Workloads to run (default: all three).
     pub workloads: Vec<ParityWorkload>,
+    /// Optional cluster topology: when set, predictions come from
+    /// [`ClusterParams::from_topology`] (N workers, M stripe servers)
+    /// instead of the single-node collapse — the parity path for
+    /// multi-process [`crate::cluster`] deployments. `None` (the
+    /// default and the smoke shape) keeps the single-node model.
+    pub topology: Option<crate::config::ClusterTopology>,
 }
 
 impl Default for ParityConfig {
@@ -211,6 +217,7 @@ impl Default for ParityConfig {
             min_phase_bytes: 1 << 20,
             backends: ParityBackend::all().to_vec(),
             workloads: ParityWorkload::all().to_vec(),
+            topology: None,
         }
     }
 }
@@ -251,6 +258,21 @@ impl DeviceConstants {
     /// The §4 model over these constants, collapsed to one host.
     pub fn model(&self) -> ClusterParams {
         ClusterParams::single_node(self.disk_read_mbs, self.disk_write_mbs, self.ram_mbs)
+    }
+
+    /// The §4 model over these constants at a cluster topology's N/M
+    /// (N workers, M PFS stripe servers); `None` collapses to
+    /// [`DeviceConstants::model`].
+    pub fn model_for(&self, topo: Option<&crate::config::ClusterTopology>) -> ClusterParams {
+        match topo {
+            Some(t) => ClusterParams::from_topology(
+                t,
+                self.disk_read_mbs,
+                self.disk_write_mbs,
+                self.ram_mbs,
+            ),
+            None => self.model(),
+        }
     }
 }
 
@@ -474,6 +496,7 @@ fn parity_server(store: Arc<dyn ObjectStore>) -> JobServer {
             shuffle_spill_threshold: 0, // everything through the tiers
             shuffle_chunk: 1 << 20,
             split_buffer: 4 << 20,
+            cluster_epoch: 0,
         },
     )
 }
@@ -560,7 +583,7 @@ fn run_case(
 /// callers decide whether they are fatal ([`crate::bench::parity`] does).
 pub fn run_parity(cfg: &ParityConfig) -> Result<ParityReport> {
     let device = measure_device_constants(cfg)?;
-    let model = device.model();
+    let model = device.model_for(cfg.topology.as_ref());
     let mut cases = Vec::new();
     for &workload in &cfg.workloads {
         for &backend in &cfg.backends {

@@ -1,0 +1,211 @@
+//! Cluster chaos suite: the full coordinator/worker protocol over the
+//! deterministic loopback transport — worker kills included — inside
+//! one test process. No real sockets, no sleeps, no timing assumptions:
+//! every blocking edge is a condvar or a channel, and worker death is
+//! injected by [`Worker::die_after_assignments`], which drops the
+//! connection upon *receiving* an assignment (executing nothing), so
+//! the set of re-executed tasks is exact rather than racy.
+//!
+//! Scenario 1: kill one of two workers mid-TeraSort → the job completes,
+//! TeraValidate passes, and the dead worker's task is re-executed
+//! exactly once. Scenario 2: kill the *last* worker → the job fails with
+//! a diagnosable status, shuffle residue survives (the coordinator only
+//! reaps on success), and [`Recover`] cleans it.
+
+use std::sync::Arc;
+use std::thread;
+
+use tlstore::cluster::{
+    ClusterJob, Coordinator, CoordinatorConfig, LoopbackNet, Transport, Worker, WorkerSummary,
+};
+use tlstore::error::Error;
+use tlstore::storage::memstore::MemStore;
+use tlstore::storage::pfs::Pfs;
+use tlstore::storage::{ObjectStore, Recover, SHUFFLE_NS};
+use tlstore::terasort::{self, SortKernel, RECORD_SIZE};
+use tlstore::testing::{master_seed, TempDir};
+
+const COORD_ADDR: &str = "coord:7000";
+
+fn spawn_worker(
+    net: &LoopbackNet,
+    store: &Arc<dyn ObjectStore>,
+    kernel: &Arc<SortKernel>,
+    die_after: Option<u64>,
+) -> thread::JoinHandle<WorkerSummary> {
+    let net = net.clone();
+    let store = Arc::clone(store);
+    let kernel = Arc::clone(kernel);
+    thread::spawn(move || {
+        let mut w = Worker::new(store, kernel);
+        if let Some(n) = die_after {
+            w = w.die_after_assignments(n);
+        }
+        let conn = net.connect(COORD_ADDR).expect("worker connect");
+        w.run(conn).expect("worker protocol error")
+    })
+}
+
+/// Kill one of two workers mid-job: the job completes, the output
+/// validates against the input checksum, and the dead worker's one
+/// in-flight task is re-executed exactly once.
+#[test]
+fn worker_death_mid_job_reexecutes_exactly_once() {
+    let seed = master_seed();
+    let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new(u64::MAX, "lru").unwrap());
+    let kernel = Arc::new(SortKernel::Cpu);
+
+    // 6 input objects of 500 records → 6 map splits, 3 preferred per node.
+    let records = 3_000u64;
+    terasort::teragen(store.as_ref(), "in/", records, 500, seed).unwrap();
+    let (in_records, in_checksum) = terasort::input_checksum(store.as_ref(), "in/").unwrap();
+    assert_eq!(in_records, records);
+
+    let net = LoopbackNet::new();
+    let coord = Coordinator::new(
+        net.listen(COORD_ADDR).unwrap(),
+        Arc::clone(&store),
+        Arc::clone(&kernel),
+        CoordinatorConfig {
+            expected_workers: 2,
+            epoch: 0xC1,
+            grace_ms: 60_000,
+        },
+    );
+
+    // Whichever node the dying worker lands on, the strict two-tier
+    // dispatch guarantees its first assignment is one of its own node's
+    // map tasks — it dies holding exactly that one, never-executed task.
+    let survivor = spawn_worker(&net, &store, &kernel, None);
+    let casualty = spawn_worker(&net, &store, &kernel, Some(1));
+
+    let report = coord
+        .run(&ClusterJob {
+            name: "sort".into(),
+            input_prefix: "in/".into(),
+            output_prefix: "out/".into(),
+            reducers: 4,
+            split_size: 500 * RECORD_SIZE as u64,
+            sample_objects: 2,
+        })
+        .expect("job must survive a single worker death");
+    coord.shutdown();
+
+    let died = casualty.join().unwrap();
+    assert!(died.died, "fault injector must have fired");
+    assert_eq!(died.tasks_done, 0, "the casualty executed nothing");
+    let lived = survivor.join().unwrap();
+    assert!(!lived.died);
+    assert!(lived.job_failed.is_none());
+
+    // Exactly one task re-executed: the casualty's single assignment.
+    assert_eq!(report.workers_lost, 1);
+    assert_eq!(report.workers_seen, 2);
+    assert_eq!(
+        report.reexecuted.len(),
+        1,
+        "exactly the casualty's task re-executes: {:?}",
+        report.reexecuted
+    );
+    assert_eq!(report.attempts[&report.reexecuted[0]], 2);
+    assert_eq!(report.map_tasks, 6);
+    assert_eq!(report.reduce_tasks, 4);
+    assert_eq!(
+        lived.tasks_done,
+        report.map_tasks + report.reduce_tasks,
+        "the survivor executed every task"
+    );
+    // The job id carries the epoch namespace.
+    assert!(
+        report.job_id.starts_with("job-e000000c1-"),
+        "epoch missing from {}",
+        report.job_id
+    );
+
+    // Output validates: sorted, complete, checksum-preserving.
+    let v = terasort::teravalidate(store.as_ref(), "out/").unwrap();
+    assert!(v.sorted, "terasort output must be sorted");
+    assert_eq!(v.records, records);
+    assert_eq!(v.checksum, in_checksum, "records must survive the shuffle");
+
+    // Success path reaps the job's shuffle namespace.
+    assert!(
+        store.list(SHUFFLE_NS).is_empty(),
+        "no shuffle residue after a successful job"
+    );
+}
+
+/// Kill the *last* worker: the job fails with a diagnosable status, the
+/// coordinator leaves the shuffle residue in place, and `recover()` on
+/// the store reaps it.
+#[test]
+fn last_worker_death_fails_cleanly_and_recovery_reaps_shuffle() {
+    let seed = master_seed();
+    let dir = TempDir::new("cluster-chaos").unwrap();
+    let pfs = Arc::new(Pfs::open(dir.path(), 2, 64 << 10).unwrap());
+    let store: Arc<dyn ObjectStore> = Arc::clone(&pfs) as Arc<dyn ObjectStore>;
+    let kernel = Arc::new(SortKernel::Cpu);
+
+    // 4 map splits; the lone worker completes exactly one (its spills
+    // land in .shuffle/) and dies receiving the second.
+    terasort::teragen(store.as_ref(), "in/", 1_000, 250, seed).unwrap();
+
+    let net = LoopbackNet::new();
+    let coord = Coordinator::new(
+        net.listen(COORD_ADDR).unwrap(),
+        Arc::clone(&store),
+        Arc::clone(&kernel),
+        CoordinatorConfig {
+            expected_workers: 1,
+            epoch: 0xC2,
+            grace_ms: 60_000,
+        },
+    );
+    let worker = spawn_worker(&net, &store, &kernel, Some(2));
+
+    let err = coord
+        .run(&ClusterJob {
+            name: "sort".into(),
+            input_prefix: "in/".into(),
+            output_prefix: "out/".into(),
+            reducers: 2,
+            split_size: 250 * RECORD_SIZE as u64,
+            sample_objects: 0,
+        })
+        .expect_err("losing every worker must fail the job");
+    match &err {
+        Error::Job(msg) => {
+            assert!(
+                msg.contains("all workers lost"),
+                "status must name the cause: {msg}"
+            );
+            assert!(
+                msg.contains("stranded"),
+                "status must count the stranded tasks: {msg}"
+            );
+        }
+        other => panic!("expected Error::Job, got {other}"),
+    }
+    coord.shutdown();
+
+    let summary = worker.join().unwrap();
+    assert!(summary.died);
+    assert_eq!(summary.tasks_done, 1, "one map completed before the kill");
+
+    // Failure leaves the evidence in place: the completed map's spills.
+    assert!(
+        !store.list(SHUFFLE_NS).is_empty(),
+        "failed jobs keep their shuffle residue for recovery to reap"
+    );
+
+    // Recovery — not the coordinator — owns post-crash cleanup.
+    let report = pfs.recover().unwrap();
+    assert!(report.shuffle_reaped > 0, "{report:?}");
+    assert!(
+        store.list(SHUFFLE_NS).is_empty(),
+        "recover() must reap the shuffle namespace"
+    );
+    // The input survives recovery untouched.
+    let (in_records, _) = terasort::input_checksum(store.as_ref(), "in/").unwrap();
+    assert_eq!(in_records, 1_000);
+}

@@ -1,0 +1,237 @@
+//! Real-TCP cluster smoke test: coordinator + two workers + two PFS
+//! stripe servers as separate OS processes on 127.0.0.1 ephemeral
+//! ports, exercising the same scenario the loopback chaos suite proves
+//! deterministically — one worker killed mid-TeraSort via
+//! `--die-after-tasks`, the job completing through re-execution.
+//!
+//! Per-process stdout/stderr land under `target/cluster-logs/` so CI
+//! can upload them as artifacts when the test fails.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use tlstore::testing::TempDir;
+
+const BIN: &str = env!("CARGO_BIN_EXE_tlstore");
+const DEADLINE: Duration = Duration::from_secs(120);
+
+fn log_dir() -> PathBuf {
+    // The crate lives in a workspace, so `target/` sits next to the
+    // workspace root, one level above CARGO_MANIFEST_DIR.
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let dir = manifest
+        .parent()
+        .unwrap_or(&manifest)
+        .join("target")
+        .join("cluster-logs");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+struct Role {
+    name: &'static str,
+    child: Child,
+    stdout: mpsc::Receiver<String>,
+}
+
+impl Role {
+    /// Spawn a `tlstore cluster` role with piped output; stdout lines
+    /// stream through a channel (and into the log file) so the test can
+    /// wait for the "listening on" banner without polling.
+    fn spawn(name: &'static str, args: &[String]) -> Role {
+        let mut child = Command::new(BIN)
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .unwrap_or_else(|e| panic!("spawn {name}: {e}"));
+        let (tx, rx) = mpsc::channel();
+        let out = child.stdout.take().unwrap();
+        let log = log_dir().join(format!("{name}.log"));
+        std::thread::spawn(move || {
+            let mut file = std::fs::File::create(&log).unwrap();
+            for line in BufReader::new(out).lines().map_while(Result::ok) {
+                writeln!(file, "{line}").ok();
+                let _ = tx.send(line);
+            }
+        });
+        let err = child.stderr.take().unwrap();
+        let errlog = log_dir().join(format!("{name}.stderr.log"));
+        std::thread::spawn(move || {
+            let mut buf = String::new();
+            let mut err = err;
+            err.read_to_string(&mut buf).ok();
+            std::fs::write(&errlog, buf).ok();
+        });
+        Role {
+            name,
+            child,
+            stdout: rx,
+        }
+    }
+
+    /// Block (with deadline) until a stdout line contains `needle`;
+    /// returns the full line.
+    fn wait_for_line(&self, needle: &str, deadline: Instant) -> String {
+        loop {
+            let left = deadline
+                .checked_duration_since(Instant::now())
+                .unwrap_or_else(|| panic!("{}: timed out waiting for {needle:?}", self.name));
+            match self.stdout.recv_timeout(left) {
+                Ok(line) if line.contains(needle) => return line,
+                Ok(_) => continue,
+                Err(e) => panic!("{}: stdout closed waiting for {needle:?}: {e}", self.name),
+            }
+        }
+    }
+
+    /// Wait for exit (with deadline) and return (status, remaining
+    /// stdout lines).
+    fn join(mut self, deadline: Instant) -> (std::process::ExitStatus, Vec<String>) {
+        let status = loop {
+            if let Some(s) = self.child.try_wait().unwrap() {
+                break s;
+            }
+            if Instant::now() >= deadline {
+                let _ = self.child.kill();
+                panic!("{}: did not exit before the deadline", self.name);
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        };
+        // The reader thread may still be flushing the tail of the pipe;
+        // drain until it hits EOF and drops its sender.
+        let mut lines = Vec::new();
+        while let Ok(line) = self.stdout.recv_timeout(Duration::from_secs(10)) {
+            lines.push(line);
+        }
+        (status, lines)
+    }
+
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn addr_of(line: &str) -> String {
+    line.rsplit(' ').next().unwrap().trim().to_string()
+}
+
+#[test]
+fn tcp_cluster_survives_worker_kill() {
+    let deadline = Instant::now() + DEADLINE;
+    let roots = TempDir::new("cluster-tcp").unwrap();
+
+    // Two PFS stripe servers on ephemeral ports.
+    let mut pfs_addrs = Vec::new();
+    let mut pfs = Vec::new();
+    for i in 0..2 {
+        let role = Role::spawn(
+            if i == 0 { "pfs-0" } else { "pfs-1" },
+            &[
+                "cluster".into(),
+                "pfs-server".into(),
+                "--listen".into(),
+                "127.0.0.1:0".into(),
+                "--root".into(),
+                roots.path().join(format!("pfs{i}")).display().to_string(),
+            ],
+        );
+        pfs_addrs.push(addr_of(&role.wait_for_line("pfs-server listening on", deadline)));
+        pfs.push(role);
+    }
+    let pfs_list = pfs_addrs.join(",");
+
+    // Coordinator: generates 2000 records (8 objects → 8 map splits),
+    // expects 2 workers, fixed epoch for a stable job id.
+    let coordinator = Role::spawn(
+        "coordinator",
+        &[
+            "cluster".into(),
+            "coordinator".into(),
+            "--listen".into(),
+            "127.0.0.1:0".into(),
+            "--workers".into(),
+            "2".into(),
+            "--pfs".into(),
+            pfs_list.clone(),
+            "--records".into(),
+            "2000".into(),
+            "--records-per-object".into(),
+            "250".into(),
+            "--reducers".into(),
+            "3".into(),
+            "--split-size".into(),
+            "25000".into(),
+            "--seed".into(),
+            "42".into(),
+            "--epoch".into(),
+            "7".into(),
+            "--grace-ms".into(),
+            "60000".into(),
+        ],
+    );
+    let coord_addr = addr_of(&coordinator.wait_for_line("coordinator listening on", deadline));
+
+    let worker_args = |extra: &[&str]| -> Vec<String> {
+        let mut v: Vec<String> = vec![
+            "cluster".into(),
+            "worker".into(),
+            "--coordinator".into(),
+            coord_addr.clone(),
+            "--pfs".into(),
+            pfs_list.clone(),
+        ];
+        v.extend(extra.iter().map(|s| s.to_string()));
+        v
+    };
+    let survivor = Role::spawn("worker-survivor", &worker_args(&[]));
+    let casualty = Role::spawn(
+        "worker-casualty",
+        &worker_args(&["--die-after-tasks", "1"]),
+    );
+
+    // The coordinator is the arbiter: it validates the sorted output
+    // before exiting 0.
+    let (status, lines) = coordinator.join(deadline);
+    let stdout = lines.join("\n");
+    assert!(
+        status.success(),
+        "coordinator failed ({status}); logs in target/cluster-logs/\n{stdout}"
+    );
+    assert!(
+        stdout.contains("lost 1"),
+        "coordinator must report the killed worker:\n{stdout}"
+    );
+    let reexec = lines
+        .iter()
+        .find(|l| l.starts_with("re-executed tasks: "))
+        .unwrap_or_else(|| panic!("missing re-execution evidence:\n{stdout}"));
+    assert!(
+        !reexec.contains("[]"),
+        "the killed worker's task must be re-executed: {reexec}"
+    );
+    assert!(
+        stdout.contains("sorted=true"),
+        "TeraValidate must pass:\n{stdout}"
+    );
+
+    let (s_status, _) = survivor.join(deadline);
+    assert!(s_status.success(), "survivor worker failed ({s_status})");
+    let (c_status, c_lines) = casualty.join(deadline);
+    assert!(
+        c_status.success(),
+        "casualty exits cleanly after its injected death ({c_status})"
+    );
+    assert!(
+        c_lines.iter().any(|l| l.contains("died (injected)")),
+        "casualty must report the injected death: {c_lines:?}"
+    );
+
+    for p in pfs {
+        p.kill();
+    }
+}

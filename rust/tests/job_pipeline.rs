@@ -41,6 +41,7 @@ fn server(store: Arc<dyn ObjectStore>, max_jobs: usize) -> JobServer {
             shuffle_spill_threshold: 0,
             shuffle_chunk: 4 << 10, // small windows: many read_at refills
             split_buffer: 1 << 16,
+            cluster_epoch: 0,
         },
     )
 }
