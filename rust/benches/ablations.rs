@@ -12,6 +12,8 @@
 //!
 //! Run: `cargo bench --bench ablations`
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
 use tlstore::bench::{header, Bencher};
 use tlstore::storage::eviction;
 use tlstore::storage::memstore::MemStore;

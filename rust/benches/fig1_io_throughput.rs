@@ -17,6 +17,8 @@
 //!
 //! Run: `cargo bench --bench fig1_io_throughput`
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
 use std::sync::Arc;
 use std::time::Instant;
 

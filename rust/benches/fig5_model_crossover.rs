@@ -8,6 +8,8 @@
 //!
 //! Run: `cargo bench --bench fig5_model_crossover`
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
 use tlstore::model::{CaseStudyParams, ClusterParams};
 
 fn series(b_mbs: f64) {

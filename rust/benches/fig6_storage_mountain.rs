@@ -11,6 +11,8 @@
 //!
 //! Run: `cargo bench --bench fig6_storage_mountain`
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
 use tlstore::sim::mountain::{mountain_point, MountainParams};
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
 use tlstore::storage::{ReadMode, WriteMode};

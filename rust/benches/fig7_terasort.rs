@@ -13,6 +13,8 @@
 //!
 //! Run: `cargo bench --bench fig7_terasort`
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
 use std::path::Path;
 use std::sync::Arc;
 
@@ -49,8 +51,8 @@ fn paper_scale() {
             r.backend, r.map_time, r.reduce_time
         );
         for series in ["cpu0", "disk0", "ram0", "nic0", "raidr0", "raidw0", "dnic0"] {
-            let map_u = r.result_map.timelines.get(series).map(|t| t.mean()).unwrap_or(0.0);
-            let red_u = r.result_reduce.timelines.get(series).map(|t| t.mean()).unwrap_or(0.0);
+            let map_u = r.result_map.timelines.get(series).map_or(0.0, |t| t.mean());
+            let red_u = r.result_reduce.timelines.get(series).map_or(0.0, |t| t.mean());
             println!("  {series:<8} map {:5.1}%   reduce {:5.1}%", map_u * 100.0, red_u * 100.0);
         }
         results.push(r);

@@ -1,0 +1,424 @@
+//! A hand-rolled Rust lexer: just enough tokenization for contract
+//! linting — comments, string/char literals, identifiers, and
+//! punctuation, each tagged with its source line.
+//!
+//! This is deliberately **not** a parser. The rules in
+//! [`crate::rules`] work on token patterns (`.unwrap(`,
+//! `Dec::new(`, brace-matched regions), which a token stream with
+//! accurate literal/comment boundaries supports without a grammar.
+//! The two properties the rules actually depend on are:
+//!
+//! 1. text inside comments and string literals never produces
+//!    identifier or punctuation tokens (so `"call .unwrap()"` in a
+//!    doc string cannot trip the no-panic rule), and
+//! 2. every token knows its 1-based source line (so findings and
+//!    `lint:allow` escapes line up with what an editor shows).
+
+/// One lexed token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`unwrap`, `let`, `_`, `r#match`, ...).
+    Ident(String),
+    /// String literal — cooked, raw, byte, or raw-byte — with the
+    /// *content* (quotes and `r#` framing stripped, escapes left as
+    /// written). Rules only prefix-match, so unprocessed escapes are
+    /// fine.
+    Str(String),
+    /// Character or byte literal (`'a'`, `b'\n'`). Content unused.
+    Char,
+    /// Lifetime (`'a`, `'static`). Distinguished from [`Tok::Char`]
+    /// so `&'a str` never swallows code as a char literal.
+    Lifetime,
+    /// Numeric literal. Content unused by any rule.
+    Num,
+    /// Single punctuation character (`.`, `(`, `!`, `;`, ...).
+    /// Multi-character operators arrive as consecutive tokens.
+    Punct(char),
+}
+
+/// A token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    /// What was lexed.
+    pub tok: Tok,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+/// A line comment's text and position (block comments are folded into
+/// one entry per comment, tagged with their first line).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// Comment text without the `//` / `/*` framing.
+    pub text: String,
+    /// 1-based line the comment starts on.
+    pub line: u32,
+}
+
+/// Full lexer output: code tokens plus the comment sidecar (comments
+/// are where `lint:allow` escapes live).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// Code tokens in source order.
+    pub tokens: Vec<Token>,
+    /// Comments in source order.
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src`. Unterminated constructs (string/comment running off the
+/// end of the file) terminate the affected token at EOF rather than
+/// erroring: the linter's job is scanning code that `rustc` already
+/// accepts, so graceful degradation beats diagnostics here.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let start = i + 2;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                out.comments.push(Comment {
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                let start_line = line;
+                let start = i + 2;
+                i += 2;
+                let mut depth = 1u32;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == b'\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                let end = i.saturating_sub(2).max(start);
+                out.comments.push(Comment {
+                    text: src[start..end].to_string(),
+                    line: start_line,
+                });
+            }
+            b'r' | b'b' if is_raw_or_byte_string(b, i) => {
+                let tok_line = line;
+                let (tok, next) = lex_prefixed_string(src, i, &mut line);
+                out.tokens.push(Token {
+                    tok,
+                    line: tok_line,
+                });
+                i = next;
+            }
+            b'"' => {
+                let tok_line = line;
+                let (content, next) = lex_cooked_string(src, i + 1, &mut line);
+                out.tokens.push(Token {
+                    tok: Tok::Str(content),
+                    line: tok_line,
+                });
+                i = next;
+            }
+            b'\'' => {
+                // lifetime vs char literal: a lifetime is `'` + ident
+                // with no closing quote right after one ident-char run
+                let (tok, next) = lex_quote(src, i, &mut line);
+                out.tokens.push(Token { tok, line });
+                i = next;
+            }
+            _ if c.is_ascii_digit() => {
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || b[i] == b'_' || b[i] == b'.')
+                {
+                    // avoid eating `..` range operators or method calls
+                    if b[i] == b'.' && (i + 1 >= b.len() || !b[i + 1].is_ascii_digit()) {
+                        break;
+                    }
+                    i += 1;
+                }
+                out.tokens.push(Token {
+                    tok: Tok::Num,
+                    line,
+                });
+            }
+            _ if c == b'_' || c.is_ascii_alphabetic() => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                out.tokens.push(Token {
+                    tok: Tok::Ident(src[start..i].to_string()),
+                    line,
+                });
+            }
+            _ => {
+                out.tokens.push(Token {
+                    tok: Tok::Punct(c as char),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Does `b[i..]` start a raw/byte string (`r"`, `r#"`, `b"`, `br#"`,
+/// `b'`)? Plain identifiers starting with `r`/`b` must fall through to
+/// ident lexing.
+fn is_raw_or_byte_string(b: &[u8], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+        if j < b.len() && b[j] == b'\'' {
+            return true; // byte char b'x'
+        }
+    }
+    if j < b.len() && b[j] == b'r' {
+        j += 1;
+        while j < b.len() && b[j] == b'#' {
+            j += 1;
+        }
+    }
+    j < b.len() && b[j] == b'"' && j > i
+}
+
+/// Lex a string/char with an `r`/`b`/`br` prefix starting at `i`.
+/// Returns the token and the index just past it.
+fn lex_prefixed_string(src: &str, i: usize, line: &mut u32) -> (Tok, usize) {
+    let b = src.as_bytes();
+    let mut j = i;
+    let mut raw = false;
+    if b[j] == b'b' {
+        j += 1;
+        if j < b.len() && b[j] == b'\'' {
+            let (_, next) = lex_quote(src, j, line);
+            return (Tok::Char, next);
+        }
+    }
+    let mut hashes = 0usize;
+    if j < b.len() && b[j] == b'r' {
+        raw = true;
+        j += 1;
+        while j < b.len() && b[j] == b'#' {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    debug_assert!(j < b.len() && b[j] == b'"');
+    j += 1; // past the opening quote
+    let start = j;
+    if raw {
+        // scan for `"` followed by `hashes` hash marks
+        while j < b.len() {
+            if b[j] == b'\n' {
+                *line += 1;
+            }
+            if b[j] == b'"' && src.as_bytes()[j + 1..].iter().take(hashes).filter(|&&h| h == b'#').count() == hashes {
+                let content = src[start..j].to_string();
+                return (Tok::Str(content), j + 1 + hashes);
+            }
+            j += 1;
+        }
+        (Tok::Str(src[start..].to_string()), b.len())
+    } else {
+        let (content, next) = lex_cooked_string(src, j, line);
+        (Tok::Str(content), next)
+    }
+}
+
+/// Lex a cooked (escaped) string whose opening `"` sits just before
+/// `start`. Returns content and the index past the closing quote.
+fn lex_cooked_string(src: &str, start: usize, line: &mut u32) -> (String, usize) {
+    let b = src.as_bytes();
+    let mut j = start;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2, // skip the escaped byte (incl. \" and \\)
+            b'"' => return (src[start..j].to_string(), j + 1),
+            b'\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    (src[start..].to_string(), b.len())
+}
+
+/// Lex from a `'`: a char literal or a lifetime.
+fn lex_quote(src: &str, i: usize, line: &mut u32) -> (Tok, usize) {
+    let b = src.as_bytes();
+    let mut j = i + 1;
+    if j < b.len() && b[j] == b'\\' {
+        // escaped char literal: skip escape, scan to closing quote
+        j += 2;
+        while j < b.len() && b[j] != b'\'' {
+            j += 1;
+        }
+        return (Tok::Char, (j + 1).min(b.len()));
+    }
+    // one ident-ish run after the quote
+    let run_start = j;
+    while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'\'' && j > run_start {
+        (Tok::Char, j + 1) // 'a' or 'word'-less single char
+    } else if j > run_start {
+        (Tok::Lifetime, j) // 'a with no closing quote
+    } else if j + 1 < b.len() && b[j + 1] == b'\'' {
+        // single punctuation char literal: '"', '.', '[' — the '"'
+        // case matters most, or the quote would open a phantom
+        // string and flip string-parity for the rest of the file
+        let _ = line;
+        (Tok::Char, j + 2)
+    } else {
+        // `'(`? Not valid Rust; emit punct to keep scanning
+        (Tok::Punct('\''), i + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_hide_code() {
+        let l = lex("let a = 1; // x.unwrap()\n/* b.expect( */ let c = 2;");
+        assert_eq!(
+            idents("let a = 1; // x.unwrap()\n/* b.expect( */ let c = 2;"),
+            vec!["let", "a", "let", "c"]
+        );
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].text.contains("unwrap"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        assert_eq!(idents("/* a /* b */ c.unwrap() */ fin"), vec!["fin"]);
+    }
+
+    #[test]
+    fn strings_hide_code_and_survive_escapes() {
+        let l = lex(r#"let s = "call .unwrap() \" here"; done"#);
+        let strs: Vec<_> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].contains("unwrap"));
+        assert_eq!(idents(r#"let s = "x.unwrap()"; done"#), vec!["let", "s", "done"]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let l = lex(r##"let a = r#"raw "quoted" body"#; let b = b"bytes";"##);
+        let strs: Vec<_> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, vec![r#"raw "quoted" body"#.to_string(), "bytes".to_string()]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes = l.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        let chars = l.tokens.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 1);
+    }
+
+    #[test]
+    fn escaped_char_literals() {
+        let l = lex(r"let nl = '\n'; let q = '\''; after");
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Char).count(), 2);
+        assert!(idents(r"let nl = '\n'; after").contains(&"after".to_string()));
+    }
+
+    #[test]
+    fn punctuation_char_literals_do_not_open_strings() {
+        // a '"' char literal must not flip string-parity: the code
+        // after it still lexes as code, and no Str token appears
+        let l = lex(r#"let q = '"'; hidden.unwrap(); let s = ".x/";"#);
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Char).count(), 1);
+        let strs: Vec<_> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, vec![".x/".to_string()]);
+        assert!(idents(r#"let q = '"'; hidden"#).contains(&"hidden".to_string()));
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_constructs() {
+        let src = "a\n/* c1\nc2 */\n\"s1\ns2\"\nb";
+        let l = lex(src);
+        let b_tok = l
+            .tokens
+            .iter()
+            .find(|t| t.tok == Tok::Ident("b".into()))
+            .unwrap();
+        assert_eq!(b_tok.line, 6);
+    }
+
+    #[test]
+    fn underscore_is_an_ident() {
+        assert_eq!(idents("let _ = x;"), vec!["let", "_", "x"]);
+    }
+
+    #[test]
+    fn punctuation_tokens_carry_chars() {
+        let l = lex("a.b(!);");
+        let puncts: Vec<char> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match t.tok {
+                Tok::Punct(c) => Some(c),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(puncts, vec!['.', '(', '!', ')', ';']);
+    }
+}

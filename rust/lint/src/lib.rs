@@ -1,0 +1,354 @@
+//! `tlstore-lint`: a zero-dependency invariant checker for the
+//! tlstore codebase.
+//!
+//! The crate lexes Rust source ([`lexer`]) and runs seven
+//! repo-specific contract rules ([`rules`]) over the token stream —
+//! no `syn`, no `rustc` internals, no external crates. The rules
+//! encode decisions this repo already made (panic-free library code,
+//! logged cleanup, registered key namespaces, single-shard locking)
+//! so they stay made as the code grows.
+//!
+//! Escape hatch: a comment of the form
+//!
+//! ```text
+//! // lint:allow(no-panic): <why this site is sound>
+//! ```
+//!
+//! suppresses that rule from the comment's line through the end of
+//! the statement that follows (first subsequent line whose last code
+//! token is `;`, `,`, `{`, or `}`). An allow with an unknown rule
+//! name or an empty justification is itself a finding — escapes are
+//! audited, not free.
+
+/// The hand-rolled token/comment lexer.
+pub mod lexer;
+/// The seven contract rules.
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use lexer::{Comment, Tok};
+
+/// The canonical reserved key namespaces, used when
+/// `storage/layout.rs` cannot be located or parsed (e.g. linting a
+/// single file outside a checkout). Kept in sync by the layout
+/// registry test on the tlstore side.
+pub const FALLBACK_PREFIXES: [&str; 4] = [".wip/", ".dirty/", ".shuffle/", ".quarantine/"];
+
+/// One rule violation (or malformed escape) at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the linted source root (slash-separated).
+    pub file: String,
+    /// 1-based line of the offending token.
+    pub line: u32,
+    /// Rule name (one of [`rules::RULES`]).
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl Finding {
+    /// Build a finding with the file path left for the engine to fill.
+    pub fn new(rule: &'static str, line: u32, message: String) -> Self {
+        Finding {
+            file: String::new(),
+            line,
+            rule,
+            message,
+        }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// A parsed `lint:allow(<rule>): <justification>` escape comment.
+#[derive(Debug, Clone)]
+struct Allow {
+    rule: String,
+    line: u32,
+}
+
+/// Extract well-formed allows from comments; malformed ones (unknown
+/// rule, missing/empty justification) become `lint-allow` findings.
+fn parse_allows(comments: &[Comment], findings: &mut Vec<Finding>) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for c in comments {
+        let Some(at) = c.text.find("lint:allow(") else {
+            continue;
+        };
+        let rest = &c.text[at + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            findings.push(Finding::new(
+                "lint-allow",
+                c.line,
+                "malformed escape: missing `)` after rule name".to_string(),
+            ));
+            continue;
+        };
+        let rule = rest[..close].trim();
+        if !rules::is_known_rule(rule) {
+            findings.push(Finding::new(
+                "lint-allow",
+                c.line,
+                format!("escape names unknown rule `{rule}`"),
+            ));
+            continue;
+        }
+        let tail = &rest[close + 1..];
+        let justification = tail.strip_prefix(':').map_or("", str::trim);
+        if justification.is_empty() {
+            findings.push(Finding::new(
+                "lint-allow",
+                c.line,
+                format!("escape for `{rule}` has no justification (use `lint:allow({rule}): <why>`)"),
+            ));
+            continue;
+        }
+        allows.push(Allow {
+            rule: rule.to_string(),
+            line: c.line,
+        });
+    }
+    allows
+}
+
+/// End-of-statement terminators for the allow window: a line whose
+/// last code token is one of these closes the suppressed statement.
+fn is_terminator(t: &Tok) -> bool {
+    matches!(t, Tok::Punct(';') | Tok::Punct(',') | Tok::Punct('{') | Tok::Punct('}'))
+}
+
+/// Longest statement an allow window may span, in lines of code. A
+/// cap keeps a stray escape comment from silencing a whole file.
+const ALLOW_WINDOW_CAP: u32 = 12;
+
+/// Compute each allow's suppression window `[start, end]` in lines:
+/// from the comment's line through the first subsequent line of code
+/// ending in a statement terminator (`;`, `,`, `{`, `}`).
+fn allow_windows(allows: &[Allow], last_tok_on_line: &BTreeMap<u32, Tok>) -> Vec<(String, u32, u32)> {
+    allows
+        .iter()
+        .map(|a| {
+            let cap = a.line + ALLOW_WINDOW_CAP;
+            let mut end = a.line;
+            for (&line, tok) in last_tok_on_line.range(a.line..=cap) {
+                end = line;
+                if is_terminator(tok) {
+                    break;
+                }
+            }
+            (a.rule.clone(), a.line, end)
+        })
+        .collect()
+}
+
+/// Lint one file's source text. `rel_path` is the slash-separated
+/// path relative to the linted source root (it selects which rules
+/// and exemptions apply); `registry` is the reserved-prefix list.
+pub fn lint_source(rel_path: &str, src: &str, registry: &[String]) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let toks = &lexed.tokens;
+    let regions = rules::test_regions(toks);
+    let mut findings = Vec::new();
+
+    let entry_point = rel_path == "main.rs"
+        || rel_path == "cli.rs"
+        || rel_path.starts_with("bench/");
+    let test_harness = rel_path.starts_with("testing/");
+
+    if !entry_point && !test_harness {
+        rules::no_panic(toks, &regions, &mut findings);
+    }
+    rules::no_discarded_cleanup(toks, &regions, &mut findings);
+    rules::decoder_must_finish(toks, &regions, &mut findings);
+    if rel_path != "storage/layout.rs" {
+        rules::reserved_prefix(toks, &regions, registry, &mut findings);
+    }
+    if rel_path != "storage/fault.rs" {
+        rules::forget_outside_fault(toks, &regions, &mut findings);
+    }
+    if !entry_point {
+        rules::no_println(toks, &regions, &mut findings);
+    }
+    if rel_path.starts_with("storage/") {
+        rules::one_shard_lock(toks, &regions, &mut findings);
+    }
+
+    // escape handling: malformed allows are findings, well-formed
+    // ones suppress their rule inside the statement window
+    let mut meta = Vec::new();
+    let allows = parse_allows(&lexed.comments, &mut meta);
+    let mut last_tok_on_line: BTreeMap<u32, Tok> = BTreeMap::new();
+    for t in toks {
+        last_tok_on_line.insert(t.line, t.tok.clone());
+    }
+    let windows = allow_windows(&allows, &last_tok_on_line);
+    findings.retain(|f| {
+        !windows
+            .iter()
+            .any(|(rule, start, end)| rule.as_str() == f.rule && f.line >= *start && f.line <= *end)
+    });
+    findings.extend(meta);
+
+    for f in &mut findings {
+        f.file = rel_path.to_string();
+    }
+    findings.sort_by_key(|f| f.line);
+    findings
+}
+
+/// Parse `RESERVED_PREFIXES` out of `storage/layout.rs` source: the
+/// string literals between the `[` and `]` following the constant's
+/// identifier. Returns `None` if the declaration isn't found.
+pub fn parse_registry(layout_src: &str) -> Option<Vec<String>> {
+    let toks = lexer::lex(layout_src).tokens;
+    let at = toks
+        .iter()
+        .position(|t| t.tok == Tok::Ident("RESERVED_PREFIXES".to_string()))?;
+    let open = toks[at..].iter().position(|t| t.tok == Tok::Punct('['))? + at;
+    let mut prefixes = Vec::new();
+    for t in &toks[open + 1..] {
+        match &t.tok {
+            Tok::Str(s) => prefixes.push(s.clone()),
+            Tok::Punct(']') => break,
+            _ => {}
+        }
+    }
+    if prefixes.is_empty() {
+        None
+    } else {
+        Some(prefixes)
+    }
+}
+
+/// Load the reserved-prefix registry for a source root: parse it from
+/// `<src_root>/storage/layout.rs`, falling back to
+/// [`FALLBACK_PREFIXES`] when the file is absent or unparseable.
+pub fn load_registry(src_root: &Path) -> Vec<String> {
+    fs::read_to_string(src_root.join("storage").join("layout.rs"))
+        .ok()
+        .and_then(|src| parse_registry(&src))
+        .unwrap_or_else(|| FALLBACK_PREFIXES.iter().map(|s| (*s).to_string()).collect())
+}
+
+/// Recursively collect every `.rs` file under `root`, sorted by
+/// relative path for deterministic output.
+fn collect_rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Lint every `.rs` file under `src_root` (a tlstore `rust/src`-style
+/// tree). Findings are ordered by file path, then line.
+pub fn lint_tree(src_root: &Path) -> io::Result<Vec<Finding>> {
+    let registry = load_registry(src_root);
+    let mut findings = Vec::new();
+    for path in collect_rs_files(src_root)? {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&path)?;
+        findings.extend(lint_source(&rel, &src, &registry));
+    }
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> Vec<String> {
+        FALLBACK_PREFIXES.iter().map(|s| (*s).to_string()).collect()
+    }
+
+    #[test]
+    fn allow_suppresses_through_statement_end() {
+        let src = "\
+fn f(x: Option<u32>) -> u32 {
+    // lint:allow(no-panic): exercised by the window test
+    x.map(|v| v + 1)
+        .unwrap()
+}
+";
+        assert!(lint_source("a.rs", src, &reg()).is_empty());
+    }
+
+    #[test]
+    fn allow_does_not_leak_past_statement() {
+        let src = "\
+fn f(x: Option<u32>, y: Option<u32>) -> u32 {
+    // lint:allow(no-panic): covers only the next statement
+    let a = x.unwrap();
+    a + y.unwrap()
+}
+";
+        let f = lint_source("a.rs", src, &reg());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn allow_without_justification_is_a_finding() {
+        let src = "\
+fn f(x: Option<u32>) -> u32 {
+    // lint:allow(no-panic):
+    x.unwrap()
+}
+";
+        let f = lint_source("a.rs", src, &reg());
+        assert!(f.iter().any(|f| f.rule == "lint-allow"), "{f:?}");
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_is_a_finding() {
+        let src = "// lint:allow(no-such-rule): nope\nfn f() {}\n";
+        let f = lint_source("a.rs", src, &reg());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "lint-allow");
+    }
+
+    #[test]
+    fn registry_parses_from_layout_source() {
+        let layout = r#"
+/// Registered namespaces.
+pub const RESERVED_PREFIXES: [&str; 2] = [".wip/", ".dirty/"];
+"#;
+        assert_eq!(
+            parse_registry(layout).unwrap(),
+            vec![".wip/".to_string(), ".dirty/".to_string()]
+        );
+    }
+
+    #[test]
+    fn entry_points_may_print_and_unwrap() {
+        let src = "fn main() { println!(\"x\"); foo().unwrap(); }\n";
+        assert!(lint_source("main.rs", src, &reg()).is_empty());
+        assert!(!lint_source("storage/tls.rs", src, &reg()).is_empty());
+    }
+}

@@ -1,0 +1,190 @@
+//! CLI for the tlstore invariant checker.
+//!
+//! ```text
+//! tlstore-lint [--json] [--fix-plan] [paths...]
+//! ```
+//!
+//! With no paths, the tool walks ancestors of the working directory
+//! looking for a `rust/src/lib.rs` (a tlstore checkout) and lints
+//! that tree. Paths may be directories (linted recursively) or
+//! single `.rs` files. Exit status: 0 clean, 1 findings, 2 usage or
+//! I/O error.
+//!
+//! `--json` emits findings as a machine-readable JSON array;
+//! `--fix-plan` groups findings by rule and appends the standard
+//! remediation for each, for piping into an editor or a tracking
+//! issue.
+
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use tlstore_lint::{lint_source, lint_tree, load_registry, rules, Finding};
+
+/// What to do for each rule when `--fix-plan` is requested.
+fn remediation(rule: &str) -> &'static str {
+    match rule {
+        "no-panic" => {
+            "propagate with `?`/restructure, or justify with `// lint:allow(no-panic): <why>`"
+        }
+        "no-discarded-cleanup" => {
+            "replace `let _ =` with `if let Err(e) = ... { crate::log_warn!(...) }` or propagate"
+        }
+        "decoder-must-finish" => "call `d.finish()?` before returning the decoded value",
+        "reserved-prefix" => {
+            "register the namespace in storage::layout::RESERVED_PREFIXES (and teach recovery about it)"
+        }
+        "forget-outside-fault" => "move the leak into storage/fault.rs or use a scoped guard",
+        "no-println" => "use crate::log_info!/log_warn! (or move the print into main.rs/cli.rs)",
+        "one-shard-lock" => "hoist one acquisition into its own `{ }` scope so the guards never overlap",
+        "lint-allow" => "fix the escape comment: `// lint:allow(<known-rule>): <non-empty why>`",
+        _ => "see docs/STATIC_ANALYSIS.md",
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Locate a tlstore `rust/src` tree from `start` upwards.
+fn find_default_root(start: &Path) -> Option<PathBuf> {
+    start.ancestors().find_map(|dir| {
+        let candidate = dir.join("rust").join("src");
+        if candidate.join("lib.rs").is_file() {
+            return Some(candidate);
+        }
+        // already inside rust/ (e.g. cwd == rust/ or rust/lint/)
+        let sibling = dir.join("src");
+        if sibling.join("lib.rs").is_file() && dir.file_name().is_some_and(|n| n == "rust") {
+            return Some(sibling);
+        }
+        None
+    })
+}
+
+fn run() -> Result<Vec<Finding>, String> {
+    let mut json = false;
+    let mut fix_plan = false;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--fix-plan" => fix_plan = true,
+            "--help" | "-h" => {
+                println!("usage: tlstore-lint [--json] [--fix-plan] [paths...]");
+                println!("rules: {}", rules::RULES.join(", "));
+                return Ok(Vec::new());
+            }
+            other if other.starts_with('-') => {
+                return Err(format!("unknown flag `{other}`"));
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+
+    if paths.is_empty() {
+        let cwd = std::env::current_dir().map_err(|e| format!("cwd: {e}"))?;
+        let root = find_default_root(&cwd)
+            .ok_or("no rust/src tree found from the working directory; pass a path")?;
+        paths.push(root);
+    }
+
+    let mut findings = Vec::new();
+    for path in &paths {
+        if path.is_dir() {
+            findings
+                .extend(lint_tree(path).map_err(|e| format!("{}: {e}", path.display()))?);
+        } else {
+            let src = std::fs::read_to_string(path)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            // file mode: derive a src-relative path so per-file rule
+            // exemptions (main.rs, storage/, ...) still apply
+            let rel = path
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>();
+            let rel = match rel.iter().rposition(|c| c == "src") {
+                Some(i) => rel[i + 1..].join("/"),
+                None => rel.last().cloned().unwrap_or_default(),
+            };
+            let registry = path
+                .ancestors()
+                .find(|d| d.join("storage").join("layout.rs").is_file())
+                .map_or_else(
+                    || {
+                        tlstore_lint::FALLBACK_PREFIXES
+                            .iter()
+                            .map(|s| (*s).to_string())
+                            .collect()
+                    },
+                    load_registry,
+                );
+            findings.extend(lint_source(&rel, &src, &registry));
+        }
+    }
+
+    if json {
+        let rows: Vec<String> = findings
+            .iter()
+            .map(|f| {
+                format!(
+                    "  {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+                    json_escape(&f.file),
+                    f.line,
+                    f.rule,
+                    json_escape(&f.message)
+                )
+            })
+            .collect();
+        println!("[\n{}\n]", rows.join(",\n"));
+    } else if fix_plan {
+        for rule in rules::RULES {
+            let hits: Vec<&Finding> = findings.iter().filter(|f| f.rule == rule).collect();
+            if hits.is_empty() {
+                continue;
+            }
+            println!("## {rule} ({} finding(s))", hits.len());
+            println!("   fix: {}", remediation(rule));
+            for f in hits {
+                println!("   - {}:{}: {}", f.file, f.line, f.message);
+            }
+        }
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+    }
+    if !json {
+        eprintln!(
+            "tlstore-lint: {} finding(s) across {} path(s)",
+            findings.len(),
+            paths.len()
+        );
+    }
+    Ok(findings)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(findings) if findings.is_empty() => ExitCode::SUCCESS,
+        Ok(_) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("tlstore-lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

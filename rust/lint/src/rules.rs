@@ -1,0 +1,467 @@
+//! The seven contract rules, evaluated over a [`crate::lexer`] token
+//! stream.
+//!
+//! Each rule is a repo-specific invariant the tlstore codebase commits
+//! to (see `docs/STATIC_ANALYSIS.md` for the rationale behind each):
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | `no-panic`              | no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` in library code |
+//! | `no-discarded-cleanup`  | no `let _ =` on storage cleanup calls (`delete`/`abort`/`reap_*`/`purge_*`) |
+//! | `decoder-must-finish`   | every fn constructing a wire `Dec` also calls `finish(` |
+//! | `reserved-prefix`       | `".name/"` key-prefix literals must be registered in `RESERVED_PREFIXES` |
+//! | `forget-outside-fault`  | `mem::forget` only in `storage/fault.rs` |
+//! | `no-println`            | `println!`/`eprintln!`/`print!`/`eprint!` only in `main.rs`/`cli.rs`/`bench/` |
+//! | `one-shard-lock`        | at most one shard-lock acquisition per lexical block in `storage/` |
+//!
+//! Rules operate on tokens, not an AST: the matching is documented
+//! per rule, including the approximations (a token linter trades a
+//! little precision for zero dependencies and total transparency —
+//! every rule is a visible pattern, not a query into someone else's
+//! IR).
+
+use crate::lexer::{Tok, Token};
+use crate::Finding;
+
+/// Names of all rules, in reporting order. `lint-allow` is the meta
+/// rule for malformed escape comments.
+pub const RULES: [&str; 8] = [
+    "no-panic",
+    "no-discarded-cleanup",
+    "decoder-must-finish",
+    "reserved-prefix",
+    "forget-outside-fault",
+    "no-println",
+    "one-shard-lock",
+    "lint-allow",
+];
+
+/// Is `name` a known rule (valid in `lint:allow(<name>)`)?
+pub fn is_known_rule(name: &str) -> bool {
+    RULES.contains(&name)
+}
+
+fn ident<'a>(t: &'a Token) -> Option<&'a str> {
+    match &t.tok {
+        Tok::Ident(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct(t: &Token, c: char) -> bool {
+    t.tok == Tok::Punct(c)
+}
+
+/// Token-index ranges (inclusive) covered by `#[cfg(test)]` items:
+/// from the `#` of the attribute through the matching `}` of the item
+/// body that follows. Test code is exempt from every rule — tests
+/// assert on panics and print freely by design.
+pub fn test_regions(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i + 6 < toks.len() {
+        let is_cfg_test = punct(&toks[i], '#')
+            && punct(&toks[i + 1], '[')
+            && ident(&toks[i + 2]) == Some("cfg")
+            && punct(&toks[i + 3], '(')
+            && ident(&toks[i + 4]) == Some("test")
+            && punct(&toks[i + 5], ')')
+            && punct(&toks[i + 6], ']');
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // skip to the item's opening brace, then to its matching close
+        let mut j = i + 7;
+        while j < toks.len() && !punct(&toks[j], '{') {
+            j += 1;
+        }
+        let mut depth = 0i32;
+        while j < toks.len() {
+            if punct(&toks[j], '{') {
+                depth += 1;
+            } else if punct(&toks[j], '}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        regions.push((i, j.min(toks.len().saturating_sub(1))));
+        i = j + 1;
+    }
+    regions
+}
+
+fn in_regions(regions: &[(usize, usize)], idx: usize) -> bool {
+    regions.iter().any(|&(a, b)| idx >= a && idx <= b)
+}
+
+/// Walk back over a balanced `( .. )` group ending at `toks[close]`,
+/// returning the index of the matching `(`, or `None`.
+fn matching_open(toks: &[Token], close: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut j = close;
+    loop {
+        if punct(&toks[j], ')') {
+            depth += 1;
+        } else if punct(&toks[j], '(') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+        if j == 0 {
+            return None;
+        }
+        j -= 1;
+    }
+}
+
+/// Rule `no-panic`: flag `.unwrap(` / `.expect(` / `panic!` /
+/// `unreachable!` / `todo!` / `unimplemented!` outside test code.
+///
+/// Exception: `unwrap`/`expect` chained **directly** onto `.lock(..)`,
+/// `.wait(..)`, or `.wait_timeout(..)` — mutex-poisoning acquires.
+/// A poisoned mutex means another thread already panicked while
+/// holding the shard/state; propagating that panic is the contract
+/// (PR 3 picked panic-on-poison deliberately), so these stay.
+pub fn no_panic(toks: &[Token], regions: &[(usize, usize)], out: &mut Vec<Finding>) {
+    const MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+    for i in 0..toks.len() {
+        if in_regions(regions, i) {
+            continue;
+        }
+        if let Some(name) = ident(&toks[i]) {
+            if MACROS.contains(&name) && i + 1 < toks.len() && punct(&toks[i + 1], '!') {
+                out.push(Finding::new(
+                    "no-panic",
+                    toks[i].line,
+                    format!("`{name}!` in library code"),
+                ));
+                continue;
+            }
+        }
+        // `.unwrap(` / `.expect(`
+        if i + 2 < toks.len()
+            && punct(&toks[i], '.')
+            && matches!(ident(&toks[i + 1]), Some("unwrap") | Some("expect"))
+            && punct(&toks[i + 2], '(')
+        {
+            // receiver exception: `<recv>.lock(..).unwrap()` etc.
+            let exempt = i > 0
+                && punct(&toks[i - 1], ')')
+                && matching_open(toks, i - 1)
+                    .and_then(|open| open.checked_sub(1))
+                    .and_then(|k| ident(&toks[k]))
+                    .is_some_and(|n| matches!(n, "lock" | "wait" | "wait_timeout"));
+            if !exempt {
+                let name = ident(&toks[i + 1]).unwrap_or("unwrap");
+                out.push(Finding::new(
+                    "no-panic",
+                    toks[i + 1].line,
+                    format!("`.{name}()` in library code (propagate or justify)"),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule `no-discarded-cleanup`: a `let _ = <expr>;` whose expression
+/// calls `.delete(`, `.abort(`, `.reap_*(`, or `.purge_*(` silently
+/// swallows a storage-cleanup failure — exactly the bug class PR 7
+/// converted to logged propagation. Bindings like `let _guard = ..`
+/// do not match: only the wildcard `_` discards the Result.
+pub fn no_discarded_cleanup(
+    toks: &[Token],
+    regions: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let is_cleanup = |n: &str| {
+        n == "delete" || n == "abort" || n.starts_with("reap_") || n.starts_with("purge_")
+    };
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        let is_discard = ident(&toks[i]) == Some("let")
+            && ident(&toks[i + 1]) == Some("_")
+            && punct(&toks[i + 2], '=');
+        if !is_discard || in_regions(regions, i) {
+            i += 1;
+            continue;
+        }
+        // scan the discarded expression (to the statement's `;`,
+        // stepping over any nested braces)
+        let mut j = i + 3;
+        let mut depth = 0i32;
+        while j < toks.len() {
+            if punct(&toks[j], '{') {
+                depth += 1;
+            } else if punct(&toks[j], '}') {
+                depth -= 1;
+            } else if punct(&toks[j], ';') && depth <= 0 {
+                break;
+            }
+            if depth == 0
+                && j + 2 < toks.len()
+                && punct(&toks[j], '.')
+                && ident(&toks[j + 1]).is_some_and(is_cleanup)
+                && punct(&toks[j + 2], '(')
+            {
+                out.push(Finding::new(
+                    "no-discarded-cleanup",
+                    toks[j + 1].line,
+                    format!(
+                        "`let _ =` discards the Result of cleanup call `{}`",
+                        ident(&toks[j + 1]).unwrap_or("?")
+                    ),
+                ));
+            }
+            j += 1;
+        }
+        i = j;
+    }
+}
+
+/// Rule `decoder-must-finish`: any fn body that constructs a wire
+/// decoder (`Dec::new(`) must also call `finish(` before returning —
+/// the trailing-bytes check is what keeps protocol drift loud (a
+/// decoder that ignores leftover bytes silently accepts frames from a
+/// newer, longer encoding). Helpers that *receive* a `&mut Dec` are
+/// not constructors and pass.
+pub fn decoder_must_finish(toks: &[Token], regions: &[(usize, usize)], out: &mut Vec<Finding>) {
+    let mut i = 0;
+    while i < toks.len() {
+        if ident(&toks[i]) != Some("fn") || in_regions(regions, i) {
+            i += 1;
+            continue;
+        }
+        let fn_line = toks[i].line;
+        let fn_name = toks
+            .get(i + 1)
+            .and_then(ident)
+            .unwrap_or("?")
+            .to_string();
+        // find the body: first `{` after the signature, to its match
+        let mut j = i + 1;
+        while j < toks.len() && !punct(&toks[j], '{') && !punct(&toks[j], ';') {
+            j += 1;
+        }
+        if j >= toks.len() || punct(&toks[j], ';') {
+            i = j + 1;
+            continue; // trait method declaration, no body
+        }
+        let body_start = j;
+        let mut depth = 0i32;
+        while j < toks.len() {
+            if punct(&toks[j], '{') {
+                depth += 1;
+            } else if punct(&toks[j], '}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        let body = &toks[body_start..j.min(toks.len())];
+        let constructs = body.windows(4).any(|w| {
+            ident(&w[0]) == Some("Dec")
+                && punct(&w[1], ':')
+                && punct(&w[2], ':')
+                && ident(&w[3]) == Some("new")
+        });
+        if constructs {
+            let finishes = body.windows(2).any(|w| {
+                ident(&w[0]) == Some("finish") && punct(&w[1], '(')
+            });
+            if !finishes {
+                out.push(Finding::new(
+                    "decoder-must-finish",
+                    fn_line,
+                    format!("fn `{fn_name}` constructs Dec but never calls finish()"),
+                ));
+            }
+        }
+        i = j + 1;
+    }
+}
+
+/// Rule `reserved-prefix`: any string literal shaped like a dot-key
+/// namespace (`".name/"` prefix) must start with a prefix registered
+/// in `storage::layout::RESERVED_PREFIXES`. An unregistered literal
+/// is a namespace the recovery/hygiene sweeps don't know about —
+/// orphans under it would survive `recover()` forever.
+pub fn reserved_prefix(
+    toks: &[Token],
+    regions: &[(usize, usize)],
+    registry: &[String],
+    out: &mut Vec<Finding>,
+) {
+    for (i, t) in toks.iter().enumerate() {
+        if in_regions(regions, i) {
+            continue;
+        }
+        let Tok::Str(s) = &t.tok else { continue };
+        if !is_namespace_shaped(s) {
+            continue;
+        }
+        if !registry.iter().any(|p| s.starts_with(p.as_str())) {
+            out.push(Finding::new(
+                "reserved-prefix",
+                t.line,
+                format!(
+                    "key prefix `{s}` is not registered in storage::layout::RESERVED_PREFIXES"
+                ),
+            ));
+        }
+    }
+}
+
+/// Does `s` look like a reserved dot-namespace key or prefix:
+/// `.` + one `[A-Za-z0-9_]+` segment + `/` (possibly followed by
+/// more)?
+pub fn is_namespace_shaped(s: &str) -> bool {
+    let Some(rest) = s.strip_prefix('.') else {
+        return false;
+    };
+    let Some(slash) = rest.find('/') else {
+        return false;
+    };
+    slash > 0
+        && rest[..slash]
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_')
+}
+
+/// Rule `forget-outside-fault`: `mem::forget` leaks the value's
+/// cleanup on purpose — in this codebase that is only legitimate for
+/// crash simulation (`storage/fault.rs` abandoning a writer so its
+/// Drop cleanup *doesn't* run, mimicking a killed process).
+pub fn forget_outside_fault(
+    toks: &[Token],
+    regions: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    for i in 0..toks.len().saturating_sub(3) {
+        if in_regions(regions, i) {
+            continue;
+        }
+        if ident(&toks[i]) == Some("mem")
+            && punct(&toks[i + 1], ':')
+            && punct(&toks[i + 2], ':')
+            && ident(&toks[i + 3]) == Some("forget")
+        {
+            out.push(Finding::new(
+                "forget-outside-fault",
+                toks[i].line,
+                "`mem::forget` outside storage/fault.rs".to_string(),
+            ));
+        }
+    }
+}
+
+/// Rule `no-println`: direct stdout/stderr writes bypass the
+/// `TLSTORE_LOG`-filtered logger facade; only the CLI entry points
+/// and the bench harness own the terminal.
+pub fn no_println(toks: &[Token], regions: &[(usize, usize)], out: &mut Vec<Finding>) {
+    const MACROS: [&str; 4] = ["println", "eprintln", "print", "eprint"];
+    for i in 0..toks.len().saturating_sub(1) {
+        if in_regions(regions, i) {
+            continue;
+        }
+        if let Some(name) = ident(&toks[i]) {
+            if MACROS.contains(&name) && punct(&toks[i + 1], '!') {
+                out.push(Finding::new(
+                    "no-println",
+                    toks[i].line,
+                    format!("`{name}!` outside main.rs/cli.rs/bench (use crate::log_* instead)"),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule `one-shard-lock`: in `storage/` code, two shard-lock
+/// acquisitions live in the same lexical block risk an ABBA deadlock
+/// (the single-lock discipline is what lets MemStore skip a lock
+/// ordering protocol entirely). An acquisition is a `.lock()` call
+/// whose receiver mentions a `shard` identifier; blocks are `{}`
+/// scopes, so a loop body that re-acquires per iteration stays legal.
+///
+/// Approximation: the rule sees lexical blocks, not borrow regions —
+/// an explicit `drop(guard)` before a second acquisition in the same
+/// block is still flagged (hoist the second acquisition into its own
+/// scope instead; that makes the non-overlap visible to humans too).
+pub fn one_shard_lock(toks: &[Token], regions: &[(usize, usize)], out: &mut Vec<Finding>) {
+    // assign a unique id to every `{}` block as we walk
+    let mut next_block = 1u32;
+    let mut stack: Vec<u32> = vec![0];
+    let mut seen_in_block: Vec<(u32, u32)> = Vec::new(); // (block, line)
+    for i in 0..toks.len() {
+        match &toks[i].tok {
+            Tok::Punct('{') => {
+                stack.push(next_block);
+                next_block += 1;
+            }
+            Tok::Punct('}') => {
+                let closed = stack.pop().unwrap_or(0);
+                seen_in_block.retain(|&(b, _)| b != closed);
+            }
+            _ => {}
+        }
+        if in_regions(regions, i) {
+            continue;
+        }
+        // `.lock ( )` with a shard-ish receiver
+        let is_lock = i + 3 < toks.len()
+            && punct(&toks[i], '.')
+            && ident(&toks[i + 1]) == Some("lock")
+            && punct(&toks[i + 2], '(')
+            && punct(&toks[i + 3], ')');
+        if !is_lock || !receiver_mentions_shard(toks, i) {
+            continue;
+        }
+        let block = *stack.last().unwrap_or(&0);
+        if let Some(&(_, prev_line)) = seen_in_block.iter().find(|&&(b, _)| b == block) {
+            out.push(Finding::new(
+                "one-shard-lock",
+                toks[i + 1].line,
+                format!(
+                    "second shard-lock acquisition in one block (first at line {prev_line})"
+                ),
+            ));
+        } else {
+            seen_in_block.push((block, toks[i + 1].line));
+        }
+    }
+}
+
+/// Walk the receiver expression backwards from the `.` at `dot` (to
+/// the nearest statement/expression boundary at bracket depth 0) and
+/// report whether any identifier in it mentions "shard".
+fn receiver_mentions_shard(toks: &[Token], dot: usize) -> bool {
+    let mut depth = 0i32; // counts `)`/`]` walking left
+    let mut j = dot;
+    while j > 0 {
+        j -= 1;
+        match &toks[j].tok {
+            Tok::Punct(')') | Tok::Punct(']') => depth += 1,
+            Tok::Punct('(') | Tok::Punct('[') => {
+                if depth == 0 {
+                    return false; // call/index boundary: receiver ended
+                }
+                depth -= 1;
+            }
+            Tok::Punct(';') | Tok::Punct('{') | Tok::Punct('}') | Tok::Punct(',')
+            | Tok::Punct('=') | Tok::Punct('&')
+                if depth == 0 =>
+            {
+                return false;
+            }
+            Tok::Ident(s) if s.to_ascii_lowercase().contains("shard") => return true,
+            _ => {}
+        }
+    }
+    false
+}

@@ -1,0 +1,18 @@
+// Fixture: decoder-must-finish clean cases (virtual path
+// `cluster/wire.rs`): a constructing decoder that calls finish(),
+// and a helper that only borrows a Dec (helpers are not
+// constructors). Not compiled.
+
+fn decode_ack(buf: &[u8]) -> Result<Ack> {
+    let mut d = Dec::new(buf);
+    let id = d.u64()?;
+    let ok = d.u8()? == 1;
+    d.finish()?;
+    Ok(Ack { id, ok })
+}
+
+fn read_header(d: &mut Dec) -> Result<Header> {
+    let kind = d.u8()?;
+    let len = d.u32()?;
+    Ok(Header { kind, len })
+}

@@ -1,0 +1,10 @@
+// Fixture: decoder-must-finish violation (virtual path
+// `cluster/wire.rs`): constructs a Dec but returns without the
+// trailing-bytes check. Not compiled.
+
+fn decode_ack(buf: &[u8]) -> Result<Ack> {
+    let mut d = Dec::new(buf);
+    let id = d.u64()?;
+    let ok = d.u8()? == 1;
+    Ok(Ack { id, ok })
+}

@@ -1,0 +1,8 @@
+// Fixture: forget-outside-fault clean case — the SAME source is
+// linted under the virtual path `storage/fault.rs`, where abandoning
+// a writer (so its Drop cleanup never runs, like a killed process)
+// is the module's whole purpose. Not compiled.
+
+fn simulate_crash_mid_commit(w: Writer) {
+    mem::forget(w);
+}

@@ -1,0 +1,7 @@
+// Fixture: forget-outside-fault violation (virtual path
+// `storage/tls.rs`): leaking a writer's Drop cleanup outside the
+// crash-simulation module. Not compiled.
+
+fn leak_writer(w: Writer) {
+    mem::forget(w);
+}

@@ -1,0 +1,29 @@
+// Fixture: no-discarded-cleanup clean cases (virtual path
+// `mapreduce/pipeline.rs`). Discarding non-cleanup Results (send,
+// join) is legal; cleanup failures are logged or propagated. Not
+// compiled.
+
+fn unpublish(store: &Tls, key: &str) {
+    if let Err(e) = store.delete(key) {
+        crate::log_warn!("un-publish of {key} failed: {e}");
+    }
+}
+
+fn rollback(w: Writer) -> Result<()> {
+    w.abort()
+}
+
+fn notify(tx: &Sender<Event>, ev: Event) {
+    // a receiver that hung up is not a cleanup failure
+    let _ = tx.send(ev);
+}
+
+fn reap_quietly(h: JoinHandle<()>) {
+    let _ = h.join();
+}
+
+fn bound_to_name(store: &Tls, key: &str) {
+    // binding (not `_`) keeps the Result inspectable
+    let outcome = store.delete(key);
+    debug_assert!(outcome.is_ok());
+}

@@ -1,0 +1,15 @@
+// Fixture: no-discarded-cleanup violations (virtual path
+// `mapreduce/pipeline.rs`). Not compiled.
+
+fn unpublish(store: &Tls, key: &str) {
+    let _ = store.delete(key);
+}
+
+fn rollback(w: Writer) {
+    let _ = w.abort();
+}
+
+fn sweep(ns: &Tls, prefix: &str) {
+    let _ = ns.reap_prefix(prefix);
+    let _ = ns.purge_stale_blocks(prefix);
+}

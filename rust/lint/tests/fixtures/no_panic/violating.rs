@@ -1,0 +1,22 @@
+// Fixture: no-panic violations (linted under the virtual path
+// `storage/tls.rs`, i.e. ordinary library code). Not compiled.
+
+fn lookup(map: &Map, key: &str) -> u64 {
+    map.get(key).unwrap()
+}
+
+fn describe(v: Option<&str>) -> String {
+    v.expect("value must be present").to_string()
+}
+
+fn dispatch(mode: Mode) -> u32 {
+    match mode {
+        Mode::A => 1,
+        Mode::B => 2,
+        _ => unreachable!("no other modes"),
+    }
+}
+
+fn not_done() {
+    todo!()
+}

@@ -1,0 +1,17 @@
+// Fixture: no-println clean case (virtual path
+// `coordinator/mod.rs`): library code routes through the logger
+// facade (filtered by TLSTORE_LOG), never the terminal. Not
+// compiled.
+
+fn report(stats: &Stats) {
+    crate::log_info!("processed {} blocks", stats.blocks);
+    crate::log_warn!("{} retries", stats.retries);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_print() {
+        println!("debugging output is fine in tests");
+    }
+}

@@ -1,0 +1,8 @@
+// Fixture: no-println violations (virtual path
+// `coordinator/mod.rs`): writing to the terminal from library code.
+// Not compiled.
+
+fn report(stats: &Stats) {
+    println!("processed {} blocks", stats.blocks);
+    eprintln!("warning: {} retries", stats.retries);
+}

@@ -1,0 +1,31 @@
+// Fixture: one-shard-lock clean cases (virtual path
+// `storage/memstore.rs`): one guard per scope. A loop body is its
+// own block (re-acquiring per iteration is the sharded idiom), and
+// sibling `{ }` scopes never overlap. Non-shard locks are out of
+// scope for this rule. Not compiled.
+
+fn total_len(&self) -> usize {
+    let mut sum = 0;
+    for shard in &self.shards {
+        let g = shard.lock().unwrap();
+        sum += g.map.len();
+    }
+    sum
+}
+
+fn move_entry(&self, from: usize, to: usize, key: &str) {
+    let taken = {
+        let mut a = self.shards[from].lock().unwrap();
+        a.map.remove(key)
+    };
+    if let Some(v) = taken {
+        let mut b = self.shards[to].lock().unwrap();
+        b.map.insert(key.to_string(), v);
+    }
+}
+
+fn stats(&self) -> Stats {
+    let dirty = self.dirty.lock().unwrap();
+    let state = self.state.lock().unwrap();
+    Stats::from(&dirty, &state)
+}

@@ -1,0 +1,12 @@
+// Fixture: one-shard-lock violation (virtual path
+// `storage/memstore.rs`): two shard guards live in the same lexical
+// block — an ABBA deadlock if another thread acquires in the
+// opposite order. Not compiled.
+
+fn move_entry(&self, from: usize, to: usize, key: &str) {
+    let mut a = self.shards[from].lock().unwrap();
+    let mut b = self.shards[to].lock().unwrap();
+    if let Some(v) = a.map.remove(key) {
+        b.map.insert(key.to_string(), v);
+    }
+}

@@ -1,0 +1,15 @@
+// Fixture: reserved-prefix clean cases (virtual path
+// `storage/tls.rs`): registered namespaces pass, and strings that
+// merely resemble paths are not namespace-shaped. Not compiled.
+
+const DIRTY_NS: &str = ".dirty/";
+const WIP_NS: &str = ".wip/";
+
+fn dirty_key(obj: &str, idx: u64) -> String {
+    format!(".dirty/{obj}#{idx}")
+}
+
+fn unrelated_strings() -> [&'static str; 4] {
+    // none of these are `.<segment>/` shaped
+    ["plain/key", ".hidden", "a.b/c", "./relative"]
+}

@@ -1,0 +1,9 @@
+// Fixture: reserved-prefix violation (virtual path
+// `storage/tls.rs`): a dot-namespace literal the layout registry
+// does not know about. Not compiled.
+
+const SCRATCH_NS: &str = ".scratch/";
+
+fn scratch_key(obj: &str) -> String {
+    format!(".scratch/{obj}")
+}

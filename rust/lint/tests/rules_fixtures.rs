@@ -1,0 +1,146 @@
+//! Per-rule fixture tests: each rule has one violating and one clean
+//! fixture under `tests/fixtures/<rule>/`. The violating fixture must
+//! produce findings of exactly that rule (no false positives from the
+//! other six); the clean fixture must produce none at all.
+//!
+//! Fixtures are plain `.rs` files fed to the engine under a *virtual*
+//! relative path (third column below) because path-based exemptions —
+//! `storage/` for shard locks, `storage/fault.rs` for `mem::forget`,
+//! `main.rs`/`bench/` for prints — are part of each rule's contract.
+
+use tlstore_lint::{lint_source, Finding, FALLBACK_PREFIXES};
+
+fn registry() -> Vec<String> {
+    FALLBACK_PREFIXES.iter().map(|s| (*s).to_string()).collect()
+}
+
+fn rules_in(findings: &[Finding]) -> Vec<&'static str> {
+    let mut rules: Vec<&'static str> = findings.iter().map(|f| f.rule).collect();
+    rules.sort_unstable();
+    rules.dedup();
+    rules
+}
+
+/// Assert the violating fixture trips only `rule` (at least once) and
+/// the clean fixture trips nothing.
+fn check(rule: &str, violating: (&str, &str), clean: (&str, &str), min_findings: usize) {
+    let v = lint_source(violating.0, violating.1, &registry());
+    assert!(
+        v.len() >= min_findings && rules_in(&v) == vec![rule],
+        "violating fixture for `{rule}`: expected >= {min_findings} findings of only that rule, got {v:?}"
+    );
+    let c = lint_source(clean.0, clean.1, &registry());
+    assert!(c.is_empty(), "clean fixture for `{rule}` is not clean: {c:?}");
+}
+
+#[test]
+fn no_panic_fixtures() {
+    check(
+        "no-panic",
+        ("storage/tls.rs", include_str!("fixtures/no_panic/violating.rs")),
+        ("storage/tls.rs", include_str!("fixtures/no_panic/clean.rs")),
+        4, // unwrap, expect, unreachable!, todo!
+    );
+}
+
+#[test]
+fn no_discarded_cleanup_fixtures() {
+    check(
+        "no-discarded-cleanup",
+        (
+            "mapreduce/pipeline.rs",
+            include_str!("fixtures/no_discarded_cleanup/violating.rs"),
+        ),
+        (
+            "mapreduce/pipeline.rs",
+            include_str!("fixtures/no_discarded_cleanup/clean.rs"),
+        ),
+        4, // delete, abort, reap_*, purge_*
+    );
+}
+
+#[test]
+fn decoder_must_finish_fixtures() {
+    check(
+        "decoder-must-finish",
+        (
+            "cluster/wire.rs",
+            include_str!("fixtures/decoder_must_finish/violating.rs"),
+        ),
+        (
+            "cluster/wire.rs",
+            include_str!("fixtures/decoder_must_finish/clean.rs"),
+        ),
+        1,
+    );
+}
+
+#[test]
+fn reserved_prefix_fixtures() {
+    check(
+        "reserved-prefix",
+        (
+            "storage/tls.rs",
+            include_str!("fixtures/reserved_prefix/violating.rs"),
+        ),
+        ("storage/tls.rs", include_str!("fixtures/reserved_prefix/clean.rs")),
+        2, // the const and the format! literal
+    );
+}
+
+#[test]
+fn forget_outside_fault_fixtures() {
+    // the clean fixture is the same leak linted under fault.rs's own
+    // path, where crash simulation legitimizes it
+    check(
+        "forget-outside-fault",
+        (
+            "storage/tls.rs",
+            include_str!("fixtures/forget_outside_fault/violating.rs"),
+        ),
+        (
+            "storage/fault.rs",
+            include_str!("fixtures/forget_outside_fault/clean.rs"),
+        ),
+        1,
+    );
+}
+
+#[test]
+fn no_println_fixtures() {
+    check(
+        "no-println",
+        (
+            "coordinator/mod.rs",
+            include_str!("fixtures/no_println/violating.rs"),
+        ),
+        ("coordinator/mod.rs", include_str!("fixtures/no_println/clean.rs")),
+        2, // println! and eprintln!
+    );
+}
+
+#[test]
+fn one_shard_lock_fixtures() {
+    check(
+        "one-shard-lock",
+        (
+            "storage/memstore.rs",
+            include_str!("fixtures/one_shard_lock/violating.rs"),
+        ),
+        (
+            "storage/memstore.rs",
+            include_str!("fixtures/one_shard_lock/clean.rs"),
+        ),
+        1,
+    );
+}
+
+#[test]
+fn entry_points_are_exempt_from_prints_and_panics() {
+    // the same violating sources pass when linted as CLI entry points
+    let print_src = include_str!("fixtures/no_println/violating.rs");
+    assert!(lint_source("main.rs", print_src, &registry()).is_empty());
+    assert!(lint_source("bench/mod.rs", print_src, &registry()).is_empty());
+    let panic_src = include_str!("fixtures/no_panic/violating.rs");
+    assert!(lint_source("cli.rs", panic_src, &registry()).is_empty());
+}

@@ -1,0 +1,45 @@
+//! The self-clean gate: the real tlstore source tree must lint clean.
+//!
+//! This is the test CI's `static-analysis` lane leans on — any new
+//! violation of the seven contracts (or any `lint:allow` escape with
+//! a missing justification or unknown rule name) fails the build with
+//! the full finding list.
+
+use std::path::Path;
+
+use tlstore_lint::lint_tree;
+
+#[test]
+fn tlstore_source_tree_lints_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
+    assert!(src.join("lib.rs").is_file(), "expected tlstore at {src:?}");
+    let findings = lint_tree(&src).expect("walk rust/src");
+    assert!(
+        findings.is_empty(),
+        "rust/src has {} lint finding(s):\n{}",
+        findings.len(),
+        findings
+            .iter()
+            .map(ToString::to_string)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn registry_is_parsed_from_layout_not_fallback() {
+    // the engine must read RESERVED_PREFIXES from the real layout.rs
+    // (the fallback list going stale should not mask a drifted layout)
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
+    let layout = std::fs::read_to_string(src.join("storage").join("layout.rs"))
+        .expect("read storage/layout.rs");
+    let parsed = tlstore_lint::parse_registry(&layout).expect("parse RESERVED_PREFIXES");
+    assert!(
+        parsed.iter().all(|p| p.starts_with('.') && p.ends_with('/')),
+        "registry entries must be `.name/` shaped: {parsed:?}"
+    );
+    assert!(
+        parsed.len() >= 4,
+        "layout.rs should register the four canonical namespaces, got {parsed:?}"
+    );
+}

@@ -25,10 +25,15 @@ pub const COLS: usize = 8;
 /// Per-column statistics of one table.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TableStats {
+    /// Table the stats describe.
     pub table_id: u32,
+    /// Rows aggregated.
     pub rows: u64,
+    /// Per-column mean.
     pub mean: [f64; COLS],
+    /// Per-column minimum.
     pub min: [f64; COLS],
+    /// Per-column maximum.
     pub max: [f64; COLS],
 }
 
@@ -108,6 +113,7 @@ impl Mapper for RowMapper {
 
 /// Reducer: batches each table's rows through the PJRT kernel.
 pub struct AggReducer {
+    /// PJRT runtime the batches are dispatched through.
     pub runtime: Arc<Runtime>,
 }
 
@@ -166,9 +172,11 @@ impl Reducer for AggReducer {
             let key = kv.key().to_vec();
             match &mut current {
                 Some((k, rows)) if *k == key => {
-                    rows.extend(kv.value().chunks_exact(4).map(|b| {
-                        f32::from_le_bytes(b.try_into().unwrap())
-                    }));
+                    rows.extend(
+                        kv.value()
+                            .chunks_exact(4)
+                            .map(crate::util::bytes::f32_le),
+                    );
                 }
                 _ => {
                     if let Some((k, rows)) = current.take() {
@@ -177,7 +185,7 @@ impl Reducer for AggReducer {
                     let rows: Vec<f32> = kv
                         .value()
                         .chunks_exact(4)
-                        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                        .map(crate::util::bytes::f32_le)
                         .collect();
                     current = Some((key, rows));
                 }

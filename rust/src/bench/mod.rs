@@ -10,6 +10,9 @@
 //! machine-readable `BENCH_fig7.json` / `BENCH_fig5.json` trajectory
 //! files.
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
+/// The `bench parity` runner (models vs measured runs).
 pub mod parity;
 
 use std::time::{Duration, Instant};
@@ -17,10 +20,15 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark label (figure row).
     pub name: String,
+    /// Iterations measured.
     pub iters: u64,
+    /// Mean wall-clock per iteration.
     pub mean: Duration,
+    /// Median wall-clock per iteration.
     pub p50: Duration,
+    /// 95th-percentile wall-clock per iteration.
     pub p95: Duration,
     /// bytes processed per iteration (for MB/s reporting), if meaningful
     pub bytes_per_iter: Option<u64>,
@@ -66,9 +74,13 @@ fn fmt_dur(d: Duration) -> String {
 
 /// Benchmark driver with a measurement-time budget.
 pub struct Bencher {
+    /// Time spent warming up before sampling.
     pub warmup: Duration,
+    /// Measurement-time budget.
     pub measure: Duration,
+    /// Sample-count floor regardless of budget.
     pub min_samples: usize,
+    /// Sample-count ceiling regardless of budget.
     pub max_samples: usize,
 }
 

@@ -12,7 +12,9 @@ use crate::error::{Error, Result};
 /// Parsed arguments.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Leading subcommand, when present.
     pub command: Option<String>,
+    /// Non-flag arguments, in order.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
@@ -30,7 +32,7 @@ impl Args {
                 }
                 if let Some((k, v)) = flag.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     let v = it.next().unwrap();
                     out.flags.insert(flag.to_string(), v);
                 } else {

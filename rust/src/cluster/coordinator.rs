@@ -156,7 +156,7 @@ impl TaskBoard {
                 Some(p) => !live.contains(&p),
             })
         })?;
-        let mut spec = self.queued.remove(idx).unwrap();
+        let mut spec = self.queued.remove(idx)?;
         let attempts = self.attempts.entry(spec.task_id).or_insert(0);
         *attempts += 1;
         if *attempts > 1 {
@@ -197,8 +197,9 @@ impl TaskBoard {
             .collect();
         ids.sort_unstable();
         for id in ids.iter().rev() {
-            let (_, spec) = self.inflight.remove(id).unwrap();
-            self.queued.push_front(spec);
+            if let Some((_, spec)) = self.inflight.remove(id) {
+                self.queued.push_front(spec);
+            }
         }
         ids
     }

@@ -25,6 +25,7 @@ pub struct SystemClock {
 }
 
 impl SystemClock {
+    /// A clock reading real time.
     pub fn new() -> Self {
         Self {
             origin: Instant::now(),
@@ -52,6 +53,7 @@ pub struct ManualClock {
 }
 
 impl ManualClock {
+    /// A clock starting at zero.
     pub fn new() -> Self {
         Self::default()
     }

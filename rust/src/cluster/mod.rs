@@ -27,11 +27,17 @@
 //! sleeps. `tlstore cluster {coordinator,worker,pfs-server}` runs the
 //! same code as real OS processes.
 
+/// Leader side: job intake, task assignment, worker registry.
 pub mod coordinator;
+/// Liveness tracking and dead-worker reassignment.
 pub mod heartbeat;
+/// Client handle for driving a remote coordinator.
 pub mod remote;
+/// Length-prefixed TCP framing shared by both ends.
 pub mod transport;
+/// Message encode/decode (the `Enc`/`Dec` pair).
 pub mod wire;
+/// Worker side: task execution loop.
 pub mod worker;
 
 pub use coordinator::{

@@ -83,10 +83,10 @@ impl RemoteMeta {
             ));
         }
         Ok(Self {
-            size: u64::from_le_bytes(raw[0..8].try_into().unwrap()),
-            stripe_size: u64::from_le_bytes(raw[8..16].try_into().unwrap()),
-            nstripes: u32::from_le_bytes(raw[16..20].try_into().unwrap()),
-            nservers: u32::from_le_bytes(raw[20..24].try_into().unwrap()),
+            size: crate::util::bytes::u64_le(&raw[0..8]),
+            stripe_size: crate::util::bytes::u64_le(&raw[8..16]),
+            nstripes: crate::util::bytes::u32_le(&raw[16..20]),
+            nservers: crate::util::bytes::u32_le(&raw[20..24]),
         })
     }
 }

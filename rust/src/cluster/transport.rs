@@ -305,6 +305,8 @@ impl Conn for LoopConn {
         // exercise exactly the bytes TCP would carry.
         let bytes = wire::frame_bytes(msg);
         let decoded = wire::read_message(&mut std::io::Cursor::new(bytes))?
+            // lint:allow(no-panic): frame_bytes writes exactly one complete
+            // frame, so the codec cannot report clean EOF here
             .expect("frame_bytes always yields one frame");
         debug_assert_eq!(&decoded, msg);
 
@@ -423,6 +425,7 @@ pub struct LoopbackNet {
 }
 
 impl LoopbackNet {
+    /// An empty in-process network.
     pub fn new() -> Self {
         Self::default()
     }

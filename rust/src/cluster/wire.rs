@@ -9,8 +9,9 @@
 //! +----------------+-----+------------------+----------------------+
 //! ```
 //!
-//! The CRC trailer reuses the storage tier's [`Crc32`]
-//! (IEEE, the same polynomial the PFS block path verifies with) and
+//! The CRC trailer reuses the tree's one [`Crc32`] implementation
+//! ([`crate::util::crc32`] — the same table the PFS block path verifies
+//! with, cross-checked there against pinned vectors) and
 //! covers the tag byte *and* the body, so a bit-flip anywhere past the
 //! length prefix surfaces as [`WireKind::Crc`]. Corruption of the length
 //! prefix itself surfaces as [`WireKind::Oversized`] (length beyond
@@ -26,7 +27,7 @@
 use std::io::{Read, Write};
 
 use crate::error::{Error, Result, WireKind};
-use crate::storage::block::Crc32;
+use crate::util::crc32::Crc32;
 
 /// Protocol version carried in every [`Message::Hello`]. Bump on any
 /// incompatible frame- or message-layout change.

@@ -5,8 +5,10 @@
 //! paper's testbed constants (Table 1, Table 3, the Figure 1 measurements)
 //! so experiments reference them by name.
 
+/// Named HPC-system presets (§5 case-study machines).
 pub mod presets;
 #[allow(clippy::module_inception)]
+/// The dependency-free TOML subset parser.
 pub mod toml;
 
 use std::path::{Path, PathBuf};
@@ -27,6 +29,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// A backend from its CLI name (`mem`/`pfs`/`hdfs`/`tls`).
     pub fn parse(s: &str) -> Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "hdfs" => Ok(Backend::Hdfs),
@@ -36,6 +39,7 @@ impl Backend {
         }
     }
 
+    /// The backend's canonical CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Hdfs => "hdfs",

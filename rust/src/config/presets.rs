@@ -9,10 +9,15 @@
 /// One row of Table 1.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HpcSystem {
+    /// Testbed name as cited in the paper.
     pub name: &'static str,
+    /// Local scratch disk per node (GB).
     pub local_disk_gb: f64,
+    /// DRAM per node (GB).
     pub ram_gb: f64,
+    /// Parallel-FS quota (GB).
     pub pfs_gb: f64,
+    /// Cores per node.
     pub cpu_cores: u32,
 }
 
@@ -141,9 +146,13 @@ pub mod tuning {
 /// RAM read ≈ 10× global read; global read ≈ 2.65× local read;
 /// RAM write ≈ 6.57× global write; global write ≈ 4× local write.
 pub mod fig1_ratios {
+    /// Figure-1 measured ratio: RAM read over global (PFS) read.
     pub const RAM_OVER_GLOBAL_READ: f64 = 10.0;
+    /// Figure-1 measured ratio: global read over local-disk read.
     pub const GLOBAL_OVER_LOCAL_READ: f64 = 2.65;
+    /// Figure-1 measured ratio: RAM write over global write.
     pub const RAM_OVER_GLOBAL_WRITE: f64 = 6.57;
+    /// Figure-1 measured ratio: global write over local-disk write.
     pub const GLOBAL_OVER_LOCAL_WRITE: f64 = 4.0;
 }
 

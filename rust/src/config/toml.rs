@@ -20,27 +20,36 @@ use crate::error::{Error, Result};
 /// A parsed TOML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     String(String),
+    /// A 64-bit integer.
     Integer(i64),
+    /// A float (also produced by exponent syntax).
     Float(f64),
+    /// `true` / `false`.
     Boolean(bool),
+    /// A `[...]` array of values.
     Array(Vec<Value>),
+    /// A table of dotted-key / header-scoped entries.
     Table(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a `String`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::String(s) => Some(s),
             _ => None,
         }
     }
+    /// The integer payload, if this is an `Integer`.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Integer(i) => Some(*i),
             _ => None,
         }
     }
+    /// The float payload (integers coerce), if numeric.
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -48,18 +57,21 @@ impl Value {
             _ => None,
         }
     }
+    /// The boolean payload, if this is a `Boolean`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Boolean(b) => Some(*b),
             _ => None,
         }
     }
+    /// The array payload, if this is an `Array`.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
             _ => None,
         }
     }
+    /// The table payload, if this is a `Table`.
     pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Table(t) => Some(t),

@@ -30,8 +30,11 @@ impl Default for CheckpointerConfig {
 /// Counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CheckpointerStats {
+    /// Objects handed to the drain queue.
     pub enqueued: u64,
+    /// Objects durably checkpointed.
     pub completed: u64,
+    /// Checkpoint attempts that errored.
     pub failed: u64,
     /// Times `enqueue` had to block on the backlog bound.
     pub backpressure_events: u64,
@@ -55,6 +58,7 @@ pub struct Checkpointer {
 }
 
 impl Checkpointer {
+    /// Spawn the drain thread over a store.
     pub fn start(store: Arc<TwoLevelStore>, cfg: CheckpointerConfig) -> Self {
         let state = Arc::new((Mutex::new(State::default()), Condvar::new()));
         let thread_state = Arc::clone(&state);
@@ -93,6 +97,8 @@ impl Checkpointer {
                     cv.notify_all();
                 }
             })
+            // lint:allow(no-panic): spawn fails only on thread exhaustion
+            // at daemon start; the store is unusable without its drainer
             .expect("spawn checkpointer");
         Self {
             state,
@@ -160,6 +166,7 @@ impl Checkpointer {
         g.queue.len() + g.in_flight
     }
 
+    /// Snapshot of the drain counters.
     pub fn stats(&self) -> CheckpointerStats {
         self.state.0.lock().unwrap().stats
     }

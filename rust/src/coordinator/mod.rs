@@ -13,8 +13,11 @@
 //! [`Router`] centralizes the §3.2 priority-based read policy and exposes
 //! residency-aware mode selection plus per-tier traffic accounting.
 
+/// Background checkpointer draining dirty memory objects to the PFS.
 pub mod checkpoint;
+/// Residency-aware read-ahead into the memory tier.
 pub mod prefetch;
+/// Mode selection: route reads/writes by residency and tier pressure.
 pub mod router;
 
 pub use checkpoint::{Checkpointer, CheckpointerConfig, CheckpointerStats};
@@ -36,6 +39,7 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Start a coordinator (and its checkpointer thread) over a store.
     pub fn new(store: Arc<TwoLevelStore>, cfg: CheckpointerConfig) -> Self {
         let checkpointer = Checkpointer::start(Arc::clone(&store), cfg);
         let router = Router::new(Arc::clone(&store));
@@ -70,14 +74,17 @@ impl Coordinator {
         self.checkpointer.flush()
     }
 
+    /// The underlying two-level store.
     pub fn store(&self) -> &Arc<TwoLevelStore> {
         &self.store
     }
 
+    /// The read/write routing policy.
     pub fn router(&self) -> &Router {
         &self.router
     }
 
+    /// The background checkpointer handle.
     pub fn checkpointer(&self) -> &Checkpointer {
         &self.checkpointer
     }

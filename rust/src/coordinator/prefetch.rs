@@ -14,7 +14,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::storage::block::{BlockGeometry, BlockId};
 use crate::storage::tls::TwoLevelStore;
 use crate::storage::{read_full_at, ObjectReader, ReadMode};
@@ -62,6 +62,7 @@ pub struct Prefetcher {
 }
 
 impl Prefetcher {
+    /// A prefetcher over a store.
     pub fn new(store: Arc<TwoLevelStore>, cfg: PrefetchConfig) -> Self {
         Self {
             store,
@@ -72,6 +73,7 @@ impl Prefetcher {
         }
     }
 
+    /// Snapshot of the prefetch counters.
     pub fn stats(&self) -> PrefetchStats {
         PrefetchStats {
             issued: self.issued.load(Ordering::Relaxed),
@@ -155,7 +157,12 @@ impl Prefetcher {
                         })
                         .collect();
                     for h in handles {
-                        match h.join().expect("prefetch fetch panicked") {
+                        // a panicked fetch worker fails the window instead
+                        // of tearing down the caller
+                        let joined = h.join().unwrap_or_else(|_| {
+                            Err(Error::Job("prefetch fetch worker panicked".into()))
+                        });
+                        match joined {
                             Ok(()) => {
                                 self.issued.fetch_add(1, Ordering::Relaxed);
                             }

@@ -17,6 +17,7 @@ pub struct RouterStats {
     pub mem_reads: u64,
     /// Reads partially or fully served by the PFS tier.
     pub pfs_reads: u64,
+    /// Bytes moved through the router.
     pub bytes: u64,
 }
 
@@ -29,6 +30,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// A router over a store.
     pub fn new(store: Arc<TwoLevelStore>) -> Self {
         Self {
             store,
@@ -43,7 +45,9 @@ impl Router {
         let Ok(size) = self.store.size(key) else {
             return false;
         };
-        let geo = BlockGeometry::new(size, self.store.config().block_size).unwrap();
+        let Ok(geo) = BlockGeometry::new(size, self.store.config().block_size) else {
+            return false;
+        };
         (0..geo.num_blocks())
             .all(|i| self.store.mem().contains(&BlockId::new(key, i).storage_key()))
     }
@@ -72,6 +76,7 @@ impl Router {
         Ok(data)
     }
 
+    /// Snapshot of the routing counters.
     pub fn stats(&self) -> RouterStats {
         RouterStats {
             mem_reads: self.mem_reads.load(Ordering::Relaxed),

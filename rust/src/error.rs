@@ -12,41 +12,53 @@ pub type Result<T> = std::result::Result<T, Error>;
 /// Unified error for storage, runtime, config, and job execution failures.
 #[derive(Debug)]
 pub enum Error {
+    /// An OS-level I/O failure, tagged with the path and operation.
     Io {
         path: PathBuf,
         source: std::io::Error,
     },
 
+    /// No object with this key exists.
     NotFound(String),
 
+    /// Write-once violation: the key already holds an object.
     AlreadyExists(String),
 
+    /// A reservation could not fit the memory tier's capacity.
     OverCapacity {
         need: u64,
         capacity: u64,
     },
 
+    /// Stored CRC32 disagrees with the bytes read back.
     ChecksumMismatch {
         object: String,
         stored: u32,
         computed: u32,
     },
 
+    /// Invalid configuration (knob out of range, bad combination).
     Config(String),
 
+    /// The TOML-subset parser rejected the input at `line`.
     TomlParse {
         line: usize,
         msg: String,
     },
 
+    /// AOT artifact missing or malformed (manifest, HLO file).
     Artifact(String),
 
+    /// The XLA/PJRT runtime reported a failure.
     Xla(String),
 
+    /// A job-level failure (task panic, admission, dataflow).
     Job(String),
 
+    /// The simulator rejected its inputs.
     Sim(String),
 
+    /// A CLI/API argument was malformed.
     InvalidArg(String),
 
     /// The job was canceled — by [`crate::mapreduce::JobHandle::cancel`],

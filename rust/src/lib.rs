@@ -93,22 +93,39 @@
 //! assert_eq!(&bytes[..], b"hello");
 //! ```
 
+/// Disk-to-disk analytics kernels (§5 workloads) over the store.
 pub mod analytics;
+/// Bench harness: figure reproductions + the parity runner.
 pub mod bench;
+/// CLI argument parsing and subcommand dispatch.
 pub mod cli;
+/// Multi-process cluster plane: wire, roles, remote PFS.
 pub mod cluster;
+/// Configuration: TOML subset, presets, validated knobs.
 pub mod config;
+/// Checkpointer, prefetcher, and the read/write mode router.
 pub mod coordinator;
+/// The crate-wide error type and `Result` alias.
 pub mod error;
+/// Job API v2: map/reduce engine, pipelines, `JobServer`.
 pub mod mapreduce;
+/// Counters, histograms, and per-phase I/O timelines.
 pub mod metrics;
+/// The §4 analytic performance models (eqs. 1-7).
 pub mod model;
+/// PJRT runtime bridge for AOT artifacts (feature-gated).
 pub mod runtime;
+/// Discrete-event cluster simulator (Figures 5-7).
 pub mod sim;
+/// Both storage tiers + the two-level store and recovery.
 pub mod storage;
+/// TeraGen / TeraSort / TeraValidate on the Job API.
 pub mod terasort;
+/// Shared test harnesses: conformance, crash drills, parity.
 pub mod testing;
+/// In-tree utilities: CRC32, logger, pool, PRNGs, merge.
 pub mod util;
+/// Named multi-stage workloads (wordcount-topk, log-sessions).
 pub mod workloads;
 
 pub use error::{Error, Result};

@@ -22,6 +22,8 @@
 //! named multi-stage pipelines through the [`tlstore::mapreduce::JobServer`],
 //! spilling every shuffle through the store's `.shuffle/` namespace.
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
 use std::path::PathBuf;
 use std::sync::Arc;
 

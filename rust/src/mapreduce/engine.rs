@@ -26,13 +26,21 @@ use crate::util::pool::ThreadPool;
 /// [`PipelineStats`](super::PipelineStats)).
 #[derive(Debug, Clone)]
 pub struct JobStats {
+    /// Job name from the spec.
     pub job: String,
+    /// Map-split count.
     pub splits: usize,
+    /// Reduce-task count.
     pub reducers: u32,
+    /// Wall-clock of the map phase.
     pub map_time: Duration,
+    /// Wall-clock of the shuffle+reduce phase.
     pub reduce_time: Duration,
+    /// Bytes read by map tasks.
     pub input_bytes: u64,
+    /// Bytes written by reduce outputs.
     pub output_bytes: u64,
+    /// Records that flowed through the shuffle.
     pub shuffle_records: u64,
     /// Splits that *executed* on their preferred node (counted from the
     /// dispatch the scheduler actually drove, not a discarded plan).
@@ -69,6 +77,7 @@ impl JobStats {
         self.write_io.mbs()
     }
 
+    /// One-line human-readable summary of the run.
     pub fn report(&self) -> String {
         format!(
             "job={} splits={} reducers={} map={:.3}s ({:.1} MB/s in) reduce={:.3}s ({:.1} MB/s out) shuffle={} rec locality={}/{}",
@@ -91,7 +100,9 @@ impl JobStats {
 /// paper's 16-node placement).
 pub struct Engine {
     pool: Arc<ThreadPool>,
+    /// Simulated node count for locality scheduling.
     pub nodes: usize,
+    /// Map/reduce slots per node.
     pub containers_per_node: usize,
     /// Spill threshold forwarded to the pipeline executor (`0`, the
     /// default, routes every map task's runs through `.shuffle/`
@@ -100,6 +111,7 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine over `workers` threads and the given topology.
     pub fn new(workers: usize, nodes: usize, containers_per_node: usize) -> Self {
         Self {
             pool: Arc::new(ThreadPool::new(workers)),

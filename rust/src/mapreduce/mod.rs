@@ -29,11 +29,17 @@
 //! latter after sorting record blocks with the AOT-compiled Pallas kernel
 //! through PJRT ([`crate::terasort`]).
 
+/// The map/reduce execution engine driven by the scheduler.
 pub mod engine;
+/// Multi-stage pipeline specs + the dataflow that chains jobs.
 pub mod pipeline;
+/// Locality-aware split scheduling over simulated nodes.
 pub mod scheduler;
+/// `JobServer`: admission, concurrent jobs, status, cancel.
 pub mod server;
+/// Sort-and-merge shuffle with spill-to-storage runs.
 pub mod shuffle;
+/// Spill-file format + the `.shuffle/` run writer/reader.
 pub mod spill;
 
 pub use engine::{Engine, JobStats};
@@ -52,11 +58,14 @@ use crate::storage::ObjectStore;
 /// its prefix (one allocation per record — deliberate; see shuffle docs).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct KV {
+    /// Key bytes immediately followed by value bytes.
     pub bytes: Vec<u8>,
+    /// Length of the key prefix in [`KV::bytes`].
     pub key_len: u32,
 }
 
 impl KV {
+    /// Build a record by concatenating `key` and `value`.
     pub fn new(key: &[u8], value: &[u8]) -> Self {
         let mut bytes = Vec::with_capacity(key.len() + value.len());
         bytes.extend_from_slice(key);
@@ -73,10 +82,12 @@ impl KV {
         Self { bytes, key_len }
     }
 
+    /// The key prefix of the record.
     pub fn key(&self) -> &[u8] {
         &self.bytes[..self.key_len as usize]
     }
 
+    /// The value suffix of the record.
     pub fn value(&self) -> &[u8] {
         &self.bytes[self.key_len as usize..]
     }
@@ -86,9 +97,13 @@ impl KV {
 /// preference (the node that holds the bytes).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct InputSplit {
+    /// Storage object the split reads from.
     pub object: String,
+    /// Byte offset of the split within the object.
     pub offset: u64,
+    /// Byte length of the split.
     pub len: u64,
+    /// Node the scheduler should prefer for this split (locality hint).
     pub preferred_node: Option<usize>,
 }
 
@@ -102,6 +117,7 @@ pub struct MapContext {
 }
 
 impl MapContext {
+    /// Create a context that partitions map output `num_partitions` ways.
     pub fn new(num_partitions: u32) -> Self {
         Self {
             num_partitions,
@@ -110,6 +126,7 @@ impl MapContext {
         }
     }
 
+    /// Number of reduce partitions this job shuffles into.
     pub fn num_partitions(&self) -> u32 {
         self.num_partitions
     }
@@ -171,11 +188,13 @@ pub trait Reducer: Send + Sync {
 /// Job description handed to [`Engine::run`] (the v1 shape; the v2
 /// equivalent is [`PipelineSpec`]).
 pub struct JobSpec<'a> {
+    /// Job name (used in status lines and metrics).
     pub name: &'a str,
     /// Input objects: every object with this prefix becomes input.
     pub input_prefix: &'a str,
     /// Output objects are written as `{output_prefix}part-r-{p:05}`.
     pub output_prefix: &'a str,
+    /// Reduce-task count = shuffle partition count.
     pub num_reducers: u32,
     /// Maximum bytes per input split (objects larger than this are split).
     pub split_size: u64,

@@ -222,9 +222,11 @@ impl PipelineBuilder {
 /// Per-stage execution metrics.
 #[derive(Debug, Clone)]
 pub struct StageStats {
+    /// Which stage the stats describe.
     pub kind: StageKind,
     /// Map: splits executed; reduce: partitions written.
     pub tasks: usize,
+    /// Wall time for the stage.
     pub time: Duration,
     /// Map: split bytes read; reduce: shuffle bytes merged.
     pub bytes_in: u64,
@@ -258,9 +260,11 @@ pub struct PipelineStats {
     pub job: String,
     /// Server-assigned job id (`.shuffle/<job_id>/` held the spills).
     pub job_id: String,
+    /// Per-stage breakdown, in execution order.
     pub stages: Vec<StageStats>,
     /// Containers the ledger granted this job.
     pub containers: usize,
+    /// End-to-end job wall time.
     pub elapsed: Duration,
 }
 
@@ -540,7 +544,9 @@ pub(crate) fn run_pipeline(
     // store itself may be refusing operations (e.g. a crash drill), and
     // recover() reaps whatever this pass cannot
     let ns = format!("{SHUFFLE_NS}{job_id}/");
-    let _ = crate::storage::reap_prefix(ctx.store.as_ref(), &ns);
+    if let Err(e) = crate::storage::reap_prefix(ctx.store.as_ref(), &ns) {
+        crate::log_warn!("shuffle reap for {ns} failed (recover() will retry): {e}");
+    }
 
     let mut stats = result?;
     ctx.progress.finish();
@@ -554,6 +560,8 @@ fn run_stages(ctx: &ExecCtx, spec: &PipelineSpec, job_id: &str) -> Result<Pipeli
     let mut input = spec.input_prefix.clone();
     for round in 0..rounds {
         let Stage::Map { mapper, split_size } = &spec.stages[2 * round] else {
+            // lint:allow(no-panic): PipelineSpec::build rejects any stage
+            // list that is not strictly alternating Map/Reduce pairs
             unreachable!("validated by the builder");
         };
         let Stage::Reduce {
@@ -561,6 +569,8 @@ fn run_stages(ctx: &ExecCtx, spec: &PipelineSpec, job_id: &str) -> Result<Pipeli
             partitions,
         } = &spec.stages[2 * round + 1]
         else {
+            // lint:allow(no-panic): PipelineSpec::build rejects any stage
+            // list that is not strictly alternating Map/Reduce pairs
             unreachable!("validated by the builder");
         };
         let out_prefix = if round + 1 == rounds {
@@ -599,7 +609,9 @@ fn run_stages(ctx: &ExecCtx, spec: &PipelineSpec, job_id: &str) -> Result<Pipeli
         // this round's spills are consumed: drop them eagerly so a long
         // pipeline's shuffle footprint is one round, not the whole job
         let spill_prefix = format!("{SHUFFLE_NS}{job_id}/s{round}/");
-        let _ = crate::storage::reap_prefix(ctx.store.as_ref(), &spill_prefix);
+        if let Err(e) = crate::storage::reap_prefix(ctx.store.as_ref(), &spill_prefix) {
+            crate::log_warn!("eager spill reap for {spill_prefix} failed: {e}");
+        }
         input = out_prefix;
     }
     Ok(PipelineStats {
@@ -792,6 +804,8 @@ fn run_reduce_phase(
         let chunk = ctx.shuffle_chunk;
         Arc::new(move |p: usize| -> Result<ReduceTaskOut> {
             check_cancel(&cancel, &job)?;
+            // lint:allow(no-panic): dispatch_waves hands each partition
+            // index to exactly one task, so the slot is still populated
             let refs = shuffle.lock().unwrap()[p]
                 .take()
                 .expect("partition taken once");
@@ -852,24 +866,32 @@ fn run_reduce_phase(
         read_io: IoStat::default(),
         write_io: IoStat::default(),
     };
-    if outs.iter().any(|r| r.is_err()) {
+    let mut first_err = None;
+    let mut committed = Vec::with_capacity(outs.len());
+    for out in outs {
+        match out {
+            Ok(r) => committed.push(r),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
         // a failed (or canceled) stage publishes *nothing*: un-publish
         // the partitions that did commit, so consumers never mistake a
         // partial part-r-* set for a complete result. (If this job was
         // overwriting a previous result, those partitions are gone
         // either way — the store contract is write-once-read-many.)
-        for out in &outs {
-            if let Ok(r) = out {
-                let _ = ctx.store.delete(&r.key);
+        for r in &committed {
+            if let Err(del) = ctx.store.delete(&r.key) {
+                crate::log_warn!("un-publish of {} failed: {del}", r.key);
             }
         }
-        return Err(outs
-            .into_iter()
-            .find_map(|r| r.err())
-            .expect("an Err was just observed"));
+        return Err(e);
     }
-    for out in outs {
-        let out = out.expect("all Ok");
+    for out in committed {
         stats.bytes_out += out.bytes;
         stats.records += out.records;
         stats.write_io.merge(&out.write_io);

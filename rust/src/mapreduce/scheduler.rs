@@ -23,7 +23,9 @@ use super::InputSplit;
 /// One split → (node, container) placement.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Assignment {
+    /// Split index assigned.
     pub split: usize,
+    /// Node the split was placed on.
     pub node: usize,
     /// Whether the split ran on its preferred node.
     pub local: bool,
@@ -31,11 +33,14 @@ pub struct Assignment {
 
 /// Greedy locality scheduler over `nodes × containers_per_node` slots.
 pub struct LocalityScheduler {
+    /// Nodes in the (simulated) cluster.
     pub nodes: usize,
+    /// Container slots per node.
     pub containers_per_node: usize,
 }
 
 impl LocalityScheduler {
+    /// A scheduler over `nodes * containers_per_node` slots.
     pub fn new(nodes: usize, containers_per_node: usize) -> Self {
         Self {
             nodes: nodes.max(1),
@@ -73,7 +78,7 @@ impl LocalityScheduler {
         // pass 2: everything else goes to the least-loaded node
         for (i, _s) in splits.iter().enumerate() {
             if out[i].is_none() {
-                let node = (0..self.nodes).min_by_key(|&n| load[n]).unwrap();
+                let node = (0..self.nodes).min_by_key(|&n| load[n]).unwrap_or(0);
                 load[node] += 1;
                 out[i] = Some(Assignment {
                     split: i,
@@ -82,7 +87,8 @@ impl LocalityScheduler {
                 });
             }
         }
-        (out.into_iter().map(Option::unwrap).collect(), hits)
+        // pass 2 filled every remaining None, so flatten drops nothing
+        (out.into_iter().flatten().collect(), hits)
     }
 
     /// Turn `assignments` into the split **dispatch order**: waves of up

@@ -226,6 +226,8 @@ impl Iterator for MergeIter<'_> {
             return None; // a source died: stop rather than merge a subset
         }
         let cur = self.heap.pop()?;
+        // lint:allow(no-panic): a heap entry for `run` exists only while
+        // that run's staged slot is populated (refilled before re-push)
         let kv = self.staged[cur.run].take().expect("staged record");
         match self.runs[cur.run].next_kv() {
             Ok(Some(next)) => {

@@ -127,12 +127,12 @@ impl<'a> SpillCursor<'a> {
         if header[..4] != SPILL_MAGIC {
             return Err(corrupt(key, "bad magic"));
         }
-        let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        let version = crate::util::bytes::u32_le(&header[4..8]);
         if version != SPILL_VERSION {
             return Err(corrupt(key, &format!("unsupported version {version}")));
         }
-        let records = u64::from_le_bytes(header[8..16].try_into().unwrap());
-        let payload = u64::from_le_bytes(header[16..24].try_into().unwrap());
+        let records = crate::util::bytes::u64_le(&header[8..16]);
+        let payload = crate::util::bytes::u64_le(&header[16..24]);
         if SPILL_HEADER as u64 + payload != len {
             return Err(corrupt(
                 key,
@@ -189,8 +189,8 @@ impl<'a> SpillCursor<'a> {
             return Ok(None);
         }
         self.ensure(RECORD_OVERHEAD)?;
-        let klen = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
-        let vlen = u32::from_le_bytes(self.buf[self.pos + 4..self.pos + 8].try_into().unwrap());
+        let klen = crate::util::bytes::u32_le(&self.buf[self.pos..self.pos + 4]);
+        let vlen = crate::util::bytes::u32_le(&self.buf[self.pos + 4..self.pos + 8]);
         let total = klen as usize + vlen as usize;
         // a record longer than what the object can still hold is framing
         // corruption, not a short buffer

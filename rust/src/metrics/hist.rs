@@ -52,10 +52,12 @@ fn bucket_low(idx: usize) -> u64 {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one sample.
     pub fn record(&self, v: u64) {
         self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
@@ -63,18 +65,22 @@ impl Histogram {
         self.max.fetch_max(v, Ordering::Relaxed);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Sum of all samples.
     pub fn sum(&self) -> u64 {
         self.sum.load(Ordering::Relaxed)
     }
 
+    /// Largest sample seen.
     pub fn max(&self) -> u64 {
         self.max.load(Ordering::Relaxed)
     }
 
+    /// Mean sample value (0 when empty).
     pub fn mean(&self) -> f64 {
         let c = self.count();
         if c == 0 {

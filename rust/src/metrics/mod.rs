@@ -4,7 +4,9 @@
 //! All primitives are lock-free on the hot path (atomics); the registry is
 //! a name-keyed map behind a mutex used only at registration/report time.
 
+/// Fixed-bucket latency/size histograms.
 pub mod hist;
+/// Per-phase I/O timelines (read/write MB/s over time).
 pub mod timeline;
 
 use std::collections::BTreeMap;
@@ -19,12 +21,15 @@ pub use timeline::{IoSample, IoStat, Timeline, TimelineSet, UtilSample};
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// Increment by one.
     pub fn inc(&self) {
         self.add(1)
     }
+    /// Increment by `n`.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -35,12 +40,15 @@ impl Counter {
 pub struct Gauge(AtomicI64);
 
 impl Gauge {
+    /// Set the gauge to `v`.
     pub fn set(&self, v: i64) {
         self.0.store(v, Ordering::Relaxed);
     }
+    /// Adjust the gauge by `d` (may be negative).
     pub fn add(&self, d: i64) {
         self.0.fetch_add(d, Ordering::Relaxed);
     }
+    /// Current value.
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -55,10 +63,12 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Get or register the counter named `name`.
     pub fn counter(&self, name: &str) -> Arc<Counter> {
         Arc::clone(
             self.counters
@@ -69,6 +79,7 @@ impl Registry {
         )
     }
 
+    /// Get or register the gauge named `name`.
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
         Arc::clone(
             self.gauges
@@ -79,6 +90,7 @@ impl Registry {
         )
     }
 
+    /// Get or register the histogram named `name`.
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         Arc::clone(
             self.histograms
@@ -92,13 +104,13 @@ impl Registry {
     /// Render all metrics as sorted `name value` lines.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        for (k, c) in self.counters.lock().unwrap().iter() {
+        for (k, c) in &*self.counters.lock().unwrap() {
             out.push_str(&format!("counter {k} {}\n", c.get()));
         }
-        for (k, g) in self.gauges.lock().unwrap().iter() {
+        for (k, g) in &*self.gauges.lock().unwrap() {
             out.push_str(&format!("gauge {k} {}\n", g.get()));
         }
-        for (k, h) in self.histograms.lock().unwrap().iter() {
+        for (k, h) in &*self.histograms.lock().unwrap() {
             out.push_str(&format!(
                 "hist {k} count={} p50={} p95={} p99={} max={}\n",
                 h.count(),

@@ -17,18 +17,23 @@
 /// One utilization sample in `[0, 1]` at a timestamp (seconds).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct UtilSample {
+    /// Seconds since the timeline's origin.
     pub t: f64,
+    /// Utilization/throughput value at `t` (e.g. MB/s).
     pub util: f64,
 }
 
 /// A named utilization series (e.g. `compute.cpu`, `data.disk`).
 #[derive(Debug, Clone, Default)]
 pub struct Timeline {
+    /// Series label (phase + direction, e.g. `map read`).
     pub name: String,
+    /// Samples in time order.
     pub samples: Vec<UtilSample>,
 }
 
 impl Timeline {
+    /// An empty timeline labeled `name`.
     pub fn new(name: impl Into<String>) -> Self {
         Self {
             name: name.into(),
@@ -83,7 +88,7 @@ impl Timeline {
             return vec![0.0; n];
         }
         let t0 = self.samples[0].t;
-        let t1 = self.samples.last().unwrap().t;
+        let t1 = self.samples.last().map_or(t0, |s| s.t);
         let span = (t1 - t0).max(1e-9);
         let mut sums = vec![0.0; n];
         let mut counts = vec![0usize; n];
@@ -209,18 +214,22 @@ impl IoStat {
 /// Group of timelines for one experiment run (one per node×resource).
 #[derive(Debug, Clone, Default)]
 pub struct TimelineSet {
+    /// All series, in registration order.
     pub series: Vec<Timeline>,
 }
 
 impl TimelineSet {
+    /// Get or create the series labeled `name`.
     pub fn timeline(&mut self, name: &str) -> &mut Timeline {
         if let Some(idx) = self.series.iter().position(|t| t.name == name) {
             return &mut self.series[idx];
         }
         self.series.push(Timeline::new(name));
-        self.series.last_mut().unwrap()
+        let idx = self.series.len() - 1;
+        &mut self.series[idx]
     }
 
+    /// The series labeled `name`, if present.
     pub fn get(&self, name: &str) -> Option<&Timeline> {
         self.series.iter().find(|t| t.name == name)
     }

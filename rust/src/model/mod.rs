@@ -26,9 +26,11 @@ pub struct ClusterParams {
     pub rho: f64,
     /// μ — compute-node local disk throughput, MB/s (read, write).
     pub mu_read: f64,
+    /// μ write side, MB/s.
     pub mu_write: f64,
     /// μ′ — data-node disk (RAID) throughput, MB/s (read, write).
     pub mu_p_read: f64,
+    /// μ′ write side, MB/s.
     pub mu_p_write: f64,
     /// ν — RAM throughput, MB/s.
     pub nu: f64,
@@ -194,10 +196,12 @@ impl ClusterParams {
 pub struct CaseStudyParams {
     /// Aggregate PFS bandwidth, MB/s (paper: 10_000 and 50_000).
     pub pfs_aggregate: f64,
+    /// The §4 constants the case study plugs in.
     pub constants: PaperConstants,
 }
 
 impl CaseStudyParams {
+    /// Params for a given aggregate PFS bandwidth.
     pub fn new(pfs_aggregate_mbs: f64) -> Self {
         Self {
             pfs_aggregate: pfs_aggregate_mbs,

@@ -16,12 +16,16 @@ use crate::error::{Error, Result};
 /// Element dtype of an artifact tensor (subset the kernels use).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// Unsigned 32-bit tensor elements.
     U32,
+    /// Signed 32-bit tensor elements.
     S32,
+    /// IEEE-754 single-precision tensor elements.
     F32,
 }
 
 impl DType {
+    /// Parse a manifest dtype token (`u32`/`s32`/`f32`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "u32" => Some(DType::U32),
@@ -31,6 +35,7 @@ impl DType {
         }
     }
 
+    /// The manifest token for this dtype.
     pub fn name(&self) -> &'static str {
         match self {
             DType::U32 => "u32",
@@ -39,6 +44,7 @@ impl DType {
         }
     }
 
+    /// Bytes per element (all supported dtypes are 4 bytes wide).
     pub fn size_bytes(&self) -> usize {
         4
     }
@@ -57,7 +63,9 @@ impl DType {
 /// Shape spec `dtype[d0xd1x...]`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Element type of the tensor.
     pub dtype: DType,
+    /// Dimension sizes, outermost first.
     pub dims: Vec<usize>,
 }
 
@@ -89,6 +97,7 @@ impl TensorSpec {
         self.elements() * self.dtype.size_bytes()
     }
 
+    /// Render back to manifest syntax, e.g. `u32[16x256]`.
     pub fn render(&self) -> String {
         let dims = self
             .dims
@@ -103,9 +112,13 @@ impl TensorSpec {
 /// One artifact entry from the manifest.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Kernel name (manifest table key).
     pub name: String,
+    /// Path to the HLO text file, resolved against the manifest dir.
     pub path: PathBuf,
+    /// Input tensor signatures, positional.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor signatures, positional.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -164,7 +177,7 @@ mod tests {
         assert_eq!(t.dtype, DType::U32);
         assert_eq!(t.dims, vec![16, 256]);
         assert_eq!(t.elements(), 4096);
-        assert_eq!(t.byte_len(), 16384);
+        assert_eq!(t.byte_len(), 16_384);
         assert_eq!(t.render(), "u32[16x256]");
 
         let t = TensorSpec::parse("s32[256]").unwrap();

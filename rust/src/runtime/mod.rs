@@ -24,6 +24,7 @@
 //! artifact-dependent test, bench, and CLI path skips cleanly (they
 //! already guard on `artifacts/manifest.toml` existing).
 
+/// Manifest parsing + artifact specs (`artifacts/manifest.toml`).
 pub mod artifacts;
 
 use std::collections::BTreeMap;
@@ -38,30 +39,37 @@ use crate::error::{Error, Result};
 /// A typed output tensor copied back to host memory.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostTensor {
+    /// Host buffer of `u32` elements.
     U32(Vec<u32>),
+    /// Host buffer of `i32` elements.
     S32(Vec<i32>),
+    /// Host buffer of `f32` elements.
     F32(Vec<f32>),
 }
 
 impl HostTensor {
+    /// The `u32` payload, or a type-mismatch error.
     pub fn as_u32(&self) -> Result<&[u32]> {
         match self {
             HostTensor::U32(v) => Ok(v),
             other => Err(Error::Artifact(format!("expected u32, got {other:?}"))),
         }
     }
+    /// The `i32` payload, or a type-mismatch error.
     pub fn as_s32(&self) -> Result<&[i32]> {
         match self {
             HostTensor::S32(v) => Ok(v),
             other => Err(Error::Artifact(format!("expected s32, got {other:?}"))),
         }
     }
+    /// The `f32` payload, or a type-mismatch error.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostTensor::F32(v) => Ok(v),
             other => Err(Error::Artifact(format!("expected f32, got {other:?}"))),
         }
     }
+    /// Element count regardless of dtype.
     pub fn len(&self) -> usize {
         match self {
             HostTensor::U32(v) => v.len(),
@@ -69,6 +77,7 @@ impl HostTensor {
             HostTensor::F32(v) => v.len(),
         }
     }
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -89,6 +98,7 @@ unsafe impl Sync for Loaded {}
 
 /// One compiled artifact: spec + mutex-guarded executable.
 pub struct Artifact {
+    /// The manifest spec this artifact was loaded from.
     pub spec: ArtifactSpec,
     #[cfg(feature = "pjrt")]
     loaded: Mutex<Loaded>,

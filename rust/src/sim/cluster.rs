@@ -16,13 +16,16 @@ use super::engine::{FlowSpec, Resource};
 /// Storage backend being simulated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
+    /// Hadoop baseline: every read/write goes through HDFS-on-disk.
     Hdfs,
+    /// OrangeFS direct: all I/O against the parallel FS (no memory tier).
     Ofs,
     /// Two-level with residency ratio `f` (1.0 = everything in memory).
     Tls { f_pct: u8 },
 }
 
 impl BackendKind {
+    /// Human-readable backend label used in tables and JSON.
     pub fn name(&self) -> String {
         match self {
             BackendKind::Hdfs => "hdfs".into(),
@@ -35,11 +38,17 @@ impl BackendKind {
 /// Device constants (MB/s) — defaults are the paper's measurements.
 #[derive(Debug, Clone, Copy)]
 pub struct SimConstants {
+    /// Local-disk streaming rate (MB/s).
     pub disk_mbs: f64,
+    /// RAID array read rate of one PFS server (MB/s).
     pub raid_read_mbs: f64,
+    /// RAID array write rate of one PFS server (MB/s).
     pub raid_write_mbs: f64,
+    /// Memory-tier copy rate (MB/s).
     pub ram_mbs: f64,
+    /// Per-node NIC rate (MB/s).
     pub nic_mbs: f64,
+    /// Aggregate backplane rate shared by all nodes (MB/s).
     pub backplane_mbs: f64,
     /// Per-container TeraSort processing rate (calibrated so the HDFS
     /// mapper ratio matches Figure 7; see DESIGN.md).
@@ -74,9 +83,13 @@ impl Default for SimConstants {
 
 /// Resource ids for one constructed cluster.
 pub struct ClusterSim {
+    /// Compute-node count.
     pub n: usize,
+    /// PFS-server count.
     pub m: usize,
+    /// Device constants the resources were sized from.
     pub constants: SimConstants,
+    /// Every simulated resource, indexable by the id helpers below.
     pub resources: Vec<Resource>,
     cpu0: usize,
     disk0: usize,
@@ -85,6 +98,7 @@ pub struct ClusterSim {
     dnic0: usize,
     raidr0: usize,
     raidw0: usize,
+    /// Shared backplane resource id.
     pub backplane: usize,
 }
 
@@ -136,24 +150,31 @@ impl ClusterSim {
         }
     }
 
+    /// Resource id of compute node `i`'s CPU.
     pub fn cpu(&self, i: usize) -> usize {
         self.cpu0 + i
     }
+    /// Resource id of compute node `i`'s local disk.
     pub fn disk(&self, i: usize) -> usize {
         self.disk0 + i
     }
+    /// Resource id of compute node `i`'s memory tier.
     pub fn ram(&self, i: usize) -> usize {
         self.ram0 + i
     }
+    /// Resource id of compute node `i`'s NIC.
     pub fn nic(&self, i: usize) -> usize {
         self.nic0 + i
     }
+    /// Resource id of PFS server `j`'s NIC.
     pub fn dnic(&self, j: usize) -> usize {
         self.dnic0 + j
     }
+    /// Resource id of PFS server `j`'s RAID read channel.
     pub fn raid_read(&self, j: usize) -> usize {
         self.raidr0 + j
     }
+    /// Resource id of PFS server `j`'s RAID write channel.
     pub fn raid_write(&self, j: usize) -> usize {
         self.raidw0 + j
     }

@@ -12,7 +12,9 @@ use crate::metrics::timeline::TimelineSet;
 /// A capacity-limited resource (MB/s).
 #[derive(Debug, Clone)]
 pub struct Resource {
+    /// Human-readable label (used in utilization traces).
     pub name: String,
+    /// Capacity in MB/s shared by all flows crossing the resource.
     pub capacity: f64,
 }
 
@@ -21,21 +23,27 @@ pub struct Resource {
 /// (e.g. one container's CPU share or a single disk stream).
 #[derive(Debug, Clone)]
 pub struct FlowSpec {
+    /// Total bytes the flow must move.
     pub bytes: f64,
+    /// Resources the flow crosses, with a demand weight on each.
     pub path: Vec<(usize, f64)>,
+    /// Optional absolute rate ceiling (e.g. a per-stream disk cap).
     pub rate_cap: Option<f64>,
 }
 
 /// A stage completes when all its flows complete.
 #[derive(Debug, Clone, Default)]
 pub struct Stage {
+    /// Flows that run concurrently and must all finish to end the stage.
     pub flows: Vec<FlowSpec>,
 }
 
 /// A task: container slot on `node`, then stages in order.
 #[derive(Debug, Clone)]
 pub struct Task {
+    /// Container/node index executing the task.
     pub node: usize,
+    /// Stages executed sequentially.
     pub stages: Vec<Stage>,
 }
 
@@ -72,6 +80,7 @@ pub struct Simulator {
 }
 
 impl Simulator {
+    /// Build a simulator over `resources` with per-node container slots.
     pub fn new(resources: Vec<Resource>, containers: Vec<usize>) -> Self {
         Self {
             resources,
@@ -79,6 +88,7 @@ impl Simulator {
         }
     }
 
+    /// The resource table (for id lookups in traces).
     pub fn resources(&self) -> &[Resource] {
         &self.resources
     }
@@ -210,6 +220,9 @@ impl Simulator {
                 }
             });
             for t in completed_tasks {
+                // lint:allow(no-panic): every flow is created by activate()
+                // against a task in `running`, and tasks only retire after
+                // their last flow completes
                 let pos = running.iter().position(|rt| rt.idx == t).expect("running");
                 running[pos].live_flows -= 1;
                 if running[pos].live_flows == 0 {
@@ -239,7 +252,7 @@ impl Simulator {
     /// Max-min fair progressive filling with weights and per-flow caps.
     fn assign_rates(&self, flows: &mut [ActiveFlow]) {
         const EPS: f64 = 1e-12;
-        for f in flows.iter_mut() {
+        for f in &mut *flows {
             f.rate = 0.0;
         }
         let mut frozen = vec![false; flows.len()];

@@ -18,9 +18,13 @@
 //! - [`mountain`] — the §5.2 storage-mountain surface at paper scale
 //!   (Figure 6).
 
+/// Cluster-level resource model (nodes, NICs, disks).
 pub mod cluster;
+/// The discrete-event flow simulator core.
 pub mod engine;
+/// The throughput-mountain sweep (Figure 6).
 pub mod mountain;
+/// TeraSort on the simulator (Figure 5 cross-check).
 pub mod terasort;
 
 pub use cluster::{BackendKind, ClusterSim, SimConstants};

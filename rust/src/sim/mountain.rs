@@ -57,7 +57,9 @@ impl Default for MountainParams {
 /// One surface sample.
 #[derive(Debug, Clone, Copy)]
 pub struct MountainPoint {
+    /// Bytes actually read, per sweep point.
     pub data_bytes: f64,
+    /// Bytes skipped past, per sweep point.
     pub skip_bytes: f64,
     /// Effective read throughput, MB/s.
     pub throughput_mbs: f64,

@@ -14,14 +14,20 @@ use crate::error::Result;
 /// One simulated TeraSort run.
 #[derive(Debug)]
 pub struct TerasortSimReport {
+    /// Backend the run was simulated on.
     pub backend: String,
+    /// Simulated map-phase wall time (seconds).
     pub map_time: f64,
+    /// Simulated reduce-phase wall time (seconds).
     pub reduce_time: f64,
+    /// Flow-level result for the map phase.
     pub result_map: SimResult,
+    /// Flow-level result for the reduce phase.
     pub result_reduce: SimResult,
 }
 
 impl TerasortSimReport {
+    /// Map + reduce wall time.
     pub fn total(&self) -> f64 {
         self.map_time + self.reduce_time
     }

@@ -16,6 +16,7 @@ pub struct BlockId {
 }
 
 impl BlockId {
+    /// Block `index` of `object`.
     pub fn new(object: impl Into<String>, index: u64) -> Self {
         Self {
             object: object.into(),
@@ -32,11 +33,14 @@ impl BlockId {
 /// Geometry of an object split into fixed-size blocks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BlockGeometry {
+    /// Full object size in bytes.
     pub object_size: u64,
+    /// Block size in bytes.
     pub block_size: u64,
 }
 
 impl BlockGeometry {
+    /// A geometry; errors if `block_size` is zero.
     pub fn new(object_size: u64, block_size: u64) -> Result<Self> {
         if block_size == 0 {
             return Err(Error::InvalidArg("block_size must be > 0".into()));
@@ -86,72 +90,17 @@ impl BlockGeometry {
     }
 }
 
-/// IEEE CRC-32 lookup table, built at compile time (the offline crate set
-/// has no `crc32fast`; a one-byte-at-a-time table walk is plenty for the
-/// payload sizes the tiers move).
-const CRC32_TABLE: [u32; 256] = {
-    let mut table = [0u32; 256];
-    let mut i = 0;
-    while i < 256 {
-        let mut c = i as u32;
-        let mut k = 0;
-        while k < 8 {
-            c = if c & 1 != 0 {
-                0xEDB8_8320 ^ (c >> 1)
-            } else {
-                c >> 1
-            };
-            k += 1;
-        }
-        table[i] = c;
-        i += 1;
-    }
-    table
-};
-
-/// Streaming IEEE CRC-32 accumulator: feed chunks as they arrive (the
-/// chunked [`crate::storage::ObjectWriter`] path), then [`Crc32::finish`].
-/// `Crc32::new().update(d).finish() == checksum(d)` for any split of `d`.
-#[derive(Debug, Clone)]
-pub struct Crc32 {
-    state: u32,
-}
-
-impl Crc32 {
-    pub fn new() -> Self {
-        Self { state: !0u32 }
-    }
-
-    /// Absorb one chunk.
-    pub fn update(&mut self, data: &[u8]) {
-        let mut c = self.state;
-        for &b in data {
-            c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
-        }
-        self.state = c;
-    }
-
-    /// Final checksum over every chunk absorbed so far (non-consuming, so
-    /// a writer can report a running CRC).
-    pub fn finish(&self) -> u32 {
-        !self.state
-    }
-}
-
-impl Default for Crc32 {
-    fn default() -> Self {
-        Self::new()
-    }
-}
+/// Streaming IEEE CRC-32 accumulator, shared with the cluster plane's
+/// frame trailer — the single implementation lives in
+/// [`crate::util::crc32`]; this re-export keeps the storage tier's
+/// historical import path working.
+pub use crate::util::crc32::Crc32;
 
 /// CRC32 checksum of a block (the PFS tier verifies on read; the paper's
 /// data-node-level erasure coding is out of scope, per-block CRC gives the
-/// equivalent corruption *detection* signal).
-pub fn checksum(data: &[u8]) -> u32 {
-    let mut c = Crc32::new();
-    c.update(data);
-    c.finish()
-}
+/// equivalent corruption *detection* signal). Delegates to the tree's one
+/// CRC implementation in [`crate::util::crc32`].
+pub use crate::util::crc32::checksum;
 
 /// Verify `data` against `stored`, or return [`Error::ChecksumMismatch`].
 pub fn verify_checksum(object: &str, data: &[u8], stored: u32) -> Result<()> {

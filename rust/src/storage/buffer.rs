@@ -27,6 +27,7 @@ impl BufferPool {
         }
     }
 
+    /// The configured buffer capacity.
     pub fn buf_size(&self) -> usize {
         self.buf_size
     }

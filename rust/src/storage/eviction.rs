@@ -38,6 +38,7 @@ pub struct Lru {
 }
 
 impl Lru {
+    /// An empty LRU policy.
     pub fn new() -> Self {
         Self {
             tick: 0,
@@ -89,6 +90,7 @@ pub struct Lfu {
 }
 
 impl Lfu {
+    /// An empty LFU policy.
     pub fn new() -> Self {
         Self {
             tick: 0,

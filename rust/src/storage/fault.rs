@@ -82,13 +82,21 @@ impl FaultKind {
 /// The operation a trigger watches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpKind {
+    /// Opening an existing object for read.
     Open,
+    /// Creating a staged writer.
     Create,
+    /// Existence/length query.
     Stat,
+    /// Object deletion.
     Delete,
+    /// Positional read.
     ReadAt,
+    /// Staged append.
     Append,
+    /// Writer commit (rename into place).
     Commit,
+    /// Writer abort (cleanup of staging state).
     Abort,
 }
 
@@ -283,9 +291,13 @@ impl FaultPlan {
 /// Counters of faults that actually fired.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FaultStats {
+    /// Operations that returned an injected error.
     pub injected_errors: u64,
+    /// Reads truncated by a short-read fault.
     pub short_reads: u64,
+    /// Reads corrupted by a bit-flip fault.
     pub corruptions: u64,
+    /// Simulated crashes (writer abandoned mid-operation).
     pub crashes: u64,
 }
 
@@ -312,7 +324,7 @@ impl Shared {
         }
         let mut fired = None;
         let mut g = self.triggers.lock().unwrap();
-        for (t, seen) in g.iter_mut() {
+        for (t, seen) in &mut *g {
             if t.op != op {
                 continue;
             }
@@ -566,7 +578,12 @@ impl ObjectWriter for FaultWriter<'_> {
                 // and must leave no orphans: drop the staging cleanly
                 let err = self.shared.trip(kind, OpKind::Commit, &self.key);
                 if let Some(w) = self.inner.take() {
-                    let _ = w.abort();
+                    if let Err(e) = w.abort() {
+                        crate::log_warn!(
+                            "staging cleanup after injected commit fault on `{}` failed: {e}",
+                            self.key
+                        );
+                    }
                 }
                 Err(err)
             }
@@ -587,7 +604,13 @@ impl ObjectWriter for FaultWriter<'_> {
             Some(kind) => {
                 let err = self.shared.trip(kind, OpKind::Abort, &self.key);
                 if let Some(w) = self.inner.take() {
-                    let _ = w.abort(); // still clean up: abort is best-effort
+                    // still clean up: abort is best-effort
+                    if let Err(e) = w.abort() {
+                        crate::log_warn!(
+                            "staging cleanup after injected abort fault on `{}` failed: {e}",
+                            self.key
+                        );
+                    }
                 }
                 Err(err)
             }

@@ -33,10 +33,15 @@ static HDFS_WRITER_SEQ: AtomicU64 = AtomicU64::new(0);
 /// write-amplification argument).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct HdfsStats {
+    /// Bytes the caller asked to write (before replication).
     pub bytes_written_logical: u64,
+    /// Bytes actually written across all replicas.
     pub bytes_written_physical: u64,
+    /// Bytes served to readers.
     pub bytes_read: u64,
+    /// Reads satisfied by the reader's own node.
     pub local_reads: u64,
+    /// Reads that crossed to another node's replica.
     pub remote_reads: u64,
 }
 
@@ -80,14 +85,17 @@ impl HdfsLike {
         })
     }
 
+    /// Simulated datanode count.
     pub fn nodes(&self) -> usize {
         self.node_dirs.len()
     }
 
+    /// Replication factor applied to writes.
     pub fn replication(&self) -> usize {
         self.replication
     }
 
+    /// Snapshot of the backend's counters.
     pub fn stats(&self) -> HdfsStats {
         HdfsStats {
             bytes_written_logical: self.logical.load(Ordering::Relaxed),
@@ -321,7 +329,13 @@ impl ObjectWriter for HdfsWriter<'_> {
                     .collect();
                 handles
                     .into_iter()
-                    .map(|h| h.join().expect("replica write leg panicked"))
+                    .map(|h| {
+                        // a panicked leg fails the append instead of tearing
+                        // down the writer's thread
+                        h.join().unwrap_or_else(|_| {
+                            Err(Error::Job("replica write leg panicked".into()))
+                        })
+                    })
                     .collect()
             });
             for r in results {

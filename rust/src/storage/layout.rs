@@ -8,6 +8,25 @@
 
 use crate::error::{Error, Result};
 
+/// Every reserved dot-key namespace a store may place under its root —
+/// the single registry of the tree's hidden object prefixes.
+///
+/// The four entries map to the subsystems that own them: `.wip/` is the
+/// memory tier's staging area for in-flight streaming writes
+/// ([`crate::storage::tls`]), `.dirty/` holds evicted dirty blocks
+/// awaiting checkpoint ([`crate::storage::tls`]), `.shuffle/` is the job
+/// plane's transient spill namespace ([`crate::storage::SHUFFLE_NS`]),
+/// and `.quarantine/` parks undecodable objects during recovery
+/// ([`crate::storage::pfs::QUARANTINE_NS`]).
+///
+/// `tlstore-lint`'s `reserved-prefix` rule is anchored here: any
+/// `".name/"` key-prefix literal in library code must begin with one of
+/// these entries, so a new hidden namespace cannot ship without being
+/// registered (and without `docs/FAULT_MODEL.md` saying how `recover()`
+/// treats it). The cross-link test below pins the registry to the
+/// per-module namespace consts so the two can never drift.
+pub const RESERVED_PREFIXES: [&str; 4] = [".wip/", ".dirty/", ".shuffle/", ".quarantine/"];
+
 /// Striping geometry of one object on the PFS tier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StripeLayout {
@@ -18,6 +37,7 @@ pub struct StripeLayout {
 }
 
 impl StripeLayout {
+    /// A layout; errors if `stripe_size` or `servers` is zero.
     pub fn new(stripe_size: u64, servers: usize) -> Result<Self> {
         if stripe_size == 0 {
             return Err(Error::InvalidArg("stripe_size must be > 0".into()));
@@ -112,6 +132,36 @@ pub struct StripeSegment {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn registry_covers_every_namespace_const() {
+        // The registry and the per-module consts must agree exactly: a
+        // namespace in one but not the other means either an unregistered
+        // hidden prefix (linter-invisible) or a stale registry entry.
+        let consts = [
+            crate::storage::SHUFFLE_NS,
+            crate::storage::pfs::QUARANTINE_NS,
+            crate::storage::tls::DIRTY_NS,
+            crate::storage::tls::WIP_NS,
+        ];
+        for c in consts {
+            assert!(
+                RESERVED_PREFIXES.contains(&c),
+                "namespace const {c:?} is not in layout::RESERVED_PREFIXES"
+            );
+        }
+        assert_eq!(
+            RESERVED_PREFIXES.len(),
+            consts.len(),
+            "registry entry without a backing namespace const"
+        );
+        for p in RESERVED_PREFIXES {
+            assert!(
+                p.starts_with('.') && p.ends_with('/') && p.len() > 2,
+                "registry entry {p:?} is not a `.name/` namespace"
+            );
+        }
+    }
 
     #[test]
     fn paper_geometry_block_spans_both_servers() {

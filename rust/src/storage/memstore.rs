@@ -43,15 +43,22 @@ use crate::storage::{copy_clamped, ObjectMeta, ObjectReader, ObjectStore, Object
 /// Snapshot of the tier's counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct MemStats {
+    /// Reads served from the tier.
     pub hits: u64,
+    /// Reads that fell through.
     pub misses: u64,
+    /// Victims evicted to fit reservations.
     pub evictions: u64,
+    /// Blocks admitted.
     pub inserts: u64,
+    /// Bytes currently admitted.
     pub used: u64,
+    /// Byte capacity.
     pub capacity: u64,
 }
 
 impl MemStats {
+    /// Fraction of reads served from the tier (0 when no reads).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -118,6 +125,7 @@ impl MemStore {
         })
     }
 
+    /// The configured byte capacity.
     pub fn capacity(&self) -> u64 {
         self.capacity
     }
@@ -151,6 +159,9 @@ impl MemStore {
             let mut g = self.shards[(home + off) % n].lock().unwrap();
             while self.used.load(Ordering::SeqCst).saturating_add(need) > self.capacity {
                 let Some(victim) = g.policy.victim() else { break };
+                // lint:allow(no-panic): the policy and map are updated in
+                // lockstep under this shard's lock, so a victim the policy
+                // names is always present in the map
                 let bytes = g.map.remove(&victim).expect("policy tracks live keys");
                 self.used.fetch_sub(bytes.len() as u64, Ordering::SeqCst);
                 g.policy.on_remove(&victim);
@@ -306,6 +317,7 @@ impl MemStore {
         self.used.load(Ordering::SeqCst)
     }
 
+    /// Snapshot of the tier's counters.
     pub fn stats(&self) -> MemStats {
         MemStats {
             hits: self.hits.load(Ordering::Relaxed),

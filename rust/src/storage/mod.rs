@@ -39,14 +39,23 @@
 //! `TlsConfig` builder; see `docs/ARCHITECTURE.md` for the sharding,
 //! lock-order, and commit-visibility invariants.
 
+/// Block geometry + per-block CRC framing.
 pub mod block;
+/// The §3.2 app/PFS buffer pair.
 pub mod buffer;
+/// LRU/LFU eviction policies.
 pub mod eviction;
+/// Fault-injection store wrapper for crash drills.
 pub mod fault;
+/// HDFS-like replicated baseline backend.
 pub mod hdfs;
+/// Key-namespace layout: the reserved-prefix registry.
 pub mod layout;
+/// Lock-striped in-memory tier.
 pub mod memstore;
+/// Striped parallel-FS tier.
 pub mod pfs;
+/// The two-level store combining both tiers.
 pub mod tls;
 
 use std::fmt;

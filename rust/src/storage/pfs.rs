@@ -66,9 +66,13 @@ pub struct Hints {
 /// Counters for the tier.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PfsStats {
+    /// Bytes striped out to servers.
     pub bytes_written: u64,
+    /// Bytes read back from stripes.
     pub bytes_read: u64,
+    /// Objects committed.
     pub objects_written: u64,
+    /// Read operations served.
     pub reads: u64,
 }
 
@@ -128,14 +132,17 @@ impl Pfs {
         })
     }
 
+    /// Stripe-server count.
     pub fn servers(&self) -> usize {
         self.server_dirs.len()
     }
 
+    /// Stripe unit used when a writer doesn't override it.
     pub fn default_stripe(&self) -> u64 {
         self.default_stripe
     }
 
+    /// Snapshot of the tier's counters.
     pub fn stats(&self) -> PfsStats {
         PfsStats {
             bytes_written: self.bytes_written.load(Ordering::Relaxed),
@@ -646,6 +653,8 @@ impl PfsWriter<'_> {
                     .enumerate()
                     .filter(|(s, _)| !per_server[*s].is_empty())
                     .map(|(s, slot)| {
+                        // lint:allow(no-panic): the open loop above filled
+                        // every slot this server-filter can select
                         let f = slot.as_mut().expect("opened above");
                         let segs = &per_server[s];
                         let path = &paths[s];
@@ -654,7 +663,13 @@ impl PfsWriter<'_> {
                     .collect();
                 handles
                     .into_iter()
-                    .map(|h| h.join().expect("pfs append leg panicked"))
+                    .map(|h| {
+                        // a panicked leg fails the append instead of
+                        // tearing down the writer's thread
+                        h.join().unwrap_or_else(|_| {
+                            Err(Error::Job("pfs append leg panicked".into()))
+                        })
+                    })
                     .collect()
             });
             for r in results {
@@ -665,6 +680,8 @@ impl PfsWriter<'_> {
                 if per_server[s].is_empty() {
                     continue;
                 }
+                // lint:allow(no-panic): the open loop above filled every
+                // slot with segments to write
                 let f = self.files[s].as_mut().expect("opened above");
                 write_segments(f, &per_server[s], base, chunk, &paths[s])?;
             }

@@ -49,12 +49,14 @@ use crate::storage::{
 };
 use crate::util::pool::ThreadPool;
 
-/// Namespace prefix for dirty-block spill objects on the PFS.
-const DIRTY_NS: &str = ".dirty/";
+/// Namespace prefix for dirty-block spill objects on the PFS. Registered
+/// in [`crate::storage::layout::RESERVED_PREFIXES`].
+pub(crate) const DIRTY_NS: &str = ".dirty/";
 /// Namespace prefix for memory-tier blocks staged by in-flight writers
 /// (invisible to readers until the writer's commit moves them under the
-/// real key).
-const WIP_NS: &str = ".wip/";
+/// real key). Registered in
+/// [`crate::storage::layout::RESERVED_PREFIXES`].
+pub(crate) const WIP_NS: &str = ".wip/";
 /// Marker file pinning the block size of a store root.
 const GEOMETRY_MARKER: &str = ".tls-geometry";
 
@@ -64,14 +66,23 @@ static TLS_WRITER_SEQ: AtomicU64 = AtomicU64::new(0);
 /// Configuration for [`TwoLevelStore`].
 #[derive(Debug, Clone)]
 pub struct TlsConfig {
+    /// Directory holding both tiers (`mem` marker + `pfs/` subtree).
     pub root: PathBuf,
+    /// Byte capacity of the memory tier.
     pub mem_capacity: u64,
+    /// Logical block size objects are chunked into.
     pub block_size: u64,
+    /// Server directories (stripe targets) of the PFS tier.
     pub pfs_servers: usize,
+    /// Stripe unit of the PFS tier.
     pub stripe_size: u64,
+    /// Application-side staging buffer of the §3.2 pair.
     pub app_buffer: u64,
+    /// PFS-side flush buffer of the §3.2 pair.
     pub pfs_buffer: u64,
+    /// Eviction policy of the memory tier: `lru` or `lfu`.
     pub eviction: String,
+    /// Worker threads of the shared PFS pool.
     pub workers: usize,
     /// Lock stripes of the memory tier (see
     /// [`MemStore::with_shards`]); `1` reproduces the single-mutex
@@ -127,46 +138,57 @@ pub struct TlsConfigBuilder {
 }
 
 impl TlsConfigBuilder {
+    /// Set the memory-tier byte capacity.
     pub fn mem_capacity(mut self, v: u64) -> Self {
         self.cfg.mem_capacity = v;
         self
     }
+    /// Set the logical block size.
     pub fn block_size(mut self, v: u64) -> Self {
         self.cfg.block_size = v;
         self
     }
+    /// Set the PFS server (stripe-target) count.
     pub fn pfs_servers(mut self, v: usize) -> Self {
         self.cfg.pfs_servers = v;
         self
     }
+    /// Set the PFS stripe unit.
     pub fn stripe_size(mut self, v: u64) -> Self {
         self.cfg.stripe_size = v;
         self
     }
+    /// Set the application-side buffer size.
     pub fn app_buffer(mut self, v: u64) -> Self {
         self.cfg.app_buffer = v;
         self
     }
+    /// Set the PFS-side buffer size.
     pub fn pfs_buffer(mut self, v: u64) -> Self {
         self.cfg.pfs_buffer = v;
         self
     }
+    /// Set the eviction policy (`lru` or `lfu`).
     pub fn eviction(mut self, v: &str) -> Self {
         self.cfg.eviction = v.into();
         self
     }
+    /// Set the PFS worker-pool width.
     pub fn workers(mut self, v: usize) -> Self {
         self.cfg.workers = v;
         self
     }
+    /// Set the memory-tier lock-stripe count.
     pub fn mem_shards(mut self, v: usize) -> Self {
         self.cfg.mem_shards = v;
         self
     }
+    /// Choose dual-leg (true) vs sequential write-through.
     pub fn concurrent_writethrough(mut self, v: bool) -> Self {
         self.cfg.concurrent_writethrough = v;
         self
     }
+    /// Validate the knobs and produce the final config.
     pub fn build(self) -> Result<TlsConfig> {
         let c = &self.cfg;
         if c.block_size == 0 || c.stripe_size == 0 || c.app_buffer == 0 || c.pfs_buffer == 0 {
@@ -310,18 +332,22 @@ impl TwoLevelStore {
         }
     }
 
+    /// The validated configuration this store was built with.
     pub fn config(&self) -> &TlsConfig {
         &self.cfg
     }
 
+    /// Memory-tier counters (hits, evictions, used bytes).
     pub fn mem_stats(&self) -> MemStats {
         self.mem.stats()
     }
 
+    /// PFS-tier counters (stripe reads/writes, bytes).
     pub fn pfs_stats(&self) -> PfsStats {
         self.pfs.stats()
     }
 
+    /// Combined two-tier counters for the metrics plane.
     pub fn stats(&self) -> TlsStats {
         TlsStats {
             mem_bytes_read: self.mem_bytes_read.load(Ordering::Relaxed),
@@ -342,6 +368,8 @@ impl TwoLevelStore {
     }
 
     fn geometry(&self, size: u64) -> BlockGeometry {
+        // lint:allow(no-panic): `cfg.block_size` was validated non-zero by
+        // TwoLevelStore::open, the only constructor
         BlockGeometry::new(size, self.cfg.block_size).expect("validated block size")
     }
 
@@ -358,9 +386,18 @@ impl TwoLevelStore {
         let mut dirty = self.dirty.lock().unwrap();
         for (key, bytes) in evicted {
             if dirty.remove(&key) {
-                let (obj, idx) = key.rsplit_once('#').expect("storage key format");
-                self.pfs
-                    .write(&Self::dirty_key(obj, idx.parse().unwrap()), &bytes)?;
+                // a malformed storage key means the dirty bytes cannot be
+                // routed to a spill file — surface it instead of dropping
+                // the only copy on the floor (or panicking mid-eviction)
+                let parsed = key
+                    .rsplit_once('#')
+                    .and_then(|(obj, idx)| Some((obj, idx.parse::<u64>().ok()?)));
+                let Some((obj, idx)) = parsed else {
+                    return Err(Error::RecoveryNeeded(format!(
+                        "dirty block `{key}`: malformed storage key, cannot spill"
+                    )));
+                };
+                self.pfs.write(&Self::dirty_key(obj, idx), &bytes)?;
                 self.dirty_spills.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -385,7 +422,11 @@ impl TwoLevelStore {
         }
         for i in from..to {
             self.mem.remove(&BlockId::new(key, i).storage_key());
-            let _ = self.pfs.delete(&Self::dirty_key(key, i));
+            // delete is idempotent for missing spills; an Err is a real
+            // filesystem failure and the orphan is recover()'s problem
+            if let Err(e) = self.pfs.delete(&Self::dirty_key(key, i)) {
+                crate::log_warn!("purge of stale spill `{key}#{i}` failed: {e}");
+            }
         }
     }
 
@@ -401,7 +442,11 @@ impl TwoLevelStore {
             }
         }
         for i in 0..upto {
-            let _ = self.pfs.delete(&Self::dirty_key(key, i));
+            // same contract as purge_stale_blocks: only real filesystem
+            // failures land here, and recover() reaps what this pass missed
+            if let Err(e) = self.pfs.delete(&Self::dirty_key(key, i)) {
+                crate::log_warn!("purge of stale spill `{key}#{i}` failed: {e}");
+            }
         }
     }
 
@@ -422,8 +467,9 @@ impl TwoLevelStore {
     }
 
     /// Whether `key` is a dot-prefixed key callers may not write:
-    /// everything under `.` is reserved for store internals (`.dirty/`,
-    /// `.wip/`, `.quarantine/`, the geometry marker) **except** the
+    /// everything under `.` is reserved for store internals (the
+    /// registered [`crate::storage::layout::RESERVED_PREFIXES`]
+    /// namespaces plus the geometry marker) **except** the
     /// [`SHUFFLE_NS`](crate::storage::SHUFFLE_NS) shuffle namespace,
     /// which the compute plane deliberately routes through the store so
     /// intermediate job data rides the two-level tiers (and recovery can
@@ -513,10 +559,12 @@ impl TwoLevelStore {
                     let (m, p) = std::thread::scope(|s| {
                         let mem_leg = s.spawn(|| self.put_blocks(key, data, false));
                         let pfs_res = self.pfs.write(key, data);
-                        (
-                            mem_leg.join().expect("memory-tier write leg panicked"),
-                            pfs_res,
-                        )
+                        // a panicked leg fails the write instead of tearing
+                        // down the calling thread
+                        let mem_res = mem_leg.join().unwrap_or_else(|_| {
+                            Err(Error::Job("memory-tier write leg panicked".into()))
+                        });
+                        (mem_res, pfs_res)
                     });
                     (m, p, true)
                 } else {
@@ -797,7 +845,11 @@ impl TwoLevelStore {
         let mut dirty = self.dirty.lock().unwrap();
         for i in 0..geo.num_blocks() {
             dirty.remove(&BlockId::new(key, i).storage_key());
-            let _ = self.pfs.delete(&Self::dirty_key(key, i));
+            // the checkpoint already landed, so a leftover spill is an
+            // orphan (correctness-neutral); recover() reaps it later
+            if let Err(e) = self.pfs.delete(&Self::dirty_key(key, i)) {
+                crate::log_warn!("checkpoint `{key}`: spill cleanup for block {i} failed: {e}");
+            }
         }
         drop(dirty);
         self.checkpoints.fetch_add(1, Ordering::Relaxed);
@@ -1121,6 +1173,7 @@ impl TlsWriter<'_> {
             // runs on a scoped thread while this thread drives the memory
             // leg — the same `concurrent_writethrough` contract as the
             // whole-object write-through path.
+            // lint:allow(no-panic): `self.pfs.is_some()` guards this branch
             let mut pfs = self.pfs.take().expect("checked is_some");
             let (pfs, pfs_res, mem_res) = std::thread::scope(|s| {
                 let pfs_leg = s.spawn(move || {
@@ -1128,10 +1181,18 @@ impl TlsWriter<'_> {
                     (pfs, r)
                 });
                 let mem_res = self.accumulate(chunk);
-                let (pfs, pfs_res) = pfs_leg.join().expect("PFS write leg panicked");
-                (pfs, pfs_res, mem_res)
+                // a panicked PFS leg fails the append (losing the leg
+                // writer, which only Drop's best-effort cancel would use)
+                match pfs_leg.join() {
+                    Ok((pfs, pfs_res)) => (Some(pfs), pfs_res, mem_res),
+                    Err(_) => (
+                        None,
+                        Err(Error::Job("PFS write leg panicked".into())),
+                        mem_res,
+                    ),
+                }
             });
-            self.pfs = Some(pfs);
+            self.pfs = pfs;
             pfs_res?;
             mem_res
         } else {
@@ -1152,6 +1213,8 @@ impl TlsWriter<'_> {
         let block_size = self.store.cfg.block_size as usize;
         let mut rest = chunk;
         while !rest.is_empty() && self.mem_ok {
+            // lint:allow(no-panic): `block` is Some from construction until
+            // commit consumes the writer; appends cannot run after commit
             let block = self.block.as_mut().expect("mem-leg writer has a block");
             let take = (block_size - block.len()).min(rest.len());
             block.extend_from_slice(&rest[..take]);
@@ -1166,6 +1229,8 @@ impl TlsWriter<'_> {
     /// Move the accumulator's bytes (a full block, or the final partial
     /// one at commit) into the mode's staging area.
     fn seal_block(&mut self) -> Result<()> {
+        // lint:allow(no-panic): `block` is Some from construction until
+        // commit consumes the writer; seal_block runs before that point
         let block = self.block.as_mut().expect("mem-leg writer has a block");
         if block.is_empty() {
             return Ok(());
@@ -1190,6 +1255,8 @@ impl TlsWriter<'_> {
                     Err(e) => return Err(e),
                 }
             }
+            // lint:allow(no-panic): Bypass writers never take the mem leg
+            // (`mem_leg` is false), so nothing is ever accumulated to seal
             WriteMode::Bypass => unreachable!("Bypass writers stage no blocks"),
         }
         Ok(())
@@ -1218,6 +1285,8 @@ impl TlsWriter<'_> {
             .map(|o| self.store.geometry(o.size).num_blocks());
         match self.mode {
             WriteMode::Bypass => {
+                // lint:allow(no-panic): Bypass writers are constructed with
+                // a PFS leg and nothing else ever takes it
                 self.pfs.take().expect("bypass writer has a PFS leg").finish()?;
                 if let Some(oldn) = old_blocks {
                     // nothing was cached for the new version: every
@@ -1242,6 +1311,9 @@ impl TlsWriter<'_> {
                 // The PFS leg gates the commit (the paper's eq. 6: bounded
                 // by the slower tier); if it fails, drop the staging and
                 // surface the error — nothing became visible.
+                // lint:allow(no-panic): write-through writers are built with
+                // a PFS leg; a failed append returns Err before commit, and
+                // committing after an Err is outside the writer contract
                 let pfs_leg = self.pfs.take().expect("write-through has a PFS leg");
                 if let Err(e) = pfs_leg.finish() {
                     self.remove_wip();
@@ -1509,15 +1581,27 @@ impl ObjectStore for TwoLevelStore {
         };
         let geo = self.geometry(entry.size);
         let mut dirty = self.dirty.lock().unwrap();
+        let mut spill_err: Option<String> = None;
         for i in 0..geo.num_blocks() {
             let skey = BlockId::new(key, i).storage_key();
             self.mem.remove(&skey);
             dirty.remove(&skey);
-            let _ = self.pfs.delete(&Self::dirty_key(key, i));
+            // delete is idempotent for missing spills, so an Err here is a
+            // real filesystem failure leaving an orphan `.dirty/` object
+            if let Err(e) = self.pfs.delete(&Self::dirty_key(key, i)) {
+                crate::log_warn!("delete `{key}`: spill cleanup for block {i} failed: {e}");
+                spill_err.get_or_insert_with(|| format!("block {i}: {e}"));
+            }
         }
         drop(dirty);
         self.pfs.delete(key)?;
         self.objects.lock().unwrap().remove(key);
+        if let Some(e) = spill_err {
+            // the object is gone, but its spill orphans need recover()
+            return Err(Error::RecoveryNeeded(format!(
+                "delete `{key}` left orphan dirty spills ({e})"
+            )));
+        }
         Ok(())
     }
 
@@ -1562,6 +1646,30 @@ mod tests {
             .build()
             .unwrap();
         TwoLevelStore::open(cfg).unwrap()
+    }
+
+    #[test]
+    fn delete_surfaces_failed_spill_cleanup() {
+        // Regression: `delete` used to swallow spill-cleanup errors with
+        // `let _ =`, silently leaving orphan `.dirty/` objects behind. A
+        // directory planted at the spill's metadata path defeats the
+        // unlink, which must now surface as RecoveryNeeded — after the
+        // object itself is still fully deleted.
+        let dir = TempDir::new("tls-del-spill").unwrap();
+        let s = store(&dir, 4096, 256);
+        s.write("victim", &rand_data(100, 9), WriteMode::MemOnly).unwrap();
+        let meta = dir
+            .path()
+            .join("pfs")
+            .join("meta")
+            .join(".dirty%2Fvictim#0.meta");
+        std::fs::create_dir_all(&meta).unwrap();
+        let err = s.delete("victim").unwrap_err();
+        assert!(matches!(err, Error::RecoveryNeeded(_)), "{err}");
+        assert!(!s.exists("victim"), "object must be gone despite the error");
+        // with the obstruction removed, delete is idempotent and clean
+        std::fs::remove_dir(&meta).unwrap();
+        s.delete("victim").unwrap();
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! model-parity harness ([`crate::testing::parity`]) measure it against
 //! the §4 throughput models on all four stores.
 
+/// The 100-byte TeraSort record format + key helpers.
 pub mod records;
 
 use std::path::Path;
@@ -53,8 +54,11 @@ pub use records::{key_prefix, RECORD_SIZE, KEY_SIZE};
 /// Kernel geometry — must match `python/compile/kernels/sortnet.py` and
 /// the artifact manifest (validated at runtime load).
 pub const TILES: usize = 64;
+/// Vector lane width of the sort kernel tile.
 pub const LANE: usize = 256;
+/// Keys per kernel block (`TILES * LANE`).
 pub const BLOCK_KEYS: usize = TILES * LANE;
+/// Radix buckets of the partitioner (one byte).
 pub const BUCKETS: usize = 256;
 
 // ---------------------------------------------------------------- teragen
@@ -151,6 +155,7 @@ impl Partitioner {
         }
     }
 
+    /// Number of reduce partitions the keyspace is split into.
     pub fn num_partitions(&self) -> u32 {
         self.num_partitions
     }
@@ -336,6 +341,7 @@ pub struct ArtifactHandle {
 }
 
 impl ArtifactHandle {
+    /// Validate that `name` exists in the runtime's manifest and pin it.
     pub fn new(runtime: Arc<Runtime>, name: &str) -> Result<Self> {
         runtime.artifact(name)?; // validate now
         Ok(Self {
@@ -344,12 +350,16 @@ impl ArtifactHandle {
         })
     }
 
+    /// The validated artifact spec.
     pub fn get(&self) -> &Artifact {
+        // lint:allow(no-panic): name validated in `new`; the runtime's
+        // artifact table is immutable after load, so the lookup cannot fail
         self.runtime.artifact(&self.name).expect("validated")
     }
 }
 
 impl SortMapper {
+    /// A mapper that sorts blocks with `kernel` and routes by `partitioner`.
     pub fn new(kernel: Arc<SortKernel>, partitioner: Partitioner) -> Self {
         Self { kernel, partitioner }
     }
@@ -562,8 +572,11 @@ pub fn run_terasort(
 /// TeraValidate result.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ValidateReport {
+    /// Records validated.
     pub records: u64,
+    /// Whether the concatenated output was globally sorted.
     pub sorted: bool,
+    /// XOR-fold checksum of all record keys.
     pub checksum: u64,
 }
 
@@ -590,7 +603,7 @@ pub fn teravalidate(store: &dyn ObjectStore, prefix: &str) -> Result<ValidateRep
             let take = ((len - off) as usize).min(buf.len());
             read_full_at(reader.as_ref(), off, &mut buf[..take])?;
             for rec in buf[..take].chunks_exact(RECORD_SIZE) {
-                let k: [u8; KEY_SIZE] = rec[..KEY_SIZE].try_into().unwrap();
+                let k = records::full_key(rec, 0);
                 if let Some(prev) = last_key {
                     if k < prev {
                         sorted = false;
@@ -695,7 +708,7 @@ mod tests {
     fn cpu_kernel_histogram_counts_top_bytes() {
         let mut hist = [0i64; BUCKETS];
         SortKernel::Cpu
-            .accumulate_histogram(&[0x00000001, 0x01020304, 0x01FFFFFF, 0xFF000000], &mut hist)
+            .accumulate_histogram(&[0x0000_0001, 0x0102_0304, 0x01FF_FFFF, 0xFF00_0000], &mut hist)
             .unwrap();
         assert_eq!(hist[0x00], 1);
         assert_eq!(hist[0x01], 2);

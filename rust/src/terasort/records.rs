@@ -34,12 +34,14 @@ pub fn key_prefix(rec: &[u8]) -> u32 {
 #[inline]
 pub fn full_key(data: &[u8], idx: usize) -> [u8; KEY_SIZE] {
     let off = idx * RECORD_SIZE;
-    data[off..off + KEY_SIZE].try_into().unwrap()
+    let mut key = [0u8; KEY_SIZE];
+    key.copy_from_slice(&data[off..off + KEY_SIZE]);
+    key
 }
 
 /// Row id a record was generated with.
 pub fn row_id(rec: &[u8]) -> u64 {
-    u64::from_be_bytes(rec[KEY_SIZE..KEY_SIZE + 8].try_into().unwrap())
+    crate::util::bytes::u64_be(&rec[KEY_SIZE..KEY_SIZE + 8])
 }
 
 /// Order-insensitive checksum of one record (sum over the cluster-wide

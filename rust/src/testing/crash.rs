@@ -59,6 +59,7 @@ pub fn payload(key: &str, version: u64, size: usize) -> Vec<u8> {
 /// A scripted sequence of [`Step`]s (builder style).
 #[derive(Debug, Clone, Default)]
 pub struct Workload {
+    /// Operations replayed against the store, in order.
     pub steps: Vec<Step>,
 }
 

@@ -10,8 +10,11 @@
 //! property, and on failure a greedy shrink over the generator's size
 //! parameter with the failing seed printed for reproduction.
 
+/// The backend-agnostic `ObjectStore` conformance suite.
 pub mod conformance;
+/// Crash-at-every-boundary drills over the fault store.
 pub mod crash;
+/// The model-vs-measured parity harness (§4 equations).
 pub mod parity;
 
 use std::path::{Path, PathBuf};
@@ -61,6 +64,7 @@ impl TempDir {
         Ok(Self { path })
     }
 
+    /// The directory's path.
     pub fn path(&self) -> &Path {
         &self.path
     }
@@ -83,8 +87,11 @@ pub type Gen<T> = fn(&mut Pcg32, usize) -> T;
 
 /// Configuration for [`proprun`].
 pub struct PropConfig {
+    /// Property cases to run.
     pub cases: u32,
+    /// Ceiling on generated input sizes.
     pub max_size: usize,
+    /// Base seed (reported on failure for reproduction).
     pub seed: u64,
 }
 

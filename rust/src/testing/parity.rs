@@ -117,8 +117,11 @@ pub const REPLICATION: usize = 3;
 /// the other two are the PR-4 multi-round pipelines).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ParityWorkload {
+    /// Distributed sort of 100-byte records.
     TeraSort,
+    /// Wordcount followed by a top-k stage.
     WordCountTopK,
+    /// Log sessionization pipeline.
     LogSessions,
 }
 
@@ -382,7 +385,9 @@ fn phase_parity(
 /// One workload × backend run.
 #[derive(Debug, Clone)]
 pub struct CaseReport {
+    /// Workload label of the case.
     pub workload: &'static str,
+    /// Backend label of the case.
     pub backend: &'static str,
     /// Read then write phase comparisons.
     pub phases: Vec<PhaseParity>,
@@ -404,9 +409,13 @@ impl CaseReport {
 /// The harness' full result.
 #[derive(Debug, Clone)]
 pub struct ParityReport {
+    /// Multiplicative tolerance band applied to each phase.
     pub tolerance: f64,
+    /// Seed the measured runs were generated from.
     pub seed: u64,
+    /// Microbenched device constants the models were fed.
     pub device: DeviceConstants,
+    /// One report per (workload, backend) pair.
     pub cases: Vec<CaseReport>,
 }
 
@@ -607,6 +616,7 @@ pub fn run_parity(cfg: &ParityConfig) -> Result<ParityReport> {
 /// accumulate more discretization error than the clean striped paths).
 #[derive(Debug, Clone)]
 pub struct SimModelCase {
+    /// Scenario label.
     pub name: &'static str,
     /// Per-node throughput the simulator produced, MB/s.
     pub sim_mbs: f64,

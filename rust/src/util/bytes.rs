@@ -13,6 +13,45 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Read a little-endian `u32` from the first 4 bytes of `b`.
+///
+/// The caller must have length-checked `b` (every use site sits behind a
+/// framing/bounds check); centralizing the conversion keeps the
+/// `try_into().unwrap()` idiom out of decoder bodies, which
+/// `tlstore-lint`'s `no-panic` rule rejects.
+#[inline]
+pub fn u32_le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+/// Read a little-endian `u64` from the first 8 bytes of `b` (see
+/// [`u32_le`] for the length contract).
+#[inline]
+pub fn u64_le(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Read a big-endian `u32` from the first 4 bytes of `b` (see [`u32_le`]
+/// for the length contract).
+#[inline]
+pub fn u32_be(b: &[u8]) -> u32 {
+    u32::from_be_bytes([b[0], b[1], b[2], b[3]])
+}
+
+/// Read a big-endian `u64` from the first 8 bytes of `b` (see [`u32_le`]
+/// for the length contract).
+#[inline]
+pub fn u64_be(b: &[u8]) -> u64 {
+    u64::from_be_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Read a little-endian `f32` from the first 4 bytes of `b` (see
+/// [`u32_le`] for the length contract).
+#[inline]
+pub fn f32_le(b: &[u8]) -> f32 {
+    f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
 /// Parse a human byte size: `"64"`, `"4k"`, `"1M"`, `"2.5G"`, `"1GiB"`,
 /// `"512 MB"` (case-insensitive; k/M/G/T are binary multiples, matching
 /// how the paper quotes block/stripe/buffer sizes).
@@ -110,5 +149,18 @@ mod tests {
     #[test]
     fn fmt_rate_mbs() {
         assert_eq!(fmt_rate(237e6), "237.0 MB/s");
+    }
+
+    #[test]
+    fn scalar_reads_match_std() {
+        let b = [0x01u8, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0xFF];
+        assert_eq!(u32_le(&b), 0x0403_0201);
+        assert_eq!(u32_be(&b), 0x0102_0304);
+        assert_eq!(u64_le(&b), 0x0807_0605_0403_0201);
+        assert_eq!(u64_be(&b), 0x0102_0304_0506_0708);
+        // extra trailing bytes are ignored: only the prefix is read
+        assert_eq!(u32_le(&b[..4]), u32_le(&b));
+        let f = 1.5f32.to_le_bytes();
+        assert_eq!(f32_le(&f), 1.5);
     }
 }

@@ -78,6 +78,8 @@ impl<T, K: Ord, F: Fn(&T) -> K> Iterator for KWayMerge<T, K, F> {
 
     fn next(&mut self) -> Option<T> {
         let entry = self.heap.pop()?;
+        // lint:allow(no-panic): a heap entry for `run` exists only while
+        // that run's staged slot is populated (refilled before re-push)
         let item = self.staged[entry.run].take().expect("staged head");
         if let Some(next) = self.runs[entry.run].next() {
             let key = (self.key_fn)(&next);

@@ -12,10 +12,15 @@ use std::time::Instant;
 /// compares by verbosity (a record is emitted when its level ≤ the filter).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable or surprising failures.
     Error,
+    /// Recoverable anomalies (e.g. a swallowed-then-logged cleanup error).
     Warn,
+    /// Routine progress events.
     Info,
+    /// Diagnostic detail.
     Debug,
+    /// Per-operation tracing.
     Trace,
 }
 

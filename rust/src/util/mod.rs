@@ -1,14 +1,21 @@
-//! Small shared substrates: PRNG, logging, byte formatting, thread pool,
-//! k-way merge.
+//! Small shared substrates: PRNG, logging, byte formatting, CRC-32,
+//! thread pool, k-way merge.
 //!
 //! Only the image's vendored crate set is reachable at build time, so the
 //! pieces a networked build would pull in (`rand`, `env_logger`,
 //! `rayon`-ish pooling) are implemented here as small, tested modules.
 
+/// Byte formatting/parsing helpers.
 pub mod bytes;
+/// The CRC32 (IEEE) implementation every checksum in the tree uses.
+pub mod crc32;
+/// K-way merge of sorted runs.
 pub mod kwaymerge;
+/// Env-filtered leveled logging macros.
 pub mod logger;
+/// Fixed-size scoped worker pool.
 pub mod pool;
+/// SplitMix64/xoshiro-style deterministic RNG.
 pub mod rng;
 
 pub use bytes::{fmt_bytes, fmt_rate, parse_bytes};

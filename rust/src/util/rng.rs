@@ -13,11 +13,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// An RNG seeded with `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
     #[inline]
+    /// Next 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -61,6 +63,7 @@ impl Pcg32 {
     }
 
     #[inline]
+    /// Next 32-bit output.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -70,6 +73,7 @@ impl Pcg32 {
     }
 
     #[inline]
+    /// Next 64-bit output (two 32-bit draws).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }

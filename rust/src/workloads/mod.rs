@@ -19,7 +19,9 @@
 //! `.shuffle/` storage namespace under the default spill threshold,
 //! which is exactly what makes them useful as conformance scenarios.
 
+/// Log-session reconstruction (sessionize + stats).
 pub mod sessions;
+/// Wordcount and its top-k variant.
 pub mod wordcount;
 
 use crate::error::{Error, Result};

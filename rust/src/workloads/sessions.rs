@@ -145,7 +145,8 @@ impl Reducer for SessionReducer {
     fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
         let flush = |out: &mut Vec<u8>, user: &[u8], times: &mut Vec<u64>| {
             times.sort_unstable();
-            let uid = u32::from_be_bytes(user.try_into().expect("u32 user key"));
+            // mapper-emitted keys are always 4 bytes; shuffle preserves them
+            let uid = crate::util::bytes::u32_be(user);
             for (events, duration) in sessionize(times) {
                 out.extend_from_slice(format!("{uid} {events} {duration}\n").as_bytes());
             }
@@ -212,7 +213,8 @@ pub struct HistogramReducer;
 impl Reducer for HistogramReducer {
     fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
         let flush = |out: &mut Vec<u8>, bucket: &[u8], n: u64, dur: u64| {
-            let b = u32::from_be_bytes(bucket.try_into().expect("u32 bucket"));
+            // mapper-emitted keys are always 4 bytes; shuffle preserves them
+            let b = crate::util::bytes::u32_be(bucket);
             out.extend_from_slice(
                 format!("len={b} sessions={n} avg_duration={:.1}\n", dur as f64 / n as f64)
                     .as_bytes(),

@@ -137,6 +137,7 @@ impl Mapper for RankMapper {
 
 /// Round-2 reducer: keep the first `k` merged (descending-count) lines.
 pub struct TopKReducer {
+    /// Lines kept after the merge.
     pub k: usize,
 }
 
@@ -211,16 +212,16 @@ pub fn verify_topk(store: &dyn ObjectStore, in_prefix: &str, out_prefix: &str) -
         }
         reported.push((word.to_vec(), count));
     }
-    if reported.is_empty() {
+    let Some(floor) = reported.last().map(|(_, c)| *c) else {
         return Err(Error::Job("empty top-k output".into()));
-    }
+    };
     for pair in reported.windows(2) {
         if pair[0].1 < pair[1].1 {
             return Err(Error::Job("top-k not in descending order".into()));
         }
     }
     // completeness: no unreported word may beat the weakest reported one
-    let floor = reported.last().unwrap().1;
+    // (`floor` is the last, weakest reported count)
     let reported_words: std::collections::HashSet<&[u8]> =
         reported.iter().map(|(w, _)| w.as_slice()).collect();
     for (word, n) in &truth {

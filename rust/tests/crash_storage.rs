@@ -8,6 +8,8 @@
 //! failure reproduces locally with
 //! `TLSTORE_CRASH_SEED=<seed> cargo test --test crash_storage`.
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
 use std::path::Path;
 
 use tlstore::storage::fault::{FaultPlan, FaultStore, OpKind};
@@ -35,7 +37,7 @@ fn tls(root: &Path) -> TwoLevelStore {
 /// `TLSTORE_CRASH_SEED` (the crash-suite-specific override CI drives)
 /// takes precedence over the repo-wide `TLSTORE_SEED` master.
 fn seeds() -> Vec<u64> {
-    let mut v = vec![0xC0FFEE, 42, 20150831];
+    let mut v = vec![0xC0_FFEE, 42, 20_150_831];
     if let Ok(s) = std::env::var("TLSTORE_CRASH_SEED") {
         match s.parse() {
             Ok(n) => v.push(n),

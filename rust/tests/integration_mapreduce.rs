@@ -6,6 +6,8 @@
 //! `artifacts/` is built, the portable CPU sort otherwise — so this
 //! suite runs everywhere instead of skipping (`SortKernel::auto`).
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
 use std::path::Path;
 use std::sync::{Arc, OnceLock};
 

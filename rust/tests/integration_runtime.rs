@@ -4,6 +4,8 @@
 //!
 //! These tests are skipped (cleanly) if artifacts/ has not been built.
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
 use std::path::Path;
 use std::sync::OnceLock;
 

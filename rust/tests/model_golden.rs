@@ -97,8 +97,8 @@ fn golden_fig5_asymptotic_gains() {
     // paper: +25% at f=0.2 (10 → 12.5 GB/s), ~+95% at f=0.5 (10 → 19.6).
     // Our exact curve values, pinned tightly: 1.24975 and 1.99840.
     let m = CaseStudyParams::new(10_000.0);
-    close(m.tls_asymptotic_gain(0.2, 2000), 1.24975, 1e-4, "gain f=0.2");
-    close(m.tls_asymptotic_gain(0.5, 2000), 1.99840, 1e-4, "gain f=0.5");
+    close(m.tls_asymptotic_gain(0.2, 2000), 1.249_75, 1e-4, "gain f=0.2");
+    close(m.tls_asymptotic_gain(0.5, 2000), 1.998_40, 1e-4, "gain f=0.5");
 }
 
 // ---- sampled aggregate-curve points (the series Figure 5 plots) ---------

@@ -10,6 +10,8 @@
 //! with `TLSTORE_SEED=<seed> cargo test --test terasort_pipeline` (every
 //! assertion message carries the case context).
 
+#![allow(clippy::print_stdout, clippy::print_stderr)]
+
 use std::sync::Arc;
 
 use tlstore::mapreduce::{JobServer, JobServerConfig};

@@ -35,8 +35,11 @@ type Result<T> = std::result::Result<T, Error>;
 /// Element dtypes `tlstore` maps its manifest dtypes onto.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ElementType {
+    /// Unsigned 32-bit elements.
     U32,
+    /// Signed 32-bit elements.
     S32,
+    /// IEEE-754 single-precision elements.
     F32,
 }
 
@@ -44,18 +47,22 @@ pub enum ElementType {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Mirrors `PjRtClient::cpu`; the stub always fails to construct.
     pub fn cpu() -> Result<Self> {
         Err(Error::stub("PjRtClient::cpu"))
     }
 
+    /// Platform label; the stub reports `"stub"`.
     pub fn platform_name(&self) -> String {
         "stub".to_string()
     }
 
+    /// Device count; the stub has none.
     pub fn device_count(&self) -> usize {
         0
     }
 
+    /// Mirrors AOT compilation; unreachable since `cpu()` fails.
     pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         Err(Error::stub("PjRtClient::compile"))
     }
@@ -65,6 +72,7 @@ impl PjRtClient {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Mirrors HLO-text loading; always errors in the stub.
     pub fn from_text_file(_path: &str) -> Result<Self> {
         Err(Error::stub("HloModuleProto::from_text_file"))
     }
@@ -74,6 +82,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Wraps an HLO proto; trivially constructible.
     pub fn from_proto(_proto: &HloModuleProto) -> Self {
         XlaComputation
     }
@@ -83,6 +92,7 @@ impl XlaComputation {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Mirrors execution; unreachable since `compile` fails.
     pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(Error::stub("PjRtLoadedExecutable::execute"))
     }
@@ -92,6 +102,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Mirrors device-to-host transfer; always errors in the stub.
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Err(Error::stub("PjRtBuffer::to_literal_sync"))
     }
@@ -101,6 +112,7 @@ impl PjRtBuffer {
 pub struct Literal;
 
 impl Literal {
+    /// Mirrors host-literal construction; always errors in the stub.
     pub fn create_from_shape_and_untyped_data(
         _ty: ElementType,
         _dims: &[usize],
@@ -109,14 +121,17 @@ impl Literal {
         Err(Error::stub("Literal::create_from_shape_and_untyped_data"))
     }
 
+    /// Mirrors tuple destructuring; always errors in the stub.
     pub fn to_tuple(&self) -> Result<Vec<Literal>> {
         Err(Error::stub("Literal::to_tuple"))
     }
 
+    /// Element count; the stub literal is empty.
     pub fn element_count(&self) -> usize {
         0
     }
 
+    /// Typed readback; always errors in the stub.
     pub fn to_vec<T>(&self) -> Result<Vec<T>> {
         Err(Error::stub("Literal::to_vec"))
     }
