@@ -214,6 +214,39 @@ impl TaskBoard {
     }
 }
 
+// --------------------------------------------------------------- nodes
+
+/// Scheduler node-slot allocator. A worker that drops and rejoins must
+/// land on the node id its dead predecessor freed — a fresh round-robin
+/// id would corrupt locality accounting and strand the dead node's
+/// queued tasks behind tier-2 dispatch while the rejoiner idles. Freed
+/// slots are reused lowest-first before the round-robin cursor advances.
+#[derive(Debug, Default)]
+struct NodeSlots {
+    /// Node ids returned by dead or cleanly-exited workers.
+    free: BTreeSet<u32>,
+    /// Round-robin cursor for slots never assigned before.
+    next: u32,
+}
+
+impl NodeSlots {
+    /// Assign a node id: the lowest freed slot if any, otherwise the
+    /// next round-robin id modulo `expected` (the scheduler node count).
+    fn assign(&mut self, expected: usize) -> u32 {
+        if let Some(node) = self.free.pop_first() {
+            return node;
+        }
+        let node = self.next % expected.max(1) as u32;
+        self.next = self.next.wrapping_add(1);
+        node
+    }
+
+    /// Return a node id to the pool for the next (re)joining worker.
+    fn release(&mut self, node: u32) {
+        self.free.insert(node);
+    }
+}
+
 // --------------------------------------------------------------- state
 
 /// Per-worker I/O rollup, fed from `TaskDone` reports.
@@ -223,17 +256,34 @@ pub struct WorkerIo {
     pub read: IoStat,
     /// Bytes written to the store, task-grained.
     pub write: IoStat,
+    /// Memory-tier read traffic (empty when the worker runs untiered).
+    pub mem_read: IoStat,
+    /// Remote-PFS-tier read traffic (empty when the worker runs
+    /// untiered).
+    pub remote_read: IoStat,
+    /// Memory-tier write traffic (empty when the worker runs untiered).
+    pub mem_write: IoStat,
+    /// Remote-PFS-tier write traffic (empty when the worker runs
+    /// untiered).
+    pub remote_write: IoStat,
     /// Tasks this worker completed (winning attempts only).
     pub tasks: usize,
+}
+
+/// Record one tier's task I/O, skipping tiers the task never touched.
+fn record_tier(stat: &mut IoStat, t: f64, bytes: u64, micros: u64) {
+    if bytes > 0 {
+        stat.record(t, bytes, (micros as f64 / 1e6).max(1e-9));
+    }
 }
 
 struct CoordState {
     board: TaskBoard,
     registry: WorkerRegistry,
-    /// worker id → scheduler node index, assigned round-robin in
-    /// registration order.
+    /// worker id → scheduler node index; slots freed by dead workers
+    /// are reassigned to rejoiners (see [`NodeSlots`]).
     node_of: HashMap<u64, u32>,
-    next_node: u32,
+    slots: NodeSlots,
     registered: usize,
     alive: usize,
     /// Workers currently blocked inside `wait_for_task`; the ticker
@@ -292,19 +342,53 @@ pub struct ClusterReport {
 
 impl ClusterReport {
     /// Render per-worker read/write throughput as a [`TimelineSet`]
-    /// (`w{id}.read` / `w{id}.write`), Figure-7 style.
+    /// (`w{id}.read` / `w{id}.write`), Figure-7 style. Tiered workers
+    /// additionally render `w{id}.mem.read` / `w{id}.pfs.read` (and the
+    /// write analogues) so the two tiers can be compared side by side.
     pub fn timelines(&self) -> TimelineSet {
         let mut set = TimelineSet::default();
         for (id, io) in &self.per_worker {
-            if !io.read.is_empty() {
-                set.series.push(io.read.to_timeline(&format!("w{id}.read")));
-            }
-            if !io.write.is_empty() {
-                set.series
-                    .push(io.write.to_timeline(&format!("w{id}.write")));
+            let series = [
+                ("read", &io.read),
+                ("write", &io.write),
+                ("mem.read", &io.mem_read),
+                ("pfs.read", &io.remote_read),
+                ("mem.write", &io.mem_write),
+                ("pfs.write", &io.remote_write),
+            ];
+            for (name, stat) in series {
+                if !stat.is_empty() {
+                    set.series.push(stat.to_timeline(&format!("w{id}.{name}")));
+                }
             }
         }
         set
+    }
+
+    /// Total memory-tier read bytes across workers (winning attempts).
+    pub fn mem_read_bytes(&self) -> u64 {
+        self.per_worker.iter().map(|(_, io)| io.mem_read.bytes).sum()
+    }
+
+    /// Total remote-PFS-tier read bytes across workers.
+    pub fn remote_read_bytes(&self) -> u64 {
+        self.per_worker
+            .iter()
+            .map(|(_, io)| io.remote_read.bytes)
+            .sum()
+    }
+
+    /// Observed memory-tier read residency `f = mem / (mem + remote)` —
+    /// the input to eq. (7)'s harmonic-mean read throughput
+    /// ([`ClusterParams::tls_read`](crate::model::ClusterParams::tls_read)).
+    /// `None` until a tiered worker reported read traffic.
+    pub fn observed_read_residency(&self) -> Option<f64> {
+        let mem = self.mem_read_bytes();
+        let remote = self.remote_read_bytes();
+        if mem + remote == 0 {
+            return None;
+        }
+        Some(mem as f64 / (mem + remote) as f64)
     }
 }
 
@@ -379,7 +463,7 @@ impl Coordinator {
                 board: TaskBoard::default(),
                 registry: WorkerRegistry::new(grace),
                 node_of: HashMap::new(),
-                next_node: 0,
+                slots: NodeSlots::default(),
                 registered: 0,
                 alive: 0,
                 parked: HashSet::new(),
@@ -621,9 +705,10 @@ impl Coordinator {
 fn worker_lost(inner: &Arc<CoordInner>, id: u64) {
     let hook = {
         let mut st = inner.state.lock().unwrap();
-        if st.node_of.remove(&id).is_none() {
+        let Some(node) = st.node_of.remove(&id) else {
             return; // already processed
-        }
+        };
+        st.slots.release(node);
         st.registry.remove(id);
         st.parked.remove(&id);
         st.alive -= 1;
@@ -677,8 +762,7 @@ fn handle_conn(inner: Arc<CoordInner>, mut conn: Box<dyn Conn>) {
         let mut st = inner.state.lock().unwrap();
         let now = inner.clock.now_ms();
         let id = st.registry.register(now);
-        let node = st.next_node % inner.cfg.expected_workers.max(1) as u32;
-        st.next_node += 1;
+        let node = st.slots.assign(inner.cfg.expected_workers);
         st.node_of.insert(id, node);
         st.shutdowns.insert(id, conn.shutdown_handle());
         st.registered += 1;
@@ -727,6 +811,7 @@ fn handle_conn(inner: Arc<CoordInner>, mut conn: Box<dyn Conn>) {
                 bytes_read,
                 bytes_written,
                 micros,
+                tier_io,
             } => {
                 let mut st = inner.state.lock().unwrap();
                 st.registry.beat(worker_id, now);
@@ -747,6 +832,34 @@ fn handle_conn(inner: Arc<CoordInner>, mut conn: Box<dyn Conn>) {
                     if bytes_written > 0 {
                         io.write.record(t, bytes_written, secs.max(1e-9));
                     }
+                    // Tier-grained stats carry each tier's own busy
+                    // time, so the mem/remote split feeding eq. (7)'s
+                    // observed residency stays exact even though the
+                    // whole-task split above is coarse.
+                    record_tier(
+                        &mut io.mem_read,
+                        t,
+                        tier_io.mem_read_bytes,
+                        tier_io.mem_read_micros,
+                    );
+                    record_tier(
+                        &mut io.remote_read,
+                        t,
+                        tier_io.remote_read_bytes,
+                        tier_io.remote_read_micros,
+                    );
+                    record_tier(
+                        &mut io.mem_write,
+                        t,
+                        tier_io.mem_write_bytes,
+                        tier_io.mem_write_micros,
+                    );
+                    record_tier(
+                        &mut io.remote_write,
+                        t,
+                        tier_io.remote_write_bytes,
+                        tier_io.remote_write_micros,
+                    );
                 }
                 inner.cv.notify_all();
                 None
@@ -784,8 +897,9 @@ fn handle_conn(inner: Arc<CoordInner>, mut conn: Box<dyn Conn>) {
                 // this worker dead while it was parked, the removal
                 // happened there — don't double-decrement.
                 let mut st = inner.state.lock().unwrap();
-                if st.node_of.remove(&id).is_some() {
+                if let Some(node) = st.node_of.remove(&id) {
                     st.alive -= 1;
+                    st.slots.release(node);
                 }
                 st.registry.remove(id);
                 st.parked.remove(&id);
@@ -970,6 +1084,76 @@ mod tests {
         assert_eq!(b.fail_task(1), 1);
         b.next_for(11, 0, &live(&[0])).unwrap();
         assert_eq!(b.fail_task(1), 2, "second failure hits the attempt cap");
+    }
+
+    #[test]
+    fn killed_and_rejoined_worker_keeps_its_node_id() {
+        let mut slots = NodeSlots::default();
+        assert_eq!(slots.assign(3), 0);
+        assert_eq!(slots.assign(3), 1);
+        assert_eq!(slots.assign(3), 2);
+        // The worker on node 1 dies and rejoins: it must land on node 1
+        // again, not on a fresh round-robin id — otherwise its node's
+        // queued map tasks sit behind tier-2 dispatch while it idles.
+        slots.release(1);
+        assert_eq!(slots.assign(3), 1);
+        // Multiple losses hand slots back lowest-first.
+        slots.release(2);
+        slots.release(0);
+        assert_eq!(slots.assign(3), 0);
+        assert_eq!(slots.assign(3), 2);
+        // Pool drained: the cursor keeps cycling within the node count.
+        assert_eq!(slots.assign(3), 0);
+    }
+
+    #[test]
+    fn report_tier_series_and_observed_residency() {
+        let mut io = WorkerIo::default();
+        io.mem_read.record(1.0, 3_000_000, 0.1);
+        io.remote_read.record(1.0, 1_000_000, 0.5);
+        let report = ClusterReport {
+            job_id: "job-t".into(),
+            epoch: 0,
+            map_tasks: 1,
+            reduce_tasks: 1,
+            reexecuted: vec![],
+            attempts: HashMap::new(),
+            locality_hits: 1,
+            locality_total: 1,
+            workers_seen: 1,
+            workers_lost: 0,
+            per_worker: vec![(1, io)],
+        };
+        assert_eq!(report.mem_read_bytes(), 3_000_000);
+        assert_eq!(report.remote_read_bytes(), 1_000_000);
+        assert_eq!(report.observed_read_residency(), Some(0.75));
+        let set = report.timelines();
+        assert!(set.get("w1.mem.read").is_some());
+        assert!(set.get("w1.pfs.read").is_some());
+        assert!(
+            set.get("w1.mem.write").is_none(),
+            "untouched tier renders nothing"
+        );
+    }
+
+    #[test]
+    fn untiered_report_has_no_observed_residency() {
+        let mut io = WorkerIo::default();
+        io.read.record(1.0, 1_000_000, 0.5);
+        let report = ClusterReport {
+            job_id: "job-t".into(),
+            epoch: 0,
+            map_tasks: 1,
+            reduce_tasks: 1,
+            reexecuted: vec![],
+            attempts: HashMap::new(),
+            locality_hits: 1,
+            locality_total: 1,
+            workers_seen: 1,
+            workers_lost: 0,
+            per_worker: vec![(1, io)],
+        };
+        assert_eq!(report.observed_read_residency(), None);
     }
 
     #[test]

@@ -47,5 +47,5 @@ pub use coordinator::{
 pub use heartbeat::{Clock, ManualClock, SystemClock, WorkerRegistry};
 pub use remote::{serve, RemotePfs, DEFAULT_STRIPE_SIZE, MAX_STRIPE_SIZE};
 pub use transport::{Conn, FaultScript, Listener, LoopbackNet, TcpTransport, Transport};
-pub use wire::{Message, Role, TaskKind, TaskSpec, WIRE_VERSION};
+pub use wire::{Message, Role, TaskKind, TaskSpec, TierIo, WIRE_VERSION};
 pub use worker::{Worker, WorkerSummary};

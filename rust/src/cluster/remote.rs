@@ -14,10 +14,19 @@
 //! - a small metadata object `k#meta` (size, stripe size, stripe
 //!   count, server count) lives on the home server and is written
 //!   **last** by [`ObjectWriter::commit`], so a fresh key is invisible
-//!   until fully striped (atomic publish by meta-presence). Racing a
-//!   reader against the *overwrite* of an existing key carries the
-//!   same caveat as every other backend: the store contract is
-//!   write-once-read-many.
+//!   until fully striped (atomic publish by meta-presence).
+//!
+//! Writers honor the same commit-atomicity discipline as the local
+//! [`Pfs`](crate::storage::pfs::Pfs): stripes are staged under
+//! token-suffixed temp keys (`k#s<i>.tmp-<token>`) while appending, so
+//! an in-flight write — including the *overwrite* of a live key —
+//! never touches the committed stripes a racing reader is served from.
+//! Commit renames every staged stripe onto its final key (the
+//! [`Message::Rename`] request, one per stripe) and only then
+//! publishes the meta; abort (or a dropped writer) deletes the staged
+//! temps and leaves the old object byte-exact. Staged temps stranded
+//! by a killed client process are reaped by
+//! [`RemotePfs::recover_staged`].
 //!
 //! Keys containing the reserved `#meta` / `#s<i>` suffixes are the
 //! client's private namespace on the servers; `list` filters on the
@@ -28,7 +37,11 @@ use std::sync::{Arc, Mutex};
 use crate::cluster::transport::{Conn, Listener, Transport};
 use crate::cluster::wire::{Message, Role, WIRE_VERSION};
 use crate::error::{Error, Result, WireKind};
-use crate::storage::{clamped_len, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter};
+use crate::storage::pfs::QUARANTINE_NS;
+use crate::storage::tls::PfsTier;
+use crate::storage::{
+    clamped_len, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter, Recover, RecoveryReport,
+};
 
 /// Default stripe size (4 MiB): small enough that one stripe `Put`
 /// frame stays well under the wire's `MAX_FRAME`, large enough to
@@ -54,6 +67,34 @@ fn meta_key(key: &str) -> String {
 
 fn stripe_key(key: &str, stripe: u64) -> String {
     format!("{key}#s{stripe}")
+}
+
+/// Writer-unique staging key for stripe `stripe` of `key` — the wire
+/// mirror of `Pfs`'s `*.df.tmp-<token>` discipline.
+fn temp_stripe_key(key: &str, stripe: u64, token: u64) -> String {
+    format!("{key}#s{stripe}.tmp-{token}")
+}
+
+/// Process-unique token source for writer staging keys.
+static REMOTE_WRITER_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+/// Does this raw server key look like a staged stripe temp
+/// (`<key>#s<digits>.tmp-<digits>`)? Anchored at the end so a logical
+/// key that merely *contains* the pattern is not misclassified.
+fn is_staged_stripe(raw: &str) -> bool {
+    let Some(tmp_at) = raw.rfind(".tmp-") else {
+        return false;
+    };
+    let token = &raw[tmp_at + ".tmp-".len()..];
+    if token.is_empty() || !token.bytes().all(|b| b.is_ascii_digit()) {
+        return false;
+    }
+    let head = &raw[..tmp_at];
+    let Some(s_at) = head.rfind("#s") else {
+        return false;
+    };
+    let idx = &head[s_at + 2..];
+    !idx.is_empty() && idx.bytes().all(|b| b.is_ascii_digit())
 }
 
 /// On-server metadata record for one logical object.
@@ -200,11 +241,159 @@ impl RemotePfs {
             )),
         }
     }
+
+    /// Raw (unfiltered) key listing from one server — staged temps and
+    /// stripe/meta keys included, unlike the logical-key view of
+    /// [`ObjectStore::list`].
+    fn raw_list(&self, idx: usize, prefix: &str) -> Result<Vec<String>> {
+        match self.call(
+            idx,
+            Message::List {
+                prefix: prefix.to_string(),
+            },
+        )? {
+            Message::OkKeys { keys } => Ok(keys),
+            other => Err(Error::wire(
+                WireKind::Malformed,
+                format!("expected OkKeys listing server {idx}, got {other:?}"),
+            )),
+        }
+    }
+
+    /// Reap debris a killed client left on the stripe servers: staged
+    /// temp stripes (`k#s<i>.tmp-<token>`) of writers that never
+    /// committed, and unreachable final-keyed stripes — ones whose
+    /// logical object has no published meta (a commit that died between
+    /// rename and publish) or whose index lies beyond the published
+    /// stripe count (a missed shrink reap).
+    ///
+    /// Same caveat as every `recover()`: run it before starting
+    /// writers, because an in-flight writer's staged temps look exactly
+    /// like a dead one's.
+    pub fn recover_staged(&self) -> Result<RecoveryReport> {
+        let mut report = RecoveryReport::default();
+        let mut per_server: Vec<Vec<String>> = Vec::with_capacity(self.nservers());
+        for idx in 0..self.nservers() {
+            per_server.push(self.raw_list(idx, "")?);
+        }
+        // Logical key → published stripe count, cluster-wide. The meta
+        // is read back from the server it was *listed* on, not through
+        // `fetch_meta`: a quarantined object's meta still sits on the
+        // home server of its original name, which is not where hashing
+        // the quarantine name would look — going through `fetch_meta`
+        // would read those as dead and reap their stripes.
+        let mut live: std::collections::BTreeMap<String, u64> = std::collections::BTreeMap::new();
+        for (idx, keys) in per_server.iter().enumerate() {
+            for k in keys {
+                if let Some(logical) = k.strip_suffix("#meta") {
+                    if !live.contains_key(logical) {
+                        let n = match self.call(idx, Message::Get { key: k.clone() }) {
+                            Ok(Message::OkBytes { data }) => RemoteMeta::decode(logical, &data)
+                                .map(|m| m.nstripes as u64)
+                                .unwrap_or(0),
+                            _ => 0,
+                        };
+                        live.insert(logical.to_string(), n);
+                    }
+                }
+            }
+        }
+        for (idx, keys) in per_server.iter().enumerate() {
+            for raw in keys {
+                if is_staged_stripe(raw) {
+                    let r = self.call(idx, Message::Delete { key: raw.clone() })?;
+                    self.expect_unit(r)?;
+                    report.temps_removed += 1;
+                    continue;
+                }
+                let Some(s_at) = raw.rfind("#s") else {
+                    continue;
+                };
+                let sidx = &raw[s_at + 2..];
+                if sidx.is_empty() || !sidx.bytes().all(|b| b.is_ascii_digit()) {
+                    continue;
+                }
+                let logical = &raw[..s_at];
+                let stripe: u64 = sidx.parse().unwrap_or(u64::MAX);
+                let reachable = live.get(logical).is_some_and(|&n| stripe < n);
+                if !reachable {
+                    let r = self.call(idx, Message::Delete { key: raw.clone() })?;
+                    self.expect_unit(r)?;
+                    report.orphans_removed += 1;
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+impl Recover for RemotePfs {
+    fn recover(&self) -> Result<RecoveryReport> {
+        self.recover_staged()
+    }
+}
+
+impl PfsTier for RemotePfs {
+    fn recover_tier(&self) -> Result<RecoveryReport> {
+        self.recover_staged()
+    }
+
+    /// Rename every component of `key` under the quarantine namespace,
+    /// in place on its current server. Meta moves first, so the key
+    /// reads `NotFound` from that point on; a crash mid-quarantine
+    /// leaves meta-less final stripes, which the next
+    /// [`recover_staged`](RemotePfs::recover_staged) reaps as orphans.
+    /// Because stripe placement hashes the *original* name, quarantined
+    /// objects are unreadable through the client even under the
+    /// quarantine name — forensics go straight to the server stores.
+    fn quarantine_object(&self, key: &str) -> Result<()> {
+        let meta = self.fetch_meta(key)?;
+        let home = self.home_of(key);
+        let qkey = format!("{QUARANTINE_NS}{key}");
+        let r = self.call(
+            home,
+            Message::Rename {
+                from: meta_key(key),
+                to: meta_key(&qkey),
+            },
+        )?;
+        self.expect_unit(r)?;
+        for i in 0..meta.nstripes as u64 {
+            let r = self.call(
+                self.server_for(home, i),
+                Message::Rename {
+                    from: stripe_key(key, i),
+                    to: stripe_key(&qkey, i),
+                },
+            )?;
+            self.expect_unit(r)?;
+        }
+        Ok(())
+    }
 }
 
 impl ObjectStore for RemotePfs {
     fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
         let meta = self.fetch_meta(key)?;
+        // Geometry gate: stripe placement is a pure function of the
+        // server count, and in-stripe offsets of the stripe size. A
+        // client configured differently from the writer would silently
+        // fetch the wrong bytes from the wrong servers — fail typed
+        // instead, naming both sides.
+        if meta.nservers as usize != self.nservers() || meta.stripe_size != self.stripe_size {
+            return Err(Error::wire(
+                WireKind::Remote,
+                format!(
+                    "stale geometry opening {key}: object written with \
+                     nservers={} stripe_size={}, client configured with \
+                     nservers={} stripe_size={}",
+                    meta.nservers,
+                    meta.stripe_size,
+                    self.nservers(),
+                    self.stripe_size
+                ),
+            ));
+        }
         Ok(Box::new(RemoteReader {
             pfs: self,
             key: key.to_string(),
@@ -217,7 +406,26 @@ impl ObjectStore for RemotePfs {
         // Remember the old stripe count so a shrinking overwrite can
         // reap surplus stripes after the new meta lands.
         let old_nstripes = match self.fetch_meta(key) {
-            Ok(m) => Some(m.nstripes),
+            Ok(m) => {
+                // Same geometry gate as `open`: overwriting through a
+                // client with a different topology would rename and
+                // reap stripes on the wrong servers.
+                if m.nservers as usize != self.nservers() || m.stripe_size != self.stripe_size {
+                    return Err(Error::wire(
+                        WireKind::Remote,
+                        format!(
+                            "stale geometry overwriting {key}: object written \
+                             with nservers={} stripe_size={}, client configured \
+                             with nservers={} stripe_size={}",
+                            m.nservers,
+                            m.stripe_size,
+                            self.nservers(),
+                            self.stripe_size
+                        ),
+                    ));
+                }
+                Some(m.nstripes)
+            }
             Err(Error::NotFound(_)) => None,
             Err(e) => return Err(e),
         };
@@ -225,8 +433,10 @@ impl ObjectStore for RemotePfs {
             pfs: self,
             key: key.to_string(),
             home: self.home_of(key),
+            token: REMOTE_WRITER_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             buf: Vec::new(),
             stripes_put: 0,
+            renamed: 0,
             written: 0,
             old_nstripes,
             finished: false,
@@ -351,8 +561,15 @@ struct RemoteWriter<'a> {
     pfs: &'a RemotePfs,
     key: String,
     home: usize,
+    /// Staging token: appended stripes live under
+    /// `key#s<i>.tmp-<token>` until commit renames them.
+    token: u64,
     buf: Vec<u8>,
     stripes_put: u64,
+    /// How many staged stripes commit has already renamed onto their
+    /// final keys — cleanup must not delete those (on an overwrite they
+    /// now *are* the live object's stripes).
+    renamed: u64,
     written: u64,
     old_nstripes: Option<u32>,
     finished: bool,
@@ -361,10 +578,12 @@ struct RemoteWriter<'a> {
 impl RemoteWriter<'_> {
     fn put_stripe(&mut self, data: Vec<u8>) -> Result<()> {
         let idx = self.pfs.server_for(self.home, self.stripes_put);
+        // Staged under the temp key: an in-flight write (or overwrite)
+        // never touches the committed stripes racing readers fetch.
         let reply = self.pfs.call(
             idx,
             Message::Put {
-                key: stripe_key(&self.key, self.stripes_put),
+                key: temp_stripe_key(&self.key, self.stripes_put, self.token),
                 data,
             },
         )?;
@@ -373,15 +592,22 @@ impl RemoteWriter<'_> {
         Ok(())
     }
 
+    /// Best-effort removal of the *staged temp* keys this writer still
+    /// owns. Stripes already renamed onto final keys are left alone —
+    /// deleting those would destroy the live object on an aborted
+    /// overwrite.
     fn delete_staged(&mut self) {
-        for i in 0..self.stripes_put {
+        for i in self.renamed..self.stripes_put {
+            // best-effort: a failed cleanup leaves a staged temp for
+            // recover_staged() to reap
             let _ = self.pfs.call(
                 self.pfs.server_for(self.home, i),
                 Message::Delete {
-                    key: stripe_key(&self.key, i),
+                    key: temp_stripe_key(&self.key, i, self.token),
                 },
             );
         }
+        self.renamed = self.stripes_put;
     }
 }
 
@@ -407,13 +633,28 @@ impl ObjectWriter for RemoteWriter<'_> {
             let tail = std::mem::take(&mut self.buf);
             self.put_stripe(tail)?;
         }
+        // Publish step 1: rename every staged stripe onto its final
+        // key. A failure here aborts the commit; Drop then reaps the
+        // not-yet-renamed temps.
+        while self.renamed < self.stripes_put {
+            let i = self.renamed;
+            let reply = self.pfs.call(
+                self.pfs.server_for(self.home, i),
+                Message::Rename {
+                    from: temp_stripe_key(&self.key, i, self.token),
+                    to: stripe_key(&self.key, i),
+                },
+            )?;
+            self.pfs.expect_unit(reply)?;
+            self.renamed = i + 1;
+        }
         let meta = RemoteMeta {
             size: self.written,
             stripe_size: self.pfs.stripe_size,
             nstripes: self.stripes_put as u32,
             nservers: self.pfs.nservers() as u32,
         };
-        // meta lands last: the publish point
+        // Publish step 2: meta lands last — the atomic publish point.
         let reply = self.pfs.call(
             self.home,
             Message::Put {
@@ -425,6 +666,8 @@ impl ObjectWriter for RemoteWriter<'_> {
         // shrinkage: reap old stripes past the new count
         if let Some(old_n) = self.old_nstripes {
             for i in self.stripes_put..old_n as u64 {
+                // best-effort: a missed reap is an orphan stripe,
+                // invisible behind the new meta and reapable later
                 let _ = self.pfs.call(
                     self.pfs.server_for(self.home, i),
                     Message::Delete {
@@ -519,6 +762,20 @@ fn pfs_conn_loop(mut conn: Box<dyn Conn>, store: Arc<dyn ObjectStore>) {
                 Ok(()) => Message::OkUnit,
                 Err(e) => err_reply(&e),
             },
+            Message::Rename { from, to } => {
+                // Backend-generic re-key: read + write-over + delete.
+                // The write lands before the source is removed, so a
+                // failure partway leaves `from` intact (the client's
+                // staged temp, reapable by recover).
+                let moved = store.read(&from).and_then(|data| {
+                    store.write(&to, &data)?;
+                    store.delete(&from)
+                });
+                match moved {
+                    Ok(()) => Message::OkUnit,
+                    Err(e) => err_reply(&e),
+                }
+            }
             Message::List { prefix } => Message::OkKeys {
                 keys: store.list(&prefix),
             },
@@ -699,6 +956,135 @@ mod tests {
             // dropped uncommitted
         }
         assert!(c.raw_keys().is_empty());
+        c.shutdown();
+    }
+
+    #[test]
+    fn racing_reader_on_overwrite_sees_old_or_new_never_a_prefix() {
+        // Regression: stripes used to be staged under their *final*
+        // keys during append, so a reader racing an overwrite was
+        // served a mix of old and new stripes. With temp-key staging
+        // the committed object is untouched until the commit renames.
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 3, 16);
+        let old: Vec<u8> = (0..100u32).map(|i| i as u8).collect();
+        let newer: Vec<u8> = (0..60u32).map(|i| (i as u8) ^ 0xFF).collect();
+        c.pfs.write("k", &old).unwrap();
+        let reader = c.pfs.open("k").unwrap();
+        let mut w = c.pfs.create("k").unwrap();
+        w.append(&newer).unwrap(); // several full stripes staged
+        // racing reader mid-overwrite: byte-exact old, never a mix
+        let mut buf = vec![0u8; 100];
+        assert_eq!(reader.read_at(0, &mut buf).unwrap(), 100);
+        assert_eq!(buf, old);
+        assert_eq!(c.pfs.read("k").unwrap(), old, "fresh open mid-overwrite");
+        w.commit().unwrap();
+        // after the meta publish: byte-exact new
+        assert_eq!(c.pfs.read("k").unwrap(), newer);
+        drop(reader);
+        c.shutdown();
+    }
+
+    #[test]
+    fn abort_mid_overwrite_leaves_old_object_byte_exact() {
+        // Regression: abort used to delete the *final* stripe keys —
+        // i.e. the live stripes of the object being overwritten.
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 16);
+        let old: Vec<u8> = (0..100u32).map(|i| (i % 251) as u8).collect();
+        c.pfs.write("k", &old).unwrap();
+        let mut w = c.pfs.create("k").unwrap();
+        w.append(&vec![7u8; 80]).unwrap();
+        w.abort().unwrap();
+        assert_eq!(c.pfs.read("k").unwrap(), old);
+        // exactly the old object's keys survive — no temp debris
+        let expect: Vec<String> = std::iter::once("k#meta".to_string())
+            .chain((0..7).map(|i| format!("k#s{i}")))
+            .collect();
+        assert_eq!(c.raw_keys(), expect);
+        c.shutdown();
+    }
+
+    #[test]
+    fn stale_stripe_size_is_rejected_at_open() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 16);
+        c.pfs.write("k", &vec![5u8; 64]).unwrap();
+        // second client on the same servers, different stripe size
+        let other =
+            RemotePfs::connect(&net, &["pfs0".into(), "pfs1".into()], 32).unwrap();
+        match other.open("k") {
+            Err(Error::Wire {
+                kind: WireKind::Remote,
+                msg,
+            }) => {
+                assert!(msg.contains("stripe_size=16"), "{msg}");
+                assert!(msg.contains("stripe_size=32"), "{msg}");
+            }
+            Err(e) => panic!("expected Wire/Remote, got {e:?}"),
+            Ok(_) => panic!("stale stripe size must not open"),
+        }
+        // overwrites are gated the same way
+        assert!(other.create("k").is_err());
+        drop(other);
+        c.shutdown();
+    }
+
+    #[test]
+    fn stale_server_count_is_rejected_at_open() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 16);
+        for key in ["a", "b", "c"] {
+            c.pfs.write(key, &vec![5u8; 40]).unwrap();
+        }
+        // one-server client: keys whose meta happens to live on pfs0
+        // must fail the nservers gate (not silently misread stripes)
+        let narrow = RemotePfs::connect(&net, &["pfs0".into()], 16).unwrap();
+        let mut gated = 0;
+        for key in ["a", "b", "c"] {
+            match narrow.open(key) {
+                Err(Error::Wire {
+                    kind: WireKind::Remote,
+                    msg,
+                }) => {
+                    assert!(msg.contains("nservers=2"), "{msg}");
+                    assert!(msg.contains("nservers=1"), "{msg}");
+                    gated += 1;
+                }
+                Err(Error::NotFound(_)) => {} // meta homed on the other server
+                Err(e) => panic!("{key}: expected gate or NotFound, got {e:?}"),
+                Ok(_) => panic!("{key}: stale server count must not open"),
+            }
+        }
+        assert!(gated > 0, "no key's meta landed on pfs0");
+        drop(narrow);
+        c.shutdown();
+    }
+
+    #[test]
+    fn recover_staged_reaps_temps_and_orphans_only() {
+        let net = LoopbackNet::new();
+        let c = cluster(&net, 2, 16);
+        c.pfs.write("keep", &vec![3u8; 40]).unwrap(); // 3 stripes + meta
+        // a writer a dead process abandoned: staged temps, no meta
+        let mut w = c.pfs.create("lost").unwrap();
+        w.append(&vec![9u8; 40]).unwrap();
+        std::mem::forget(w); // simulate the client dying: no Drop cleanup
+        // an orphan final-keyed stripe from a commit that died between
+        // rename and publish
+        c.stores[0].write("ghost#s0", &[1, 2, 3]).unwrap();
+        assert!(c.raw_keys().len() > 4);
+        let report = c.pfs.recover_staged().unwrap();
+        assert_eq!(report.temps_removed, 2, "{report}");
+        assert_eq!(report.orphans_removed, 1, "{report}");
+        // the committed object is untouched and intact
+        let expect: Vec<String> = std::iter::once("keep#meta".to_string())
+            .chain((0..3).map(|i| format!("keep#s{i}")))
+            .collect();
+        assert_eq!(c.raw_keys(), expect);
+        assert_eq!(c.pfs.read("keep").unwrap(), vec![3u8; 40]);
+        // second pass is clean
+        assert!(c.pfs.recover_staged().unwrap().is_clean());
         c.shutdown();
     }
 

@@ -121,6 +121,64 @@ pub struct TaskSpec {
     pub kind: TaskKind,
 }
 
+/// Per-task I/O accounting split by storage tier, carried inside
+/// [`Message::TaskDone`]. A worker running a two-level store reports
+/// how many bytes (and how much storage-call busy time) each direction
+/// served from its local memory tier versus the remote PFS tier — the
+/// observable `f` of the paper's eq. (7). Plain (untiered) workers
+/// send an empty (all-zero) accounting, which the coordinator leaves
+/// out of the per-tier timelines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TierIo {
+    /// Read bytes served by the worker-local memory tier.
+    pub mem_read_bytes: u64,
+    /// Busy-microseconds of memory-tier reads.
+    pub mem_read_micros: u64,
+    /// Read bytes served by the remote PFS tier.
+    pub remote_read_bytes: u64,
+    /// Busy-microseconds of remote-tier reads.
+    pub remote_read_micros: u64,
+    /// Write bytes that landed only in the memory tier (spills).
+    pub mem_write_bytes: u64,
+    /// Busy-microseconds of memory-tier writes.
+    pub mem_write_micros: u64,
+    /// Write bytes that landed on the remote PFS tier.
+    pub remote_write_bytes: u64,
+    /// Busy-microseconds of remote-tier writes.
+    pub remote_write_micros: u64,
+}
+
+impl TierIo {
+    /// True when no tiered traffic was recorded.
+    pub fn is_empty(&self) -> bool {
+        *self == TierIo::default()
+    }
+}
+
+fn enc_tier_io(e: &mut Enc, t: &TierIo) {
+    e.u64(t.mem_read_bytes);
+    e.u64(t.mem_read_micros);
+    e.u64(t.remote_read_bytes);
+    e.u64(t.remote_read_micros);
+    e.u64(t.mem_write_bytes);
+    e.u64(t.mem_write_micros);
+    e.u64(t.remote_write_bytes);
+    e.u64(t.remote_write_micros);
+}
+
+fn dec_tier_io(d: &mut Dec<'_>) -> Result<TierIo> {
+    Ok(TierIo {
+        mem_read_bytes: d.u64("tier.mem_read_bytes")?,
+        mem_read_micros: d.u64("tier.mem_read_micros")?,
+        remote_read_bytes: d.u64("tier.remote_read_bytes")?,
+        remote_read_micros: d.u64("tier.remote_read_micros")?,
+        mem_write_bytes: d.u64("tier.mem_write_bytes")?,
+        mem_write_micros: d.u64("tier.mem_write_micros")?,
+        remote_write_bytes: d.u64("tier.remote_write_bytes")?,
+        remote_write_micros: d.u64("tier.remote_write_micros")?,
+    })
+}
+
 /// Every message the cluster protocol defines. Tag bytes are grouped:
 /// `0x0x` handshake, `0x1x` PFS requests, `0x2x` PFS replies, `0x3x`
 /// coordinator/worker control.
@@ -154,6 +212,11 @@ pub enum Message {
     List { prefix: String },
     /// Read the whole object under `key`.
     Get { key: String },
+    /// Atomically re-key `from` to `to` on one server (the wire mirror
+    /// of [`Pfs`](crate::storage::pfs::Pfs)'s temp-file rename
+    /// discipline: stripe writers stage under token-suffixed keys and
+    /// rename at commit).
+    Rename { from: String, to: String },
 
     /// PFS reply: success, no payload.
     OkUnit,
@@ -190,6 +253,7 @@ pub enum Message {
         bytes_read: u64,
         bytes_written: u64,
         micros: u64,
+        tier_io: TierIo,
     },
     /// Worker failed a task but is still alive.
     TaskFail {
@@ -208,6 +272,7 @@ const TAG_STAT: u8 = 0x12;
 const TAG_DELETE: u8 = 0x13;
 const TAG_LIST: u8 = 0x14;
 const TAG_GET: u8 = 0x15;
+const TAG_RENAME: u8 = 0x16;
 const TAG_OK_UNIT: u8 = 0x20;
 const TAG_OK_BYTES: u8 = 0x21;
 const TAG_OK_META: u8 = 0x22;
@@ -521,6 +586,11 @@ impl Message {
                 e.str(key);
                 TAG_GET
             }
+            Message::Rename { from, to } => {
+                e.str(from);
+                e.str(to);
+                TAG_RENAME
+            }
             Message::OkUnit => TAG_OK_UNIT,
             Message::OkBytes { data } => {
                 e.bytes(data);
@@ -564,6 +634,7 @@ impl Message {
                 bytes_read,
                 bytes_written,
                 micros,
+                tier_io,
             } => {
                 e.u64(*worker_id);
                 e.u64(*task_id);
@@ -575,6 +646,7 @@ impl Message {
                 e.u64(*bytes_read);
                 e.u64(*bytes_written);
                 e.u64(*micros);
+                enc_tier_io(&mut e, tier_io);
                 TAG_TASK_DONE
             }
             Message::TaskFail {
@@ -628,6 +700,10 @@ impl Message {
             TAG_GET => Message::Get {
                 key: d.str("get.key")?,
             },
+            TAG_RENAME => Message::Rename {
+                from: d.str("rename.from")?,
+                to: d.str("rename.to")?,
+            },
             TAG_OK_UNIT => Message::OkUnit,
             TAG_OK_BYTES => Message::OkBytes {
                 data: d.bytes("ok.data")?,
@@ -674,6 +750,7 @@ impl Message {
                     bytes_read: d.u64("done.bytes_read")?,
                     bytes_written: d.u64("done.bytes_written")?,
                     micros: d.u64("done.micros")?,
+                    tier_io: dec_tier_io(&mut d)?,
                 }
             }
             TAG_TASK_FAIL => Message::TaskFail {
@@ -835,6 +912,10 @@ mod tests {
             Message::Delete { key: "k".into() },
             Message::List { prefix: "p/".into() },
             Message::Get { key: "k".into() },
+            Message::Rename {
+                from: "k#s0.tmp-7".into(),
+                to: "k#s0".into(),
+            },
             Message::OkUnit,
             Message::OkBytes { data: vec![9; 10] },
             Message::OkMeta { size: 42 },
@@ -885,6 +966,25 @@ mod tests {
                 bytes_read: 1000,
                 bytes_written: 900,
                 micros: 1234,
+                tier_io: TierIo::default(),
+            },
+            Message::TaskDone {
+                worker_id: 2,
+                task_id: 12,
+                spills: vec![],
+                bytes_read: 4096,
+                bytes_written: 4096,
+                micros: 999,
+                tier_io: TierIo {
+                    mem_read_bytes: 2048,
+                    mem_read_micros: 10,
+                    remote_read_bytes: 2048,
+                    remote_read_micros: 400,
+                    mem_write_bytes: 4096,
+                    mem_write_micros: 20,
+                    remote_write_bytes: 4096,
+                    remote_write_micros: 500,
+                },
             },
             Message::TaskFail {
                 worker_id: 1,

@@ -26,15 +26,61 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::cluster::remote::RemotePfs;
 use crate::cluster::transport::Conn;
-use crate::cluster::wire::{Message, Role, TaskKind, TaskSpec, WIRE_VERSION};
+use crate::cluster::wire::{Message, Role, TaskKind, TaskSpec, TierIo, WIRE_VERSION};
 use crate::error::{Error, Result, WireKind};
-use crate::storage::{read_full_at, ObjectStore};
+use crate::storage::tls::{TlsStats, TwoLevelStore};
+use crate::storage::{read_full_at, ObjectReader, ObjectStore, ObjectWriter, ReadMode, WriteMode};
 use crate::terasort::records::full_key;
 use crate::terasort::{key_prefix, Partitioner, SortKernel, KEY_SIZE, RECORD_SIZE};
 
 /// Chunk size for streaming reduce output through the writer.
 const REDUCE_CHUNK: usize = 1 << 20;
+
+/// The store a worker executes against: either a plain shared
+/// [`ObjectStore`] (the pre-tiered shape, still used when
+/// `worker_mem_capacity = 0`), or the paper's worker-local memory tier
+/// over the shared striped servers — a
+/// [`TwoLevelStore`]`<`[`RemotePfs`]`>`.
+enum WorkerStore {
+    /// Untiered: every open/create goes straight to the shared store.
+    Plain(Arc<dyn ObjectStore>),
+    /// Tiered: reads fault block-by-block through the memory tier
+    /// (Figure 4 f), map spills stage mem-only and checkpoint before
+    /// `TaskDone` (Figure 4 a), reduce output writes through (Figure
+    /// 4 c).
+    Tiered(Arc<TwoLevelStore<RemotePfs>>),
+}
+
+impl WorkerStore {
+    /// Open `key` for reading under the task read policy: two-level on
+    /// a tiered store (memory first, fault misses through the §3.2
+    /// `pfs_buffer` and cache them), plain `open` otherwise.
+    fn open_read(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
+        match self {
+            WorkerStore::Plain(s) => s.open(key),
+            WorkerStore::Tiered(t) => t.open_with(key, ReadMode::TwoLevel),
+        }
+    }
+
+    /// Start a write-through output writer (`part-r-*`): committed
+    /// bytes must land on the shared tier for the client to collect.
+    fn create_output(&self, key: &str) -> Result<Box<dyn ObjectWriter + '_>> {
+        match self {
+            WorkerStore::Plain(s) => s.create(key),
+            WorkerStore::Tiered(t) => t.create_with(key, WriteMode::WriteThrough),
+        }
+    }
+
+    /// Two-tier read counters, `None` for an untiered worker.
+    fn stats(&self) -> Option<TlsStats> {
+        match self {
+            WorkerStore::Plain(_) => None,
+            WorkerStore::Tiered(t) => Some(t.stats()),
+        }
+    }
+}
 
 /// What one worker did over its connection's lifetime.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -54,7 +100,7 @@ pub struct WorkerSummary {
 /// injector, then [`Worker::run`] it over a connection to the
 /// coordinator.
 pub struct Worker {
-    store: Arc<dyn ObjectStore>,
+    store: WorkerStore,
     kernel: Arc<SortKernel>,
     die_after_assignments: Option<u64>,
 }
@@ -63,7 +109,22 @@ impl Worker {
     /// A worker executing against `store` with `kernel` as its sorter.
     pub fn new(store: Arc<dyn ObjectStore>, kernel: Arc<SortKernel>) -> Worker {
         Worker {
-            store,
+            store: WorkerStore::Plain(store),
+            kernel,
+            die_after_assignments: None,
+        }
+    }
+
+    /// A worker with the paper's two-level data path: a process-local
+    /// memory tier layered over the shared striped servers. Task reads
+    /// fault through the memory tier, map spills stage mem-only (and
+    /// checkpoint to the servers before the task reports done, so any
+    /// worker can reduce them), and `part-r-*` output writes through.
+    /// Every [`Message::TaskDone`] carries the per-tier byte/busy-time
+    /// split for the coordinator's eq. (7) residency measurement.
+    pub fn tiered(store: Arc<TwoLevelStore<RemotePfs>>, kernel: Arc<SortKernel>) -> Worker {
+        Worker {
+            store: WorkerStore::Tiered(store),
             kernel,
             die_after_assignments: None,
         }
@@ -148,6 +209,7 @@ impl Worker {
                                 bytes_read: out.bytes_read,
                                 bytes_written: out.bytes_written,
                                 micros: started.elapsed().as_micros() as u64,
+                                tier_io: out.tier,
                             })?;
                         }
                         Err(e) => {
@@ -178,7 +240,24 @@ impl Worker {
         }
     }
 
+    /// Run one task and, on a tiered store, fold the read-side tier
+    /// deltas (bytes and busy time each tier served while this task
+    /// ran) into its accounting. Tasks run sequentially on a worker's
+    /// private store, so the before/after counter delta is exactly this
+    /// task's traffic.
     fn execute(&self, spec: &TaskSpec) -> Result<TaskOutput> {
+        let before = self.store.stats();
+        let mut out = self.execute_inner(spec)?;
+        if let (Some(b), Some(a)) = (before, self.store.stats()) {
+            out.tier.mem_read_bytes += a.mem_bytes_read - b.mem_bytes_read;
+            out.tier.mem_read_micros += (a.mem_read_nanos - b.mem_read_nanos) / 1_000;
+            out.tier.remote_read_bytes += a.pfs_bytes_read - b.pfs_bytes_read;
+            out.tier.remote_read_micros += (a.pfs_read_nanos - b.pfs_read_nanos) / 1_000;
+        }
+        Ok(out)
+    }
+
+    fn execute_inner(&self, spec: &TaskSpec) -> Result<TaskOutput> {
         match &spec.kind {
             TaskKind::Map {
                 object,
@@ -226,7 +305,7 @@ impl Worker {
             )));
         }
         let partitioner = Partitioner::from_bucket_map(bucket_map.to_vec(), partitions)?;
-        let reader = self.store.open(object)?;
+        let reader = self.store.open_read(object)?;
         let mut data = vec![0u8; len as usize];
         read_full_at(reader.as_ref(), offset, &mut data)?;
         drop(reader);
@@ -251,13 +330,50 @@ impl Worker {
                 continue;
             }
             let key = format!("{shuffle_prefix}m{task_index:05}-a{attempt}-p{p:05}");
-            let mut w = self.store.create(&key)?;
-            w.append(&run)?;
-            out.bytes_written += w.written();
-            w.commit()?;
+            self.write_spill(&key, &run, &mut out)?;
+            out.bytes_written += run.len() as u64;
             out.spills.push((p as u32, key));
         }
         Ok(out)
+    }
+
+    /// Commit one map spill. Untiered: a plain streamed write. Tiered:
+    /// the run stages mem-only (Figure 4 a) so a reduce scheduled on
+    /// this worker reads it back at memory speed, then checkpoints to
+    /// the shared servers *before* the task reports done — a spill only
+    /// this process can serve would strand the job if the process dies
+    /// after `TaskDone` (the coordinator re-executes tasks of *lost*
+    /// workers, not completed ones). A run too large for the memory
+    /// tier falls back to write-through instead of failing the task.
+    fn write_spill(&self, key: &str, run: &[u8], out: &mut TaskOutput) -> Result<()> {
+        match &self.store {
+            WorkerStore::Plain(s) => {
+                let mut w = s.create(key)?;
+                w.append(run)?;
+                w.commit()?;
+            }
+            WorkerStore::Tiered(t) => {
+                let t0 = Instant::now();
+                match t.write(key, run, WriteMode::MemOnly) {
+                    Ok(()) => {
+                        out.tier.mem_write_bytes += run.len() as u64;
+                        out.tier.mem_write_micros += t0.elapsed().as_micros() as u64;
+                        let t1 = Instant::now();
+                        t.checkpoint(key)?;
+                        out.tier.remote_write_bytes += run.len() as u64;
+                        out.tier.remote_write_micros += t1.elapsed().as_micros() as u64;
+                    }
+                    Err(Error::OverCapacity { .. }) => {
+                        let t1 = Instant::now();
+                        t.write(key, run, WriteMode::WriteThrough)?;
+                        out.tier.remote_write_bytes += run.len() as u64;
+                        out.tier.remote_write_micros += t1.elapsed().as_micros() as u64;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        Ok(())
     }
 
     /// K-way merge the partition's sorted spills on the full 10-byte
@@ -268,7 +384,7 @@ impl Worker {
         let mut out = TaskOutput::default();
         let mut runs: Vec<Vec<u8>> = Vec::with_capacity(spill_keys.len());
         for key in spill_keys {
-            let reader = self.store.open(key)?;
+            let reader = self.store.open_read(key)?;
             let len = reader.len();
             if len % RECORD_SIZE as u64 != 0 {
                 return Err(Error::InvalidArg(format!(
@@ -281,7 +397,8 @@ impl Worker {
             runs.push(buf);
         }
 
-        let mut w = self.store.create(out_key)?;
+        let mut w = self.store.create_output(out_key)?;
+        let mut write_micros = 0u64;
         let mut cursors = vec![0usize; runs.len()];
         let mut chunk = Vec::with_capacity(REDUCE_CHUNK);
         loop {
@@ -301,15 +418,29 @@ impl Worker {
             chunk.extend_from_slice(&runs[r][off..off + RECORD_SIZE]);
             cursors[r] += 1;
             if chunk.len() >= REDUCE_CHUNK {
+                let t0 = Instant::now();
                 w.append(&chunk)?;
+                write_micros += t0.elapsed().as_micros() as u64;
                 chunk.clear();
             }
         }
         if !chunk.is_empty() {
+            let t0 = Instant::now();
             w.append(&chunk)?;
+            write_micros += t0.elapsed().as_micros() as u64;
         }
         out.bytes_written = w.written();
+        let t0 = Instant::now();
         w.commit()?;
+        write_micros += t0.elapsed().as_micros() as u64;
+        if matches!(self.store, WorkerStore::Tiered(_)) {
+            // Write-through output: both legs carry every byte; the
+            // remote leg gates the append/commit path (the paper's
+            // eq. 6), so the measured wall time is charged to it.
+            out.tier.mem_write_bytes += out.bytes_written;
+            out.tier.remote_write_bytes += out.bytes_written;
+            out.tier.remote_write_micros += write_micros;
+        }
         Ok(out)
     }
 }
@@ -319,6 +450,8 @@ struct TaskOutput {
     spills: Vec<(u32, String)>,
     bytes_read: u64,
     bytes_written: u64,
+    /// Per-tier byte/busy-time split (zero for untiered workers).
+    tier: TierIo,
 }
 
 #[cfg(test)]

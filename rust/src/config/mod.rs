@@ -316,6 +316,11 @@ pub struct ClusterTopology {
     pub epoch: u64,
     /// Stripe size of the remote PFS client, bytes.
     pub stripe_size: u64,
+    /// Byte capacity of each worker's process-local memory tier over
+    /// the remote PFS. `0` (the default) runs workers untiered —
+    /// every open/create goes straight to the shared store, exactly
+    /// the pre-tiered cluster shape.
+    pub worker_mem_capacity: u64,
 }
 
 impl Default for ClusterTopology {
@@ -328,6 +333,7 @@ impl Default for ClusterTopology {
             grace_ms: 10_000,
             epoch: 0,
             stripe_size: crate::cluster::DEFAULT_STRIPE_SIZE,
+            worker_mem_capacity: 0,
         }
     }
 }
@@ -387,6 +393,19 @@ impl ClusterTopology {
                 }
             };
         }
+        if let Some(v) = cluster.get("worker_mem_capacity") {
+            cfg.worker_mem_capacity = match v {
+                Value::Integer(i) if *i >= 0 => *i as u64,
+                Value::String(s) => parse_bytes(s).ok_or_else(|| {
+                    Error::Config(format!("bad byte size for `worker_mem_capacity`: {s}"))
+                })?,
+                other => {
+                    return Err(Error::Config(format!(
+                        "bad value for `worker_mem_capacity`: {other:?}"
+                    )))
+                }
+            };
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -439,6 +458,7 @@ pfs = ["10.0.0.2:7100", "10.0.0.3:7100"]
 grace_ms = 30000
 epoch = 7
 stripe_size = "2M"
+worker_mem_capacity = "128M"
 "#,
         )
         .unwrap();
@@ -448,6 +468,7 @@ stripe_size = "2M"
         assert_eq!(cfg.grace_ms, 30_000);
         assert_eq!(cfg.epoch, 7);
         assert_eq!(cfg.stripe_size, 2 << 20);
+        assert_eq!(cfg.worker_mem_capacity, 128 << 20);
         // untouched keys keep defaults
         assert_eq!(cfg.heartbeat_ms, 1_000);
         // absent table is all defaults
@@ -468,6 +489,14 @@ stripe_size = "2M"
         )
         .is_err());
         assert!(ClusterTopology::from_toml_str("[cluster]\nstripe_size = 0\n").is_err());
+        assert!(ClusterTopology::from_toml_str(
+            "[cluster]\nworker_mem_capacity = \"lots\"\n"
+        )
+        .is_err());
+        // 0 is a valid capacity: it means "run untiered"
+        let cfg =
+            ClusterTopology::from_toml_str("[cluster]\nworker_mem_capacity = 0\n").unwrap();
+        assert_eq!(cfg.worker_mem_capacity, 0);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! tlstore job workloads                  (list built-in pipelines)
 //! tlstore cluster pfs-server  --listen ADDR --root DIR
 //! tlstore cluster coordinator --listen ADDR --workers N [--pfs a,b] [--config cluster.toml]
-//! tlstore cluster worker      --coordinator ADDR [--pfs a,b] [--die-after-tasks N]
+//! tlstore cluster worker      --coordinator ADDR [--pfs a,b] [--mem-capacity N] [--die-after-tasks N]
 //! tlstore bench parity  [--smoke] [--tolerance X] [--out-dir DIR]
 //! tlstore model     [--pfs-aggregate MB/s] [--f 0.2]      (Figure 5)
 //! tlstore sim       [--backend ...] [--nodes N] [--data-nodes M] (Figure 7)
@@ -573,15 +573,46 @@ fn cmd_cluster_pfs_server(args: &Args) -> Result<()> {
 }
 
 /// Pull and execute tasks until the coordinator dismisses this worker.
+/// `--mem-capacity N` (or `[cluster] worker_mem_capacity` with
+/// `--config`) layers the paper's process-local memory tier over the
+/// `--pfs` stripe servers; `0` (the default) runs untiered.
 fn cmd_cluster_worker(args: &Args) -> Result<()> {
     let coord = args.get("coordinator", "127.0.0.1:7000");
-    let stripe = args.get_bytes("stripe-size", tlstore::cluster::DEFAULT_STRIPE_SIZE)?;
+    let topo = {
+        let path = args.get("config", "");
+        if path.is_empty() {
+            tlstore::config::ClusterTopology::default()
+        } else {
+            tlstore::config::ClusterTopology::from_file(std::path::Path::new(&path))?
+        }
+    };
+    let stripe = args.get_bytes("stripe-size", topo.stripe_size)?;
+    let mem_cap = args.get_bytes("mem-capacity", topo.worker_mem_capacity)?;
+    let block = args.get_bytes("block-size", 4 << 20)?;
     let die_after = args.get_parse("die-after-tasks", 0u64)?;
     let artifacts = args.get("artifacts", "artifacts");
-    let store = cluster_store(args, stripe)?;
-    args.finish()?;
-    let kernel = SortKernel::auto(std::path::Path::new(&artifacts));
-    let mut worker = Worker::new(store, kernel);
+    let kernel_path = std::path::PathBuf::from(&artifacts);
+    let mut addrs = pfs_addrs(args);
+    if addrs.is_empty() {
+        addrs = topo.pfs.clone();
+    }
+    // Tiered only over remote stripe servers; with a locally attached
+    // backend, `--mem-capacity` keeps its old meaning (the local
+    // store's own memory-tier capacity, via `open_store`).
+    let mut worker = if mem_cap > 0 && !addrs.is_empty() {
+        let remote = RemotePfs::connect(&TcpTransport, &addrs, stripe)?;
+        let tls_cfg = TlsConfig::builder("worker-mem-tier")
+            .mem_capacity(mem_cap)
+            .block_size(block)
+            .build()?;
+        args.finish()?;
+        let store = Arc::new(TwoLevelStore::with_tier(tls_cfg, remote)?);
+        Worker::tiered(store, SortKernel::auto(&kernel_path))
+    } else {
+        let store = cluster_store(args, stripe)?;
+        args.finish()?;
+        Worker::new(store, SortKernel::auto(&kernel_path))
+    };
     if die_after > 0 {
         worker = worker.die_after_assignments(die_after);
     }
@@ -715,6 +746,16 @@ fn cmd_cluster_coordinator(args: &Args) -> Result<()> {
     );
     // the TCP smoke test greps this line for the re-execution evidence
     println!("re-executed tasks: {:?}", report.reexecuted);
+    // present only when at least one worker ran tiered (--mem-capacity);
+    // the TCP smoke test greps it to prove the mem tier saw hits
+    if let Some(f) = report.observed_read_residency() {
+        println!(
+            "tier reads: mem {} B, remote {} B, residency {:.3}",
+            report.mem_read_bytes(),
+            report.remote_read_bytes(),
+            f
+        );
+    }
     let timelines = report.timelines();
     if !timelines.series.is_empty() {
         print!("{}", timelines.render(40));

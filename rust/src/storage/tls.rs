@@ -37,12 +37,13 @@ use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::storage::block::{BlockGeometry, BlockId};
 use crate::storage::buffer::{BufferPool, PooledBuf};
 use crate::storage::memstore::{MemStats, MemStore};
-use crate::storage::pfs::{Hints, Pfs, PfsStats, PfsWriter};
+use crate::storage::pfs::{Pfs, PfsStats};
 use crate::storage::{
     read_full_at, ObjectMeta, ObjectReader, ObjectStore, ObjectWriter, ReadMode, Recover,
     RecoveryReport, WriteMode,
@@ -62,6 +63,38 @@ const GEOMETRY_MARKER: &str = ".tls-geometry";
 
 /// Uniquifies in-flight writer staging namespaces.
 static TLS_WRITER_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// PFS spill-object name for block `index` of `object`.
+fn dirty_key(object: &str, index: u64) -> String {
+    format!("{DIRTY_NS}{object}#{index}")
+}
+
+/// The parallel-FS tier a [`TwoLevelStore`] checkpoints into: any
+/// [`ObjectStore`] that can additionally run its own crash recovery and
+/// quarantine objects it must never serve again. [`Pfs`] is the
+/// in-process implementation the single-node engine uses; the cluster
+/// plane's [`RemotePfs`](crate::cluster::RemotePfs) client implements it
+/// over the wire, which is what gives every cluster worker the paper's
+/// memory tier on top of the shared striped servers.
+pub trait PfsTier: ObjectStore {
+    /// Run the tier's own crash recovery: reap writer temps and orphans,
+    /// quarantine inconsistent objects, and report what was done.
+    fn recover_tier(&self) -> Result<RecoveryReport>;
+
+    /// Park `key` in the tier's quarantine namespace so it reads
+    /// `NotFound` under its original name and is never resurrected.
+    fn quarantine_object(&self, key: &str) -> Result<()>;
+}
+
+impl PfsTier for Pfs {
+    fn recover_tier(&self) -> Result<RecoveryReport> {
+        self.recover_pfs()
+    }
+
+    fn quarantine_object(&self, key: &str) -> Result<()> {
+        self.quarantine(key)
+    }
+}
 
 /// Configuration for [`TwoLevelStore`].
 #[derive(Debug, Clone)]
@@ -218,6 +251,12 @@ pub struct TlsStats {
     pub mem_bytes_read: u64,
     /// Bytes served from the PFS tier.
     pub pfs_bytes_read: u64,
+    /// Busy time spent fetching blocks from the memory tier, in
+    /// nanoseconds (block-fault granularity; slicing already-fetched
+    /// bytes is not counted).
+    pub mem_read_nanos: u64,
+    /// Busy time spent fetching from the PFS tier, in nanoseconds.
+    pub pfs_read_nanos: u64,
     /// Dirty blocks spilled by eviction pressure.
     pub dirty_spills: u64,
     /// Whole-object checkpoints written.
@@ -237,11 +276,16 @@ impl TlsStats {
     }
 }
 
-/// The two-level store.
-pub struct TwoLevelStore {
+/// The two-level store, generic over its PFS tier. The default tier is
+/// the in-process [`Pfs`] ([`TwoLevelStore::open`]); cluster workers
+/// instantiate it over the striped
+/// [`RemotePfs`](crate::cluster::RemotePfs) client via
+/// [`TwoLevelStore::with_tier`], putting the paper's memory tier in
+/// every worker process on top of the shared stripe servers.
+pub struct TwoLevelStore<P: PfsTier = Pfs> {
     cfg: TlsConfig,
     mem: MemStore,
-    pfs: Pfs,
+    pfs: P,
     objects: Mutex<HashMap<String, ObjEntry>>,
     dirty: Mutex<HashSet<String>>, // storage_key of dirty blocks
     /// Recycled `block_size` accumulators for streaming writers (the §3.2
@@ -250,14 +294,17 @@ pub struct TwoLevelStore {
     block_pool: BufferPool,
     mem_bytes_read: AtomicU64,
     pfs_bytes_read: AtomicU64,
+    mem_read_nanos: AtomicU64,
+    pfs_read_nanos: AtomicU64,
     dirty_spills: AtomicU64,
     checkpoints: AtomicU64,
 }
 
 impl TwoLevelStore {
-    /// Open (or create) a store. Re-opening a root recovers persisted
-    /// objects from the PFS tier; the memory tier starts cold, exactly
-    /// like a Tachyon restart over OrangeFS.
+    /// Open (or create) a store over an in-process [`Pfs`] tier.
+    /// Re-opening a root recovers persisted objects from the PFS tier;
+    /// the memory tier starts cold, exactly like a Tachyon restart over
+    /// OrangeFS.
     pub fn open(cfg: TlsConfig) -> Result<Self> {
         let pool = Arc::new(ThreadPool::new(cfg.workers.max(2)));
         let pfs = Pfs::open_with_pool(
@@ -267,44 +314,14 @@ impl TwoLevelStore {
             pool,
         )?;
         Self::check_geometry_marker(&cfg)?;
-        let mem = MemStore::with_shards(cfg.mem_capacity, &cfg.eviction, cfg.mem_shards)?;
+        Self::with_tier(cfg, pfs)
+    }
 
-        // Recover the object table from PFS contents. Only consolidated
-        // checkpoints resurrect an entry: mode-(a) data is volatile until
-        // checkpointed (exactly Tachyon's restart semantics), so `.dirty/`
-        // spill blocks of a previous incarnation never rebuild an object —
-        // a partial spill set would serve a prefix, and even a complete one
-        // belongs to a write whose commit this process cannot vouch for.
-        // [`TwoLevelStore::recover`] quarantines those spills; quarantined
-        // objects stay invisible too.
-        let mut objects = HashMap::new();
-        for key in pfs.list("") {
-            if key.starts_with(DIRTY_NS) || key.starts_with(crate::storage::pfs::QUARANTINE_NS) {
-                continue;
-            }
-            let size = pfs.size(&key)?;
-            objects.insert(
-                key,
-                ObjEntry {
-                    size,
-                    persisted: true,
-                },
-            );
-        }
-
-        let block_pool = BufferPool::new(cfg.block_size as usize, 4);
-        Ok(Self {
-            cfg,
-            mem,
-            pfs,
-            objects: Mutex::new(objects),
-            dirty: Mutex::new(HashSet::new()),
-            block_pool,
-            mem_bytes_read: AtomicU64::new(0),
-            pfs_bytes_read: AtomicU64::new(0),
-            dirty_spills: AtomicU64::new(0),
-            checkpoints: AtomicU64::new(0),
-        })
+    /// PFS-tier counters (stripe reads/writes, bytes). Specific to the
+    /// in-process [`Pfs`] tier; remote tiers report through the cluster
+    /// plane instead.
+    pub fn pfs_stats(&self) -> PfsStats {
+        self.pfs.stats()
     }
 
     fn check_geometry_marker(cfg: &TlsConfig) -> Result<()> {
@@ -331,6 +348,60 @@ impl TwoLevelStore {
             }
         }
     }
+}
+
+impl<P: PfsTier> TwoLevelStore<P> {
+    /// Build a store over an already-constructed PFS tier — how a
+    /// cluster worker layers its memory tier over the shared
+    /// [`RemotePfs`](crate::cluster::RemotePfs) client. The tier's
+    /// root/geometry bookkeeping (directories, the block-size marker)
+    /// is the caller's concern; everything else matches
+    /// [`TwoLevelStore::open`].
+    pub fn with_tier(cfg: TlsConfig, tier: P) -> Result<Self> {
+        if cfg.block_size == 0 {
+            return Err(Error::Config("block_size must be > 0".into()));
+        }
+        let mem = MemStore::with_shards(cfg.mem_capacity, &cfg.eviction, cfg.mem_shards)?;
+
+        // Recover the object table from PFS contents. Only consolidated
+        // checkpoints resurrect an entry: mode-(a) data is volatile until
+        // checkpointed (exactly Tachyon's restart semantics), so `.dirty/`
+        // spill blocks of a previous incarnation never rebuild an object —
+        // a partial spill set would serve a prefix, and even a complete one
+        // belongs to a write whose commit this process cannot vouch for.
+        // [`TwoLevelStore::recover`] quarantines those spills; quarantined
+        // objects stay invisible too.
+        let mut objects = HashMap::new();
+        for key in tier.list("") {
+            if key.starts_with(DIRTY_NS) || key.starts_with(crate::storage::pfs::QUARANTINE_NS) {
+                continue;
+            }
+            let size = tier.size(&key)?;
+            objects.insert(
+                key,
+                ObjEntry {
+                    size,
+                    persisted: true,
+                },
+            );
+        }
+
+        let block_pool = BufferPool::new(cfg.block_size as usize, 4);
+        Ok(Self {
+            cfg,
+            mem,
+            pfs: tier,
+            objects: Mutex::new(objects),
+            dirty: Mutex::new(HashSet::new()),
+            block_pool,
+            mem_bytes_read: AtomicU64::new(0),
+            pfs_bytes_read: AtomicU64::new(0),
+            mem_read_nanos: AtomicU64::new(0),
+            pfs_read_nanos: AtomicU64::new(0),
+            dirty_spills: AtomicU64::new(0),
+            checkpoints: AtomicU64::new(0),
+        })
+    }
 
     /// The validated configuration this store was built with.
     pub fn config(&self) -> &TlsConfig {
@@ -342,23 +413,20 @@ impl TwoLevelStore {
         self.mem.stats()
     }
 
-    /// PFS-tier counters (stripe reads/writes, bytes).
-    pub fn pfs_stats(&self) -> PfsStats {
-        self.pfs.stats()
-    }
-
     /// Combined two-tier counters for the metrics plane.
     pub fn stats(&self) -> TlsStats {
         TlsStats {
             mem_bytes_read: self.mem_bytes_read.load(Ordering::Relaxed),
             pfs_bytes_read: self.pfs_bytes_read.load(Ordering::Relaxed),
+            mem_read_nanos: self.mem_read_nanos.load(Ordering::Relaxed),
+            pfs_read_nanos: self.pfs_read_nanos.load(Ordering::Relaxed),
             dirty_spills: self.dirty_spills.load(Ordering::Relaxed),
             checkpoints: self.checkpoints.load(Ordering::Relaxed),
         }
     }
 
     /// Direct access to the PFS tier (the coordinator and benches use it).
-    pub fn pfs(&self) -> &Pfs {
+    pub fn pfs(&self) -> &P {
         &self.pfs
     }
 
@@ -369,12 +437,8 @@ impl TwoLevelStore {
 
     fn geometry(&self, size: u64) -> BlockGeometry {
         // lint:allow(no-panic): `cfg.block_size` was validated non-zero by
-        // TwoLevelStore::open, the only constructor
+        // `with_tier`, which every constructor routes through
         BlockGeometry::new(size, self.cfg.block_size).expect("validated block size")
-    }
-
-    fn dirty_key(object: &str, index: u64) -> String {
-        format!("{DIRTY_NS}{object}#{index}")
     }
 
     /// Handle eviction victims: dirty blocks must hit the PFS before the
@@ -397,7 +461,7 @@ impl TwoLevelStore {
                         "dirty block `{key}`: malformed storage key, cannot spill"
                     )));
                 };
-                self.pfs.write(&Self::dirty_key(obj, idx), &bytes)?;
+                self.pfs.write(&dirty_key(obj, idx), &bytes)?;
                 self.dirty_spills.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -424,7 +488,7 @@ impl TwoLevelStore {
             self.mem.remove(&BlockId::new(key, i).storage_key());
             // delete is idempotent for missing spills; an Err is a real
             // filesystem failure and the orphan is recover()'s problem
-            if let Err(e) = self.pfs.delete(&Self::dirty_key(key, i)) {
+            if let Err(e) = self.pfs.delete(&dirty_key(key, i)) {
                 crate::log_warn!("purge of stale spill `{key}#{i}` failed: {e}");
             }
         }
@@ -444,7 +508,7 @@ impl TwoLevelStore {
         for i in 0..upto {
             // same contract as purge_stale_blocks: only real filesystem
             // failures land here, and recover() reaps what this pass missed
-            if let Err(e) = self.pfs.delete(&Self::dirty_key(key, i)) {
+            if let Err(e) = self.pfs.delete(&dirty_key(key, i)) {
                 crate::log_warn!("purge of stale spill `{key}#{i}` failed: {e}");
             }
         }
@@ -648,12 +712,27 @@ impl TwoLevelStore {
     }
 
     fn entry(&self, key: &str) -> Result<ObjEntry> {
-        self.objects
-            .lock()
-            .unwrap()
-            .get(key)
-            .cloned()
-            .ok_or_else(|| Error::NotFound(key.to_string()))
+        if let Some(e) = self.objects.lock().unwrap().get(key).cloned() {
+            return Ok(e);
+        }
+        // Cross-process visibility: cluster peers commit objects to the
+        // shared PFS tier behind this table's back. Adopt a tier-resident
+        // key as an already-persisted entry (objects are write-once, so
+        // the size read here cannot go stale).
+        if !Self::is_reserved_key(key) && self.pfs.exists(key) {
+            let size = self.pfs.size(key)?;
+            let e = ObjEntry {
+                size,
+                persisted: true,
+            };
+            self.objects
+                .lock()
+                .unwrap()
+                .entry(key.to_string())
+                .or_insert_with(|| e.clone());
+            return Ok(e);
+        }
+        Err(Error::NotFound(key.to_string()))
     }
 
     /// Fetch one block through the priority policy. Returns the bytes and
@@ -669,13 +748,17 @@ impl TwoLevelStore {
         let skey = BlockId::new(key, index).storage_key();
         const MAX_ATTEMPTS: u32 = 500;
         for attempt in 0..MAX_ATTEMPTS {
+            let t0 = Instant::now();
             if let Some(bytes) = self.mem.get(&skey) {
+                self.mem_read_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 return Ok((bytes, true));
             }
             // miss → PFS: prefer the consolidated checkpoint, else spill
             let entry = self.entry(key)?;
             let geo = self.geometry(entry.size);
             let (s, e) = geo.block_range(index);
+            let t0 = Instant::now();
             let fetched: Result<Vec<u8>> = if entry.persisted {
                 // chunked transfer through the §3.2 pfs buffer, straight
                 // into the block buffer (the reader handle fans each
@@ -694,10 +777,12 @@ impl TwoLevelStore {
                     Ok(out)
                 })()
             } else {
-                self.pfs.read(&Self::dirty_key(key, index))
+                self.pfs.read(&dirty_key(key, index))
             };
             match fetched {
                 Ok(bytes) => {
+                    self.pfs_read_nanos
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     let bytes: Arc<[u8]> = bytes.into();
                     if cache {
                         let evicted = self.mem.put(&skey, Arc::clone(&bytes))?;
@@ -725,7 +810,10 @@ impl TwoLevelStore {
                         "{key}: not persisted; Bypass reads only the PFS tier"
                     )));
                 }
+                let t0 = Instant::now();
                 let data = self.pfs.read(key)?;
+                self.pfs_read_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 self.pfs_bytes_read
                     .fetch_add(data.len() as u64, Ordering::Relaxed);
                 Ok(data)
@@ -767,7 +855,10 @@ impl TwoLevelStore {
             if !entry.persisted {
                 return Err(Error::NotFound(format!("{key}: not persisted")));
             }
+            let t0 = Instant::now();
             let data = self.pfs.read_range(key, offset, len)?;
+            self.pfs_read_nanos
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             self.pfs_bytes_read
                 .fetch_add(data.len() as u64, Ordering::Relaxed);
             return Ok(data);
@@ -806,10 +897,10 @@ impl TwoLevelStore {
     /// checkpointer calls for mode-(a) data.
     ///
     /// The checkpoint *streams*: each block flows straight from the memory
-    /// tier (or its dirty spill) into a chunked striped [`PfsWriter`], so
-    /// the store never materializes the whole object, and a crash
-    /// mid-checkpoint leaves only invisible temp datafiles (the writer's
-    /// commit is the atomic visibility point). Blocks read for
+    /// tier (or its dirty spill) into the tier's chunked streaming
+    /// writer, so the store never materializes the whole object, and a
+    /// crash mid-checkpoint leaves only invisible staged temps (the
+    /// writer's commit is the atomic visibility point). Blocks read for
     /// checkpointing are *not* cached back, so a background checkpoint
     /// cannot evict the working set.
     pub fn checkpoint(&self, key: &str) -> Result<()> {
@@ -818,7 +909,7 @@ impl TwoLevelStore {
             return Ok(());
         }
         let geo = self.geometry(entry.size);
-        let mut w = self.pfs.create_with_hints(key, Hints::default())?;
+        let mut w = self.pfs.create(key)?;
         for i in 0..geo.num_blocks() {
             let (bytes, from_mem) = self.read_block(key, i, false)?;
             if from_mem {
@@ -828,9 +919,9 @@ impl TwoLevelStore {
                 self.pfs_bytes_read
                     .fetch_add(bytes.len() as u64, Ordering::Relaxed);
             }
-            w.append_chunk(&bytes)?;
+            w.append(&bytes)?;
         }
-        w.finish()?;
+        w.commit()?;
         // Flip the object to persisted *before* dropping the spill blocks:
         // concurrent readers that miss memory then re-snapshot the entry
         // and route to the consolidated checkpoint instead of the (soon to
@@ -847,7 +938,7 @@ impl TwoLevelStore {
             dirty.remove(&BlockId::new(key, i).storage_key());
             // the checkpoint already landed, so a leftover spill is an
             // orphan (correctness-neutral); recover() reaps it later
-            if let Err(e) = self.pfs.delete(&Self::dirty_key(key, i)) {
+            if let Err(e) = self.pfs.delete(&dirty_key(key, i)) {
                 crate::log_warn!("checkpoint `{key}`: spill cleanup for block {i} failed: {e}");
             }
         }
@@ -891,7 +982,7 @@ impl TwoLevelStore {
     /// the memory tier restarts empty, the PFS tier is the durable source
     /// of truth, and everything in between must be repaired or refused.
     ///
-    /// 1. The PFS tier recovers itself ([`Pfs::recover_pfs`]): writer
+    /// 1. The PFS tier recovers itself ([`PfsTier::recover_tier`]): writer
     ///    temp datafiles and torn metadata go, inconsistent objects are
     ///    quarantined, orphan datafiles are removed.
     /// 2. Abandoned `.wip/` staging blocks (a writer whose process died
@@ -912,7 +1003,7 @@ impl TwoLevelStore {
     ///    only recomputable intermediate data, which recovery deletes
     ///    outright (never quarantines — see `docs/FAULT_MODEL.md`).
     pub fn recover(&self) -> Result<RecoveryReport> {
-        let mut report = self.pfs.recover_pfs()?;
+        let mut report = self.pfs.recover_tier()?;
 
         // pass 2: abandoned in-memory write staging
         for key in self.mem.list(WIP_NS) {
@@ -956,7 +1047,7 @@ impl TwoLevelStore {
                 _ => {
                     // unknown owner (previous incarnation's uncommitted
                     // mode-(a) data) or malformed name: never resurrect
-                    self.pfs.quarantine(&skey)?;
+                    self.pfs.quarantine_object(&skey)?;
                     report.quarantined.push(skey);
                 }
             }
@@ -1039,7 +1130,7 @@ impl TwoLevelStore {
         }
         let pfs = match mode {
             WriteMode::MemOnly => None,
-            _ => Some(self.pfs.create_with_hints(key, Hints::default())?),
+            _ => Some(self.pfs.create(key)?),
         };
         // Bypass writers never run the memory leg: don't check a block
         // accumulator out of the pool they would only hold hostage
@@ -1067,8 +1158,8 @@ impl TwoLevelStore {
 /// [`TwoLevelStore::open_with`]. `size` and the paper's read mode are
 /// snapshotted at open; `read_at` is stateless and shareable across
 /// threads (prefetch windows read through one handle concurrently).
-pub struct TlsReader<'a> {
-    store: &'a TwoLevelStore,
+pub struct TlsReader<'a, P: PfsTier = Pfs> {
+    store: &'a TwoLevelStore<P>,
     key: String,
     size: u64,
     mode: ReadMode,
@@ -1076,7 +1167,7 @@ pub struct TlsReader<'a> {
     bypass: Option<Box<dyn ObjectReader + 'a>>,
 }
 
-impl ObjectReader for TlsReader<'_> {
+impl<P: PfsTier> ObjectReader for TlsReader<'_, P> {
     fn len(&self) -> u64 {
         self.size
     }
@@ -1132,8 +1223,8 @@ impl ObjectReader for TlsReader<'_> {
 /// Streaming writer into the two-level store; see
 /// [`TwoLevelStore::create_with`] for the per-mode data path and
 /// visibility guarantees.
-pub struct TlsWriter<'a> {
-    store: &'a TwoLevelStore,
+pub struct TlsWriter<'a, P: PfsTier = Pfs> {
+    store: &'a TwoLevelStore<P>,
     key: String,
     mode: WriteMode,
     /// Hidden staging object name for in-flight memory-tier blocks.
@@ -1145,8 +1236,8 @@ pub struct TlsWriter<'a> {
     staged: u64,
     /// Completed blocks buffered until commit (MemOnly).
     pending: Vec<Arc<[u8]>>,
-    /// Streaming PFS leg (WriteThrough / Bypass).
-    pfs: Option<PfsWriter<'a>>,
+    /// Streaming PFS-tier leg (WriteThrough / Bypass).
+    pfs: Option<Box<dyn ObjectWriter + 'a>>,
     written: u64,
     /// Memory leg still caching; WriteThrough flips this off (degrading to
     /// PFS-only) when a block cannot fit the tier.
@@ -1154,7 +1245,7 @@ pub struct TlsWriter<'a> {
     finished: bool,
 }
 
-impl TlsWriter<'_> {
+impl<P: PfsTier> TlsWriter<'_, P> {
     fn append_inner(&mut self, chunk: &[u8]) -> Result<()> {
         if chunk.is_empty() {
             return Ok(());
@@ -1177,7 +1268,7 @@ impl TlsWriter<'_> {
             let mut pfs = self.pfs.take().expect("checked is_some");
             let (pfs, pfs_res, mem_res) = std::thread::scope(|s| {
                 let pfs_leg = s.spawn(move || {
-                    let r = pfs.append_chunk(chunk);
+                    let r = pfs.append(chunk);
                     (pfs, r)
                 });
                 let mem_res = self.accumulate(chunk);
@@ -1197,7 +1288,7 @@ impl TlsWriter<'_> {
             mem_res
         } else {
             if let Some(w) = &mut self.pfs {
-                w.append_chunk(chunk)?; // PFS leg streams per append
+                w.append(chunk)?; // PFS leg streams per append
             }
             if mem_leg {
                 self.accumulate(chunk)?;
@@ -1287,7 +1378,7 @@ impl TlsWriter<'_> {
             WriteMode::Bypass => {
                 // lint:allow(no-panic): Bypass writers are constructed with
                 // a PFS leg and nothing else ever takes it
-                self.pfs.take().expect("bypass writer has a PFS leg").finish()?;
+                self.pfs.take().expect("bypass writer has a PFS leg").commit()?;
                 if let Some(oldn) = old_blocks {
                     // nothing was cached for the new version: every
                     // resident block of the replaced one is stale
@@ -1303,7 +1394,12 @@ impl TlsWriter<'_> {
                     if let Err(e) = self.seal_block() {
                         self.remove_wip();
                         if let Some(w) = self.pfs.take() {
-                            let _ = w.cancel();
+                            if let Err(e) = w.abort() {
+                                crate::log_warn!(
+                                    "write-through rollback `{}`: PFS-leg abort failed: {e}",
+                                    self.key
+                                );
+                            }
                         }
                         return Err(e);
                     }
@@ -1315,7 +1411,7 @@ impl TlsWriter<'_> {
                 // a PFS leg; a failed append returns Err before commit, and
                 // committing after an Err is outside the writer contract
                 let pfs_leg = self.pfs.take().expect("write-through has a PFS leg");
-                if let Err(e) = pfs_leg.finish() {
+                if let Err(e) = pfs_leg.commit() {
                     self.remove_wip();
                     return Err(e);
                 }
@@ -1460,7 +1556,7 @@ impl TlsWriter<'_> {
                                 if let Err(cleanup) = self
                                     .store
                                     .pfs
-                                    .delete(&TwoLevelStore::dirty_key(&self.key, j as u64))
+                                    .delete(&dirty_key(&self.key, j as u64))
                                 {
                                     return Err(Error::RecoveryNeeded(format!(
                                         "mem-only commit of `{}` failed ({e}) and spill \
@@ -1500,12 +1596,15 @@ impl TlsWriter<'_> {
             block.clear();
         }
         if let Some(w) = self.pfs.take() {
-            let _ = w.cancel(); // temp datafiles unlinked
+            // a failed abort leaves staged temps for recover() to reap
+            if let Err(e) = w.abort() {
+                crate::log_warn!("abort `{}`: PFS-leg cleanup failed: {e}", self.key);
+            }
         }
     }
 }
 
-impl Drop for TlsWriter<'_> {
+impl<P: PfsTier> Drop for TlsWriter<'_, P> {
     fn drop(&mut self) {
         if !self.finished {
             self.abort_inner();
@@ -1513,7 +1612,7 @@ impl Drop for TlsWriter<'_> {
     }
 }
 
-impl ObjectWriter for TlsWriter<'_> {
+impl<P: PfsTier> ObjectWriter for TlsWriter<'_, P> {
     fn append(&mut self, chunk: &[u8]) -> Result<()> {
         self.append_inner(chunk)
     }
@@ -1532,13 +1631,13 @@ impl ObjectWriter for TlsWriter<'_> {
     }
 }
 
-impl Recover for TwoLevelStore {
+impl<P: PfsTier> Recover for TwoLevelStore<P> {
     fn recover(&self) -> Result<RecoveryReport> {
-        TwoLevelStore::recover(self)
+        TwoLevelStore::<P>::recover(self)
     }
 }
 
-impl ObjectStore for TwoLevelStore {
+impl<P: PfsTier> ObjectStore for TwoLevelStore<P> {
     fn open(&self, key: &str) -> Result<Box<dyn ObjectReader + '_>> {
         self.open_with(key, ReadMode::TwoLevel)
     }
@@ -1555,15 +1654,15 @@ impl ObjectStore for TwoLevelStore {
     }
 
     fn write(&self, key: &str, data: &[u8]) -> Result<()> {
-        TwoLevelStore::write(self, key, data, WriteMode::WriteThrough)
+        TwoLevelStore::<P>::write(self, key, data, WriteMode::WriteThrough)
     }
 
     fn read(&self, key: &str) -> Result<Vec<u8>> {
-        TwoLevelStore::read(self, key, ReadMode::TwoLevel)
+        TwoLevelStore::<P>::read(self, key, ReadMode::TwoLevel)
     }
 
     fn read_range(&self, key: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
-        TwoLevelStore::read_range(self, key, offset, len, ReadMode::TwoLevel)
+        TwoLevelStore::<P>::read_range(self, key, offset, len, ReadMode::TwoLevel)
     }
 
     fn size(&self, key: &str) -> Result<u64> {
@@ -1571,7 +1670,10 @@ impl ObjectStore for TwoLevelStore {
     }
 
     fn exists(&self, key: &str) -> bool {
+        // same cross-process fallback as `entry`: a peer may have
+        // committed this key to the shared PFS tier
         self.objects.lock().unwrap().contains_key(key)
+            || (!Self::is_reserved_key(key) && self.pfs.exists(key))
     }
 
     fn delete(&self, key: &str) -> Result<()> {
@@ -1588,7 +1690,7 @@ impl ObjectStore for TwoLevelStore {
             dirty.remove(&skey);
             // delete is idempotent for missing spills, so an Err here is a
             // real filesystem failure leaving an orphan `.dirty/` object
-            if let Err(e) = self.pfs.delete(&Self::dirty_key(key, i)) {
+            if let Err(e) = self.pfs.delete(&dirty_key(key, i)) {
                 crate::log_warn!("delete `{key}`: spill cleanup for block {i} failed: {e}");
                 spill_err.get_or_insert_with(|| format!("block {i}: {e}"));
             }
@@ -2201,7 +2303,7 @@ mod tests {
             // craft a stale spill a crash could have left behind (the
             // checkpoint normally deletes these; simulate dying between
             // the checkpoint commit and the spill cleanup)
-            s.pfs().write(&TwoLevelStore::dirty_key("a", 0), &a[..256]).unwrap();
+            s.pfs().write(&dirty_key("a", 0), &a[..256]).unwrap();
         }
         let s = store(&dir, 4096, 256);
         assert!(s.exists("a"), "checkpointed object survives");

@@ -337,6 +337,22 @@ pub fn predict(backend: ParityBackend, model: &ClusterParams, residency: f64) ->
     }
 }
 
+/// Eq. (7) evaluated at a *measured* cluster run: take the memory-tier
+/// residency the run's tiered workers actually reported (the fraction
+/// of read bytes served by worker-local memory, from
+/// [`ClusterReport::observed_read_residency`](crate::cluster::ClusterReport::observed_read_residency))
+/// and feed it through the §4 model at the topology's N/M. Returns
+/// `None` for an untiered run, which reports no per-tier bytes — there
+/// is no observed `f` to evaluate the harmonic mean at.
+pub fn cluster_tls_read_prediction(
+    consts: &DeviceConstants,
+    topo: &crate::config::ClusterTopology,
+    report: &crate::cluster::ClusterReport,
+) -> Option<f64> {
+    let f = report.observed_read_residency()?;
+    Some(consts.model_for(Some(topo)).tls_read(f))
+}
+
 /// One measured-vs-predicted phase comparison.
 #[derive(Debug, Clone)]
 pub struct PhaseParity {
@@ -814,5 +830,47 @@ mod tests {
             assert!(write.measured_mbs > 0.0, "{case:?}");
         }
         assert!(report.render().contains("terasort"));
+    }
+
+    #[test]
+    fn cluster_prediction_uses_observed_residency() {
+        use crate::cluster::{ClusterReport, WorkerIo};
+        let consts = DeviceConstants {
+            ram_mbs: 1000.0,
+            disk_read_mbs: 100.0,
+            disk_write_mbs: 80.0,
+        };
+        let topo = crate::config::ClusterTopology {
+            workers: 2,
+            pfs: vec!["a:1".into(), "b:1".into()],
+            ..Default::default()
+        };
+        let mut io = WorkerIo::default();
+        io.mem_read.record(1.0, 1_000_000, 0.01);
+        io.remote_read.record(1.0, 1_000_000, 0.5);
+        let report = ClusterReport {
+            job_id: "j".into(),
+            epoch: 1,
+            map_tasks: 1,
+            reduce_tasks: 1,
+            reexecuted: Vec::new(),
+            attempts: std::collections::HashMap::new(),
+            locality_hits: 0,
+            locality_total: 1,
+            workers_seen: 2,
+            workers_lost: 0,
+            per_worker: vec![(1, io)],
+        };
+        // observed f = 0.5 → the prediction is exactly eq. (7) at 0.5
+        let predicted = cluster_tls_read_prediction(&consts, &topo, &report).unwrap();
+        let expect = consts.model_for(Some(&topo)).tls_read(0.5);
+        assert!((predicted - expect).abs() < 1e-9, "{predicted} vs {expect}");
+
+        // an untiered run reports no tier bytes → no observed f
+        let untiered = ClusterReport {
+            per_worker: vec![(1, WorkerIo::default())],
+            ..report
+        };
+        assert!(cluster_tls_read_prediction(&consts, &topo, &untiered).is_none());
     }
 }

@@ -10,18 +10,25 @@
 //! TeraValidate passes, and the dead worker's task is re-executed
 //! exactly once. Scenario 2: kill the *last* worker → the job fails with
 //! a diagnosable status, shuffle residue survives (the coordinator only
-//! reaps on success), and [`Recover`] cleans it.
+//! reaps on success), and [`Recover`] cleans it. Scenario 3: kill a
+//! *tiered* worker (a `TwoLevelStore` over the shared striped
+//! `RemotePfs`) after it completes a map task → its checkpointed spills
+//! outlive its memory tier, only its in-flight task re-executes, the
+//! report carries per-tier read bytes, and `recover()` reaps the staged
+//! stripes an abandoned writer left behind.
 
 use std::sync::Arc;
 use std::thread;
 
 use tlstore::cluster::{
-    ClusterJob, Coordinator, CoordinatorConfig, LoopbackNet, Transport, Worker, WorkerSummary,
+    serve, ClusterJob, Coordinator, CoordinatorConfig, Listener, LoopbackNet, RemotePfs,
+    Transport, Worker, WorkerSummary,
 };
 use tlstore::error::Error;
 use tlstore::storage::memstore::MemStore;
 use tlstore::storage::pfs::Pfs;
-use tlstore::storage::{ObjectStore, Recover, SHUFFLE_NS};
+use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
+use tlstore::storage::{ObjectStore, ObjectWriter as _, Recover, SHUFFLE_NS};
 use tlstore::terasort::{self, SortKernel, RECORD_SIZE};
 use tlstore::testing::{master_seed, TempDir};
 
@@ -208,4 +215,173 @@ fn last_worker_death_fails_cleanly_and_recovery_reaps_shuffle() {
     // The input survives recovery untouched.
     let (in_records, _) = terasort::input_checksum(store.as_ref(), "in/").unwrap();
     assert_eq!(in_records, 1_000);
+}
+
+/// Kill one of two *tiered* workers — each a [`TwoLevelStore`] whose
+/// PFS tier is the shared striped [`RemotePfs`] — after it completes
+/// one map task. The worker's memory tier dies with it; its MemOnly
+/// spills were checkpointed to the remote tier before `TaskDone`, so
+/// only the in-flight assignment re-executes and the reducers consume
+/// the dead worker's spills without a re-run. The `ClusterReport`
+/// carries nonzero mem-tier *and* remote-tier read bytes, and a final
+/// `recover()` reaps the staged stripes an abandoned writer stranded.
+#[test]
+fn tiered_worker_death_reexecutes_once_and_recovery_reaps_staged() {
+    const STRIPE: u64 = 4 << 10;
+    let seed = master_seed();
+    let net = LoopbackNet::new();
+
+    // Three loopback stripe servers — the cluster's shared PFS tier.
+    let mut addrs = Vec::new();
+    let mut listeners: Vec<Arc<dyn Listener>> = Vec::new();
+    let mut servers = Vec::new();
+    for i in 0..3 {
+        let addr = format!("pfs{i}:7100");
+        let listener: Arc<dyn Listener> = Arc::from(net.listen(&addr).unwrap());
+        let backing: Arc<dyn ObjectStore> = Arc::new(MemStore::new(u64::MAX, "lru").unwrap());
+        let l2 = Arc::clone(&listener);
+        servers.push(thread::spawn(move || {
+            serve(l2, backing).expect("stripe server");
+        }));
+        addrs.push(addr);
+        listeners.push(listener);
+    }
+
+    let kernel = Arc::new(SortKernel::Cpu);
+    let store: Arc<dyn ObjectStore> =
+        Arc::new(RemotePfs::connect(&net, &addrs, STRIPE).unwrap());
+
+    // 6 input objects of 500 records → 6 map splits, 3 preferred per node.
+    let records = 3_000u64;
+    terasort::teragen(store.as_ref(), "in/", records, 500, seed).unwrap();
+    let (in_records, in_checksum) = terasort::input_checksum(store.as_ref(), "in/").unwrap();
+    assert_eq!(in_records, records);
+
+    let coord = Coordinator::new(
+        net.listen(COORD_ADDR).unwrap(),
+        Arc::clone(&store),
+        Arc::clone(&kernel),
+        CoordinatorConfig {
+            expected_workers: 2,
+            epoch: 0xC3,
+            grace_ms: 60_000,
+        },
+    );
+
+    let spawn_tiered = |die_after: Option<u64>| {
+        let net = net.clone();
+        let addrs = addrs.clone();
+        let kernel = Arc::clone(&kernel);
+        thread::spawn(move || {
+            let remote = RemotePfs::connect(&net, &addrs, STRIPE).unwrap();
+            let cfg = TlsConfig::builder("chaos-worker-tier")
+                .mem_capacity(8 << 20)
+                .block_size(4 << 10)
+                .build()
+                .unwrap();
+            let tls = Arc::new(TwoLevelStore::with_tier(cfg, remote).unwrap());
+            let mut w = Worker::tiered(tls, kernel);
+            if let Some(n) = die_after {
+                w = w.die_after_assignments(n);
+            }
+            let conn = net.connect(COORD_ADDR).expect("worker connect");
+            w.run(conn).expect("worker protocol error")
+        })
+    };
+
+    let survivor = spawn_tiered(None);
+    // Dies receiving its *second* assignment: the first map completed
+    // and its spills checkpointed before the kill.
+    let casualty = spawn_tiered(Some(2));
+
+    let report = coord
+        .run(&ClusterJob {
+            name: "sort".into(),
+            input_prefix: "in/".into(),
+            output_prefix: "out/".into(),
+            reducers: 4,
+            split_size: 500 * RECORD_SIZE as u64,
+            sample_objects: 2,
+        })
+        .expect("job must survive a single tiered-worker death");
+    coord.shutdown();
+
+    let died = casualty.join().unwrap();
+    assert!(died.died, "fault injector must have fired");
+    assert_eq!(died.tasks_done, 1, "one map completed before the kill");
+    let lived = survivor.join().unwrap();
+    assert!(!lived.died);
+
+    // Exactly-once: only the casualty's in-flight task re-executes. Its
+    // *completed* map is not re-run — the checkpointed spills survived
+    // the loss of the worker's memory tier.
+    assert_eq!(report.workers_lost, 1);
+    assert_eq!(report.workers_seen, 2);
+    assert_eq!(
+        report.reexecuted.len(),
+        1,
+        "exactly the casualty's in-flight task re-executes: {:?}",
+        report.reexecuted
+    );
+    assert_eq!(report.attempts[&report.reexecuted[0]], 2);
+    assert_eq!(
+        lived.tasks_done,
+        report.map_tasks + report.reduce_tasks - 1,
+        "the survivor executed everything but the casualty's completed map"
+    );
+
+    // The per-tier accounting reached the coordinator: spill
+    // checkpoints and shuffle-local reads hit the memory tier, input
+    // faults cross the wire to the remote tier.
+    assert!(report.mem_read_bytes() > 0, "mem-tier hit bytes must be reported");
+    assert!(report.remote_read_bytes() > 0, "remote-tier bytes must be reported");
+    let f = report
+        .observed_read_residency()
+        .expect("a tiered job must have an observed residency");
+    assert!(f > 0.0 && f < 1.0, "residency {f} must be a genuine mix");
+
+    // Output validates: sorted, complete, checksum-preserving.
+    let v = terasort::teravalidate(store.as_ref(), "out/").unwrap();
+    assert!(v.sorted, "terasort output must be sorted");
+    assert_eq!(v.records, records);
+    assert_eq!(v.checksum, in_checksum, "records must survive the shuffle");
+    assert!(
+        store.list(SHUFFLE_NS).is_empty(),
+        "no shuffle residue after a successful job"
+    );
+
+    // A client killed mid-write strands staged stripe temps on the
+    // servers; `recover()` on a fresh tiered store (the worker's own
+    // shape) reaps them.
+    let crash = RemotePfs::connect(&net, &addrs, STRIPE).unwrap();
+    let mut w = crash.create("crash/obj").unwrap();
+    w.append(&vec![7u8; (STRIPE * 2 + 100) as usize]).unwrap();
+    std::mem::forget(w); // the "kill": no Drop cleanup runs
+
+    let cfg = TlsConfig::builder("chaos-recover-tier")
+        .mem_capacity(1 << 20)
+        .block_size(4 << 10)
+        .build()
+        .unwrap();
+    let fresh =
+        TwoLevelStore::with_tier(cfg, RemotePfs::connect(&net, &addrs, STRIPE).unwrap()).unwrap();
+    let rep = fresh.recover().unwrap();
+    assert!(
+        rep.temps_removed >= 2,
+        "the abandoned writer's staged stripes must be reaped: {rep:?}"
+    );
+    assert!(!fresh.exists("crash/obj"), "a never-committed object stays invisible");
+
+    // Drop every client conn, then close the listeners so the server
+    // threads exit cleanly.
+    drop(coord);
+    drop(fresh);
+    drop(crash);
+    drop(store);
+    for l in &listeners {
+        l.close();
+    }
+    for t in servers {
+        t.join().unwrap();
+    }
 }

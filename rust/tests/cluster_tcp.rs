@@ -2,7 +2,9 @@
 //! stripe servers as separate OS processes on 127.0.0.1 ephemeral
 //! ports, exercising the same scenario the loopback chaos suite proves
 //! deterministically — one worker killed mid-TeraSort via
-//! `--die-after-tasks`, the job completing through re-execution.
+//! `--die-after-tasks`, the job completing through re-execution. The
+//! surviving worker runs tiered (`--mem-capacity 16M`), so the smoke
+//! also proves the two-level read path reports mem-tier hits over TCP.
 //!
 //! Per-process stdout/stderr land under `target/cluster-logs/` so CI
 //! can upload them as artifacts when the test fails.
@@ -188,7 +190,13 @@ fn tcp_cluster_survives_worker_kill() {
         v.extend(extra.iter().map(|s| s.to_string()));
         v
     };
-    let survivor = Role::spawn("worker-survivor", &worker_args(&[]));
+    // The survivor runs the worker-side two-level store (`--mem-capacity`
+    // > 0 tiers it over the stripe servers); the casualty stays untiered,
+    // so the smoke test covers both shapes in one job.
+    let survivor = Role::spawn(
+        "worker-survivor",
+        &worker_args(&["--mem-capacity", "16M"]),
+    );
     let casualty = Role::spawn(
         "worker-casualty",
         &worker_args(&["--die-after-tasks", "1"]),
@@ -217,6 +225,14 @@ fn tcp_cluster_survives_worker_kill() {
     assert!(
         stdout.contains("sorted=true"),
         "TeraValidate must pass:\n{stdout}"
+    );
+    let tier = lines
+        .iter()
+        .find(|l| l.starts_with("tier reads: "))
+        .unwrap_or_else(|| panic!("missing per-tier read accounting:\n{stdout}"));
+    assert!(
+        !tier.contains("mem 0 B"),
+        "the tiered survivor must report mem-tier hit bytes: {tier}"
     );
 
     let (s_status, _) = survivor.join(deadline);

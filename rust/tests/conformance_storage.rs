@@ -10,12 +10,15 @@
 //! `read_at`/`read_range` clamp at EOF.
 
 use std::path::Path;
+use std::sync::Arc;
+use std::thread;
 
+use tlstore::cluster::{serve, Listener, LoopbackNet, RemotePfs};
 use tlstore::storage::hdfs::HdfsLike;
 use tlstore::storage::memstore::MemStore;
 use tlstore::storage::pfs::Pfs;
 use tlstore::storage::tls::{TlsConfig, TwoLevelStore};
-use tlstore::storage::{ObjectReader as _, ObjectWriter as _, ReadMode, WriteMode};
+use tlstore::storage::{ObjectReader as _, ObjectStore, ObjectWriter as _, ReadMode, WriteMode};
 use tlstore::testing::conformance::{check_conformance, check_fault_conformance};
 use tlstore::testing::crash::{crash_sweep, Workload};
 use tlstore::testing::TempDir;
@@ -261,3 +264,140 @@ fn two_level_crash_sweep_under_eviction_pressure() {
         &sweep_workload(),
     );
 }
+
+// ---- remote PFS over an in-process network --------------------------------
+// The striped wire client must satisfy the same contracts as the local
+// backends: per-stripe staging + rename-at-commit gives atomic commits,
+// aborts unlink every staged temp, and geometry-validated opens clamp
+// at EOF. The two-level store layered over it (the cluster worker's
+// shape) must preserve those contracts end to end.
+
+/// `n` loopback stripe servers, each `serve()`-ing a [`MemStore`];
+/// holds the listeners and threads so they can be shut down cleanly.
+struct StripeServers {
+    addrs: Vec<String>,
+    threads: Vec<thread::JoinHandle<()>>,
+    listeners: Vec<Arc<dyn Listener>>,
+}
+
+impl StripeServers {
+    fn spawn(net: &LoopbackNet, n: usize) -> Self {
+        let mut addrs = Vec::new();
+        let mut threads = Vec::new();
+        let mut listeners = Vec::new();
+        for i in 0..n {
+            let addr = format!("pfs{i}:7100");
+            let listener: Arc<dyn Listener> = Arc::from(net.listen(&addr).unwrap());
+            let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new(u64::MAX, "lru").unwrap());
+            let l2 = Arc::clone(&listener);
+            threads.push(thread::spawn(move || {
+                serve(l2, store).unwrap();
+            }));
+            addrs.push(addr);
+            listeners.push(listener);
+        }
+        Self {
+            addrs,
+            threads,
+            listeners,
+        }
+    }
+
+    /// Connect a striped client to every server.
+    fn client(&self, net: &LoopbackNet, stripe_size: u64) -> RemotePfs {
+        RemotePfs::connect(net, &self.addrs, stripe_size).unwrap()
+    }
+
+    /// Call after dropping every client (dropping the client conns lets
+    /// the per-connection server threads exit).
+    fn shutdown(self) {
+        for l in &self.listeners {
+            l.close();
+        }
+        for t in self.threads {
+            t.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn remote_pfs_conforms() {
+    let net = LoopbackNet::new();
+    let servers = StripeServers::spawn(&net, 3);
+    let store = servers.client(&net, 64);
+    check_conformance(&store);
+    drop(store);
+    servers.shutdown();
+}
+
+#[test]
+fn remote_pfs_single_server_conforms() {
+    let net = LoopbackNet::new();
+    let servers = StripeServers::spawn(&net, 1);
+    let store = servers.client(&net, 64);
+    check_conformance(&store);
+    drop(store);
+    servers.shutdown();
+}
+
+#[test]
+fn two_level_over_remote_conforms() {
+    // the cluster worker's store shape: a mem tier faulting through to
+    // the striped wire client
+    let net = LoopbackNet::new();
+    let servers = StripeServers::spawn(&net, 3);
+    let remote = servers.client(&net, 64);
+    let cfg = TlsConfig::builder("conf-tls-remote")
+        .mem_capacity(1 << 20)
+        .block_size(256)
+        .build()
+        .unwrap();
+    let store = TwoLevelStore::with_tier(cfg, remote).unwrap();
+    check_conformance(&store);
+    drop(store);
+    servers.shutdown();
+}
+
+#[test]
+fn two_level_over_remote_under_eviction_pressure_conforms() {
+    // a 4-block memory tier: handle reads constantly fault over the wire
+    let net = LoopbackNet::new();
+    let servers = StripeServers::spawn(&net, 3);
+    let remote = servers.client(&net, 64);
+    let cfg = TlsConfig::builder("conf-tls-remote-ev")
+        .mem_capacity(1024)
+        .block_size(256)
+        .build()
+        .unwrap();
+    let store = TwoLevelStore::with_tier(cfg, remote).unwrap();
+    check_conformance(&store);
+    drop(store);
+    servers.shutdown();
+}
+
+#[test]
+fn remote_pfs_fault_conformance() {
+    let net = LoopbackNet::new();
+    let servers = StripeServers::spawn(&net, 3);
+    let store = servers.client(&net, 64);
+    check_fault_conformance(&store);
+    drop(store);
+    servers.shutdown();
+}
+
+#[test]
+fn two_level_over_remote_fault_conformance() {
+    let net = LoopbackNet::new();
+    let servers = StripeServers::spawn(&net, 3);
+    let remote = servers.client(&net, 64);
+    let cfg = TlsConfig::builder("fault-tls-remote")
+        .mem_capacity(1 << 20)
+        .block_size(256)
+        .build()
+        .unwrap();
+    let store = TwoLevelStore::with_tier(cfg, remote).unwrap();
+    check_fault_conformance(&store);
+    drop(store);
+    servers.shutdown();
+}
+

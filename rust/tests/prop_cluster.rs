@@ -8,8 +8,8 @@
 //! env override); failures print a reproduction seed.
 
 use tlstore::cluster::wire::{
-    frame_bytes, read_message, write_message, Message, Role, TaskKind, TaskSpec, MAX_FRAME,
-    WIRE_VERSION,
+    frame_bytes, read_message, write_message, Message, Role, TaskKind, TaskSpec, TierIo,
+    MAX_FRAME, WIRE_VERSION,
 };
 use tlstore::error::{Error, WireKind};
 use tlstore::storage::block::Crc32;
@@ -70,7 +70,7 @@ fn gen_message(rng: &mut Pcg32, size: usize) -> Message {
     let data_len = rng.gen_range(1 + size.min(512) as u32) as usize;
     let mut data = vec![0u8; data_len];
     rng.fill_bytes(&mut data);
-    match rng.gen_range(21) {
+    match rng.gen_range(22) {
         0 => Message::Hello {
             version: WIRE_VERSION,
             role: if rng.gen_range(2) == 0 {
@@ -141,11 +141,25 @@ fn gen_message(rng: &mut Pcg32, size: usize) -> Message {
             bytes_read: rng.next_u64(),
             bytes_written: rng.next_u64(),
             micros: rng.next_u64(),
+            tier_io: TierIo {
+                mem_read_bytes: rng.next_u64(),
+                mem_read_micros: rng.next_u64(),
+                remote_read_bytes: rng.next_u64(),
+                remote_read_micros: rng.next_u64(),
+                mem_write_bytes: rng.next_u64(),
+                mem_write_micros: rng.next_u64(),
+                remote_write_bytes: rng.next_u64(),
+                remote_write_micros: rng.next_u64(),
+            },
         },
         19 => Message::TaskFail {
             worker_id: rng.next_u64(),
             task_id: rng.next_u64(),
             error: gen_string(rng, size.max(2)),
+        },
+        20 => Message::Rename {
+            from: gen_string(rng, size.max(2)),
+            to: gen_string(rng, size.max(2)),
         },
         _ => Message::Hello {
             version: rng.next_u32(),
