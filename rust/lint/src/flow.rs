@@ -1,0 +1,1084 @@
+//! Flow-aware rules over the [`crate::parser`] brace tree: writer
+//! typestate, interprocedural lock-order, and wire-protocol
+//! completeness.
+//!
+//! These rules reason about *paths* instead of token windows, but
+//! they stay deliberately approximate (documented per rule in
+//! `docs/STATIC_ANALYSIS.md`):
+//!
+//! * **writer-typestate** — a staged-object writer obtained from
+//!   `create`/`create_with`/`writer`/`open_writer` must reach
+//!   `commit`/`abort`, be returned, or be moved on into a consuming
+//!   expression on every explicit path. `?`-unwinds are *not* paths
+//!   here: every writer in this codebase cleans up its staging in
+//!   `Drop`, so error unwinding is covered by contract — the rule
+//!   targets silent fall-through drops, which Drop turns into
+//!   best-effort cleanup nobody sees fail.
+//! * **lock-order** — every `.lock()` acquisition in `storage/` and
+//!   `cluster/` becomes a node in an acquisition-order graph; edges
+//!   are added when one lock is acquired (directly or through a
+//!   same-file call) while another is held. Any cycle is a potential
+//!   ABBA deadlock. Held-ness follows Rust's real scoping: `let`
+//!   guards live to end of block or `drop(guard)`, un-bound guards
+//!   die at the end of their statement.
+//! * **wire-complete** — in a file defining `TAG_*` constants plus
+//!   `encode`/`decode` fns, every tag must be reachable from both,
+//!   tag values must be distinct, and `enc_*`/`dec_*` helpers must
+//!   be reachable from their dispatch fn.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::{Tok, Token};
+use crate::parser::{top_indices, Block, Parsed, Stmt};
+use crate::Finding;
+
+fn ident(t: &Token) -> Option<&str> {
+    match &t.tok {
+        Tok::Ident(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct(t: &Token, c: char) -> bool {
+    t.tok == Tok::Punct(c)
+}
+
+fn tok_at<'a>(toks: &'a [Token], idxs: &[usize], p: usize) -> Option<&'a Token> {
+    idxs.get(p).and_then(|&i| toks.get(i))
+}
+
+fn in_regions(regions: &[(usize, usize)], idx: usize) -> bool {
+    regions.iter().any(|&(a, b)| idx >= a && idx <= b)
+}
+
+// ---------------------------------------------------------------- //
+// writer-typestate
+// ---------------------------------------------------------------- //
+
+/// Method names whose call produces a staged-object writer handle.
+const WRITER_CREATORS: [&str; 4] = ["create", "create_with", "writer", "open_writer"];
+
+/// Method names that consume a writer (finish the typestate).
+const WRITER_CONSUMERS: [&str; 2] = ["commit", "abort"];
+
+/// Keywords that make a statement a branch/loop for path analysis.
+const BRANCH_KEYWORDS: [&str; 5] = ["if", "match", "while", "for", "loop"];
+
+/// A live writer handle being tracked through a function.
+struct Handle {
+    name: String,
+    line: u32,
+    /// Token index of the creation site (severity triage scans from
+    /// here to the end of the function body).
+    created_at: usize,
+    /// `let`-bound handles die at the end of their block;
+    /// assignment-bound handles propagate to the enclosing block.
+    via_let: bool,
+}
+
+/// Is the expression spanned by `rhs` (top-level token indices) a
+/// writer-creator call chain: a pure dotted path ending in one of
+/// [`WRITER_CREATORS`] and an argument list, e.g.
+/// `store.create(key)?` or `self.pfs.create_with(key, n)?`?
+///
+/// The *first* parenthesis in the chain must belong to the creator —
+/// so `OpenOptions::new().create(true)` (a call-receiver chain) does
+/// not match — and the creator must be a *dotted method call*
+/// (`store.create(..)`), so `File::create(path)` (a plain file open,
+/// no staging contract) does not match either.
+fn is_creator_chain(toks: &[Token], rhs: &[usize]) -> bool {
+    let mut p = 0usize;
+    // the path: idents, `.` and `::` only, up to the first `(`
+    let mut last_ident: Option<&str> = None;
+    let mut dotted = false;
+    while let Some(t) = tok_at(toks, rhs, p) {
+        match &t.tok {
+            Tok::Ident(s) => {
+                dotted = p > 0
+                    && tok_at(toks, rhs, p - 1).is_some_and(|t| punct(t, '.'));
+                last_ident = Some(s.as_str());
+            }
+            Tok::Punct('.') | Tok::Punct(':') => {}
+            Tok::Punct('(') => {
+                return dotted
+                    && last_ident.is_some_and(|n| WRITER_CREATORS.contains(&n));
+            }
+            _ => return false,
+        }
+        p += 1;
+    }
+    false
+}
+
+/// Does the token at absolute index `j` (known to be the handle's
+/// name) consume the handle — either `name.commit(`/`name.abort(` or
+/// a bare move (`Ok(name)`, `drop(name)`, `return name`, a struct
+/// literal field, a consuming call argument)?
+fn consumes_at(toks: &[Token], j: usize) -> bool {
+    let next = toks.get(j + 1);
+    let prev = j.checked_sub(1).and_then(|k| toks.get(k));
+    // field access `x.name` is never a use of the handle variable
+    if prev.is_some_and(|t| punct(t, '.')) {
+        return false;
+    }
+    // borrow: `&name` or `&mut name`
+    if prev.is_some_and(|t| punct(t, '&'))
+        || (prev.is_some_and(|t| ident(t) == Some("mut"))
+            && j.checked_sub(2)
+                .and_then(|k| toks.get(k))
+                .is_some_and(|t| punct(t, '&')))
+    {
+        return false;
+    }
+    match next {
+        Some(t) if punct(t, '.') => {
+            // consuming method?
+            toks.get(j + 2)
+                .and_then(ident)
+                .is_some_and(|n| WRITER_CONSUMERS.contains(&n))
+        }
+        // assignment target or a call of a same-named fn: not a move
+        Some(t) if punct(t, '=') || punct(t, '(') => false,
+        // `name;`, `name)`, `name,`, `name}` ... — a bare move/return
+        _ => true,
+    }
+}
+
+/// Does any token in `[from, to]` consume `name` per [`consumes_at`]?
+fn span_consumes(toks: &[Token], from: usize, to: usize, name: &str) -> bool {
+    (from..=to.min(toks.len().saturating_sub(1)))
+        .any(|j| toks.get(j).and_then(ident) == Some(name) && consumes_at(toks, j))
+}
+
+fn stmt_consumes_top(toks: &[Token], stmt: &Stmt, name: &str) -> bool {
+    top_indices(stmt)
+        .into_iter()
+        .any(|j| toks.get(j).and_then(ident) == Some(name) && consumes_at(toks, j))
+}
+
+/// Does every path through `stmt` consume `name`?
+/// - non-branching statement: top-level consumption, or a move into
+///   an unconditionally evaluated nested expression (struct literal,
+///   closure, bare `{ }` scope);
+/// - `if`/`else` chain: needs a catch-all `else` and consumption in
+///   every branch;
+/// - `match`: consumption in every arm;
+/// - loops: never (the body may run zero times).
+fn stmt_path_consumes(toks: &[Token], stmt: &Stmt, name: &str) -> bool {
+    if stmt_consumes_top(toks, stmt, name) {
+        return true;
+    }
+    let kw = top_indices(stmt).into_iter().find_map(|i| {
+        toks.get(i)
+            .and_then(ident)
+            .filter(|n| BRANCH_KEYWORDS.contains(n))
+            .map(str::to_string)
+    });
+    match kw.as_deref() {
+        None => stmt
+            .blocks
+            .iter()
+            .any(|b| span_consumes(toks, b.open, b.close, name)),
+        Some("if") => {
+            if stmt.blocks.is_empty() || !has_catchall_else(toks, stmt) {
+                return false;
+            }
+            stmt.blocks.iter().all(|b| block_consumes(toks, b, name))
+        }
+        Some("match") => {
+            let Some(body) = stmt.blocks.iter().find(|b| b.is_match_body) else {
+                return false;
+            };
+            !body.stmts.is_empty()
+                && body
+                    .stmts
+                    .iter()
+                    .all(|arm| stmt_path_consumes(toks, arm, name))
+        }
+        _ => false, // while / for / loop
+    }
+}
+
+/// Does the `if` chain in `stmt` end in a bare `else { }` (so its
+/// branches are exhaustive)? True when the top-level token just
+/// before the final block's `{` is `else`.
+fn has_catchall_else(toks: &[Token], stmt: &Stmt) -> bool {
+    let Some(last) = stmt.blocks.last() else {
+        return false;
+    };
+    top_indices(stmt)
+        .into_iter()
+        .filter(|&i| i < last.open)
+        .max()
+        .and_then(|i| toks.get(i))
+        .and_then(ident)
+        == Some("else")
+}
+
+fn block_consumes(toks: &[Token], block: &Block, name: &str) -> bool {
+    block
+        .stmts
+        .iter()
+        .any(|s| stmt_path_consumes(toks, s, name))
+}
+
+/// Detect `let [mut] <name> [: ty] = <rhs>` and return the binding
+/// name plus the rhs top-token indices.
+fn let_binding<'a>(toks: &'a [Token], tops: &[usize]) -> Option<(&'a str, Vec<usize>)> {
+    if tok_at(toks, tops, 0).and_then(ident) != Some("let") {
+        return None;
+    }
+    let mut p = 1usize;
+    if tok_at(toks, tops, p).and_then(ident) == Some("mut") {
+        p += 1;
+    }
+    let name = tok_at(toks, tops, p).and_then(ident)?;
+    if name == "_" {
+        return None;
+    }
+    // skip an optional `: Type` annotation to the first `=` (but not
+    // `==`); generics in `let` types cannot contain `=`
+    let eq = (p + 1..tops.len()).find(|&q| {
+        tok_at(toks, tops, q).is_some_and(|t| punct(t, '='))
+            && !tok_at(toks, tops, q + 1).is_some_and(|t| punct(t, '='))
+            && !tok_at(toks, tops, q.wrapping_sub(1)).is_some_and(|t| {
+                punct(t, '=') || punct(t, '!') || punct(t, '<') || punct(t, '>')
+            })
+    })?;
+    Some((name, tops.get(eq + 1..).map(<[usize]>::to_vec)?))
+}
+
+/// Detect `<name> = <rhs>` (plain reassignment, not `==`/`+=`).
+fn reassignment<'a>(toks: &'a [Token], tops: &[usize]) -> Option<(&'a str, Vec<usize>)> {
+    let name = tok_at(toks, tops, 0).and_then(ident)?;
+    if !tok_at(toks, tops, 1).is_some_and(|t| punct(t, '='))
+        || tok_at(toks, tops, 2).is_some_and(|t| punct(t, '='))
+    {
+        return None;
+    }
+    Some((name, tops.get(2..).map(<[usize]>::to_vec)?))
+}
+
+/// Scan one block for writer handles. `live` holds handles from
+/// enclosing scopes is *not* passed down — parent-handle consumption
+/// inside nested blocks is covered by [`stmt_path_consumes`] at the
+/// parent level. Returns assignment-bound handles still live at the
+/// block's end (they belong to an enclosing scope); `let`-bound ones
+/// still live become leaks.
+fn scan_writers(
+    toks: &[Token],
+    block: &Block,
+    leaked: &mut Vec<Handle>,
+) -> Vec<Handle> {
+    let mut live: Vec<Handle> = Vec::new();
+    for stmt in &block.stmts {
+        // 1. consumption of already-live handles
+        live.retain(|h| !stmt_path_consumes(toks, stmt, &h.name));
+        // 2. handles created in nested blocks propagate upward
+        for b in &stmt.blocks {
+            live.extend(scan_writers(toks, b, leaked));
+        }
+        // 3. creation / reassignment at this statement
+        let tops = top_indices(stmt);
+        if let Some((name, rhs)) = let_binding(toks, &tops) {
+            if is_creator_chain(toks, &rhs) {
+                live.push(Handle {
+                    name: name.to_string(),
+                    line: stmt.line,
+                    created_at: stmt.start,
+                    via_let: true,
+                });
+            }
+        } else if let Some((name, rhs)) = reassignment(toks, &tops) {
+            if is_creator_chain(toks, &rhs) {
+                // the old value (if tracked and unconsumed) is
+                // dropped right here
+                if let Some(pos) = live.iter().position(|h| h.name == name) {
+                    leaked.push(live.remove(pos));
+                }
+                live.push(Handle {
+                    name: name.to_string(),
+                    line: stmt.line,
+                    created_at: stmt.start,
+                    via_let: false,
+                });
+            }
+        }
+    }
+    let (dead, up): (Vec<Handle>, Vec<Handle>) =
+        live.into_iter().partition(|h| h.via_let);
+    leaked.extend(dead);
+    up
+}
+
+/// Rule `writer-typestate`: report writer handles that can fall out
+/// of scope without reaching `commit`/`abort` (or being moved on).
+/// Handles consumed on only *some* paths get a warning; handles
+/// never consumed at all get an error.
+pub fn writer_typestate(
+    parsed: &Parsed,
+    toks: &[Token],
+    regions: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    for f in &parsed.fns {
+        if in_regions(regions, f.fn_tok) {
+            continue;
+        }
+        let mut leaked = Vec::new();
+        let top_level = scan_writers(toks, &f.body, &mut leaked);
+        leaked.extend(top_level);
+        for h in leaked {
+            let start = h.created_at;
+            let partial = span_consumes(toks, start, f.body.close, &h.name);
+            if partial {
+                out.push(Finding::warn(
+                    "writer-typestate",
+                    h.line,
+                    format!(
+                        "writer `{}` (fn `{}`) reaches commit/abort on only some paths \
+                         — cover every branch or abort explicitly",
+                        h.name, f.name
+                    ),
+                ));
+            } else {
+                out.push(Finding::new(
+                    "writer-typestate",
+                    h.line,
+                    format!(
+                        "writer `{}` (fn `{}`) never reaches commit/abort and is not \
+                         moved on — staged data would linger until recovery",
+                        h.name, f.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- //
+// lock-order
+// ---------------------------------------------------------------- //
+
+/// One `.lock()` acquisition site.
+#[derive(Debug, Clone)]
+pub struct Acquire {
+    /// Qualified lock class, `<file>::<receiver-path>`.
+    pub class: String,
+    /// 1-based source line.
+    pub line: u32,
+}
+
+/// A call made with locks held (or not), restricted to receivers the
+/// analysis can resolve: `self.m(..)`, `Self::m(..)`, bare `m(..)`.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    /// Callee name (resolved within the same file only).
+    pub callee: String,
+    /// Lock classes held at the call.
+    pub held: Vec<String>,
+    /// 1-based source line.
+    pub line: u32,
+}
+
+/// Per-function lock summary, the unit the interprocedural pass
+/// composes.
+#[derive(Debug, Clone)]
+pub struct FnSummary {
+    /// Source file (root-relative).
+    pub file: String,
+    /// Function name.
+    pub name: String,
+    /// All acquisition sites in the body.
+    pub acquires: Vec<Acquire>,
+    /// Direct held→acquired edges observed in the body:
+    /// `(held_class, acquired_class, line)`.
+    pub local_edges: Vec<(String, String, u32)>,
+    /// Resolvable calls with the held set at each.
+    pub calls: Vec<CallSite>,
+}
+
+/// One edge in the acquisition-order graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LockEdge {
+    /// Class held first.
+    pub from: String,
+    /// Class acquired while `from` is held.
+    pub to: String,
+    /// File of the witnessing acquisition/call site.
+    pub file: String,
+    /// Line of the witnessing site.
+    pub line: u32,
+}
+
+/// The assembled acquisition-order graph, exposed so the self-clean
+/// gate can assert it was built from the real tree.
+#[derive(Debug, Default)]
+pub struct LockGraph {
+    /// Every lock class discovered, sorted.
+    pub classes: Vec<String>,
+    /// Acquisition-order edges, deduplicated.
+    pub edges: Vec<LockEdge>,
+    /// Total acquisition sites seen.
+    pub sites: usize,
+    /// Files contributing at least one acquisition, sorted.
+    pub files: Vec<String>,
+}
+
+/// A held guard: its class, the binding name (`None` for statement
+/// temporaries), and a monotonically increasing id used to pop
+/// guards when their block closes.
+struct Held {
+    class: String,
+    bound: Option<String>,
+    seq: u64,
+}
+
+struct LockScanner<'a> {
+    toks: &'a [Token],
+    file: &'a str,
+    held: Vec<Held>,
+    seq: u64,
+    acquires: Vec<Acquire>,
+    local_edges: Vec<(String, String, u32)>,
+    calls: Vec<CallSite>,
+}
+
+/// Identifiers that look like calls but are not resolvable function
+/// calls (keywords, the `drop` intrinsic — handled as a release).
+const CALL_EXCLUDE: [&str; 14] = [
+    "if", "while", "match", "return", "loop", "for", "let", "in", "as", "move",
+    "fn", "else", "drop", "mut",
+];
+
+impl<'a> LockScanner<'a> {
+    fn held_classes(&self) -> Vec<String> {
+        self.held.iter().map(|h| h.class.clone()).collect()
+    }
+
+    fn scan_block(&mut self, block: &Block) {
+        let watermark = self.seq;
+        for stmt in &block.stmts {
+            self.scan_stmt(stmt);
+            // statement temporaries die before nested bodies run
+            // (approximation: a `match` scrutinee temporary really
+            // lives through the arms, but no code here locks in a
+            // scrutinee position)
+            self.held.retain(|h| h.bound.is_some());
+            for b in &stmt.blocks {
+                self.scan_block(b);
+            }
+        }
+        // guards bound in this block go out of scope
+        self.held.retain(|h| h.seq <= watermark);
+    }
+
+    fn scan_stmt(&mut self, stmt: &Stmt) {
+        let tops = top_indices(stmt);
+        let binding = let_binding(self.toks, &tops).map(|(n, _)| n.to_string());
+        let mut p = 0usize;
+        while p < tops.len() {
+            let t = match tok_at(self.toks, &tops, p) {
+                Some(t) => t,
+                None => break,
+            };
+            // `drop(name)` releases a bound guard early
+            if ident(t) == Some("drop")
+                && tok_at(self.toks, &tops, p + 1).is_some_and(|t| punct(t, '('))
+            {
+                if let Some(name) = tok_at(self.toks, &tops, p + 2).and_then(ident) {
+                    self.held.retain(|h| h.bound.as_deref() != Some(name));
+                }
+                p += 1;
+                continue;
+            }
+            // `.lock ( )` acquisition
+            if punct(t, '.')
+                && tok_at(self.toks, &tops, p + 1).and_then(ident) == Some("lock")
+                && tok_at(self.toks, &tops, p + 2).is_some_and(|t| punct(t, '('))
+                && tok_at(self.toks, &tops, p + 3).is_some_and(|t| punct(t, ')'))
+            {
+                let line = tok_at(self.toks, &tops, p + 1).map_or(stmt.line, |t| t.line);
+                let class = format!(
+                    "{}::{}",
+                    self.file,
+                    receiver_path(self.toks, &tops, p)
+                );
+                for h in &self.held {
+                    self.local_edges.push((h.class.clone(), class.clone(), line));
+                }
+                self.acquires.push(Acquire {
+                    class: class.clone(),
+                    line,
+                });
+                self.seq += 1;
+                // bound guard only when the lock chain is the final
+                // value of a `let` statement
+                let bound = match &binding {
+                    Some(name) if chain_is_final(self.toks, &tops, p + 3) => {
+                        Some(name.clone())
+                    }
+                    _ => None,
+                };
+                self.held.push(Held {
+                    class,
+                    bound,
+                    seq: self.seq,
+                });
+                p += 4;
+                continue;
+            }
+            // resolvable calls
+            if let Some((callee, adv)) = self.call_at(&tops, p) {
+                self.calls.push(CallSite {
+                    callee,
+                    held: self.held_classes(),
+                    line: t.line,
+                });
+                p += adv;
+                continue;
+            }
+            p += 1;
+        }
+    }
+
+    /// Match `self.m(`, `Self::m(`, or bare `m(` at `tops[p]`,
+    /// returning the callee name and how many top tokens to skip.
+    fn call_at(&self, tops: &[usize], p: usize) -> Option<(String, usize)> {
+        let t = tok_at(self.toks, tops, p)?;
+        let prev = p
+            .checked_sub(1)
+            .and_then(|q| tok_at(self.toks, tops, q));
+        match ident(t)? {
+            "self" => {
+                // `self . name (` with the chain starting at `self`
+                if prev.is_some_and(|t| punct(t, '.')) {
+                    return None;
+                }
+                if !tok_at(self.toks, tops, p + 1).is_some_and(|t| punct(t, '.')) {
+                    return None;
+                }
+                let name = tok_at(self.toks, tops, p + 2).and_then(ident)?;
+                if !tok_at(self.toks, tops, p + 3).is_some_and(|t| punct(t, '(')) {
+                    return None;
+                }
+                if name == "lock" {
+                    return None;
+                }
+                Some((name.to_string(), 3))
+            }
+            "Self" => {
+                if !tok_at(self.toks, tops, p + 1).is_some_and(|t| punct(t, ':'))
+                    || !tok_at(self.toks, tops, p + 2).is_some_and(|t| punct(t, ':'))
+                {
+                    return None;
+                }
+                let name = tok_at(self.toks, tops, p + 3).and_then(ident)?;
+                if !tok_at(self.toks, tops, p + 4).is_some_and(|t| punct(t, '(')) {
+                    return None;
+                }
+                Some((name.to_string(), 4))
+            }
+            name => {
+                // bare free-fn call: `name (`, not a method (`.name`),
+                // not a path segment (`X::name`), not a macro
+                // (`name!`), not a keyword/ctor
+                if CALL_EXCLUDE.contains(&name)
+                    || name.starts_with(|c: char| c.is_ascii_uppercase())
+                {
+                    return None;
+                }
+                if prev.is_some_and(|t| punct(t, '.') || punct(t, ':')) {
+                    return None;
+                }
+                if !tok_at(self.toks, tops, p + 1).is_some_and(|t| punct(t, '(')) {
+                    return None;
+                }
+                Some((name.to_string(), 1))
+            }
+        }
+    }
+}
+
+/// Walk the receiver expression left from the `.` of `.lock()` at
+/// `tops[dot]`, producing a dotted path: `self.conns[i].lock()` →
+/// `conns`; `self.queue.state.lock()` → `queue.state`. A leading
+/// `self` is dropped; any segment mentioning "shard" collapses the
+/// path to `shard` (all shard locks are one class — they are
+/// acquired one-at-a-time by contract, and distinguishing indices is
+/// beyond a static pass).
+fn receiver_path(toks: &[Token], tops: &[usize], dot: usize) -> String {
+    let mut segs: Vec<String> = Vec::new();
+    let mut depth = 0i32;
+    let mut q = dot;
+    while q > 0 {
+        q -= 1;
+        let Some(t) = tok_at(toks, tops, q) else { break };
+        match &t.tok {
+            Tok::Punct(')') | Tok::Punct(']') => depth += 1,
+            Tok::Punct('(') | Tok::Punct('[') => {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            }
+            Tok::Punct('.') if depth == 0 => {}
+            Tok::Ident(s) if depth == 0 => {
+                if s == "let" || s == "mut" || s == "drop" {
+                    break;
+                }
+                segs.push(s.clone());
+            }
+            _ if depth == 0 => break,
+            _ => {}
+        }
+    }
+    segs.reverse();
+    if let Some(first) = segs.first() {
+        if first == "self" {
+            segs.remove(0);
+        }
+    }
+    if segs.iter().any(|s| s.to_ascii_lowercase().contains("shard")) {
+        return "shard".to_string();
+    }
+    if segs.is_empty() {
+        "anon".to_string()
+    } else {
+        segs.join(".")
+    }
+}
+
+/// After the `)` of `.lock()` at `tops[close]`, is the chain the
+/// final value of the statement? Only `.unwrap(..)`/`.expect(..)`
+/// links, then an optional `?` and the `;`, may follow — anything
+/// else (another method, an operator) means the guard is a
+/// temporary.
+fn chain_is_final(toks: &[Token], tops: &[usize], close: usize) -> bool {
+    let mut p = close + 1;
+    loop {
+        match tok_at(toks, tops, p) {
+            None => return true,
+            Some(t) if punct(t, ';') || punct(t, '?') => p += 1,
+            Some(t) if punct(t, '.') => {
+                let name = tok_at(toks, tops, p + 1).and_then(ident);
+                if !matches!(name, Some("unwrap") | Some("expect")) {
+                    return false;
+                }
+                // skip the argument list
+                if !tok_at(toks, tops, p + 2).is_some_and(|t| punct(t, '(')) {
+                    return false;
+                }
+                let mut depth = 0i32;
+                let mut q = p + 2;
+                loop {
+                    match tok_at(toks, tops, q) {
+                        Some(t) if punct(t, '(') => depth += 1,
+                        Some(t) if punct(t, ')') => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        None => return true,
+                        _ => {}
+                    }
+                    q += 1;
+                }
+                p = q + 1;
+            }
+            Some(_) => return false,
+        }
+    }
+}
+
+/// Build per-function lock summaries for one file.
+pub fn lock_summaries(
+    rel: &str,
+    parsed: &Parsed,
+    toks: &[Token],
+    regions: &[(usize, usize)],
+) -> Vec<FnSummary> {
+    let mut out = Vec::new();
+    for f in &parsed.fns {
+        if in_regions(regions, f.fn_tok) {
+            continue;
+        }
+        let mut s = LockScanner {
+            toks,
+            file: rel,
+            held: Vec::new(),
+            seq: 0,
+            acquires: Vec::new(),
+            local_edges: Vec::new(),
+            calls: Vec::new(),
+        };
+        s.scan_block(&f.body);
+        if !s.acquires.is_empty() || !s.calls.is_empty() {
+            out.push(FnSummary {
+                file: rel.to_string(),
+                name: f.name.clone(),
+                acquires: s.acquires,
+                local_edges: s.local_edges,
+                calls: s.calls,
+            });
+        }
+    }
+    out
+}
+
+/// Rule `lock-order`: compose the per-function summaries into an
+/// acquisition-order graph and report every cycle (including
+/// self-edges — re-acquiring a held class).
+///
+/// Interprocedural reach: a call contributes edges from each held
+/// class to every class the callee *may acquire* (its own
+/// acquisitions plus, transitively, those of same-file callees
+/// reached through `self.m()`, `Self::m()`, or bare `m()` calls).
+/// Field-receiver calls (`self.pfs.delete(..)`) are dynamic over the
+/// tier type and are deliberately not resolved.
+pub fn lock_order(summaries: &[FnSummary]) -> (LockGraph, Vec<Finding>) {
+    // name resolution: (file, fn name) -> summary indices (same-name
+    // fns in one file are unioned — impl blocks are invisible here)
+    let mut by_name: BTreeMap<(&str, &str), Vec<usize>> = BTreeMap::new();
+    for (i, s) in summaries.iter().enumerate() {
+        by_name
+            .entry((s.file.as_str(), s.name.as_str()))
+            .or_default()
+            .push(i);
+    }
+    // fixpoint of may-acquire sets
+    let mut may: Vec<BTreeSet<String>> = summaries
+        .iter()
+        .map(|s| s.acquires.iter().map(|a| a.class.clone()).collect())
+        .collect();
+    for _round in 0..summaries.len().saturating_add(1) {
+        let mut changed = false;
+        for (i, s) in summaries.iter().enumerate() {
+            let mut add: BTreeSet<String> = BTreeSet::new();
+            for c in &s.calls {
+                if let Some(targets) = by_name.get(&(s.file.as_str(), c.callee.as_str()))
+                {
+                    for &t in targets {
+                        add.extend(may[t].iter().cloned());
+                    }
+                }
+            }
+            for cls in add {
+                changed |= may[i].insert(cls);
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // edges: direct overlaps + held-at-call × callee may-acquire
+    let mut edges: BTreeMap<(String, String), (String, u32)> = BTreeMap::new();
+    for s in summaries {
+        for (from, to, line) in &s.local_edges {
+            edges
+                .entry((from.clone(), to.clone()))
+                .or_insert_with(|| (s.file.clone(), *line));
+        }
+        for c in &s.calls {
+            let Some(targets) = by_name.get(&(s.file.as_str(), c.callee.as_str()))
+            else {
+                continue;
+            };
+            for &t in targets {
+                for to in &may[t] {
+                    for from in &c.held {
+                        edges
+                            .entry((from.clone(), to.clone()))
+                            .or_insert_with(|| (s.file.clone(), c.line));
+                    }
+                }
+            }
+        }
+    }
+
+    let mut classes: BTreeSet<String> = BTreeSet::new();
+    let mut files: BTreeSet<String> = BTreeSet::new();
+    let mut sites = 0usize;
+    for s in summaries {
+        for a in &s.acquires {
+            classes.insert(a.class.clone());
+            files.insert(s.file.clone());
+            sites += 1;
+        }
+    }
+
+    let findings = report_cycles(&edges);
+    let graph = LockGraph {
+        classes: classes.into_iter().collect(),
+        edges: edges
+            .into_iter()
+            .map(|((from, to), (file, line))| LockEdge {
+                from,
+                to,
+                file,
+                line,
+            })
+            .collect(),
+        sites,
+        files: files.into_iter().collect(),
+    };
+    (graph, findings)
+}
+
+/// Find cycles in the acquisition-order graph. Self-edges report
+/// directly; larger cycles are found via mutual reachability (the
+/// graph is tens of nodes at most, so the O(n²) closure is fine).
+fn report_cycles(edges: &BTreeMap<(String, String), (String, u32)>) -> Vec<Finding> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (from, to) in edges.keys() {
+        adj.entry(from.as_str()).or_default().push(to.as_str());
+        adj.entry(to.as_str()).or_default();
+    }
+    let reach = |start: &str| -> BTreeSet<&str> {
+        let mut seen: BTreeSet<&str> = BTreeSet::new();
+        let mut stack = vec![start];
+        while let Some(n) = stack.pop() {
+            if let Some(next) = adj.get(n) {
+                for &m in next {
+                    if seen.insert(m) {
+                        stack.push(m);
+                    }
+                }
+            }
+        }
+        seen
+    };
+    let mut findings = Vec::new();
+    let mut reported: BTreeSet<&str> = BTreeSet::new();
+    for ((from, to), (file, line)) in edges {
+        if from == to && !reported.contains(from.as_str()) {
+            reported.insert(from.as_str());
+            let mut f = Finding::new(
+                "lock-order",
+                *line,
+                format!("lock `{from}` may be re-acquired while already held"),
+            );
+            f.file = file.clone();
+            findings.push(f);
+        }
+    }
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for &n in &nodes {
+        if reported.contains(n) {
+            continue;
+        }
+        let fwd = reach(n);
+        let cycle: Vec<&str> = nodes
+            .iter()
+            .copied()
+            .filter(|&m| m != n && fwd.contains(m) && reach(m).contains(n))
+            .collect();
+        if cycle.is_empty() {
+            continue;
+        }
+        reported.insert(n);
+        for &m in &cycle {
+            reported.insert(m);
+        }
+        let mut members = vec![n];
+        members.extend(cycle);
+        let witness = edges
+            .iter()
+            .find(|((a, b), _)| members.contains(&a.as_str()) && members.contains(&b.as_str()));
+        let (file, line) = witness.map_or(("?".to_string(), 0), |(_, (f, l))| (f.clone(), *l));
+        let mut f = Finding::new(
+            "lock-order",
+            line,
+            format!(
+                "lock-order cycle among {{{}}} — a thread interleaving can deadlock",
+                members.join(", ")
+            ),
+        );
+        f.file = file;
+        findings.push(f);
+    }
+    findings
+}
+
+// ---------------------------------------------------------------- //
+// wire-complete
+// ---------------------------------------------------------------- //
+
+/// The live tag map extracted from a wire-protocol file, exposed so
+/// the self-clean gate can pin it against `cluster/wire.rs`.
+#[derive(Debug, Clone)]
+pub struct WireReport {
+    /// File the report was extracted from.
+    pub file: String,
+    /// `TAG_*` constants: `(name, value literal)`.
+    pub tags: Vec<(String, String)>,
+    /// Tag names reachable from `encode`.
+    pub encoded: Vec<String>,
+    /// Tag names reachable from `decode`.
+    pub decoded: Vec<String>,
+}
+
+/// Rule `wire-complete`: runs on any file that defines `TAG_*`
+/// constants *and* `encode` + `decode` fns. Every tag must appear in
+/// code reachable from both dispatchers, tag values must be unique,
+/// and `enc_*`/`dec_*` helpers must be reachable from their
+/// dispatcher.
+pub fn wire_complete(
+    rel: &str,
+    parsed: &Parsed,
+    toks: &[Token],
+    regions: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) -> Option<WireReport> {
+    // tag constants: `const TAG_X: u8 = 0x10;`
+    let mut tags: Vec<(String, String, u32)> = Vec::new();
+    for i in 0..toks.len() {
+        if in_regions(regions, i) || ident(&toks[i]) != Some("const") {
+            continue;
+        }
+        let Some(name) = toks.get(i + 1).and_then(ident) else {
+            continue;
+        };
+        if !name.starts_with("TAG_") {
+            continue;
+        }
+        let value = (i + 2..(i + 12).min(toks.len()))
+            .find_map(|j| match &toks[j].tok {
+                Tok::Num(v) => Some(v.clone()),
+                _ => None,
+            })
+            .unwrap_or_default();
+        tags.push((name.to_string(), value, toks[i].line));
+    }
+    if tags.is_empty() {
+        return None;
+    }
+    let live_fns: Vec<_> = parsed
+        .fns
+        .iter()
+        .filter(|f| !in_regions(regions, f.fn_tok))
+        .collect();
+    let has = |n: &str| live_fns.iter().any(|f| f.name == n);
+    if !has("encode") || !has("decode") {
+        return None;
+    }
+
+    // same-file call graph by name (liberal: every `name(` in a body)
+    let calls_of = |f: &crate::parser::FnDef| -> BTreeSet<String> {
+        let mut set = BTreeSet::new();
+        for j in f.body.open..=f.body.close.min(toks.len().saturating_sub(1)) {
+            if let Some(n) = toks.get(j).and_then(ident) {
+                if toks.get(j + 1).is_some_and(|t| punct(t, '(')) {
+                    set.insert(n.to_string());
+                }
+            }
+        }
+        set
+    };
+    let reach_from = |root: &str| -> BTreeSet<String> {
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        let mut queue = vec![root.to_string()];
+        while let Some(n) = queue.pop() {
+            if !seen.insert(n.clone()) {
+                continue;
+            }
+            for f in live_fns.iter().filter(|f| f.name == n) {
+                for c in calls_of(f) {
+                    if !seen.contains(&c) {
+                        queue.push(c);
+                    }
+                }
+            }
+        }
+        seen
+    };
+    let tag_use = |fns: &BTreeSet<String>| -> BTreeSet<String> {
+        let mut used = BTreeSet::new();
+        for f in live_fns.iter().filter(|f| fns.contains(&f.name)) {
+            for j in f.body.open..=f.body.close.min(toks.len().saturating_sub(1)) {
+                if let Some(n) = toks.get(j).and_then(ident) {
+                    if n.starts_with("TAG_") {
+                        used.insert(n.to_string());
+                    }
+                }
+            }
+        }
+        used
+    };
+    let enc_reach = reach_from("encode");
+    let dec_reach = reach_from("decode");
+    let encoded = tag_use(&enc_reach);
+    let decoded = tag_use(&dec_reach);
+
+    for (name, value, line) in &tags {
+        match (encoded.contains(name), decoded.contains(name)) {
+            (true, false) => out.push(Finding::new(
+                "wire-complete",
+                *line,
+                format!(
+                    "wire tag `{name}` (= {value}) is encoded but has no decode arm \
+                     — frames with it would be rejected as unknown"
+                ),
+            )),
+            (false, true) => out.push(Finding::new(
+                "wire-complete",
+                *line,
+                format!(
+                    "wire tag `{name}` (= {value}) is decoded but never encoded \
+                     — dead protocol surface or a missing encoder"
+                ),
+            )),
+            (false, false) => out.push(Finding::new(
+                "wire-complete",
+                *line,
+                format!("wire tag `{name}` (= {value}) is neither encoded nor decoded"),
+            )),
+            (true, true) => {}
+        }
+    }
+    // duplicate tag values
+    let mut by_value: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (name, value, _) in &tags {
+        if !value.is_empty() {
+            by_value.entry(value.as_str()).or_default().push(name.as_str());
+        }
+    }
+    for (value, names) in &by_value {
+        if names.len() > 1 {
+            let line = tags
+                .iter()
+                .find(|(n, _, _)| n == names[names.len() - 1])
+                .map_or(0, |(_, _, l)| *l);
+            out.push(Finding::new(
+                "wire-complete",
+                line,
+                format!("wire tags {} share value {value}", names.join(", ")),
+            ));
+        }
+    }
+    // orphan enc_*/dec_* helpers
+    for f in &live_fns {
+        if f.name.starts_with("dec_") && !dec_reach.contains(&f.name) {
+            out.push(Finding::new(
+                "wire-complete",
+                f.line,
+                format!("decoder helper `{}` is unreachable from the `decode` dispatch", f.name),
+            ));
+        }
+        if f.name.starts_with("enc_") && !enc_reach.contains(&f.name) {
+            out.push(Finding::new(
+                "wire-complete",
+                f.line,
+                format!("encoder helper `{}` is unreachable from the `encode` dispatch", f.name),
+            ));
+        }
+    }
+
+    Some(WireReport {
+        file: rel.to_string(),
+        tags: tags.into_iter().map(|(n, v, _)| (n, v)).collect(),
+        encoded: encoded.into_iter().collect(),
+        decoded: decoded.into_iter().collect(),
+    })
+}

@@ -29,8 +29,9 @@ pub enum Tok {
     /// Lifetime (`'a`, `'static`). Distinguished from [`Tok::Char`]
     /// so `&'a str` never swallows code as a char literal.
     Lifetime,
-    /// Numeric literal. Content unused by any rule.
-    Num,
+    /// Numeric literal, with its source text (`0x2F`, `4096`, ...).
+    /// The wire-complete rule compares tag values textually.
+    Num(String),
     /// Single punctuation character (`.`, `(`, `!`, `;`, ...).
     /// Multi-character operators arrive as consecutive tokens.
     Punct(char),
@@ -144,6 +145,7 @@ pub fn lex(src: &str) -> Lexed {
                 i = next;
             }
             _ if c.is_ascii_digit() => {
+                let start = i;
                 while i < b.len()
                     && (b[i].is_ascii_alphanumeric() || b[i] == b'_' || b[i] == b'.')
                 {
@@ -154,7 +156,7 @@ pub fn lex(src: &str) -> Lexed {
                     i += 1;
                 }
                 out.tokens.push(Token {
-                    tok: Tok::Num,
+                    tok: Tok::Num(src[start..i].to_string()),
                     line,
                 });
             }

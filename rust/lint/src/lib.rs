@@ -1,12 +1,20 @@
 //! `tlstore-lint`: a zero-dependency invariant checker for the
 //! tlstore codebase.
 //!
-//! The crate lexes Rust source ([`lexer`]) and runs seven
-//! repo-specific contract rules ([`rules`]) over the token stream —
-//! no `syn`, no `rustc` internals, no external crates. The rules
-//! encode decisions this repo already made (panic-free library code,
-//! logged cleanup, registered key namespaces, single-shard locking)
-//! so they stay made as the code grows.
+//! The crate lexes Rust source ([`lexer`]), builds a brace-tree over
+//! the tokens ([`parser`]), and runs two kinds of repo-specific
+//! contract rules — token-pattern rules ([`rules`]) and flow-aware
+//! rules ([`flow`]: writer typestate, interprocedural lock-order,
+//! wire-protocol completeness) — with no `syn`, no `rustc`
+//! internals, no external crates. The rules encode decisions this
+//! repo already made (panic-free library code, logged cleanup,
+//! registered key namespaces, commit-or-abort writers, acyclic lock
+//! acquisition order) so they stay made as the code grows.
+//!
+//! Findings carry a severity: `error` findings are definite contract
+//! violations, `warning` findings are paths the analysis cannot
+//! prove covered. Both fail the gate — a warning is a prompt to
+//! restructure or justify, not to ignore.
 //!
 //! Escape hatch: a comment of the form
 //!
@@ -20,9 +28,13 @@
 //! name or an empty justification is itself a finding — escapes are
 //! audited, not free.
 
+/// The flow-aware rules (writer typestate, lock-order, wire-complete).
+pub mod flow;
 /// The hand-rolled token/comment lexer.
 pub mod lexer;
-/// The seven contract rules.
+/// The brace-tree parser used by the flow rules.
+pub mod parser;
+/// The token-pattern contract rules.
 pub mod rules;
 
 use std::collections::BTreeMap;
@@ -47,18 +59,31 @@ pub struct Finding {
     pub line: u32,
     /// Rule name (one of [`rules::RULES`]).
     pub rule: &'static str,
+    /// `"error"` (definite violation) or `"warning"` (a path the
+    /// analysis cannot prove covered). Both fail the gate.
+    pub severity: &'static str,
     /// Human-readable description of the violation.
     pub message: String,
 }
 
 impl Finding {
-    /// Build a finding with the file path left for the engine to fill.
+    /// Build an error-severity finding with the file path left for
+    /// the engine to fill.
     pub fn new(rule: &'static str, line: u32, message: String) -> Self {
         Finding {
             file: String::new(),
             line,
             rule,
+            severity: "error",
             message,
+        }
+    }
+
+    /// Build a warning-severity finding.
+    pub fn warn(rule: &'static str, line: u32, message: String) -> Self {
+        Finding {
+            severity: "warning",
+            ..Finding::new(rule, line, message)
         }
     }
 }
@@ -67,13 +92,15 @@ impl std::fmt::Display for Finding {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{}:{}: [{}] {}",
-            self.file, self.line, self.rule, self.message
+            "{}:{}: {}: [{}] {}",
+            self.file, self.line, self.severity, self.rule, self.message
         )
     }
 }
 
-/// A parsed `lint:allow(<rule>): <justification>` escape comment.
+/// A parsed escape comment: `lint:allow` followed by
+/// `(<rule>): <justification>`. (Spelled out piecewise here so the
+/// self-host gate does not read this doc as a malformed escape.)
 #[derive(Debug, Clone)]
 struct Allow {
     rule: String,
@@ -154,59 +181,120 @@ fn allow_windows(allows: &[Allow], last_tok_on_line: &BTreeMap<u32, Tok>) -> Vec
         .collect()
 }
 
+/// The cross-file analysis artifacts [`lint_files`] assembles while
+/// linting: the lock acquisition-order graph and any wire-protocol
+/// tag maps. Exposed so the self-clean gate can assert the analyses
+/// ran against the real tree rather than vacuously passing.
+#[derive(Debug, Default)]
+pub struct AnalysisReport {
+    /// The acquisition-order graph over `storage/` + `cluster/`.
+    pub lock: flow::LockGraph,
+    /// One report per file that defines a wire tag namespace.
+    pub wire: Vec<flow::WireReport>,
+}
+
+/// Lint a set of files as one unit: per-file token and flow rules,
+/// plus the cross-file lock-order pass over every `storage/` and
+/// `cluster/` file in the set. `files` pairs each slash-separated
+/// root-relative path (which selects rules and exemptions) with its
+/// source text.
+pub fn lint_files(files: &[(&str, &str)], registry: &[String]) -> (Vec<Finding>, AnalysisReport) {
+    let mut findings = Vec::new();
+    let mut summaries = Vec::new();
+    let mut wire = Vec::new();
+    // per-file allow windows, kept for the cross-file findings
+    let mut windows_by_file: Vec<(String, Vec<(String, u32, u32)>)> = Vec::new();
+
+    for (rel_path, src) in files {
+        let rel_path = *rel_path;
+        let lexed = lexer::lex(src);
+        let toks = &lexed.tokens;
+        let regions = rules::test_regions(toks);
+        let parsed = parser::parse(toks);
+        let mut file_findings = Vec::new();
+
+        let entry_point = rel_path == "main.rs"
+            || rel_path == "cli.rs"
+            || rel_path.starts_with("bench/");
+        let test_harness = rel_path.starts_with("testing/");
+
+        if !entry_point && !test_harness {
+            rules::no_panic(toks, &regions, &mut file_findings);
+        }
+        rules::no_discarded_cleanup(toks, &regions, &mut file_findings);
+        rules::decoder_must_finish(toks, &regions, &mut file_findings);
+        if rel_path != "storage/layout.rs" {
+            rules::reserved_prefix(toks, &regions, registry, &mut file_findings);
+        }
+        if rel_path != "storage/fault.rs" {
+            rules::forget_outside_fault(toks, &regions, &mut file_findings);
+        }
+        if !entry_point {
+            rules::no_println(toks, &regions, &mut file_findings);
+        }
+        // flow rules: writers are exempt where panics are (entry
+        // points drive jobs interactively; the test harness drops
+        // writers on purpose to simulate crashes)
+        if !entry_point && !test_harness {
+            flow::writer_typestate(&parsed, toks, &regions, &mut file_findings);
+        }
+        if let Some(report) = flow::wire_complete(rel_path, &parsed, toks, &regions, &mut file_findings)
+        {
+            wire.push(report);
+        }
+        if rel_path.starts_with("storage/") || rel_path.starts_with("cluster/") {
+            summaries.extend(flow::lock_summaries(rel_path, &parsed, toks, &regions));
+        }
+
+        // escape handling: malformed allows are findings, well-formed
+        // ones suppress their rule inside the statement window
+        let mut meta = Vec::new();
+        let allows = parse_allows(&lexed.comments, &mut meta);
+        let mut last_tok_on_line: BTreeMap<u32, Tok> = BTreeMap::new();
+        for t in toks {
+            last_tok_on_line.insert(t.line, t.tok.clone());
+        }
+        let windows = allow_windows(&allows, &last_tok_on_line);
+        file_findings.retain(|f| !suppressed(&windows, f.rule, f.line));
+        file_findings.extend(meta);
+
+        for f in &mut file_findings {
+            f.file = rel_path.to_string();
+        }
+        findings.extend(file_findings);
+        windows_by_file.push((rel_path.to_string(), windows));
+    }
+
+    // cross-file pass: the acquisition-order graph
+    let (lock_graph, lock_findings) = flow::lock_order(&summaries);
+    findings.extend(lock_findings.into_iter().filter(|f| {
+        !windows_by_file
+            .iter()
+            .any(|(file, windows)| *file == f.file && suppressed(windows, f.rule, f.line))
+    }));
+
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    (
+        findings,
+        AnalysisReport {
+            lock: lock_graph,
+            wire,
+        },
+    )
+}
+
+/// Is a finding of `rule` at `line` inside one of the allow windows?
+fn suppressed(windows: &[(String, u32, u32)], rule: &str, line: u32) -> bool {
+    windows
+        .iter()
+        .any(|(r, start, end)| r.as_str() == rule && line >= *start && line <= *end)
+}
+
 /// Lint one file's source text. `rel_path` is the slash-separated
 /// path relative to the linted source root (it selects which rules
 /// and exemptions apply); `registry` is the reserved-prefix list.
 pub fn lint_source(rel_path: &str, src: &str, registry: &[String]) -> Vec<Finding> {
-    let lexed = lexer::lex(src);
-    let toks = &lexed.tokens;
-    let regions = rules::test_regions(toks);
-    let mut findings = Vec::new();
-
-    let entry_point = rel_path == "main.rs"
-        || rel_path == "cli.rs"
-        || rel_path.starts_with("bench/");
-    let test_harness = rel_path.starts_with("testing/");
-
-    if !entry_point && !test_harness {
-        rules::no_panic(toks, &regions, &mut findings);
-    }
-    rules::no_discarded_cleanup(toks, &regions, &mut findings);
-    rules::decoder_must_finish(toks, &regions, &mut findings);
-    if rel_path != "storage/layout.rs" {
-        rules::reserved_prefix(toks, &regions, registry, &mut findings);
-    }
-    if rel_path != "storage/fault.rs" {
-        rules::forget_outside_fault(toks, &regions, &mut findings);
-    }
-    if !entry_point {
-        rules::no_println(toks, &regions, &mut findings);
-    }
-    if rel_path.starts_with("storage/") {
-        rules::one_shard_lock(toks, &regions, &mut findings);
-    }
-
-    // escape handling: malformed allows are findings, well-formed
-    // ones suppress their rule inside the statement window
-    let mut meta = Vec::new();
-    let allows = parse_allows(&lexed.comments, &mut meta);
-    let mut last_tok_on_line: BTreeMap<u32, Tok> = BTreeMap::new();
-    for t in toks {
-        last_tok_on_line.insert(t.line, t.tok.clone());
-    }
-    let windows = allow_windows(&allows, &last_tok_on_line);
-    findings.retain(|f| {
-        !windows
-            .iter()
-            .any(|(rule, start, end)| rule.as_str() == f.rule && f.line >= *start && f.line <= *end)
-    });
-    findings.extend(meta);
-
-    for f in &mut findings {
-        f.file = rel_path.to_string();
-    }
-    findings.sort_by_key(|f| f.line);
-    findings
+    lint_files(&[(rel_path, src)], registry).0
 }
 
 /// Parse `RESERVED_PREFIXES` out of `storage/layout.rs` source: the
@@ -263,10 +351,11 @@ fn collect_rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
 }
 
 /// Lint every `.rs` file under `src_root` (a tlstore `rust/src`-style
-/// tree). Findings are ordered by file path, then line.
-pub fn lint_tree(src_root: &Path) -> io::Result<Vec<Finding>> {
+/// tree) and return the findings with the cross-file analysis
+/// report. Findings are ordered by file path, then line.
+pub fn lint_tree_report(src_root: &Path) -> io::Result<(Vec<Finding>, AnalysisReport)> {
     let registry = load_registry(src_root);
-    let mut findings = Vec::new();
+    let mut sources: Vec<(String, String)> = Vec::new();
     for path in collect_rs_files(src_root)? {
         let rel = path
             .strip_prefix(src_root)
@@ -274,9 +363,91 @@ pub fn lint_tree(src_root: &Path) -> io::Result<Vec<Finding>> {
             .to_string_lossy()
             .replace('\\', "/");
         let src = fs::read_to_string(&path)?;
-        findings.extend(lint_source(&rel, &src, &registry));
+        sources.push((rel, src));
     }
-    Ok(findings)
+    let refs: Vec<(&str, &str)> = sources
+        .iter()
+        .map(|(r, s)| (r.as_str(), s.as_str()))
+        .collect();
+    Ok(lint_files(&refs, &registry))
+}
+
+/// Lint every `.rs` file under `src_root`, findings only.
+pub fn lint_tree(src_root: &Path) -> io::Result<Vec<Finding>> {
+    Ok(lint_tree_report(src_root)?.0)
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render findings as the machine-readable JSON array the CI lane
+/// archives. The schema — objects with exactly `file`, `line`,
+/// `rule`, `severity`, `message` — is pinned by a golden test; treat
+/// any change as a breaking one for downstream parsers.
+pub fn to_json(findings: &[Finding]) -> String {
+    let rows: Vec<String> = findings
+        .iter()
+        .map(|f| {
+            format!(
+                "  {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"severity\": \"{}\", \"message\": \"{}\"}}",
+                json_escape(&f.file),
+                f.line,
+                f.rule,
+                f.severity,
+                json_escape(&f.message)
+            )
+        })
+        .collect();
+    format!("[\n{}\n]", rows.join(",\n"))
+}
+
+/// Escape a value for a GitHub Actions workflow-command *property*
+/// (the `file=`/`title=` fields).
+fn gh_escape_property(s: &str) -> String {
+    s.replace('%', "%25")
+        .replace('\r', "%0D")
+        .replace('\n', "%0A")
+        .replace(':', "%3A")
+        .replace(',', "%2C")
+}
+
+/// Escape a value for a GitHub Actions workflow-command *message*.
+fn gh_escape_message(s: &str) -> String {
+    s.replace('%', "%25").replace('\r', "%0D").replace('\n', "%0A")
+}
+
+/// Render one finding as a GitHub Actions workflow command
+/// (`::error file=…,line=…::message`) so findings annotate PR diffs
+/// inline. `path_prefix` is prepended to the finding's root-relative
+/// path so the annotation lands on the repo-relative file.
+pub fn to_github(f: &Finding, path_prefix: &str) -> String {
+    let path = if path_prefix.is_empty() {
+        f.file.clone()
+    } else {
+        format!("{}/{}", path_prefix.trim_end_matches('/'), f.file)
+    };
+    format!(
+        "::{} file={},line={},title=tlstore-lint {}::{}",
+        if f.severity == "warning" { "warning" } else { "error" },
+        gh_escape_property(&path),
+        f.line,
+        gh_escape_property(f.rule),
+        gh_escape_message(&f.message)
+    )
 }
 
 #[cfg(test)]

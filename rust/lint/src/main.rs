@@ -1,7 +1,7 @@
 //! CLI for the tlstore invariant checker.
 //!
 //! ```text
-//! tlstore-lint [--json] [--fix-plan] [paths...]
+//! tlstore-lint [--json] [--fix-plan] [--github] [paths...]
 //! ```
 //!
 //! With no paths, the tool walks ancestors of the working directory
@@ -10,17 +10,20 @@
 //! single `.rs` files. Exit status: 0 clean, 1 findings, 2 usage or
 //! I/O error.
 //!
-//! `--json` emits findings as a machine-readable JSON array;
-//! `--fix-plan` groups findings by rule and appends the standard
-//! remediation for each, for piping into an editor or a tracking
-//! issue.
+//! `--json` emits findings as a machine-readable JSON array (schema
+//! pinned by `tests/json_golden.rs`); `--fix-plan` groups findings
+//! by rule and appends the standard remediation for each;
+//! `--github` emits GitHub Actions workflow commands
+//! (`::error file=…,line=…::…`) so CI findings annotate PR diffs
+//! inline — paths are prefixed with the linted root so annotations
+//! resolve repo-relative.
 
 #![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use tlstore_lint::{lint_source, lint_tree, load_registry, rules, Finding};
+use tlstore_lint::{lint_source, lint_tree, load_registry, rules, to_github, to_json, Finding};
 
 /// What to do for each rule when `--fix-plan` is requested.
 fn remediation(rule: &str) -> &'static str {
@@ -37,27 +40,18 @@ fn remediation(rule: &str) -> &'static str {
         }
         "forget-outside-fault" => "move the leak into storage/fault.rs or use a scoped guard",
         "no-println" => "use crate::log_info!/log_warn! (or move the print into main.rs/cli.rs)",
-        "one-shard-lock" => "hoist one acquisition into its own `{ }` scope so the guards never overlap",
+        "writer-typestate" => {
+            "commit/abort the writer on every path (add the missing else/match arms), or return it"
+        }
+        "lock-order" => {
+            "break the cycle: release one guard (scope or drop()) before acquiring the other, everywhere"
+        }
+        "wire-complete" => {
+            "add the missing encode/decode arm for the tag (and keep dec_*/enc_* helpers wired into dispatch)"
+        }
         "lint-allow" => "fix the escape comment: `// lint:allow(<known-rule>): <non-empty why>`",
         _ => "see docs/STATIC_ANALYSIS.md",
     }
-}
-
-/// Minimal JSON string escaping (quotes, backslashes, control chars).
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
 }
 
 /// Locate a tlstore `rust/src` tree from `start` upwards.
@@ -79,13 +73,15 @@ fn find_default_root(start: &Path) -> Option<PathBuf> {
 fn run() -> Result<Vec<Finding>, String> {
     let mut json = false;
     let mut fix_plan = false;
+    let mut github = false;
     let mut paths: Vec<PathBuf> = Vec::new();
     for arg in std::env::args().skip(1) {
         match arg.as_str() {
             "--json" => json = true,
             "--fix-plan" => fix_plan = true,
+            "--github" => github = true,
             "--help" | "-h" => {
-                println!("usage: tlstore-lint [--json] [--fix-plan] [paths...]");
+                println!("usage: tlstore-lint [--json] [--fix-plan] [--github] [paths...]");
                 println!("rules: {}", rules::RULES.join(", "));
                 return Ok(Vec::new());
             }
@@ -103,11 +99,14 @@ fn run() -> Result<Vec<Finding>, String> {
         paths.push(root);
     }
 
-    let mut findings = Vec::new();
+    // findings grouped with the path prefix that makes them
+    // repo-relative (used by --github annotations)
+    let mut groups: Vec<(String, Vec<Finding>)> = Vec::new();
     for path in &paths {
         if path.is_dir() {
-            findings
-                .extend(lint_tree(path).map_err(|e| format!("{}: {e}", path.display()))?);
+            let found =
+                lint_tree(path).map_err(|e| format!("{}: {e}", path.display()))?;
+            groups.push((path.to_string_lossy().into_owned(), found));
         } else {
             let src = std::fs::read_to_string(path)
                 .map_err(|e| format!("{}: {e}", path.display()))?;
@@ -117,9 +116,9 @@ fn run() -> Result<Vec<Finding>, String> {
                 .components()
                 .map(|c| c.as_os_str().to_string_lossy().into_owned())
                 .collect::<Vec<_>>();
-            let rel = match rel.iter().rposition(|c| c == "src") {
-                Some(i) => rel[i + 1..].join("/"),
-                None => rel.last().cloned().unwrap_or_default(),
+            let (prefix, rel) = match rel.iter().rposition(|c| c == "src") {
+                Some(i) => (rel[..=i].join("/"), rel[i + 1..].join("/")),
+                None => (String::new(), rel.last().cloned().unwrap_or_default()),
             };
             let registry = path
                 .ancestors()
@@ -133,24 +132,19 @@ fn run() -> Result<Vec<Finding>, String> {
                     },
                     load_registry,
                 );
-            findings.extend(lint_source(&rel, &src, &registry));
+            groups.push((prefix, lint_source(&rel, &src, &registry)));
         }
     }
+    let findings: Vec<Finding> = groups.iter().flat_map(|(_, f)| f.clone()).collect();
 
     if json {
-        let rows: Vec<String> = findings
-            .iter()
-            .map(|f| {
-                format!(
-                    "  {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
-                    json_escape(&f.file),
-                    f.line,
-                    f.rule,
-                    json_escape(&f.message)
-                )
-            })
-            .collect();
-        println!("[\n{}\n]", rows.join(",\n"));
+        println!("{}", to_json(&findings));
+    } else if github {
+        for (prefix, found) in &groups {
+            for f in found {
+                println!("{}", to_github(f, prefix));
+            }
+        }
     } else if fix_plan {
         for rule in rules::RULES {
             let hits: Vec<&Finding> = findings.iter().filter(|f| f.rule == rule).collect();

@@ -1,0 +1,343 @@
+//! A brace-tree parser over the [`crate::lexer`] token stream: just
+//! enough structure for flow analysis — function bodies, nested
+//! blocks, and statement spans — without a grammar.
+//!
+//! The tree is built from three observations about Rust surface
+//! syntax that hold for the token stream the lexer produces:
+//!
+//! 1. `{` / `}` nest (string/char/comment content never reaches the
+//!    token stream, so brace counting is sound),
+//! 2. statements split at `;` when no parenthesis/bracket group is
+//!    open (array types like `[u8; 4]` keep their `;` internal), and
+//! 3. a block whose introducing statement contains the `match`
+//!    keyword splits its statements at top-level `,` too — match
+//!    arms are statements of the match body.
+//!
+//! Struct-literal braces parse as (harmless, empty-ish) blocks; the
+//! flow rules in [`crate::flow`] only look for specific token shapes
+//! inside statements, so spurious structure costs nothing. The
+//! parser never panics on malformed input: unterminated blocks close
+//! at EOF, which the robustness property test pins down.
+
+use crate::lexer::{Tok, Token};
+
+/// A `{ .. }` block: token span plus parsed statements.
+#[derive(Debug, Clone)]
+pub struct Block {
+    /// Token index of the opening `{`.
+    pub open: usize,
+    /// Token index of the closing `}` (or the last token at EOF).
+    pub close: usize,
+    /// Statements in source order.
+    pub stmts: Vec<Stmt>,
+    /// True when this block is a `match` body: its statements are
+    /// the arms (split at top-level `,` as well as `;`).
+    pub is_match_body: bool,
+}
+
+/// One statement (or match arm): a token span at a single block
+/// depth, with any directly nested blocks parsed out.
+#[derive(Debug, Clone)]
+pub struct Stmt {
+    /// First token index of the statement.
+    pub start: usize,
+    /// Last token index (inclusive; the terminating `;`/`,` if any).
+    pub end: usize,
+    /// 1-based source line of the first token.
+    pub line: u32,
+    /// Nested blocks in statement order (if/else bodies, match body,
+    /// loop body, bare scopes, closure bodies...).
+    pub blocks: Vec<Block>,
+}
+
+/// A named `fn` item with its body (trait-method declarations that
+/// end in `;` are skipped entirely — they have no flow to analyze).
+#[derive(Debug, Clone)]
+pub struct FnDef {
+    /// The function's name.
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Token index of the `fn` keyword (used to test `#[cfg(test)]`
+    /// region membership).
+    pub fn_tok: usize,
+    /// The parsed body.
+    pub body: Block,
+}
+
+/// Parse result: every `fn` with a body, in source order. Functions
+/// nested inside other functions or inside `mod tests { .. }` appear
+/// as their own entries (region filtering happens in the flow rules).
+#[derive(Debug, Default)]
+pub struct Parsed {
+    /// All function definitions found.
+    pub fns: Vec<FnDef>,
+}
+
+fn ident(t: &Token) -> Option<&str> {
+    match &t.tok {
+        Tok::Ident(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct(t: &Token, c: char) -> bool {
+    t.tok == Tok::Punct(c)
+}
+
+/// Parse the whole token stream: scan for `fn` keywords, parse each
+/// body as a block tree. The scan continues *inside* bodies too, so
+/// nested functions are found — callers filter by region if needed.
+pub fn parse(toks: &[Token]) -> Parsed {
+    let mut out = Parsed::default();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident(&toks[i]) != Some("fn") {
+            i += 1;
+            continue;
+        }
+        let fn_tok = i;
+        let line = toks[i].line;
+        let name = toks
+            .get(i + 1)
+            .and_then(ident)
+            .unwrap_or("?")
+            .to_string();
+        // scan the signature to the body `{` or a declaration `;`;
+        // skip parenthesized/bracketed groups so a `;` inside
+        // `[u8; N]` or a default-arg position can't end the scan early
+        let mut j = i + 1;
+        let mut pdepth = 0i32;
+        let mut body_open = None;
+        while j < toks.len() {
+            match &toks[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') => pdepth += 1,
+                Tok::Punct(')') | Tok::Punct(']') => pdepth -= 1,
+                Tok::Punct('{') if pdepth <= 0 => {
+                    body_open = Some(j);
+                    break;
+                }
+                Tok::Punct(';') if pdepth <= 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = body_open else {
+            i = j + 1;
+            continue; // trait declaration (or EOF): no body
+        };
+        let body = parse_block(toks, open, false);
+        out.fns.push(FnDef {
+            name,
+            line,
+            fn_tok,
+            body,
+        });
+        // keep scanning *inside* the body so nested fns are found too
+        i = open + 1;
+    }
+    out
+}
+
+/// Parse one block whose `{` sits at `open`. Returns the block; its
+/// `close` is the matching `}` or the last token when unterminated.
+fn parse_block(toks: &[Token], open: usize, is_match_body: bool) -> Block {
+    let mut stmts = Vec::new();
+    let mut cur_start = open + 1;
+    let mut cur_blocks: Vec<Block> = Vec::new();
+    let mut saw_match = false; // `match` keyword at pdepth 0 in cur stmt
+    let mut pdepth = 0i32; // parenthesis/bracket depth inside the stmt
+    let mut i = open + 1;
+
+    // close the current statement at token `end` (inclusive)
+    macro_rules! close_stmt {
+        ($end:expr) => {{
+            let end: usize = $end;
+            if cur_start <= end {
+                stmts.push(Stmt {
+                    start: cur_start,
+                    end,
+                    line: toks.get(cur_start).map_or(0, |t| t.line),
+                    blocks: std::mem::take(&mut cur_blocks),
+                });
+            }
+            cur_start = end + 1;
+            saw_match = false;
+        }};
+    }
+
+    while i < toks.len() {
+        match &toks[i].tok {
+            Tok::Punct('(') | Tok::Punct('[') => {
+                pdepth += 1;
+                i += 1;
+            }
+            Tok::Punct(')') | Tok::Punct(']') => {
+                pdepth -= 1;
+                i += 1;
+            }
+            Tok::Punct('{') => {
+                let inner = parse_block(toks, i, saw_match && pdepth <= 0);
+                let inner_close = inner.close;
+                cur_blocks.push(inner);
+                // a block ends the statement unless the next token
+                // continues it (`else`, a terminator handled on its
+                // own turn, or an infix/method continuation)
+                let next = toks.get(inner_close + 1);
+                let continues = match next {
+                    Some(t) => {
+                        ident(t) == Some("else")
+                            || punct(t, ';')
+                            || punct(t, ',')
+                            || punct(t, '.')
+                            || punct(t, '?')
+                            || punct(t, ')')
+                            || punct(t, ']')
+                    }
+                    None => false,
+                };
+                i = inner_close + 1;
+                if !continues && pdepth <= 0 {
+                    close_stmt!(inner_close);
+                }
+            }
+            Tok::Punct('}') => {
+                // end of this block: flush any trailing (tail) stmt
+                if cur_start < i {
+                    close_stmt!(i - 1);
+                }
+                return Block {
+                    open,
+                    close: i,
+                    stmts,
+                    is_match_body,
+                };
+            }
+            Tok::Punct(';') if pdepth <= 0 => {
+                close_stmt!(i);
+                i += 1;
+            }
+            Tok::Punct(',') if pdepth <= 0 && is_match_body => {
+                close_stmt!(i);
+                i += 1;
+            }
+            Tok::Ident(s) if s == "match" && pdepth <= 0 => {
+                saw_match = true;
+                i += 1;
+            }
+            _ => {
+                i += 1;
+            }
+        }
+    }
+    // unterminated block: close at EOF
+    if cur_start < toks.len() {
+        let end = toks.len() - 1;
+        close_stmt!(end);
+    }
+    Block {
+        open,
+        close: toks.len().saturating_sub(1),
+        stmts,
+        is_match_body,
+    }
+}
+
+/// Iterate a statement's *top-level* token indices — every index in
+/// `[stmt.start, stmt.end]` that is not inside one of its nested
+/// blocks. This is what the flow rules pattern-match against: nested
+/// control-flow bodies are analyzed separately, on purpose.
+pub fn top_indices(stmt: &Stmt) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut i = stmt.start;
+    let mut b = 0usize;
+    while i <= stmt.end {
+        if b < stmt.blocks.len() && i == stmt.blocks[b].open {
+            i = stmt.blocks[b].close + 1;
+            b += 1;
+            continue;
+        }
+        out.push(i);
+        i += 1;
+    }
+    out
+}
+
+/// Does any top-level token of `stmt` satisfy `pred`?
+pub fn any_top<F: Fn(&Token) -> bool>(stmt: &Stmt, toks: &[Token], pred: F) -> bool {
+    top_indices(stmt)
+        .into_iter()
+        .any(|i| toks.get(i).is_some_and(|t| pred(t)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn fns(src: &str) -> Parsed {
+        parse(&lex(src).tokens)
+    }
+
+    #[test]
+    fn simple_fn_and_stmts() {
+        let p = fns("fn f() { let a = 1; let b = 2; b }");
+        assert_eq!(p.fns.len(), 1);
+        assert_eq!(p.fns[0].name, "f");
+        assert_eq!(p.fns[0].body.stmts.len(), 3);
+    }
+
+    #[test]
+    fn trait_decls_have_no_body() {
+        let p = fns("trait T { fn a(&self) -> u32; fn b(&self) { 1; } }");
+        assert_eq!(p.fns.len(), 1);
+        assert_eq!(p.fns[0].name, "b");
+    }
+
+    #[test]
+    fn array_semicolons_do_not_split() {
+        let p = fns("fn f() { let a: [u8; 4] = [0; 4]; a[0]; }");
+        assert_eq!(p.fns[0].body.stmts.len(), 2);
+    }
+
+    #[test]
+    fn if_else_is_one_stmt_with_two_blocks() {
+        let p = fns("fn f(c: bool) { if c { a(); } else { b(); } d(); }");
+        let body = &p.fns[0].body;
+        assert_eq!(body.stmts.len(), 2);
+        assert_eq!(body.stmts[0].blocks.len(), 2);
+    }
+
+    #[test]
+    fn match_bodies_split_arms_at_commas() {
+        let p = fns("fn f(x: u8) { match x { 0 => a(), 1 => { b(); } _ => c(), } }");
+        let body = &p.fns[0].body;
+        assert_eq!(body.stmts.len(), 1);
+        let m = &body.stmts[0].blocks[0];
+        assert!(m.is_match_body);
+        assert!(m.stmts.len() >= 3, "{:?}", m.stmts.len());
+    }
+
+    #[test]
+    fn nested_fns_are_found() {
+        let p = fns("fn outer() { fn inner() { 1; } inner(); }");
+        let names: Vec<_> = p.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner"]);
+    }
+
+    #[test]
+    fn unterminated_block_closes_at_eof() {
+        let p = fns("fn f() { let a = 1;");
+        assert_eq!(p.fns.len(), 1);
+        assert_eq!(p.fns[0].body.stmts.len(), 1);
+    }
+
+    #[test]
+    fn top_indices_skip_nested_blocks() {
+        let p = fns("fn f(c: bool) { if c { hidden(); } tail(); }");
+        let stmt = &p.fns[0].body.stmts[0];
+        let toks = lex("fn f(c: bool) { if c { hidden(); } tail(); }").tokens;
+        assert!(!any_top(stmt, &toks, |t| t.tok == Tok::Ident("hidden".into())));
+        assert!(any_top(stmt, &toks, |t| t.tok == Tok::Ident("if".into())));
+    }
+}

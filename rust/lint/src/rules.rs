@@ -1,5 +1,8 @@
-//! The seven contract rules, evaluated over a [`crate::lexer`] token
-//! stream.
+//! The token-pattern contract rules, evaluated over a
+//! [`crate::lexer`] token stream. The flow-aware rules
+//! (`writer-typestate`, `lock-order`, `wire-complete`) live in
+//! [`crate::flow`]; this module holds the rules that need only a
+//! token window.
 //!
 //! Each rule is a repo-specific invariant the tlstore codebase commits
 //! to (see `docs/STATIC_ANALYSIS.md` for the rationale behind each):
@@ -12,31 +15,42 @@
 //! | `reserved-prefix`       | `".name/"` key-prefix literals must be registered in `RESERVED_PREFIXES` |
 //! | `forget-outside-fault`  | `mem::forget` only in `storage/fault.rs` |
 //! | `no-println`            | `println!`/`eprintln!`/`print!`/`eprint!` only in `main.rs`/`cli.rs`/`bench/` |
-//! | `one-shard-lock`        | at most one shard-lock acquisition per lexical block in `storage/` |
+//! | `writer-typestate`      | ([`crate::flow`]) staged writers reach commit/abort on every explicit path |
+//! | `lock-order`            | ([`crate::flow`]) the acquisition-order graph over `storage/`+`cluster/` is acyclic |
+//! | `wire-complete`         | ([`crate::flow`]) every wire tag has both an encoder and a decoder arm |
 //!
-//! Rules operate on tokens, not an AST: the matching is documented
-//! per rule, including the approximations (a token linter trades a
-//! little precision for zero dependencies and total transparency —
-//! every rule is a visible pattern, not a query into someone else's
-//! IR).
+//! The lexical `one-shard-lock` rule was retired in favor of
+//! `lock-order`: counting acquisitions per block was a blunt
+//! approximation of the real invariant (no cyclic acquisition order),
+//! and it both missed cross-block nesting and flagged legal
+//! sequential re-acquisition. `lock-order` checks the invariant
+//! itself.
+//!
+//! Rules here operate on tokens, not an AST: the matching is
+//! documented per rule, including the approximations (a token linter
+//! trades a little precision for zero dependencies and total
+//! transparency — every rule is a visible pattern, not a query into
+//! someone else's IR).
 
 use crate::lexer::{Tok, Token};
 use crate::Finding;
 
 /// Names of all rules, in reporting order. `lint-allow` is the meta
 /// rule for malformed escape comments.
-pub const RULES: [&str; 8] = [
+pub const RULES: [&str; 10] = [
     "no-panic",
     "no-discarded-cleanup",
     "decoder-must-finish",
     "reserved-prefix",
     "forget-outside-fault",
     "no-println",
-    "one-shard-lock",
+    "writer-typestate",
+    "lock-order",
+    "wire-complete",
     "lint-allow",
 ];
 
-/// Is `name` a known rule (valid in `lint:allow(<name>)`)?
+/// Is `name` a known rule (valid inside a `lint:allow` escape)?
 pub fn is_known_rule(name: &str) -> bool {
     RULES.contains(&name)
 }
@@ -382,86 +396,5 @@ pub fn no_println(toks: &[Token], regions: &[(usize, usize)], out: &mut Vec<Find
     }
 }
 
-/// Rule `one-shard-lock`: in `storage/` code, two shard-lock
-/// acquisitions live in the same lexical block risk an ABBA deadlock
-/// (the single-lock discipline is what lets MemStore skip a lock
-/// ordering protocol entirely). An acquisition is a `.lock()` call
-/// whose receiver mentions a `shard` identifier; blocks are `{}`
-/// scopes, so a loop body that re-acquires per iteration stays legal.
-///
-/// Approximation: the rule sees lexical blocks, not borrow regions —
-/// an explicit `drop(guard)` before a second acquisition in the same
-/// block is still flagged (hoist the second acquisition into its own
-/// scope instead; that makes the non-overlap visible to humans too).
-pub fn one_shard_lock(toks: &[Token], regions: &[(usize, usize)], out: &mut Vec<Finding>) {
-    // assign a unique id to every `{}` block as we walk
-    let mut next_block = 1u32;
-    let mut stack: Vec<u32> = vec![0];
-    let mut seen_in_block: Vec<(u32, u32)> = Vec::new(); // (block, line)
-    for i in 0..toks.len() {
-        match &toks[i].tok {
-            Tok::Punct('{') => {
-                stack.push(next_block);
-                next_block += 1;
-            }
-            Tok::Punct('}') => {
-                let closed = stack.pop().unwrap_or(0);
-                seen_in_block.retain(|&(b, _)| b != closed);
-            }
-            _ => {}
-        }
-        if in_regions(regions, i) {
-            continue;
-        }
-        // `.lock ( )` with a shard-ish receiver
-        let is_lock = i + 3 < toks.len()
-            && punct(&toks[i], '.')
-            && ident(&toks[i + 1]) == Some("lock")
-            && punct(&toks[i + 2], '(')
-            && punct(&toks[i + 3], ')');
-        if !is_lock || !receiver_mentions_shard(toks, i) {
-            continue;
-        }
-        let block = *stack.last().unwrap_or(&0);
-        if let Some(&(_, prev_line)) = seen_in_block.iter().find(|&&(b, _)| b == block) {
-            out.push(Finding::new(
-                "one-shard-lock",
-                toks[i + 1].line,
-                format!(
-                    "second shard-lock acquisition in one block (first at line {prev_line})"
-                ),
-            ));
-        } else {
-            seen_in_block.push((block, toks[i + 1].line));
-        }
-    }
-}
-
-/// Walk the receiver expression backwards from the `.` at `dot` (to
-/// the nearest statement/expression boundary at bracket depth 0) and
-/// report whether any identifier in it mentions "shard".
-fn receiver_mentions_shard(toks: &[Token], dot: usize) -> bool {
-    let mut depth = 0i32; // counts `)`/`]` walking left
-    let mut j = dot;
-    while j > 0 {
-        j -= 1;
-        match &toks[j].tok {
-            Tok::Punct(')') | Tok::Punct(']') => depth += 1,
-            Tok::Punct('(') | Tok::Punct('[') => {
-                if depth == 0 {
-                    return false; // call/index boundary: receiver ended
-                }
-                depth -= 1;
-            }
-            Tok::Punct(';') | Tok::Punct('{') | Tok::Punct('}') | Tok::Punct(',')
-            | Tok::Punct('=') | Tok::Punct('&')
-                if depth == 0 =>
-            {
-                return false;
-            }
-            Tok::Ident(s) if s.to_ascii_lowercase().contains("shard") => return true,
-            _ => {}
-        }
-    }
-    false
-}
+// The former `one-shard-lock` rule lived here; `crate::flow`'s
+// `lock-order` rule subsumes it (see the module docs above).

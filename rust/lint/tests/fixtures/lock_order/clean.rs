@@ -1,0 +1,38 @@
+//! Clean fixture for `lock-order`: the same locks acquired in one
+//! consistent order, with early release where the order would invert.
+
+impl Pair {
+    /// Takes `left` then `right`: the canonical order.
+    pub fn sum(&self) -> usize {
+        let l = self.left.lock().unwrap();
+        let r = self.right.lock().unwrap();
+        l.len() + r.len()
+    }
+
+    /// Also needs both, in the same order — taken directly, with the
+    /// helper only ever called lock-free.
+    pub fn swap(&self) -> usize {
+        let l = self.left.lock().unwrap();
+        let r = self.right.lock().unwrap();
+        l.len() + r.len()
+    }
+
+    /// Acquires `left` alone; callers hold nothing when calling it.
+    fn grab_left(&self) -> usize {
+        let l = self.left.lock().unwrap();
+        l.len()
+    }
+
+    /// Releases `gauge` (scope end) before re-acquiring it, and uses
+    /// `drop()` to end a guard early — sequential, never nested.
+    pub fn recount(&self) -> usize {
+        let first = {
+            let a = self.gauge.lock().unwrap();
+            a.len()
+        };
+        let b = self.gauge.lock().unwrap();
+        drop(b);
+        let c = self.gauge.lock().unwrap();
+        first + c.len()
+    }
+}

@@ -1,0 +1,33 @@
+//! Violating fixture for `lock-order`: an ABBA pair (one side of it
+//! through a same-file call) plus a re-acquisition of a held lock.
+
+impl Pair {
+    /// Takes `left` then `right` directly.
+    pub fn sum(&self) -> usize {
+        let l = self.left.lock().unwrap();
+        let r = self.right.lock().unwrap();
+        l.len() + r.len()
+    }
+
+    /// Takes `right`, then reaches `left` through a helper — the
+    /// reverse order, so `sum` and `swap` can deadlock each other.
+    pub fn swap(&self) -> usize {
+        let r = self.right.lock().unwrap();
+        let n = self.grab_left();
+        r.len() + n
+    }
+
+    /// Acquires `left`; called by `swap` with `right` held.
+    fn grab_left(&self) -> usize {
+        let l = self.left.lock().unwrap();
+        l.len()
+    }
+
+    /// Re-acquires `gauge` while already holding it: self-deadlock on
+    /// a non-reentrant mutex.
+    pub fn double_count(&self) -> usize {
+        let a = self.gauge.lock().unwrap();
+        let b = self.gauge.lock().unwrap();
+        a.len() + b.len()
+    }
+}

@@ -1,0 +1,46 @@
+//! Violating fixture for `wire-complete`: tags missing from one side
+//! of the codec, a duplicated tag value, and orphaned helpers.
+
+pub const TAG_PING: u8 = 0x01;
+/// Encoded but never decoded: peers would reject these frames.
+pub const TAG_PUSH: u8 = 0x02;
+/// Decoded but never encoded: dead protocol surface.
+pub const TAG_PULL: u8 = 0x03;
+/// Referenced by neither dispatcher.
+pub const TAG_GONE: u8 = 0x04;
+/// Collides with TAG_PING on the wire.
+pub const TAG_DUPE: u8 = 0x01;
+
+pub fn encode(msg: &Msg, out: &mut Vec<u8>) {
+    match msg {
+        Msg::Ping => out.push(TAG_PING),
+        Msg::Push(data) => {
+            out.push(TAG_PUSH);
+            out.extend_from_slice(data);
+        }
+        Msg::Dupe => out.push(TAG_DUPE),
+    }
+}
+
+pub fn decode(buf: &[u8]) -> Result<Msg, WireError> {
+    match buf.first() {
+        Some(&TAG_PING) => Ok(Msg::Ping),
+        Some(&TAG_PULL) => dec_pull(&buf[1..]),
+        Some(&TAG_DUPE) => Ok(Msg::Dupe),
+        _ => Err(WireError::UnknownTag),
+    }
+}
+
+fn dec_pull(body: &[u8]) -> Result<Msg, WireError> {
+    Ok(Msg::Pull(body.to_vec()))
+}
+
+/// Never called from `decode`: dead dispatch surface.
+fn dec_stats(body: &[u8]) -> Result<Msg, WireError> {
+    Ok(Msg::Stats(body.len()))
+}
+
+/// Never called from `encode`.
+fn enc_stats(n: usize, out: &mut Vec<u8>) {
+    out.extend_from_slice(&n.to_be_bytes());
+}

@@ -1,0 +1,60 @@
+//! Clean fixture for `writer-typestate`: every writer reaches
+//! commit/abort, is returned, or is moved on, on every path.
+
+/// The straight-line case: create, append, commit.
+pub fn spill(store: &Tls, key: &str, buf: &[u8]) -> Result<(), Error> {
+    let mut w = store.create(key)?;
+    w.append(buf)?;
+    w.commit()?;
+    Ok(())
+}
+
+/// Branches covered by a catch-all `else`: commit or abort.
+pub fn spill_or_abort(store: &Tls, key: &str, buf: &[u8]) -> Result<(), Error> {
+    let mut w = store.create_with(key, buf.len())?;
+    w.append(buf)?;
+    if buf.len() >= BLOCK {
+        w.commit()?;
+    } else {
+        w.abort()?;
+    }
+    Ok(())
+}
+
+/// Every match arm consumes (the wildcard aborts).
+pub fn spill_by_kind(store: &Tls, key: &str, kind: Kind) -> Result<(), Error> {
+    let w = store.writer(key)?;
+    match kind {
+        Kind::Flush => w.commit()?,
+        _ => w.abort()?,
+    }
+    Ok(())
+}
+
+/// Returning the handle moves responsibility to the caller.
+pub fn open_segment(store: &Tls, key: &str) -> Result<Writer, Error> {
+    let w = store.create(key)?;
+    Ok(w)
+}
+
+/// Rotation: each full segment is committed before the handle is
+/// rebound, and the final segment is committed after the loop.
+pub fn rotate(store: &Tls, keys: &[String], rows: &[Row]) -> Result<(), Error> {
+    let mut w = store.create(&keys[0])?;
+    for (i, row) in rows.iter().enumerate() {
+        if w.len() >= BLOCK {
+            w.commit()?;
+            w = store.create(&keys[i])?;
+        }
+        w.append(&row.bytes)?;
+    }
+    w.commit()?;
+    Ok(())
+}
+
+/// Plain `File::create` is not a staged writer — no typestate here.
+pub fn touch(path: &Path) -> Result<(), Error> {
+    let f = File::create(path)?;
+    f.sync_all()?;
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Violating fixture for `writer-typestate`: staged writers that can
+//! fall out of scope without reaching commit/abort.
+
+/// Never consumed at all: the writer is dropped at the end of the
+/// function and its staged blocks linger until recovery (error).
+pub fn spill_without_commit(store: &Tls, key: &str, buf: &[u8]) -> Result<(), Error> {
+    let mut w = store.create(key)?;
+    w.append(buf)?;
+    Ok(())
+}
+
+/// Consumed on only some paths: the `if` has no `else`, so the
+/// fall-through path drops the writer uncommitted (warning).
+pub fn commit_only_when_full(store: &Tls, key: &str, buf: &[u8]) -> Result<(), Error> {
+    let mut w = store.create_with(key, buf.len())?;
+    w.append(buf)?;
+    if buf.len() >= BLOCK {
+        w.commit()?;
+    }
+    Ok(())
+}
+
+/// A match that consumes in some arms but not the wildcard one.
+pub fn commit_by_kind(store: &Tls, key: &str, kind: Kind) -> Result<(), Error> {
+    let w = store.writer(key)?;
+    match kind {
+        Kind::Flush => w.commit()?,
+        Kind::Drop => {}
+    }
+    Ok(())
+}
+
+/// Reassignment drops the previous (unconsumed) writer on the floor.
+pub fn rotate_loses_first(store: &Tls, a: &str, b: &str) -> Result<(), Error> {
+    let mut w = store.create(a)?;
+    w = store.create(b)?;
+    w.commit()?;
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! Fixture tests for the flow-aware rules (`writer-typestate`,
+//! `lock-order`, `wire-complete`): one violating and one clean
+//! fixture per rule under `tests/fixtures/<rule>/`, like the
+//! token-pattern rules in `tests/rules_fixtures.rs`, plus assertions
+//! on severities and on the specific defects each violating fixture
+//! stages.
+
+use tlstore_lint::{lint_source, Finding, FALLBACK_PREFIXES};
+
+fn registry() -> Vec<String> {
+    FALLBACK_PREFIXES.iter().map(|s| (*s).to_string()).collect()
+}
+
+fn rules_in(findings: &[Finding]) -> Vec<&'static str> {
+    let mut rules: Vec<&'static str> = findings.iter().map(|f| f.rule).collect();
+    rules.sort_unstable();
+    rules.dedup();
+    rules
+}
+
+/// Assert the violating fixture trips only `rule` (at least
+/// `min_findings` times) and the clean fixture trips nothing; return
+/// the violating findings for rule-specific assertions.
+fn check(rule: &str, violating: (&str, &str), clean: (&str, &str), min_findings: usize) -> Vec<Finding> {
+    let v = lint_source(violating.0, violating.1, &registry());
+    assert!(
+        v.len() >= min_findings && rules_in(&v) == vec![rule],
+        "violating fixture for `{rule}`: expected >= {min_findings} findings of only that rule, got {v:?}"
+    );
+    let c = lint_source(clean.0, clean.1, &registry());
+    assert!(c.is_empty(), "clean fixture for `{rule}` is not clean: {c:?}");
+    v
+}
+
+#[test]
+fn writer_typestate_fixtures() {
+    let v = check(
+        "writer-typestate",
+        (
+            "storage/spill.rs",
+            include_str!("fixtures/writer_typestate/violating.rs"),
+        ),
+        (
+            "storage/spill.rs",
+            include_str!("fixtures/writer_typestate/clean.rs"),
+        ),
+        4,
+    );
+    // a writer that never reaches commit/abort is an error; one
+    // covered on only some paths is a warning
+    assert_eq!(
+        v.iter().filter(|f| f.severity == "error").count(),
+        1,
+        "{v:?}"
+    );
+    assert_eq!(
+        v.iter().filter(|f| f.severity == "warning").count(),
+        3,
+        "{v:?}"
+    );
+    assert!(
+        v.iter()
+            .any(|f| f.severity == "error" && f.message.contains("spill_without_commit")),
+        "{v:?}"
+    );
+}
+
+#[test]
+fn lock_order_fixtures() {
+    let v = check(
+        "lock-order",
+        (
+            "storage/pair.rs",
+            include_str!("fixtures/lock_order/violating.rs"),
+        ),
+        ("storage/pair.rs", include_str!("fixtures/lock_order/clean.rs")),
+        2,
+    );
+    // one ABBA cycle (one side through a same-file call) and one
+    // re-acquisition of a held lock
+    assert!(
+        v.iter().any(|f| f.message.contains("cycle among")
+            && f.message.contains("storage/pair.rs::left")
+            && f.message.contains("storage/pair.rs::right")),
+        "{v:?}"
+    );
+    assert!(
+        v.iter()
+            .any(|f| f.message.contains("re-acquired") && f.message.contains("gauge")),
+        "{v:?}"
+    );
+}
+
+#[test]
+fn wire_complete_fixtures() {
+    let v = check(
+        "wire-complete",
+        (
+            "cluster/wire.rs",
+            include_str!("fixtures/wire_complete/violating.rs"),
+        ),
+        ("cluster/wire.rs", include_str!("fixtures/wire_complete/clean.rs")),
+        6,
+    );
+    // encoded-only, decoded-only, unused, duplicate value, and both
+    // orphaned helpers each produce a distinct finding
+    for needle in [
+        "TAG_PUSH",
+        "TAG_PULL",
+        "TAG_GONE",
+        "share value 0x01",
+        "`dec_stats`",
+        "`enc_stats`",
+    ] {
+        assert!(
+            v.iter().any(|f| f.message.contains(needle)),
+            "missing finding for {needle}: {v:?}"
+        );
+    }
+}
+
+#[test]
+fn flow_rules_respect_test_regions_and_escapes() {
+    // the same leak inside #[cfg(test)] is exempt (tests drop writers
+    // to simulate crashes)...
+    let in_tests = "\
+#[cfg(test)]
+mod tests {
+    fn leak(store: &Tls) -> Result<(), Error> {
+        let w = store.create(\"k\")?;
+        Ok(())
+    }
+}
+";
+    assert!(lint_source("storage/spill.rs", in_tests, &registry()).is_empty());
+    // ...and a justified escape suppresses a finding in library code
+    let leak = "\
+fn abandon_on_shutdown(store: &Tls) -> Result<(), Error> {
+    let w = store.create(\"k\")?;
+    w.probe()?;
+    Ok(())
+}
+";
+    assert!(!lint_source("storage/spill.rs", leak, &registry()).is_empty());
+    let escaped = "\
+fn abandon_on_shutdown(store: &Tls) -> Result<(), Error> {
+    // lint:allow(writer-typestate): shutdown probe — Drop cleans the
+    // staging area and recovery reaps anything it leaves behind
+    let w = store.create(\"k\")?;
+    w.probe()?;
+    Ok(())
+}
+";
+    assert!(lint_source("storage/spill.rs", escaped, &registry()).is_empty());
+}

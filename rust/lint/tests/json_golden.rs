@@ -1,0 +1,120 @@
+//! Golden-snapshot tests pinning the machine-readable output
+//! surfaces: the `--json` schema (field names, rule ids, severity
+//! values) and the `--github` workflow-command format. CI archives
+//! `--json` output and annotates PRs from `--github` output, so any
+//! change here is a breaking change for downstream parsers — update
+//! the goldens deliberately, never incidentally.
+
+use tlstore_lint::{rules, to_github, to_json, Finding};
+
+/// The complete rule-id vocabulary, pinned. A new rule lands here
+/// (and in docs/STATIC_ANALYSIS.md) in the same change that adds it.
+#[test]
+fn rule_ids_are_pinned() {
+    assert_eq!(
+        rules::RULES,
+        [
+            "no-panic",
+            "no-discarded-cleanup",
+            "decoder-must-finish",
+            "reserved-prefix",
+            "forget-outside-fault",
+            "no-println",
+            "writer-typestate",
+            "lock-order",
+            "wire-complete",
+            "lint-allow",
+        ]
+    );
+}
+
+fn sample() -> Vec<Finding> {
+    vec![
+        Finding {
+            file: "storage/tls.rs".to_string(),
+            line: 42,
+            rule: "no-panic",
+            severity: "error",
+            message: "`.unwrap()` in library code".to_string(),
+        },
+        Finding {
+            file: "storage/spill.rs".to_string(),
+            line: 7,
+            rule: "writer-typestate",
+            severity: "warning",
+            message: "writer `w` reaches commit/abort on only some paths".to_string(),
+        },
+        Finding {
+            file: "cluster/wire.rs".to_string(),
+            line: 3,
+            rule: "wire-complete",
+            severity: "error",
+            message: "escapes: \"quote\", back\\slash,\nnewline, 100%".to_string(),
+        },
+    ]
+}
+
+/// The full `--json` rendering, byte for byte. Every object carries
+/// exactly `file`, `line`, `rule`, `severity`, `message`, in that
+/// order; severities are `error` or `warning`.
+#[test]
+fn json_output_matches_golden() {
+    let golden = concat!(
+        "[\n",
+        "  {\"file\": \"storage/tls.rs\", \"line\": 42, \"rule\": \"no-panic\", ",
+        "\"severity\": \"error\", \"message\": \"`.unwrap()` in library code\"},\n",
+        "  {\"file\": \"storage/spill.rs\", \"line\": 7, \"rule\": \"writer-typestate\", ",
+        "\"severity\": \"warning\", \"message\": \"writer `w` reaches commit/abort on only some paths\"},\n",
+        "  {\"file\": \"cluster/wire.rs\", \"line\": 3, \"rule\": \"wire-complete\", ",
+        "\"severity\": \"error\", \"message\": \"escapes: \\\"quote\\\", back\\\\slash,\\nnewline, 100%\"}\n",
+        "]"
+    );
+    assert_eq!(to_json(&sample()), golden);
+}
+
+#[test]
+fn json_of_no_findings_is_an_empty_array() {
+    assert_eq!(to_json(&[]), "[\n\n]");
+}
+
+/// `--github` emits one workflow command per finding; severity maps
+/// to the command name, properties are %-escaped, and the path prefix
+/// makes annotations repo-relative.
+#[test]
+fn github_output_matches_golden() {
+    let s = sample();
+    assert_eq!(
+        to_github(&s[0], "rust/src"),
+        "::error file=rust/src/storage/tls.rs,line=42,title=tlstore-lint no-panic\
+         ::`.unwrap()` in library code"
+    );
+    assert_eq!(
+        to_github(&s[1], "rust/src/"),
+        "::warning file=rust/src/storage/spill.rs,line=7,title=tlstore-lint writer-typestate\
+         ::writer `w` reaches commit/abort on only some paths"
+    );
+    // message escaping: % → %25, newline → %0A; property escaping
+    // additionally covers `,` and `:`
+    assert_eq!(
+        to_github(&s[2], ""),
+        "::error file=cluster/wire.rs,line=3,title=tlstore-lint wire-complete\
+         ::escapes: \"quote\", back\\slash,%0Anewline, 100%25"
+    );
+}
+
+/// A finding with `,`/`:` in its path cannot break the property
+/// syntax.
+#[test]
+fn github_property_escaping() {
+    let f = Finding {
+        file: "weird,name:x.rs".to_string(),
+        line: 1,
+        rule: "no-panic",
+        severity: "error",
+        message: "m".to_string(),
+    };
+    assert_eq!(
+        to_github(&f, ""),
+        "::error file=weird%2Cname%3Ax.rs,line=1,title=tlstore-lint no-panic::m"
+    );
+}

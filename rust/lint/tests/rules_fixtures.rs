@@ -1,7 +1,10 @@
-//! Per-rule fixture tests: each rule has one violating and one clean
-//! fixture under `tests/fixtures/<rule>/`. The violating fixture must
-//! produce findings of exactly that rule (no false positives from the
-//! other six); the clean fixture must produce none at all.
+//! Per-rule fixture tests for the *token-pattern* rules: each rule
+//! has one violating and one clean fixture under
+//! `tests/fixtures/<rule>/`. The violating fixture must produce
+//! findings of exactly that rule (no false positives from the
+//! others); the clean fixture must produce none at all. The
+//! flow-aware rules are exercised the same way in
+//! `tests/flow_fixtures.rs`.
 //!
 //! Fixtures are plain `.rs` files fed to the engine under a *virtual*
 //! relative path (third column below) because path-based exemptions —
@@ -116,22 +119,6 @@ fn no_println_fixtures() {
         ),
         ("coordinator/mod.rs", include_str!("fixtures/no_println/clean.rs")),
         2, // println! and eprintln!
-    );
-}
-
-#[test]
-fn one_shard_lock_fixtures() {
-    check(
-        "one-shard-lock",
-        (
-            "storage/memstore.rs",
-            include_str!("fixtures/one_shard_lock/violating.rs"),
-        ),
-        (
-            "storage/memstore.rs",
-            include_str!("fixtures/one_shard_lock/clean.rs"),
-        ),
-        1,
     );
 }
 

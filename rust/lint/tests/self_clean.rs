@@ -1,22 +1,27 @@
-//! The self-clean gate: the real tlstore source tree must lint clean.
+//! The self-clean gate: the real tlstore source tree — and the
+//! linter's own source — must lint clean, and the flow analyses must
+//! demonstrably run against the real tree (a lock graph with the
+//! known classes, a wire tag map matching `cluster/wire.rs`) rather
+//! than vacuously passing on empty inputs.
 //!
 //! This is the test CI's `static-analysis` lane leans on — any new
-//! violation of the seven contracts (or any `lint:allow` escape with
-//! a missing justification or unknown rule name) fails the build with
+//! violation of the contracts (or any `lint:allow` escape with a
+//! missing justification or unknown rule name) fails the build with
 //! the full finding list.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use tlstore_lint::lint_tree;
+use tlstore_lint::{lint_tree, lint_tree_report};
 
-#[test]
-fn tlstore_source_tree_lints_clean() {
-    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
-    assert!(src.join("lib.rs").is_file(), "expected tlstore at {src:?}");
-    let findings = lint_tree(&src).expect("walk rust/src");
+fn tlstore_src() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+}
+
+fn assert_clean(root: &Path) {
+    let findings = lint_tree(root).expect("walk source tree");
     assert!(
         findings.is_empty(),
-        "rust/src has {} lint finding(s):\n{}",
+        "{root:?} has {} lint finding(s):\n{}",
         findings.len(),
         findings
             .iter()
@@ -27,11 +32,112 @@ fn tlstore_source_tree_lints_clean() {
 }
 
 #[test]
+fn tlstore_source_tree_lints_clean() {
+    let src = tlstore_src();
+    assert!(src.join("lib.rs").is_file(), "expected tlstore at {src:?}");
+    assert_clean(&src);
+}
+
+/// Self-hosting: the linter's own source holds to the same contracts
+/// it enforces (panic-free, no prints, honest escapes).
+#[test]
+fn lint_source_tree_lints_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    assert!(src.join("lib.rs").is_file(), "expected tlstore-lint at {src:?}");
+    assert_clean(&src);
+}
+
+/// The lock-order pass must assemble its graph from the *real*
+/// `storage/` + `cluster/` sources: the known lock classes of both
+/// subsystems appear, dozens of acquisition sites are registered, and
+/// the graph is acyclic (the gate above already fails on cycle
+/// findings; this pins that the analysis saw the locks at all).
+#[test]
+fn lock_graph_is_built_from_the_real_tree() {
+    let (findings, report) = lint_tree_report(&tlstore_src()).expect("walk rust/src");
+    assert!(findings.is_empty(), "{findings:?}");
+
+    let lock = &report.lock;
+    for class in [
+        // storage tier
+        "storage/memstore.rs::shard",
+        "storage/tls.rs::dirty",
+        "storage/tls.rs::objects",
+        "storage/buffer.rs::free",
+        "storage/fault.rs::triggers",
+        // cluster tier
+        "cluster/remote.rs::conns",
+        "cluster/transport.rs::state",
+        "cluster/transport.rs::net",
+    ] {
+        assert!(
+            lock.classes.iter().any(|c| c == class),
+            "lock class `{class}` missing from graph: {:?}",
+            lock.classes
+        );
+    }
+    assert!(
+        lock.sites >= 30,
+        "implausibly few acquisition sites ({}) — scanner regression?",
+        lock.sites
+    );
+    assert!(
+        lock.files.iter().any(|f| f.starts_with("storage/"))
+            && lock.files.iter().any(|f| f.starts_with("cluster/")),
+        "graph must draw from both storage/ and cluster/: {:?}",
+        lock.files
+    );
+}
+
+/// The wire-complete pass must pin the live tag map from
+/// `cluster/wire.rs` — names, coverage, and distinct values come from
+/// the parsed source, not a hardcoded copy.
+#[test]
+fn wire_tag_map_is_pinned_from_the_live_source() {
+    let (findings, report) = lint_tree_report(&tlstore_src()).expect("walk rust/src");
+    assert!(findings.is_empty(), "{findings:?}");
+
+    let wire = report
+        .wire
+        .iter()
+        .find(|w| w.file == "cluster/wire.rs")
+        .expect("cluster/wire.rs must produce a wire report");
+    assert!(
+        wire.tags.len() >= 20,
+        "expected the full tag namespace, got {} tags",
+        wire.tags.len()
+    );
+    for name in ["TAG_HELLO", "TAG_PUT", "TAG_ERR_REPLY", "TAG_TASK_FAIL"] {
+        assert!(
+            wire.tags.iter().any(|(n, _)| n == name),
+            "tag `{name}` missing from the parsed map: {:?}",
+            wire.tags
+        );
+    }
+    // every tag is reachable from both dispatchers...
+    for (name, _) in &wire.tags {
+        assert!(
+            wire.encoded.iter().any(|n| n == name),
+            "tag `{name}` unreachable from encode"
+        );
+        assert!(
+            wire.decoded.iter().any(|n| n == name),
+            "tag `{name}` unreachable from decode"
+        );
+    }
+    // ...and every tag value is distinct on the wire
+    let mut values: Vec<&str> = wire.tags.iter().map(|(_, v)| v.as_str()).collect();
+    values.sort_unstable();
+    let before = values.len();
+    values.dedup();
+    assert_eq!(before, values.len(), "duplicate tag values in {:?}", wire.tags);
+}
+
+#[test]
 fn registry_is_parsed_from_layout_not_fallback() {
     // the engine must read RESERVED_PREFIXES from the real layout.rs
     // (the fallback list going stale should not mask a drifted layout)
-    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
-    let layout = std::fs::read_to_string(src.join("storage").join("layout.rs"))
+    let layout = std::fs::read_to_string(tlstore_src().join("storage").join("layout.rs"))
         .expect("read storage/layout.rs");
     let parsed = tlstore_lint::parse_registry(&layout).expect("parse RESERVED_PREFIXES");
     assert!(
