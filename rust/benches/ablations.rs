@@ -233,6 +233,48 @@ fn handle_sweep(b: &Bencher) {
     println!("{}   [alloc/op: 0 B]", m.report());
 }
 
+/// Batched-append ablation: many 4 KiB appends streamed through one
+/// write-through writer, with the store-level coalescing threshold
+/// (`append_coalesce`) swept from off to 1 MiB. Coalescing trades one
+/// `carry` memcpy per small chunk for far fewer striped fan-outs — the
+/// same knob the overlap A/B (`tlstore bench overlap`) turns on.
+fn coalesce_sweep(b: &Bencher) {
+    println!("\n== ablation: append coalescing threshold (4 KiB appends, write-through) ==");
+    header();
+    const SIZE: usize = 4 << 20;
+    const CHUNK: usize = 4 << 10;
+    for coalesce in [0usize, 64 << 10, 256 << 10, 1 << 20] {
+        let dir = TempDir::new("abl-coalesce").unwrap();
+        let cfg = TlsConfig::builder(dir.path())
+            .mem_capacity(64 << 20)
+            .block_size(1 << 20)
+            .pfs_servers(4)
+            .stripe_size(512 << 10)
+            .append_coalesce(coalesce)
+            .build()
+            .unwrap();
+        let store = TwoLevelStore::open(cfg).unwrap();
+        let payload = data(SIZE, coalesce as u64 + 9);
+        let label = if coalesce == 0 {
+            "append-through (coalesce off)".to_string()
+        } else {
+            format!("coalesce={}", fmt_bytes(coalesce as u64))
+        };
+        let mut i = 0u64;
+        let m = b.iter(&label, Some(SIZE as u64), || {
+            i += 1;
+            let mut w = store
+                .create_with(&format!("c{}", i % 4), WriteMode::WriteThrough)
+                .unwrap();
+            for chunk in payload.chunks(CHUNK) {
+                w.append(chunk).unwrap();
+            }
+            w.commit().unwrap();
+        });
+        println!("{}", m.report());
+    }
+}
+
 fn main() {
     let b = Bencher::default();
     buffer_sweep(&b);
@@ -240,6 +282,7 @@ fn main() {
     eviction_sweep();
     checksum_sweep(&b);
     handle_sweep(&b);
+    coalesce_sweep(&b);
 
     // structural cross-check (the tuning metric of §3.1)
     println!("\nservers-per-block metric (ideal = engage all servers):");

@@ -12,6 +12,8 @@
 
 #![allow(clippy::print_stdout, clippy::print_stderr)]
 
+/// The `bench overlap` runner (overlap knobs A/B, `BENCH_overlap.json`).
+pub mod overlap;
 /// The `bench parity` runner (models vs measured runs).
 pub mod parity;
 

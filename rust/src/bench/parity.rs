@@ -45,7 +45,7 @@ impl Default for ParityRunOptions {
 }
 
 /// JSON number: finite floats at millis precision, `null` otherwise.
-fn jnum(x: f64) -> String {
+pub(crate) fn jnum(x: f64) -> String {
     if x.is_finite() {
         format!("{x:.3}")
     } else {

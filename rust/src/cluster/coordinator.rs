@@ -266,8 +266,24 @@ pub struct WorkerIo {
     /// Remote-PFS-tier write traffic (empty when the worker runs
     /// untiered).
     pub remote_write: IoStat,
+    /// Wall seconds of the tiered tasks behind the four stats above
+    /// (zero when the worker runs untiered).
+    pub tier_wall_secs: f64,
     /// Tasks this worker completed (winning attempts only).
     pub tasks: usize,
+}
+
+impl WorkerIo {
+    /// Storage busy-seconds summed over both tiers and directions.
+    pub fn tier_busy_secs(&self) -> f64 {
+        self.mem_read.secs + self.remote_read.secs + self.mem_write.secs + self.remote_write.secs
+    }
+
+    /// Overlap efficiency of this worker's tiered tasks — storage
+    /// busy-seconds per wall-second — or `None` for untiered workers.
+    pub fn overlap_efficiency(&self) -> Option<f64> {
+        (self.tier_wall_secs > 0.0).then(|| self.tier_busy_secs() / self.tier_wall_secs)
+    }
 }
 
 /// Record one tier's task I/O, skipping tiers the task never touched.
@@ -860,6 +876,7 @@ fn handle_conn(inner: Arc<CoordInner>, mut conn: Box<dyn Conn>) {
                         tier_io.remote_write_bytes,
                         tier_io.remote_write_micros,
                     );
+                    io.tier_wall_secs += tier_io.wall_micros as f64 / 1e6;
                 }
                 inner.cv.notify_all();
                 None
@@ -1111,6 +1128,10 @@ mod tests {
         let mut io = WorkerIo::default();
         io.mem_read.record(1.0, 3_000_000, 0.1);
         io.remote_read.record(1.0, 1_000_000, 0.5);
+        assert_eq!(io.overlap_efficiency(), None, "no wall recorded yet");
+        io.tier_wall_secs = 1.2;
+        let eff = io.overlap_efficiency().unwrap();
+        assert!((eff - 0.5).abs() < 1e-9, "busy 0.6s over wall 1.2s, got {eff}");
         let report = ClusterReport {
             job_id: "job-t".into(),
             epoch: 0,

@@ -146,12 +146,34 @@ pub struct TierIo {
     pub remote_write_bytes: u64,
     /// Busy-microseconds of remote-tier writes.
     pub remote_write_micros: u64,
+    /// Wall microseconds of the task that produced this accounting —
+    /// `busy_micros() / wall_micros` is the task's overlap efficiency
+    /// (how much of its lifetime the storage planes were kept busy).
+    /// Zero from untiered workers, whose accounting is all-zero.
+    pub wall_micros: u64,
 }
 
 impl TierIo {
     /// True when no tiered traffic was recorded.
     pub fn is_empty(&self) -> bool {
         *self == TierIo::default()
+    }
+
+    /// Storage busy-microseconds summed over both tiers and directions.
+    pub fn busy_micros(&self) -> u64 {
+        self.mem_read_micros
+            + self.remote_read_micros
+            + self.mem_write_micros
+            + self.remote_write_micros
+    }
+
+    /// Storage busy-time per wall-second of the reporting task; `0.0`
+    /// until a wall time was recorded.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.wall_micros == 0 {
+            return 0.0;
+        }
+        self.busy_micros() as f64 / self.wall_micros as f64
     }
 }
 
@@ -164,6 +186,7 @@ fn enc_tier_io(e: &mut Enc, t: &TierIo) {
     e.u64(t.mem_write_micros);
     e.u64(t.remote_write_bytes);
     e.u64(t.remote_write_micros);
+    e.u64(t.wall_micros);
 }
 
 fn dec_tier_io(d: &mut Dec<'_>) -> Result<TierIo> {
@@ -176,6 +199,7 @@ fn dec_tier_io(d: &mut Dec<'_>) -> Result<TierIo> {
         mem_write_micros: d.u64("tier.mem_write_micros")?,
         remote_write_bytes: d.u64("tier.remote_write_bytes")?,
         remote_write_micros: d.u64("tier.remote_write_micros")?,
+        wall_micros: d.u64("tier.wall_micros")?,
     })
 }
 
@@ -984,6 +1008,7 @@ mod tests {
                     mem_write_micros: 20,
                     remote_write_bytes: 4096,
                     remote_write_micros: 500,
+                    wall_micros: 999,
                 },
             },
             Message::TaskFail {

@@ -200,15 +200,23 @@ impl Worker {
                     let started = Instant::now();
                     let task_id = spec.task_id;
                     match self.execute(&spec) {
-                        Ok(out) => {
+                        Ok(mut out) => {
                             summary.tasks_done += 1;
+                            let micros = started.elapsed().as_micros() as u64;
+                            if !out.tier.is_empty() {
+                                // busy ÷ wall is the task's overlap
+                                // efficiency; untiered workers keep the
+                                // all-zero accounting the coordinator
+                                // leaves out of the tier timelines
+                                out.tier.wall_micros = micros;
+                            }
                             conn.send(&Message::TaskDone {
                                 worker_id,
                                 task_id,
                                 spills: out.spills,
                                 bytes_read: out.bytes_read,
                                 bytes_written: out.bytes_written,
-                                micros: started.elapsed().as_micros() as u64,
+                                micros,
                                 tier_io: out.tier,
                             })?;
                         }

@@ -90,6 +90,18 @@ pub struct EngineConfig {
     /// Window size (bytes) for shuffle spill writes and reducer merge
     /// reads; must be > 0.
     pub shuffle_chunk: u64,
+    /// Splits each map task prefetches ahead of itself on the shared
+    /// worker pool, and the switch for eager shuffle priming (reducers
+    /// get spill first-windows read during the map phase). `0` (the
+    /// default) disables the overlap layer entirely — the pipeline
+    /// reads, spills, and merges exactly as before.
+    pub overlap_depth: usize,
+    /// Coalesce writer appends smaller than this many bytes into one
+    /// carry buffer, flushing on the threshold and at commit (applies
+    /// to the PFS, HDFS-like, and two-level writer paths). `0` (the
+    /// default) appends through untouched — every `append` hits the
+    /// backend as issued.
+    pub append_coalesce: u64,
     /// Fractional tolerance band of the model-parity harness
     /// (`tlstore bench parity`): a measured phase passes when
     /// `max(measured/predicted, predicted/measured) ≤ 1 + parity_tolerance`.
@@ -132,6 +144,8 @@ impl Default for EngineConfig {
             max_concurrent_jobs: 0, // auto: sized off mem_capacity
             shuffle_spill_threshold: 0, // spill everything through the tiers
             shuffle_chunk: 1 << 20,
+            overlap_depth: 0,   // overlap layer off: historical pipeline
+            append_coalesce: 0, // append-through: historical writers
             parity_tolerance: 2.5, // within 3.5× (see the field docs)
 
             artifacts_dir: PathBuf::from("artifacts"),
@@ -217,6 +231,17 @@ impl EngineConfig {
         }
         if let Some(v) = get_bytes("shuffle_chunk")? {
             cfg.shuffle_chunk = v;
+        }
+        if let Some(v) = engine.get("overlap_depth").and_then(Value::as_int) {
+            if v < 0 {
+                return Err(Error::Config(format!(
+                    "overlap_depth must be >= 0 (0 = off), got {v}"
+                )));
+            }
+            cfg.overlap_depth = v as usize;
+        }
+        if let Some(v) = get_bytes("append_coalesce")? {
+            cfg.append_coalesce = v;
         }
         match engine.get("parity_tolerance") {
             None => {}
@@ -581,6 +606,28 @@ eviction = "lfu"
         assert!(EngineConfig::from_toml_str("[engine]\nmax_concurrent_jobs = -1\n").is_err());
         // 0 threshold is legal (it is the default)
         EngineConfig::from_toml_str("[engine]\nshuffle_spill_threshold = 0\n").unwrap();
+    }
+
+    #[test]
+    fn overlap_knobs_parse_and_validate() {
+        let cfg = EngineConfig::from_toml_str(
+            "[engine]\noverlap_depth = 2\nappend_coalesce = \"256k\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.overlap_depth, 2);
+        assert_eq!(cfg.append_coalesce, 256 << 10);
+        // defaults: both off — historical pipeline and writers
+        let cfg = EngineConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.overlap_depth, 0);
+        assert_eq!(cfg.append_coalesce, 0);
+        // invalid values
+        assert!(EngineConfig::from_toml_str("[engine]\noverlap_depth = -1\n").is_err());
+        assert!(
+            EngineConfig::from_toml_str("[engine]\nappend_coalesce = \"lots\"\n").is_err()
+        );
+        // 0 is legal for both (it is the default)
+        EngineConfig::from_toml_str("[engine]\noverlap_depth = 0\nappend_coalesce = 0\n")
+            .unwrap();
     }
 
     #[test]

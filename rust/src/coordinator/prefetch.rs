@@ -52,6 +52,28 @@ struct Cursor {
     run: u64,
 }
 
+/// Fetch one readahead block, tolerating a shrink-overwrite racing the
+/// window: the reader handle (and the geometry derived from it) snapshot
+/// the object size at `open`, so an in-flight fetch can land past the
+/// new EOF after a replacement commits. `read_at` then clamps (`Ok(0)`)
+/// or the replaced blocks are simply gone (`NotFound`). Readahead is
+/// advisory — the foreground bytes were already returned — so a
+/// vanished tail ends the fetch (`Ok(false)`) instead of surfacing a
+/// spurious error to the caller. Real device errors still propagate.
+fn fetch_block_tolerant(reader: &dyn ObjectReader, start: u64, len: usize) -> Result<bool> {
+    let mut scratch = vec![0u8; len];
+    let mut done = 0usize;
+    while done < len {
+        match reader.read_at(start + done as u64, &mut scratch[done..]) {
+            Ok(0) => return Ok(false),
+            Ok(n) => done += n,
+            Err(Error::NotFound(_)) => return Ok(false),
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
 /// Readahead manager over a [`TwoLevelStore`].
 pub struct Prefetcher {
     store: Arc<TwoLevelStore>,
@@ -151,8 +173,7 @@ impl Prefetcher {
                         .map(|&b| {
                             scope.spawn(move || {
                                 let (s, e) = geo.block_range(b);
-                                let mut scratch = vec![0u8; (e - s) as usize];
-                                read_full_at(reader_ref, s, &mut scratch)
+                                fetch_block_tolerant(reader_ref, s, (e - s) as usize)
                             })
                         })
                         .collect();
@@ -163,9 +184,12 @@ impl Prefetcher {
                             Err(Error::Job("prefetch fetch worker panicked".into()))
                         });
                         match joined {
-                            Ok(()) => {
+                            // an incomplete fetch (object shrank under the
+                            // window) is not an issue and not an error
+                            Ok(true) => {
                                 self.issued.fetch_add(1, Ordering::Relaxed);
                             }
+                            Ok(false) => {}
                             Err(e) => {
                                 if first_err.is_none() {
                                     first_err = Some(e);
@@ -277,6 +301,29 @@ mod tests {
         }
         // never panics / over-issues past the end
         assert!(pf.stats().issued <= 2, "{:?}", pf.stats());
+    }
+
+    #[test]
+    fn inflight_window_tolerates_a_shrink_overwrite() {
+        let dir = TempDir::new("pf-shrink").unwrap();
+        let store = mk(&dir);
+        let block: u64 = 16 << 10;
+        store.write("x", &body(256 << 10), WriteMode::Bypass).unwrap(); // 16 blocks
+        // The window plans against the size snapshotted at open…
+        let reader = store.open_with("x", crate::storage::ReadMode::TwoLevel).unwrap();
+        let old_size = reader.len();
+        assert_eq!(old_size, 256 << 10);
+        // …then a shrink-overwrite lands while the fetch is in flight.
+        store.write("x", &body(16 << 10), WriteMode::Bypass).unwrap(); // 1 block now
+        let geo = BlockGeometry::new(old_size, block).unwrap();
+        let (s, e) = geo.block_range(10); // far past the new EOF
+        let complete = fetch_block_tolerant(reader.as_ref(), s, (e - s) as usize)
+            .expect("a vanished tail block must not surface an error");
+        assert!(!complete, "fetch past the new EOF reports incomplete, not data");
+        // A block that still exists under the new version fetches fine.
+        let (s0, e0) = geo.block_range(0);
+        let complete = fetch_block_tolerant(reader.as_ref(), s0, (e0 - s0) as usize).unwrap();
+        assert!(complete, "surviving block still fetches completely");
     }
 
     #[test]

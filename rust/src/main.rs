@@ -60,6 +60,7 @@ fn open_tls(args: &Args, root: &std::path::Path, servers: usize) -> Result<TwoLe
             presets::tuning::default_mem_shards(),
         )?)
         .concurrent_writethrough(!args.has("sequential-writethrough"))
+        .append_coalesce(args.get_bytes("append-coalesce", 0)? as usize)
         .build()?;
     TwoLevelStore::open(cfg)
 }
@@ -68,18 +69,23 @@ fn open_store(args: &Args) -> Result<Arc<dyn ObjectStore>> {
     let backend = Backend::parse(&args.get("backend", "tls"))?;
     let root = PathBuf::from(args.get("root", "/tmp/tlstore"));
     let servers = args.get_parse("pfs-servers", 4usize)?;
+    let coalesce = args.get_bytes("append-coalesce", 0)? as usize;
     let store: Arc<dyn ObjectStore> = match backend {
         Backend::TwoLevel => Arc::new(open_tls(args, &root, servers)?),
-        Backend::Pfs => Arc::new(Pfs::open(
-            &root,
-            servers,
-            args.get_bytes("stripe-size", 1 << 20)?,
-        )?),
-        Backend::Hdfs => Arc::new(HdfsLike::open(
-            &root,
-            args.get_parse("nodes", 4usize)?,
-            args.get_parse("replication", 3usize)?,
-        )?),
+        Backend::Pfs => {
+            let mut pfs = Pfs::open(&root, servers, args.get_bytes("stripe-size", 1 << 20)?)?;
+            pfs.append_coalesce = coalesce;
+            Arc::new(pfs)
+        }
+        Backend::Hdfs => {
+            let mut hdfs = HdfsLike::open(
+                &root,
+                args.get_parse("nodes", 4usize)?,
+                args.get_parse("replication", 3usize)?,
+            )?;
+            hdfs.append_coalesce = coalesce;
+            Arc::new(hdfs)
+        }
     };
     // fault-injection harness: wrap the store so the plan's triggers fire
     // on the real API surface (crash-recovery drills, robustness demos)
@@ -146,6 +152,7 @@ fn cmd_terasort(args: &Args) -> Result<()> {
     let reducers = args.get_parse("reducers", 4u32)?;
     let split = args.get_bytes("split-size", 8 << 20)?;
     let workers = args.get_parse("workers", 0usize)?;
+    let overlap_depth = args.get_parse("overlap-depth", 0usize)?;
     let in_prefix = args.get("prefix", "in/");
     let out_prefix = args.get("out", "out/");
     args.finish()?;
@@ -160,6 +167,7 @@ fn cmd_terasort(args: &Args) -> Result<()> {
             workers,
             containers_per_node: workers,
             max_concurrent_jobs: 1,
+            overlap_depth,
             ..JobServerConfig::default()
         },
     );
@@ -188,12 +196,22 @@ fn cmd_terasort(args: &Args) -> Result<()> {
 
 /// `tlstore bench parity [--smoke]` — run the model-parity harness and
 /// emit `BENCH_fig7.json` / `BENCH_fig5.json` (see `bench::parity`).
+/// `tlstore bench overlap [--smoke]` — A/B the overlap knobs and emit
+/// `BENCH_overlap.json` (see `bench::overlap`).
 fn cmd_bench(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
+        Some("overlap") => {
+            let opts = tlstore::bench::overlap::OverlapRunOptions {
+                smoke: args.has("smoke"),
+                out_dir: std::path::PathBuf::from(args.get("out-dir", ".")),
+            };
+            args.finish()?;
+            return tlstore::bench::overlap::run(&opts);
+        }
         Some("parity") | None => {}
         Some(other) => {
             return Err(Error::InvalidArg(format!(
-                "unknown bench subcommand `{other}` (try: parity)"
+                "unknown bench subcommand `{other}` (try: parity|overlap)"
             )))
         }
     }
@@ -406,6 +424,7 @@ fn cmd_job_submit(args: &Args) -> Result<()> {
             )?,
             shuffle_spill_threshold: args.get_bytes("spill-threshold", 0)?,
             shuffle_chunk: args.get_bytes("shuffle-chunk", 1 << 20)? as usize,
+            overlap_depth: args.get_parse("overlap-depth", 0usize)?,
             ..JobServerConfig::default()
         };
         (store, cfg)
@@ -756,6 +775,16 @@ fn cmd_cluster_coordinator(args: &Args) -> Result<()> {
             f
         );
     }
+    for (id, io) in &report.per_worker {
+        if let Some(eff) = io.overlap_efficiency() {
+            println!(
+                "w{id} overlap: {:.2} busy-s/wall-s ({:.3} s storage busy over {:.3} s of tiered tasks)",
+                eff,
+                io.tier_busy_secs(),
+                io.tier_wall_secs
+            );
+        }
+    }
     let timelines = report.timelines();
     if !timelines.series.is_empty() {
         print!("{}", timelines.render(40));
@@ -846,6 +875,8 @@ fn usage() -> String {
      pfs-server exports a striped store; see docs/ARCHITECTURE.md \"cluster plane\");\n\
      `tlstore bench parity [--smoke]` measures TeraSort + both workloads on all four\n\
      backends against the paper's \u{a7}4 models and writes BENCH_fig7.json/BENCH_fig5.json;\n\
+     `tlstore bench overlap [--smoke]` A/Bs the hot-path overlap knobs (--overlap-depth\n\
+     on terasort/job, --append-coalesce on stores) and writes BENCH_overlap.json;\n\
      storage commands accept --fault-plan \"op=commit,kind=crash,...\" (fault drills)\n\
      and `tlstore recover --root DIR --backend tls|pfs|hdfs` repairs a crashed root;\n\
      see `tlstore <cmd> --help` equivalents in README.md"

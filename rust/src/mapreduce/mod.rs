@@ -31,6 +31,8 @@
 
 /// The map/reduce execution engine driven by the scheduler.
 pub mod engine;
+/// Double-buffered split reads + eager shuffle priming (`overlap_depth`).
+pub(crate) mod overlap;
 /// Multi-stage pipeline specs + the dataflow that chains jobs.
 pub mod pipeline;
 /// Locality-aware split scheduling over simulated nodes.

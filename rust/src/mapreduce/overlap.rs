@@ -1,0 +1,405 @@
+//! Overlap layer: keep the storage plane busy while the compute plane
+//! chews.
+//!
+//! Two cooperating pieces, both opt-in via the `overlap_depth` knob
+//! (`0` = fully disabled, byte-identical to the non-overlapped pipeline):
+//!
+//! * [`DoubleBufferedSplitReader`] — while a map task processes split
+//!   *N*, the reads for splits *N+1 … N+depth* are issued on the shared
+//!   [`ThreadPool`], so the split fetch of the next task hides under the
+//!   mapper compute of the current one. Buffers come from the shared
+//!   [`BufferPool`] (detached, recycled after the mapper consumes them),
+//!   and the record-aligned split boundaries planned by
+//!   `map_with_split` are honored unchanged — the reader moves *when* a
+//!   split is read, never *what* is read.
+//! * [`SpillPrimer`] — as map tasks commit spill runs, their keys are
+//!   fed through a bounded channel to one dedicated thread that opens
+//!   each run and reads its header + first merge window. Reducers then
+//!   start their k-way merge from the primed prefix
+//!   ([`SpillCursor::open_primed`](super::spill::SpillCursor::open_primed))
+//!   instead of paying a cold open + first window read at the phase
+//!   barrier.
+//!
+//! **Deadlock discipline.** Prefetches run on the *shared* pool, so a
+//! map task must never block on a prefetch that is merely queued behind
+//! other map tasks — that cycle deadlocks the pool. The slot state
+//! machine enforces it: a consumer waits only on a slot in `Fetching`
+//! (its read is actively executing on a worker and will complete
+//! without needing another worker); a slot still `Scheduled` (queued,
+//! not started) is *claimed* — the consumer reads it synchronously and
+//! the stale queued closure becomes a no-op. The primer is a dedicated
+//! `std::thread` for the same reason: it blocks on `recv`, which a
+//! pool worker must never do.
+//!
+//! **Backpressure bounds.** At most `wave_width × depth` prefetched
+//! split buffers exist beyond the ones consumers hold, and the primer
+//! channel holds at most `depth × containers` keys — map tasks
+//! `try_send` and skip when it is full (priming is opportunistic; a
+//! skipped run is simply cold-opened by its reducer).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::metrics::timeline::IoStat;
+use crate::storage::buffer::BufferPool;
+use crate::storage::{read_full_at, ObjectStore};
+use crate::util::pool::ThreadPool;
+
+use super::spill::SPILL_HEADER;
+use super::InputSplit;
+
+/// Read one split through a v2 reader into a detached pool buffer,
+/// clamping at EOF exactly like the inline map path (an object that
+/// shrank since planning yields the surviving prefix, not an error).
+/// Returns `(data, bytes_read, busy_secs)`; the buffer is sized before
+/// the timed span so only open + read count as storage busy time.
+pub(crate) fn read_split(
+    store: &dyn ObjectStore,
+    buffers: &BufferPool,
+    split: &InputSplit,
+) -> Result<(Vec<u8>, u64, f64)> {
+    let mut data = buffers.take_detached();
+    data.resize(split.len as usize, 0);
+    let io_t = Instant::now();
+    let reader = store.open(&split.object)?;
+    let end = (split.offset + split.len).min(reader.len());
+    let take = end.saturating_sub(split.offset) as usize;
+    data.truncate(take); // object shrank since planning: clamp
+    read_full_at(reader.as_ref(), split.offset, &mut data)?;
+    drop(reader);
+    Ok((data, take as u64, io_t.elapsed().as_secs_f64()))
+}
+
+/// Lifecycle of one split's prefetch slot. Transitions:
+/// `Idle → Scheduled → Fetching → Ready → Taken` on the happy path;
+/// `Scheduled → Taken` when the consumer claims a queued-but-unstarted
+/// prefetch (synchronous fallback); `Fetching → Failed → Taken` when
+/// the background read errors.
+enum Slot {
+    /// No prefetch issued yet.
+    Idle,
+    /// A prefetch closure is queued on the pool but has not started.
+    Scheduled,
+    /// A pool worker is actively reading this split.
+    Fetching,
+    /// Prefetch complete: data plus its measured I/O.
+    Ready { data: Vec<u8>, bytes: u64, secs: f64 },
+    /// Prefetch failed; the consumer surfaces the error.
+    Failed(Error),
+    /// Consumed (or claimed) by its map task.
+    Taken,
+}
+
+/// Double-buffered split reads: `take(k)` returns split `k` (in
+/// execution order) and schedules prefetches for the next `depth`
+/// positions on the shared pool. See the module docs for the blocking
+/// discipline that keeps the shared pool deadlock-free.
+pub(crate) struct DoubleBufferedSplitReader {
+    store: Arc<dyn ObjectStore>,
+    pool: Arc<ThreadPool>,
+    buffers: Arc<BufferPool>,
+    splits: Arc<Vec<InputSplit>>,
+    /// Execution order from the locality scheduler: slot `k` holds
+    /// split `order[k]`.
+    order: Arc<Vec<usize>>,
+    depth: usize,
+    slots: Mutex<Vec<Slot>>,
+    ready: Condvar,
+}
+
+impl DoubleBufferedSplitReader {
+    pub(crate) fn new(
+        store: Arc<dyn ObjectStore>,
+        pool: Arc<ThreadPool>,
+        buffers: Arc<BufferPool>,
+        splits: Arc<Vec<InputSplit>>,
+        order: Arc<Vec<usize>>,
+        depth: usize,
+    ) -> Arc<Self> {
+        let slots = (0..order.len()).map(|_| Slot::Idle).collect();
+        Arc::new(Self {
+            store,
+            pool,
+            buffers,
+            splits,
+            order,
+            depth,
+            slots: Mutex::new(slots),
+            ready: Condvar::new(),
+        })
+    }
+
+    /// Queue a background read for order position `k` if it is still
+    /// idle. Caller holds the slot lock.
+    fn schedule(self: &Arc<Self>, slots: &mut [Slot], k: usize) {
+        if !matches!(slots[k], Slot::Idle) {
+            return;
+        }
+        slots[k] = Slot::Scheduled;
+        let this = Arc::clone(self);
+        self.pool.execute(move || this.fetch(k));
+    }
+
+    /// Body of a queued prefetch: promote `Scheduled → Fetching`, read
+    /// outside the lock, publish `Ready`/`Failed`. A slot the consumer
+    /// already claimed is left alone (no duplicate I/O).
+    fn fetch(self: &Arc<Self>, k: usize) {
+        {
+            let mut slots = self.slots.lock().unwrap();
+            match slots[k] {
+                Slot::Scheduled => slots[k] = Slot::Fetching,
+                _ => return, // claimed while queued: consumer read it
+            }
+        }
+        let split = &self.splits[self.order[k]];
+        let outcome = read_split(self.store.as_ref(), &self.buffers, split);
+        let mut slots = self.slots.lock().unwrap();
+        // still Fetching: consumers only wait on that state, never
+        // mutate it, so the slot is ours to publish
+        slots[k] = match outcome {
+            Ok((data, bytes, secs)) => Slot::Ready { data, bytes, secs },
+            Err(e) => Slot::Failed(e),
+        };
+        self.ready.notify_all();
+    }
+
+    /// Return split at order position `k` as `(data, bytes, busy_secs)`,
+    /// scheduling prefetches for the next `depth` positions first so
+    /// they overlap both this call and the caller's subsequent compute.
+    pub(crate) fn take(self: &Arc<Self>, k: usize) -> Result<(Vec<u8>, u64, f64)> {
+        let mut slots = self.slots.lock().unwrap();
+        let last = (k + self.depth).min(self.order.len().saturating_sub(1));
+        for ahead in (k + 1)..=last {
+            self.schedule(&mut slots, ahead);
+        }
+        loop {
+            match std::mem::replace(&mut slots[k], Slot::Taken) {
+                // not started: claim it and read synchronously — never
+                // wait on a closure that is queued behind map tasks
+                Slot::Idle | Slot::Scheduled => {
+                    drop(slots);
+                    let split = &self.splits[self.order[k]];
+                    return read_split(self.store.as_ref(), &self.buffers, split);
+                }
+                // actively executing on a worker: a bounded wait
+                Slot::Fetching => {
+                    slots[k] = Slot::Fetching;
+                    slots = self.ready.wait(slots).unwrap();
+                }
+                Slot::Ready { data, bytes, secs } => return Ok((data, bytes, secs)),
+                Slot::Failed(e) => return Err(e),
+                Slot::Taken => {
+                    return Err(Error::Job(format!(
+                        "overlap reader: split slot {k} taken twice"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+impl Drop for DoubleBufferedSplitReader {
+    /// Recycle prefetched-but-unconsumed buffers (a failed or canceled
+    /// stage stops consuming mid-order) back to the shared pool.
+    fn drop(&mut self) {
+        let mut slots = self.slots.lock().unwrap();
+        for slot in slots.iter_mut() {
+            if let Slot::Ready { data, .. } = std::mem::replace(slot, Slot::Taken) {
+                self.buffers.recycle(data);
+            }
+        }
+    }
+}
+
+/// Eager shuffle priming: one dedicated thread that receives spill-run
+/// keys as map tasks commit them, opens each run, and reads its header
+/// plus first merge window so reducers start merging from warm bytes.
+/// `finish()` drains the queue and returns the primed prefixes plus the
+/// I/O they performed (accounted to the reduce stage's read side).
+pub(crate) struct SpillPrimer {
+    tx: SyncSender<String>,
+    handle: std::thread::JoinHandle<(HashMap<String, Vec<u8>>, IoStat)>,
+}
+
+impl SpillPrimer {
+    /// Spawn the primer. `chunk` is the reducer merge window (the
+    /// primed prefix is `SPILL_HEADER + chunk` bytes, clamped at the
+    /// run's length); `bound` caps queued keys — senders skip, not
+    /// block, when full. `t0` anchors the primed samples' timeline.
+    pub(crate) fn start(
+        store: Arc<dyn ObjectStore>,
+        chunk: usize,
+        bound: usize,
+        t0: Instant,
+    ) -> Self {
+        let (tx, rx) = sync_channel::<String>(bound.max(1));
+        let window = SPILL_HEADER + chunk;
+        // dedicated thread, NOT pool.execute: this loop blocks on recv,
+        // which would wedge a shared worker for the whole map phase
+        let handle = std::thread::spawn(move || {
+            let mut primed: HashMap<String, Vec<u8>> = HashMap::new();
+            let mut io = IoStat::default();
+            while let Ok(key) = rx.recv() {
+                let io_t = Instant::now();
+                match prime_one(store.as_ref(), &key, window) {
+                    Ok(buf) => {
+                        io.record(
+                            t0.elapsed().as_secs_f64(),
+                            buf.len() as u64,
+                            io_t.elapsed().as_secs_f64(),
+                        );
+                        primed.insert(key, buf);
+                    }
+                    // priming is advisory: the reducer's cold open will
+                    // surface any real corruption with full context
+                    Err(_) => {}
+                }
+            }
+            (primed, io)
+        });
+        Self { tx, handle }
+    }
+
+    /// A sender for map tasks to feed (clone per closure). Senders must
+    /// `try_send` and treat a full queue as "skip this run".
+    pub(crate) fn sender(&self) -> SyncSender<String> {
+        self.tx.clone()
+    }
+
+    /// Drop our sender, drain the queue, and join the thread. Callers
+    /// must drop their own sender clones first (the map task closure
+    /// going out of scope does that) or this blocks forever.
+    pub(crate) fn finish(self) -> (HashMap<String, Vec<u8>>, IoStat) {
+        let SpillPrimer { tx, handle } = self;
+        drop(tx);
+        handle
+            .join()
+            .unwrap_or_else(|_| (HashMap::new(), IoStat::default()))
+    }
+}
+
+/// Read the first `window` bytes (clamped at EOF) of one spill run.
+fn prime_one(store: &dyn ObjectStore, key: &str, window: usize) -> Result<Vec<u8>> {
+    let reader = store.open(key)?;
+    let take = reader.len().min(window as u64) as usize;
+    let mut buf = vec![0u8; take];
+    read_full_at(reader.as_ref(), 0, &mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::spill::{spill_run, SpillCursor};
+    use crate::mapreduce::tests::test_store;
+    use crate::mapreduce::KV;
+
+    fn split(object: &str, offset: u64, len: u64) -> InputSplit {
+        InputSplit {
+            object: object.to_string(),
+            offset,
+            len,
+            preferred_node: None,
+        }
+    }
+
+    #[test]
+    fn double_buffered_reader_returns_every_split_in_order() {
+        let store: Arc<dyn ObjectStore> = Arc::new(test_store());
+        let mut want = Vec::new();
+        for i in 0..6u8 {
+            let body: Vec<u8> = (0..50).map(|b| b ^ (i * 7)).collect();
+            store.write(&format!("in/{i}"), &body).unwrap();
+            want.push(body);
+        }
+        let splits: Vec<InputSplit> =
+            (0..6).map(|i| split(&format!("in/{i}"), 0, 50)).collect();
+        // scrambled execution order: slot k reads splits[order[k]]
+        let order = vec![3usize, 0, 5, 1, 4, 2];
+        let reader = DoubleBufferedSplitReader::new(
+            Arc::clone(&store),
+            Arc::new(ThreadPool::new(3)),
+            Arc::new(BufferPool::new(64, 4)),
+            Arc::new(splits),
+            Arc::new(order.clone()),
+            2,
+        );
+        for (k, &task) in order.iter().enumerate() {
+            let (data, bytes, secs) = reader.take(k).unwrap();
+            assert_eq!(data, want[task], "slot {k}");
+            assert_eq!(bytes, 50);
+            assert!(secs >= 0.0);
+        }
+        // a slot never hands out data twice
+        assert!(reader.take(0).is_err());
+    }
+
+    #[test]
+    fn reader_clamps_when_an_object_shrinks_after_planning() {
+        let store: Arc<dyn ObjectStore> = Arc::new(test_store());
+        store.write("in/a", &[7u8; 40]).unwrap();
+        // planned against a 100-byte object that is now 40 bytes
+        let splits = vec![split("in/a", 0, 100)];
+        let reader = DoubleBufferedSplitReader::new(
+            Arc::clone(&store),
+            Arc::new(ThreadPool::new(2)),
+            Arc::new(BufferPool::new(64, 2)),
+            Arc::new(splits),
+            Arc::new(vec![0]),
+            1,
+        );
+        let (data, bytes, _) = reader.take(0).unwrap();
+        assert_eq!(bytes, 40);
+        assert_eq!(data, vec![7u8; 40]);
+    }
+
+    #[test]
+    fn primer_windows_match_cold_opens() {
+        let store: Arc<dyn ObjectStore> = Arc::new(test_store());
+        let run: Vec<KV> = (0..40u32)
+            .map(|i| KV::new(format!("k{i:04}").as_bytes(), &i.to_le_bytes()))
+            .collect();
+        let m1 = spill_run(store.as_ref(), "r/one", &run, 64).unwrap();
+        let m2 = spill_run(store.as_ref(), "r/two", &run[..5], 64).unwrap();
+
+        let primer = SpillPrimer::start(Arc::clone(&store), 64, 8, Instant::now());
+        let tx = primer.sender();
+        tx.send(m1.key.clone()).unwrap();
+        tx.send(m2.key.clone()).unwrap();
+        drop(tx);
+        let (primed, io) = primer.finish();
+        assert_eq!(primed.len(), 2);
+        assert_eq!(io.samples.len(), 2);
+        assert!(io.bytes > 0 && io.secs >= 0.0);
+
+        // a cursor fed the primed prefix decodes identically to a cold one
+        for meta in [&m1, &m2] {
+            let win = primed.get(&meta.key).unwrap().clone();
+            let mut warm = SpillCursor::open_primed(store.as_ref(), &meta.key, 64, win).unwrap();
+            let mut cold = SpillCursor::open(store.as_ref(), &meta.key, 64).unwrap();
+            for _ in 0..meta.records {
+                assert_eq!(warm.next_kv().unwrap(), cold.next_kv().unwrap());
+            }
+            assert!(warm.next_kv().unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn primer_skips_unreadable_runs_without_failing() {
+        let store: Arc<dyn ObjectStore> = Arc::new(test_store());
+        store.write("r/ok", b"not-a-spill-but-readable").unwrap();
+        let primer = SpillPrimer::start(Arc::clone(&store), 32, 2, Instant::now());
+        let tx = primer.sender();
+        tx.send("r/ok".into()).unwrap();
+        tx.send("r/missing".into()).unwrap(); // open fails: skipped
+        drop(tx);
+        let (primed, _) = primer.finish();
+        // readable key primed (validation happens at cursor open, not
+        // here); unreadable key silently absent
+        assert!(primed.contains_key("r/ok"));
+        assert!(!primed.contains_key("r/missing"));
+    }
+}

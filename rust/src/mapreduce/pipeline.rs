@@ -24,6 +24,7 @@
 //! executor deletes `.shuffle/<job>/` before returning; a *crash* instead
 //! leaves residue for [`crate::storage::Recover::recover`] to reap.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -31,9 +32,10 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::metrics::timeline::{IoStat, TimelineSet};
 use crate::storage::buffer::BufferPool;
-use crate::storage::{read_full_at, ObjectStore, SHUFFLE_NS};
+use crate::storage::{ObjectStore, SHUFFLE_NS};
 use crate::util::pool::ThreadPool;
 
+use super::overlap::{self, DoubleBufferedSplitReader, SpillPrimer};
 use super::scheduler::{ContainerLedger, LocalityScheduler};
 use super::shuffle::{MergeIter, RunSource};
 use super::spill::{spill_run, SpillCursor, SpillMeta};
@@ -42,6 +44,10 @@ use super::{close_context, plan_splits, JobStats, MapContext, Mapper, Reducer, R
 /// Chunk size for streaming reducer output through an
 /// [`crate::storage::ObjectWriter`] (the paper's §3.2 app-side buffer).
 pub(crate) const OUTPUT_CHUNK: usize = 1 << 20;
+
+/// What the map phase's eager primer hands the reduce phase: first
+/// windows keyed by spill-run key, plus the I/O spent fetching them.
+type PrimedWindows = (HashMap<String, Vec<u8>>, IoStat);
 
 /// What a pipeline stage does.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -244,13 +250,30 @@ pub struct StageStats {
     /// Map only: bytes of those spill objects (header + payload).
     pub spilled_bytes: u64,
     /// Measured input-read I/O (map stages: split reads through the
-    /// storage handles — bytes plus busy seconds, per task). Empty for
-    /// reduce stages.
+    /// storage handles — bytes plus busy seconds, per task). For reduce
+    /// stages this holds the eager shuffle-prime reads when
+    /// `overlap_depth > 0`, and is empty otherwise.
     pub read_io: IoStat,
     /// Measured output-write I/O (reduce stages: partition streaming
     /// through writer handles, append through commit). Empty for map
     /// stages.
     pub write_io: IoStat,
+}
+
+impl StageStats {
+    /// Overlap efficiency: storage busy-seconds per wall-second of the
+    /// stage, `(read_io.secs + write_io.secs) / time`. With tasks
+    /// running serially against the store this tends toward the I/O
+    /// fraction of the stage; overlapped reads/primes/coalesced writes
+    /// push it up (parallel streams can exceed 1.0). `0.0` when the
+    /// stage recorded no wall time.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let wall = self.time.as_secs_f64();
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        (self.read_io.secs + self.write_io.secs) / wall
+    }
 }
 
 /// Whole-pipeline execution metrics, one [`StageStats`] per stage.
@@ -306,6 +329,20 @@ impl PipelineStats {
     /// eq. (2)/(3)/(6) predict for the reduce phase.
     pub fn reduce_write_io(&self) -> IoStat {
         self.stages.last().map(|s| s.write_io.clone()).unwrap_or_default()
+    }
+
+    /// Stage-0 overlap efficiency (the map phase's storage-busy share
+    /// of wall time — what the double-buffered reader is meant to
+    /// raise).
+    pub fn map_overlap_efficiency(&self) -> f64 {
+        self.stages.first().map_or(0.0, StageStats::overlap_efficiency)
+    }
+
+    /// Final-stage overlap efficiency (the reduce phase's storage-busy
+    /// share of wall time — raised by eager shuffle priming and
+    /// coalesced output appends).
+    pub fn reduce_overlap_efficiency(&self) -> f64 {
+        self.stages.last().map_or(0.0, StageStats::overlap_efficiency)
     }
 
     /// Per-stage read/write throughput timelines (normalized to each
@@ -368,7 +405,7 @@ impl PipelineStats {
         );
         for (i, st) in self.stages.iter().enumerate() {
             s.push_str(&format!(
-                " | s{i}:{} tasks={} {:.3}s in={}B out={}B rec={}",
+                " | s{i}:{} tasks={} {:.3}s in={}B out={}B rec={} ov={:.2}",
                 match st.kind {
                     StageKind::Map => "map",
                     StageKind::Reduce => "red",
@@ -377,7 +414,8 @@ impl PipelineStats {
                 st.time.as_secs_f64(),
                 st.bytes_in,
                 st.bytes_out,
-                st.records
+                st.records,
+                st.overlap_efficiency()
             ));
         }
         s
@@ -457,6 +495,11 @@ pub(crate) struct ExecCtx {
     pub spill_threshold: u64,
     /// Window size for spill writes and reducer merge reads.
     pub shuffle_chunk: usize,
+    /// Splits prefetched ahead of each map task on the shared pool,
+    /// and the trigger for eager shuffle priming (`0` = both off: the
+    /// pipeline reads, spills, and merges exactly as before, byte for
+    /// byte).
+    pub overlap_depth: usize,
     pub cancel: Arc<AtomicBool>,
     pub progress: Arc<ProgressState>,
 }
@@ -582,7 +625,7 @@ fn run_stages(ctx: &ExecCtx, spec: &PipelineSpec, job_id: &str) -> Result<Pipeli
         };
         let split = split_size.unwrap_or(if round == 0 { spec.split_size } else { u64::MAX });
 
-        let (map_stats, shuffle) = run_map_phase(
+        let (map_stats, shuffle, primed) = run_map_phase(
             ctx,
             spec,
             job_id,
@@ -603,6 +646,7 @@ fn run_stages(ctx: &ExecCtx, spec: &PipelineSpec, job_id: &str) -> Result<Pipeli
             Arc::clone(reducer),
             *partitions,
             shuffle,
+            primed,
         )?;
         stages.push(reduce_stats);
 
@@ -633,7 +677,7 @@ fn run_map_phase(
     split_size: u64,
     mapper: Arc<dyn Mapper>,
     partitions: u32,
-) -> Result<(StageStats, Vec<Vec<RunRef>>)> {
+) -> Result<(StageStats, Vec<Vec<RunRef>>, Option<PrimedWindows>)> {
     check_cancel(&ctx.cancel, &spec.name)?;
     let splits = plan_splits(ctx.store.as_ref(), input, split_size, ctx.nodes)?;
     if splits.is_empty() && round == 0 {
@@ -653,6 +697,24 @@ fn run_map_phase(
     let order = Arc::new(order);
     let shuffle_prefix = Arc::new(format!("{SHUFFLE_NS}{job_id}/s{round}/"));
 
+    // Overlap layer (off at depth 0, leaving the pipeline byte-for-byte
+    // as before): prefetch the next `depth` splits under each task's
+    // compute, and prime spill runs for the reducers as they land.
+    let prefetcher = (ctx.overlap_depth > 0).then(|| {
+        DoubleBufferedSplitReader::new(
+            Arc::clone(&ctx.store),
+            Arc::clone(&ctx.pool),
+            Arc::clone(&ctx.buffers),
+            Arc::clone(&splits),
+            Arc::clone(&order),
+            ctx.overlap_depth,
+        )
+    });
+    let primer = (ctx.overlap_depth > 0).then(|| {
+        let bound = ctx.overlap_depth * ctx.nodes * ctx.containers_per_node;
+        SpillPrimer::start(Arc::clone(&ctx.store), ctx.shuffle_chunk, bound.max(4), t)
+    });
+
     // One task closure over global indices; dispatch_waves re-slices it
     // into ledger-sized waves following the scheduler's order.
     let map_task: Arc<dyn Fn(usize) -> Result<MapTaskOut> + Send + Sync> = {
@@ -664,6 +726,8 @@ fn run_map_phase(
         let assignments = Arc::clone(&assignments);
         let order = Arc::clone(&order);
         let shuffle_prefix = Arc::clone(&shuffle_prefix);
+        let prefetcher = prefetcher.clone();
+        let primer_tx = primer.as_ref().map(SpillPrimer::sender);
         let job = spec.name.clone();
         let threshold = ctx.spill_threshold;
         let chunk = ctx.shuffle_chunk;
@@ -671,28 +735,24 @@ fn run_map_phase(
             check_cancel(&cancel, &job)?;
             let task = order[k];
             let split = &splits[task];
-            // one open per split, one read pass into a pooled buffer
+            // one open per split, one read pass into a pool buffer
             // (recycled across tasks: steady-state jobs stop churning
             // the allocator). The buffer is sized *before* the timed
             // span — growing it memsets at memory bandwidth, which would
             // dilute the measurement — so only open + read_at count as
             // this task's input-read busy time (the measured side of
-            // eqs. (1)/(3)/(7)).
-            let mut data = buffers.take();
-            data.resize(split.len as usize, 0);
-            let io_t = Instant::now();
-            let reader = store.open(&split.object)?;
-            let end = (split.offset + split.len).min(reader.len());
-            let take = end.saturating_sub(split.offset) as usize;
-            data.truncate(take); // object shrank since planning: clamp
-            read_full_at(reader.as_ref(), split.offset, &mut data)?;
-            drop(reader);
-            let read_secs = io_t.elapsed().as_secs_f64();
+            // eqs. (1)/(3)/(7)). With overlap on, the same read (same
+            // clamping, same measurement) may already have run on the
+            // shared pool under an earlier task's compute.
+            let (data, take, read_secs) = match &prefetcher {
+                Some(reader) => reader.take(k)?,
+                None => overlap::read_split(store.as_ref(), &buffers, split)?,
+            };
             let mut read_io = IoStat::default();
-            read_io.record(t.elapsed().as_secs_f64(), take as u64, read_secs);
+            read_io.record(t.elapsed().as_secs_f64(), take, read_secs);
             let mut mctx = MapContext::new(partitions);
             mapper.map(split, &data, &mut mctx)?;
-            drop(data); // back to the pool before the spill I/O
+            buffers.recycle(data); // back to the pool before the spill I/O
             let runs = close_context(mctx);
 
             let mut records = 0u64;
@@ -704,7 +764,7 @@ fn run_map_phase(
                 }
             }
             let mut out = MapTaskOut {
-                bytes_in: take as u64,
+                bytes_in: take,
                 records,
                 local: assignments[task].local,
                 spilled_runs: 0,
@@ -723,6 +783,14 @@ fn run_map_phase(
                         let meta = spill_run(store.as_ref(), &key, &run, chunk)?;
                         out.spilled_runs += 1;
                         out.spilled_bytes += meta.bytes;
+                        if let Some(tx) = &primer_tx {
+                            // opportunistic: a full queue skips the run
+                            // (its reducer cold-opens), never blocks
+                            // the map task
+                            if tx.try_send(meta.key.clone()).is_err() {
+                                // dropped on the floor by design
+                            }
+                        }
                         out.parts[p].push(RunRef::Spilled(meta));
                     } else {
                         out.parts[p].push(RunRef::Mem(run));
@@ -734,6 +802,10 @@ fn run_map_phase(
         })
     };
     let outs = dispatch_waves(ctx, job_id, order.len(), map_task)?;
+    // dispatch_waves dropped the task closure (and with it every sender
+    // clone), so finish() drains whatever keys are queued and joins
+    drop(prefetcher);
+    let primed = primer.map(SpillPrimer::finish);
 
     let mut stats = StageStats {
         kind: StageKind::Map,
@@ -763,7 +835,7 @@ fn run_map_phase(
     }
     stats.bytes_out = stats.spilled_bytes;
     stats.time = t.elapsed();
-    Ok((stats, shuffle))
+    Ok((stats, shuffle, primed))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -776,6 +848,7 @@ fn run_reduce_phase(
     reducer: Arc<dyn Reducer>,
     partitions: u32,
     shuffle: Vec<Vec<RunRef>>,
+    primed: Option<PrimedWindows>,
 ) -> Result<StageStats> {
     check_cancel(&ctx.cancel, &spec.name)?;
     ctx.progress.begin_phase(2 * round + 1, partitions as u64);
@@ -791,6 +864,10 @@ fn run_reduce_phase(
     let shuffle = Arc::new(Mutex::new(
         shuffle.into_iter().map(Some).collect::<Vec<Option<Vec<RunRef>>>>(),
     ));
+    // eager-primed first windows from the map phase (empty map when
+    // overlap is off); their I/O is this stage's read side
+    let (primed_windows, primed_io) = primed.unwrap_or_default();
+    let primed_windows = Arc::new(Mutex::new(primed_windows));
 
     // same wave bound as the map phase: the current fair container
     // grant caps this job's in-flight reduce tasks on the shared pool
@@ -799,6 +876,7 @@ fn run_reduce_phase(
         let cancel = Arc::clone(&ctx.cancel);
         let progress = Arc::clone(&ctx.progress);
         let shuffle = Arc::clone(&shuffle);
+        let primed_windows = Arc::clone(&primed_windows);
         let job = spec.name.clone();
         let out_prefix = out_prefix.to_string();
         let chunk = ctx.shuffle_chunk;
@@ -815,8 +893,16 @@ fn run_reduce_phase(
                     RunRef::Mem(run) => RunSource::from_run(run),
                     RunRef::Spilled(meta) => {
                         // windowed read-back through a v2 reader: the
-                        // run never materializes whole in the reducer
-                        RunSource::Spill(SpillCursor::open(store.as_ref(), &meta.key, chunk)?)
+                        // run never materializes whole in the reducer.
+                        // A window the primer fetched during the map
+                        // phase seeds the cursor; otherwise cold-open.
+                        let win = primed_windows.lock().unwrap().remove(&meta.key);
+                        RunSource::Spill(match win {
+                            Some(win) => {
+                                SpillCursor::open_primed(store.as_ref(), &meta.key, chunk, win)?
+                            }
+                            None => SpillCursor::open(store.as_ref(), &meta.key, chunk)?,
+                        })
                     }
                 });
             }
@@ -863,7 +949,7 @@ fn run_reduce_phase(
         locality_hits: 0,
         spilled_runs: 0,
         spilled_bytes: 0,
-        read_io: IoStat::default(),
+        read_io: primed_io,
         write_io: IoStat::default(),
     };
     let mut first_err = None;
@@ -1102,6 +1188,7 @@ mod tests {
             containers_per_node: 2,
             spill_threshold: 0, // everything through .shuffle/
             shuffle_chunk: 64,  // tiny windows: exercise reassembly
+            overlap_depth: 2,   // prefetch + eager priming in the loop
             cancel: Arc::new(AtomicBool::new(false)),
             progress: Arc::new(ProgressState::default()),
         };
@@ -1148,6 +1235,89 @@ mod tests {
         assert_eq!(js.read_io.bytes, read.bytes);
         assert_eq!(js.write_io.bytes, write.bytes);
         assert!(js.timelines.get("s0.map.read").is_some());
+
+        // overlap was on (depth 2): the primer fetched first windows
+        // during the map phase and accounted them to the reduce stage's
+        // read side, so the reduce stage shows read I/O and a timeline
+        assert!(
+            !stats.stages[1].read_io.is_empty(),
+            "eager priming must record reduce-side read I/O"
+        );
+        assert!(timelines.get("s1.red.read").is_some());
+    }
+
+    /// The acceptance bar for the overlap knobs: with the pipeline
+    /// otherwise identical, `overlap_depth` 0 vs >0 must publish
+    /// byte-identical outputs — the overlap layer moves *when* bytes
+    /// travel, never *which* bytes.
+    #[test]
+    fn overlap_knobs_off_and_on_publish_identical_bytes() {
+        struct ChunkMap;
+        impl Mapper for ChunkMap {
+            fn map(&self, _s: &InputSplit, data: &[u8], ctx: &mut MapContext) -> Result<()> {
+                for c in data.chunks(8) {
+                    let p = (c[0] as u32) % ctx.num_partitions();
+                    ctx.emit(p, KV::new(&[c[0]], c));
+                }
+                Ok(())
+            }
+        }
+        struct CatRed;
+        impl Reducer for CatRed {
+            fn reduce(&self, _p: u32, records: MergeIter<'_>, out: &mut Vec<u8>) -> Result<()> {
+                for kv in records {
+                    out.extend_from_slice(&kv.bytes);
+                    out.push(b'\n');
+                }
+                Ok(())
+            }
+        }
+        let run_once = |depth: usize| -> Vec<(String, Vec<u8>)> {
+            let store: Arc<dyn ObjectStore> = Arc::new(test_store());
+            for i in 0..4u8 {
+                let body: Vec<u8> = (0..300u32)
+                    .map(|j| (j as u8).wrapping_mul(7).wrapping_add(i))
+                    .collect();
+                store.write(&format!("in/{i}"), &body).unwrap();
+            }
+            let ctx = ExecCtx {
+                store: Arc::clone(&store),
+                pool: Arc::new(ThreadPool::new(4)),
+                buffers: Arc::new(BufferPool::new(1 << 10, 8)),
+                ledger: Arc::new(ContainerLedger::new(4)),
+                nodes: 2,
+                containers_per_node: 2,
+                spill_threshold: 0,
+                shuffle_chunk: 64, // small windows: primed prefixes matter
+                overlap_depth: depth,
+                cancel: Arc::new(AtomicBool::new(false)),
+                progress: Arc::new(ProgressState::default()),
+            };
+            let spec = PipelineSpec::builder("parity")
+                .input("in/")
+                .output("out/")
+                .split_size(64) // many small splits: real prefetch traffic
+                .map(Arc::new(ChunkMap))
+                .reduce(Arc::new(CatRed), 3)
+                .build()
+                .unwrap();
+            run_pipeline(&ctx, &spec, "job-test-parity").unwrap();
+            let mut outs: Vec<(String, Vec<u8>)> = store
+                .list("out/")
+                .into_iter()
+                .map(|k| {
+                    let body = store.read(&k).unwrap();
+                    (k, body)
+                })
+                .collect();
+            outs.sort();
+            outs
+        };
+        assert_eq!(
+            run_once(0),
+            run_once(3),
+            "overlap knobs must not change published bytes"
+        );
     }
 
     #[test]
@@ -1184,6 +1354,7 @@ mod tests {
             containers_per_node: 2, // one wave holds both partitions
             spill_threshold: 0,
             shuffle_chunk: 64,
+            overlap_depth: 0,
             cancel: Arc::new(AtomicBool::new(false)),
             progress: Arc::new(ProgressState::default()),
         };
@@ -1218,6 +1389,7 @@ mod tests {
             containers_per_node: 2,
             spill_threshold: 0,
             shuffle_chunk: 1 << 10,
+            overlap_depth: 0,
             cancel,
             progress: Arc::new(ProgressState::default()),
         };

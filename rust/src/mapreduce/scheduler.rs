@@ -178,6 +178,13 @@ impl ContainerLedger {
     /// cluster width within one wave of the last competitor leaving,
     /// and a newly admitted job pulls incumbents back toward the even
     /// split as their next waves re-acquire.
+    ///
+    /// The ≥1 floor is the starvation guarantee: when admitted jobs
+    /// outnumber containers the ledger deliberately oversubscribes
+    /// (waves are advisory parallelism, not a hard lease) so every job
+    /// runs at least one task per wave instead of sizing to zero and
+    /// spinning. [`dispatch_waves`](crate::mapreduce::pipeline) relies
+    /// on this when it sizes `wave = fair_acquire(job).max(1)`.
     pub fn fair_acquire(&self, job: &str) -> usize {
         let mut grants = self.grants.lock().unwrap();
         let active = grants.len() + usize::from(!grants.contains_key(job));
@@ -362,5 +369,32 @@ mod tests {
         // the survivor reclaims the full width after a release
         ledger.release("a");
         assert_eq!(ledger.fair_acquire("b"), 8);
+    }
+
+    #[test]
+    fn fair_acquire_never_starves_a_job_when_jobs_outnumber_containers() {
+        // More admitted jobs than containers: the ≥1 floor means every
+        // job keeps making progress (one task per wave) instead of a
+        // latecomer sizing its wave to zero and spinning forever. The
+        // ledger deliberately oversubscribes capacity in this regime —
+        // waves are advisory parallelism, not a hard container lease.
+        let ledger = ContainerLedger::new(2);
+        let jobs = ["a", "b", "c", "d", "e", "f"];
+        for j in jobs {
+            assert!(ledger.fair_acquire(j) >= 1, "job {j} starved at admission");
+        }
+        // steady state: every re-acquire still grants at least 1…
+        for j in jobs {
+            let got = ledger.fair_acquire(j);
+            assert!((1..=2).contains(&got), "job {j} got {got}");
+        }
+        // …and as competitors drain away, survivors grow back.
+        for j in &jobs[..4] {
+            ledger.release(j);
+        }
+        assert_eq!(ledger.fair_acquire("e"), 1, "capacity 2 split two ways");
+        assert_eq!(ledger.fair_acquire("f"), 1);
+        ledger.release("e");
+        assert_eq!(ledger.fair_acquire("f"), 2, "lone survivor takes the width");
     }
 }

@@ -98,6 +98,11 @@ pub struct JobServerConfig {
     pub shuffle_spill_threshold: u64,
     /// Window size (bytes) for spill writes and merge read-back.
     pub shuffle_chunk: usize,
+    /// Splits each map task prefetches ahead of itself on the shared
+    /// pool, and the switch for eager shuffle priming. `0` (the
+    /// default) disables the overlap layer — historical pipeline,
+    /// byte for byte.
+    pub overlap_depth: usize,
     /// Size of the recycled map-split buffers (grown buffers are kept, so
     /// this is a floor, not a ceiling).
     pub split_buffer: usize,
@@ -121,6 +126,7 @@ impl Default for JobServerConfig {
             max_concurrent_jobs: 2,
             shuffle_spill_threshold: 0,
             shuffle_chunk: 1 << 20,
+            overlap_depth: 0,
             split_buffer: 4 << 20,
             cluster_epoch: 0,
         }
@@ -144,6 +150,7 @@ impl JobServerConfig {
             },
             shuffle_spill_threshold: cfg.shuffle_spill_threshold,
             shuffle_chunk: cfg.shuffle_chunk.max(1) as usize,
+            overlap_depth: cfg.overlap_depth,
             split_buffer: 4 << 20,
             cluster_epoch: 0,
         }
@@ -531,6 +538,7 @@ fn drive(
         containers_per_node: cfg.containers_per_node.max(1),
         spill_threshold: cfg.shuffle_spill_threshold,
         shuffle_chunk: cfg.shuffle_chunk.max(1),
+        overlap_depth: cfg.overlap_depth,
         cancel: Arc::clone(&state.cancel),
         progress: Arc::clone(&state.progress),
     };
@@ -603,6 +611,7 @@ mod tests {
                 max_concurrent_jobs: max_jobs,
                 shuffle_spill_threshold: 0,
                 shuffle_chunk: 256,
+                overlap_depth: 0,
                 split_buffer: 1 << 16,
                 cluster_epoch: 0,
             },

@@ -115,15 +115,9 @@ pub struct SpillCursor<'a> {
 }
 
 impl<'a> SpillCursor<'a> {
-    /// Open `key` and validate its spill header.
-    pub fn open(store: &'a dyn ObjectStore, key: &str, chunk: usize) -> Result<SpillCursor<'a>> {
-        let reader = store.open(key)?;
-        let len = reader.len();
-        if len < SPILL_HEADER as u64 {
-            return Err(corrupt(key, "shorter than the header"));
-        }
-        let mut header = [0u8; SPILL_HEADER];
-        crate::storage::read_full_at(reader.as_ref(), 0, &mut header)?;
+    /// Validate a spill header against the object length; returns the
+    /// record count.
+    fn check_header(key: &str, header: &[u8], len: u64) -> Result<u64> {
         if header[..4] != SPILL_MAGIC {
             return Err(corrupt(key, "bad magic"));
         }
@@ -139,12 +133,65 @@ impl<'a> SpillCursor<'a> {
                 &format!("payload length {payload} vs object size {len}"),
             ));
         }
+        Ok(records)
+    }
+
+    /// Open `key` and validate its spill header.
+    pub fn open(store: &'a dyn ObjectStore, key: &str, chunk: usize) -> Result<SpillCursor<'a>> {
+        let reader = store.open(key)?;
+        let len = reader.len();
+        if len < SPILL_HEADER as u64 {
+            return Err(corrupt(key, "shorter than the header"));
+        }
+        let mut header = [0u8; SPILL_HEADER];
+        crate::storage::read_full_at(reader.as_ref(), 0, &mut header)?;
+        let records = Self::check_header(key, &header, len)?;
         Ok(SpillCursor {
             key: key.to_string(),
             reader,
             offset: SPILL_HEADER as u64,
             end: len,
             buf: Vec::new(),
+            pos: 0,
+            remaining: records,
+            chunk: chunk.max(RECORD_OVERHEAD),
+        })
+    }
+
+    /// Open `key` seeded with `primed`: a prefix of the object (header
+    /// included) some earlier thread already read — the eager-merge
+    /// primer's overlap win. The header is validated out of the primed
+    /// bytes and the cursor starts decoding at `primed.len()`, so the
+    /// first window costs no storage I/O. Falls back to a cold
+    /// [`open`](SpillCursor::open) when the primed prefix is unusable
+    /// (too short, or longer than the object now is — a racing
+    /// overwrite), so a stale primer can only cost the optimization,
+    /// never correctness.
+    pub fn open_primed(
+        store: &'a dyn ObjectStore,
+        key: &str,
+        chunk: usize,
+        primed: Vec<u8>,
+    ) -> Result<SpillCursor<'a>> {
+        if primed.len() < SPILL_HEADER {
+            return Self::open(store, key, chunk);
+        }
+        let reader = store.open(key)?;
+        let len = reader.len();
+        if primed.len() as u64 > len {
+            drop(reader);
+            return Self::open(store, key, chunk);
+        }
+        let records = Self::check_header(key, &primed[..SPILL_HEADER], len)?;
+        let offset = primed.len() as u64;
+        let mut buf = primed;
+        buf.drain(..SPILL_HEADER);
+        Ok(SpillCursor {
+            key: key.to_string(),
+            reader,
+            offset,
+            end: len,
+            buf,
             pos: 0,
             remaining: records,
             chunk: chunk.max(RECORD_OVERHEAD),
@@ -166,8 +213,15 @@ impl<'a> SpillCursor<'a> {
         self.buf.drain(..self.pos);
         self.pos = 0;
         while self.buf.len() < need {
-            let window = (self.end - self.offset).min(self.chunk.max(need - self.buf.len()) as u64)
-                as usize;
+            // Window sizing in u64 throughout: `want` (what this record
+            // still needs, floored at one chunk) only drops to usize
+            // after the min() against the remaining object span, so a
+            // record straddling the final window near `end` can neither
+            // truncate (window clamped to the span) nor over-read (the
+            // span is exact).
+            let span: u64 = self.end - self.offset;
+            let want: u64 = (need - self.buf.len()).max(self.chunk) as u64;
+            let window = span.min(want) as usize;
             if window == 0 {
                 return Err(corrupt(&self.key, "truncated mid-record"));
             }
@@ -192,9 +246,15 @@ impl<'a> SpillCursor<'a> {
         let klen = crate::util::bytes::u32_le(&self.buf[self.pos..self.pos + 4]);
         let vlen = crate::util::bytes::u32_le(&self.buf[self.pos + 4..self.pos + 8]);
         let total = klen as usize + vlen as usize;
-        // a record longer than what the object can still hold is framing
-        // corruption, not a short buffer
-        if total as u64 > (self.end - self.offset) + (self.buf.len() - self.pos) as u64 {
+        // A record longer than what the object can still hold is framing
+        // corruption, not a short buffer. The available span counts the
+        // 8 framing bytes still sitting in the buffer, so the whole
+        // record (framing + payload) must fit it — comparing `total`
+        // alone let lengths lying within RECORD_OVERHEAD bytes of the
+        // object end slip through to ensure()'s blunter
+        // "truncated mid-record" backstop.
+        let available = (self.end - self.offset) + (self.buf.len() - self.pos) as u64;
+        if (RECORD_OVERHEAD + total) as u64 > available {
             return Err(corrupt(&self.key, "record length exceeds object"));
         }
         self.ensure(RECORD_OVERHEAD + total)?;
@@ -284,6 +344,86 @@ mod tests {
         s.write("sp/cut", &full[..full.len() - 2]).unwrap();
         // header says more payload than the object holds
         assert!(SpillCursor::open(&s, "sp/cut", 64).is_err());
+    }
+
+    #[test]
+    fn record_ending_exactly_at_end_decodes_across_window_edges() {
+        // Boundary regression for the window arithmetic: the final
+        // record's last byte lands exactly at `end`, and the chunk sweep
+        // puts a window edge at, one byte before, and one byte past the
+        // record boundary.
+        let s = store();
+        let run = vec![kv("key-a", "0123456789"), kv("key-b", "x")];
+        let meta = spill_run(&s, "sp/edge", &run, 1 << 20).unwrap();
+        let payload = (meta.bytes as usize) - SPILL_HEADER;
+        for chunk in [
+            RECORD_OVERHEAD,          // minimum window
+            RECORD_OVERHEAD + 1,      // one byte past a framing edge
+            payload - 1,              // window edge one byte before end
+            payload,                  // window ends exactly at end
+            payload + 1,              // window clamped by the object span
+        ] {
+            let c = SpillCursor::open(&s, "sp/edge", chunk).unwrap();
+            assert_eq!(drain(c), run, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn lying_length_near_object_end_is_framing_corruption() {
+        // Regression: the framing check ignored the RECORD_OVERHEAD
+        // bytes already buffered, so a length lying within 8 bytes of
+        // the object end slipped past it and surfaced as ensure()'s
+        // "truncated mid-record" instead of a framing diagnosis.
+        let s = store();
+        let run = vec![kv("k", "v")]; // payload = 8 + 2
+        spill_run(&s, "sp/edge-lie", &run, 64).unwrap();
+        let mut bytes = s.read("sp/edge-lie").unwrap();
+        // inflate vlen 1 → 3: record claims 12 of the 10 available bytes
+        bytes[SPILL_HEADER + 4..SPILL_HEADER + 8].copy_from_slice(&3u32.to_le_bytes());
+        s.write("sp/edge-lie", &bytes).unwrap();
+        let mut c = SpillCursor::open(&s, "sp/edge-lie", 64).unwrap();
+        let err = c.next_kv().unwrap_err().to_string();
+        assert!(
+            err.contains("record length exceeds object"),
+            "want framing diagnosis, got: {err}"
+        );
+    }
+
+    #[test]
+    fn open_primed_matches_cold_open() {
+        let s = store();
+        let run: Vec<KV> = (0..40)
+            .map(|i| KV::new(format!("key-{i:04}").as_bytes(), &vec![i as u8; 33]))
+            .collect();
+        let meta = spill_run(&s, "sp/primed", &run, 1 << 20).unwrap();
+        let full = s.read("sp/primed").unwrap();
+        // primed with header + a partial first window
+        let c =
+            SpillCursor::open_primed(&s, "sp/primed", 64, full[..100].to_vec()).unwrap();
+        assert_eq!(c.remaining(), 40);
+        assert_eq!(drain(c), run);
+        // primed with the entire object: no further reads needed
+        let c = SpillCursor::open_primed(&s, "sp/primed", 64, full.clone()).unwrap();
+        assert_eq!(drain(c), run);
+        // primed prefix shorter than the header falls back to cold open
+        let c = SpillCursor::open_primed(&s, "sp/primed", 64, full[..7].to_vec()).unwrap();
+        assert_eq!(drain(c), run);
+        assert_eq!(meta.records, 40);
+    }
+
+    #[test]
+    fn open_primed_tolerates_a_racing_shrink() {
+        // A primer that read the old (longer) version must not poison
+        // the cursor after the object shrinks: the stale prefix is
+        // discarded and the cursor cold-opens the current bytes.
+        let s = store();
+        let big: Vec<KV> = (0..30).map(|i| KV::new(&[i as u8], &vec![7u8; 50])).collect();
+        spill_run(&s, "sp/shrink", &big, 1 << 20).unwrap();
+        let stale = s.read("sp/shrink").unwrap();
+        let small = vec![kv("a", "1")];
+        spill_run(&s, "sp/shrink", &small, 1 << 20).unwrap();
+        let c = SpillCursor::open_primed(&s, "sp/shrink", 64, stale).unwrap();
+        assert_eq!(drain(c), small);
     }
 
     #[test]

@@ -60,6 +60,27 @@ impl BufferPool {
         }
     }
 
+    /// Take a buffer *detached* from the pool's lifetime: a plain
+    /// `Vec<u8>` for callers that must move it into a `'static` closure
+    /// (the prefetch slots of the overlap layer). Pair with
+    /// [`recycle`](BufferPool::recycle) to return it; a detached buffer
+    /// that is simply dropped is lost to the pool, never leaked.
+    pub fn take_detached(&self) -> Vec<u8> {
+        self.free
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| Vec::with_capacity(self.buf_size))
+    }
+
+    /// Return a buffer obtained via [`take_detached`](BufferPool::take_detached)
+    /// (or any compatible allocation) to the pool. Same retention rules
+    /// as the RAII path: grown buffers are kept, under-capacity ones
+    /// dropped, retention capped at `max_pooled`.
+    pub fn recycle(&self, buf: Vec<u8>) {
+        self.give_back(buf);
+    }
+
     /// Currently pooled free buffers (for tests/metrics).
     pub fn pooled(&self) -> usize {
         self.free.lock().unwrap().len()
@@ -170,6 +191,22 @@ mod tests {
         drop(b);
         drop(c);
         assert_eq!(pool.pooled(), 2);
+    }
+
+    #[test]
+    fn detached_buffers_recycle_through_the_pool() {
+        let pool = BufferPool::new(64, 4);
+        let mut b = pool.take_detached();
+        assert!(b.capacity() >= 64);
+        b.extend_from_slice(&[1, 2, 3]);
+        pool.recycle(b);
+        assert_eq!(pool.pooled(), 1);
+        let b2 = pool.take_detached();
+        assert!(b2.is_empty(), "recycled detached buffer must be cleared");
+        assert_eq!(pool.pooled(), 0);
+        // a shrunk detached buffer is refused, like the RAII path
+        pool.recycle(Vec::with_capacity(8));
+        assert_eq!(pool.pooled(), 0);
     }
 
     #[test]

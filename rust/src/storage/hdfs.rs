@@ -52,6 +52,11 @@ pub struct HdfsLike {
     pool: Arc<ThreadPool>,
     /// Node id this client "runs on" (for locality accounting).
     pub local_node: usize,
+    /// Coalesce streaming-writer appends until at least this many bytes
+    /// are buffered, then mirror them to the replicas in one fan-out
+    /// (`0` = append-through, the historical behavior). Snapshotted per
+    /// writer at `create`.
+    pub append_coalesce: usize,
     logical: AtomicU64,
     physical: AtomicU64,
     read_bytes: AtomicU64,
@@ -77,6 +82,7 @@ impl HdfsLike {
             replication,
             pool: Arc::new(ThreadPool::new(replication.max(2))),
             local_node: 0,
+            append_coalesce: 0,
             logical: AtomicU64::new(0),
             physical: AtomicU64::new(0),
             read_bytes: AtomicU64::new(0),
@@ -279,6 +285,11 @@ pub struct HdfsWriter<'a> {
     files: Vec<fs::File>,
     token: u64,
     written: u64,
+    /// Coalescing threshold snapshotted from [`HdfsLike::append_coalesce`].
+    coalesce: usize,
+    /// Bytes buffered awaiting the next coalesced flush (always empty
+    /// when `coalesce == 0`).
+    carry: Vec<u8>,
     finished: bool,
 }
 
@@ -291,25 +302,9 @@ impl HdfsWriter<'_> {
         ))
     }
 
-    fn cleanup(&mut self) {
-        self.finished = true;
-        self.files.clear(); // close handles before unlinking
-        for &n in &self.nodes {
-            let _ = fs::remove_file(self.tmp_path(n));
-        }
-    }
-}
-
-impl Drop for HdfsWriter<'_> {
-    fn drop(&mut self) {
-        if !self.finished {
-            self.cleanup();
-        }
-    }
-}
-
-impl ObjectWriter for HdfsWriter<'_> {
-    fn append(&mut self, chunk: &[u8]) -> Result<()> {
+    /// Mirror one chunk to every replica temp file (the raw,
+    /// pre-coalescing append path).
+    fn append_raw(&mut self, chunk: &[u8]) -> Result<()> {
         // below this, per-replica thread fan-out costs more than it overlaps
         const PARALLEL_APPEND_MIN: usize = 128 << 10;
 
@@ -351,11 +346,92 @@ impl ObjectWriter for HdfsWriter<'_> {
         Ok(())
     }
 
+    /// Mirror out the coalescing carry, keeping its allocation for the
+    /// next batch.
+    fn flush_carry(&mut self) -> Result<()> {
+        if self.carry.is_empty() {
+            return Ok(());
+        }
+        let mut full = std::mem::take(&mut self.carry);
+        self.append_raw(&full)?;
+        full.clear();
+        self.carry = full;
+        Ok(())
+    }
+
+    fn cleanup(&mut self) {
+        self.finished = true;
+        self.carry.clear();
+        self.files.clear(); // close handles before unlinking
+        for &n in &self.nodes {
+            let _ = fs::remove_file(self.tmp_path(n));
+        }
+    }
+}
+
+impl Drop for HdfsWriter<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.cleanup();
+        }
+    }
+}
+
+impl ObjectWriter for HdfsWriter<'_> {
+    fn append(&mut self, chunk: &[u8]) -> Result<()> {
+        if self.coalesce == 0 {
+            return self.append_raw(chunk);
+        }
+        // already-large chunks skip the copy through the carry
+        if self.carry.is_empty() && chunk.len() >= self.coalesce {
+            return self.append_raw(chunk);
+        }
+        self.carry.extend_from_slice(chunk);
+        if self.carry.len() >= self.coalesce {
+            self.flush_carry()?;
+        }
+        Ok(())
+    }
+
+    fn append_vectored(&mut self, parts: &[&[u8]]) -> Result<()> {
+        match parts {
+            [] => Ok(()),
+            [one] => ObjectWriter::append(self, one),
+            _ => {
+                let total: usize = parts.iter().map(|p| p.len()).sum();
+                if self.coalesce != 0 {
+                    self.carry.reserve(total);
+                    for p in parts {
+                        self.carry.extend_from_slice(p);
+                    }
+                    if self.carry.len() >= self.coalesce {
+                        self.flush_carry()?;
+                    }
+                    Ok(())
+                } else {
+                    // append-through mode: join once so the replica
+                    // fan-out sees a single large chunk instead of N
+                    // sub-threshold ones
+                    let mut joined = Vec::with_capacity(total);
+                    for p in parts {
+                        joined.extend_from_slice(p);
+                    }
+                    self.append_raw(&joined)
+                }
+            }
+        }
+    }
+
     fn written(&self) -> u64 {
-        self.written
+        self.written + self.carry.len() as u64
     }
 
     fn commit(mut self: Box<Self>) -> Result<()> {
+        // a coalescing writer may still hold a sub-threshold batch
+        if let Err(e) = self.flush_carry() {
+            self.cleanup();
+            return Err(e);
+        }
         self.finished = true;
         self.files.clear(); // close handles before renaming
         let fresh = !self.hdfs.exists(&self.key);
@@ -437,6 +513,8 @@ impl ObjectStore for HdfsLike {
             files: Vec::new(),
             token,
             written: 0,
+            coalesce: self.append_coalesce,
+            carry: Vec::new(),
             finished: false,
         };
         for i in 0..w.nodes.len() {
@@ -572,6 +650,47 @@ impl ObjectStore for HdfsLike {
 mod tests {
     use super::*;
     use crate::testing::TempDir;
+
+    #[test]
+    fn coalescing_writer_matches_append_through() {
+        let dir = TempDir::new("hdfs-co").unwrap();
+        let mut h = HdfsLike::open(dir.path(), 4, 2).unwrap();
+        h.append_coalesce = 128;
+        let data: Vec<u8> = (0..3000u32).map(|i| (i % 251) as u8).collect();
+        let mut w = h.create("co").unwrap();
+        for chunk in data.chunks(17) {
+            w.append(chunk).unwrap();
+        }
+        assert_eq!(w.written(), 3000, "written() must include the carry");
+        w.commit().unwrap();
+        assert_eq!(h.read("co").unwrap(), data);
+        // both replicas hold the complete object
+        let copies = (0..4)
+            .filter(|&n| h.replica_path("co", n).exists())
+            .count();
+        assert_eq!(copies, 2);
+
+        // vectored form lands identically
+        let parts: Vec<&[u8]> = data.chunks(23).collect();
+        let mut w = h.create("vec").unwrap();
+        w.append_vectored(&parts).unwrap();
+        w.commit().unwrap();
+        assert_eq!(h.read("vec").unwrap(), data);
+
+        // abort with a loaded carry leaves no temp debris
+        let mut w = h.create("ab").unwrap();
+        w.append(&data[..100]).unwrap();
+        w.abort().unwrap();
+        assert!(!h.exists("ab"));
+        for n in 0..4 {
+            let leftovers = fs::read_dir(dir.path().join(format!("node{n}")))
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().contains(".tmp-"))
+                .count();
+            assert_eq!(leftovers, 0, "node {n} holds temp debris");
+        }
+    }
 
     #[test]
     fn write_creates_replicas() {

@@ -161,6 +161,19 @@ pub trait ObjectWriter: Send {
     /// Append one chunk to the object being built.
     fn append(&mut self, chunk: &[u8]) -> Result<()>;
 
+    /// Append several chunks in one call, in order. Semantically
+    /// identical to calling [`append`](ObjectWriter::append) once per
+    /// part; backends override this to turn many small appends into a
+    /// single striped fan-out (and the remote client into fewer wire
+    /// frames). The default simply loops, so every implementor keeps
+    /// the one-append-per-part crash boundaries.
+    fn append_vectored(&mut self, parts: &[&[u8]]) -> Result<()> {
+        for part in parts {
+            self.append(part)?;
+        }
+        Ok(())
+    }
+
     /// Bytes appended so far (not yet visible to readers).
     fn written(&self) -> u64;
 

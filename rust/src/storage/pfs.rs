@@ -89,6 +89,11 @@ pub struct Pfs {
     /// Verify stripe CRCs on every read (on by default; the ablation bench
     /// measures its cost).
     pub verify_reads: bool,
+    /// Coalesce streaming-writer appends until at least this many bytes
+    /// are buffered, then stripe them out in one fan-out (`0` =
+    /// append-through, the historical behavior). Snapshotted per writer
+    /// at `create`; the overlap bench flips it.
+    pub append_coalesce: usize,
 }
 
 impl Pfs {
@@ -129,6 +134,7 @@ impl Pfs {
             objects_written: AtomicU64::new(0),
             reads: AtomicU64::new(0),
             verify_reads: true,
+            append_coalesce: 0,
         })
     }
 
@@ -278,6 +284,8 @@ impl Pfs {
             token,
             written: 0,
             crc: Crc32::new(),
+            coalesce: self.append_coalesce,
+            carry: Vec::new(),
             finished: false,
         })
     }
@@ -577,6 +585,11 @@ pub struct PfsWriter<'a> {
     token: u64,
     written: u64,
     crc: Crc32,
+    /// Coalescing threshold snapshotted from [`Pfs::append_coalesce`].
+    coalesce: usize,
+    /// Bytes buffered awaiting the next coalesced flush (always empty
+    /// when `coalesce == 0`).
+    carry: Vec<u8>,
     finished: bool,
 }
 
@@ -691,9 +704,22 @@ impl PfsWriter<'_> {
         Ok(())
     }
 
-    /// Bytes appended so far.
+    /// Stripe out the coalescing carry, keeping its allocation for the
+    /// next batch.
+    fn flush_carry(&mut self) -> Result<()> {
+        if self.carry.is_empty() {
+            return Ok(());
+        }
+        let mut full = std::mem::take(&mut self.carry);
+        self.append_chunk(&full)?;
+        full.clear();
+        self.carry = full;
+        Ok(())
+    }
+
+    /// Bytes appended so far (including any not-yet-flushed carry).
     pub fn bytes_written(&self) -> u64 {
-        self.written
+        self.written + self.carry.len() as u64
     }
 
     /// Publish: rename temp datafiles into place, drop stale wider ones,
@@ -706,6 +732,14 @@ impl PfsWriter<'_> {
     /// The store contract is write-once-read-many; racing reads against
     /// overwrites of the same key sit outside it.
     pub fn finish(mut self) -> Result<()> {
+        // a coalescing writer may still hold a sub-threshold batch
+        if !self.carry.is_empty() {
+            let full = std::mem::take(&mut self.carry);
+            if let Err(e) = self.append_chunk(&full) {
+                self.cleanup();
+                return Err(e);
+            }
+        }
         self.finished = true;
         let mut err: Option<Error> = None;
         let mut touched_live = false; // any rename/unlink of live datafiles ran
@@ -779,6 +813,7 @@ impl PfsWriter<'_> {
 
     fn cleanup(&mut self) {
         self.finished = true;
+        self.carry.clear();
         for s in 0..self.files.len() {
             self.files[s] = None;
             let _ = fs::remove_file(self.tmp_path(s));
@@ -796,7 +831,49 @@ impl Drop for PfsWriter<'_> {
 
 impl ObjectWriter for PfsWriter<'_> {
     fn append(&mut self, chunk: &[u8]) -> Result<()> {
-        self.append_chunk(chunk)
+        if self.coalesce == 0 {
+            return self.append_chunk(chunk);
+        }
+        // already-large chunks skip the copy through the carry
+        if self.carry.is_empty() && chunk.len() >= self.coalesce {
+            return self.append_chunk(chunk);
+        }
+        self.carry.extend_from_slice(chunk);
+        if self.carry.len() >= self.coalesce {
+            self.flush_carry()?;
+        }
+        Ok(())
+    }
+
+    fn append_vectored(&mut self, parts: &[&[u8]]) -> Result<()> {
+        match parts {
+            [] => Ok(()),
+            [one] => ObjectWriter::append(self, one),
+            _ => {
+                let total: usize = parts.iter().map(|p| p.len()).sum();
+                if self.coalesce != 0 {
+                    // pack straight into the carry: at most one striped
+                    // fan-out per threshold's worth of parts
+                    self.carry.reserve(total);
+                    for p in parts {
+                        self.carry.extend_from_slice(p);
+                    }
+                    if self.carry.len() >= self.coalesce {
+                        self.flush_carry()?;
+                    }
+                    Ok(())
+                } else {
+                    // append-through mode: join once so the stripe
+                    // fan-out sees a single large chunk instead of N
+                    // sub-threshold ones
+                    let mut joined = Vec::with_capacity(total);
+                    for p in parts {
+                        joined.extend_from_slice(p);
+                    }
+                    self.append_chunk(&joined)
+                }
+            }
+        }
     }
 
     fn written(&self) -> u64 {
@@ -1252,6 +1329,58 @@ mod tests {
         // wider stale datafiles must be gone
         assert!(!dir.path().join("server1").join("k.df").exists());
         assert!(!dir.path().join("server2").join("k.df").exists());
+    }
+
+    #[test]
+    fn coalescing_writer_matches_append_through() {
+        // same bytes, same final object — only the flush batching differs
+        let dir = TempDir::new("pfs-co").unwrap();
+        let mut pfs = open(&dir, 3, 64);
+        pfs.append_coalesce = 256;
+        let data = rand_data(5000, 77);
+        let mut w = pfs.create_with_hints("co", Hints::default()).unwrap();
+        for chunk in data.chunks(37) {
+            w.append(chunk).unwrap(); // trait entry: coalesces
+        }
+        assert_eq!(w.written(), 5000, "written() must include the carry");
+        w.finish().unwrap();
+        assert_eq!(pfs.read("co").unwrap(), data, "CRC-verified readback");
+
+        // vectored form, mixed with large chunks that bypass the carry
+        let mut w = pfs.create_with_hints("vec", Hints::default()).unwrap();
+        let parts: Vec<&[u8]> = data.chunks(41).collect();
+        w.append_vectored(&parts).unwrap();
+        w.append(&data[..300]).unwrap();
+        w.finish().unwrap();
+        let mut expect = data.clone();
+        expect.extend_from_slice(&data[..300]);
+        assert_eq!(pfs.read("vec").unwrap(), expect);
+    }
+
+    #[test]
+    fn coalescing_writer_abort_and_drop_leave_no_carry_debris() {
+        let dir = TempDir::new("pfs-co-ab").unwrap();
+        let mut pfs = open(&dir, 2, 32);
+        pfs.append_coalesce = 1 << 20; // everything stays in the carry
+        let data = rand_data(500, 5);
+        {
+            let mut w = pfs.create_with_hints("a", Hints::default()).unwrap();
+            w.append(&data).unwrap();
+            w.cancel().unwrap();
+        }
+        {
+            let mut w = pfs.create_with_hints("b", Hints::default()).unwrap();
+            w.append(&data).unwrap();
+            // dropped uncommitted
+        }
+        assert!(!pfs.exists("a"));
+        assert!(!pfs.exists("b"));
+        for s in 0..2 {
+            let n = fs::read_dir(dir.path().join(format!("server{s}")))
+                .unwrap()
+                .count();
+            assert_eq!(n, 0, "server {s} must be empty");
+        }
     }
 
     #[test]

@@ -125,6 +125,10 @@ pub struct TlsConfig {
     /// [`WriteMode::WriteThrough`] concurrently through the two §3.2
     /// buffers (`false` reproduces the sequential baseline).
     pub concurrent_writethrough: bool,
+    /// Coalesce streaming-writer appends until at least this many bytes
+    /// are buffered, then push them through both tiers in one batch
+    /// (`0` = append-through, the historical behavior).
+    pub append_coalesce: usize,
 }
 
 impl TlsConfig {
@@ -143,6 +147,7 @@ impl TlsConfig {
                 workers: 4,
                 mem_shards: crate::config::presets::tuning::default_mem_shards(),
                 concurrent_writethrough: true,
+                append_coalesce: 0,
             },
         }
     }
@@ -161,6 +166,7 @@ impl TlsConfig {
             workers: e.workers,
             mem_shards: e.mem_shards,
             concurrent_writethrough: e.concurrent_writethrough,
+            append_coalesce: e.append_coalesce as usize,
         }
     }
 }
@@ -219,6 +225,11 @@ impl TlsConfigBuilder {
     /// Choose dual-leg (true) vs sequential write-through.
     pub fn concurrent_writethrough(mut self, v: bool) -> Self {
         self.cfg.concurrent_writethrough = v;
+        self
+    }
+    /// Set the writer append-coalescing threshold (0 = append-through).
+    pub fn append_coalesce(mut self, v: usize) -> Self {
+        self.cfg.append_coalesce = v;
         self
     }
     /// Validate the knobs and produce the final config.
@@ -757,6 +768,16 @@ impl<P: PfsTier> TwoLevelStore<P> {
             // miss → PFS: prefer the consolidated checkpoint, else spill
             let entry = self.entry(key)?;
             let geo = self.geometry(entry.size);
+            if index >= geo.num_blocks() {
+                // a shrink-overwrite landed since the caller snapshotted
+                // its geometry: the block no longer exists in the live
+                // version, and never will — don't take the in-flight
+                // retry path (and don't let block_range underflow below)
+                return Err(Error::NotFound(format!(
+                    "{key} block {index}: beyond the current object ({} blocks)",
+                    geo.num_blocks()
+                )));
+            }
             let (s, e) = geo.block_range(index);
             let t0 = Instant::now();
             let fetched: Result<Vec<u8>> = if entry.persisted {
@@ -1149,6 +1170,8 @@ impl<P: PfsTier> TwoLevelStore<P> {
             pfs,
             written: 0,
             mem_ok: true,
+            coalesce: self.cfg.append_coalesce,
+            carry: Vec::new(),
             finished: false,
         }))
     }
@@ -1242,6 +1265,11 @@ pub struct TlsWriter<'a, P: PfsTier = Pfs> {
     /// Memory leg still caching; WriteThrough flips this off (degrading to
     /// PFS-only) when a block cannot fit the tier.
     mem_ok: bool,
+    /// Coalescing threshold snapshotted from [`TlsConfig::append_coalesce`].
+    coalesce: usize,
+    /// Bytes buffered awaiting the next coalesced flush through both legs
+    /// (always empty when `coalesce == 0`).
+    carry: Vec<u8>,
     finished: bool,
 }
 
@@ -1588,8 +1616,22 @@ impl<P: PfsTier> TlsWriter<'_, P> {
         Ok(())
     }
 
+    /// Push the coalescing carry through both legs, keeping its
+    /// allocation for the next batch.
+    fn flush_carry(&mut self) -> Result<()> {
+        if self.carry.is_empty() {
+            return Ok(());
+        }
+        let mut full = std::mem::take(&mut self.carry);
+        self.append_inner(&full)?;
+        full.clear();
+        self.carry = full;
+        Ok(())
+    }
+
     fn abort_inner(&mut self) {
         self.finished = true;
+        self.carry.clear();
         self.remove_wip();
         self.pending.clear();
         if let Some(block) = &mut self.block {
@@ -1614,14 +1656,58 @@ impl<P: PfsTier> Drop for TlsWriter<'_, P> {
 
 impl<P: PfsTier> ObjectWriter for TlsWriter<'_, P> {
     fn append(&mut self, chunk: &[u8]) -> Result<()> {
-        self.append_inner(chunk)
+        if self.coalesce == 0 {
+            return self.append_inner(chunk);
+        }
+        // already-large chunks skip the copy through the carry
+        if self.carry.is_empty() && chunk.len() >= self.coalesce {
+            return self.append_inner(chunk);
+        }
+        self.carry.extend_from_slice(chunk);
+        if self.carry.len() >= self.coalesce {
+            self.flush_carry()?;
+        }
+        Ok(())
+    }
+
+    fn append_vectored(&mut self, parts: &[&[u8]]) -> Result<()> {
+        match parts {
+            [] => Ok(()),
+            [one] => ObjectWriter::append(self, one),
+            _ => {
+                let total: usize = parts.iter().map(|p| p.len()).sum();
+                if self.coalesce != 0 {
+                    self.carry.reserve(total);
+                    for p in parts {
+                        self.carry.extend_from_slice(p);
+                    }
+                    if self.carry.len() >= self.coalesce {
+                        self.flush_carry()?;
+                    }
+                    Ok(())
+                } else {
+                    // append-through mode: join once so both legs see a
+                    // single chunk large enough for the dual-leg overlap
+                    let mut joined = Vec::with_capacity(total);
+                    for p in parts {
+                        joined.extend_from_slice(p);
+                    }
+                    self.append_inner(&joined)
+                }
+            }
+        }
     }
 
     fn written(&self) -> u64 {
-        self.written
+        self.written + self.carry.len() as u64
     }
 
     fn commit(mut self: Box<Self>) -> Result<()> {
+        // a coalescing writer may still hold a sub-threshold batch
+        if let Err(e) = self.flush_carry() {
+            self.abort_inner();
+            return Err(e);
+        }
         self.commit_inner()
     }
 
@@ -1748,6 +1834,45 @@ mod tests {
             .build()
             .unwrap();
         TwoLevelStore::open(cfg).unwrap()
+    }
+
+    #[test]
+    fn coalescing_writer_matches_append_through_in_every_mode() {
+        let data = rand_data(5000, 91);
+        for mode in [WriteMode::WriteThrough, WriteMode::Bypass, WriteMode::MemOnly] {
+            let dir = TempDir::new("tls-co").unwrap();
+            let cfg = TlsConfig::builder(dir.path())
+                .mem_capacity(1 << 20)
+                .block_size(256)
+                .pfs_servers(3)
+                .stripe_size(64)
+                .pfs_buffer(128)
+                .append_coalesce(512)
+                .build()
+                .unwrap();
+            let s = TwoLevelStore::open(cfg).unwrap();
+            let mut w = s.create_with("co", mode).unwrap();
+            for chunk in data.chunks(33) {
+                w.append(chunk).unwrap();
+            }
+            assert_eq!(w.written(), 5000, "{mode:?}: written() includes the carry");
+            w.commit().unwrap();
+            assert_eq!(s.read("co", ReadMode::TwoLevel).unwrap(), data, "{mode:?}");
+
+            // vectored form lands identically
+            let parts: Vec<&[u8]> = data.chunks(47).collect();
+            let mut w = s.create_with("vec", mode).unwrap();
+            w.append_vectored(&parts).unwrap();
+            w.commit().unwrap();
+            assert_eq!(s.read("vec", ReadMode::TwoLevel).unwrap(), data, "{mode:?}");
+
+            // abort with a loaded carry leaves no trace in either tier
+            let mut w = s.create_with("ab", mode).unwrap();
+            w.append(&data[..100]).unwrap();
+            w.abort().unwrap();
+            assert!(!s.exists("ab"), "{mode:?}");
+            assert!(s.recover().unwrap().is_clean(), "{mode:?}: staged debris");
+        }
     }
 
     #[test]

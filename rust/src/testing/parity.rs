@@ -520,6 +520,7 @@ fn parity_server(store: Arc<dyn ObjectStore>) -> JobServer {
             max_concurrent_jobs: 1,
             shuffle_spill_threshold: 0, // everything through the tiers
             shuffle_chunk: 1 << 20,
+            overlap_depth: 0, // parity measures the non-overlapped path
             split_buffer: 4 << 20,
             cluster_epoch: 0,
         },

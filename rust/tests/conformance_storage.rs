@@ -242,6 +242,81 @@ fn two_level_crash_sweep() {
     );
 }
 
+/// Small chunks against a large-ish coalesce threshold: most appends
+/// only grow the writer's carry buffer, so nearly every crash boundary
+/// lands with batched-but-unflushed bytes in flight. The second
+/// threshold (1 MiB) keeps *entire objects* in the carry until commit —
+/// and the harness crashes *before* the inner commit runs, so the carry
+/// is lost whole, exactly like `kill -9` on a buffering process.
+fn coalesced_workload() -> Workload {
+    Workload::default()
+        .put("c/a", 1, 700, 48)
+        .put("c/b", 1, 260, 96)
+        .delete("c/b")
+        .put("c/a", 2, 500, 64)
+}
+
+/// The coalesce thresholds the coalesced sweeps run under: one that
+/// batches a handful of small appends per flush, and one that never
+/// flushes before commit. (`MemStore` has no coalescing path — appends
+/// land in memory directly — so it has no new boundary to sweep.)
+const COALESCE_SWEEP: [usize; 2] = [256, 1 << 20];
+
+#[test]
+fn pfs_crash_sweep_with_coalesced_appends() {
+    for coalesce in COALESCE_SWEEP {
+        crash_sweep(
+            &format!("pfs-co{coalesce}"),
+            true,
+            |root: &Path| {
+                let mut p = Pfs::open(root, 3, 64).unwrap();
+                p.append_coalesce = coalesce;
+                p
+            },
+            &coalesced_workload(),
+        );
+    }
+}
+
+#[test]
+fn hdfs_crash_sweep_with_coalesced_appends() {
+    for coalesce in COALESCE_SWEEP {
+        crash_sweep(
+            &format!("hdfs-co{coalesce}"),
+            true,
+            |root: &Path| {
+                let mut h = HdfsLike::open(root, 4, 2).unwrap();
+                h.append_coalesce = coalesce;
+                h
+            },
+            &coalesced_workload(),
+        );
+    }
+}
+
+#[test]
+fn two_level_crash_sweep_with_coalesced_appends() {
+    for coalesce in COALESCE_SWEEP {
+        crash_sweep(
+            &format!("tls-co{coalesce}"),
+            true,
+            |root: &Path| {
+                let cfg = TlsConfig::builder(root)
+                    .mem_capacity(1 << 20)
+                    .block_size(256)
+                    .pfs_servers(3)
+                    .stripe_size(64)
+                    .pfs_buffer(128)
+                    .append_coalesce(coalesce)
+                    .build()
+                    .unwrap();
+                TwoLevelStore::open(cfg).unwrap()
+            },
+            &coalesced_workload(),
+        );
+    }
+}
+
 #[test]
 fn two_level_crash_sweep_under_eviction_pressure() {
     // a memory tier of only 4 blocks: write-through staging constantly

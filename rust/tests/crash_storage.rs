@@ -271,6 +271,90 @@ fn crash_at_shuffle_boundaries_leaves_no_residue_after_recover() {
     }
 }
 
+/// The shuffle crash story again, but with the hot-path overlap knobs
+/// *on*: coalesced appends batching the spill stream's small writes,
+/// and `overlap_depth = 2` arming the eager-merge primer (plus split
+/// prefetch). New crash boundaries this opens up:
+///
+/// - a spill append dies while the writer's carry holds batched,
+///   unflushed bytes;
+/// - a spill commit dies before the carry-flush runs — the tail of the
+///   run is lost whole;
+/// - a spill *read* dies mid-eager-merge (the primer or a reducer
+///   cursor is walking the run when the store goes down).
+///
+/// In every case the contract is unchanged: the job fails with the
+/// injected error (the primer must swallow its own read error and shut
+/// down rather than hang), and after reboot + `recover()` the shuffle
+/// namespace is empty, no writer temps survive, and the input is
+/// intact.
+#[test]
+fn crash_with_overlap_knobs_on_leaves_no_residue_after_recover() {
+    use tlstore::mapreduce::{JobServer, JobServerConfig};
+    use tlstore::storage::{ObjectStore, SHUFFLE_NS};
+    use tlstore::workloads::wordcount;
+
+    fn tls_overlapped(root: &Path) -> TwoLevelStore {
+        let cfg = TlsConfig::builder(root)
+            .mem_capacity(64 << 10)
+            .block_size(1024)
+            .pfs_servers(3)
+            .stripe_size(300)
+            .pfs_buffer(512)
+            .append_coalesce(2048) // batches the spill stream's appends
+            .build()
+            .unwrap();
+        TwoLevelStore::open(cfg).unwrap()
+    }
+
+    let plans = [
+        ("coalesced spill append", "op=append,kind=crash,key=/s0/,after=1"),
+        ("coalesced spill commit", "op=commit,kind=crash,key=/s0/,after=0"),
+        ("eager-merge spill read", "op=read-at,kind=crash,key=/s0/,after=0"),
+    ];
+    for (i, (tag, plan)) in plans.into_iter().enumerate() {
+        let dir = TempDir::new(&format!("crash-overlap-{i}")).unwrap();
+        {
+            let faulty = std::sync::Arc::new(FaultStore::new(
+                tls_overlapped(dir.path()),
+                FaultPlan::parse(plan).unwrap(),
+            ));
+            wordcount::generate_text(faulty.as_ref(), "wc/in/", 3, 400, 23).unwrap();
+            let server = JobServer::new(
+                std::sync::Arc::clone(&faulty) as std::sync::Arc<dyn ObjectStore>,
+                JobServerConfig {
+                    workers: 2,
+                    max_concurrent_jobs: 1,
+                    shuffle_spill_threshold: 0,
+                    shuffle_chunk: 1 << 10,
+                    overlap_depth: 2,
+                    ..JobServerConfig::default()
+                },
+            );
+            let handle = server
+                .submit(wordcount::pipeline("wc/in/", "wc/out/", 2, 5).unwrap())
+                .unwrap();
+            let err = handle.join().unwrap_err();
+            assert!(
+                matches!(err, tlstore::Error::Injected(_)),
+                "{tag}: expected the armed crash, got {err}"
+            );
+            assert!(faulty.crashed(), "{tag}: wrapper must report the crash");
+            let _ = server.shutdown();
+        }
+        let s = tls(dir.path());
+        let report = s.recover().unwrap_or_else(|e| panic!("{tag}: recover failed: {e}"));
+        assert!(
+            ObjectStore::list(&s, SHUFFLE_NS).is_empty(),
+            "{tag}: shuffle residue after recover: {report}"
+        );
+        assert_no_residue(dir.path(), tag);
+        assert_eq!(ObjectStore::list(&s, "wc/in/").len(), 3, "{tag}");
+        assert!(ObjectStore::list(&s, "wc/out/").is_empty(), "{tag}: partial output");
+        assert!(s.recover().unwrap().is_clean(), "{tag}: second pass dirty");
+    }
+}
+
 #[test]
 fn fault_plan_cli_grammar_smoke() {
     // the spec strings documented for --fault-plan parse to working plans

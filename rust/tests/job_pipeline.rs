@@ -40,6 +40,7 @@ fn server(store: Arc<dyn ObjectStore>, max_jobs: usize) -> JobServer {
             max_concurrent_jobs: max_jobs,
             shuffle_spill_threshold: 0,
             shuffle_chunk: 4 << 10, // small windows: many read_at refills
+            overlap_depth: 1, // prefetch + priming under the full server
             split_buffer: 1 << 16,
             cluster_epoch: 0,
         },

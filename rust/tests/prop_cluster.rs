@@ -150,6 +150,7 @@ fn gen_message(rng: &mut Pcg32, size: usize) -> Message {
                 mem_write_micros: rng.next_u64(),
                 remote_write_bytes: rng.next_u64(),
                 remote_write_micros: rng.next_u64(),
+                wall_micros: rng.next_u64(),
             },
         },
         19 => Message::TaskFail {
